@@ -1,0 +1,39 @@
+//! Quickstart: co-simulate a small CNN stream on a 6×6 chiplet mesh.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Demonstrates the minimal public-API path: hardware preset → sim params
+//! → workload → GlobalManager → report.
+
+use chipsim::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    chipsim::util::logging::init();
+
+    // 6×6 homogeneous IMC mesh (NeuRRAM-like chiplets, X-Y routed NoI).
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+
+    // Pipelined execution, 5 back-to-back inferences per model.
+    let params = SimParams {
+        pipelined: true,
+        inferences_per_model: 5,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+
+    // Stream of 8 CNNs sampled uniformly from the paper's four types.
+    let workload = WorkloadConfig::cnn_stream(8, 5, 0xBEEF);
+
+    let mut manager = GlobalManager::new(hw, params);
+    let report = manager.run(workload)?;
+
+    print!("{}", report.summary());
+    println!("NoI bytes·hops moved: {}", report.noc_work);
+    println!(
+        "peak system power: {:.2} W over {} 1 µs bins",
+        report.power.total_series_w().iter().cloned().fold(0.0, f64::max),
+        report.power.num_bins()
+    );
+    Ok(())
+}

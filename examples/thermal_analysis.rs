@@ -1,0 +1,100 @@
+//! Power → thermal pipeline: transient + steady-state analysis of a run.
+//!
+//!     cargo run --release --example thermal_analysis
+//!
+//! Reproduces the paper's §V-D flow end to end: a pipelined co-simulation
+//! generates 1 µs per-chiplet power profiles; those feed the MFIT-analog
+//! RC network; the transient solve runs through the AOT JAX/Pallas
+//! artifact via PJRT (falling back to the native oracle without
+//! artifacts); and the end-of-run heatmap + per-chiplet temperatures are
+//! printed and written to the results directory.
+
+use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
+use chipsim::metrics;
+use chipsim::sim::GlobalManager;
+use chipsim::thermal::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
+
+fn main() -> anyhow::Result<()> {
+    chipsim::util::logging::init();
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let params = SimParams {
+        pipelined: true,
+        inferences_per_model: 10,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    println!("co-simulating 20-model stream for the power profile...");
+    let report = GlobalManager::new(hw.clone(), params)
+        .run(WorkloadConfig::cnn_stream(20, 10, 0x7E47))?;
+    println!(
+        "  span {} ms, {} power bins",
+        report.span_ns / 1_000_000,
+        report.power.num_bins()
+    );
+
+    let tm = ThermalModel::build(&hw);
+    let stride = 10; // 1 µs bins -> 10 µs thermal steps
+    let dt_s = stride as f64 * report.power.bin_ns as f64 * 1e-9;
+    let power_rows = report.power.matrix_w(stride);
+    let node_steps: Vec<Vec<f64>> = power_rows.iter().map(|r| tm.node_power(r)).collect();
+
+    // Transient: PJRT AOT artifact preferred.
+    let (traj, solver) = match PjrtThermalSolver::open_default(&tm, dt_s) {
+        Ok(mut s) => {
+            let traj = s.transient(&vec![0.0; tm.n], &node_steps)?;
+            println!("  transient: {} steps in {} PJRT dispatches", traj.len(), s.dispatches());
+            (traj, "pjrt")
+        }
+        Err(e) => {
+            println!("  ({e}; using native solver)");
+            let s = NativeSolver::new(&tm, dt_s)?;
+            (s.transient(&vec![0.0; tm.n], &node_steps), "native")
+        }
+    };
+    let last = traj.last().expect("non-empty run");
+    println!("{}", tm.heatmap(last, 10, 10));
+
+    // Transient peak per chiplet over the whole run.
+    let mut peak = vec![f64::NEG_INFINITY; hw.num_chiplets()];
+    for row in &traj {
+        for (ch, pk) in peak.iter_mut().enumerate() {
+            *pk = pk.max(tm.chiplet_temp(row, ch));
+        }
+    }
+    let hottest = peak
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    println!(
+        "transient peak: chiplet {} at {:.2} °C ({} solver)",
+        hottest.0,
+        hottest.1 + tm.ambient_c,
+        solver
+    );
+
+    // Steady state under the run's average power.
+    let nbins = report.power.num_bins().max(1);
+    let avg_w: Vec<f64> = (0..hw.num_chiplets())
+        .map(|c| report.power.avg_power_mw(c) * 1e-3)
+        .collect();
+    let p_nodes = tm.node_power(&avg_w);
+    let steady = NativeSolver::steady(&tm, &p_nodes)?;
+    let steady_max = (0..hw.num_chiplets())
+        .map(|c| tm.chiplet_temp(&steady, c))
+        .fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "steady state at average power ({} bins): hottest {:.2} °C",
+        nbins,
+        steady_max + tm.ambient_c
+    );
+
+    let p1 = metrics::write_result("thermal_analysis_heatmap.txt", &tm.heatmap(last, 10, 10))?;
+    let p2 = metrics::write_result(
+        "thermal_analysis_temps.csv",
+        &tm.temps_csv(last, hw.num_chiplets()),
+    )?;
+    println!("written: {} and {}", p1.display(), p2.display());
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! ViT-B/16 weight-stationary pipelined inference (paper §V-E).
+//!
+//!     cargo run --release --example vit_pipeline
+//!
+//! The 10×10 mesh dedicates its four corner chiplets as I/O dies hosting
+//! the 86 MB of ViT weights; mapping streams each layer's weights from
+//! the nearest corner (weight-stationary start-up), then pipelined input
+//! batches flow through the 25 transformer sub-layers.  Reports the
+//! weight-load vs inference-time split and the throughput scaling with
+//! input pipelining that Fig. 10 builds on.
+
+use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
+use chipsim::sim::GlobalManager;
+use chipsim::util::benchkit::{fmt_ns, Table};
+use chipsim::workload::{ModelKind, NeuralModel};
+
+fn main() -> anyhow::Result<()> {
+    chipsim::util::logging::init();
+    let hw = HardwareConfig::vit_mesh(10, 10);
+    let model = NeuralModel::build(ModelKind::VitB16);
+    println!(
+        "ViT-B/16: {} layers, {:.1} MB weights, {:.1} GMACs/inference",
+        model.layers.len(),
+        model.total_weight_bytes() as f64 / 1e6,
+        model.total_macs() as f64 / 1e9
+    );
+
+    let mut t = Table::new(
+        "ViT-B/16 single model, input pipelining (4 corner I/O chiplets)",
+        &["Inferences", "Total time", "Amortized / inf", "Throughput (inf/s)"],
+    );
+    let mut first_total = 0.0f64;
+    for inf in [1u32, 2, 5, 10, 20] {
+        let params = SimParams {
+            pipelined: true,
+            inferences_per_model: inf,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        let report = GlobalManager::new(hw.clone(), params)
+            .run(WorkloadConfig::single(ModelKind::VitB16))?;
+        let o = &report.outcomes[0];
+        let total = (o.finished_ns - o.mapped_ns) as f64;
+        if inf == 1 {
+            first_total = total;
+        }
+        t.row(vec![
+            inf.to_string(),
+            fmt_ns(total),
+            fmt_ns(total / inf as f64),
+            format!("{:.1}", inf as f64 / (total * 1e-9)),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nweight-load amortization: 1-inference run costs {} total;\n\
+         the paper notes loading takes ~3x the single-inference execution,\n\
+         so throughput rises steeply until pipelining saturates the NoI.",
+        fmt_ns(first_total)
+    );
+    Ok(())
+}

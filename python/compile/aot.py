@@ -1,0 +1,98 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile()`` / ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts relative to this file):
+
+  <name>.hlo.txt    one per aot_entries() variant
+  manifest.json     name -> {file, inputs: [{shape, dtype}], num_outputs,
+                             constants of interest (chunk sizes, cg iters)}
+
+The Rust runtime (rust/src/runtime/) consumes manifest.json; keep the
+schema in sync with runtime::manifest.
+
+Python runs ONCE at build time (`make artifacts`); nothing here is on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/return-tuple",
+        "constants": {
+            "transient_chunk": model.TRANSIENT_CHUNK,
+            "cg_iters": model.CG_ITERS,
+            "imc_batch": model.IMC_BATCH,
+            "thermal_sizes": list(model.THERMAL_SIZES),
+        },
+        "entries": {},
+    }
+    for name, fn, example_args in model.aot_entries():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        num_outputs = len(jax.tree_util.tree_leaves(out_avals))
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+            "num_outputs": num_outputs,
+        }
+        print(f"  {name}: {len(text)} chars, {num_outputs} outputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    default_out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    ap.add_argument("--out-dir", default=os.path.normpath(default_out))
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="legacy single-file alias; its directory is used as --out-dir",
+    )
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    print(f"AOT-lowering to {out_dir}")
+    build_all(out_dir)
+    # Legacy Makefile stamp target.
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("# see manifest.json; artifacts are per-entry .hlo.txt files\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

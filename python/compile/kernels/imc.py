@@ -1,0 +1,70 @@
+"""L1 Pallas kernel for the batched IMC analytical estimator.
+
+This is the CiMLoop-analog compute backend served as an AOT artifact: the
+Rust coordinator batches layer-segment feature rows and gets back
+(latency_ns, energy_pj, avg_power_mw) per row, computed exactly like
+``ref.imc_estimate_ref``.
+
+The kernel is purely element-wise over the batch dimension, so the grid
+tiles rows; each grid step processes a (BB, 6) feature tile entirely in
+VMEM.  Feature/parameter/output layouts are documented in ref.py and
+mirrored by rust/src/compute/pjrt.rs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(b: int) -> int:
+    """Full-batch block for the AOT size (see thermal_step._pick_block —
+    same §Perf rationale; the whole (128, 6) feature tile is tiny)."""
+    if b <= 1024:
+        return b
+    for bb in (128, 64, 32, 16, 8, 4, 2, 1):
+        if b % bb == 0:
+            return bb
+    return 1
+
+
+def _imc_kernel(f_ref, q_ref, o_ref):
+    f = f_ref[...]  # (BB, 6)
+    q = q_ref[...]  # (6,)
+    macs = f[:, 0]
+    out_elems = f[:, 3]
+    t_mac = macs / jnp.maximum(q[0], 1e-9)
+    t_adc = out_elems * q[3]
+    latency = q[4] + jnp.maximum(t_mac, t_adc)
+    e_dyn = macs * q[1] + out_elems * q[2]
+    e_leak = q[5] * latency * 1e-3
+    energy = e_dyn + e_leak
+    power = energy / jnp.maximum(latency, 1e-9) * 1e3
+    o_ref[...] = jnp.stack([latency, energy, power], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def imc_estimate(
+    features: jnp.ndarray, params: jnp.ndarray, block_rows: int | None = None
+) -> jnp.ndarray:
+    """Batched IMC estimate. features: [B,6] f32, params: [6] f32 -> [B,3]."""
+    b, nf = features.shape
+    assert nf == ref.IMC_NUM_FEATURES
+    bb = block_rows or _pick_block(b)
+    assert b % bb == 0, f"B={b} not divisible by block_rows={bb}"
+    return pl.pallas_call(
+        _imc_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, nf), lambda i: (i, 0)),
+            pl.BlockSpec((ref.IMC_NUM_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, ref.IMC_NUM_OUTPUTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ref.IMC_NUM_OUTPUTS), features.dtype),
+        interpret=True,
+    )(features, params)

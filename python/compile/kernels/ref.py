@@ -1,0 +1,110 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions are the *correctness contract*: pytest (and hypothesis)
+assert that each Pallas kernel matches its reference to tight tolerances
+across shapes and dtypes. They are also used by `model.py` docs/tests to
+sanity-check the composed L2 graphs.
+
+Nothing in this file is ever lowered into the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_bias_ref(a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """y = A @ x + b  (the thermal step primitive)."""
+    return a @ x + b
+
+
+def thermal_step_ref(
+    a: jnp.ndarray, bm: jnp.ndarray, t: jnp.ndarray, p: jnp.ndarray
+) -> jnp.ndarray:
+    """One implicit-Euler thermal step: T' = A @ T + Bm @ P.
+
+    A  = (I + dt C^-1 G)^-1           (precomputed by the Rust caller)
+    Bm = (I + dt C^-1 G)^-1 dt C^-1   (ditto)
+    """
+    return a @ t + bm @ p
+
+
+def thermal_transient_ref(
+    a: jnp.ndarray, bm: jnp.ndarray, t0: jnp.ndarray, p_seq: jnp.ndarray
+) -> jnp.ndarray:
+    """Reference transient solve: scan thermal_step_ref over p_seq rows.
+
+    Returns the [S, N] trajectory (temperature *after* each power bin).
+    """
+    traj = []
+    t = t0
+    for k in range(p_seq.shape[0]):
+        t = thermal_step_ref(a, bm, t, p_seq[k])
+        traj.append(t)
+    return jnp.stack(traj)
+
+
+def cg_solve_ref(g: jnp.ndarray, p: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Fixed-iteration conjugate gradient for SPD G: solve G t = p.
+
+    Matches the L2 `thermal_steady` graph step-for-step (same update
+    order, same epsilon guard) so numerics agree to float tolerance.
+    """
+    n = p.shape[0]
+    t = jnp.zeros((n,), dtype=p.dtype)
+    r = p - g @ t
+    d = r
+    rs = r @ r
+    eps = jnp.asarray(1e-30, dtype=p.dtype)
+    for _ in range(iters):
+        gd = g @ d
+        alpha = rs / jnp.maximum(d @ gd, eps)
+        t = t + alpha * d
+        r = r - alpha * gd
+        rs_new = r @ r
+        beta = rs_new / jnp.maximum(rs, eps)
+        d = r + beta * d
+        rs = rs_new
+    return t
+
+
+# ---------------------------------------------------------------------------
+# IMC analytical estimator (the CiMLoop-analog compute backend, batched).
+#
+# Feature layout per layer-segment row (see rust/src/compute/pjrt.rs, which
+# must stay in sync):
+#   f[0] = macs                (multiply-accumulates in the segment)
+#   f[1] = weight_bytes        (stationary weights mapped to the crossbars)
+#   f[2] = in_act_bytes        (input activations streamed in)
+#   f[3] = out_act_elems       (output activations -> ADC conversions)
+#   f[4] = rows_used           (crossbar rows activated)
+#   f[5] = cols_used           (crossbar cols activated)
+#
+# Parameter layout (one row per chiplet type):
+#   q[0] = mac_rate_gops       (sustained GOPS for MAC array == ops/ns)
+#   q[1] = e_mac_pj            (energy per MAC, pJ)
+#   q[2] = e_adc_pj            (energy per output-element ADC conversion, pJ)
+#   q[3] = t_adc_ns_per_elem   (ADC serialization, ns per output element)
+#   q[4] = base_latency_ns     (fixed per-segment issue overhead)
+#   q[5] = leak_mw             (static power while active, mW)
+# Outputs per row: [latency_ns, energy_pj, avg_power_mw]
+# ---------------------------------------------------------------------------
+
+IMC_NUM_FEATURES = 6
+IMC_NUM_PARAMS = 6
+IMC_NUM_OUTPUTS = 3
+
+
+def imc_estimate_ref(features: jnp.ndarray, params: jnp.ndarray) -> jnp.ndarray:
+    """Batched IMC latency/energy/power estimate. features: [B,6] params: [6]."""
+    macs = features[:, 0]
+    out_elems = features[:, 3]
+    mac_rate = params[0]  # GOPS == ops/ns
+    t_mac = macs / jnp.maximum(mac_rate, 1e-9)
+    t_adc = out_elems * params[3]
+    latency = params[4] + jnp.maximum(t_mac, t_adc)
+    e_dyn = macs * params[1] + out_elems * params[2]
+    e_leak = params[5] * latency * 1e-3  # mW * ns -> pJ
+    energy = e_dyn + e_leak
+    power = energy / jnp.maximum(latency, 1e-9) * 1e3  # pJ/ns == W -> mW
+    return jnp.stack([latency, energy, power], axis=1)

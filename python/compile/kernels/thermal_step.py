@@ -1,0 +1,151 @@
+"""L1 Pallas kernels for the MFIT-analog thermal solver.
+
+The thermal hot path is dominated by dense matvecs over the (padded) RC
+system matrices:
+
+  transient:  T' = A @ T + Bm @ P       (implicit-Euler step, 2 matvecs)
+  steady CG:  g  = G @ d                (one matvec per iteration)
+
+`matvec_bias` implements ``y = A @ x + b`` tiled over row blocks so each
+grid step holds one (BR, N) tile of A in VMEM alongside the full x/b
+vectors.  `dual_matvec` fuses the transient step's two matvecs into one
+kernel so A and Bm row tiles stream through VMEM together and T'/P never
+round-trip to HBM between them.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the BlockSpec over rows
+is the HBM->VMEM schedule; with BR=128 a (128, 1024) f32 tile is 512 KiB,
+well under VMEM, and the matvec feeds the MXU one 128-row stripe at a
+time.  On this image the kernels run with ``interpret=True`` (CPU PJRT
+cannot execute Mosaic custom-calls) so they lower to plain HLO ops; the
+block structure is still what a real TPU build would use.
+
+All kernels require N to be a multiple of the row block (the AOT variants
+use N in {64, 256, 640, 1024}); the Rust caller zero-pads to the next
+variant size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int) -> int:
+    """Row-block policy (§Perf-tuned, see EXPERIMENTS.md).
+
+    For the AOT sizes (N <= 1024) a FULL-row block is chosen: one grid
+    step, one (N, N) A-tile resident at a time.  VMEM check: (1024, 1024)
+    f32 = 4 MiB < 16 MiB, so the schedule is valid on a real TPU too.  On
+    this CPU image (interpret=True) the full block lowers to a single dot
+    and matches the pure-jnp roofline, where the previous 128-row tiling
+    paid a 27x penalty in per-block dynamic-slice overhead inside the
+    scan.  Larger systems fall back to 128-row stripes (the classic
+    MXU-friendly tiling).
+    """
+    if n <= 1024:
+        return n
+    for br in (128, 64, 32, 16, 8, 4, 2, 1):
+        if n % br == 0:
+            return br
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# y = A @ x + b
+# ---------------------------------------------------------------------------
+
+
+def _matvec_bias_kernel(a_ref, x_ref, b_ref, o_ref):
+    # a_ref: (BR, N) row tile; x_ref: (N,); b_ref/o_ref: (BR,)
+    a = a_ref[...]
+    x = x_ref[...]
+    o_ref[...] = a @ x + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec_bias(
+    a: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray, block_rows: int | None = None
+) -> jnp.ndarray:
+    """y = A @ x + b with A tiled over row blocks. A: [N,N], x/b: [N]."""
+    n = a.shape[0]
+    br = block_rows or _pick_block(n)
+    assert n % br == 0, f"N={n} not divisible by block_rows={br}"
+    return pl.pallas_call(
+        _matvec_bias_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, x, b)
+
+
+# ---------------------------------------------------------------------------
+# y = A @ t + Bm @ p   (fused transient step)
+# ---------------------------------------------------------------------------
+
+
+def _dual_matvec_kernel(a_ref, bm_ref, t_ref, p_ref, o_ref):
+    o_ref[...] = a_ref[...] @ t_ref[...] + bm_ref[...] @ p_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def dual_matvec(
+    a: jnp.ndarray,
+    bm: jnp.ndarray,
+    t: jnp.ndarray,
+    p: jnp.ndarray,
+    block_rows: int | None = None,
+) -> jnp.ndarray:
+    """One implicit-Euler thermal step T' = A @ T + Bm @ P as a fused kernel."""
+    n = a.shape[0]
+    br = block_rows or _pick_block(n)
+    assert n % br == 0, f"N={n} not divisible by block_rows={br}"
+    return pl.pallas_call(
+        _dual_matvec_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, bm, t, p)
+
+
+# ---------------------------------------------------------------------------
+# y = G @ x   (CG matvec, no bias)
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(g_ref, x_ref, o_ref):
+    o_ref[...] = g_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def matvec(g: jnp.ndarray, x: jnp.ndarray, block_rows: int | None = None) -> jnp.ndarray:
+    """y = G @ x with G tiled over row blocks."""
+    n = g.shape[0]
+    br = block_rows or _pick_block(n)
+    assert n % br == 0, f"N={n} not divisible by block_rows={br}"
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), g.dtype),
+        interpret=True,
+    )(g, x)

@@ -1,0 +1,131 @@
+"""L2 JAX compute graphs for CHIPSIM's analysis pipeline.
+
+Three graphs are AOT-lowered to HLO text (see aot.py) and executed from the
+Rust coordinator via PJRT:
+
+  thermal_transient : scan of fused implicit-Euler steps over a chunk of
+                      power bins.  Rust precomputes A = (I + dt C^-1 G)^-1
+                      and Bm = A dt C^-1 once per physical configuration
+                      (dense LU inverse in rust/src/util/linalg.rs), then
+                      streams [S, N] power chunks, carrying T between
+                      dispatches.  Implicit Euler is unconditionally stable,
+                      so one step per 1 us power bin regardless of the RC
+                      time constants.
+  thermal_steady    : fixed-iteration conjugate gradient solve of G T = P
+                      (G is SPD: conductance matrix with ambient ties).
+  imc_batch         : batched IMC latency/energy/power estimator (the
+                      CiMLoop-analog backend as an artifact).
+
+Shapes are static per artifact variant; Rust zero-pads to the next variant.
+Padding convention for thermal: padded rows of A are identity, of Bm zero,
+padded P entries zero -> padded temperatures stay exactly 0 (ambient delta).
+For steady: padded G rows/cols are identity diag, padded P zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import imc as imc_kernels
+from .kernels import thermal_step as tk
+
+# Timesteps per transient dispatch (power bins per chunk).
+TRANSIENT_CHUNK = 256
+# CG iterations per steady-state dispatch (caller re-dispatches if the
+# returned residual is above tolerance, warm-starting from t).
+CG_ITERS = 64
+# Batch size per IMC estimator dispatch.
+IMC_BATCH = 128
+
+# Node-count variants for which thermal artifacts are emitted.  640 covers
+# the paper's 10x10-chiplet system (400 active + 100 interposer + 100
+# spreader + 40 boundary slack); 64/256 cover the small configs used by
+# tests and examples; 1024 is headroom for larger DSE grids.
+THERMAL_SIZES = (64, 256, 640, 1024)
+
+
+def thermal_transient(
+    a: jnp.ndarray, bm: jnp.ndarray, t0: jnp.ndarray, p_seq: jnp.ndarray
+):
+    """Scan the fused thermal step over a [S, N] power chunk.
+
+    Returns (traj [S, N], t_final [N]).  traj[k] is the temperature at the
+    *end* of power bin k.
+    """
+
+    def step(t, p):
+        t_next = tk.dual_matvec(a, bm, t, p)
+        return t_next, t_next
+
+    t_final, traj = jax.lax.scan(step, t0, p_seq)
+    return traj, t_final
+
+
+def thermal_steady(g: jnp.ndarray, p: jnp.ndarray, t0: jnp.ndarray):
+    """CG_ITERS conjugate-gradient iterations on G t = p from warm start t0.
+
+    Returns (t [N], rs [scalar residual norm^2]).  The Rust caller loops
+    dispatches until rs < tol, feeding t back in as t0.
+    """
+    eps = jnp.asarray(1e-30, dtype=p.dtype)
+    r0 = p - tk.matvec(g, t0)
+    rs0 = r0 @ r0
+
+    def iter_fn(carry, _):
+        t, r, d, rs = carry
+        gd = tk.matvec(g, d)
+        alpha = rs / jnp.maximum(d @ gd, eps)
+        t = t + alpha * d
+        r = r - alpha * gd
+        rs_new = r @ r
+        beta = rs_new / jnp.maximum(rs, eps)
+        d = r + beta * d
+        return (t, r, d, rs_new), None
+
+    (t, _r, _d, rs), _ = jax.lax.scan(
+        iter_fn, (t0, r0, r0, rs0), None, length=CG_ITERS
+    )
+    return t, rs
+
+
+def imc_batch(features: jnp.ndarray, params: jnp.ndarray):
+    """Batched IMC estimate: features [B,6], params [6] -> [B,3]."""
+    return (imc_kernels.imc_estimate(features, params),)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: (name, fn, example_args) triples consumed by aot.py.
+# Every fn must return a tuple (return_tuple=True lowering).
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def aot_entries():
+    entries = []
+    for n in THERMAL_SIZES:
+        entries.append(
+            (
+                f"thermal_transient_n{n}",
+                lambda a, bm, t0, p: thermal_transient(a, bm, t0, p),
+                (_f32(n, n), _f32(n, n), _f32(n), _f32(TRANSIENT_CHUNK, n)),
+            )
+        )
+        entries.append(
+            (
+                f"thermal_steady_n{n}",
+                lambda g, p, t0: thermal_steady(g, p, t0),
+                (_f32(n, n), _f32(n), _f32(n)),
+            )
+        )
+    entries.append(
+        (
+            f"imc_batch_b{IMC_BATCH}",
+            lambda f, q: imc_batch(f, q),
+            (_f32(IMC_BATCH, 6), _f32(6)),
+        )
+    )
+    return entries

@@ -1,0 +1,77 @@
+"""Block-policy and performance-structure tests for the Pallas kernels.
+
+The §Perf pass fixed the row-block policy to full-row blocks for the AOT
+sizes (EXPERIMENTS.md §Perf); these tests pin that policy and its
+correctness so a refactor cannot silently reintroduce the 27x interpret
+overhead or break divisibility assumptions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import imc as imc_kernels
+from compile.kernels import ref
+from compile.kernels import thermal_step as tk
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_full_row_block_for_aot_sizes():
+    for n in model.THERMAL_SIZES:
+        assert tk._pick_block(n) == n, f"AOT size {n} must use a full-row block"
+
+
+def test_large_sizes_fall_back_to_stripes():
+    assert tk._pick_block(2048) == 128
+    assert tk._pick_block(1920) == 128
+    # Odd sizes degrade gracefully.
+    assert tk._pick_block(3 * 1024) == 128
+
+
+def test_imc_full_batch_block():
+    assert imc_kernels._pick_block(model.IMC_BATCH) == model.IMC_BATCH
+
+
+@pytest.mark.parametrize("n", [640])
+def test_full_block_matches_striped_block(n):
+    """The §Perf block change must be bit-compatible in float tolerance."""
+    r = np.random.default_rng(0)
+    a = jnp.asarray(r.standard_normal((n, n), dtype=np.float32) * 0.01)
+    bm = jnp.asarray(r.standard_normal((n, n), dtype=np.float32) * 0.01)
+    t = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    p = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    full = tk.dual_matvec(a, bm, t, p, block_rows=n)
+    striped = tk.dual_matvec(a, bm, t, p, block_rows=128)
+    want = ref.thermal_step_ref(a, bm, t, p)
+    np.testing.assert_allclose(full, want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(striped, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([64, 256]), seed=st.integers(0, 2**31 - 1))
+def test_transient_scan_full_block_hypothesis(n, seed):
+    """The composed scan (as AOT-lowered) stays equal to the python ref."""
+    r = np.random.default_rng(seed)
+    a = jnp.asarray((np.eye(n) * 0.9 + r.standard_normal((n, n)) * 1e-3).astype(np.float32))
+    bm = jnp.asarray((r.standard_normal((n, n)) * 1e-3).astype(np.float32))
+    t0 = jnp.zeros(n, jnp.float32)
+    p = jnp.asarray(r.uniform(0, 1, (8, n)).astype(np.float32))
+    traj, t_final = model.thermal_transient(a, bm, t0, p)
+    want = ref.thermal_transient_ref(a, bm, t0, p)
+    np.testing.assert_allclose(traj, want, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(t_final, want[-1], rtol=3e-4, atol=3e-4)
+
+
+def test_non_divisible_block_asserts():
+    r = np.random.default_rng(1)
+    a = jnp.asarray(r.standard_normal((6, 6), dtype=np.float32))
+    x = jnp.asarray(r.standard_normal(6, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(6, dtype=np.float32))
+    with pytest.raises(AssertionError):
+        tk.matvec_bias(a, x, b, block_rows=4)

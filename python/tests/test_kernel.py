@@ -1,0 +1,145 @@
+"""Kernel-vs-reference correctness: the CORE numeric signal for L1.
+
+Every Pallas kernel must match the pure-jnp oracle in kernels/ref.py to
+float32 tolerance, across shapes (hypothesis-driven), block sizes, and
+padding conventions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import imc as imc_kernels
+from compile.kernels import ref
+from compile.kernels import thermal_step as tk
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIZES = [8, 16, 64, 128, 256]
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def rand_system(n, seed=0):
+    """A diagonally-dominant SPD-ish system like a real RC network."""
+    r = rng(seed)
+    g = r.uniform(0.0, 1.0, size=(n, n)).astype(np.float32)
+    g = (g + g.T) / 2
+    np.fill_diagonal(g, g.sum(axis=1) + 1.0)  # strictly diagonally dominant
+    return jnp.asarray(g)
+
+
+# ---------------------------------------------------------------------------
+# matvec kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matvec_bias_matches_ref(n):
+    r = rng(n)
+    a = jnp.asarray(r.standard_normal((n, n), dtype=np.float32))
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    got = tk.matvec_bias(a, x, b)
+    want = ref.matvec_bias_ref(a, x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_matvec_matches_ref(n):
+    r = rng(n + 1)
+    g = jnp.asarray(r.standard_normal((n, n), dtype=np.float32))
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    np.testing.assert_allclose(tk.matvec(g, x), g @ x, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dual_matvec_matches_ref(n):
+    r = rng(n + 2)
+    a = jnp.asarray(r.standard_normal((n, n), dtype=np.float32))
+    bm = jnp.asarray(r.standard_normal((n, n), dtype=np.float32))
+    t = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    p = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    got = tk.dual_matvec(a, bm, t, p)
+    want = ref.thermal_step_ref(a, bm, t, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,br", [(64, 8), (64, 16), (64, 32), (64, 64), (128, 128)])
+def test_matvec_block_size_invariance(n, br):
+    """Result must not depend on the row-block tiling."""
+    r = rng(7)
+    a = jnp.asarray(r.standard_normal((n, n), dtype=np.float32))
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    got = tk.matvec_bias(a, x, b, block_rows=br)
+    want = ref.matvec_bias_ref(a, x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_matvec_bias_hypothesis(n, seed, scale):
+    """Hypothesis sweep: random shapes/seeds/scales against the oracle."""
+    r = rng(seed)
+    a = jnp.asarray((r.standard_normal((n, n)) * scale).astype(np.float32))
+    x = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    got = tk.matvec_bias(a, x, b)
+    want = ref.matvec_bias_ref(a, x, b)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * scale * n)
+
+
+# ---------------------------------------------------------------------------
+# IMC estimator kernel
+# ---------------------------------------------------------------------------
+
+IMC_PARAMS = jnp.asarray([65.0, 0.4, 2.0, 0.05, 200.0, 30.0], dtype=jnp.float32)
+
+
+def rand_features(b, seed=0):
+    r = rng(seed)
+    f = np.zeros((b, 6), dtype=np.float32)
+    f[:, 0] = r.uniform(1e3, 1e8, b)  # macs
+    f[:, 1] = r.uniform(1e3, 2e6, b)  # weight bytes
+    f[:, 2] = r.uniform(1e2, 1e6, b)  # in act bytes
+    f[:, 3] = r.uniform(1e2, 1e6, b)  # out elems
+    f[:, 4] = r.uniform(1, 512, b)
+    f[:, 5] = r.uniform(1, 512, b)
+    return jnp.asarray(f)
+
+
+@pytest.mark.parametrize("b", [8, 64, 128])
+def test_imc_estimate_matches_ref(b):
+    f = rand_features(b, seed=b)
+    got = imc_kernels.imc_estimate(f, IMC_PARAMS)
+    want = ref.imc_estimate_ref(f, IMC_PARAMS)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from([4, 16, 32, 128]), seed=st.integers(0, 2**31 - 1))
+def test_imc_estimate_hypothesis(b, seed):
+    f = rand_features(b, seed=seed)
+    got = imc_kernels.imc_estimate(f, IMC_PARAMS)
+    want = ref.imc_estimate_ref(f, IMC_PARAMS)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_imc_outputs_positive_and_consistent():
+    """latency/energy/power positive; power == energy/latency (unit check)."""
+    f = rand_features(64, seed=42)
+    out = np.asarray(imc_kernels.imc_estimate(f, IMC_PARAMS))
+    lat, en, pw = out[:, 0], out[:, 1], out[:, 2]
+    assert (lat > 0).all() and (en > 0).all() and (pw > 0).all()
+    np.testing.assert_allclose(pw, en / lat * 1e3, rtol=1e-4)

@@ -1,0 +1,129 @@
+"""L2 graph correctness: transient scan, steady CG, imc batch, AOT lowering."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rc_system(n, seed=0, dt_us=1.0):
+    """Build a physically-plausible RC system and its implicit-Euler matrices.
+
+    Returns (G, C, A, Bm): G conductance [n,n] SPD, C capacitance diag [n],
+    A = (I + dt C^-1 G)^-1, Bm = A dt C^-1. dt in seconds = dt_us * 1e-6.
+    """
+    r = np.random.default_rng(seed)
+    # 1-D chain of thermal nodes with ambient tie at both ends.
+    g_link = r.uniform(1e-3, 1e-2, n + 1)  # W/K
+    g = np.zeros((n, n), dtype=np.float64)
+    for i in range(n):
+        if i > 0:
+            g[i, i - 1] -= g_link[i]
+            g[i, i] += g_link[i]
+        if i < n - 1:
+            g[i, i + 1] -= g_link[i + 1]
+            g[i, i] += g_link[i + 1]
+    g[0, 0] += g_link[0]  # ambient ties
+    g[n - 1, n - 1] += g_link[n]
+    c = r.uniform(1e-6, 1e-5, n)  # J/K
+    dt = dt_us * 1e-6
+    m = np.eye(n) + dt * (g / c[:, None])
+    a = np.linalg.inv(m)
+    bm = a @ np.diag(dt / c)
+    return (
+        jnp.asarray(g, jnp.float32),
+        jnp.asarray(c, jnp.float32),
+        jnp.asarray(a, jnp.float32),
+        jnp.asarray(bm, jnp.float32),
+    )
+
+
+@pytest.mark.parametrize("n", [8, 64])
+def test_transient_matches_ref(n):
+    _, _, a, bm = rc_system(n)
+    r = np.random.default_rng(1)
+    t0 = jnp.zeros(n, jnp.float32)
+    p = jnp.asarray(r.uniform(0, 2.0, (16, n)).astype(np.float32))
+    traj, t_final = model.thermal_transient(a, bm, t0, p)
+    want = ref.thermal_transient_ref(a, bm, t0, p)
+    np.testing.assert_allclose(traj, want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(t_final, want[-1], rtol=1e-4, atol=1e-4)
+
+
+def test_transient_padding_convention():
+    """Padded rows (A=I, Bm=0, P=0) must stay exactly at 0 delta-T."""
+    n, npad = 8, 16
+    _, _, a, bm = rc_system(n)
+    a_p = np.eye(npad, dtype=np.float32)
+    bm_p = np.zeros((npad, npad), dtype=np.float32)
+    a_p[:n, :n] = np.asarray(a)
+    bm_p[:n, :n] = np.asarray(bm)
+    p = np.zeros((8, npad), dtype=np.float32)
+    p[:, :n] = 1.0
+    traj, _ = model.thermal_transient(
+        jnp.asarray(a_p), jnp.asarray(bm_p), jnp.zeros(npad, jnp.float32), jnp.asarray(p)
+    )
+    traj = np.asarray(traj)
+    assert np.all(traj[:, n:] == 0.0)
+    assert np.all(traj[-1, :n] > 0.0)  # real nodes heated up
+
+
+@pytest.mark.parametrize("n", [8, 64])
+def test_steady_cg_converges_to_direct_solve(n):
+    g, _, _, _ = rc_system(n, seed=3)
+    r = np.random.default_rng(4)
+    p = jnp.asarray(r.uniform(0, 1.0, n).astype(np.float32))
+    t = jnp.zeros(n, jnp.float32)
+    for _ in range(8):  # up to 8 dispatches x CG_ITERS
+        t, rs = model.thermal_steady(g, p, t)
+        if float(rs) < 1e-10:
+            break
+    want = np.linalg.solve(np.asarray(g, np.float64), np.asarray(p, np.float64))
+    np.testing.assert_allclose(np.asarray(t), want, rtol=1e-3, atol=1e-3)
+
+
+def test_steady_matches_cg_ref():
+    n = 32
+    g, _, _, _ = rc_system(n, seed=5)
+    p = jnp.asarray(np.random.default_rng(6).uniform(0, 1, n).astype(np.float32))
+    t, _ = model.thermal_steady(g, p, jnp.zeros(n, jnp.float32))
+    want = ref.cg_solve_ref(g, p, model.CG_ITERS)
+    np.testing.assert_allclose(t, want, rtol=1e-3, atol=1e-4)
+
+
+def test_imc_batch_wrapper():
+    from .test_kernel import IMC_PARAMS, rand_features
+
+    f = rand_features(model.IMC_BATCH, seed=9)
+    (out,) = model.imc_batch(f, IMC_PARAMS)
+    want = ref.imc_estimate_ref(f, IMC_PARAMS)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering sanity (text parses as HLO; entries complete)
+# ---------------------------------------------------------------------------
+
+
+def test_aot_entries_cover_all_sizes():
+    names = [name for name, _, _ in model.aot_entries()]
+    for n in model.THERMAL_SIZES:
+        assert f"thermal_transient_n{n}" in names
+        assert f"thermal_steady_n{n}" in names
+    assert any(n.startswith("imc_batch") for n in names)
+
+
+def test_aot_lowering_smallest_variant_produces_hlo_text():
+    name, fn, args = model.aot_entries()[0]
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text and "HloModule" in text
+    # return_tuple=True: root must be a tuple
+    assert "tuple(" in text or "ROOT" in text

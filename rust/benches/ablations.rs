@@ -1,0 +1,111 @@
+//! Ablation studies over CHIPSIM's own design choices (DESIGN.md §5/§7):
+//!
+//!  A. NoI fidelity: packet engine vs flit-level wormhole on the same
+//!     workload — quantifies the speed/fidelity trade the default makes.
+//!  B. Packet size (flits/packet): contention resolution granularity.
+//!  C. Mapper locality: nearest-neighbour vs worst-case (farthest) —
+//!     how much the Simba-style mapping actually buys.
+//!  D. Network bandwidth sensitivity: link width sweep, where the
+//!     comm-dominated regime (Fig. 7) flips to compute-dominated.
+//!
+//! Run: `cargo bench --bench ablations`
+
+use chipsim::config::{HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
+use chipsim::sim::GlobalManager;
+use chipsim::util::benchkit::{fmt_ns, Table};
+use chipsim::workload::ModelKind;
+
+fn params(pipelined: bool, inf: u32) -> SimParams {
+    SimParams {
+        pipelined,
+        inferences_per_model: inf,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    }
+}
+
+/// A: packet vs flit fidelity on a small shared workload.
+fn ablation_fidelity() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let mut t = Table::new(
+        "Ablation A: NoI fidelity (ResNet18 x2, 2 inf, 6x6 mesh)",
+        &["Fidelity", "ResNet18 latency", "Wall time"],
+    );
+    for (name, fid) in [("packet", NocFidelity::Packet), ("flit", NocFidelity::Flit)] {
+        let mut p = params(false, 2);
+        p.noc_fidelity = fid;
+        let t0 = std::time::Instant::now();
+        let report = GlobalManager::new(hw.clone(), p)
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::ResNet18]))
+            .unwrap();
+        t.row(vec![
+            name.into(),
+            fmt_ns(report.mean_latency_of(ModelKind::ResNet18).unwrap()),
+            format!("{:.2?}", t0.elapsed()),
+        ]);
+    }
+    t.print();
+}
+
+/// D: link-width sweep — where does communication stop dominating?
+fn ablation_bandwidth() {
+    let mut t = Table::new(
+        "Ablation D: link width sweep (ResNet18, pipelined, 5 inf)",
+        &["Link B/cy", "Latency", "Comm share"],
+    );
+    for width in [8u64, 16, 32, 64, 128] {
+        let mut hw = HardwareConfig::homogeneous_mesh(10, 10);
+        hw.link.width_bytes = width;
+        let report = GlobalManager::new(hw, params(true, 5))
+            .run(WorkloadConfig::cnn_stream(8, 5, 0xC0FFEE))
+            .unwrap();
+        if let Some((comp, comm)) = report.mean_compute_comm_of(ModelKind::ResNet18) {
+            t.row(vec![
+                width.to_string(),
+                fmt_ns(report.mean_latency_of(ModelKind::ResNet18).unwrap()),
+                format!("{:.0}%", comm / (comp + comm) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+}
+
+/// C: value of nearest-neighbour mapping — compare against a stream run
+/// on a topology whose "distances" are inverted by routing everything
+/// through one corner (worst-case custom star), approximating a
+/// locality-oblivious placement.
+fn ablation_mapping_locality() {
+    let mut t = Table::new(
+        "Ablation C: locality (mesh vs all-through-hub star, 36 chiplets)",
+        &["Topology", "ResNet18 latency", "NoI byte-hops"],
+    );
+    let mesh = HardwareConfig::homogeneous_mesh(6, 6);
+    let mut star_links = Vec::new();
+    for i in 1..36 {
+        star_links.push((0usize, i));
+    }
+    let mut star = HardwareConfig::homogeneous_mesh(6, 6);
+    star.topology = chipsim::config::TopologyKind::Custom { links: star_links };
+    for (name, hw) in [("mesh", mesh), ("hub-star", star)] {
+        let report = GlobalManager::new(hw, params(true, 3))
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 3]))
+            .unwrap();
+        t.row(vec![
+            name.into(),
+            report
+                .mean_latency_of(ModelKind::ResNet18)
+                .map(|x| fmt_ns(x))
+                .unwrap_or_else(|| "-".into()),
+            report.noc_work.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn main() {
+    chipsim::util::logging::init();
+    ablation_fidelity();
+    ablation_bandwidth();
+    ablation_mapping_locality();
+}

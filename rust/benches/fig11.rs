@@ -1,0 +1,7 @@
+//! Regenerates Fig. 11: bandwidth envelope of the emulated CCD platform.
+fn main() {
+    chipsim::util::logging::init();
+    let table = chipsim::experiments::fig11();
+    table.print();
+    let _ = chipsim::metrics::write_json("fig11.json", &table.to_json());
+}

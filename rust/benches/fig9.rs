@@ -1,0 +1,11 @@
+//! Regenerates the paper's Fig9 (see DESIGN.md §6 experiment index).
+//! Run: `cargo bench --bench fig9` (add CHIPSIM_QUICK=1 for CI size).
+fn main() {
+    chipsim::util::logging::init();
+    let quick = std::env::var("CHIPSIM_QUICK").is_ok();
+    let t0 = std::time::Instant::now();
+    let table = chipsim::experiments::fig9(quick);
+    table.print();
+    let _ = chipsim::metrics::write_json("fig9.json", &table.to_json());
+    println!("[fig9 completed in {:.1?}]", t0.elapsed());
+}

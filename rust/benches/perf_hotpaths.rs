@@ -1,0 +1,152 @@
+//! Hot-path microbenchmarks driving the §Perf optimization pass
+//! (EXPERIMENTS.md §Perf records before/after for each iteration).
+//!
+//! Covered paths:
+//!   L3  packet NoI engine       (bytes·hops/s under load)
+//!   L3  flit NoI engine         (flit-hops/s, validation fidelity)
+//!   L3  mapper                  (models mapped/s on a busy ledger)
+//!   L3  end-to-end co-sim       (wall time per simulated model)
+//!   L2  native thermal step     (node-updates/s)
+//!   L2  PJRT thermal transient  (steps/s incl. dispatch overhead)
+//!
+//! Run: `cargo bench --bench perf_hotpaths`
+
+use chipsim::config::{HardwareConfig, LinkParams, SimParams, WorkloadConfig};
+use chipsim::mapping::{MemoryLedger, NearestNeighborMapper};
+use chipsim::noc::engine::PacketEngine;
+use chipsim::noc::flit::FlitEngine;
+use chipsim::noc::topology::{mesh, Topology};
+use chipsim::noc::{FlowSpec, NetworkSim};
+use chipsim::sim::GlobalManager;
+use chipsim::thermal::{native::NativeSolver, ThermalModel};
+use chipsim::util::benchkit::{bench, fmt_ns};
+use chipsim::util::rng::Rng;
+use chipsim::workload::{ModelKind, NeuralModel};
+
+fn bench_packet_engine() {
+    let topo = mesh(10, 10, &LinkParams::default());
+    let r = bench("noc/packet: 200 flows x 64KB on 10x10 mesh", 5, 1500, || {
+        let mut e = PacketEngine::new(topo.clone());
+        let mut rng = Rng::new(7);
+        for i in 0..200 {
+            let src = rng.below_usize(100);
+            let dst = (src + 1 + rng.below_usize(99)) % 100;
+            e.inject(FlowSpec { src, dst, bytes: 65_536 }, i as u64 * 100);
+        }
+        while e.advance_until(u64::MAX).is_some() {}
+        std::hint::black_box(e.work_done());
+    });
+    r.print();
+    // Throughput: bytes*hops per wall-second.
+    let mut e = PacketEngine::new(topo);
+    let mut rng = Rng::new(7);
+    for i in 0..200 {
+        let src = rng.below_usize(100);
+        let dst = (src + 1 + rng.below_usize(99)) % 100;
+        e.inject(FlowSpec { src, dst, bytes: 65_536 }, i as u64 * 100);
+    }
+    while e.advance_until(u64::MAX).is_some() {}
+    let byte_hops = e.work_done() as f64;
+    println!(
+        "  -> {:.1} M byte-hops/s",
+        byte_hops / (r.mean_ns / 1e9) / 1e6
+    );
+}
+
+fn bench_flit_engine() {
+    let topo = mesh(6, 6, &LinkParams::default());
+    let r = bench("noc/flit: 24 flows x 8KB on 6x6 mesh", 3, 1500, || {
+        let mut e = FlitEngine::new(topo.clone());
+        let mut rng = Rng::new(9);
+        for _ in 0..24 {
+            let src = rng.below_usize(36);
+            let dst = (src + 1 + rng.below_usize(35)) % 36;
+            e.inject(FlowSpec { src, dst, bytes: 8_192 }, 0);
+        }
+        while e.advance_until(u64::MAX).is_some() {}
+        std::hint::black_box(e.work_done());
+    });
+    r.print();
+}
+
+fn bench_mapper() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let topo = Topology::build(&hw);
+    let model = NeuralModel::build(ModelKind::ResNet50);
+    let r = bench("mapping: ResNet50 map+unmap on 10x10", 20, 1000, || {
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = mapper.try_map(&model, &mut ledger).unwrap();
+        ledger.release_mapping(&m);
+        std::hint::black_box(m.total_segments());
+    });
+    r.print();
+}
+
+fn bench_end_to_end() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let params = SimParams {
+        pipelined: true,
+        inferences_per_model: 3,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    let r = bench("cosim: 10-model pipelined stream on 10x10", 2, 2000, || {
+        let report = GlobalManager::new(hw.clone(), params.clone())
+            .run(WorkloadConfig::cnn_stream(10, 3, 0xAB))
+            .unwrap();
+        std::hint::black_box(report.span_ns);
+    });
+    r.print();
+    println!("  -> {} per simulated model", fmt_ns(r.mean_ns / 10.0));
+}
+
+fn bench_native_thermal() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let tm = ThermalModel::build(&hw);
+    let solver = NativeSolver::new(&tm, 1e-5).unwrap();
+    let p = tm.node_power(&vec![0.5; 100]);
+    let steps = vec![p; 64];
+    let r = bench("thermal/native: 64 steps x 600 nodes", 3, 1500, || {
+        let traj = solver.transient(&vec![0.0; tm.n], &steps);
+        std::hint::black_box(traj.len());
+    });
+    r.print();
+    println!(
+        "  -> {:.2} M node-updates/s",
+        64.0 * tm.n as f64 / (r.mean_ns / 1e9) / 1e6
+    );
+}
+
+fn bench_pjrt_thermal() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let tm = ThermalModel::build(&hw);
+    match chipsim::thermal::pjrt::PjrtThermalSolver::open_default(&tm, 1e-5) {
+        Ok(mut s) => {
+            let p = tm.node_power(&vec![0.5; 100]);
+            let steps = vec![p; 256];
+            let r = bench("thermal/pjrt: 256-step chunk x 640-pad nodes", 2, 2000, || {
+                let traj = s.transient(&vec![0.0; tm.n], &steps).unwrap();
+                std::hint::black_box(traj.len());
+            });
+            r.print();
+            println!(
+                "  -> {:.1} k steps/s through PJRT",
+                256.0 / (r.mean_ns / 1e9) / 1e3
+            );
+        }
+        Err(e) => println!("thermal/pjrt: skipped ({e}) — run `make artifacts`"),
+    }
+}
+
+fn main() {
+    chipsim::util::logging::init();
+    println!("== perf_hotpaths ==");
+    bench_packet_engine();
+    bench_flit_engine();
+    bench_mapper();
+    bench_end_to_end();
+    bench_native_thermal();
+    bench_pjrt_thermal();
+}

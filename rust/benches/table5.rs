@@ -1,0 +1,11 @@
+//! Regenerates the paper's Table5 (see DESIGN.md §6 experiment index).
+//! Run: `cargo bench --bench table5` (add CHIPSIM_QUICK=1 for CI size).
+fn main() {
+    chipsim::util::logging::init();
+    let quick = std::env::var("CHIPSIM_QUICK").is_ok();
+    let t0 = std::time::Instant::now();
+    let table = chipsim::experiments::table5(quick);
+    table.print();
+    let _ = chipsim::metrics::write_json("table5.json", &table.to_json());
+    println!("[table5 completed in {:.1?}]", t0.elapsed());
+}

@@ -1,0 +1,9 @@
+//! Regenerates Table VII: CHIPSIM vs hardware-emulator validation.
+fn main() {
+    chipsim::util::logging::init();
+    let t0 = std::time::Instant::now();
+    let table = chipsim::experiments::table7();
+    table.print();
+    let _ = chipsim::metrics::write_json("table7.json", &table.to_json());
+    println!("[table7 completed in {:.1?}]", t0.elapsed());
+}

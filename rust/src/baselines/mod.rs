@@ -1,0 +1,254 @@
+//! The paper's two baseline estimation approaches (§V-A "Baseline
+//! Comparisons"), reusing CHIPSIM's own mapper, topology, network engine
+//! and compute backend — but **decoupled** and **single-model**:
+//!
+//! * **Comm. Only** — the NoI-exploration style [17, 18]: only network
+//!   transfers are simulated, layer by layer, alone on an empty network;
+//!   compute time is ignored.
+//! * **Comm. + Compute** — the SIAM/HISIM style [23, 24]: per-layer
+//!   compute latency plus per-boundary solo communication latency, summed.
+//!   No contention between models, no pipelining overlap.
+//!
+//! Both therefore *underestimate* end-to-end inference latency whenever
+//! the system is shared or pipelined; quantifying that gap versus the
+//! co-simulation is exactly the paper's Tables IV–VI and Figs. 6/10.
+
+use crate::compute::{ClassDispatchBackend, ComputeBackend};
+use crate::config::HardwareConfig;
+use crate::mapping::{MemoryLedger, ModelMapping, NearestNeighborMapper};
+use crate::noc::engine::PacketEngine;
+use crate::noc::topology::Topology;
+use crate::noc::{FlowSpec, NetworkSim};
+use crate::workload::{ModelKind, NeuralModel};
+use crate::TimeNs;
+
+/// Decoupled baseline estimator.
+pub struct BaselineEstimator {
+    hw: HardwareConfig,
+    topo: Topology,
+    backend: Box<dyn ComputeBackend>,
+}
+
+/// Per-model baseline estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct BaselineEstimate {
+    /// End-to-end latency of one inference, ns.
+    pub inference_latency_ns: f64,
+    /// Compute portion, ns.
+    pub compute_ns: f64,
+    /// Communication portion, ns.
+    pub comm_ns: f64,
+}
+
+impl BaselineEstimator {
+    pub fn new(hw: HardwareConfig) -> Self {
+        let topo = Topology::build(&hw);
+        BaselineEstimator { hw, topo, backend: Box::new(ClassDispatchBackend::new()) }
+    }
+
+    pub fn with_backend(mut self, backend: Box<dyn ComputeBackend>) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Map the model alone on an empty system (single model in the system
+    /// at a time — the baselines' core assumption).
+    fn solo_mapping(&self, model: &NeuralModel) -> Option<ModelMapping> {
+        let mut ledger = MemoryLedger::new(&self.hw);
+        NearestNeighborMapper::new(&self.hw, &self.topo).try_map(model, &mut ledger)
+    }
+
+    /// Simulate one layer boundary's flows alone on an empty network and
+    /// return the end-to-end completion time.
+    fn solo_comm_ns(&self, model: &NeuralModel, mapping: &ModelMapping, layer: usize) -> f64 {
+        let mut net = PacketEngine::new(self.topo.clone());
+        let out_bytes = model.layers[layer].out_bytes;
+        for s in &mapping.layers[layer] {
+            let bytes = ((out_bytes as f64) * s.frac).ceil().max(1.0) as u64;
+            for d in &mapping.layers[layer + 1] {
+                net.inject(FlowSpec { src: s.chiplet, dst: d.chiplet, bytes }, 0);
+            }
+        }
+        let mut last = 0;
+        while let Some(c) = net.advance_until(TimeNs::MAX) {
+            last = last.max(c.time);
+        }
+        last as f64
+    }
+
+    /// Weight-load time for weight-stationary systems with I/O chiplets
+    /// (ViT §V-E) — both baselines do account for this fixed start-up.
+    fn solo_weight_load_ns(&self, mapping: &ModelMapping) -> f64 {
+        if self.hw.io_chiplets.is_empty() {
+            return 0.0;
+        }
+        let mut net = PacketEngine::new(self.topo.clone());
+        for layer in &mapping.layers {
+            for seg in layer {
+                let io = *self
+                    .hw
+                    .io_chiplets
+                    .iter()
+                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet))
+                    .unwrap();
+                net.inject(FlowSpec { src: io, dst: seg.chiplet, bytes: seg.mem_bytes }, 0);
+            }
+        }
+        let mut last = 0;
+        while let Some(c) = net.advance_until(TimeNs::MAX) {
+            last = last.max(c.time);
+        }
+        last as f64
+    }
+
+    fn estimate(&mut self, kind: ModelKind, with_compute: bool) -> Option<BaselineEstimate> {
+        let model = NeuralModel::build(kind);
+        let mapping = self.solo_mapping(&model)?;
+        let mut comm = 0.0;
+        for l in 0..model.layers.len() - 1 {
+            comm += self.solo_comm_ns(&model, &mapping, l);
+        }
+        let mut compute = 0.0;
+        if with_compute {
+            for (l, layer) in mapping.layers.iter().enumerate() {
+                let _ = l;
+                let worst = layer
+                    .iter()
+                    .map(|seg| {
+                        self.backend
+                            .evaluate(self.hw.chiplet_type(seg.chiplet), &seg.work)
+                            .latency_ns
+                    })
+                    .fold(0.0f64, f64::max);
+                compute += worst;
+            }
+        }
+        Some(BaselineEstimate {
+            inference_latency_ns: comm + compute,
+            compute_ns: compute,
+            comm_ns: comm,
+        })
+    }
+
+    /// "Comm. Only" baseline: network transfers only.
+    pub fn comm_only(&mut self, kind: ModelKind) -> Option<BaselineEstimate> {
+        self.estimate(kind, false)
+    }
+
+    /// "Comm. + Compute" baseline: decoupled per-layer compute + comm.
+    pub fn comm_compute(&mut self, kind: ModelKind) -> Option<BaselineEstimate> {
+        self.estimate(kind, true)
+    }
+
+    /// Amortized per-inference latency over `n` back-to-back inferences,
+    /// including the one-time weight load (relevant for ViT, Fig. 10):
+    /// (load + n * inference) / n.
+    pub fn amortized_with_weight_load(
+        &mut self,
+        kind: ModelKind,
+        n: u32,
+        with_compute: bool,
+    ) -> Option<f64> {
+        let model = NeuralModel::build(kind);
+        let mapping = self.solo_mapping(&model)?;
+        let load = self.solo_weight_load_ns(&mapping);
+        let est = self.estimate(kind, with_compute)?;
+        Some((load + n as f64 * est.inference_latency_ns) / n as f64)
+    }
+
+    /// Decoupled estimate of a *pipelined* `n`-inference run:
+    /// weight load + first-inference latency + (n−1) × ideal initiation
+    /// interval, where the II is the slowest pipeline stage (a layer's
+    /// compute or a boundary's solo communication).  This is how a
+    /// SIAM/HISIM-style model extrapolates pipelining — it has no notion
+    /// of contention *between* the pipelined inputs, which is exactly the
+    /// gap CHIPSIM exposes (paper Fig. 10).
+    pub fn pipelined_total_with_weight_load(
+        &mut self,
+        kind: ModelKind,
+        n: u32,
+        with_compute: bool,
+    ) -> Option<f64> {
+        let model = NeuralModel::build(kind);
+        let mapping = self.solo_mapping(&model)?;
+        let load = self.solo_weight_load_ns(&mapping);
+        let est = self.estimate(kind, with_compute)?;
+        let mut ii: f64 = 0.0;
+        for l in 0..model.layers.len() {
+            if with_compute {
+                let worst = mapping.layers[l]
+                    .iter()
+                    .map(|seg| {
+                        self.backend
+                            .evaluate(self.hw.chiplet_type(seg.chiplet), &seg.work)
+                            .latency_ns
+                    })
+                    .fold(0.0f64, f64::max);
+                ii = ii.max(worst);
+            }
+            if l + 1 < model.layers.len() {
+                ii = ii.max(self.solo_comm_ns(&model, &mapping, l));
+            }
+        }
+        Some(load + est.inference_latency_ns + (n.saturating_sub(1)) as f64 * ii)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_compute_exceeds_comm_only() {
+        let hw = HardwareConfig::homogeneous_mesh(10, 10);
+        let mut b = BaselineEstimator::new(hw);
+        for kind in crate::workload::ALL_CNNS {
+            let co = b.comm_only(kind).unwrap();
+            let cc = b.comm_compute(kind).unwrap();
+            assert!(cc.inference_latency_ns > co.inference_latency_ns, "{kind:?}");
+            assert_eq!(co.compute_ns, 0.0);
+            assert!((co.comm_ns - cc.comm_ns).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn baseline_underestimates_cosim_with_parallel_models() {
+        use crate::config::{SimParams, WorkloadConfig};
+        use crate::sim::GlobalManager;
+        let hw = HardwareConfig::homogeneous_mesh(10, 10);
+        let mut b = BaselineEstimator::new(hw.clone());
+        let base = b.comm_compute(ModelKind::ResNet18).unwrap();
+        let params = SimParams {
+            pipelined: true,
+            inferences_per_model: 5,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        let report = GlobalManager::new(hw, params)
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 6]))
+            .unwrap();
+        let chipsim = report.mean_latency_of(ModelKind::ResNet18).unwrap();
+        assert!(
+            chipsim > base.inference_latency_ns,
+            "co-sim {chipsim} !> baseline {}",
+            base.inference_latency_ns
+        );
+    }
+
+    #[test]
+    fn unmappable_model_estimates_none() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let mut b = BaselineEstimator::new(hw);
+        assert!(b.comm_only(ModelKind::AlexNet).is_none());
+    }
+
+    #[test]
+    fn weight_load_amortizes_out() {
+        let hw = HardwareConfig::vit_mesh(10, 10);
+        let mut b = BaselineEstimator::new(hw);
+        let at1 = b.amortized_with_weight_load(ModelKind::VitB16, 1, true).unwrap();
+        let at20 = b.amortized_with_weight_load(ModelKind::VitB16, 20, true).unwrap();
+        assert!(at1 > at20, "{at1} !> {at20}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Compute-simulation backends (the CiMLoop-analog layer of CHIPSIM).
+//!
+//! Compute within a chiplet is independent of other chiplets, so CHIPSIM
+//! evaluates each mapped layer segment with an event-based backend and
+//! schedules the completion on the global timeline (paper §III-C).  The
+//! backend interface is deliberately narrow — "standardized input/output
+//! format" — so backends are swappable without touching the coordinator:
+//!
+//! * [`AnalyticalImc`] — analytical in-memory-compute model calibrated to
+//!   the paper's cited chips (NeuRRAM [34] / RAELLA [33]); identical
+//!   formulas to the python oracle `kernels/ref.py::imc_estimate_ref`.
+//! * [`AnalyticalCpu`] — MACs-per-second CPU model used by the §V-F
+//!   hardware-validation study (the paper swapped CiMLoop for exactly
+//!   such a model to show backend modularity).
+//! * [`pjrt::PjrtImcBackend`] — the same IMC estimator served from the
+//!   AOT-compiled JAX/Pallas artifact through the PJRT runtime
+//!   (`--compute pjrt`), demonstrating an out-of-process backend.
+
+pub mod pjrt;
+
+use crate::config::{ChipletClass, ChipletTypeParams};
+use crate::workload::LayerDesc;
+
+/// Work descriptor for one mapped layer segment (a fraction of a layer).
+#[derive(Debug, Clone, Copy)]
+pub struct SegmentWork {
+    pub macs: u64,
+    pub weight_bytes: u64,
+    pub in_bytes: u64,
+    pub out_elems: u64,
+    /// Crossbar rows/cols activated (informational for IMC models).
+    pub rows_used: u64,
+    pub cols_used: u64,
+}
+
+impl SegmentWork {
+    /// Slice `frac` of a layer's work (layer split across segments).
+    pub fn from_layer(layer: &LayerDesc, frac: f64) -> SegmentWork {
+        let f = |x: u64| ((x as f64) * frac).ceil() as u64;
+        SegmentWork {
+            macs: f(layer.macs),
+            weight_bytes: f(layer.weight_bytes),
+            // Input activations are broadcast to every segment in full.
+            in_bytes: layer.in_bytes,
+            out_elems: f(layer.out_elems),
+            rows_used: 256,
+            cols_used: 256,
+        }
+    }
+}
+
+/// Result of simulating one segment on one chiplet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeResult {
+    pub latency_ns: f64,
+    pub energy_pj: f64,
+    pub avg_power_mw: f64,
+}
+
+/// A compute simulator backend.
+///
+/// Not `Send`: the PJRT client wraps non-thread-safe FFI handles; each
+/// simulation owns its backend on one thread (compute *parallelism* in
+/// CHIPSIM is event-level, not thread-level).
+pub trait ComputeBackend {
+    fn name(&self) -> &'static str;
+
+    /// Evaluate one segment on one chiplet type.
+    fn evaluate(&mut self, chiplet: &ChipletTypeParams, work: &SegmentWork) -> ComputeResult;
+
+    /// Batched evaluation — the Global Manager calls this once per mapped
+    /// model with every (chiplet, segment) pair, which lets artifact-based
+    /// backends amortize dispatch.  Default: loop over `evaluate`.
+    fn evaluate_batch(
+        &mut self,
+        items: &[(&ChipletTypeParams, SegmentWork)],
+    ) -> Vec<ComputeResult> {
+        items.iter().map(|(c, w)| self.evaluate(c, w)).collect()
+    }
+}
+
+// ----------------------------------------------------------------- IMC
+
+/// Analytical IMC model (CiMLoop analog).  Keep in sync with
+/// `python/compile/kernels/ref.py::imc_estimate_ref` — the PJRT backend
+/// runs that exact formula and tests assert agreement.
+pub struct AnalyticalImc;
+
+impl ComputeBackend for AnalyticalImc {
+    fn name(&self) -> &'static str {
+        "analytical-imc"
+    }
+
+    fn evaluate(&mut self, chiplet: &ChipletTypeParams, w: &SegmentWork) -> ComputeResult {
+        debug_assert!(matches!(chiplet.class, ChipletClass::Imc));
+        let t_mac = w.macs as f64 / chiplet.mac_rate_gops.max(1e-9);
+        let t_adc = w.out_elems as f64 * chiplet.t_adc_ns_per_elem;
+        let latency = chiplet.base_latency_ns + t_mac.max(t_adc);
+        let e_dyn = w.macs as f64 * chiplet.e_mac_pj + w.out_elems as f64 * chiplet.e_adc_pj;
+        let e_leak = chiplet.leak_mw * latency * 1e-3; // mW * ns -> pJ
+        let energy = e_dyn + e_leak;
+        ComputeResult {
+            latency_ns: latency,
+            energy_pj: energy,
+            avg_power_mw: energy / latency.max(1e-9) * 1e3,
+        }
+    }
+}
+
+// ----------------------------------------------------------------- CPU
+
+/// Analytical CPU model: latency = MACs / sustained MAC rate (measured on
+/// the emulated platform by micro-kernels, see `hwemu::`).
+pub struct AnalyticalCpu;
+
+impl ComputeBackend for AnalyticalCpu {
+    fn name(&self) -> &'static str {
+        "analytical-cpu"
+    }
+
+    fn evaluate(&mut self, chiplet: &ChipletTypeParams, w: &SegmentWork) -> ComputeResult {
+        let t_mac = w.macs as f64 / chiplet.mac_rate_gops.max(1e-9);
+        let latency = chiplet.base_latency_ns + t_mac;
+        let e_dyn = w.macs as f64 * chiplet.e_mac_pj;
+        let e_static = chiplet.leak_mw * latency * 1e-3;
+        let energy = e_dyn + e_static;
+        ComputeResult {
+            latency_ns: latency,
+            energy_pj: energy,
+            avg_power_mw: energy / latency.max(1e-9) * 1e3,
+        }
+    }
+}
+
+/// Dispatch on chiplet class: IMC chiplets -> IMC model, CPU -> CPU model.
+/// I/O dies never compute (the mapper excludes them); evaluating one is a
+/// coordinator bug and panics in debug builds.
+pub struct ClassDispatchBackend {
+    imc: AnalyticalImc,
+    cpu: AnalyticalCpu,
+}
+
+impl ClassDispatchBackend {
+    pub fn new() -> Self {
+        ClassDispatchBackend { imc: AnalyticalImc, cpu: AnalyticalCpu }
+    }
+}
+
+impl Default for ClassDispatchBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputeBackend for ClassDispatchBackend {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn evaluate(&mut self, chiplet: &ChipletTypeParams, w: &SegmentWork) -> ComputeResult {
+        match chiplet.class {
+            ChipletClass::Imc => self.imc.evaluate(chiplet, w),
+            ChipletClass::Cpu => self.cpu.evaluate(chiplet, w),
+            ChipletClass::Io => {
+                debug_assert!(false, "compute scheduled on an I/O die");
+                ComputeResult { latency_ns: 0.0, energy_pj: 0.0, avg_power_mw: 0.0 }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelKind, NeuralModel};
+
+    fn seg(macs: u64, out_elems: u64) -> SegmentWork {
+        SegmentWork { macs, weight_bytes: 0, in_bytes: 0, out_elems, rows_used: 256, cols_used: 256 }
+    }
+
+    #[test]
+    fn imc_latency_is_max_of_mac_and_adc() {
+        let mut b = AnalyticalImc;
+        let c = ChipletTypeParams::imc_type_a();
+        // MAC-bound case.
+        let r1 = b.evaluate(&c, &seg(1_000_000_000, 10));
+        let t_mac = 1e9 / c.mac_rate_gops;
+        assert!((r1.latency_ns - (c.base_latency_ns + t_mac)).abs() < 1e-6);
+        // ADC-bound case.
+        let r2 = b.evaluate(&c, &seg(10, 100_000_000));
+        let t_adc = 1e8 * c.t_adc_ns_per_elem;
+        assert!((r2.latency_ns - (c.base_latency_ns + t_adc)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn type_b_is_slower_but_lower_energy_per_mac() {
+        let mut b = AnalyticalImc;
+        let a = ChipletTypeParams::imc_type_a();
+        let bb = ChipletTypeParams::imc_type_b();
+        let w = seg(100_000_000, 1000);
+        let ra = b.evaluate(&a, &w);
+        let rb = b.evaluate(&bb, &w);
+        assert!(rb.latency_ns > ra.latency_ns);
+        assert!(bb.e_mac_pj < a.e_mac_pj);
+    }
+
+    #[test]
+    fn power_consistency() {
+        let mut b = ClassDispatchBackend::new();
+        let c = ChipletTypeParams::imc_type_a();
+        let r = b.evaluate(&c, &seg(50_000_000, 20_000));
+        assert!((r.avg_power_mw - r.energy_pj / r.latency_ns * 1e3).abs() < 1e-6);
+        assert!(r.avg_power_mw > 0.0);
+    }
+
+    #[test]
+    fn segment_fraction_scales_work() {
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        let l = &m.layers[2];
+        let whole = SegmentWork::from_layer(l, 1.0);
+        let half = SegmentWork::from_layer(l, 0.5);
+        assert!(half.macs >= whole.macs / 2 && half.macs <= whole.macs / 2 + 1);
+        assert_eq!(half.in_bytes, whole.in_bytes); // broadcast input
+    }
+
+    #[test]
+    fn batch_matches_singles() {
+        let mut b = ClassDispatchBackend::new();
+        let c = ChipletTypeParams::imc_type_a();
+        let works = [seg(1_000_000, 100), seg(2_000_000, 5_000), seg(123, 45)];
+        let items: Vec<(&ChipletTypeParams, SegmentWork)> =
+            works.iter().map(|w| (&c, *w)).collect();
+        let batched = b.evaluate_batch(&items);
+        for (w, r) in works.iter().zip(&batched) {
+            assert_eq!(*r, b.evaluate(&c, w));
+        }
+    }
+
+    #[test]
+    fn cnn_layers_have_positive_latency_on_type_a() {
+        let mut b = AnalyticalImc;
+        let c = ChipletTypeParams::imc_type_a();
+        for kind in crate::workload::ALL_CNNS {
+            let m = NeuralModel::build(kind);
+            for l in &m.layers {
+                let r = b.evaluate(&c, &SegmentWork::from_layer(l, 1.0));
+                assert!(r.latency_ns > 0.0 && r.energy_pj > 0.0, "{}", l.name);
+            }
+        }
+    }
+}

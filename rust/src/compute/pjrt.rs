@@ -1,0 +1,148 @@
+//! PJRT-served IMC compute backend.
+//!
+//! Runs the batched IMC estimator that `python/compile/model.py::imc_batch`
+//! lowered to `artifacts/imc_batch_b128.hlo.txt`.  Feature/parameter/output
+//! layouts must stay in sync with `python/compile/kernels/ref.py`:
+//!
+//! features[b] = [macs, weight_bytes, in_act_bytes, out_act_elems,
+//!                rows_used, cols_used]
+//! params      = [mac_rate_gops, e_mac_pj, e_adc_pj, t_adc_ns_per_elem,
+//!                base_latency_ns, leak_mw]
+//! outputs[b]  = [latency_ns, energy_pj, avg_power_mw]
+//!
+//! Segments are grouped by chiplet type (params are per-dispatch) and
+//! padded to the artifact batch size.  This backend exists to prove the
+//! "compute simulator is swappable, even out-of-process" property of the
+//! paper (§III-C); it matches [`super::AnalyticalImc`] to f32 precision —
+//! see `rust/tests/runtime_artifacts.rs`.
+
+use super::{ComputeBackend, ComputeResult, SegmentWork};
+use crate::config::{ChipletClass, ChipletTypeParams};
+use crate::runtime::{F32Tensor, Runtime};
+
+/// Batched PJRT backend (falls back to CPU-analytical for non-IMC types).
+pub struct PjrtImcBackend {
+    rt: Runtime,
+    batch: usize,
+    artifact: String,
+    cpu_fallback: super::AnalyticalCpu,
+}
+
+impl PjrtImcBackend {
+    pub fn new(rt: Runtime) -> anyhow::Result<Self> {
+        let batch = rt
+            .manifest
+            .constant_usize("imc_batch")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing imc_batch constant"))?;
+        let artifact = format!("imc_batch_b{batch}");
+        anyhow::ensure!(
+            rt.manifest.entries.contains_key(&artifact),
+            "artifact '{artifact}' not found — run `make artifacts`"
+        );
+        Ok(PjrtImcBackend { rt, batch, artifact, cpu_fallback: super::AnalyticalCpu })
+    }
+
+    pub fn open_default() -> anyhow::Result<Self> {
+        Self::new(Runtime::open_default()?)
+    }
+
+    fn params_of(c: &ChipletTypeParams) -> [f32; 6] {
+        [
+            c.mac_rate_gops as f32,
+            c.e_mac_pj as f32,
+            c.e_adc_pj as f32,
+            c.t_adc_ns_per_elem as f32,
+            c.base_latency_ns as f32,
+            c.leak_mw as f32,
+        ]
+    }
+
+    fn features_of(w: &SegmentWork) -> [f32; 6] {
+        [
+            w.macs as f32,
+            w.weight_bytes as f32,
+            w.in_bytes as f32,
+            w.out_elems as f32,
+            w.rows_used as f32,
+            w.cols_used as f32,
+        ]
+    }
+
+    /// Dispatch one padded batch for a single chiplet-type parameter set.
+    fn dispatch(
+        &mut self,
+        params: [f32; 6],
+        works: &[SegmentWork],
+    ) -> anyhow::Result<Vec<ComputeResult>> {
+        let mut results = Vec::with_capacity(works.len());
+        for chunk in works.chunks(self.batch) {
+            let mut feat = vec![0.0f32; self.batch * 6];
+            for (i, w) in chunk.iter().enumerate() {
+                feat[i * 6..(i + 1) * 6].copy_from_slice(&Self::features_of(w));
+            }
+            // Padding rows are all-zero -> harmless outputs, discarded.
+            let out = self.rt.exec_f32(
+                &self.artifact,
+                &[
+                    F32Tensor::new(vec![self.batch, 6], feat),
+                    F32Tensor::new(vec![6], params.to_vec()),
+                ],
+            )?;
+            let flat = &out[0]; // [batch, 3]
+            for i in 0..chunk.len() {
+                results.push(ComputeResult {
+                    latency_ns: flat[i * 3] as f64,
+                    energy_pj: flat[i * 3 + 1] as f64,
+                    avg_power_mw: flat[i * 3 + 2] as f64,
+                });
+            }
+        }
+        Ok(results)
+    }
+}
+
+impl ComputeBackend for PjrtImcBackend {
+    fn name(&self) -> &'static str {
+        "pjrt-imc"
+    }
+
+    fn evaluate(&mut self, chiplet: &ChipletTypeParams, work: &SegmentWork) -> ComputeResult {
+        if chiplet.class != ChipletClass::Imc {
+            return self.cpu_fallback.evaluate(chiplet, work);
+        }
+        self.dispatch(Self::params_of(chiplet), std::slice::from_ref(work))
+            .expect("pjrt imc dispatch")[0]
+    }
+
+    fn evaluate_batch(
+        &mut self,
+        items: &[(&ChipletTypeParams, SegmentWork)],
+    ) -> Vec<ComputeResult> {
+        // Group contiguous-by-parameter-set so mapped models (usually one
+        // or two chiplet types) need only a few dispatches.
+        let mut out = vec![
+            ComputeResult { latency_ns: 0.0, energy_pj: 0.0, avg_power_mw: 0.0 };
+            items.len()
+        ];
+        let mut groups: Vec<([f32; 6], Vec<usize>)> = Vec::new();
+        for (idx, (c, w)) in items.iter().enumerate() {
+            if c.class != ChipletClass::Imc {
+                out[idx] = self.cpu_fallback.evaluate(c, w);
+                continue;
+            }
+            let p = Self::params_of(c);
+            match groups.iter_mut().find(|(gp, _)| *gp == p) {
+                Some((_, idxs)) => idxs.push(idx),
+                None => groups.push((p, vec![idx])),
+            }
+        }
+        for (p, idxs) in groups {
+            let works: Vec<SegmentWork> = idxs.iter().map(|&i| items[i].1).collect();
+            let res = self.dispatch(p, &works).expect("pjrt imc batch dispatch");
+            for (slot, r) in idxs.into_iter().zip(res) {
+                out[slot] = r;
+            }
+        }
+        out
+    }
+}

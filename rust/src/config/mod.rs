@@ -1,0 +1,603 @@
+//! Typed configuration for hardware, workload, and simulation parameters.
+//!
+//! Three user inputs drive a CHIPSIM run (paper Fig. 3): the target DNN
+//! workload, the hardware configuration, and the mapping function.  This
+//! module defines the typed forms plus JSON load/save via `util::json`
+//! (the launcher accepts `--hw config.json`).
+
+use crate::util::json::{self, Value};
+use crate::workload::ModelKind;
+use crate::TimeNs;
+
+// ---------------------------------------------------------------- chiplets
+
+/// Broad chiplet class: selects the compute backend model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChipletClass {
+    /// In-memory-compute accelerator chiplet (CiMLoop-analog backend).
+    Imc,
+    /// CPU compute-complex die (analytical MACs/s backend, HW validation).
+    Cpu,
+    /// I/O die / weight-hosting chiplet (no compute; ViT + CCD-star IOD).
+    Io,
+}
+
+/// Parameters of one chiplet type (paper: "chiplet properties such as MAC
+/// units, memory hierarchy, and frequency").
+#[derive(Debug, Clone)]
+pub struct ChipletTypeParams {
+    pub name: String,
+    pub class: ChipletClass,
+    /// Stationary weight memory capacity in bytes.
+    pub mem_bytes: u64,
+    /// Sustained MAC throughput, GOPS (== MACs/ns).
+    pub mac_rate_gops: f64,
+    /// Dynamic energy per MAC, pJ.
+    pub e_mac_pj: f64,
+    /// Energy per output-element ADC conversion, pJ (IMC only).
+    pub e_adc_pj: f64,
+    /// ADC serialization time per output element, ns (IMC only).
+    pub t_adc_ns_per_elem: f64,
+    /// Fixed per-segment issue overhead, ns.
+    pub base_latency_ns: f64,
+    /// Static (leakage) power while a segment is active, mW.
+    pub leak_mw: f64,
+    /// Idle power, mW (contributes to power bins when not computing).
+    pub idle_mw: f64,
+    /// Physical footprint for the thermal floorplan, mm.
+    pub width_mm: f64,
+    pub height_mm: f64,
+}
+
+impl ChipletTypeParams {
+    /// Type A: NeuRRAM-like RRAM CIM chiplet [34] — fast, 2 MiB weights.
+    /// The paper's homogeneous experiments use this type everywhere; with
+    /// it, communication dominates end-to-end time (paper Fig. 7).
+    pub fn imc_type_a() -> Self {
+        ChipletTypeParams {
+            name: "imc-a(neurram-like)".into(),
+            class: ChipletClass::Imc,
+            mem_bytes: 2 * 1024 * 1024,
+            // 48 cores × 256×256 crossbar, all columns in parallel => tens
+            // of TOPS effective; with this rate compute is a small share
+            // of end-to-end time and the NoI dominates (paper Fig. 7).
+            mac_rate_gops: 49_152.0,
+            e_mac_pj: 0.35,
+            e_adc_pj: 1.8,
+            t_adc_ns_per_elem: 0.002,
+            base_latency_ns: 200.0,
+            leak_mw: 55.0,
+            idle_mw: 4.0,
+            width_mm: 2.0,
+            height_mm: 2.0,
+        }
+    }
+
+    /// Type B: RAELLA-like CIM chiplet [33] — denser (4 MiB) but slower;
+    /// mixing it in makes computation 42–54 % of total time (paper §V-C1).
+    pub fn imc_type_b() -> Self {
+        ChipletTypeParams {
+            name: "imc-b(raella-like)".into(),
+            class: ChipletClass::Imc,
+            mem_bytes: 4 * 1024 * 1024,
+            // ~8× slower than type A: mixing B in pushes computation to
+            // 42–54 % of total execution time (paper §V-C1).
+            mac_rate_gops: 6_000.0,
+            e_mac_pj: 0.12,
+            e_adc_pj: 0.6,
+            t_adc_ns_per_elem: 0.008,
+            base_latency_ns: 400.0,
+            leak_mw: 30.0,
+            idle_mw: 3.0,
+            width_mm: 2.0,
+            height_mm: 2.0,
+        }
+    }
+
+    /// A Zen-4 CCD: 8 cores, used by the hardware-validation study (§V-F).
+    /// MAC rate comes from micro-kernel FLOPs/s profiling of the emulated
+    /// platform (see `hwemu::`).
+    pub fn cpu_ccd() -> Self {
+        ChipletTypeParams {
+            name: "cpu-ccd(zen4)".into(),
+            class: ChipletClass::Cpu,
+            mem_bytes: 512 * 1024 * 1024, // DRAM-backed; effectively large
+            mac_rate_gops: 280.0,         // 8 cores * AVX-512 int8 sustained
+            e_mac_pj: 1.4,
+            e_adc_pj: 0.0,
+            t_adc_ns_per_elem: 0.0,
+            base_latency_ns: 2_000.0,
+            leak_mw: 4_000.0,
+            idle_mw: 900.0,
+            width_mm: 8.0,
+            height_mm: 8.0,
+        }
+    }
+
+    /// I/O die: hosts weights / DDR interface; no compute.
+    pub fn io_die() -> Self {
+        ChipletTypeParams {
+            name: "io-die".into(),
+            class: ChipletClass::Io,
+            mem_bytes: 16 * 1024 * 1024 * 1024,
+            mac_rate_gops: 0.0,
+            e_mac_pj: 0.0,
+            e_adc_pj: 0.0,
+            t_adc_ns_per_elem: 0.0,
+            base_latency_ns: 0.0,
+            leak_mw: 0.0,
+            idle_mw: 1_500.0,
+            width_mm: 12.0,
+            height_mm: 12.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- topology
+
+/// NoI topology selector (paper §V-A/§V-C2: mesh, Floret, CCD-star, custom).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologyKind {
+    /// 2-D mesh with X-Y routing [23, 29].
+    Mesh,
+    /// Floret space-filling-curve topology [18]: petal chains sharing a
+    /// central hub, optimized for feed-forward DNN flows.
+    Floret { petals: usize },
+    /// CCD↔IOD star with asymmetric links (AMD Threadripper, §V-F).
+    CcdStar,
+    /// Arbitrary link list (directed edges are added both ways).
+    Custom { links: Vec<(usize, usize)> },
+}
+
+/// Physical link parameters (heterogeneous widths/clocks are expressed by
+/// per-link overrides inside `noc::topology`).
+#[derive(Debug, Clone)]
+pub struct LinkParams {
+    /// Flit width in bytes (UCIe-style parallel interface).
+    pub width_bytes: u64,
+    /// Link clock in GHz (cycles are `1/clock_ghz` ns).
+    pub clock_ghz: f64,
+    /// Router pipeline + link traversal latency per hop, cycles.
+    pub hop_latency_cycles: u64,
+    /// Dynamic energy per byte moved over a link, pJ.
+    pub e_per_byte_pj: f64,
+    /// Router static power, mW (booked per router into power bins).
+    pub router_static_mw: f64,
+}
+
+impl Default for LinkParams {
+    fn default() -> Self {
+        // 32 B/cycle @ 1 GHz interposer links, 4-cycle hop (paper §V-A and
+        // DESIGN.md §7).
+        LinkParams {
+            width_bytes: 32,
+            clock_ghz: 1.0,
+            hop_latency_cycles: 4,
+            e_per_byte_pj: 1.2,
+            router_static_mw: 2.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- hardware
+
+/// Full hardware configuration: chiplet grid + NoI.
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    pub rows: usize,
+    pub cols: usize,
+    pub chiplet_types: Vec<ChipletTypeParams>,
+    /// Per-chiplet index into `chiplet_types` (len == rows*cols).
+    pub type_of: Vec<usize>,
+    pub topology: TopologyKind,
+    pub link: LinkParams,
+    /// Chiplets designated as I/O (weight hosting); ViT uses the corners.
+    pub io_chiplets: Vec<usize>,
+}
+
+impl HardwareConfig {
+    pub fn num_chiplets(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn chiplet_type(&self, id: usize) -> &ChipletTypeParams {
+        &self.chiplet_types[self.type_of[id]]
+    }
+
+    /// The paper's primary system: homogeneous type-A mesh (10×10 in §V-B).
+    pub fn homogeneous_mesh(rows: usize, cols: usize) -> Self {
+        HardwareConfig {
+            rows,
+            cols,
+            chiplet_types: vec![ChipletTypeParams::imc_type_a()],
+            type_of: vec![0; rows * cols],
+            topology: TopologyKind::Mesh,
+            link: LinkParams::default(),
+            io_chiplets: vec![],
+        }
+    }
+
+    /// §V-C1: 50/50 type-A/type-B in an alternating (checkerboard) pattern
+    /// so each chiplet neighbours the other type.
+    pub fn heterogeneous_mesh(rows: usize, cols: usize) -> Self {
+        let mut hw = Self::homogeneous_mesh(rows, cols);
+        hw.chiplet_types.push(ChipletTypeParams::imc_type_b());
+        for r in 0..rows {
+            for c in 0..cols {
+                hw.type_of[r * cols + c] = (r + c) % 2;
+            }
+        }
+        hw
+    }
+
+    /// §V-C2: same chiplets, Floret NoI.
+    pub fn floret(rows: usize, cols: usize, petals: usize) -> Self {
+        let mut hw = Self::homogeneous_mesh(rows, cols);
+        hw.topology = TopologyKind::Floret { petals };
+        hw
+    }
+
+    /// §V-E: homogeneous mesh with the four corner chiplets as I/O dies
+    /// hosting/distributing ViT weights (weight-stationary IMC).
+    pub fn vit_mesh(rows: usize, cols: usize) -> Self {
+        let mut hw = Self::homogeneous_mesh(rows, cols);
+        hw.chiplet_types.push(ChipletTypeParams::io_die());
+        let corners = [
+            0,
+            cols - 1,
+            (rows - 1) * cols,
+            rows * cols - 1,
+        ];
+        for &c in &corners {
+            hw.type_of[c] = 1;
+        }
+        hw.io_chiplets = corners.to_vec();
+        hw
+    }
+
+    /// §V-F: AMD Threadripper PRO 7985WX-like platform — 8 CCDs + 1 IOD +
+    /// 1 DRAM node in a star.  Node layout: 0..8 = CCDs, 8 = IOD, 9 = DDR.
+    /// Links are heterogeneous: GMI3 32 B/cy read / 16 B/cy write at
+    /// 1.733 GHz (overridden per-direction inside the topology builder).
+    pub fn ccd_star(num_ccds: usize) -> Self {
+        let n = num_ccds + 2;
+        let mut chiplet_types = vec![ChipletTypeParams::cpu_ccd()];
+        chiplet_types.push(ChipletTypeParams::io_die());
+        let mut type_of = vec![0; n];
+        type_of[num_ccds] = 1; // IOD
+        type_of[num_ccds + 1] = 1; // DDR endpoint modeled as an I/O node
+        HardwareConfig {
+            rows: 1,
+            cols: n,
+            chiplet_types,
+            type_of,
+            topology: TopologyKind::CcdStar,
+            link: LinkParams {
+                width_bytes: 32,
+                clock_ghz: 1.733,
+                hop_latency_cycles: 8,
+                e_per_byte_pj: 3.5,
+                router_static_mw: 50.0,
+            },
+            io_chiplets: vec![num_ccds, num_ccds + 1],
+        }
+    }
+
+    // ------------------------------------------------------------- JSON I/O
+
+    pub fn to_json(&self) -> Value {
+        let topo = match &self.topology {
+            TopologyKind::Mesh => Value::obj(vec![("kind", "mesh".into())]),
+            TopologyKind::Floret { petals } => {
+                Value::obj(vec![("kind", "floret".into()), ("petals", (*petals).into())])
+            }
+            TopologyKind::CcdStar => Value::obj(vec![("kind", "ccd_star".into())]),
+            TopologyKind::Custom { links } => Value::obj(vec![
+                ("kind", "custom".into()),
+                (
+                    "links",
+                    Value::Arr(
+                        links
+                            .iter()
+                            .map(|&(a, b)| Value::Arr(vec![a.into(), b.into()]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        Value::obj(vec![
+            ("rows", self.rows.into()),
+            ("cols", self.cols.into()),
+            (
+                "chiplet_types",
+                Value::Arr(self.chiplet_types.iter().map(chiplet_type_to_json).collect()),
+            ),
+            (
+                "type_of",
+                Value::Arr(self.type_of.iter().map(|&t| t.into()).collect()),
+            ),
+            ("topology", topo),
+            ("link", link_to_json(&self.link)),
+            (
+                "io_chiplets",
+                Value::Arr(self.io_chiplets.iter().map(|&c| c.into()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let rows = v.get("rows")?.as_usize()?;
+        let cols = v.get("cols")?.as_usize()?;
+        let chiplet_types = v
+            .get("chiplet_types")?
+            .as_arr()?
+            .iter()
+            .map(chiplet_type_from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let type_of = v
+            .get("type_of")?
+            .as_arr()?
+            .iter()
+            .map(|t| Ok(t.as_usize()?))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        anyhow::ensure!(type_of.len() == rows * cols, "type_of length mismatch");
+        for &t in &type_of {
+            anyhow::ensure!(t < chiplet_types.len(), "type index {t} out of range");
+        }
+        let tv = v.get("topology")?;
+        let topology = match tv.get("kind")?.as_str()? {
+            "mesh" => TopologyKind::Mesh,
+            "floret" => TopologyKind::Floret { petals: tv.get("petals")?.as_usize()? },
+            "ccd_star" => TopologyKind::CcdStar,
+            "custom" => TopologyKind::Custom {
+                links: tv
+                    .get("links")?
+                    .as_arr()?
+                    .iter()
+                    .map(|l| {
+                        let pair = l.as_arr()?;
+                        anyhow::ensure!(pair.len() == 2, "link must be [a, b]");
+                        Ok((pair[0].as_usize()?, pair[1].as_usize()?))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            },
+            other => anyhow::bail!("unknown topology kind '{other}'"),
+        };
+        let link = link_from_json(v.get("link")?)?;
+        let io_chiplets = v
+            .get("io_chiplets")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_usize()?))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(HardwareConfig { rows, cols, chiplet_types, type_of, topology, link, io_chiplets })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        Self::from_json(&json::parse_file(path)?)
+    }
+}
+
+fn chiplet_type_to_json(t: &ChipletTypeParams) -> Value {
+    Value::obj(vec![
+        ("name", t.name.clone().into()),
+        (
+            "class",
+            match t.class {
+                ChipletClass::Imc => "imc",
+                ChipletClass::Cpu => "cpu",
+                ChipletClass::Io => "io",
+            }
+            .into(),
+        ),
+        ("mem_bytes", t.mem_bytes.into()),
+        ("mac_rate_gops", t.mac_rate_gops.into()),
+        ("e_mac_pj", t.e_mac_pj.into()),
+        ("e_adc_pj", t.e_adc_pj.into()),
+        ("t_adc_ns_per_elem", t.t_adc_ns_per_elem.into()),
+        ("base_latency_ns", t.base_latency_ns.into()),
+        ("leak_mw", t.leak_mw.into()),
+        ("idle_mw", t.idle_mw.into()),
+        ("width_mm", t.width_mm.into()),
+        ("height_mm", t.height_mm.into()),
+    ])
+}
+
+fn chiplet_type_from_json(v: &Value) -> anyhow::Result<ChipletTypeParams> {
+    Ok(ChipletTypeParams {
+        name: v.get("name")?.as_str()?.to_string(),
+        class: match v.get("class")?.as_str()? {
+            "imc" => ChipletClass::Imc,
+            "cpu" => ChipletClass::Cpu,
+            "io" => ChipletClass::Io,
+            other => anyhow::bail!("unknown chiplet class '{other}'"),
+        },
+        mem_bytes: v.get("mem_bytes")?.as_u64()?,
+        mac_rate_gops: v.get("mac_rate_gops")?.as_f64()?,
+        e_mac_pj: v.get("e_mac_pj")?.as_f64()?,
+        e_adc_pj: v.get("e_adc_pj")?.as_f64()?,
+        t_adc_ns_per_elem: v.get("t_adc_ns_per_elem")?.as_f64()?,
+        base_latency_ns: v.get("base_latency_ns")?.as_f64()?,
+        leak_mw: v.get("leak_mw")?.as_f64()?,
+        idle_mw: v.get("idle_mw")?.as_f64()?,
+        width_mm: v.get("width_mm")?.as_f64()?,
+        height_mm: v.get("height_mm")?.as_f64()?,
+    })
+}
+
+fn link_to_json(l: &LinkParams) -> Value {
+    Value::obj(vec![
+        ("width_bytes", l.width_bytes.into()),
+        ("clock_ghz", l.clock_ghz.into()),
+        ("hop_latency_cycles", l.hop_latency_cycles.into()),
+        ("e_per_byte_pj", l.e_per_byte_pj.into()),
+        ("router_static_mw", l.router_static_mw.into()),
+    ])
+}
+
+fn link_from_json(v: &Value) -> anyhow::Result<LinkParams> {
+    Ok(LinkParams {
+        width_bytes: v.get("width_bytes")?.as_u64()?,
+        clock_ghz: v.get("clock_ghz")?.as_f64()?,
+        hop_latency_cycles: v.get("hop_latency_cycles")?.as_u64()?,
+        e_per_byte_pj: v.get("e_per_byte_pj")?.as_f64()?,
+        router_static_mw: v.get("router_static_mw")?.as_f64()?,
+    })
+}
+
+// --------------------------------------------------------------- sim params
+
+/// Which network model the co-simulation uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NocFidelity {
+    /// Contention-aware packet/virtual-cut-through model (default; fast).
+    Packet,
+    /// Flit-level wormhole with credit flow control (validation; slower).
+    Flit,
+}
+
+/// Which compute backend evaluates layer segments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeBackendKind {
+    /// In-process analytical models (CiMLoop-analog / CPU).
+    Analytical,
+    /// Batched PJRT artifact (`imc_batch_*` from `make artifacts`).
+    Pjrt,
+}
+
+/// Global simulation parameters (paper §V-A "Simulation Parameters").
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Power profile bin width; the paper uses 1 µs.
+    pub power_bin_ns: TimeNs,
+    /// Statistics warm-up window (not collected), 1 ms in the paper.
+    pub warmup_ns: TimeNs,
+    /// Statistics cool-down window, 1 ms in the paper.
+    pub cooldown_ns: TimeNs,
+    /// Pipeline layers of each model (paper §V-B2) vs layer-at-a-time.
+    pub pipelined: bool,
+    /// Back-to-back inferences per model instance.
+    pub inferences_per_model: u32,
+    /// Age threshold after which a queued model becomes non-skippable.
+    pub age_threshold_ns: TimeNs,
+    /// Workload sampling seed.
+    pub seed: u64,
+    pub noc_fidelity: NocFidelity,
+    pub compute_backend: ComputeBackendKind,
+    /// Safety valve: hard cap on simulated time (0 = unlimited).
+    pub max_sim_time_ns: TimeNs,
+    /// Thermal-aware mapping (THERMOS-style extension): hops of locality
+    /// the mapper trades to avoid the hottest chiplet (0 = disabled).
+    pub thermal_aware_hops: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            power_bin_ns: crate::POWER_BIN_NS,
+            warmup_ns: 1_000_000,
+            cooldown_ns: 1_000_000,
+            pipelined: false,
+            inferences_per_model: 10,
+            age_threshold_ns: 20_000_000,
+            seed: 0xC01D_CAFE,
+            noc_fidelity: NocFidelity::Packet,
+            compute_backend: ComputeBackendKind::Analytical,
+            max_sim_time_ns: 0,
+            thermal_aware_hops: 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------- workload
+
+/// Workload configuration: the model stream fed to the Global Manager.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub kinds: Vec<ModelKind>,
+    /// Interval between request arrivals (injection rate 1 => 1 ns).
+    pub injection_interval_ns: TimeNs,
+}
+
+impl WorkloadConfig {
+    /// Paper §V-A: `n` models uniformly sampled from the 4 CNN types.
+    pub fn cnn_stream(n: usize, _inferences: u32, seed: u64) -> Self {
+        use crate::util::rng::Rng;
+        use crate::workload::ALL_CNNS;
+        let mut rng = Rng::new(seed);
+        WorkloadConfig {
+            kinds: (0..n).map(|_| *rng.choice(&ALL_CNNS)).collect(),
+            injection_interval_ns: 1,
+        }
+    }
+
+    pub fn single(kind: ModelKind) -> Self {
+        WorkloadConfig { kinds: vec![kind], injection_interval_ns: 1 }
+    }
+
+    pub fn from_kinds(kinds: &[ModelKind]) -> Self {
+        WorkloadConfig { kinds: kinds.to_vec(), injection_interval_ns: 1 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardware_json_roundtrip() {
+        for hw in [
+            HardwareConfig::homogeneous_mesh(10, 10),
+            HardwareConfig::heterogeneous_mesh(10, 10),
+            HardwareConfig::floret(10, 10, 10),
+            HardwareConfig::vit_mesh(10, 10),
+            HardwareConfig::ccd_star(8),
+        ] {
+            let j = hw.to_json();
+            let back = HardwareConfig::from_json(&j).unwrap();
+            assert_eq!(back.rows, hw.rows);
+            assert_eq!(back.cols, hw.cols);
+            assert_eq!(back.type_of, hw.type_of);
+            assert_eq!(back.topology, hw.topology);
+            assert_eq!(back.io_chiplets, hw.io_chiplets);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_is_checkerboard() {
+        let hw = HardwareConfig::heterogeneous_mesh(10, 10);
+        let count_b = hw.type_of.iter().filter(|&&t| t == 1).count();
+        assert_eq!(count_b, 50);
+        // Each chiplet's E/W/N/S neighbours are the other type.
+        for r in 0..10 {
+            for c in 0..9 {
+                assert_ne!(hw.type_of[r * 10 + c], hw.type_of[r * 10 + c + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn vit_mesh_corners_are_io() {
+        let hw = HardwareConfig::vit_mesh(10, 10);
+        assert_eq!(hw.io_chiplets, vec![0, 9, 90, 99]);
+        for &c in &hw.io_chiplets {
+            assert_eq!(hw.chiplet_type(c).class, ChipletClass::Io);
+        }
+        assert_eq!(hw.chiplet_type(55).class, ChipletClass::Imc);
+    }
+
+    #[test]
+    fn ccd_star_layout() {
+        let hw = HardwareConfig::ccd_star(8);
+        assert_eq!(hw.num_chiplets(), 10);
+        assert_eq!(hw.chiplet_type(0).class, ChipletClass::Cpu);
+        assert_eq!(hw.chiplet_type(8).class, ChipletClass::Io);
+        assert_eq!(hw.chiplet_type(9).class, ChipletClass::Io);
+    }
+
+    #[test]
+    fn bad_json_is_rejected() {
+        let v = crate::util::json::parse(r#"{"rows": 2}"#).unwrap();
+        assert!(HardwareConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! Hardware-validation substrate (paper §V-F).
+//!
+//! The paper validates CHIPSIM against an AMD Ryzen Threadripper PRO
+//! 7985WX (8 CCDs + IOD, GMI3 links, DDR5).  That silicon is unavailable
+//! here, so per DESIGN.md §3 we build a **golden-model emulator**: a fluid
+//! (fair-share bandwidth) executor of the paper's macro-kernel workload
+//! with the measured saturation behaviour of Fig. 11 baked in:
+//!
+//! * single-CCD read bandwidth saturates at ~49 GB/s (≈90 % of the GMI3
+//!   32 B/cy × 1.733 GHz peak), write at ~27 GB/s (≈98 % of 16 B/cy);
+//! * aggregate read saturates at ~270 GB/s and write at ~115 GB/s as DDR
+//!   congestion kicks in (≈83 % of the 330 GB/s DDR5 peak).
+//!
+//! Table VII then compares this golden model against "CHIPSIM": the same
+//! load→compute→store traces driven through CHIPSIM's own components
+//! (CCD-star topology + packet engine + analytical CPU backend), which is
+//! exactly the modular-backend swap the paper performs.
+
+use crate::config::{ChipletTypeParams, HardwareConfig};
+use crate::noc::engine::PacketEngine;
+use crate::noc::topology::Topology;
+use crate::noc::{FlowSpec, NetworkSim};
+use crate::workload::{ModelKind, NeuralModel};
+use crate::TimeNs;
+
+// Measured bandwidth envelope (GB/s) — Fig. 11 ground truth.
+pub const CCD_READ_PEAK_GBS: f64 = 49.0;
+pub const CCD_WRITE_PEAK_GBS: f64 = 27.0;
+pub const DDR_READ_PEAK_GBS: f64 = 270.0;
+pub const DDR_WRITE_PEAK_GBS: f64 = 115.0;
+/// Per-thread bandwidth before the link saturates (GB/s).
+pub const READ_PER_THREAD_GBS: f64 = 8.5;
+pub const WRITE_PER_THREAD_GBS: f64 = 5.2;
+/// Sustained int8 MAC throughput per CCD (GMAC/s), micro-kernel measured.
+pub const CCD_MAC_RATE_GOPS: f64 = 280.0;
+
+// ------------------------------------------------------- Fig. 11 curves
+
+/// Single-CCD read bandwidth as a function of active threads (Fig. 11a).
+pub fn ccd_read_bw_gbs(threads: usize) -> f64 {
+    (threads as f64 * READ_PER_THREAD_GBS).min(CCD_READ_PEAK_GBS)
+}
+
+/// Single-CCD write bandwidth vs threads (Fig. 11b).
+pub fn ccd_write_bw_gbs(threads: usize) -> f64 {
+    (threads as f64 * WRITE_PER_THREAD_GBS).min(CCD_WRITE_PEAK_GBS)
+}
+
+/// Aggregate read bandwidth vs active CCDs, 8 threads each (Fig. 11c).
+pub fn aggregate_read_bw_gbs(ccds: usize) -> f64 {
+    (ccds as f64 * CCD_READ_PEAK_GBS).min(DDR_READ_PEAK_GBS)
+}
+
+/// Aggregate write bandwidth vs active CCDs (Fig. 11d).
+pub fn aggregate_write_bw_gbs(ccds: usize) -> f64 {
+    (ccds as f64 * CCD_WRITE_PEAK_GBS).min(DDR_WRITE_PEAK_GBS)
+}
+
+// -------------------------------------------------------- macro kernels
+
+/// One phase of the macro-kernel workload (paper §V-F: configurable
+/// load / compute / store loop).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// Read `bytes` from DDR.
+    Load(u64),
+    /// Execute `macs` multiply-accumulates.
+    Compute(u64),
+    /// Write `bytes` to DDR.
+    Store(u64),
+}
+
+/// Convert a DNN model into its layer-wise macro-kernel trace:
+/// per layer, load weights+activations, compute, store activations.
+pub fn model_trace(kind: ModelKind) -> Vec<Phase> {
+    let model = NeuralModel::build(kind);
+    let mut trace = Vec::with_capacity(model.layers.len() * 3);
+    for l in &model.layers {
+        trace.push(Phase::Load(l.weight_bytes + l.in_bytes));
+        trace.push(Phase::Compute(l.macs));
+        trace.push(Phase::Store(l.out_bytes));
+    }
+    trace
+}
+
+// ----------------------------------------------------- golden emulator
+
+/// Fluid-model execution of per-CCD traces with fair-share DDR bandwidth.
+///
+/// At every instant, each CCD in a Load (Store) phase receives
+/// `min(ccd_peak, ddr_peak / n_active_loaders)` GB/s; Compute phases run
+/// at the fixed MAC rate.  The simulation advances from phase-completion
+/// to phase-completion (piecewise-constant rates => exact integration).
+/// Returns the completion time of each CCD's trace, in ns.
+pub fn emulate(traces: &[Vec<Phase>]) -> Vec<f64> {
+    #[derive(Clone)]
+    struct St {
+        idx: usize,
+        /// Remaining work in the current phase (bytes or MACs).
+        rem: f64,
+        done_at: f64,
+    }
+    let mut st: Vec<St> = traces
+        .iter()
+        .map(|t| St {
+            idx: 0,
+            rem: t.first().map(phase_amount).unwrap_or(0.0),
+            done_at: 0.0,
+        })
+        .collect();
+    let mut now = 0.0f64; // ns
+    loop {
+        // Active phase sets.
+        let active = |pred: fn(&Phase) -> bool| -> Vec<usize> {
+            (0..traces.len())
+                .filter(|&i| st[i].idx < traces[i].len() && pred(&traces[i][st[i].idx]))
+                .collect()
+        };
+        let loaders: Vec<usize> = active(|p| matches!(p, Phase::Load(_)));
+        let storers: Vec<usize> = active(|p| matches!(p, Phase::Store(_)));
+        let computers: Vec<usize> = active(|p| matches!(p, Phase::Compute(_)));
+        if loaders.is_empty() && storers.is_empty() && computers.is_empty() {
+            break;
+        }
+        // Rates (per ns): GB/s == bytes/ns; GMAC/s == MACs/ns... careful:
+        // 1 GB/s = 1e9 B / 1e9 ns = 1 B/ns.  1 GMAC/s = 1 MAC/ns? No:
+        // 1 GOPS = 1e9 ops/s = 1 op/ns.  Both are unit/ns at Giga scale.
+        let rd_share = (DDR_READ_PEAK_GBS / loaders.len().max(1) as f64).min(CCD_READ_PEAK_GBS);
+        let wr_share = (DDR_WRITE_PEAK_GBS / storers.len().max(1) as f64).min(CCD_WRITE_PEAK_GBS);
+        let rates: Vec<f64> = (0..traces.len())
+            .map(|i| {
+                if st[i].idx >= traces[i].len() {
+                    return 0.0;
+                }
+                match traces[i][st[i].idx] {
+                    Phase::Load(_) => rd_share,
+                    Phase::Store(_) => wr_share,
+                    Phase::Compute(_) => CCD_MAC_RATE_GOPS,
+                }
+            })
+            .collect();
+        // Time until the earliest phase completion at current rates.
+        let mut dt = f64::INFINITY;
+        for &i in loaders.iter().chain(&storers).chain(&computers) {
+            dt = dt.min(st[i].rem / rates[i]);
+        }
+        now += dt;
+        // Progress everyone; advance finished phases.
+        for &i in loaders.iter().chain(&storers).chain(&computers) {
+            st[i].rem -= dt * rates[i];
+            if st[i].rem <= 1e-9 {
+                st[i].idx += 1;
+                if st[i].idx < traces[i].len() {
+                    st[i].rem = phase_amount(&traces[i][st[i].idx]);
+                } else {
+                    st[i].done_at = now;
+                }
+            }
+        }
+    }
+    st.iter()
+        .map(|s| if s.done_at > 0.0 { s.done_at } else { now })
+        .collect()
+}
+
+fn phase_amount(p: &Phase) -> f64 {
+    match p {
+        Phase::Load(b) | Phase::Store(b) => *b as f64,
+        Phase::Compute(m) => *m as f64,
+    }
+}
+
+// ------------------------------------------------- CHIPSIM-components run
+
+/// The same traces driven through CHIPSIM's own substrate: the CCD-star
+/// topology, the packet-level network engine (bandwidth-calibrated links)
+/// and the analytical CPU compute model.  This is the "simulated" column
+/// of Table VII.
+pub fn chipsim_ccd_run(traces: &[Vec<Phase>]) -> Vec<f64> {
+    let hw = HardwareConfig::ccd_star(8);
+    let topo = Topology::build(&hw);
+    let ddr = 9usize;
+    let mut net = PacketEngine::new(topo);
+    let cpu = ChipletTypeParams::cpu_ccd();
+
+    #[derive(Debug)]
+    struct St {
+        idx: usize,
+        done_at: TimeNs,
+        waiting_flow: Option<crate::noc::FlowId>,
+    }
+    let mut st: Vec<St> = traces
+        .iter()
+        .map(|_| St { idx: 0, done_at: 0, waiting_flow: None })
+        .collect();
+    let mut events: std::collections::BinaryHeap<std::cmp::Reverse<(TimeNs, usize)>> =
+        std::collections::BinaryHeap::new();
+
+    // Kick off phase 0 of every CCD at t=0.
+    let start_phase = |i: usize,
+                           t: TimeNs,
+                           st: &mut Vec<St>,
+                           net: &mut PacketEngine,
+                           events: &mut std::collections::BinaryHeap<
+        std::cmp::Reverse<(TimeNs, usize)>,
+    >| {
+        if st[i].idx >= traces[i].len() {
+            st[i].done_at = t;
+            return;
+        }
+        match traces[i][st[i].idx] {
+            Phase::Load(bytes) => {
+                let id = net.inject(FlowSpec { src: ddr, dst: i, bytes }, t);
+                st[i].waiting_flow = Some(id);
+            }
+            Phase::Store(bytes) => {
+                let id = net.inject(FlowSpec { src: i, dst: ddr, bytes }, t);
+                st[i].waiting_flow = Some(id);
+            }
+            Phase::Compute(macs) => {
+                let lat = (cpu.base_latency_ns + macs as f64 / CCD_MAC_RATE_GOPS).round() as TimeNs;
+                events.push(std::cmp::Reverse((t + lat, i)));
+            }
+        }
+    };
+    for i in 0..traces.len() {
+        start_phase(i, 0, &mut st, &mut net, &mut events);
+    }
+
+    loop {
+        let t_next = events.peek().map(|&std::cmp::Reverse((t, _))| t).unwrap_or(TimeNs::MAX);
+        if net.has_active() {
+            if let Some(c) = net.advance_until(t_next) {
+                // Which CCD was waiting on this flow?
+                if let Some(i) = st.iter().position(|s| s.waiting_flow == Some(c.id)) {
+                    st[i].waiting_flow = None;
+                    st[i].idx += 1;
+                    start_phase(i, c.time, &mut st, &mut net, &mut events);
+                }
+                continue;
+            }
+        }
+        let Some(std::cmp::Reverse((t, i))) = events.pop() else {
+            break;
+        };
+        st[i].idx += 1;
+        start_phase(i, t, &mut st, &mut net, &mut events);
+    }
+    st.iter().map(|s| s.done_at as f64).collect()
+}
+
+/// Percent difference between CHIPSIM-run and golden-emulator times.
+pub fn percent_diff(sim: f64, hw: f64) -> f64 {
+    (sim - hw).abs() / hw * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig11_curves_saturate_at_measured_peaks() {
+        assert!(ccd_read_bw_gbs(1) < ccd_read_bw_gbs(4));
+        assert_eq!(ccd_read_bw_gbs(8), CCD_READ_PEAK_GBS);
+        assert_eq!(ccd_write_bw_gbs(8), CCD_WRITE_PEAK_GBS);
+        assert_eq!(aggregate_read_bw_gbs(8), DDR_READ_PEAK_GBS);
+        assert_eq!(aggregate_write_bw_gbs(8), DDR_WRITE_PEAK_GBS);
+        // Below saturation the aggregate scales linearly.
+        assert_eq!(aggregate_read_bw_gbs(2), 2.0 * CCD_READ_PEAK_GBS);
+    }
+
+    #[test]
+    fn emulator_single_ccd_hand_calc() {
+        // 49 GB load at 49 GB/s = 1 s; 280 GMACs at 280 GMAC/s = 1 s;
+        // 27 GB store at 27 GB/s = 1 s.  Total 3e9 ns.
+        let t = vec![vec![
+            Phase::Load(49_000_000_000),
+            Phase::Compute(280_000_000_000),
+            Phase::Store(27_000_000_000),
+        ]];
+        let done = emulate(&t);
+        assert!((done[0] - 3e9).abs() / 3e9 < 1e-6, "{}", done[0]);
+    }
+
+    #[test]
+    fn emulator_ddr_contention_slows_many_ccds() {
+        let one = vec![vec![Phase::Load(10_000_000_000)]];
+        let solo = emulate(&one)[0];
+        let eight: Vec<Vec<Phase>> = (0..8).map(|_| vec![Phase::Load(10_000_000_000)]).collect();
+        let crowd = emulate(&eight);
+        // 8 loaders share 270 GB/s => 33.75 GB/s each < 49 solo.
+        assert!(crowd[0] > solo * 1.3, "crowd {} solo {solo}", crowd[0]);
+        // All finish simultaneously (symmetric).
+        for d in &crowd {
+            assert!((d - crowd[0]).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn emulator_compute_is_uncontended() {
+        let one = vec![vec![Phase::Compute(1_000_000_000)]];
+        let eight: Vec<Vec<Phase>> = (0..8).map(|_| vec![Phase::Compute(1_000_000_000)]).collect();
+        let solo = emulate(&one)[0];
+        let crowd = emulate(&eight);
+        assert!((crowd[0] - solo).abs() / solo < 1e-9);
+    }
+
+    #[test]
+    fn chipsim_run_close_to_emulator_single_alexnet() {
+        // Table VII row 1: one CCD, AlexNet.  The two models use different
+        // mechanisms (fluid vs packet queues) so we accept < 15% here; the
+        // bench reports the real number.
+        let traces = vec![model_trace(ModelKind::AlexNet)];
+        let hw = emulate(&traces)[0];
+        let sim = chipsim_ccd_run(&traces)[0];
+        let diff = percent_diff(sim, hw);
+        assert!(diff < 15.0, "sim {sim} vs hw {hw}: {diff}%");
+    }
+
+    #[test]
+    fn traces_cover_all_layers() {
+        let t = model_trace(ModelKind::ResNet18);
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        assert_eq!(t.len(), m.layers.len() * 3);
+    }
+}

@@ -1,0 +1,68 @@
+//! # CHIPSIM — co-simulation framework for DNNs on chiplet-based systems
+//!
+//! Reproduction of Pfromm et al., *"CHIPSIM: A Co-Simulation Framework for
+//! Deep Learning on Chiplet-Based Systems"* (IEEE OJSSCS 2025).
+//!
+//! CHIPSIM concurrently models **computation** (per-chiplet, event-based)
+//! and **communication** (cycle-level network-on-interposer) under one
+//! global timeline, capturing network contention and DNN layer pipelining
+//! that decoupled simulators miss.  It profiles per-chiplet power at
+//! microsecond granularity and feeds a multi-fidelity RC thermal model.
+//!
+//! ## Architecture (three layers, AOT via PJRT)
+//!
+//! * **L3 (this crate)** — the Global Manager co-simulation loop, the NoI
+//!   simulator, mapper, compute backends, power tracking, baselines, CLI.
+//! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
+//!   kernels for the thermal solver and the batched IMC estimator, lowered
+//!   once to HLO text under `artifacts/` by `make artifacts`.
+//! * **runtime** — loads those artifacts through the PJRT CPU client
+//!   (`xla` crate) from the Rust hot path.  Python never runs at request
+//!   time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//!
+//! let hw = HardwareConfig::homogeneous_mesh(4, 4);
+//! let wl = WorkloadConfig::cnn_stream(8, 3, 0xC0FFEE);
+//! let params = SimParams { pipelined: true, ..SimParams::default() };
+//! let report = chipsim::sim::GlobalManager::new(hw, params)
+//!     .run(wl)
+//!     .expect("simulation");
+//! println!("{}", report.summary());
+//! ```
+//!
+//! See `examples/` for complete drivers and `rust/benches/` for the
+//! regeneration harness of every table and figure in the paper.
+
+pub mod util;
+pub mod config;
+pub mod workload;
+pub mod mapping;
+pub mod noc;
+pub mod compute;
+pub mod sim;
+pub mod power;
+pub mod thermal;
+pub mod baselines;
+pub mod experiments;
+pub mod hwemu;
+pub mod metrics;
+pub mod runtime;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::config::{
+        ChipletClass, HardwareConfig, LinkParams, SimParams, TopologyKind, WorkloadConfig,
+    };
+    pub use crate::sim::{GlobalManager, SimReport};
+    pub use crate::workload::{ModelKind, NeuralModel};
+}
+
+/// Simulation time in nanoseconds (the coherent global timeline).
+pub type TimeNs = u64;
+
+/// Power-bin width: the paper tracks power at 1 microsecond granularity.
+pub const POWER_BIN_NS: TimeNs = 1_000;

@@ -1,0 +1,226 @@
+//! `chipsim` — launcher for the CHIPSIM co-simulation framework.
+//!
+//! Subcommands:
+//!   run          generic co-simulation run with configurable system/workload
+//!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
+//!   table4..8    regenerate the paper's tables (see DESIGN.md §6)
+//!   fig6..11     regenerate the paper's figures
+//!   all          run every experiment artifact in sequence
+//!   artifacts    list the AOT artifacts the PJRT runtime can load
+//!
+//! Examples:
+//!   chipsim run --rows 10 --cols 10 --models 50 --inferences 10 --pipelined
+//!   chipsim run --topo floret --noc flit --models 8
+//!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
+//!   chipsim table7               # hardware-validation comparison
+
+use chipsim::config::{
+    ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, WorkloadConfig,
+};
+use chipsim::experiments;
+use chipsim::sim::GlobalManager;
+use chipsim::util::cli::{Args, HelpText};
+use chipsim::util::logging;
+
+fn help() -> HelpText {
+    HelpText {
+        name: "chipsim",
+        about: "co-simulation framework for DNNs on chiplet-based systems",
+        usage: "chipsim <run|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        entries: vec![
+            ("--rows N / --cols N", "chiplet grid (default 10x10)"),
+            ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
+            ("--models N", "stream length (default 50)"),
+            ("--inferences N", "back-to-back inferences per model (default 10)"),
+            ("--pipelined", "enable layer pipelining"),
+            ("--noc packet|flit", "network fidelity (default packet)"),
+            ("--compute analytical|pjrt", "compute backend (default analytical)"),
+            ("--seed S", "workload sampling seed"),
+            ("--hw FILE.json", "load hardware config from JSON"),
+            ("--quick", "shrink experiment workloads (CI mode)"),
+            ("--power-csv FILE", "dump per-chiplet power trace"),
+        ],
+    }
+}
+
+fn build_hw(args: &Args) -> anyhow::Result<HardwareConfig> {
+    if let Some(path) = args.get("hw") {
+        return HardwareConfig::load(path);
+    }
+    let rows = args.get_usize("rows", 10)?;
+    let cols = args.get_usize("cols", 10)?;
+    Ok(match args.get_or("topo", "mesh") {
+        "mesh" => HardwareConfig::homogeneous_mesh(rows, cols),
+        "hetero" => HardwareConfig::heterogeneous_mesh(rows, cols),
+        "floret" => HardwareConfig::floret(rows, cols, args.get_usize("petals", 10)?),
+        "vit" => HardwareConfig::vit_mesh(rows, cols),
+        "ccd" => HardwareConfig::ccd_star(args.get_usize("ccds", 8)?),
+        other => anyhow::bail!("unknown --topo '{other}'"),
+    })
+}
+
+fn build_params(args: &Args) -> anyhow::Result<SimParams> {
+    Ok(SimParams {
+        pipelined: args.flag("pipelined"),
+        inferences_per_model: args.get_u64("inferences", 10)? as u32,
+        seed: args.get_u64("seed", 0xC0FFEE)?,
+        warmup_ns: args.get_u64("warmup-ns", 0)?,
+        cooldown_ns: args.get_u64("cooldown-ns", 0)?,
+        noc_fidelity: match args.get_or("noc", "packet") {
+            "packet" => NocFidelity::Packet,
+            "flit" => NocFidelity::Flit,
+            other => anyhow::bail!("unknown --noc '{other}'"),
+        },
+        compute_backend: match args.get_or("compute", "analytical") {
+            "analytical" => ComputeBackendKind::Analytical,
+            "pjrt" => ComputeBackendKind::Pjrt,
+            other => anyhow::bail!("unknown --compute '{other}'"),
+        },
+        ..SimParams::default()
+    })
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let hw = build_hw(args)?;
+    let params = build_params(args)?;
+    let n = args.get_usize("models", 50)?;
+    let seed = params.seed;
+    let inferences = params.inferences_per_model;
+    let wl = match args.get("model") {
+        Some(name) => {
+            let kind = chipsim::workload::ModelKind::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+            WorkloadConfig::single(kind)
+        }
+        None => WorkloadConfig::cnn_stream(n, inferences, seed),
+    };
+    let mut gm = GlobalManager::new(hw, params);
+    let report = gm.run(wl)?;
+    print!("{}", report.summary());
+    if let Some(path) = args.get("power-csv") {
+        let chiplets: Vec<usize> = (0..report.power.num_chiplets()).collect();
+        std::fs::write(path, report.power.to_csv(&chiplets))?;
+        println!("power trace written to {path}");
+    }
+    Ok(())
+}
+
+/// DSE sweep: topology presets x link widths x pipelining, one co-sim per
+/// design point, CSV to the results dir.  The loop an architect runs for
+/// early exploration (paper §I: "fast and accurate simulation is key to
+/// enabling iteration").
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use chipsim::metrics::Csv;
+    let rows = args.get_usize("rows", 8)?;
+    let cols = args.get_usize("cols", 8)?;
+    let n = args.get_usize("models", 12)?;
+    let inferences = args.get_u64("inferences", 5)? as u32;
+    let widths = args.get_u64_list("widths", &[16, 32, 64])?;
+    let seed = args.get_u64("seed", 0xC0FFEE)?;
+    let mut csv = Csv::new(&[
+        "topology", "link_bytes", "pipelined", "models_done", "makespan_ms",
+        "mean_resnet18_lat_us", "energy_mj", "mean_util_pct", "peak_link_util_pct",
+    ]);
+    let presets: Vec<(&str, HardwareConfig)> = vec![
+        ("mesh", HardwareConfig::homogeneous_mesh(rows, cols)),
+        ("hetero", HardwareConfig::heterogeneous_mesh(rows, cols)),
+        ("floret", HardwareConfig::floret(rows, cols, rows)),
+    ];
+    for (name, base_hw) in &presets {
+        for &w in &widths {
+            for pipelined in [false, true] {
+                let mut hw = base_hw.clone();
+                hw.link.width_bytes = w;
+                let params = SimParams {
+                    pipelined,
+                    inferences_per_model: inferences,
+                    warmup_ns: 0,
+                    cooldown_ns: 0,
+                    seed,
+                    ..SimParams::default()
+                };
+                let report = GlobalManager::new(hw, params)
+                    .run(WorkloadConfig::cnn_stream(n, inferences, seed))?;
+                let lat = report
+                    .mean_latency_of(chipsim::workload::ModelKind::ResNet18)
+                    .map(|x| format!("{:.1}", x / 1e3))
+                    .unwrap_or_else(|| "-".into());
+                csv.row(vec![
+                    name.to_string(),
+                    w.to_string(),
+                    pipelined.to_string(),
+                    report.outcomes.len().to_string(),
+                    format!("{:.3}", report.span_ns as f64 / 1e6),
+                    lat,
+                    format!("{:.2}", (report.compute_energy_pj + report.comm_energy_pj) / 1e9),
+                    format!("{:.1}", report.mean_utilization() * 100.0),
+                    format!("{:.1}", report.link_util.peak * 100.0),
+                ]);
+                println!(
+                    "sweep: {name:<7} w={w:<4} pipelined={pipelined:<5} done={}",
+                    report.outcomes.len()
+                );
+            }
+        }
+    }
+    let path = csv.save("sweep.csv")?;
+    println!("sweep results written to {}", path.display());
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let rt = chipsim::runtime::Runtime::open_default()?;
+    println!("artifacts at {}:", chipsim::runtime::Runtime::default_dir().display());
+    for name in rt.artifact_names() {
+        let e = &rt.manifest.entries[name];
+        let shapes: Vec<String> = e.inputs.iter().map(|i| format!("{:?}", i.shape)).collect();
+        println!("  {name:<28} inputs {} -> {} outputs", shapes.join(" "), e.num_outputs);
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    logging::init();
+    let args = Args::from_env(&["pipelined", "quick", "help"]);
+    if args.flag("help") || args.positionals.is_empty() {
+        print!("{}", help().render());
+        return Ok(());
+    }
+    let quick = args.flag("quick");
+    let cmd = args.positionals[0].as_str();
+    match cmd {
+        "run" => cmd_run(&args)?,
+        "sweep" => cmd_sweep(&args)?,
+        "table4" => experiments::table4(quick).print(),
+        "fig6" => experiments::fig6(quick).print(),
+        "fig7" => experiments::fig7(quick).print(),
+        "table5" => experiments::table5(quick).print(),
+        "table6" => experiments::table6(quick).print(),
+        "fig8" => experiments::fig8(quick).print(),
+        "fig9" => experiments::fig9(quick).print(),
+        "fig10" => experiments::fig10(quick).print(),
+        "fig11" => experiments::fig11().print(),
+        "table7" => experiments::table7().print(),
+        "table8" => experiments::table8(quick).print(),
+        "all" => {
+            experiments::table4(quick).print();
+            experiments::fig6(quick).print();
+            experiments::fig7(quick).print();
+            experiments::table5(quick).print();
+            experiments::table6(quick).print();
+            experiments::fig8(quick).print();
+            experiments::fig9(quick).print();
+            experiments::fig10(quick).print();
+            experiments::fig11().print();
+            experiments::table7().print();
+            experiments::table8(quick).print();
+        }
+        "artifacts" => cmd_artifacts()?,
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{}", help().render());
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,373 @@
+//! Workload-to-hardware mapping (paper §III-B, §V-A).
+//!
+//! The Global Manager allocates each layer of a DNN model to chiplets with
+//! a user-supplied mapping function; CHIPSIM ships the Simba-inspired [29]
+//! **nearest-neighbour** mapper: consecutive layers land on spatially
+//! close chiplets to minimize NoI traffic, and a layer too large for any
+//! single chiplet is divided into the fewest segments that fit, placed to
+//! minimize communication cost.
+//!
+//! [`MemoryLedger`] tracks per-chiplet weight-memory occupancy so the
+//! system state stays accurate across model map/unmap events.
+
+use crate::compute::SegmentWork;
+use crate::config::{ChipletClass, HardwareConfig};
+use crate::noc::topology::Topology;
+use crate::workload::NeuralModel;
+
+/// Minimum footprint charged for weight-less layers (pool/attention) so
+/// they occupy a placement slot near their neighbours.
+const MIN_LAYER_BYTES: u64 = 1024;
+
+/// One placed segment of one layer.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub chiplet: usize,
+    /// Fraction of the layer's work assigned to this segment.
+    pub frac: f64,
+    /// Memory bytes charged to the chiplet.
+    pub mem_bytes: u64,
+    pub work: SegmentWork,
+}
+
+/// Full mapping of a model: segments per layer.
+#[derive(Debug, Clone)]
+pub struct ModelMapping {
+    pub layers: Vec<Vec<Segment>>,
+}
+
+impl ModelMapping {
+    pub fn chiplets_of_layer(&self, l: usize) -> Vec<usize> {
+        self.layers[l].iter().map(|s| s.chiplet).collect()
+    }
+
+    pub fn total_segments(&self) -> usize {
+        self.layers.iter().map(|l| l.len()).sum()
+    }
+}
+
+/// Per-chiplet free weight memory.
+#[derive(Debug, Clone)]
+pub struct MemoryLedger {
+    free: Vec<u64>,
+    capacity: Vec<u64>,
+}
+
+impl MemoryLedger {
+    pub fn new(hw: &HardwareConfig) -> MemoryLedger {
+        let capacity: Vec<u64> = (0..hw.num_chiplets())
+            .map(|i| {
+                // I/O dies host weights for distribution, not mapped layers.
+                if hw.chiplet_type(i).class == ChipletClass::Io {
+                    0
+                } else {
+                    hw.chiplet_type(i).mem_bytes
+                }
+            })
+            .collect();
+        MemoryLedger { free: capacity.clone(), capacity }
+    }
+
+    pub fn free_bytes(&self, chiplet: usize) -> u64 {
+        self.free[chiplet]
+    }
+
+    pub fn capacity(&self, chiplet: usize) -> u64 {
+        self.capacity[chiplet]
+    }
+
+    pub fn total_free(&self) -> u64 {
+        self.free.iter().sum()
+    }
+
+    pub fn alloc(&mut self, chiplet: usize, bytes: u64) {
+        assert!(self.free[chiplet] >= bytes, "over-allocation on chiplet {chiplet}");
+        self.free[chiplet] -= bytes;
+    }
+
+    pub fn release(&mut self, chiplet: usize, bytes: u64) {
+        self.free[chiplet] += bytes;
+        assert!(
+            self.free[chiplet] <= self.capacity[chiplet],
+            "double free on chiplet {chiplet}"
+        );
+    }
+
+    /// Release everything a mapping allocated.
+    pub fn release_mapping(&mut self, mapping: &ModelMapping) {
+        for layer in &mapping.layers {
+            for seg in layer {
+                self.release(seg.chiplet, seg.mem_bytes);
+            }
+        }
+    }
+
+    /// Occupancy fraction per chiplet (for utilization stats).
+    pub fn occupancy(&self) -> Vec<f64> {
+        self.free
+            .iter()
+            .zip(&self.capacity)
+            .map(|(&f, &c)| if c == 0 { 0.0 } else { 1.0 - f as f64 / c as f64 })
+            .collect()
+    }
+}
+
+/// The Simba-style nearest-neighbour mapper, with an optional
+/// **thermal-aware** extension (the THERMOS [7] direction the paper
+/// cites): candidate chiplets are ranked by hop distance *plus* a heat
+/// penalty derived from each chiplet's accumulated dissipation, steering
+/// new models away from hotspots at a bounded locality cost.
+pub struct NearestNeighborMapper<'a> {
+    hw: &'a HardwareConfig,
+    topo: &'a Topology,
+    /// Optional per-chiplet heat score (any monotone temperature proxy —
+    /// the Global Manager passes accumulated dynamic energy).
+    heat: Option<Vec<f64>>,
+    /// Hops of locality a mapper will trade to avoid the hottest chiplet.
+    heat_weight_hops: f64,
+}
+
+impl<'a> NearestNeighborMapper<'a> {
+    pub fn new(hw: &'a HardwareConfig, topo: &'a Topology) -> Self {
+        NearestNeighborMapper { hw, topo, heat: None, heat_weight_hops: 0.0 }
+    }
+
+    /// Enable thermal-aware ranking: `heat` is normalized to [0, 1] and
+    /// scaled to `weight_hops` equivalent hops of penalty.
+    pub fn with_heat(mut self, heat: &[f64], weight_hops: f64) -> Self {
+        let max = heat.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+        self.heat = Some(heat.iter().map(|&h| h / max).collect());
+        self.heat_weight_hops = weight_hops;
+        self
+    }
+
+    /// Ranking cost of a candidate: hop distance plus the heat penalty.
+    fn cost(&self, c: usize, prev: &[usize]) -> f64 {
+        let d = self.dist_to(c, prev) as f64;
+        match &self.heat {
+            Some(h) => d + h[c] * self.heat_weight_hops,
+            None => d,
+        }
+    }
+
+    fn mappable(&self, chiplet: usize) -> bool {
+        self.hw.chiplet_type(chiplet).class != ChipletClass::Io
+    }
+
+    /// Hop distance from `c` to the nearest chiplet in `anchors`
+    /// (0 if anchors empty — first layer placement is free).
+    fn dist_to(&self, c: usize, anchors: &[usize]) -> usize {
+        anchors.iter().map(|&a| self.topo.hops(a, c)).min().unwrap_or(0)
+    }
+
+    /// Try to map the whole model; returns `None` (ledger untouched) if it
+    /// does not fit right now.
+    ///
+    /// Layers prefer chiplets not already hosting another layer of the
+    /// same model: weight-stationary IMC dedicates crossbar banks per
+    /// layer, and per-layer chiplets are what makes layer pipelining
+    /// possible (two layers on one chiplet would serialize on its compute
+    /// resource).  Reuse is allowed as a fallback when the system is full.
+    pub fn try_map(&self, model: &NeuralModel, ledger: &mut MemoryLedger) -> Option<ModelMapping> {
+        let mut work = ledger.clone();
+        let mut layers: Vec<Vec<Segment>> = Vec::with_capacity(model.layers.len());
+        let mut prev_chiplets: Vec<usize> = Vec::new();
+        let mut used: std::collections::HashSet<usize> = std::collections::HashSet::new();
+        for layer in &model.layers {
+            let needed = layer.weight_bytes.max(MIN_LAYER_BYTES);
+            let placed = self
+                .place_layer(layer, needed, &prev_chiplets, &used, &mut work)
+                .or_else(|| {
+                    // Fall back to allowing same-model chiplet reuse.
+                    self.place_layer(layer, needed, &prev_chiplets, &Default::default(), &mut work)
+                })?;
+            for s in &placed {
+                used.insert(s.chiplet);
+            }
+            prev_chiplets = placed.iter().map(|s| s.chiplet).collect();
+            layers.push(placed);
+        }
+        *ledger = work;
+        Some(ModelMapping { layers })
+    }
+
+    /// Place one layer: single chiplet if it fits, else the fewest equal
+    /// segments that fit, nearest-first.
+    fn place_layer(
+        &self,
+        layer: &crate::workload::LayerDesc,
+        needed: u64,
+        prev: &[usize],
+        exclude: &std::collections::HashSet<usize>,
+        ledger: &mut MemoryLedger,
+    ) -> Option<Vec<Segment>> {
+        // Candidate chiplets sorted by distance to the previous layer
+        // (ties by id => deterministic).
+        let mut candidates: Vec<usize> = (0..self.hw.num_chiplets())
+            .filter(|&c| self.mappable(c) && ledger.free_bytes(c) > 0 && !exclude.contains(&c))
+            .collect();
+        candidates.sort_by(|&a, &b| {
+            self.cost(a, prev)
+                .partial_cmp(&self.cost(b, prev))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+
+        // 1. Whole layer on the nearest chiplet with room.
+        if let Some(&c) = candidates.iter().find(|&&c| ledger.free_bytes(c) >= needed) {
+            ledger.alloc(c, needed);
+            return Some(vec![Segment {
+                chiplet: c,
+                frac: 1.0,
+                mem_bytes: needed,
+                work: SegmentWork::from_layer(layer, 1.0),
+            }]);
+        }
+
+        // 2. Fewest equal segments: try k = 2.. until k nearest chiplets
+        // each hold needed/k bytes.
+        let max_k = candidates.len().max(1);
+        for k in 2..=max_k {
+            let per = needed.div_ceil(k as u64);
+            let fitting: Vec<usize> = candidates
+                .iter()
+                .copied()
+                .filter(|&c| ledger.free_bytes(c) >= per)
+                .take(k)
+                .collect();
+            if fitting.len() == k {
+                let frac = 1.0 / k as f64;
+                let segs = fitting
+                    .into_iter()
+                    .map(|c| {
+                        ledger.alloc(c, per);
+                        Segment {
+                            chiplet: c,
+                            frac,
+                            mem_bytes: per,
+                            work: SegmentWork::from_layer(layer, frac),
+                        }
+                    })
+                    .collect();
+                return Some(segs);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{ModelKind, NeuralModel};
+
+    fn setup(rows: usize, cols: usize) -> (HardwareConfig, Topology) {
+        let hw = HardwareConfig::homogeneous_mesh(rows, cols);
+        let topo = Topology::build(&hw);
+        (hw, topo)
+    }
+
+    #[test]
+    fn resnet18_maps_on_10x10() {
+        let (hw, topo) = setup(10, 10);
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        let mapping = mapper.try_map(&m, &mut ledger).expect("fits");
+        assert_eq!(mapping.layers.len(), m.layers.len());
+        // Memory accounting: allocated == sum of segment bytes.
+        let total: u64 = mapping.layers.iter().flatten().map(|s| s.mem_bytes).sum();
+        let used = 100 * 2 * 1024 * 1024 - ledger.total_free();
+        assert_eq!(total, used);
+    }
+
+    #[test]
+    fn alexnet_fc_layers_are_split() {
+        let (hw, topo) = setup(10, 10);
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::AlexNet);
+        let mapping = mapper.try_map(&m, &mut ledger).expect("fits");
+        // fc6 is ~37.7 MB > 2 MiB -> must be many segments.
+        let fc6_idx = m.layers.iter().position(|l| l.name == "fc6").unwrap();
+        assert!(mapping.layers[fc6_idx].len() >= 18, "{}", mapping.layers[fc6_idx].len());
+        // Fractions sum to ~1.
+        let fsum: f64 = mapping.layers[fc6_idx].iter().map(|s| s.frac).sum();
+        assert!((fsum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consecutive_layers_are_near() {
+        let (hw, topo) = setup(10, 10);
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        let mapping = mapper.try_map(&m, &mut ledger).unwrap();
+        // Average consecutive-layer hop distance should be small on an
+        // empty 10x10 mesh (nearest-neighbour property).
+        let mut total_hops = 0usize;
+        let mut pairs = 0usize;
+        for w in mapping.layers.windows(2) {
+            for a in &w[0] {
+                for b in &w[1] {
+                    total_hops += topo.hops(a.chiplet, b.chiplet);
+                    pairs += 1;
+                }
+            }
+        }
+        let avg = total_hops as f64 / pairs as f64;
+        assert!(avg < 3.0, "avg consecutive-layer distance {avg}");
+    }
+
+    #[test]
+    fn unmap_restores_ledger() {
+        let (hw, topo) = setup(10, 10);
+        let mut ledger = MemoryLedger::new(&hw);
+        let before = ledger.total_free();
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::ResNet50);
+        let mapping = mapper.try_map(&m, &mut ledger).unwrap();
+        assert!(ledger.total_free() < before);
+        ledger.release_mapping(&mapping);
+        assert_eq!(ledger.total_free(), before);
+    }
+
+    #[test]
+    fn failed_map_leaves_ledger_untouched() {
+        let (hw, topo) = setup(2, 2); // 4 chiplets: 8 MiB total
+        let mut ledger = MemoryLedger::new(&hw);
+        let before = ledger.total_free();
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        // AlexNet (~61 MB) cannot fit.
+        let m = NeuralModel::build(ModelKind::AlexNet);
+        assert!(mapper.try_map(&m, &mut ledger).is_none());
+        assert_eq!(ledger.total_free(), before);
+    }
+
+    #[test]
+    fn io_chiplets_never_host_segments() {
+        let hw = HardwareConfig::vit_mesh(10, 10);
+        let topo = Topology::build(&hw);
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::VitB16);
+        let mapping = mapper.try_map(&m, &mut ledger).expect("vit fits on 96 imc chiplets");
+        for seg in mapping.layers.iter().flatten() {
+            assert!(!hw.io_chiplets.contains(&seg.chiplet));
+        }
+    }
+
+    #[test]
+    fn many_models_fill_and_then_reject() {
+        let (hw, topo) = setup(4, 4); // 32 MiB total
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::ResNet18); // ~11.7 MB
+        let m1 = mapper.try_map(&m, &mut ledger);
+        assert!(m1.is_some());
+        let m2 = mapper.try_map(&m, &mut ledger);
+        assert!(m2.is_some());
+        // Third won't fit (needs ~11.7 of ~8.6 MiB left).
+        assert!(mapper.try_map(&m, &mut ledger).is_none());
+    }
+}

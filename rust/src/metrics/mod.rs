@@ -1,0 +1,133 @@
+//! Result reporting: inaccuracy metrics, CSV/JSON writers, results dir.
+//!
+//! The paper's headline metric is **percent inaccuracy** of a baseline
+//! estimate relative to the co-simulated latency:
+//!
+//!   inaccuracy = (CHIPSIM − baseline) / baseline × 100 %
+//!
+//! (the decoupled baselines systematically *under*estimate, so this grows
+//! past 100 % under heavy pipelining/contention — e.g. the 340 % AlexNet
+//! number in Fig. 6).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Value;
+
+/// Percent inaccuracy of `baseline` vs the co-simulated `chipsim` value.
+pub fn inaccuracy_pct(chipsim: f64, baseline: f64) -> f64 {
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    (chipsim - baseline) / baseline * 100.0
+}
+
+/// Relative percent difference |a-b|/b.
+pub fn rel_diff_pct(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        return 0.0;
+    }
+    (a - b).abs() / b * 100.0
+}
+
+/// Resolve (and create) the results output directory:
+/// `CHIPSIM_RESULTS` env var or `./results`.
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("CHIPSIM_RESULTS").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from("results")
+    });
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a string artifact into the results dir; returns the path.
+pub fn write_result(name: &str, contents: &str) -> anyhow::Result<PathBuf> {
+    let path = results_dir().join(name);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+/// Write a JSON artifact into the results dir.
+pub fn write_json(name: &str, v: &Value) -> anyhow::Result<PathBuf> {
+    write_result(name, &crate::util::json::to_string_pretty(v))
+}
+
+/// Simple CSV builder.
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, name: &str) -> anyhow::Result<PathBuf> {
+        write_result(name, &self.render())
+    }
+}
+
+/// Format helper: `123456.7` ns -> `"123.5 µs"` style cells come from
+/// benchkit; this one renders a percent cell like the paper's tables.
+pub fn pct_cell(x: f64) -> String {
+    format!("{x:.0}%")
+}
+
+/// True if `path` exists inside the results dir (idempotence checks).
+pub fn result_exists(name: &str) -> bool {
+    Path::new(&results_dir()).join(name).exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inaccuracy_definition() {
+        // Baseline underestimates 4.4x co-sim => 340%.
+        assert!((inaccuracy_pct(4.4, 1.0) - 340.0).abs() < 1e-9);
+        assert_eq!(inaccuracy_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(vec!["x,y".into(), "plain".into()]);
+        let s = c.render();
+        assert!(s.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn write_and_check_result() {
+        std::env::set_var("CHIPSIM_RESULTS", "/tmp/chipsim-test-results");
+        let p = write_result("unit/test.txt", "hello").unwrap();
+        assert!(p.exists());
+        assert!(result_exists("unit/test.txt"));
+        std::env::remove_var("CHIPSIM_RESULTS");
+    }
+}

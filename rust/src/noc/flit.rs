@@ -1,0 +1,455 @@
+//! Cycle-driven flit-level wormhole engine (validation fidelity).
+//!
+//! This is the closest analog to HeteroGarnet's router model that is
+//! practical from scratch: per-input-port FIFO buffers, wormhole switching
+//! (an output port stays bound to a packet from head to tail), credit-based
+//! flow control (a flit only moves if the downstream buffer has a free
+//! slot reserved at send time), and round-robin switch allocation.
+//!
+//! It shares `Topology` and packet segmentation with the default
+//! [`super::engine::PacketEngine`]; integration tests assert the two agree
+//! on uncontended latency to within the router-pipeline approximation and
+//! rank contended flows identically.  Use `--noc flit` to select it; it is
+//! O(cycles × links) and therefore reserved for small/validation runs.
+
+use std::collections::{HashMap, VecDeque};
+
+use super::topology::Topology;
+use super::{FlowCompletion, FlowId, FlowSpec, FlowStats, NetworkSim};
+use crate::TimeNs;
+
+/// Input buffer depth in flits (per router input port).
+const BUF_FLITS: usize = 8;
+/// Flits per packet — must match the packet engine's segmentation.
+const PACKET_FLITS: u64 = super::engine::PACKET_FLITS;
+
+#[derive(Debug, Clone, Copy)]
+struct Flit {
+    flow: FlowId,
+    /// Unique packet id (flow-local).
+    pkt: u64,
+    is_head: bool,
+    is_tail: bool,
+    dst: usize,
+}
+
+#[derive(Debug)]
+struct InPort {
+    buf: VecDeque<Flit>,
+    /// Free slots not yet promised to an upstream sender.
+    credits: usize,
+}
+
+impl InPort {
+    fn new() -> Self {
+        InPort { buf: VecDeque::with_capacity(BUF_FLITS), credits: BUF_FLITS }
+    }
+}
+
+#[derive(Debug)]
+struct FlowProgress {
+    spec: FlowSpec,
+    injected_ns: TimeNs,
+    hops: u32,
+    tails_left: u64,
+}
+
+/// The wormhole flit engine.
+pub struct FlitEngine {
+    topo: Topology,
+    /// Per-link input port at the *destination* router of the link.
+    ports: Vec<InPort>,
+    /// Per-node local injection queue (treated as an extra input).
+    inject_q: Vec<VecDeque<Flit>>,
+    /// Output binding: link -> Some((source kind, packet uid)).
+    /// source kind: usize::MAX..=usize::MAX-? we encode input as
+    /// `InputRef::Link(l)` or `InputRef::Local(node)`.
+    bound: Vec<Option<(InputRef, FlowId, u64)>>,
+    /// Round-robin pointers per link (over candidate inputs).
+    rr: Vec<usize>,
+    /// Flits in flight over a link: (arrival_cycle, link, flit).
+    in_flight: VecDeque<(u64, usize, Flit)>,
+    flows: HashMap<FlowId, FlowProgress>,
+    finished: HashMap<FlowId, FlowStats>,
+    completions: VecDeque<(TimeNs, FlowId)>,
+    next_flow_id: FlowId,
+    cycle: u64,
+    energy_events: Vec<(usize, TimeNs, f64)>,
+    total_energy_pj: f64,
+    work: u64,
+    /// Cycles each link transferred a flit (busy accounting).
+    link_busy_cycles: Vec<u64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InputRef {
+    /// Input buffer fed by a link (index).
+    Link(usize),
+    /// The node-local injection queue.
+    Local(usize),
+}
+
+impl FlitEngine {
+    pub fn new(topo: Topology) -> Self {
+        for l in &topo.links {
+            assert_eq!(l.clock_div, 1, "flit engine requires homogeneous clocks");
+        }
+        let nlinks = topo.links.len();
+        let nnodes = topo.num_nodes;
+        FlitEngine {
+            ports: (0..nlinks).map(|_| InPort::new()).collect(),
+            inject_q: vec![VecDeque::new(); nnodes],
+            bound: vec![None; nlinks],
+            rr: vec![0; nlinks],
+            in_flight: VecDeque::new(),
+            topo,
+            flows: HashMap::new(),
+            finished: HashMap::new(),
+            completions: VecDeque::new(),
+            next_flow_id: 0,
+            cycle: 0,
+            energy_events: Vec::new(),
+            total_energy_pj: 0.0,
+            work: 0,
+            link_busy_cycles: vec![0; nlinks],
+        }
+    }
+
+    fn ns(&self, cycle: u64) -> TimeNs {
+        (cycle as f64 * self.topo.cycle_ns).round() as TimeNs
+    }
+
+    fn cycle_of(&self, t: TimeNs) -> u64 {
+        (t as f64 / self.topo.cycle_ns).ceil() as u64
+    }
+
+    /// The output link a flit wants at router `node`.
+    fn route_out(&self, node: usize, dst: usize) -> Option<usize> {
+        if node == dst {
+            None
+        } else {
+            Some(self.topo.route[node][dst])
+        }
+    }
+
+    /// Candidate inputs of router `node`: all in-links plus local queue.
+    fn inputs_of(&self, node: usize) -> Vec<InputRef> {
+        let mut v: Vec<InputRef> = self
+            .topo
+            .links
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.dst == node)
+            .map(|(i, _)| InputRef::Link(i))
+            .collect();
+        v.push(InputRef::Local(node));
+        v
+    }
+
+    fn front(&self, input: InputRef) -> Option<&Flit> {
+        match input {
+            InputRef::Link(l) => self.ports[l].buf.front(),
+            InputRef::Local(n) => self.inject_q[n].front(),
+        }
+    }
+
+    fn pop(&mut self, input: InputRef) -> Flit {
+        match input {
+            InputRef::Link(l) => {
+                let f = self.ports[l].buf.pop_front().unwrap();
+                self.ports[l].credits += 1;
+                f
+            }
+            InputRef::Local(n) => self.inject_q[n].pop_front().unwrap(),
+        }
+    }
+
+    /// One router+link cycle.  Returns true if anything moved.
+    fn step_cycle(&mut self) -> bool {
+        let mut moved = false;
+        self.cycle += 1;
+        let now_ns = self.ns(self.cycle);
+
+        // 1. Deliver flits whose link traversal finishes this cycle.
+        while let Some(&(arr, link, flit)) = self.in_flight.front() {
+            if arr > self.cycle {
+                break;
+            }
+            self.in_flight.pop_front();
+            let node = self.topo.links[link].dst;
+            if flit.dst == node {
+                // Ejection: leaves the network immediately; return credit.
+                self.ports[link].credits += 1;
+                if flit.is_tail {
+                    self.finish_packet(flit, now_ns);
+                }
+            } else {
+                self.ports[link].buf.push_back(flit);
+            }
+            moved = true;
+        }
+
+        // 2. Switch allocation + traversal per output link.
+        for link in 0..self.topo.links.len() {
+            // Allocate if free.
+            if self.bound[link].is_none() {
+                let node = self.topo.links[link].src;
+                let inputs = self.inputs_of(node);
+                let start = self.rr[link] % inputs.len();
+                for k in 0..inputs.len() {
+                    let input = inputs[(start + k) % inputs.len()];
+                    if let Some(f) = self.front(input) {
+                        if f.is_head && self.route_out(node, f.dst) == Some(link) {
+                            self.bound[link] = Some((input, f.flow, f.pkt));
+                            self.rr[link] = (start + k + 1) % inputs.len();
+                            break;
+                        }
+                    }
+                }
+            }
+            // Traverse one flit of the bound packet if credits allow.
+            if let Some((input, flow, pkt)) = self.bound[link] {
+                let ready = matches!(self.front(input), Some(f) if f.flow == flow && f.pkt == pkt);
+                if ready {
+                    // Need a downstream slot unless the flit will eject.
+                    let downstream_dst = self.topo.links[link].dst;
+                    let f = *self.front(input).unwrap();
+                    let will_eject = f.dst == downstream_dst;
+                    if will_eject || self.ports[link].credits > 0 {
+                        let f = self.pop(input);
+                        if !will_eject {
+                            self.ports[link].credits -= 1;
+                        }
+                        let arrival = self.cycle + self.topo.hop_latency_cycles.max(1);
+                        self.in_flight.push_back((arrival, link, f));
+                        // Keep in_flight sorted by arrival (hop latency is
+                        // constant, so push_back order is already sorted).
+                        let l = &self.topo.links[link];
+                        let pj = l.width_bytes as f64 * l.e_per_byte_pj;
+                        self.energy_events.push((l.src, now_ns, pj));
+                        self.total_energy_pj += pj;
+                        self.work += l.width_bytes;
+                        self.link_busy_cycles[link] += 1;
+                        if f.is_tail {
+                            self.bound[link] = None;
+                        }
+                        moved = true;
+                    }
+                }
+            }
+        }
+        moved
+    }
+
+    fn finish_packet(&mut self, tail: Flit, now_ns: TimeNs) {
+        let done = {
+            let fp = self.flows.get_mut(&tail.flow).expect("tail for unknown flow");
+            fp.tails_left -= 1;
+            fp.tails_left == 0
+        };
+        if done {
+            let fp = self.flows.remove(&tail.flow).unwrap();
+            let stats = FlowStats {
+                spec: fp.spec,
+                injected_ns: fp.injected_ns,
+                completed_ns: now_ns,
+                hops: fp.hops,
+            };
+            self.finished.insert(tail.flow, stats);
+            self.completions.push_back((now_ns, tail.flow));
+        }
+    }
+
+    /// True if any flit anywhere is still queued/in flight.
+    fn network_busy(&self) -> bool {
+        !self.in_flight.is_empty()
+            || self.ports.iter().any(|p| !p.buf.is_empty())
+            || self.inject_q.iter().any(|q| !q.is_empty())
+    }
+}
+
+impl NetworkSim for FlitEngine {
+    fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId {
+        let id = self.next_flow_id;
+        self.next_flow_id += 1;
+        // Catch the engine's clock up to the injection time without
+        // simulating idle cycles one by one.
+        let inj_cycle = self.cycle_of(now);
+        if !self.network_busy() && inj_cycle > self.cycle {
+            self.cycle = inj_cycle;
+        }
+        let path = self.topo.path(spec.src, spec.dst);
+        if path.is_empty() {
+            let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
+            self.finished.insert(id, stats);
+            self.completions.push_back((now, id));
+            return id;
+        }
+        let width = self.topo.links[path[0]].width_bytes;
+        let payload_flits = spec.bytes.max(1).div_ceil(width);
+        let npackets = payload_flits.div_ceil(PACKET_FLITS);
+        self.flows.insert(
+            id,
+            FlowProgress { spec, injected_ns: now, hops: path.len() as u32, tails_left: npackets },
+        );
+        let mut remaining = payload_flits;
+        for pkt in 0..npackets {
+            let in_this = remaining.min(PACKET_FLITS);
+            remaining -= in_this;
+            for k in 0..in_this {
+                self.inject_q[spec.src].push_back(Flit {
+                    flow: id,
+                    pkt,
+                    is_head: k == 0,
+                    is_tail: k == in_this - 1,
+                    dst: spec.dst,
+                });
+            }
+        }
+        id
+    }
+
+    fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion> {
+        loop {
+            if let Some(&(ct, _)) = self.completions.front() {
+                if ct <= t {
+                    let (time, id) = self.completions.pop_front().unwrap();
+                    return Some(FlowCompletion { id, time });
+                }
+                return None;
+            }
+            if !self.network_busy() || self.ns(self.cycle) >= t {
+                return None;
+            }
+            self.step_cycle();
+        }
+    }
+
+    fn has_active(&self) -> bool {
+        !self.flows.is_empty() || !self.completions.is_empty()
+    }
+
+    fn stats(&self, id: FlowId) -> Option<FlowStats> {
+        self.finished.get(&id).copied()
+    }
+
+    fn comm_energy_pj(&self) -> f64 {
+        self.total_energy_pj
+    }
+
+    fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)> {
+        std::mem::take(&mut self.energy_events)
+    }
+
+    fn work_done(&self) -> u64 {
+        self.work
+    }
+
+    fn link_busy_ns(&self) -> Vec<TimeNs> {
+        self.link_busy_cycles
+            .iter()
+            .map(|&c| (c as f64 * self.topo.cycle_ns).round() as TimeNs)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LinkParams;
+    use crate::noc::engine::PacketEngine;
+    use crate::noc::topology::mesh;
+
+    fn flit_engine(rows: usize, cols: usize) -> FlitEngine {
+        FlitEngine::new(mesh(rows, cols, &LinkParams::default()))
+    }
+
+    fn complete_all(e: &mut dyn NetworkSim) -> Vec<FlowCompletion> {
+        let mut v = Vec::new();
+        while let Some(c) = e.advance_until(TimeNs::MAX) {
+            v.push(c);
+        }
+        v
+    }
+
+    #[test]
+    fn single_packet_single_hop() {
+        let mut e = flit_engine(1, 2);
+        let id = e.inject(FlowSpec { src: 0, dst: 1, bytes: 512 }, 0);
+        let done = complete_all(&mut e);
+        assert_eq!(done.len(), 1);
+        let s = e.stats(id).unwrap();
+        // 16 flits, 1 flit/cycle, 4-cycle hop latency: tail ejects around
+        // cycle 16+4+O(1) — must be within a couple of cycles of the
+        // packet engine's 20 ns.
+        assert!((18..=24).contains(&s.latency_ns()), "{}", s.latency_ns());
+    }
+
+    #[test]
+    fn wormhole_does_not_interleave_packets_on_a_link() {
+        // Two flows share link 1->2 in a 1x3 line; with wormhole binding,
+        // each packet transfers contiguously.  We just assert both finish
+        // and the shared-link flow pair is slower than solo.
+        let mut e = flit_engine(1, 3);
+        e.inject(FlowSpec { src: 0, dst: 2, bytes: 2048 }, 0);
+        e.inject(FlowSpec { src: 1, dst: 2, bytes: 2048 }, 0);
+        let done = complete_all(&mut e);
+        assert_eq!(done.len(), 2);
+
+        let mut solo = flit_engine(1, 3);
+        let sid = solo.inject(FlowSpec { src: 1, dst: 2, bytes: 2048 }, 0);
+        complete_all(&mut solo);
+        let solo_lat = solo.stats(sid).unwrap().latency_ns();
+        assert!(done.iter().any(|c| {
+            e.stats(c.id).unwrap().latency_ns() > solo_lat
+        }));
+    }
+
+    #[test]
+    fn agrees_with_packet_engine_on_uncontended_latency() {
+        // Across several sizes/hop counts the two engines should agree to
+        // within ~30% + a few cycles (router pipeline approximations).
+        for (cols, bytes) in [(2usize, 512u64), (4, 2048), (6, 16384)] {
+            let mut fe = flit_engine(1, cols);
+            let fid = fe.inject(FlowSpec { src: 0, dst: cols - 1, bytes }, 0);
+            complete_all(&mut fe);
+            let fl = fe.stats(fid).unwrap().latency_ns() as f64;
+
+            let mut pe = PacketEngine::new(mesh(1, cols, &LinkParams::default()));
+            let pid = pe.inject(FlowSpec { src: 0, dst: cols - 1, bytes }, 0);
+            while pe.advance_until(TimeNs::MAX).is_some() {}
+            let pl = pe.stats(pid).unwrap().latency_ns() as f64;
+
+            let ratio = fl / pl;
+            assert!(
+                (0.5..=1.6).contains(&ratio),
+                "cols={cols} bytes={bytes}: flit={fl} packet={pl} ratio={ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn injection_after_idle_fast_forwards() {
+        let mut e = flit_engine(1, 2);
+        let id = e.inject(FlowSpec { src: 0, dst: 1, bytes: 512 }, 1_000_000);
+        let c = e.advance_until(TimeNs::MAX).unwrap();
+        assert_eq!(c.id, id);
+        assert!(c.time >= 1_000_000);
+        let s = e.stats(id).unwrap();
+        assert!(s.latency_ns() < 100);
+    }
+
+    #[test]
+    fn credits_bound_buffer_occupancy() {
+        // Saturating many flows through one column must not panic or leak:
+        // buffer occupancy is bounded by construction; we just check
+        // everything drains.
+        let mut e = flit_engine(4, 4);
+        for i in 0..12 {
+            e.inject(FlowSpec { src: i % 4, dst: 12 + (i % 4), bytes: 4096 }, 0);
+        }
+        let done = complete_all(&mut e);
+        assert_eq!(done.len(), 12);
+        assert!(!e.has_active());
+    }
+}

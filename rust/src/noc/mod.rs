@@ -1,0 +1,117 @@
+//! Network-on-interposer simulator (our from-scratch HeteroGarnet analog).
+//!
+//! The inter-chiplet network is the *shared* resource of the co-simulation:
+//! a single network simulation accounts for all active chiplet-to-chiplet
+//! flows of all DNN models simultaneously, so contention between layer
+//! traffic emerges from link arbitration rather than being post-hoc
+//! estimated (paper §III-D/E).
+//!
+//! Two fidelity levels share the same [`topology::Topology`]:
+//!
+//! * [`engine::PacketEngine`] — event-driven virtual-cut-through model at
+//!   packet (16-flit) granularity: per-link FIFO serialization, cut-through
+//!   pipelining across hops, heterogeneous link widths/clocks.  Default —
+//!   fast enough for the full 50-model experiments.
+//! * [`flit::FlitEngine`] — cycle-driven wormhole model with per-port
+//!   input buffers, credit flow control and round-robin switch allocation.
+//!   Used for validation and small runs (`--noc flit`).
+//!
+//! Both implement [`NetworkSim`], the interface the Global Manager drives
+//! in lockstep with the global event queue.
+
+pub mod engine;
+pub mod flit;
+pub mod topology;
+
+use crate::TimeNs;
+
+/// Identifier of an injected flow (message).
+pub type FlowId = u64;
+
+/// A chiplet-to-chiplet activation transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowSpec {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+}
+
+/// A completed flow notification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlowCompletion {
+    pub id: FlowId,
+    pub time: TimeNs,
+}
+
+/// Per-flow statistics retained after completion.
+#[derive(Debug, Clone, Copy)]
+pub struct FlowStats {
+    pub spec: FlowSpec,
+    pub injected_ns: TimeNs,
+    pub completed_ns: TimeNs,
+    pub hops: u32,
+}
+
+impl FlowStats {
+    pub fn latency_ns(&self) -> TimeNs {
+        self.completed_ns - self.injected_ns
+    }
+}
+
+/// Interface between the Global Manager and a network engine.
+///
+/// Contract: `advance_until(t)` simulates network activity up to *and
+/// including* time `t` and returns the **earliest** not-yet-reported flow
+/// completion with `time <= t`, or `None` once none remain.  The manager
+/// calls it repeatedly before processing any global event at `t`, so flow
+/// completions interleave correctly with compute events on the coherent
+/// global timeline.
+pub trait NetworkSim {
+    /// Inject a flow at time `now` (must be >= all previously passed times).
+    fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId;
+    /// Advance to `t`; return the earliest unreported completion <= t.
+    fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion>;
+    /// True while any injected flow is still in flight.
+    fn has_active(&self) -> bool;
+    /// Stats for a completed flow.
+    fn stats(&self, id: FlowId) -> Option<FlowStats>;
+    /// Total dynamic NoI energy so far, pJ, and per-node attribution.
+    fn comm_energy_pj(&self) -> f64;
+    /// Drain (node, time, energy_pj) events accumulated since last call —
+    /// consumed by the power tracker at 1 µs bins.
+    fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)>;
+    /// Sum of flit-hops (or byte-hops) simulated — throughput metric.
+    fn work_done(&self) -> u64;
+    /// Cumulative busy time per link, ns (utilization = busy / span).
+    /// Feeds the link-utilization statistics used for NoI bottleneck
+    /// analysis (Fig. 7 root-causing) and DSE reports.
+    fn link_busy_ns(&self) -> Vec<TimeNs> {
+        Vec::new()
+    }
+}
+
+/// Per-link utilization summary over a simulated span.
+#[derive(Debug, Clone)]
+pub struct LinkUtilization {
+    /// Utilization fraction per link index.
+    pub per_link: Vec<f64>,
+    pub mean: f64,
+    pub peak: f64,
+    /// Index of the most-utilized link.
+    pub hottest: usize,
+}
+
+impl LinkUtilization {
+    pub fn from_busy(busy: &[TimeNs], span: TimeNs) -> LinkUtilization {
+        let span = span.max(1) as f64;
+        let per_link: Vec<f64> = busy.iter().map(|&b| b as f64 / span).collect();
+        let mean = per_link.iter().sum::<f64>() / per_link.len().max(1) as f64;
+        let (hottest, peak) = per_link
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &v)| (i, v))
+            .unwrap_or((0, 0.0));
+        LinkUtilization { per_link, mean, peak, hottest }
+    }
+}

@@ -1,0 +1,438 @@
+//! NoI topologies and routing tables.
+//!
+//! Supports the paper's configurations: 2-D mesh with X-Y routing
+//! [23, 29], the Floret space-filling-curve topology [18], the AMD
+//! CCD↔IOD star used for hardware validation (§V-F, with asymmetric
+//! per-direction GMI3 link widths), and arbitrary custom link lists.
+//!
+//! Heterogeneous links are first-class: every directed link carries its
+//! own width and clock divider, as HeteroGarnet does for mixed 2.5D/3D
+//! interposers.
+
+use crate::config::{HardwareConfig, LinkParams, TopologyKind};
+
+/// One directed physical link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub src: usize,
+    pub dst: usize,
+    /// Bytes transferred per link cycle.
+    pub width_bytes: u64,
+    /// Clock divider relative to the base NoI clock (2 = half rate).
+    pub clock_div: u64,
+    /// Dynamic energy per byte, pJ.
+    pub e_per_byte_pj: f64,
+}
+
+/// A routed topology: nodes, directed links, and next-hop tables.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub num_nodes: usize,
+    pub links: Vec<Link>,
+    /// Outgoing link indices per node.
+    pub out_links: Vec<Vec<usize>>,
+    /// `route[src][dst]` = link index of the next hop (usize::MAX on diag).
+    pub route: Vec<Vec<usize>>,
+    /// `hop_table[src][dst]` = hop count of the routed path (0 on diag).
+    /// Precomputed so the mapper's distance queries are O(1) — `hops()`
+    /// on the hot mapping path used to walk (and allocate) the full path.
+    pub hop_table: Vec<Vec<u16>>,
+    /// Base cycle time, ns.
+    pub cycle_ns: f64,
+    /// Router pipeline latency per hop, cycles.
+    pub hop_latency_cycles: u64,
+}
+
+impl Topology {
+    /// Build the topology + routing for a hardware configuration.
+    pub fn build(hw: &HardwareConfig) -> Topology {
+        match &hw.topology {
+            TopologyKind::Mesh => mesh(hw.rows, hw.cols, &hw.link),
+            TopologyKind::Floret { petals } => floret(hw.rows, hw.cols, *petals, &hw.link),
+            TopologyKind::CcdStar => ccd_star(hw.num_chiplets() - 2, &hw.link),
+            TopologyKind::Custom { links } => custom(hw.num_chiplets(), links, &hw.link),
+        }
+    }
+
+    /// Path (sequence of link indices) from src to dst.
+    pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
+        let mut path = Vec::new();
+        let mut cur = src;
+        while cur != dst {
+            let l = self.route[cur][dst];
+            assert!(l != usize::MAX, "no route {src}->{dst} (stuck at {cur})");
+            path.push(l);
+            cur = self.links[l].dst;
+            assert!(path.len() <= self.num_nodes, "routing loop {src}->{dst}");
+        }
+        path
+    }
+
+    /// Hop count between two nodes (O(1) table lookup).
+    pub fn hops(&self, src: usize, dst: usize) -> usize {
+        self.hop_table[src][dst] as usize
+    }
+
+    /// Recompute the hop table from the current routing tables (must be
+    /// called after any manual `route` override, e.g. mesh X-Y).
+    fn rebuild_hop_table(&mut self) {
+        let n = self.num_nodes;
+        let mut table = vec![vec![0u16; n]; n];
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                let mut cur = s;
+                let mut h = 0u16;
+                while cur != d {
+                    let l = self.route[cur][d];
+                    assert!(l != usize::MAX, "no route {s}->{d}");
+                    cur = self.links[l].dst;
+                    h += 1;
+                    assert!((h as usize) <= n, "routing loop {s}->{d}");
+                }
+                table[s][d] = h;
+            }
+        }
+        self.hop_table = table;
+    }
+
+    /// Serialization time of `bytes` over link `l`, in ns.
+    pub fn ser_ns(&self, l: usize, bytes: u64) -> f64 {
+        let link = &self.links[l];
+        let cycles = bytes.div_ceil(link.width_bytes) * link.clock_div;
+        cycles as f64 * self.cycle_ns
+    }
+
+    /// Per-hop router latency in ns.
+    pub fn hop_ns(&self) -> f64 {
+        self.hop_latency_cycles as f64 * self.cycle_ns
+    }
+
+    fn with_links(num_nodes: usize, links: Vec<Link>, p: &LinkParams) -> Topology {
+        let mut out_links = vec![Vec::new(); num_nodes];
+        for (i, l) in links.iter().enumerate() {
+            out_links[l.src].push(i);
+        }
+        let mut t = Topology {
+            num_nodes,
+            links,
+            out_links,
+            route: Vec::new(),
+            hop_table: Vec::new(),
+            cycle_ns: 1.0 / p.clock_ghz,
+            hop_latency_cycles: p.hop_latency_cycles,
+        };
+        t.route = bfs_routes(&t);
+        t.rebuild_hop_table();
+        t
+    }
+}
+
+/// All-pairs next-hop via per-destination BFS (deterministic tie-break by
+/// link index order => stable, minimal routes).
+fn bfs_routes(t: &Topology) -> Vec<Vec<usize>> {
+    let n = t.num_nodes;
+    let mut route = vec![vec![usize::MAX; n]; n];
+    // Reverse adjacency: for BFS from destination over reversed edges.
+    let mut in_links = vec![Vec::new(); n];
+    for (i, l) in t.links.iter().enumerate() {
+        in_links[l.dst].push(i);
+    }
+    for dst in 0..n {
+        let mut dist = vec![usize::MAX; n];
+        dist[dst] = 0;
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(dst);
+        while let Some(v) = queue.pop_front() {
+            for &li in &in_links[v] {
+                let u = t.links[li].src;
+                if dist[u] == usize::MAX {
+                    dist[u] = dist[v] + 1;
+                    route[u][dst] = li;
+                    queue.push_back(u);
+                }
+            }
+        }
+    }
+    route
+}
+
+// -------------------------------------------------------------------- mesh
+
+fn mesh_links(rows: usize, cols: usize, p: &LinkParams) -> Vec<Link> {
+    let mut links = Vec::new();
+    let id = |r: usize, c: usize| r * cols + c;
+    let mut push = |a: usize, b: usize| {
+        links.push(Link {
+            src: a,
+            dst: b,
+            width_bytes: p.width_bytes,
+            clock_div: 1,
+            e_per_byte_pj: p.e_per_byte_pj,
+        });
+    };
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                push(id(r, c), id(r, c + 1));
+                push(id(r, c + 1), id(r, c));
+            }
+            if r + 1 < rows {
+                push(id(r, c), id(r + 1, c));
+                push(id(r + 1, c), id(r, c));
+            }
+        }
+    }
+    links
+}
+
+/// 2-D mesh with dimension-ordered X-Y routing (deadlock-free).
+pub fn mesh(rows: usize, cols: usize, p: &LinkParams) -> Topology {
+    let links = mesh_links(rows, cols, p);
+    let mut t = Topology::with_links(rows * cols, links, p);
+    // Replace BFS routes with X-Y dimension order: move along X (columns)
+    // first, then Y (rows) — the paper's NoI uses X-Y routing (§V-A).
+    let id = |r: usize, c: usize| r * cols + c;
+    let mut link_of = std::collections::HashMap::new();
+    for (i, l) in t.links.iter().enumerate() {
+        link_of.insert((l.src, l.dst), i);
+    }
+    for sr in 0..rows {
+        for sc in 0..cols {
+            let s = id(sr, sc);
+            for dr in 0..rows {
+                for dc in 0..cols {
+                    let d = id(dr, dc);
+                    if s == d {
+                        continue;
+                    }
+                    let next = if sc != dc {
+                        // X first.
+                        if dc > sc { id(sr, sc + 1) } else { id(sr, sc - 1) }
+                    } else if dr > sr {
+                        id(sr + 1, sc)
+                    } else {
+                        id(sr - 1, sc)
+                    };
+                    t.route[s][d] = link_of[&(s, next)];
+                }
+            }
+        }
+    }
+    t.rebuild_hop_table();
+    t
+}
+
+// ------------------------------------------------------------------ floret
+
+/// Floret NoI [18]: data-flow-aware petals. The non-hub chiplets are
+/// partitioned into `petals` chains by angular order around a central hub;
+/// each petal is a loop hub -> n1 -> ... -> nk -> hub, aligning the
+/// topology with feed-forward layer traffic (consecutive layers sit on
+/// consecutive petal nodes).  Routing: shortest path (BFS), which follows
+/// petals and crosses the hub between petals.
+pub fn floret(rows: usize, cols: usize, petals: usize, p: &LinkParams) -> Topology {
+    let n = rows * cols;
+    assert!(petals >= 1 && n > 1);
+    let hub = (rows / 2) * cols + cols / 2;
+    let pos = |i: usize| ((i / cols) as f64, (i % cols) as f64);
+    let (hr, hc) = pos(hub);
+    // Sort non-hub nodes by angle around the hub, then by radius.
+    let mut others: Vec<usize> = (0..n).filter(|&i| i != hub).collect();
+    others.sort_by(|&a, &b| {
+        let (ar, ac) = pos(a);
+        let (br, bc) = pos(b);
+        let ta = (ar - hr).atan2(ac - hc);
+        let tb = (br - hr).atan2(bc - hc);
+        ta.partial_cmp(&tb)
+            .unwrap()
+            .then_with(|| {
+                let da = (ar - hr).hypot(ac - hc);
+                let db = (br - hr).hypot(bc - hc);
+                da.partial_cmp(&db).unwrap()
+            })
+            .then(a.cmp(&b))
+    });
+    let mut links = Vec::new();
+    let mut push = |a: usize, b: usize| {
+        links.push(Link {
+            src: a,
+            dst: b,
+            width_bytes: p.width_bytes,
+            clock_div: 1,
+            e_per_byte_pj: p.e_per_byte_pj,
+        });
+        links.push(Link {
+            src: b,
+            dst: a,
+            width_bytes: p.width_bytes,
+            clock_div: 1,
+            e_per_byte_pj: p.e_per_byte_pj,
+        });
+    };
+    let per = others.len().div_ceil(petals);
+    for chunk in others.chunks(per) {
+        // hub -> c0 -> c1 ... -> ck -> hub (petal loop).
+        let mut prev = hub;
+        for &node in chunk {
+            push(prev, node);
+            prev = node;
+        }
+        if prev != hub {
+            push(prev, hub);
+        }
+    }
+    Topology::with_links(n, links, p)
+}
+
+// ---------------------------------------------------------------- ccd star
+
+/// AMD Threadripper PRO-like star (§V-F): `num_ccds` CCDs each linked to
+/// one IOD by GMI3 (asymmetric: 32 B/cy read i.e. IOD->CCD, 16 B/cy write
+/// i.e. CCD->IOD, both at the base 1.733 GHz clock), and the IOD linked to
+/// a DDR endpoint node whose width models aggregate DDR5 bandwidth.
+pub fn ccd_star(num_ccds: usize, p: &LinkParams) -> Topology {
+    let iod = num_ccds;
+    let ddr = num_ccds + 1;
+    let n = num_ccds + 2;
+    let mut links = Vec::new();
+    for ccd in 0..num_ccds {
+        // Read direction (IOD -> CCD): 32 B/cycle.
+        links.push(Link {
+            src: iod,
+            dst: ccd,
+            width_bytes: 32,
+            clock_div: 1,
+            e_per_byte_pj: p.e_per_byte_pj,
+        });
+        // Write direction (CCD -> IOD): 16 B/cycle.
+        links.push(Link {
+            src: ccd,
+            dst: iod,
+            width_bytes: 16,
+            clock_div: 1,
+            e_per_byte_pj: p.e_per_byte_pj,
+        });
+    }
+    // IOD <-> DDR: aggregate DDR5 ~330 GB/s at 1.733 GHz ≈ 190 B/cycle.
+    for (a, b, w) in [(iod, ddr, 190u64), (ddr, iod, 190u64)] {
+        links.push(Link { src: a, dst: b, width_bytes: w, clock_div: 1, e_per_byte_pj: p.e_per_byte_pj });
+    }
+    Topology::with_links(n, links, p)
+}
+
+// ------------------------------------------------------------------ custom
+
+/// Arbitrary undirected link list.
+pub fn custom(num_nodes: usize, undirected: &[(usize, usize)], p: &LinkParams) -> Topology {
+    let mut links = Vec::new();
+    for &(a, b) in undirected {
+        assert!(a < num_nodes && b < num_nodes, "link ({a},{b}) out of range");
+        for (s, d) in [(a, b), (b, a)] {
+            links.push(Link {
+                src: s,
+                dst: d,
+                width_bytes: p.width_bytes,
+                clock_div: 1,
+                e_per_byte_pj: p.e_per_byte_pj,
+            });
+        }
+    }
+    Topology::with_links(num_nodes, links, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> LinkParams {
+        LinkParams::default()
+    }
+
+    #[test]
+    fn mesh_link_count() {
+        let t = mesh(4, 4, &p());
+        // 2 * (rows*(cols-1) + cols*(rows-1)) directed links.
+        assert_eq!(t.links.len(), 2 * (4 * 3 + 4 * 3));
+    }
+
+    #[test]
+    fn mesh_xy_routing_goes_x_first() {
+        let t = mesh(4, 4, &p());
+        // From (0,0)=0 to (2,3)=11: first hops along the row: 0->1->2->3,
+        // then down the column: 3->7->11.
+        let path = t.path(0, 11);
+        let nodes: Vec<usize> = path.iter().map(|&l| t.links[l].dst).collect();
+        assert_eq!(nodes, vec![1, 2, 3, 7, 11]);
+    }
+
+    #[test]
+    fn mesh_hops_equal_manhattan() {
+        let t = mesh(10, 10, &p());
+        for (s, d) in [(0usize, 99usize), (5, 50), (23, 67), (99, 0)] {
+            let (sr, sc) = (s / 10, s % 10);
+            let (dr, dc) = (d / 10, d % 10);
+            let manhattan = sr.abs_diff(dr) + sc.abs_diff(dc);
+            assert_eq!(t.hops(s, d), manhattan, "{s}->{d}");
+        }
+    }
+
+    #[test]
+    fn floret_is_fully_connected() {
+        let t = floret(10, 10, 10, &p());
+        for s in 0..t.num_nodes {
+            for d in 0..t.num_nodes {
+                if s != d {
+                    assert!(!t.path(s, d).is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn floret_neighbours_on_petal_are_one_hop() {
+        let t = floret(6, 6, 6, &p());
+        // Every link endpoint pair must be one hop apart.
+        for l in &t.links {
+            assert_eq!(t.hops(l.src, l.dst), 1);
+        }
+    }
+
+    #[test]
+    fn ccd_star_asymmetric_widths() {
+        let t = ccd_star(8, &p());
+        let read = t.links.iter().find(|l| l.src == 8 && l.dst == 0).unwrap();
+        let write = t.links.iter().find(|l| l.src == 0 && l.dst == 8).unwrap();
+        assert_eq!(read.width_bytes, 32);
+        assert_eq!(write.width_bytes, 16);
+        // CCD-to-CCD goes through the IOD: 2 hops.
+        assert_eq!(t.hops(0, 5), 2);
+        // CCD to DDR: 2 hops via IOD.
+        assert_eq!(t.hops(3, 9), 2);
+    }
+
+    #[test]
+    fn ser_ns_respects_width_and_clock_div() {
+        let mut t = mesh(2, 2, &p());
+        assert_eq!(t.ser_ns(0, 32), 1.0); // 32 B over 32 B/cy @1 GHz = 1 cy
+        assert_eq!(t.ser_ns(0, 33), 2.0); // partial flit rounds up
+        t.links[0].clock_div = 2;
+        assert_eq!(t.ser_ns(0, 32), 2.0);
+    }
+
+    #[test]
+    fn custom_topology_routes() {
+        // A line 0-1-2-3.
+        let t = custom(4, &[(0, 1), (1, 2), (2, 3)], &p());
+        assert_eq!(t.hops(0, 3), 3);
+        assert_eq!(t.hops(3, 0), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn custom_rejects_out_of_range() {
+        custom(2, &[(0, 5)], &p());
+    }
+}

@@ -1,0 +1,230 @@
+//! Microsecond-granularity power profiling (paper §IV-C, Fig. 8).
+//!
+//! As the co-simulation progresses, every compute and communication
+//! operation books its energy here *along with when it happened and which
+//! chiplet did it*.  The tracker bins energy per chiplet at the paper's
+//! 1 µs granularity (1 pJ / 1 ns == 1 mW, so bin power in mW is simply
+//! accumulated pJ / bin_ns).  The resulting profiles feed the thermal
+//! model and the Fig. 8 traces.
+
+use crate::TimeNs;
+
+/// Per-chiplet time-binned power profile.
+#[derive(Debug, Clone)]
+pub struct PowerTracker {
+    pub bin_ns: TimeNs,
+    num_chiplets: usize,
+    /// bins[chiplet][bin] = accumulated energy in pJ.
+    bins: Vec<Vec<f64>>,
+    /// Constant baseline power per chiplet, mW (idle + router static).
+    baseline_mw: Vec<f64>,
+    max_time_ns: TimeNs,
+}
+
+impl PowerTracker {
+    pub fn new(num_chiplets: usize, bin_ns: TimeNs) -> PowerTracker {
+        assert!(bin_ns > 0);
+        PowerTracker {
+            bin_ns,
+            num_chiplets,
+            bins: vec![Vec::new(); num_chiplets],
+            baseline_mw: vec![0.0; num_chiplets],
+            max_time_ns: 0,
+        }
+    }
+
+    pub fn num_chiplets(&self) -> usize {
+        self.num_chiplets
+    }
+
+    /// Set the constant baseline (idle + static) power of a chiplet.
+    pub fn set_baseline_mw(&mut self, chiplet: usize, mw: f64) {
+        self.baseline_mw[chiplet] = mw;
+    }
+
+    fn ensure_bin(&mut self, chiplet: usize, bin: usize) {
+        let v = &mut self.bins[chiplet];
+        if v.len() <= bin {
+            v.resize(bin + 1, 0.0);
+        }
+    }
+
+    /// Book `energy_pj` spread uniformly over [start, start+duration).
+    pub fn add_energy(&mut self, chiplet: usize, start: TimeNs, duration_ns: TimeNs, energy_pj: f64) {
+        if energy_pj <= 0.0 {
+            return;
+        }
+        let duration = duration_ns.max(1);
+        let end = start + duration;
+        self.max_time_ns = self.max_time_ns.max(end);
+        let first_bin = (start / self.bin_ns) as usize;
+        let last_bin = ((end - 1) / self.bin_ns) as usize;
+        self.ensure_bin(chiplet, last_bin);
+        if first_bin == last_bin {
+            self.bins[chiplet][first_bin] += energy_pj;
+            return;
+        }
+        let per_ns = energy_pj / duration as f64;
+        for bin in first_bin..=last_bin {
+            let bin_start = bin as TimeNs * self.bin_ns;
+            let bin_end = bin_start + self.bin_ns;
+            let overlap = end.min(bin_end) - start.max(bin_start);
+            self.bins[chiplet][bin] += per_ns * overlap as f64;
+        }
+    }
+
+    /// Book an instantaneous energy event into its bin.
+    pub fn add_event(&mut self, chiplet: usize, t: TimeNs, energy_pj: f64) {
+        if energy_pj <= 0.0 {
+            return;
+        }
+        let bin = (t / self.bin_ns) as usize;
+        self.ensure_bin(chiplet, bin);
+        self.bins[chiplet][bin] += energy_pj;
+        self.max_time_ns = self.max_time_ns.max(t + 1);
+    }
+
+    /// Number of bins covering the profiled interval.
+    pub fn num_bins(&self) -> usize {
+        (self.max_time_ns.div_ceil(self.bin_ns)) as usize
+    }
+
+    /// Power of one chiplet in one bin, mW (dynamic + baseline).
+    pub fn power_mw(&self, chiplet: usize, bin: usize) -> f64 {
+        let dynamic = self.bins[chiplet].get(bin).copied().unwrap_or(0.0) / self.bin_ns as f64;
+        dynamic + self.baseline_mw[chiplet]
+    }
+
+    /// Full power series of one chiplet, mW.
+    pub fn series_mw(&self, chiplet: usize) -> Vec<f64> {
+        (0..self.num_bins()).map(|b| self.power_mw(chiplet, b)).collect()
+    }
+
+    /// Total system power series, W.
+    pub fn total_series_w(&self) -> Vec<f64> {
+        let n = self.num_bins();
+        let mut total = vec![0.0; n];
+        for c in 0..self.num_chiplets {
+            for (b, t) in total.iter_mut().enumerate() {
+                *t += self.power_mw(c, b) * 1e-3;
+            }
+        }
+        total
+    }
+
+    /// Total energy booked for a chiplet, pJ (dynamic only).
+    pub fn dynamic_energy_pj(&self, chiplet: usize) -> f64 {
+        self.bins[chiplet].iter().sum()
+    }
+
+    /// Average power of a chiplet over the run, mW.
+    pub fn avg_power_mw(&self, chiplet: usize) -> f64 {
+        let n = self.num_bins().max(1);
+        self.series_mw(chiplet).iter().sum::<f64>() / n as f64
+    }
+
+    /// Power matrix [bins x chiplets] in W, decimated by `stride` bins
+    /// (averaged) — the thermal solver's input format.
+    pub fn matrix_w(&self, stride: usize) -> Vec<Vec<f64>> {
+        let stride = stride.max(1);
+        let nbins = self.num_bins();
+        let nrows = nbins.div_ceil(stride);
+        let mut rows = Vec::with_capacity(nrows);
+        for r in 0..nrows {
+            let lo = r * stride;
+            let hi = ((r + 1) * stride).min(nbins).max(lo + 1);
+            let row: Vec<f64> = (0..self.num_chiplets)
+                .map(|c| {
+                    (lo..hi).map(|b| self.power_mw(c, b)).sum::<f64>() / (hi - lo) as f64 * 1e-3
+                })
+                .collect();
+            rows.push(row);
+        }
+        rows
+    }
+
+    /// CSV export: time_us, chiplet0_mw, chiplet1_mw, ...
+    pub fn to_csv(&self, chiplets: &[usize]) -> String {
+        let mut s = String::from("time_us");
+        for &c in chiplets {
+            s.push_str(&format!(",chiplet{c}_mw"));
+        }
+        s.push('\n');
+        for b in 0..self.num_bins() {
+            s.push_str(&format!("{}", b as f64 * self.bin_ns as f64 / 1e3));
+            for &c in chiplets {
+                s.push_str(&format!(",{:.3}", self.power_mw(c, b)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_conserved_across_bins() {
+        let mut p = PowerTracker::new(2, 1_000);
+        p.add_energy(0, 500, 2_000, 6_000.0); // spans 3 bins
+        let total: f64 = (0..p.num_bins()).map(|b| p.power_mw(0, b) * 1_000.0).sum();
+        assert!((total - 6_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_spread_proportional_to_overlap() {
+        let mut p = PowerTracker::new(1, 1_000);
+        // [500, 2500): 500 ns in bin0, 1000 in bin1, 500 in bin2.
+        p.add_energy(0, 500, 2_000, 4_000.0);
+        assert!((p.power_mw(0, 0) - 1.0).abs() < 1e-9); // 1000 pJ / 1000 ns
+        assert!((p.power_mw(0, 1) - 2.0).abs() < 1e-9);
+        assert!((p.power_mw(0, 2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_pj_per_ns_is_one_mw() {
+        let mut p = PowerTracker::new(1, 1_000);
+        p.add_energy(0, 0, 1_000, 1_000.0);
+        assert!((p.power_mw(0, 0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_adds_everywhere() {
+        let mut p = PowerTracker::new(1, 1_000);
+        p.add_event(0, 5_000, 500.0);
+        p.set_baseline_mw(0, 3.0);
+        assert!((p.power_mw(0, 0) - 3.0).abs() < 1e-12);
+        assert!((p.power_mw(0, 5) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn total_series_sums_chiplets() {
+        let mut p = PowerTracker::new(3, 1_000);
+        for c in 0..3 {
+            p.add_energy(c, 0, 1_000, 1_000.0);
+        }
+        let total = p.total_series_w();
+        assert!((total[0] - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matrix_decimation_averages() {
+        let mut p = PowerTracker::new(1, 1_000);
+        p.add_energy(0, 0, 1_000, 2_000.0); // bin0: 2 mW
+        p.add_energy(0, 1_000, 1_000, 4_000.0); // bin1: 4 mW
+        let m = p.matrix_w(2);
+        assert_eq!(m.len(), 1);
+        assert!((m[0][0] - 3e-3).abs() < 1e-12); // avg of 2,4 mW in W
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut p = PowerTracker::new(2, 1_000);
+        p.add_event(1, 100, 42.0);
+        let csv = p.to_csv(&[0, 1]);
+        assert!(csv.starts_with("time_us,chiplet0_mw,chiplet1_mw\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

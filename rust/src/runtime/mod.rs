@@ -1,0 +1,287 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts` and
+//! executes them from the Rust hot path.
+//!
+//! The interchange format is HLO **text** (`artifacts/*.hlo.txt`): jax
+//! ≥ 0.5 serializes HloModuleProto with 64-bit instruction ids that the
+//! xla crate's xla_extension 0.5.1 rejects, while the text parser
+//! reassigns ids and round-trips cleanly.  Entries are described by
+//! `artifacts/manifest.json` (schema produced by `python/compile/aot.py`).
+//!
+//! One compiled executable is cached per artifact name; compilation
+//! happens lazily on first use.  Python is never involved at runtime.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Shape + dtype of one artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub num_outputs: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// Compile-time constants baked into the graphs (chunk sizes etc.).
+    pub constants: BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    pub fn parse(v: &Value) -> anyhow::Result<Manifest> {
+        let mut entries = BTreeMap::new();
+        for (name, e) in v.get("entries")?.as_obj()? {
+            let inputs = e
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|i| {
+                    Ok(TensorSpec {
+                        shape: i
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| Ok(d.as_usize()?))
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                        dtype: i.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    num_outputs: e.get("num_outputs")?.as_usize()?,
+                },
+            );
+        }
+        let mut constants = BTreeMap::new();
+        if let Some(c) = v.opt("constants") {
+            for (k, cv) in c.as_obj()? {
+                if let Ok(x) = cv.as_f64() {
+                    constants.insert(k.clone(), x);
+                }
+            }
+        }
+        Ok(Manifest { entries, constants })
+    }
+
+    pub fn constant_usize(&self, key: &str) -> Option<usize> {
+        self.constants.get(key).map(|&x| x as usize)
+    }
+}
+
+/// A host-side f32 tensor for artifact I/O.
+#[derive(Debug, Clone)]
+pub struct F32Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl F32Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> F32Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        F32Tensor { shape, data }
+    }
+
+    pub fn vec(data: Vec<f32>) -> F32Tensor {
+        F32Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> F32Tensor {
+        let n = shape.iter().product();
+        F32Tensor { shape, data: vec![0.0; n] }
+    }
+}
+
+/// The PJRT runtime: CPU client + artifact registry + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Dispatch counter (perf accounting).
+    pub dispatches: u64,
+}
+
+impl Runtime {
+    /// Resolve the artifacts directory: `CHIPSIM_ARTIFACTS` env var, else
+    /// `./artifacts`, else `<crate root>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("CHIPSIM_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        let local = PathBuf::from("artifacts");
+        if local.join("manifest.json").exists() {
+            return local;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Open the artifact registry at `dir` and create the PJRT CPU client.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        anyhow::ensure!(
+            manifest_path.exists(),
+            "no manifest at {} — run `make artifacts` first",
+            manifest_path.display()
+        );
+        let manifest = Manifest::parse(&json::parse_file(&manifest_path)?)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), dispatches: 0 })
+    }
+
+    /// Open at the default directory.
+    pub fn open_default() -> anyhow::Result<Runtime> {
+        Self::open(Self::default_dir())
+    }
+
+    fn compile(&mut self, name: &str) -> anyhow::Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling '{name}': {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with f32 inputs; returns the output tuple
+    /// as flat f32 vectors.
+    pub fn exec_f32(&mut self, name: &str, inputs: &[F32Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.compile(name)?;
+        let entry = &self.manifest.entries[name];
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "'{name}' expects {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "'{name}' input {i}: shape {:?} != manifest {:?}",
+                t.shape,
+                spec.shape
+            );
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshaping input {i} of '{name}': {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = &self.cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing '{name}': {e:?}"))?;
+        self.dispatches += 1;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of '{name}': {e:?}"))?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of '{name}': {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == entry.num_outputs,
+            "'{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            entry.num_outputs
+        );
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                l.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("reading output {i} of '{name}': {e:?}"))
+            })
+            .collect()
+    }
+
+    /// Names of available artifacts.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.manifest.entries.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_real_schema() {
+        let text = r#"{
+            "format": "hlo-text/return-tuple",
+            "constants": {"transient_chunk": 256, "cg_iters": 64,
+                          "imc_batch": 128, "thermal_sizes": [64, 256]},
+            "entries": {
+                "imc_batch_b128": {
+                    "file": "imc_batch_b128.hlo.txt",
+                    "inputs": [
+                        {"shape": [128, 6], "dtype": "float32"},
+                        {"shape": [6], "dtype": "float32"}
+                    ],
+                    "num_outputs": 1
+                }
+            }
+        }"#;
+        let m = Manifest::parse(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = &m.entries["imc_batch_b128"];
+        assert_eq!(e.inputs[0].shape, vec![128, 6]);
+        assert_eq!(e.num_outputs, 1);
+        assert_eq!(m.constant_usize("transient_chunk"), Some(256));
+    }
+
+    #[test]
+    fn tensor_shape_checked() {
+        let t = F32Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        F32Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(Runtime::open("/nonexistent/artifacts").is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Simulation results: per-model outcomes, per-kind aggregates, power.
+
+use std::collections::BTreeMap;
+
+use crate::noc::LinkUtilization;
+use crate::power::PowerTracker;
+use crate::util::benchkit::fmt_ns;
+use crate::workload::ModelKind;
+use crate::TimeNs;
+
+/// Outcome of one model instance.
+#[derive(Debug, Clone)]
+pub struct ModelOutcome {
+    pub id: usize,
+    pub kind: ModelKind,
+    pub arrival_ns: TimeNs,
+    pub mapped_ns: TimeNs,
+    pub finished_ns: TimeNs,
+    pub inferences: u32,
+    /// Per-inference end-to-end latency (layer-0 compute start -> last
+    /// layer compute done), ns.
+    pub inference_latency_ns: Vec<u64>,
+    /// Per-inference pure compute span (sum over layers of slowest-segment
+    /// latency), ns.
+    pub compute_ns: Vec<f64>,
+    /// Per-inference communication span (sum over layer boundaries of
+    /// injection -> all-flows-arrived), ns.
+    pub comm_ns: Vec<f64>,
+    /// Total segments in the mapping (occupancy metric).
+    pub segments: usize,
+}
+
+impl ModelOutcome {
+    pub fn mean_latency_ns(&self) -> f64 {
+        mean_u(&self.inference_latency_ns)
+    }
+}
+
+fn mean_u(xs: &[u64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<u64>() as f64 / xs.len() as f64
+    }
+}
+
+fn mean_f(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Aggregate statistics per model kind.
+#[derive(Debug, Clone, Default)]
+pub struct KindStats {
+    pub instances: usize,
+    pub inferences: usize,
+    pub mean_latency_ns: f64,
+    pub mean_compute_ns: f64,
+    pub mean_comm_ns: f64,
+}
+
+/// Full result of a co-simulation run.
+#[derive(Debug)]
+pub struct SimReport {
+    pub outcomes: Vec<ModelOutcome>,
+    /// Models that could never be mapped (too large for the system).
+    pub dropped: Vec<(usize, ModelKind)>,
+    /// Total simulated span, ns.
+    pub span_ns: TimeNs,
+    pub power: PowerTracker,
+    /// Per-chiplet compute-busy time, ns.
+    pub chiplet_busy_ns: Vec<u64>,
+    /// Total NoI dynamic energy, pJ.
+    pub comm_energy_pj: f64,
+    /// Total compute dynamic energy, pJ.
+    pub compute_energy_pj: f64,
+    /// Bytes × hops moved through the NoI (throughput metric).
+    pub noc_work: u64,
+    /// Per-link NoI utilization over the run (bottleneck analysis).
+    pub link_util: LinkUtilization,
+    /// Wall-clock runtime of the simulation itself, ns.
+    pub wall_ns: u128,
+    /// Statistics window applied (warmup/cooldown trimming).
+    pub stats_window: (TimeNs, TimeNs),
+}
+
+impl SimReport {
+    /// Per-kind aggregates over the statistics window: inferences whose
+    /// model instance was mapped inside [warmup, span-cooldown] (falls
+    /// back to all instances if the window would be empty).
+    pub fn by_kind(&self) -> BTreeMap<&'static str, KindStats> {
+        let (lo, hi) = self.stats_window;
+        let in_window: Vec<&ModelOutcome> = {
+            let w: Vec<&ModelOutcome> = self
+                .outcomes
+                .iter()
+                .filter(|o| o.mapped_ns >= lo && o.finished_ns <= hi)
+                .collect();
+            if w.is_empty() {
+                self.outcomes.iter().collect()
+            } else {
+                w
+            }
+        };
+        let mut map: BTreeMap<&'static str, KindStats> = BTreeMap::new();
+        for o in in_window {
+            let e = map.entry(o.kind.name()).or_default();
+            e.instances += 1;
+            e.inferences += o.inference_latency_ns.len();
+            e.mean_latency_ns += o.inference_latency_ns.iter().sum::<u64>() as f64;
+            e.mean_compute_ns += o.compute_ns.iter().sum::<f64>();
+            e.mean_comm_ns += o.comm_ns.iter().sum::<f64>();
+        }
+        for s in map.values_mut() {
+            let n = s.inferences.max(1) as f64;
+            s.mean_latency_ns /= n;
+            s.mean_compute_ns /= n;
+            s.mean_comm_ns /= n;
+        }
+        map
+    }
+
+    /// Mean end-to-end inference latency for one kind, ns.
+    pub fn mean_latency_of(&self, kind: ModelKind) -> Option<f64> {
+        self.by_kind().get(kind.name()).map(|s| s.mean_latency_ns)
+    }
+
+    /// Average chiplet compute utilization over the run.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.span_ns == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.chiplet_busy_ns.iter().sum();
+        busy as f64 / (self.span_ns as f64 * self.chiplet_busy_ns.len() as f64)
+    }
+
+    /// Human-readable summary.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "simulated {} models ({} dropped) over {}  [wall {:.2} s]\n",
+            self.outcomes.len(),
+            self.dropped.len(),
+            fmt_ns(self.span_ns as f64),
+            self.wall_ns as f64 / 1e9,
+        );
+        s.push_str(&format!(
+            "energy: compute {:.3} mJ, comm {:.3} mJ;  mean chiplet utilization {:.1}%\n",
+            self.compute_energy_pj / 1e9,
+            self.comm_energy_pj / 1e9,
+            self.mean_utilization() * 100.0
+        ));
+        for (kind, st) in self.by_kind() {
+            s.push_str(&format!(
+                "  {kind:<10} x{:<3} mean inference latency {:>12}  (compute {:>12}, comm {:>12})\n",
+                st.instances,
+                fmt_ns(st.mean_latency_ns),
+                fmt_ns(st.mean_compute_ns),
+                fmt_ns(st.mean_comm_ns),
+            ));
+        }
+        s
+    }
+
+    pub fn mean_compute_comm_of(&self, kind: ModelKind) -> Option<(f64, f64)> {
+        self.by_kind().get(kind.name()).map(|s| (s.mean_compute_ns, s.mean_comm_ns))
+    }
+}
+
+#[allow(dead_code)]
+fn _mean_helpers_used(xs: &[f64]) -> f64 {
+    mean_f(xs)
+}

@@ -1,0 +1,390 @@
+//! Multi-fidelity thermal model (our MFIT [49] analog, paper §IV-C).
+//!
+//! A 2.5D stack is discretized into an RC network with variable spatial
+//! granularity: **2×2 nodes per chiplet** in the active layer (to capture
+//! intra-chiplet gradients) and coarser uniform grids in the passive
+//! layers (interposer, heat spreader).  The spreader couples to ambient
+//! through an effective heat-sink convection conductance.
+//!
+//! Temperatures are solved as ΔT above ambient:
+//!
+//!   C dT/dt = -G T + P         (transient)
+//!           0 = -G T + P       (steady state)
+//!
+//! The implicit-Euler step matrices A = (I + dt·C⁻¹G)⁻¹ and
+//! Bm = A·dt·C⁻¹ are precomputed once per physical configuration (dense
+//! LU from `util::linalg`), then the timeline is integrated either by the
+//! in-process [`native::NativeSolver`] (oracle) or by the AOT JAX/Pallas
+//! artifact through [`pjrt::PjrtThermalSolver`] (hot path).
+
+pub mod native;
+pub mod pjrt;
+
+use crate::config::HardwareConfig;
+use crate::util::linalg::{Lu, Mat};
+
+/// Material / package constants (SI).
+pub mod consts {
+    /// Silicon thermal conductivity, W/(m·K).
+    pub const K_SI: f64 = 120.0;
+    /// Interposer (Si + wiring) effective conductivity, W/(m·K).
+    pub const K_INTERPOSER: f64 = 80.0;
+    /// Copper heat-spreader conductivity, W/(m·K).
+    pub const K_SPREADER: f64 = 390.0;
+    /// Volumetric heat capacity of silicon, J/(m³·K).
+    pub const CV_SI: f64 = 1.66e6;
+    /// Volumetric heat capacity of copper, J/(m³·K).
+    pub const CV_CU: f64 = 3.45e6;
+    /// Die thickness, m.
+    pub const T_DIE: f64 = 0.3e-3;
+    /// Interposer thickness, m.
+    pub const T_INTERPOSER: f64 = 0.1e-3;
+    /// Spreader thickness, m.
+    pub const T_SPREADER: f64 = 1.0e-3;
+    /// TIM conductance per area between die and spreader, W/(m²·K).
+    pub const H_TIM: f64 = 5.0e4;
+    /// Heat-sink convection coefficient, W/(m²·K).
+    pub const H_SINK: f64 = 2.0e3;
+    /// Ambient temperature, °C (paper's setups run warm).
+    pub const T_AMBIENT: f64 = 45.0;
+}
+
+/// Node indices of one layer of the RC network.
+#[derive(Debug, Clone)]
+pub struct ThermalLayerIdx {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub first: usize,
+}
+
+impl ThermalLayerIdx {
+    pub fn node(&self, r: usize, c: usize) -> usize {
+        self.first + r * self.cols + c
+    }
+}
+
+/// The assembled RC network for a hardware configuration.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    /// Total node count.
+    pub n: usize,
+    /// Conductance matrix (SPD; diagonal includes ambient ties), W/K.
+    pub g: Mat,
+    /// Heat capacitance per node, J/K.
+    pub c: Vec<f64>,
+    /// Active-layer node ids per chiplet (2×2 each).
+    pub chiplet_nodes: Vec<Vec<usize>>,
+    pub layers: Vec<ThermalLayerIdx>,
+    pub ambient_c: f64,
+}
+
+/// Grid resolution of the passive layers (interposer / spreader).
+pub const PASSIVE_GRID: usize = 10;
+/// Active-layer sub-grid per chiplet.
+pub const CHIPLET_SUBGRID: usize = 2;
+
+impl ThermalModel {
+    /// Build the RC network for a chiplet grid.  Chiplets sit on a
+    /// rows×cols floorplan; the interposer and spreader span the package.
+    pub fn build(hw: &HardwareConfig) -> ThermalModel {
+        use consts::*;
+        let nch = hw.num_chiplets();
+        let sub = CHIPLET_SUBGRID;
+        let active_nodes = nch * sub * sub;
+        let passive = PASSIVE_GRID * PASSIVE_GRID;
+        let n = active_nodes + 2 * passive;
+        let mut g = Mat::zeros(n, n);
+        let mut c = vec![0.0; n];
+
+        // Package footprint: chiplet pitch grid with 1 mm spacing margin.
+        let pitch_x: f64 = hw
+            .chiplet_types
+            .iter()
+            .map(|t| t.width_mm)
+            .fold(0.0, f64::max)
+            + 1.0;
+        let pitch_y: f64 = hw
+            .chiplet_types
+            .iter()
+            .map(|t| t.height_mm)
+            .fold(0.0, f64::max)
+            + 1.0;
+        let pkg_w = pitch_x * hw.cols as f64 * 1e-3;
+        let pkg_h = pitch_y * hw.rows as f64 * 1e-3;
+
+        let add = |g: &mut Mat, a: usize, b: usize, cond: f64| {
+            g[(a, a)] += cond;
+            g[(b, b)] += cond;
+            g[(a, b)] -= cond;
+            g[(b, a)] -= cond;
+        };
+        let tie = |g: &mut Mat, a: usize, cond: f64| {
+            g[(a, a)] += cond;
+        };
+
+        // ----- active layer: 2×2 nodes per chiplet --------------------
+        let mut chiplet_nodes = Vec::with_capacity(nch);
+        for ch in 0..nch {
+            let t = hw.chiplet_type(ch);
+            let w = t.width_mm * 1e-3;
+            let h = t.height_mm * 1e-3;
+            let cell_w = w / sub as f64;
+            let cell_h = h / sub as f64;
+            let vol = cell_w * cell_h * T_DIE;
+            let base = ch * sub * sub;
+            let mut nodes = Vec::with_capacity(sub * sub);
+            for r in 0..sub {
+                for cc in 0..sub {
+                    let idx = base + r * sub + cc;
+                    c[idx] = CV_SI * vol;
+                    nodes.push(idx);
+                    // Lateral conduction inside the die.
+                    if cc + 1 < sub {
+                        let cond = K_SI * (cell_h * T_DIE) / cell_w;
+                        add(&mut g, idx, idx + 1, cond);
+                    }
+                    if r + 1 < sub {
+                        let cond = K_SI * (cell_w * T_DIE) / cell_h;
+                        add(&mut g, idx, idx + sub, cond);
+                    }
+                }
+            }
+            chiplet_nodes.push(nodes);
+        }
+
+        // ----- passive layers ----------------------------------------
+        let pg = PASSIVE_GRID;
+        let interposer = ThermalLayerIdx { name: "interposer", rows: pg, cols: pg, first: active_nodes };
+        let spreader =
+            ThermalLayerIdx { name: "spreader", rows: pg, cols: pg, first: active_nodes + passive };
+        let cell_w = pkg_w / pg as f64;
+        let cell_h = pkg_h / pg as f64;
+        for (layer, k, thick, cv) in [
+            (&interposer, K_INTERPOSER, T_INTERPOSER, CV_SI),
+            (&spreader, K_SPREADER, T_SPREADER, CV_CU),
+        ] {
+            let vol = cell_w * cell_h * thick;
+            for r in 0..pg {
+                for cc in 0..pg {
+                    let idx = layer.node(r, cc);
+                    c[idx] = cv * vol;
+                    if cc + 1 < pg {
+                        add(&mut g, idx, layer.node(r, cc + 1), k * (cell_h * thick) / cell_w);
+                    }
+                    if r + 1 < pg {
+                        add(&mut g, idx, layer.node(r + 1, cc), k * (cell_w * thick) / cell_h);
+                    }
+                }
+            }
+        }
+
+        // ----- vertical coupling --------------------------------------
+        // Chiplet cell -> nearest interposer cell (below) and spreader
+        // cell (above, through TIM).
+        let cell_of = |x: f64, y: f64, layer: &ThermalLayerIdx| {
+            let cc = ((x / pkg_w) * layer.cols as f64).min(layer.cols as f64 - 1.0) as usize;
+            let rr = ((y / pkg_h) * layer.rows as f64).min(layer.rows as f64 - 1.0) as usize;
+            layer.node(rr, cc)
+        };
+        for ch in 0..nch {
+            let t = hw.chiplet_type(ch);
+            let (crow, ccol) = (ch / hw.cols, ch % hw.cols);
+            // Center each die inside its pitch cell so the floorplan is
+            // symmetric in the package (corner dies then cool equally).
+            let cx0 = (ccol as f64 * pitch_x + (pitch_x - t.width_mm) / 2.0) * 1e-3;
+            let cy0 = (crow as f64 * pitch_y + (pitch_y - t.height_mm) / 2.0) * 1e-3;
+            let w = t.width_mm * 1e-3;
+            let h = t.height_mm * 1e-3;
+            let cell_area = (w / sub as f64) * (h / sub as f64);
+            for r in 0..sub {
+                for cc2 in 0..sub {
+                    let idx = chiplet_nodes[ch][r * sub + cc2];
+                    let x = cx0 + (cc2 as f64 + 0.5) * w / sub as f64;
+                    let y = cy0 + (r as f64 + 0.5) * h / sub as f64;
+                    // Die -> interposer (microbumps + underfill ≈ die k).
+                    let gi = K_SI * cell_area / (T_DIE / 2.0 + T_INTERPOSER / 2.0);
+                    add(&mut g, idx, cell_of(x, y, &interposer), gi);
+                    // Die -> spreader through TIM.
+                    let gs = H_TIM * cell_area;
+                    add(&mut g, idx, cell_of(x, y, &spreader), gs);
+                }
+            }
+        }
+        // Interposer <-> spreader around the dies (edge path, weak).
+        for r in 0..pg {
+            for cc in 0..pg {
+                let gi = 0.1 * K_INTERPOSER * (cell_w * cell_h) / (T_INTERPOSER + T_SPREADER);
+                add(&mut g, interposer.node(r, cc), spreader.node(r, cc), gi);
+            }
+        }
+        // Spreader -> ambient (heat sink).
+        for r in 0..pg {
+            for cc in 0..pg {
+                tie(&mut g, spreader.node(r, cc), H_SINK * cell_w * cell_h);
+            }
+        }
+        // Interposer underside -> board (weak).
+        for r in 0..pg {
+            for cc in 0..pg {
+                tie(&mut g, interposer.node(r, cc), 0.05 * H_SINK * cell_w * cell_h);
+            }
+        }
+
+        ThermalModel {
+            n,
+            g,
+            c,
+            chiplet_nodes,
+            layers: vec![interposer, spreader],
+            ambient_c: T_AMBIENT,
+        }
+    }
+
+    /// Implicit-Euler step matrices for timestep `dt_s` (seconds):
+    /// A = (I + dt C⁻¹ G)⁻¹,  Bm = A · diag(dt / C).
+    pub fn step_matrices(&self, dt_s: f64) -> anyhow::Result<(Mat, Mat)> {
+        let n = self.n;
+        let mut m = Mat::identity(n);
+        for i in 0..n {
+            for j in 0..n {
+                m[(i, j)] += dt_s * self.g[(i, j)] / self.c[i];
+            }
+        }
+        let a = Lu::factor(&m)?.inverse();
+        let mut bm = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                bm[(i, j)] = a[(i, j)] * dt_s / self.c[j];
+            }
+        }
+        Ok((a, bm))
+    }
+
+    /// Expand per-chiplet power (W) to per-node power (W): each chiplet's
+    /// power splits equally over its 2×2 active nodes.
+    pub fn node_power(&self, chiplet_w: &[f64]) -> Vec<f64> {
+        let mut p = vec![0.0; self.n];
+        for (ch, nodes) in self.chiplet_nodes.iter().enumerate() {
+            let share = chiplet_w.get(ch).copied().unwrap_or(0.0) / nodes.len() as f64;
+            for &nd in nodes {
+                p[nd] = share;
+            }
+        }
+        p
+    }
+
+    /// Mean ΔT of a chiplet given a node-temperature vector.
+    pub fn chiplet_temp(&self, temps: &[f64], chiplet: usize) -> f64 {
+        let nodes = &self.chiplet_nodes[chiplet];
+        nodes.iter().map(|&i| temps[i]).sum::<f64>() / nodes.len() as f64
+    }
+
+    /// Render an ASCII/art heatmap of chiplet temperatures (°C absolute).
+    pub fn heatmap(&self, temps: &[f64], rows: usize, cols: usize) -> String {
+        let vals: Vec<f64> =
+            (0..rows * cols).map(|ch| self.chiplet_temp(temps, ch) + self.ambient_c).collect();
+        let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+        let mut s = format!("thermal heatmap: {lo:.1}°C (' ') .. {hi:.1}°C ('@')\n");
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = vals[r * cols + c];
+                let t = if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+                let idx = ((t * (shades.len() - 1) as f64).round()) as usize;
+                s.push(shades[idx.min(shades.len() - 1)]);
+                s.push(shades[idx.min(shades.len() - 1)]);
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV of per-chiplet temperatures.
+    pub fn temps_csv(&self, temps: &[f64], num_chiplets: usize) -> String {
+        let mut s = String::from("chiplet,temp_c\n");
+        for ch in 0..num_chiplets {
+            s.push_str(&format!("{ch},{:.3}\n", self.chiplet_temp(temps, ch) + self.ambient_c));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model_4x4() -> (HardwareConfig, ThermalModel) {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let tm = ThermalModel::build(&hw);
+        (hw, tm)
+    }
+
+    #[test]
+    fn network_dimensions() {
+        let (hw, tm) = model_4x4();
+        assert_eq!(tm.chiplet_nodes.len(), hw.num_chiplets());
+        assert_eq!(tm.n, 16 * 4 + 2 * PASSIVE_GRID * PASSIVE_GRID);
+        assert!(tm.c.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn conductance_matrix_is_symmetric_spd_ish() {
+        let (_, tm) = model_4x4();
+        for i in 0..tm.n {
+            for j in (i + 1)..tm.n {
+                assert!((tm.g[(i, j)] - tm.g[(j, i)]).abs() < 1e-12);
+            }
+            // Ambient ties make row sums positive on tied rows, zero or
+            // positive elsewhere => weakly diagonally dominant.
+            let off: f64 = (0..tm.n).filter(|&j| j != i).map(|j| tm.g[(i, j)].abs()).sum();
+            assert!(tm.g[(i, i)] >= off - 1e-9, "row {i}");
+        }
+    }
+
+    #[test]
+    fn steady_state_uniform_power_is_warmer_in_center() {
+        let (hw, tm) = model_4x4();
+        let p = tm.node_power(&vec![1.0; hw.num_chiplets()]); // 1 W each
+        let t = crate::util::linalg::Lu::factor(&tm.g).unwrap().solve(&p);
+        // Center chiplets (1,1),(1,2),(2,1),(2,2) warmer than corner 0.
+        let corner = tm.chiplet_temp(&t, 0);
+        let center = tm.chiplet_temp(&t, 5);
+        assert!(center > corner, "center {center} !> corner {corner}");
+        assert!(t.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn node_power_conserves_total() {
+        let (hw, tm) = model_4x4();
+        let chips: Vec<f64> = (0..hw.num_chiplets()).map(|i| i as f64 * 0.1).collect();
+        let p = tm.node_power(&chips);
+        let total_in: f64 = chips.iter().sum();
+        let total_out: f64 = p.iter().sum();
+        assert!((total_in - total_out).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_matrices_padding_identity_property() {
+        let (_, tm) = model_4x4();
+        let (a, bm) = tm.step_matrices(1e-6).unwrap();
+        assert_eq!(a.n_rows, tm.n);
+        assert_eq!(bm.n_rows, tm.n);
+        // A rows sum <= 1 (decay), Bm nonnegative-ish.
+        for i in 0..tm.n {
+            let s: f64 = (0..tm.n).map(|j| a[(i, j)]).sum();
+            assert!(s <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn heatmap_renders() {
+        let (hw, tm) = model_4x4();
+        let p = tm.node_power(&vec![2.0; hw.num_chiplets()]);
+        let t = crate::util::linalg::Lu::factor(&tm.g).unwrap().solve(&p);
+        let map = tm.heatmap(&t, 4, 4);
+        assert!(map.lines().count() >= 5);
+        assert!(map.contains("°C"));
+    }
+}

@@ -1,0 +1,138 @@
+//! In-process thermal solver: the correctness oracle for the PJRT path.
+//!
+//! Same math as the AOT artifact (implicit Euler + CG), run in f64 with
+//! `util::linalg`.  Tests cross-check `pjrt::PjrtThermalSolver` against
+//! this solver to f32 tolerance.
+
+use super::ThermalModel;
+use crate::util::linalg::{Lu, Mat};
+
+/// Transient + steady-state solver over a thermal model.
+pub struct NativeSolver {
+    a: Mat,
+    bm: Mat,
+    pub dt_s: f64,
+}
+
+impl NativeSolver {
+    /// Precompute the implicit-Euler matrices for timestep `dt_s`.
+    pub fn new(model: &ThermalModel, dt_s: f64) -> anyhow::Result<NativeSolver> {
+        let (a, bm) = model.step_matrices(dt_s)?;
+        Ok(NativeSolver { a, bm, dt_s })
+    }
+
+    /// One step: T' = A·T + Bm·P  (P in node space, W).
+    pub fn step(&self, t: &[f64], p: &[f64]) -> Vec<f64> {
+        let at = self.a.matvec(t);
+        let bp = self.bm.matvec(p);
+        at.iter().zip(&bp).map(|(x, y)| x + y).collect()
+    }
+
+    /// Integrate a power timeline (rows = steps, node space).  Returns the
+    /// trajectory (ΔT per step).
+    pub fn transient(&self, t0: &[f64], p_steps: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let mut t = t0.to_vec();
+        let mut traj = Vec::with_capacity(p_steps.len());
+        for p in p_steps {
+            t = self.step(&t, p);
+            traj.push(t.clone());
+        }
+        traj
+    }
+
+    /// Steady state: solve G·T = P directly (LU).
+    pub fn steady(model: &ThermalModel, p: &[f64]) -> anyhow::Result<Vec<f64>> {
+        Ok(Lu::factor(&model.g)?.solve(p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::thermal::ThermalModel;
+
+    fn setup() -> (HardwareConfig, ThermalModel, NativeSolver) {
+        let hw = HardwareConfig::homogeneous_mesh(3, 3);
+        let tm = ThermalModel::build(&hw);
+        let solver = NativeSolver::new(&tm, 1e-6).unwrap();
+        (hw, tm, solver)
+    }
+
+    #[test]
+    fn zero_power_stays_at_ambient() {
+        let (_, tm, s) = setup();
+        let p = vec![vec![0.0; tm.n]; 10];
+        let traj = s.transient(&vec![0.0; tm.n], &p);
+        for row in traj {
+            assert!(row.iter().all(|&x| x.abs() < 1e-12));
+        }
+    }
+
+    #[test]
+    fn constant_power_converges_to_steady_state() {
+        let (hw, tm, _s) = setup();
+        let p_node = tm.node_power(&vec![3.0; hw.num_chiplets()]);
+        let steady = NativeSolver::steady(&tm, &p_node).unwrap();
+        // The spreader-to-ambient time constant is seconds-scale; implicit
+        // Euler is unconditionally stable, so integrate 60 s in 0.1 s steps.
+        let big = NativeSolver::new(&tm, 0.1).unwrap();
+        let steps = vec![p_node.clone(); 600];
+        let traj = big.transient(&vec![0.0; tm.n], &steps);
+        let last = traj.last().unwrap();
+        for i in 0..tm.n {
+            let err = (last[i] - steady[i]).abs() / steady[i].abs().max(1e-9);
+            assert!(err < 0.05, "node {i}: {} vs steady {}", last[i], steady[i]);
+        }
+    }
+
+    #[test]
+    fn monotone_heating_under_constant_power() {
+        let (hw, tm, s) = setup();
+        let p_node = tm.node_power(&vec![2.0; hw.num_chiplets()]);
+        let steps = vec![p_node; 50];
+        let traj = s.transient(&vec![0.0; tm.n], &steps);
+        for w in traj.windows(2) {
+            for i in 0..tm.n {
+                assert!(w[1][i] >= w[0][i] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cooling_after_power_off() {
+        // After power-off, heat keeps diffusing into the passive layers,
+        // so individual passive nodes may still warm — but total stored
+        // thermal energy (Σ C·T) must decrease monotonically, and the hot
+        // die nodes must cool.
+        let (hw, tm, s) = setup();
+        let hot = tm.node_power(&vec![5.0; hw.num_chiplets()]);
+        let mut steps = vec![hot; 100];
+        steps.extend(vec![vec![0.0; tm.n]; 100]);
+        let traj = s.transient(&vec![0.0; tm.n], &steps);
+        let energy = |t: &Vec<f64>| -> f64 { t.iter().zip(&tm.c).map(|(x, c)| x * c).sum() };
+        for w in traj[100..].windows(2) {
+            assert!(energy(&w[1]) <= energy(&w[0]) + 1e-12);
+        }
+        let die0 = tm.chiplet_nodes[0][0];
+        assert!(traj.last().unwrap()[die0] < traj[99][die0]);
+    }
+
+    #[test]
+    fn superposition_holds() {
+        // Linear system: T(p1 + p2) == T(p1) + T(p2).
+        let (hw, tm, s) = setup();
+        let p1 = tm.node_power(&vec![1.0; hw.num_chiplets()]);
+        let mut chips2 = vec![0.0; hw.num_chiplets()];
+        chips2[4] = 7.0;
+        let p2 = tm.node_power(&chips2);
+        let psum: Vec<f64> = p1.iter().zip(&p2).map(|(a, b)| a + b).collect();
+        let t1 = s.transient(&vec![0.0; tm.n], &vec![p1; 20]);
+        let t2 = s.transient(&vec![0.0; tm.n], &vec![p2; 20]);
+        let ts = s.transient(&vec![0.0; tm.n], &vec![psum; 20]);
+        for i in 0..tm.n {
+            let want = t1[19][i] + t2[19][i];
+            assert!((ts[19][i] - want).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT-backed thermal solver: drives the AOT JAX/Pallas artifacts.
+//!
+//! `thermal_transient_n{N}` integrates [`CHUNK`] implicit-Euler steps per
+//! dispatch (the scan lives inside the HLO, not in Rust, so dispatch
+//! overhead is amortized 256×); `thermal_steady_n{N}` runs 64 CG
+//! iterations per dispatch with warm restart until the residual converges.
+//!
+//! The RC system is zero-padded to the nearest artifact size variant with
+//! the convention tested in `python/tests/test_model.py`: padded rows of A
+//! are identity, of Bm zero, padded G rows are identity-diagonal, padded
+//! power entries zero — padded nodes stay exactly at ΔT = 0.
+
+use super::ThermalModel;
+use crate::runtime::{F32Tensor, Runtime};
+use crate::util::linalg::Mat;
+
+/// Artifact-served thermal solver.
+pub struct PjrtThermalSolver {
+    rt: Runtime,
+    /// Real node count.
+    n: usize,
+    /// Padded artifact variant size.
+    n_pad: usize,
+    /// Steps per transient dispatch.
+    chunk: usize,
+    a_pad: F32Tensor,
+    bm_pad: F32Tensor,
+    g_pad: F32Tensor,
+    pub dt_s: f64,
+}
+
+impl PjrtThermalSolver {
+    /// Build from a thermal model + runtime; precomputes padded matrices.
+    pub fn new(model: &ThermalModel, dt_s: f64, rt: Runtime) -> anyhow::Result<Self> {
+        let sizes: Vec<usize> = rt
+            .manifest
+            .entries
+            .keys()
+            .filter_map(|k| k.strip_prefix("thermal_transient_n").and_then(|s| s.parse().ok()))
+            .collect();
+        anyhow::ensure!(!sizes.is_empty(), "no thermal artifacts in manifest");
+        let n = model.n;
+        let n_pad = *sizes
+            .iter()
+            .filter(|&&s| s >= n)
+            .min()
+            .ok_or_else(|| anyhow::anyhow!("no artifact variant fits {n} nodes (have {sizes:?})"))?;
+        let chunk = rt
+            .manifest
+            .constant_usize("transient_chunk")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing transient_chunk"))?;
+        let (a, bm) = model.step_matrices(dt_s)?;
+        Ok(PjrtThermalSolver {
+            n,
+            n_pad,
+            chunk,
+            a_pad: pad_matrix(&a, n_pad, true),
+            bm_pad: pad_matrix(&bm, n_pad, false),
+            g_pad: pad_matrix(&model.g, n_pad, true),
+            rt,
+            dt_s,
+        })
+    }
+
+    pub fn open_default(model: &ThermalModel, dt_s: f64) -> anyhow::Result<Self> {
+        Self::new(model, dt_s, Runtime::open_default()?)
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.rt.dispatches
+    }
+
+    /// Integrate a node-space power timeline; returns the ΔT trajectory
+    /// (one row per step, truncated to the real node count).
+    pub fn transient(&mut self, t0: &[f64], p_steps: &[Vec<f64>]) -> anyhow::Result<Vec<Vec<f64>>> {
+        assert_eq!(t0.len(), self.n);
+        let name = format!("thermal_transient_n{}", self.n_pad);
+        let mut t: Vec<f32> = (0..self.n_pad)
+            .map(|i| if i < self.n { t0[i] as f32 } else { 0.0 })
+            .collect();
+        let mut traj = Vec::with_capacity(p_steps.len());
+        let mut s = 0;
+        while s < p_steps.len() {
+            let take = (p_steps.len() - s).min(self.chunk);
+            let mut p = vec![0.0f32; self.chunk * self.n_pad];
+            for (row, step) in p_steps[s..s + take].iter().enumerate() {
+                assert_eq!(step.len(), self.n);
+                for (j, &w) in step.iter().enumerate() {
+                    p[row * self.n_pad + j] = w as f32;
+                }
+            }
+            let out = self.rt.exec_f32(
+                &name,
+                &[
+                    self.a_pad.clone(),
+                    self.bm_pad.clone(),
+                    F32Tensor::new(vec![self.n_pad], t.clone()),
+                    F32Tensor::new(vec![self.chunk, self.n_pad], p),
+                ],
+            )?;
+            // out[0] = trajectory [chunk, n_pad]; out[1] = final state.
+            for row in 0..take {
+                traj.push(
+                    out[0][row * self.n_pad..row * self.n_pad + self.n]
+                        .iter()
+                        .map(|&x| x as f64)
+                        .collect(),
+                );
+            }
+            // Carry the state at the end of the *taken* rows (if the chunk
+            // was partial, the remaining rows ran with zero power — padded
+            // nodes unaffected, but real nodes would decay; so restart from
+            // the last taken row instead of out[1]).
+            if take == self.chunk {
+                t = out[1].clone();
+            } else {
+                let row = take - 1;
+                let mut nt = vec![0.0f32; self.n_pad];
+                nt[..self.n_pad]
+                    .copy_from_slice(&out[0][row * self.n_pad..(row + 1) * self.n_pad]);
+                t = nt;
+            }
+            s += take;
+        }
+        Ok(traj)
+    }
+
+    /// Steady state via warm-restarted CG dispatches.
+    pub fn steady(&mut self, p: &[f64], tol: f64, max_dispatches: usize) -> anyhow::Result<Vec<f64>> {
+        assert_eq!(p.len(), self.n);
+        let name = format!("thermal_steady_n{}", self.n_pad);
+        let mut pp = vec![0.0f32; self.n_pad];
+        for (i, &x) in p.iter().enumerate() {
+            pp[i] = x as f32;
+        }
+        let mut t = vec![0.0f32; self.n_pad];
+        for _ in 0..max_dispatches {
+            let out = self.rt.exec_f32(
+                &name,
+                &[
+                    self.g_pad.clone(),
+                    F32Tensor::new(vec![self.n_pad], pp.clone()),
+                    F32Tensor::new(vec![self.n_pad], t.clone()),
+                ],
+            )?;
+            t = out[0].clone();
+            let rs = out[1][0] as f64;
+            if rs < tol {
+                break;
+            }
+        }
+        Ok(t[..self.n].iter().map(|&x| x as f64).collect())
+    }
+}
+
+/// Zero-pad a square matrix to `n_pad`; `identity_diag` puts 1.0 on the
+/// padded diagonal (required for A and G so padded nodes are inert and G
+/// stays non-singular).
+fn pad_matrix(m: &Mat, n_pad: usize, identity_diag: bool) -> F32Tensor {
+    let n = m.n_rows;
+    let mut data = vec![0.0f32; n_pad * n_pad];
+    for i in 0..n {
+        for j in 0..n {
+            data[i * n_pad + j] = m[(i, j)] as f32;
+        }
+    }
+    if identity_diag {
+        for i in n..n_pad {
+            data[i * n_pad + i] = 1.0;
+        }
+    }
+    F32Tensor::new(vec![n_pad, n_pad], data)
+}
+
+// Integration tests that execute artifacts live in
+// rust/tests/runtime_artifacts.rs (they need `make artifacts` to have run).

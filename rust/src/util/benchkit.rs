@@ -1,0 +1,198 @@
+//! Benchmark harness (criterion replacement) used by `rust/benches/*`.
+//!
+//! Two roles:
+//!  1. micro/hot-path timing: [`bench`] runs a closure with warmup and
+//!     reports mean / p50 / p95 / throughput;
+//!  2. experiment tables: [`Table`] prints the paper-style rows that each
+//!     bench target regenerates, and can dump them as JSON for
+//!     EXPERIMENTS.md bookkeeping.
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<40} iters={:<6} mean={:>12} p50={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and `min_time_ms`
+/// milliseconds after one warmup call.  Returns stats over per-iter times.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_millis() < min_time_ms as u128 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        p50_ns: pct(0.5),
+        p95_ns: pct(0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// A paper-style results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column width alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!(" {:<w$} ", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// JSON form for machine-readable experiment logs.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("title", Value::from(self.title.clone())),
+            (
+                "headers",
+                Value::Arr(self.headers.iter().map(|h| Value::from(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Value::Arr(r.iter().map(|c| Value::from(c.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Format a ratio as a percent string like the paper's tables.
+pub fn pct(x: f64) -> String {
+    format!("{:.0}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let r = bench("noop-ish", 16, 1, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 16);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let mut t = Table::new("demo", &["model", "err"]);
+        t.row(vec!["ResNet18".into(), "74%".into()]);
+        t.row(vec!["AlexNet".into(), "33%".into()]);
+        let s = t.render();
+        assert!(s.contains("ResNet18"));
+        assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(512.0), "512 ns");
+        assert!(fmt_ns(2_500.0).contains("µs"));
+        assert!(fmt_ns(2.5e6).contains("ms"));
+        assert!(fmt_ns(2.5e9).contains(" s"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Tiny CLI argument parser (clap replacement).
+//!
+//! Supports `--key value`, `--key=value`, boolean flags, positionals, and
+//! auto-generated `--help` text from registered options.
+
+use std::collections::BTreeMap;
+
+/// A parsed command line: positionals plus `--key value` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_flags` lists option names that take NO value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} expects an integer, got '{s}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_u64(name, default as u64)? as usize)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} expects a number, got '{s}': {e}")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--inferences 1,3,5,10,20`.
+    pub fn get_u64_list(&self, name: &str, default: &[u64]) -> anyhow::Result<Vec<u64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("--{name} item '{t}': {e}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Declarative help-text builder used by the launcher.
+pub struct HelpText {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub usage: &'static str,
+    pub entries: Vec<(&'static str, &'static str)>,
+}
+
+impl HelpText {
+    pub fn render(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}\n\nOPTIONS:\n", self.name, self.about, self.usage);
+        for (flag, desc) in &self.entries {
+            s.push_str(&format!("  {flag:<32} {desc}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["run", "--seed", "42", "--topo=floret", "extra"], &[]);
+        assert_eq!(a.positionals, vec!["run", "extra"]);
+        assert_eq!(a.get("seed"), Some("42"));
+        assert_eq!(a.get("topo"), Some("floret"));
+    }
+
+    #[test]
+    fn flags_vs_valued() {
+        let a = parse(&["--verbose", "--n", "5"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_u64("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--pipelined"], &[]);
+        assert!(a.flag("pipelined"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--x", "2.5"], &[]);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+        assert!(a.get_u64("x", 0).is_err());
+    }
+
+    #[test]
+    fn u64_list() {
+        let a = parse(&["--inf", "1,3,5"], &[]);
+        assert_eq!(a.get_u64_list("inf", &[]).unwrap(), vec![1, 3, 5]);
+        assert_eq!(a.get_u64_list("other", &[10]).unwrap(), vec![10]);
+    }
+}

@@ -1,0 +1,291 @@
+//! Dense linear algebra for the thermal precompute path.
+//!
+//! The implicit-Euler thermal step needs A = (I + dt C^-1 G)^-1 once per
+//! physical configuration; this module supplies the LU factorization,
+//! inverse, solve, and matvec used by `thermal::` and by tests that
+//! cross-check the PJRT solver.  Row-major `f64` storage.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Mat {
+        Mat { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let n_rows = rows.len();
+        let n_cols = rows[0].len();
+        let mut data = Vec::with_capacity(n_rows * n_cols);
+        for r in rows {
+            assert_eq!(r.len(), n_cols);
+            data.extend_from_slice(r);
+        }
+        Mat { n_rows, n_cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    /// y = self @ x
+    ///
+    /// Four independent accumulators let LLVM vectorize the f64 reduction
+    /// without relaxing FP semantics per accumulator chain (strict f64
+    /// addition is order-dependent, so a single-accumulator loop cannot be
+    /// auto-vectorized) — ~3× on the thermal hot path (EXPERIMENTS §Perf).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        for i in 0..self.n_rows {
+            let row = self.row(i);
+            let mut acc = [0.0f64; 4];
+            let chunks = self.n_cols / 4 * 4;
+            let mut j = 0;
+            while j < chunks {
+                acc[0] += row[j] * x[j];
+                acc[1] += row[j + 1] * x[j + 1];
+                acc[2] += row[j + 2] * x[j + 2];
+                acc[3] += row[j + 3] * x[j + 3];
+                j += 4;
+            }
+            let mut tail = 0.0;
+            while j < self.n_cols {
+                tail += row[j] * x[j];
+                j += 1;
+            }
+            y[i] = (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail;
+        }
+        y
+    }
+
+    /// C = self @ other
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n_cols, other.n_rows);
+        let mut out = Mat::zeros(self.n_rows, other.n_cols);
+        for i in 0..self.n_rows {
+            for k in 0..self.n_cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let dst =
+                    &mut out.data[i * other.n_cols..(i + 1) * other.n_cols];
+                for j in 0..other.n_cols {
+                    dst[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale row i by s.
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        for v in &mut self.data[i * self.n_cols..(i + 1) * self.n_cols] {
+            *v *= s;
+        }
+    }
+
+    /// Frobenius-norm distance to another matrix (test helper).
+    pub fn dist(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.n_cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.n_cols + j]
+    }
+}
+
+/// LU factorization with partial pivoting: PA = LU stored in-place.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+}
+
+impl Lu {
+    /// Factorize a square matrix. Errors on (numerical) singularity.
+    pub fn factor(a: &Mat) -> anyhow::Result<Lu> {
+        assert_eq!(a.n_rows, a.n_cols, "LU needs a square matrix");
+        let n = a.n_rows;
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot: largest |value| in column k at/below the diagonal.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax < 1e-300 {
+                anyhow::bail!("singular matrix at pivot {k}");
+            }
+            if p != k {
+                for j in 0..n {
+                    lu.data.swap(k * n + j, p * n + j);
+                }
+                piv.swap(k, p);
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let f = lu[(i, k)] / pivot;
+                lu[(i, k)] = f;
+                if f != 0.0 {
+                    for j in k + 1..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= f * v;
+                    }
+                }
+            }
+        }
+        Ok(Lu { lu, piv })
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.n_rows;
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward substitution (L has unit diagonal).
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in i + 1..n {
+                acc -= self.lu[(i, j)] * x[j];
+            }
+            x[i] = acc / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Dense inverse via n solves.
+    pub fn inverse(&self) -> Mat {
+        let n = self.lu.n_rows;
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        inv
+    }
+}
+
+/// Convenience: invert a matrix.
+pub fn inverse(a: &Mat) -> anyhow::Result<Mat> {
+    Ok(Lu::factor(a)?.inverse())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_dd(n: usize, seed: u64) -> Mat {
+        // Diagonally dominant => well conditioned, like RC conductance mats.
+        let mut r = Rng::new(seed);
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            let mut rowsum = 0.0;
+            for j in 0..n {
+                if i != j {
+                    let v = r.range_f64(-1.0, 1.0);
+                    m[(i, j)] = v;
+                    rowsum += v.abs();
+                }
+            }
+            m[(i, i)] = rowsum + r.range_f64(0.5, 2.0);
+        }
+        m
+    }
+
+    #[test]
+    fn lu_solve_recovers_known_solution() {
+        for n in [1, 2, 5, 17, 64] {
+            let a = random_dd(n, n as u64);
+            let mut r = Rng::new(99 + n as u64);
+            let x_true: Vec<f64> = (0..n).map(|_| r.range_f64(-3.0, 3.0)).collect();
+            let b = a.matvec(&x_true);
+            let x = Lu::factor(&a).unwrap().solve(&b);
+            for i in 0..n {
+                assert!((x[i] - x_true[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let a = random_dd(32, 5);
+        let inv = inverse(&a).unwrap();
+        let prod = inv.matmul(&a);
+        assert!(prod.dist(&Mat::identity(32)) < 1e-8);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = Lu::factor(&a).unwrap().solve(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+}

@@ -1,0 +1,55 @@
+//! Minimal `log` facade backend (env_logger replacement).
+//!
+//! Level comes from `CHIPSIM_LOG` (error|warn|info|debug|trace), default
+//! `info`.  Install once with [`init`]; repeated calls are no-ops.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "E",
+                Level::Warn => "W",
+                Level::Info => "I",
+                Level::Debug => "D",
+                Level::Trace => "T",
+            };
+            eprintln!("[{tag} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the stderr logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("CHIPSIM_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    // set_logger errors if already installed; that's fine.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,23 @@
+//! In-tree substrates replacing unavailable third-party crates.
+//!
+//! The build image is offline with a minimal vendored registry (see
+//! DESIGN.md §3), so the usual ecosystem crates are implemented here as
+//! small, well-tested modules:
+//!
+//! | module     | replaces        | purpose                                |
+//! |------------|-----------------|----------------------------------------|
+//! | [`json`]   | serde_json      | config + manifest parsing, trace export|
+//! | [`rng`]    | rand            | deterministic seedable PRNG            |
+//! | [`cli`]    | clap            | argument parsing for the launcher      |
+//! | [`benchkit`]| criterion      | bench harness with stats               |
+//! | [`propkit`]| proptest        | property-based testing driver          |
+//! | [`linalg`] | nalgebra        | dense LU/inverse for thermal precompute|
+//! | [`logging`]| env_logger      | `log` facade backend                   |
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod linalg;
+pub mod logging;
+pub mod propkit;
+pub mod rng;

@@ -1,0 +1,76 @@
+//! Property-based testing driver (proptest replacement).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure `cases` times with
+//! independent seeded RNG streams; a failure panics with the offending
+//! seed so the case can be replayed exactly with `check_seed`.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` random cases.  `prop` returns `Err(msg)` (or
+/// panics) to signal a violated property.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Base seed is fixed for reproducibility; override via env for fuzzing.
+    let base: u64 = std::env::var("CHIPSIM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_CAFE);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (replay: check_seed(\"{name}\", {seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed for seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helper producing `Result<(), String>` for use inside props.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_rng| Err("nope".to_string()));
+    }
+}

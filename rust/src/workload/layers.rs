@@ -1,0 +1,151 @@
+//! Layer descriptors and constructors for the supported layer types.
+//!
+//! Each layer records exactly what the compute backends and the traffic
+//! generator need: MAC count, stationary weight footprint, activation
+//! input/output volumes.  Quantization follows the IMC setting of the
+//! paper's cited chips: int8 weights and activations (1 byte/element).
+
+/// Layer category (used by mapping and the compute backends).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Spatial convolution.
+    Conv,
+    /// Fully connected / linear projection.
+    Fc,
+    /// Pooling (no weights, negligible MACs, reduces activation volume).
+    Pool,
+    /// Attention score + weighted-sum compute (no stationary weights).
+    Attention,
+    /// Patch / token embedding (a strided conv in ViT).
+    Embed,
+}
+
+/// One DNN layer in the layer-wise workload representation (paper §III-B).
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Multiply-accumulate operations for one inference of this layer.
+    pub macs: u64,
+    /// Stationary weight bytes (int8) — the chiplet memory the layer needs.
+    pub weight_bytes: u64,
+    /// Input activation bytes received from the previous layer.
+    pub in_bytes: u64,
+    /// Output activation elements (drives ADC conversions on IMC).
+    pub out_elems: u64,
+    /// Output activation bytes sent to the next layer (int8).
+    pub out_bytes: u64,
+}
+
+impl LayerDesc {
+    /// Convolution: input (h, w, c), `k` output channels, `ksize`^2 kernel,
+    /// stride, `same`-style padding (output spatial dims = ceil(h/stride)).
+    pub fn conv(name: &str, h: u64, w: u64, c: u64, k: u64, ksize: u64, stride: u64) -> LayerDesc {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let out_elems = oh * ow * k;
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            macs: out_elems * ksize * ksize * c,
+            weight_bytes: ksize * ksize * c * k,
+            in_bytes: h * w * c,
+            out_elems,
+            out_bytes: out_elems,
+        }
+    }
+
+    /// Fully connected `n_in -> n_out` (optionally over `tokens` rows).
+    pub fn fc(name: &str, n_in: u64, n_out: u64, tokens: u64) -> LayerDesc {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            macs: tokens * n_in * n_out,
+            weight_bytes: n_in * n_out,
+            in_bytes: tokens * n_in,
+            out_elems: tokens * n_out,
+            out_bytes: tokens * n_out,
+        }
+    }
+
+    /// Pooling over (h, w, c) with the given stride (no weights).
+    pub fn pool(name: &str, h: u64, w: u64, c: u64, stride: u64) -> LayerDesc {
+        let oh = h / stride;
+        let ow = w / stride;
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Pool,
+            // Comparisons/adds — negligible next to convs, but non-zero.
+            macs: oh * ow * c * stride * stride,
+            weight_bytes: 0,
+            in_bytes: h * w * c,
+            out_elems: oh * ow * c,
+            out_bytes: oh * ow * c,
+        }
+    }
+
+    /// Multi-head self-attention core: scores (T×T×D) + weighted sum.
+    /// No stationary weights (QKV/proj are separate `fc` layers).
+    pub fn attention(name: &str, tokens: u64, dim: u64) -> LayerDesc {
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Attention,
+            macs: 2 * tokens * tokens * dim,
+            weight_bytes: 0,
+            in_bytes: 3 * tokens * dim, // Q, K, V
+            out_elems: tokens * dim,
+            out_bytes: tokens * dim,
+        }
+    }
+
+    /// ViT patch embedding: a `p`×`p` stride-`p` conv from 3 channels.
+    pub fn patch_embed(name: &str, img: u64, p: u64, dim: u64) -> LayerDesc {
+        let tokens = (img / p) * (img / p) + 1; // + class token
+        LayerDesc {
+            name: name.to_string(),
+            kind: LayerKind::Embed,
+            macs: (img / p) * (img / p) * dim * p * p * 3,
+            weight_bytes: p * p * 3 * dim,
+            in_bytes: img * img * 3,
+            out_elems: tokens * dim,
+            out_bytes: tokens * dim,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_dims_match_hand_calc() {
+        // AlexNet conv1: 224x224x3, 96 kernels 11x11 stride 4 -> 56x56x96.
+        let l = LayerDesc::conv("conv1", 224, 224, 3, 96, 11, 4);
+        assert_eq!(l.out_elems, 56 * 56 * 96);
+        assert_eq!(l.weight_bytes, 11 * 11 * 3 * 96);
+        assert_eq!(l.macs, 56 * 56 * 96 * 11 * 11 * 3);
+    }
+
+    #[test]
+    fn fc_is_dense_matmul() {
+        let l = LayerDesc::fc("fc6", 9216, 4096, 1);
+        assert_eq!(l.macs, 9216 * 4096);
+        assert_eq!(l.weight_bytes, 9216 * 4096);
+        assert_eq!(l.out_bytes, 4096);
+    }
+
+    #[test]
+    fn pool_has_no_weights_and_shrinks_acts() {
+        let l = LayerDesc::pool("p", 56, 56, 96, 2);
+        assert_eq!(l.weight_bytes, 0);
+        assert_eq!(l.out_bytes, 28 * 28 * 96);
+        assert!(l.out_bytes < l.in_bytes);
+    }
+
+    #[test]
+    fn attention_quadratic_in_tokens() {
+        let a = LayerDesc::attention("attn", 197, 768);
+        assert_eq!(a.macs, 2 * 197 * 197 * 768);
+        assert_eq!(a.weight_bytes, 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Input workloads: DNN model zoo, layer descriptors, traffic generation,
+//! and the streaming model queue with age-aware arbitration (paper §III-B,
+//! §V-A).
+//!
+//! Models are represented layer-wise; each layer carries the operation
+//! counts the compute backends need (MACs, weight bytes, activation sizes)
+//! and the activation volume the traffic generator turns into NoI flows.
+
+mod layers;
+mod models;
+mod stream;
+
+pub use layers::{LayerDesc, LayerKind};
+pub use models::{ModelKind, NeuralModel, ALL_CNNS};
+pub use stream::{ArbitrationQueue, ModelRequest, WorkloadStream};
+
+/// Bytes moved from layer `i` to layer `i+1` (int8 activations).
+///
+/// The paper's Traffic Generator: layer-wise activations are known ahead
+/// of simulation; the Global Manager turns them into chiplet-to-chiplet
+/// flows once the mapping is known.
+pub fn activation_traffic_bytes(model: &NeuralModel, layer_idx: usize) -> u64 {
+    model.layers[layer_idx].out_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_equals_out_bytes() {
+        let m = NeuralModel::build(ModelKind::AlexNet);
+        for i in 0..m.layers.len() {
+            assert_eq!(activation_traffic_bytes(&m, i), m.layers[i].out_bytes);
+        }
+    }
+}

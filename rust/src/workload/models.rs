@@ -1,0 +1,345 @@
+//! The DNN model zoo: AlexNet, ResNet-18/34/50, ViT-B/16 (paper §V-A).
+//!
+//! Architectures follow the original papers ([51], [52], [53]); layer
+//! tables are generated programmatically from the stage definitions so
+//! MAC/weight/activation numbers are self-consistent with `LayerDesc`.
+
+use super::layers::LayerDesc;
+#[cfg(test)]
+use super::layers::LayerKind;
+
+/// The model types used in the paper's evaluations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    AlexNet,
+    ResNet18,
+    ResNet34,
+    ResNet50,
+    VitB16,
+    /// VGG-16 [Simonyan & Zisserman] — the classic heavyweight CNN;
+    /// useful for DSE because its 138 M parameters stress the mapper.
+    Vgg16,
+    /// MobileNetV1 — depthwise-separable CNN; the small/latency-bound
+    /// end of the workload spectrum.
+    MobileNetV1,
+}
+
+/// The four CNNs sampled by the driver workload (paper Table III).
+pub const ALL_CNNS: [ModelKind; 4] = [
+    ModelKind::AlexNet,
+    ModelKind::ResNet18,
+    ModelKind::ResNet34,
+    ModelKind::ResNet50,
+];
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::AlexNet => "AlexNet",
+            ModelKind::ResNet18 => "ResNet18",
+            ModelKind::ResNet34 => "ResNet34",
+            ModelKind::ResNet50 => "ResNet50",
+            ModelKind::VitB16 => "ViT-B/16",
+            ModelKind::Vgg16 => "VGG16",
+            ModelKind::MobileNetV1 => "MobileNetV1",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "alexnet" => Some(ModelKind::AlexNet),
+            "resnet18" => Some(ModelKind::ResNet18),
+            "resnet34" => Some(ModelKind::ResNet34),
+            "resnet50" => Some(ModelKind::ResNet50),
+            "vit" | "vitb16" | "vit-b/16" | "vit-b16" => Some(ModelKind::VitB16),
+            "vgg16" | "vgg" => Some(ModelKind::Vgg16),
+            "mobilenet" | "mobilenetv1" => Some(ModelKind::MobileNetV1),
+            _ => None,
+        }
+    }
+}
+
+/// A layer-wise DNN model instance description.
+#[derive(Debug, Clone)]
+pub struct NeuralModel {
+    pub kind: ModelKind,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl NeuralModel {
+    /// Build the layer table for a model kind.
+    pub fn build(kind: ModelKind) -> NeuralModel {
+        let layers = match kind {
+            ModelKind::AlexNet => alexnet(),
+            ModelKind::ResNet18 => resnet(&[2, 2, 2, 2], false),
+            ModelKind::ResNet34 => resnet(&[3, 4, 6, 3], false),
+            ModelKind::ResNet50 => resnet(&[3, 4, 6, 3], true),
+            ModelKind::VitB16 => vit_b16(),
+            ModelKind::Vgg16 => vgg16(),
+            ModelKind::MobileNetV1 => mobilenet_v1(),
+        };
+        NeuralModel { kind, layers }
+    }
+
+    /// Total stationary weight bytes (the memory the mapper must place).
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes).sum()
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+}
+
+// --------------------------------------------------------------- AlexNet
+
+fn alexnet() -> Vec<LayerDesc> {
+    let mut v = Vec::new();
+    v.push(LayerDesc::conv("conv1", 224, 224, 3, 96, 11, 4)); // 56x56x96
+    v.push(LayerDesc::pool("pool1", 56, 56, 96, 2)); // 28x28x96
+    v.push(LayerDesc::conv("conv2", 28, 28, 96, 256, 5, 1));
+    v.push(LayerDesc::pool("pool2", 28, 28, 256, 2)); // 14x14
+    v.push(LayerDesc::conv("conv3", 14, 14, 256, 384, 3, 1));
+    v.push(LayerDesc::conv("conv4", 14, 14, 384, 384, 3, 1));
+    v.push(LayerDesc::conv("conv5", 14, 14, 384, 256, 3, 1));
+    v.push(LayerDesc::pool("pool5", 14, 14, 256, 2)); // 7x7x256
+    v.push(LayerDesc::fc("fc6", 7 * 7 * 256, 4096, 1));
+    v.push(LayerDesc::fc("fc7", 4096, 4096, 1));
+    v.push(LayerDesc::fc("fc8", 4096, 1000, 1));
+    v
+}
+
+// --------------------------------------------------------------- ResNets
+
+/// ResNet with the given blocks-per-stage; `bottleneck` selects the
+/// 1x1-3x3-1x1 block (ResNet-50) vs the 3x3-3x3 basic block (18/34).
+fn resnet(blocks: &[usize; 4], bottleneck: bool) -> Vec<LayerDesc> {
+    let mut v = Vec::new();
+    v.push(LayerDesc::conv("conv1", 224, 224, 3, 64, 7, 2)); // 112x112x64
+    v.push(LayerDesc::pool("maxpool", 112, 112, 64, 2)); // 56x56x64
+
+    let stage_channels = [64u64, 128, 256, 512];
+    let mut h = 56u64;
+    let mut c_in = 64u64;
+    for (s, (&nblocks, &ch)) in blocks.iter().zip(stage_channels.iter()).enumerate() {
+        for b in 0..nblocks {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            if stride == 2 {
+                h /= 2;
+            }
+            if bottleneck {
+                // 1x1 reduce -> 3x3 -> 1x1 expand (4x).
+                let pre = format!("s{}b{}", s + 1, b + 1);
+                v.push(LayerDesc::conv(&format!("{pre}_c1"), h * stride, h * stride, c_in, ch, 1, stride));
+                v.push(LayerDesc::conv(&format!("{pre}_c2"), h, h, ch, ch, 3, 1));
+                v.push(LayerDesc::conv(&format!("{pre}_c3"), h, h, ch, ch * 4, 1, 1));
+                c_in = ch * 4;
+            } else {
+                let pre = format!("s{}b{}", s + 1, b + 1);
+                v.push(LayerDesc::conv(&format!("{pre}_c1"), h * stride, h * stride, c_in, ch, 3, stride));
+                v.push(LayerDesc::conv(&format!("{pre}_c2"), h, h, ch, ch, 3, 1));
+                c_in = ch;
+            }
+        }
+    }
+    // Global average pool + classifier.
+    v.push(LayerDesc::pool("avgpool", h, h, c_in, h));
+    v.push(LayerDesc::fc("fc", c_in, 1000, 1));
+    v
+}
+
+// ----------------------------------------------------------------- VGG-16
+
+fn vgg16() -> Vec<LayerDesc> {
+    // Stages: 2x64, 2x128, 3x256, 3x512, 3x512 (3x3 convs), pool between,
+    // then 4096-4096-1000 classifier.
+    let mut v = Vec::new();
+    let stages: [(usize, u64); 5] = [(2, 64), (2, 128), (3, 256), (3, 512), (3, 512)];
+    let mut h = 224u64;
+    let mut c_in = 3u64;
+    for (s, &(n, ch)) in stages.iter().enumerate() {
+        for b in 0..n {
+            v.push(LayerDesc::conv(&format!("s{}c{}", s + 1, b + 1), h, h, c_in, ch, 3, 1));
+            c_in = ch;
+        }
+        v.push(LayerDesc::pool(&format!("pool{}", s + 1), h, h, ch, 2));
+        h /= 2;
+    }
+    v.push(LayerDesc::fc("fc6", 7 * 7 * 512, 4096, 1));
+    v.push(LayerDesc::fc("fc7", 4096, 4096, 1));
+    v.push(LayerDesc::fc("fc8", 4096, 1000, 1));
+    v
+}
+
+// ------------------------------------------------------------ MobileNetV1
+
+/// Depthwise 3x3 conv: per-channel spatial filter (groups == channels).
+fn dw_conv(name: &str, h: u64, c: u64, stride: u64) -> LayerDesc {
+    let oh = h.div_ceil(stride);
+    LayerDesc {
+        name: name.to_string(),
+        kind: super::layers::LayerKind::Conv,
+        macs: oh * oh * c * 9,
+        weight_bytes: 9 * c,
+        in_bytes: h * h * c,
+        out_elems: oh * oh * c,
+        out_bytes: oh * oh * c,
+    }
+}
+
+fn mobilenet_v1() -> Vec<LayerDesc> {
+    let mut v = Vec::new();
+    v.push(LayerDesc::conv("conv1", 224, 224, 3, 32, 3, 2)); // 112x112x32
+    // (stride, out_channels) sequence of the 13 depthwise-separable blocks.
+    let blocks: [(u64, u64); 13] = [
+        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256), (2, 512),
+        (1, 512), (1, 512), (1, 512), (1, 512), (1, 512), (2, 1024), (1, 1024),
+    ];
+    let mut h = 112u64;
+    let mut c = 32u64;
+    for (i, &(stride, ch)) in blocks.iter().enumerate() {
+        v.push(dw_conv(&format!("dw{}", i + 1), h, c, stride));
+        h = h.div_ceil(stride);
+        // Pointwise 1x1 expansion.
+        v.push(LayerDesc::conv(&format!("pw{}", i + 1), h, h, c, ch, 1, 1));
+        c = ch;
+    }
+    v.push(LayerDesc::pool("avgpool", h, h, c, h));
+    v.push(LayerDesc::fc("fc", c, 1000, 1));
+    v
+}
+
+// --------------------------------------------------------------- ViT-B/16
+
+fn vit_b16() -> Vec<LayerDesc> {
+    let dim = 768u64;
+    let tokens = 197u64;
+    let mlp = 3072u64;
+    let mut v = Vec::new();
+    v.push(LayerDesc::patch_embed("patch_embed", 224, 16, dim));
+    for b in 0..12 {
+        v.push(LayerDesc::fc(&format!("blk{b}_qkv"), dim, 3 * dim, tokens));
+        v.push(LayerDesc::attention(&format!("blk{b}_attn"), tokens, dim));
+        v.push(LayerDesc::fc(&format!("blk{b}_proj"), dim, dim, tokens));
+        v.push(LayerDesc::fc(&format!("blk{b}_mlp1"), dim, mlp, tokens));
+        v.push(LayerDesc::fc(&format!("blk{b}_mlp2"), mlp, dim, tokens));
+    }
+    v.push(LayerDesc::fc("head", dim, 1000, 1));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_counts_match_architectures() {
+        assert_eq!(NeuralModel::build(ModelKind::AlexNet).layers.len(), 11);
+        // 18/34/50 conv+fc counts (pool layers extra).
+        let count_weighted = |k: ModelKind| {
+            NeuralModel::build(k)
+                .layers
+                .iter()
+                .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Fc | LayerKind::Embed))
+                .count()
+        };
+        assert_eq!(count_weighted(ModelKind::ResNet18), 18);
+        assert_eq!(count_weighted(ModelKind::ResNet34), 34);
+        assert_eq!(count_weighted(ModelKind::ResNet50), 50);
+    }
+
+    #[test]
+    fn parameter_counts_are_plausible() {
+        // Known ballparks (int8 => bytes == params): AlexNet ~61M (ours is
+        // ~76M: even-dimension pooling gives fc6 a 7x7x256 input vs the
+        // original 6x6x256, and convs are ungrouped), ResNet18 ~11.7M,
+        // ResNet34 ~21.8M, ResNet50 ~25.6M, ViT-B ~86M.
+        let wb = |k| NeuralModel::build(k).total_weight_bytes() as f64 / 1e6;
+        assert!((55.0..80.0).contains(&wb(ModelKind::AlexNet)), "{}", wb(ModelKind::AlexNet));
+        assert!((10.0..13.0).contains(&wb(ModelKind::ResNet18)), "{}", wb(ModelKind::ResNet18));
+        assert!((19.0..24.0).contains(&wb(ModelKind::ResNet34)), "{}", wb(ModelKind::ResNet34));
+        assert!((20.0..28.0).contains(&wb(ModelKind::ResNet50)), "{}", wb(ModelKind::ResNet50));
+        assert!((80.0..92.0).contains(&wb(ModelKind::VitB16)), "{}", wb(ModelKind::VitB16));
+    }
+
+    #[test]
+    fn mac_counts_are_plausible() {
+        // Ballparks: AlexNet ~0.7-1.1 GMAC, ResNet18 ~1.8G, ResNet34 ~3.6G,
+        // ResNet50 ~4G, ViT-B ~17G.
+        let gm = |k| NeuralModel::build(k).total_macs() as f64 / 1e9;
+        assert!((0.6..1.5).contains(&gm(ModelKind::AlexNet)), "{}", gm(ModelKind::AlexNet));
+        assert!((1.4..2.5).contains(&gm(ModelKind::ResNet18)), "{}", gm(ModelKind::ResNet18));
+        assert!((3.0..4.6).contains(&gm(ModelKind::ResNet34)), "{}", gm(ModelKind::ResNet34));
+        assert!((3.2..5.5).contains(&gm(ModelKind::ResNet50)), "{}", gm(ModelKind::ResNet50));
+        assert!((14.0..20.0).contains(&gm(ModelKind::VitB16)), "{}", gm(ModelKind::VitB16));
+    }
+
+    #[test]
+    fn resnet_stage_downsampling_halves_dims() {
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        // Final feature map is 7x7x512 -> avgpool out 512 elements.
+        let avg = m.layers.iter().find(|l| l.name == "avgpool").unwrap();
+        assert_eq!(avg.out_elems, 512);
+    }
+
+    #[test]
+    fn vgg16_matches_published_stats() {
+        let m = NeuralModel::build(ModelKind::Vgg16);
+        // ~138M params, ~15.5 GMACs; 13 convs + 3 fc.
+        let params = m.total_weight_bytes() as f64 / 1e6;
+        let gmacs = m.total_macs() as f64 / 1e9;
+        assert!((130.0..145.0).contains(&params), "{params}");
+        assert!((14.0..17.5).contains(&gmacs), "{gmacs}");
+        let weighted = m
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Fc))
+            .count();
+        assert_eq!(weighted, 16);
+    }
+
+    #[test]
+    fn mobilenet_matches_published_stats() {
+        let m = NeuralModel::build(ModelKind::MobileNetV1);
+        // ~4.2M params, ~570 MMACs.
+        let params = m.total_weight_bytes() as f64 / 1e6;
+        let mmacs = m.total_macs() as f64 / 1e6;
+        assert!((3.5..5.0).contains(&params), "{params}");
+        assert!((450.0..700.0).contains(&mmacs), "{mmacs}");
+        // Depthwise layers are tiny in weights but not in activations.
+        let dw1 = m.layers.iter().find(|l| l.name == "dw1").unwrap();
+        assert_eq!(dw1.weight_bytes, 9 * 32);
+        assert!(dw1.out_bytes > 100_000);
+    }
+
+    #[test]
+    fn new_models_map_and_simulate() {
+        use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
+        use crate::sim::GlobalManager;
+        let hw = HardwareConfig::homogeneous_mesh(10, 10);
+        let params = SimParams {
+            inferences_per_model: 1,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        for kind in [ModelKind::Vgg16, ModelKind::MobileNetV1] {
+            let report = GlobalManager::new(hw.clone(), params.clone())
+                .run(WorkloadConfig::single(kind))
+                .unwrap();
+            assert_eq!(report.outcomes.len(), 1, "{kind:?}");
+            assert!(report.outcomes[0].mean_latency_ns() > 0.0);
+        }
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for k in ALL_CNNS
+            .iter()
+            .chain([ModelKind::VitB16, ModelKind::Vgg16, ModelKind::MobileNetV1].iter())
+        {
+            assert_eq!(ModelKind::from_name(k.name()), Some(*k));
+        }
+    }
+}

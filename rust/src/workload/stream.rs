@@ -1,0 +1,191 @@
+//! The streaming model queue and age-aware arbitration (paper §III-B, §V-A).
+//!
+//! A workload is a stream of DNN model requests.  The Global Manager pulls
+//! from an [`ArbitrationQueue`] that allows out-of-order mapping (so small
+//! models are not starved behind a large one) but becomes head-of-line
+//! blocking once a request exceeds the age threshold — exactly the policy
+//! described in the paper's experimental setup.
+
+use crate::workload::models::{ModelKind, ALL_CNNS};
+use crate::util::rng::Rng;
+use crate::TimeNs;
+
+/// One model request in the stream.
+#[derive(Debug, Clone)]
+pub struct ModelRequest {
+    pub id: usize,
+    pub kind: ModelKind,
+    /// Time the request entered the queue.
+    pub arrival_ns: TimeNs,
+    /// Back-to-back inferences to execute once mapped (paper Table III).
+    pub inferences: u32,
+}
+
+/// Generator for the paper's driver workload: `n` models uniformly sampled
+/// from the four CNN types, injected at the given interval (the paper uses
+/// injection rate 1 — effectively all requests are queued immediately).
+#[derive(Debug, Clone)]
+pub struct WorkloadStream {
+    pub requests: Vec<ModelRequest>,
+}
+
+impl WorkloadStream {
+    /// Uniformly sample `n` CNN models (paper §V-A: 50 models from 4 types).
+    pub fn sample_cnns(n: usize, inferences: u32, injection_interval_ns: TimeNs, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let requests = (0..n)
+            .map(|id| ModelRequest {
+                id,
+                kind: *rng.choice(&ALL_CNNS),
+                arrival_ns: id as TimeNs * injection_interval_ns,
+                inferences,
+            })
+            .collect();
+        WorkloadStream { requests }
+    }
+
+    /// A fixed list of kinds, all arriving back-to-back.
+    pub fn from_kinds(kinds: &[ModelKind], inferences: u32, injection_interval_ns: TimeNs) -> Self {
+        let requests = kinds
+            .iter()
+            .enumerate()
+            .map(|(id, &kind)| ModelRequest {
+                id,
+                kind,
+                arrival_ns: id as TimeNs * injection_interval_ns,
+                inferences,
+            })
+            .collect();
+        WorkloadStream { requests }
+    }
+
+    /// Single-model workload (used by the ViT evaluation and baselines).
+    pub fn single(kind: ModelKind, inferences: u32) -> Self {
+        WorkloadStream::from_kinds(&[kind], inferences, 0)
+    }
+}
+
+/// Age-aware arbitration queue (paper §V-A):
+/// * oldest requests are tried first;
+/// * a request that cannot be mapped *may* be skipped so younger requests
+///   can map (out-of-order execution, prevents starvation of small models);
+/// * once a request's age exceeds `age_threshold_ns` it becomes
+///   non-skippable and blocks all younger requests until it maps.
+#[derive(Debug)]
+pub struct ArbitrationQueue {
+    pending: Vec<ModelRequest>, // kept sorted by arrival (oldest first)
+    pub age_threshold_ns: TimeNs,
+}
+
+impl ArbitrationQueue {
+    pub fn new(age_threshold_ns: TimeNs) -> Self {
+        ArbitrationQueue { pending: Vec::new(), age_threshold_ns }
+    }
+
+    pub fn push(&mut self, req: ModelRequest) {
+        // Maintain arrival order (stream generators emit in order, so this
+        // is O(1) in practice).
+        let pos = self
+            .pending
+            .iter()
+            .position(|r| r.arrival_ns > req.arrival_ns)
+            .unwrap_or(self.pending.len());
+        self.pending.insert(pos, req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Find the next request to map at time `now`: walk oldest-to-youngest,
+    /// return the first for which `can_map` holds; stop the walk at any
+    /// non-mappable request that is over the age threshold (it blocks).
+    /// Removes and returns the selected request.
+    pub fn take_next_mappable<F>(&mut self, now: TimeNs, mut can_map: F) -> Option<ModelRequest>
+    where
+        F: FnMut(&ModelRequest) -> bool,
+    {
+        for i in 0..self.pending.len() {
+            let req = &self.pending[i];
+            if can_map(req) {
+                return Some(self.pending.remove(i));
+            }
+            let age = now.saturating_sub(req.arrival_ns);
+            if age >= self.age_threshold_ns {
+                // Non-skippable: blocks all younger requests.
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Peek at pending requests (diagnostics).
+    pub fn pending(&self) -> &[ModelRequest] {
+        &self.pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, kind: ModelKind, arrival: TimeNs) -> ModelRequest {
+        ModelRequest { id, kind, arrival_ns: arrival, inferences: 1 }
+    }
+
+    #[test]
+    fn stream_is_deterministic_per_seed() {
+        let a = WorkloadStream::sample_cnns(50, 10, 1, 7);
+        let b = WorkloadStream::sample_cnns(50, 10, 1, 7);
+        let kinds_a: Vec<_> = a.requests.iter().map(|r| r.kind).collect();
+        let kinds_b: Vec<_> = b.requests.iter().map(|r| r.kind).collect();
+        assert_eq!(kinds_a, kinds_b);
+        assert_eq!(a.requests.len(), 50);
+    }
+
+    #[test]
+    fn stream_samples_all_four_kinds() {
+        let s = WorkloadStream::sample_cnns(100, 10, 1, 3);
+        for kind in ALL_CNNS {
+            assert!(s.requests.iter().any(|r| r.kind == kind), "{kind:?} missing");
+        }
+    }
+
+    #[test]
+    fn arbitration_prefers_oldest_mappable() {
+        let mut q = ArbitrationQueue::new(1_000_000);
+        q.push(req(0, ModelKind::ResNet50, 0));
+        q.push(req(1, ModelKind::AlexNet, 10));
+        q.push(req(2, ModelKind::ResNet18, 20));
+        // ResNet50 can't map; next oldest mappable is AlexNet.
+        let got = q
+            .take_next_mappable(100, |r| r.kind != ModelKind::ResNet50)
+            .unwrap();
+        assert_eq!(got.id, 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn over_age_request_blocks_younger() {
+        let mut q = ArbitrationQueue::new(1_000);
+        q.push(req(0, ModelKind::ResNet50, 0));
+        q.push(req(1, ModelKind::AlexNet, 10));
+        // Age of request 0 is 5000 >= threshold -> blocks, even though
+        // request 1 would map.
+        assert!(q.take_next_mappable(5_000, |r| r.kind != ModelKind::ResNet50).is_none());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn under_age_request_is_skippable() {
+        let mut q = ArbitrationQueue::new(1_000_000);
+        q.push(req(0, ModelKind::ResNet50, 0));
+        q.push(req(1, ModelKind::AlexNet, 10));
+        let got = q.take_next_mappable(100, |r| r.kind != ModelKind::ResNet50);
+        assert_eq!(got.unwrap().id, 1);
+    }
+}

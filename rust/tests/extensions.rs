@@ -1,0 +1,157 @@
+//! Tests for the extension features: link-utilization statistics and
+//! THERMOS-style thermal-aware mapping.
+
+use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
+use chipsim::mapping::{MemoryLedger, NearestNeighborMapper};
+use chipsim::noc::topology::Topology;
+use chipsim::noc::LinkUtilization;
+use chipsim::sim::GlobalManager;
+use chipsim::workload::{ModelKind, NeuralModel};
+
+fn params(pipelined: bool, inf: u32) -> SimParams {
+    SimParams {
+        pipelined,
+        inferences_per_model: inf,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    }
+}
+
+// ------------------------------------------------------ link utilization
+
+#[test]
+fn link_utilization_reported_and_bounded() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let report = GlobalManager::new(hw, params(true, 3))
+        .run(WorkloadConfig::cnn_stream(6, 3, 0xC0FFEE))
+        .unwrap();
+    let u = &report.link_util;
+    assert!(!u.per_link.is_empty());
+    assert!(u.per_link.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    assert!(u.peak > 0.0, "some link must have carried traffic");
+    assert!(u.peak >= u.mean);
+    assert!(u.hottest < u.per_link.len());
+}
+
+#[test]
+fn utilization_grows_with_load() {
+    let hw = HardwareConfig::homogeneous_mesh(8, 8);
+    let light = GlobalManager::new(hw.clone(), params(true, 1))
+        .run(WorkloadConfig::single(ModelKind::ResNet18))
+        .unwrap();
+    let heavy = GlobalManager::new(hw, params(true, 10))
+        .run(WorkloadConfig::cnn_stream(10, 10, 0xC0FFEE))
+        .unwrap();
+    assert!(
+        heavy.link_util.mean > light.link_util.mean,
+        "heavy {} !> light {}",
+        heavy.link_util.mean,
+        light.link_util.mean
+    );
+}
+
+#[test]
+fn link_utilization_from_busy_math() {
+    let u = LinkUtilization::from_busy(&[50, 100, 0, 25], 100);
+    assert_eq!(u.per_link, vec![0.5, 1.0, 0.0, 0.25]);
+    assert!((u.mean - 0.4375).abs() < 1e-12);
+    assert_eq!(u.hottest, 1);
+    assert_eq!(u.peak, 1.0);
+}
+
+// --------------------------------------------------- thermal-aware mapping
+
+#[test]
+fn heat_penalty_steers_mapping_away_from_hotspots() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let topo = Topology::build(&hw);
+    let model = NeuralModel::build(ModelKind::ResNet18);
+    // Cold baseline: which chiplets does the plain mapper pick?
+    let mut ledger = MemoryLedger::new(&hw);
+    let plain = NearestNeighborMapper::new(&hw, &topo)
+        .try_map(&model, &mut ledger)
+        .unwrap();
+    let plain_set: std::collections::HashSet<usize> =
+        plain.layers.iter().flatten().map(|s| s.chiplet).collect();
+    // Mark exactly those chiplets as scorching; remap with a strong
+    // penalty — the mapper must move the bulk of the model elsewhere.
+    let mut heat = vec![0.0; hw.num_chiplets()];
+    for &c in &plain_set {
+        heat[c] = 1_000.0;
+    }
+    let mut ledger2 = MemoryLedger::new(&hw);
+    let cooled = NearestNeighborMapper::new(&hw, &topo)
+        .with_heat(&heat, 50.0)
+        .try_map(&model, &mut ledger2)
+        .unwrap();
+    let cooled_set: std::collections::HashSet<usize> =
+        cooled.layers.iter().flatten().map(|s| s.chiplet).collect();
+    let overlap = plain_set.intersection(&cooled_set).count();
+    assert!(
+        overlap * 2 < plain_set.len(),
+        "thermal-aware mapping should avoid hot chiplets: {overlap}/{} reused",
+        plain_set.len()
+    );
+}
+
+#[test]
+fn zero_weight_heat_is_identical_to_plain() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let topo = Topology::build(&hw);
+    let model = NeuralModel::build(ModelKind::ResNet34);
+    let mut l1 = MemoryLedger::new(&hw);
+    let mut l2 = MemoryLedger::new(&hw);
+    let heat = vec![5.0; hw.num_chiplets()];
+    let a = NearestNeighborMapper::new(&hw, &topo).try_map(&model, &mut l1).unwrap();
+    // Uniform heat => identical ranking even with a non-zero weight.
+    let b = NearestNeighborMapper::new(&hw, &topo)
+        .with_heat(&heat, 10.0)
+        .try_map(&model, &mut l2)
+        .unwrap();
+    for (la, lb) in a.layers.iter().zip(&b.layers) {
+        let ca: Vec<usize> = la.iter().map(|s| s.chiplet).collect();
+        let cb: Vec<usize> = lb.iter().map(|s| s.chiplet).collect();
+        assert_eq!(ca, cb);
+    }
+}
+
+#[test]
+fn thermal_aware_cosim_spreads_energy() {
+    // With the flag on, a stream of identical models should spread heat
+    // over more chiplets (lower max per-chiplet energy share).
+    let hw = HardwareConfig::homogeneous_mesh(8, 8);
+    let run = |aware: f64| {
+        let mut p = params(false, 3);
+        p.thermal_aware_hops = aware;
+        let report = GlobalManager::new(hw.clone(), p)
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 5]))
+            .unwrap();
+        let per: Vec<f64> =
+            (0..64).map(|c| report.power.dynamic_energy_pj(c)).collect();
+        let total: f64 = per.iter().sum();
+        let max = per.iter().cloned().fold(0.0, f64::max);
+        (max / total, report.outcomes.len())
+    };
+    let (plain_share, n1) = run(0.0);
+    let (aware_share, n2) = run(8.0);
+    assert_eq!(n1, n2, "same number of models must complete");
+    assert!(
+        aware_share <= plain_share * 1.05,
+        "thermal-aware should not concentrate more: {aware_share} vs {plain_share}"
+    );
+}
+
+#[test]
+fn thermal_aware_keeps_correctness_invariants() {
+    let hw = HardwareConfig::heterogeneous_mesh(8, 8);
+    let mut p = params(true, 2);
+    p.thermal_aware_hops = 4.0;
+    let report = GlobalManager::new(hw, p)
+        .run(WorkloadConfig::cnn_stream(8, 2, 0xC0FFEE))
+        .unwrap();
+    assert_eq!(report.outcomes.len() + report.dropped.len(), 8);
+    for o in &report.outcomes {
+        assert_eq!(o.inference_latency_ns.len(), 2);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cross-module integration tests: workload → mapper → co-sim → power →
+//! thermal, plus baseline/co-sim relationships that the paper's
+//! evaluation depends on.
+
+use chipsim::baselines::BaselineEstimator;
+use chipsim::config::{HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
+use chipsim::metrics::inaccuracy_pct;
+use chipsim::sim::GlobalManager;
+use chipsim::thermal::{native::NativeSolver, ThermalModel};
+use chipsim::workload::{ModelKind, ALL_CNNS};
+
+fn params(pipelined: bool, inferences: u32) -> SimParams {
+    SimParams {
+        pipelined,
+        inferences_per_model: inferences,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    }
+}
+
+#[test]
+fn every_cnn_runs_end_to_end_on_the_paper_mesh() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    for kind in ALL_CNNS {
+        let report = GlobalManager::new(hw.clone(), params(false, 2))
+            .run(WorkloadConfig::single(kind))
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 1, "{kind:?}");
+        assert_eq!(report.outcomes[0].inference_latency_ns.len(), 2);
+        assert!(report.outcomes[0].mean_latency_ns() > 0.0);
+        assert!(report.compute_energy_pj > 0.0);
+        assert!(report.comm_energy_pj > 0.0);
+    }
+}
+
+#[test]
+fn vit_runs_on_the_io_corner_mesh() {
+    let hw = HardwareConfig::vit_mesh(10, 10);
+    let report = GlobalManager::new(hw, params(true, 2))
+        .run(WorkloadConfig::single(ModelKind::VitB16))
+        .unwrap();
+    assert_eq!(report.outcomes.len(), 1);
+    // Weight loading happens before inference 0 starts: mapped -> first
+    // inference start gap must be large (86 MB over the NoI).
+    let o = &report.outcomes[0];
+    assert!(o.finished_ns > o.mapped_ns);
+}
+
+#[test]
+fn pipelining_increases_throughput_but_not_below_single_inference_latency() {
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let seq = GlobalManager::new(hw.clone(), params(false, 8))
+        .run(WorkloadConfig::single(ModelKind::ResNet34))
+        .unwrap();
+    let pipe = GlobalManager::new(hw, params(true, 8))
+        .run(WorkloadConfig::single(ModelKind::ResNet34))
+        .unwrap();
+    let total_seq = seq.outcomes[0].finished_ns - seq.outcomes[0].mapped_ns;
+    let total_pipe = pipe.outcomes[0].finished_ns - pipe.outcomes[0].mapped_ns;
+    assert!(total_pipe < total_seq, "pipelined {total_pipe} !< sequential {total_seq}");
+}
+
+#[test]
+fn error_grows_with_inference_count_pipelined() {
+    // The paper's central claim (Fig. 6): baseline inaccuracy grows with
+    // utilization (inferences per model instance).
+    let hw = HardwareConfig::homogeneous_mesh(10, 10);
+    let mut base = BaselineEstimator::new(hw.clone());
+    let cc = base.comm_compute(ModelKind::ResNet18).unwrap().inference_latency_ns;
+    let mut errs = Vec::new();
+    for inf in [1u32, 10] {
+        let report = GlobalManager::new(hw.clone(), params(true, inf))
+            .run(WorkloadConfig::cnn_stream(12, inf, 0xC0FFEE))
+            .unwrap();
+        let cs = report.mean_latency_of(ModelKind::ResNet18).unwrap();
+        errs.push(inaccuracy_pct(cs, cc));
+    }
+    assert!(
+        errs[1] > errs[0],
+        "inaccuracy must grow with inferences: {errs:?}"
+    );
+}
+
+#[test]
+fn heterogeneous_mesh_shifts_time_toward_compute() {
+    let homog = HardwareConfig::homogeneous_mesh(10, 10);
+    let hetero = HardwareConfig::heterogeneous_mesh(10, 10);
+    let share = |hw: HardwareConfig| {
+        let report = GlobalManager::new(hw, params(true, 3))
+            .run(WorkloadConfig::cnn_stream(8, 3, 0xC0FFEE))
+            .unwrap();
+        let (comp, comm) = report.mean_compute_comm_of(ModelKind::ResNet18).unwrap();
+        comp / (comp + comm)
+    };
+    let s_homog = share(homog);
+    let s_hetero = share(hetero);
+    assert!(
+        s_hetero > s_homog,
+        "hetero compute share {s_hetero} !> homog {s_homog}"
+    );
+    // Paper §V-C1: computation reaches 42-54% of total on the hetero system.
+    assert!(s_hetero > 0.25, "hetero compute share too small: {s_hetero}");
+}
+
+#[test]
+fn floret_topology_runs_the_full_stream() {
+    let hw = HardwareConfig::floret(10, 10, 10);
+    let report = GlobalManager::new(hw, params(true, 2))
+        .run(WorkloadConfig::cnn_stream(8, 2, 0xC0FFEE))
+        .unwrap();
+    assert!(report.outcomes.len() >= 7);
+}
+
+#[test]
+fn flit_and_packet_fidelity_agree_on_ordering() {
+    // The flit engine is slower but must preserve the big picture: same
+    // models complete, latencies within a modest factor.
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let mut p_packet = params(false, 1);
+    p_packet.noc_fidelity = NocFidelity::Packet;
+    let mut p_flit = params(false, 1);
+    p_flit.noc_fidelity = NocFidelity::Flit;
+    let wl = WorkloadConfig::single(ModelKind::ResNet18);
+    let r_packet = GlobalManager::new(hw.clone(), p_packet).run(wl.clone()).unwrap();
+    let r_flit = GlobalManager::new(hw, p_flit).run(wl).unwrap();
+    let lp = r_packet.outcomes[0].mean_latency_ns();
+    let lf = r_flit.outcomes[0].mean_latency_ns();
+    let ratio = lf / lp;
+    assert!(
+        (0.4..=2.5).contains(&ratio),
+        "flit {lf} vs packet {lp} (ratio {ratio})"
+    );
+}
+
+#[test]
+fn power_profile_feeds_thermal_and_heats_busy_chiplets() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let report = GlobalManager::new(hw.clone(), params(true, 4))
+        .run(WorkloadConfig::cnn_stream(4, 4, 0xF00D))
+        .unwrap();
+    let tm = ThermalModel::build(&hw);
+    let stride = 10;
+    let rows = report.power.matrix_w(stride);
+    assert!(!rows.is_empty());
+    let solver = NativeSolver::new(&tm, stride as f64 * 1e-6).unwrap();
+    let steps: Vec<Vec<f64>> = rows.iter().map(|r| tm.node_power(r)).collect();
+    let traj = solver.transient(&vec![0.0; tm.n], &steps);
+    let last = traj.last().unwrap();
+    // Some chiplet must be above the floor (baseline idle power heats all).
+    let max_t = (0..hw.num_chiplets())
+        .map(|c| tm.chiplet_temp(last, c))
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(max_t > 0.0);
+}
+
+#[test]
+fn dropped_models_are_reported_not_lost() {
+    let hw = HardwareConfig::homogeneous_mesh(3, 3); // 18 MiB: AlexNet won't fit
+    let report = GlobalManager::new(hw, params(false, 1))
+        .run(WorkloadConfig::from_kinds(&[
+            ModelKind::ResNet18,
+            ModelKind::AlexNet,
+            ModelKind::ResNet18,
+        ]))
+        .unwrap();
+    let total = report.outcomes.len() + report.dropped.len();
+    assert_eq!(total, 3);
+    assert!(report.dropped.iter().any(|&(_, k)| k == ModelKind::AlexNet));
+}
+
+#[test]
+fn report_summary_renders() {
+    let hw = HardwareConfig::homogeneous_mesh(4, 4);
+    let report = GlobalManager::new(hw, params(false, 1))
+        .run(WorkloadConfig::single(ModelKind::ResNet18))
+        .unwrap();
+    let s = report.summary();
+    assert!(s.contains("ResNet18"));
+    assert!(s.contains("mean inference latency"));
+}
+
+#[test]
+fn hwemu_table7_shape_single_digit_percent() {
+    // Table VII's claim: CHIPSIM tracks the (emulated) hardware closely.
+    use chipsim::hwemu;
+    let traces = vec![hwemu::model_trace(ModelKind::AlexNet)];
+    let hw_t = hwemu::emulate(&traces);
+    let sim_t = hwemu::chipsim_ccd_run(&traces);
+    let diff = hwemu::percent_diff(sim_t[0], hw_t[0]);
+    assert!(diff < 15.0, "one-chiplet AlexNet diff {diff}%");
+}

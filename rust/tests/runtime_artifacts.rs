@@ -1,0 +1,139 @@
+//! PJRT runtime + AOT artifact integration: load the HLO-text artifacts
+//! produced by `make artifacts`, execute them, and cross-check against
+//! the in-process oracles.  These tests are skipped (with a notice) when
+//! artifacts have not been built.
+
+use chipsim::compute::{AnalyticalImc, ComputeBackend, SegmentWork};
+use chipsim::config::{ChipletTypeParams, HardwareConfig};
+use chipsim::runtime::Runtime;
+use chipsim::thermal::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
+use chipsim::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts` first): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_expected_entries() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for n in [64usize, 256, 640, 1024] {
+        assert!(rt.manifest.entries.contains_key(&format!("thermal_transient_n{n}")));
+        assert!(rt.manifest.entries.contains_key(&format!("thermal_steady_n{n}")));
+    }
+    assert!(rt.manifest.entries.contains_key("imc_batch_b128"));
+    assert_eq!(rt.manifest.constant_usize("transient_chunk"), Some(256));
+}
+
+#[test]
+fn pjrt_imc_backend_matches_analytical_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut pjrt = match chipsim::compute::pjrt::PjrtImcBackend::new(rt) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let mut oracle = AnalyticalImc;
+    let chiplet = ChipletTypeParams::imc_type_a();
+    let mut rng = Rng::new(42);
+    let works: Vec<SegmentWork> = (0..200)
+        .map(|_| SegmentWork {
+            macs: 1 + rng.below(100_000_000),
+            weight_bytes: rng.below(2_000_000),
+            in_bytes: rng.below(500_000),
+            out_elems: 1 + rng.below(500_000),
+            rows_used: 256,
+            cols_used: 256,
+        })
+        .collect();
+    let items: Vec<(&ChipletTypeParams, SegmentWork)> =
+        works.iter().map(|w| (&chiplet, *w)).collect();
+    let got = pjrt.evaluate_batch(&items);
+    for (w, r) in works.iter().zip(&got) {
+        let want = oracle.evaluate(&chiplet, w);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-9);
+        // f32 artifact vs f64 oracle.
+        assert!(rel(r.latency_ns, want.latency_ns) < 1e-4, "{r:?} vs {want:?}");
+        assert!(rel(r.energy_pj, want.energy_pj) < 1e-4);
+        assert!(rel(r.avg_power_mw, want.avg_power_mw) < 1e-3);
+    }
+}
+
+#[test]
+fn pjrt_thermal_transient_matches_native_solver() {
+    let hw = HardwareConfig::homogeneous_mesh(3, 3); // 36+200 nodes -> n_pad 256
+    let tm = ThermalModel::build(&hw);
+    let dt = 1e-5;
+    let mut pjrt = match PjrtThermalSolver::open_default(&tm, dt) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let native = NativeSolver::new(&tm, dt).unwrap();
+    let mut rng = Rng::new(3);
+    // 300 steps => spans two PJRT chunks (chunk = 256), exercising the
+    // carry logic.
+    let steps: Vec<Vec<f64>> = (0..300)
+        .map(|_| {
+            let chips: Vec<f64> = (0..hw.num_chiplets()).map(|_| rng.range_f64(0.0, 2.0)).collect();
+            tm.node_power(&chips)
+        })
+        .collect();
+    let want = native.transient(&vec![0.0; tm.n], &steps);
+    let got = pjrt.transient(&vec![0.0; tm.n], &steps).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+        for i in 0..tm.n {
+            let denom = w[i].abs().max(1e-3);
+            assert!(
+                (g[i] - w[i]).abs() / denom < 2e-3,
+                "step {k} node {i}: pjrt {} vs native {}",
+                g[i],
+                w[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_thermal_steady_matches_direct_solve() {
+    let hw = HardwareConfig::homogeneous_mesh(3, 3);
+    let tm = ThermalModel::build(&hw);
+    let mut pjrt = match PjrtThermalSolver::open_default(&tm, 1e-5) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    let p = tm.node_power(&vec![1.5; hw.num_chiplets()]);
+    let want = NativeSolver::steady(&tm, &p).unwrap();
+    let got = pjrt.steady(&p, 1e-10, 64).unwrap();
+    for i in 0..tm.n {
+        let rel = (got[i] - want[i]).abs() / want[i].abs().max(1e-6);
+        assert!(rel < 5e-3, "node {i}: {} vs {}", got[i], want[i]);
+    }
+}
+
+#[test]
+fn exec_rejects_shape_mismatch() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let bad = chipsim::runtime::F32Tensor::new(vec![2, 6], vec![0.0; 12]);
+    let params = chipsim::runtime::F32Tensor::new(vec![6], vec![0.0; 6]);
+    assert!(rt.exec_f32("imc_batch_b128", &[bad, params]).is_err());
+}
+
+#[test]
+fn exec_rejects_unknown_artifact() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    assert!(rt.exec_f32("nonexistent", &[]).is_err());
+}

@@ -8,15 +8,19 @@
 //! power, then reproduces the paper's headline result: the decoupled
 //! baselines underestimate end-to-end inference latency by a factor that
 //! grows with utilization — exceeding 100–340 % when pipelined.  All
-//! layers of the stack compose here: workload → mapper → co-sim loop →
-//! packet NoI → analytical IMC backend → power bins, and the resulting
+//! layers of the stack compose here through the builder API: workload →
+//! mapper → co-sim loop → packet NoI → analytical IMC backend → power
+//! bins (with a live `SimObserver` progress probe), and the resulting
 //! power profile is pushed through the AOT thermal artifact when
 //! available.  Results are recorded in EXPERIMENTS.md.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use chipsim::baselines::BaselineEstimator;
 use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
 use chipsim::metrics::inaccuracy_pct;
-use chipsim::sim::GlobalManager;
+use chipsim::sim::{EventCounter, Simulation};
 use chipsim::thermal::ThermalModel;
 use chipsim::util::benchkit::{fmt_ns, Table};
 use chipsim::workload::ALL_CNNS;
@@ -37,15 +41,22 @@ fn main() -> anyhow::Result<()> {
             cooldown_ns: 0,
             ..SimParams::default()
         };
+        let counter = Rc::new(RefCell::new(EventCounter::default()));
         let t0 = std::time::Instant::now();
-        let report = GlobalManager::new(hw.clone(), params)
+        let report = Simulation::builder()
+            .hardware(hw.clone())
+            .params(params)
+            .observer(counter.clone())
+            .build()?
             .run(WorkloadConfig::cnn_stream(n_models, 10, 0xC0FFEE))?;
         let mode = if pipelined { "pipelined" } else { "non-pipelined" };
         println!(
-            "== {mode}: {} models in {} simulated ({:?} wall) ==",
+            "== {mode}: {} models in {} simulated ({:?} wall; observer saw {} mapped / {} compute events) ==",
             report.outcomes.len(),
             fmt_ns(report.span_ns as f64),
-            t0.elapsed()
+            t0.elapsed(),
+            counter.borrow().mapped,
+            counter.borrow().compute_events,
         );
         let mut t = Table::new(
             &format!("baseline inaccuracy ({mode}, 10 inf/model)"),

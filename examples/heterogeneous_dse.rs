@@ -2,25 +2,17 @@
 //!
 //!     cargo run --release --example heterogeneous_dse
 //!
-//! Exercises CHIPSIM's modularity (paper §V-C): the same workload is
-//! co-simulated across homogeneous/heterogeneous chiplet mixes and
-//! mesh/Floret interconnects, reporting latency, energy, and utilization
-//! per design point — the loop an architect would run during early
-//! exploration.
+//! Exercises CHIPSIM's modularity (paper §V-C) through the scenario
+//! registry: each design point is registered as a named scenario, then
+//! the whole batch runs concurrently under `SweepRunner` with
+//! deterministic per-scenario seeds — the loop an architect would run
+//! during early exploration, at thread-pool speed.
 
-use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
-use chipsim::sim::GlobalManager;
+use chipsim::prelude::*;
 use chipsim::util::benchkit::{fmt_ns, Table};
-use chipsim::workload::ModelKind;
 
 fn main() -> anyhow::Result<()> {
     chipsim::util::logging::init();
-    let designs: Vec<(&str, HardwareConfig)> = vec![
-        ("mesh/homog-A", HardwareConfig::homogeneous_mesh(8, 8)),
-        ("mesh/hetero-AB", HardwareConfig::heterogeneous_mesh(8, 8)),
-        ("floret8/homog-A", HardwareConfig::floret(8, 8, 8)),
-        ("floret4/homog-A", HardwareConfig::floret(8, 8, 4)),
-    ];
     let params = SimParams {
         pipelined: true,
         inferences_per_model: 5,
@@ -28,18 +20,42 @@ fn main() -> anyhow::Result<()> {
         cooldown_ns: 0,
         ..SimParams::default()
     };
+    let mut registry = Registry::new();
+    let designs: Vec<(&str, fn() -> HardwareConfig)> = vec![
+        ("mesh/homog-A", || HardwareConfig::homogeneous_mesh(8, 8)),
+        ("mesh/hetero-AB", || HardwareConfig::heterogeneous_mesh(8, 8)),
+        ("floret8/homog-A", || HardwareConfig::floret(8, 8, 8)),
+        ("floret4/homog-A", || HardwareConfig::floret(8, 8, 4)),
+    ];
+    for (name, hw) in designs {
+        registry.register(Scenario::new(
+            name,
+            "DSE design point",
+            hw,
+            params.clone(),
+            |_seed| WorkloadConfig::cnn_stream(16, 5, 0xD5E),
+        ));
+    }
+
+    let t0 = std::time::Instant::now();
+    let outcomes = SweepRunner::new().run_all(&registry)?;
+    println!(
+        "{} design points co-simulated in {:.2} s wall (threaded)",
+        outcomes.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
     let mut t = Table::new(
         "DSE: 16-model CNN stream, pipelined, 5 inf/model",
         &["Design", "ResNet18 lat", "ResNet50 lat", "Makespan", "Energy (mJ)", "Util"],
     );
-    for (name, hw) in designs {
-        let report = GlobalManager::new(hw, params.clone())
-            .run(WorkloadConfig::cnn_stream(16, 5, 0xD5E))?;
+    for o in &outcomes {
+        let report = o.result.as_ref().expect("design point simulates");
         let lat = |k: ModelKind| {
-            report.mean_latency_of(k).map(|x| fmt_ns(x)).unwrap_or_else(|| "-".into())
+            report.mean_latency_of(k).map(fmt_ns).unwrap_or_else(|| "-".into())
         };
         t.row(vec![
-            name.into(),
+            o.scenario.clone(),
             lat(ModelKind::ResNet18),
             lat(ModelKind::ResNet50),
             fmt_ns(report.span_ns as f64),

@@ -2,18 +2,25 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Demonstrates the minimal public-API path: hardware preset → sim params
-//! → workload → GlobalManager → report.
+//! Demonstrates the two minimal public-API paths: a one-liner through the
+//! scenario registry, and the explicit `Simulation` builder chain
+//! (hardware → params → build → run → report).
 
 use chipsim::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     chipsim::util::logging::init();
 
-    // 6×6 homogeneous IMC mesh (NeuRRAM-like chiplets, X-Y routed NoI).
-    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    // Path 1 — the registry one-liner: every preset has a name.
+    let registry = Registry::builtin();
+    let scenario = registry.get("mesh-6x6-quickstart").expect("builtin scenario");
+    let report = scenario.run(0xBEEF)?;
+    println!("[registry] {}", report.summary());
 
-    // Pipelined execution, 5 back-to-back inferences per model.
+    // Path 2 — the builder: compose the same run explicitly.  Each part
+    // (mapper, network fidelity, compute backend, thermal, observers)
+    // defaults sensibly and can be swapped independently.
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
     let params = SimParams {
         pipelined: true,
         inferences_per_model: 5,
@@ -21,12 +28,10 @@ fn main() -> anyhow::Result<()> {
         cooldown_ns: 0,
         ..SimParams::default()
     };
-
-    // Stream of 8 CNNs sampled uniformly from the paper's four types.
     let workload = WorkloadConfig::cnn_stream(8, 5, 0xBEEF);
 
-    let mut manager = GlobalManager::new(hw, params);
-    let report = manager.run(workload)?;
+    let mut sim = Simulation::builder().hardware(hw).params(params).build()?;
+    let report = sim.run(workload)?;
 
     print!("{}", report.summary());
     println!("NoI bytes·hops moved: {}", report.noc_work);

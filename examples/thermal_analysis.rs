@@ -3,15 +3,15 @@
 //!     cargo run --release --example thermal_analysis
 //!
 //! Reproduces the paper's §V-D flow end to end: a pipelined co-simulation
-//! generates 1 µs per-chiplet power profiles; those feed the MFIT-analog
-//! RC network; the transient solve runs through the AOT JAX/Pallas
-//! artifact via PJRT (falling back to the native oracle without
-//! artifacts); and the end-of-run heatmap + per-chiplet temperatures are
-//! printed and written to the results directory.
+//! built with `.thermal(ThermalSpec::Auto { .. })` generates 1 µs
+//! per-chiplet power profiles and attaches a thermal summary to the
+//! report (AOT JAX/Pallas artifact via PJRT, native-oracle fallback).
+//! The full trajectory, heatmap, and steady-state solve below use the
+//! low-level solver API directly.
 
 use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
 use chipsim::metrics;
-use chipsim::sim::GlobalManager;
+use chipsim::sim::{Simulation, ThermalSpec};
 use chipsim::thermal::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
 
 fn main() -> anyhow::Result<()> {
@@ -25,13 +25,23 @@ fn main() -> anyhow::Result<()> {
         ..SimParams::default()
     };
     println!("co-simulating 20-model stream for the power profile...");
-    let report = GlobalManager::new(hw.clone(), params)
+    let report = Simulation::builder()
+        .hardware(hw.clone())
+        .params(params)
+        .thermal(ThermalSpec::Auto { stride_bins: 10 })
+        .build()?
         .run(WorkloadConfig::cnn_stream(20, 10, 0x7E47))?;
     println!(
         "  span {} ms, {} power bins",
         report.span_ns / 1_000_000,
         report.power.num_bins()
     );
+    if let Some(th) = &report.thermal {
+        println!(
+            "  builder thermal summary ({}, {} steps): hottest {:.2} °C, spread {:.2} K",
+            th.solver, th.steps, th.hottest_c, th.spread_k
+        );
+    }
 
     let tm = ThermalModel::build(&hw);
     let stride = 10; // 1 µs bins -> 10 µs thermal steps

@@ -5,18 +5,19 @@
 //! The 10×10 mesh dedicates its four corner chiplets as I/O dies hosting
 //! the 86 MB of ViT weights; mapping streams each layer's weights from
 //! the nearest corner (weight-stationary start-up), then pipelined input
-//! batches flow through the 25 transformer sub-layers.  Reports the
-//! weight-load vs inference-time split and the throughput scaling with
-//! input pipelining that Fig. 10 builds on.
+//! batches flow through the 25 transformer sub-layers.  The system comes
+//! from the `vit-pipeline` registry scenario; only the inference count is
+//! varied per design point.  Reports the weight-load vs inference-time
+//! split and the throughput scaling with input pipelining that Fig. 10
+//! builds on.
 
-use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
-use chipsim::sim::GlobalManager;
+use chipsim::prelude::*;
 use chipsim::util::benchkit::{fmt_ns, Table};
-use chipsim::workload::{ModelKind, NeuralModel};
 
 fn main() -> anyhow::Result<()> {
     chipsim::util::logging::init();
-    let hw = HardwareConfig::vit_mesh(10, 10);
+    let registry = Registry::builtin();
+    let scenario = registry.get("vit-pipeline").expect("builtin scenario");
     let model = NeuralModel::build(ModelKind::VitB16);
     println!(
         "ViT-B/16: {} layers, {:.1} MB weights, {:.1} GMACs/inference",
@@ -31,15 +32,13 @@ fn main() -> anyhow::Result<()> {
     );
     let mut first_total = 0.0f64;
     for inf in [1u32, 2, 5, 10, 20] {
-        let params = SimParams {
-            pipelined: true,
-            inferences_per_model: inf,
-            warmup_ns: 0,
-            cooldown_ns: 0,
-            ..SimParams::default()
-        };
-        let report = GlobalManager::new(hw.clone(), params)
-            .run(WorkloadConfig::single(ModelKind::VitB16))?;
+        let mut params = scenario.params();
+        params.inferences_per_model = inf;
+        let report = Simulation::builder()
+            .hardware(scenario.hardware())
+            .params(params)
+            .build()?
+            .run(scenario.workload(0))?;
         let o = &report.outcomes[0];
         let total = (o.finished_ns - o.mapped_ns) as f64;
         if inf == 1 {

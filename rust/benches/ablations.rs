@@ -11,9 +11,18 @@
 //! Run: `cargo bench --bench ablations`
 
 use chipsim::config::{HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::util::benchkit::{fmt_ns, Table};
 use chipsim::workload::ModelKind;
+
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid bench configuration")
+}
 
 fn params(pipelined: bool, inf: u32) -> SimParams {
     SimParams {
@@ -36,7 +45,7 @@ fn ablation_fidelity() {
         let mut p = params(false, 2);
         p.noc_fidelity = fid;
         let t0 = std::time::Instant::now();
-        let report = GlobalManager::new(hw.clone(), p)
+        let report = sim(hw.clone(), p)
             .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::ResNet18]))
             .unwrap();
         t.row(vec![
@@ -57,7 +66,7 @@ fn ablation_bandwidth() {
     for width in [8u64, 16, 32, 64, 128] {
         let mut hw = HardwareConfig::homogeneous_mesh(10, 10);
         hw.link.width_bytes = width;
-        let report = GlobalManager::new(hw, params(true, 5))
+        let report = sim(hw, params(true, 5))
             .run(WorkloadConfig::cnn_stream(8, 5, 0xC0FFEE))
             .unwrap();
         if let Some((comp, comm)) = report.mean_compute_comm_of(ModelKind::ResNet18) {
@@ -88,7 +97,7 @@ fn ablation_mapping_locality() {
     let mut star = HardwareConfig::homogeneous_mesh(6, 6);
     star.topology = chipsim::config::TopologyKind::Custom { links: star_links };
     for (name, hw) in [("mesh", mesh), ("hub-star", star)] {
-        let report = GlobalManager::new(hw, params(true, 3))
+        let report = sim(hw, params(true, 3))
             .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 3]))
             .unwrap();
         t.row(vec![

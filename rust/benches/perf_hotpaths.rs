@@ -17,11 +17,20 @@ use chipsim::noc::engine::PacketEngine;
 use chipsim::noc::flit::FlitEngine;
 use chipsim::noc::topology::{mesh, Topology};
 use chipsim::noc::{FlowSpec, NetworkSim};
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::thermal::{native::NativeSolver, ThermalModel};
 use chipsim::util::benchkit::{bench, fmt_ns};
 use chipsim::util::rng::Rng;
 use chipsim::workload::{ModelKind, NeuralModel};
+
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid bench configuration")
+}
 
 fn bench_packet_engine() {
     let topo = mesh(10, 10, &LinkParams::default());
@@ -93,7 +102,7 @@ fn bench_end_to_end() {
         ..SimParams::default()
     };
     let r = bench("cosim: 10-model pipelined stream on 10x10", 2, 2000, || {
-        let report = GlobalManager::new(hw.clone(), params.clone())
+        let report = sim(hw.clone(), params.clone())
             .run(WorkloadConfig::cnn_stream(10, 3, 0xAB))
             .unwrap();
         std::hint::black_box(report.span_ns);

@@ -214,7 +214,7 @@ mod tests {
     #[test]
     fn baseline_underestimates_cosim_with_parallel_models() {
         use crate::config::{SimParams, WorkloadConfig};
-        use crate::sim::GlobalManager;
+        use crate::sim::Simulation;
         let hw = HardwareConfig::homogeneous_mesh(10, 10);
         let mut b = BaselineEstimator::new(hw.clone());
         let base = b.comm_compute(ModelKind::ResNet18).unwrap();
@@ -225,7 +225,11 @@ mod tests {
             cooldown_ns: 0,
             ..SimParams::default()
         };
-        let report = GlobalManager::new(hw, params)
+        let report = Simulation::builder()
+            .hardware(hw)
+            .params(params)
+            .build()
+            .unwrap()
             .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 6]))
             .unwrap();
         let chipsim = report.mean_latency_of(ModelKind::ResNet18).unwrap();

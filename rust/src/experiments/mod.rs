@@ -14,7 +14,7 @@ use crate::baselines::BaselineEstimator;
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
 use crate::hwemu;
 use crate::metrics::{self, inaccuracy_pct, Csv};
-use crate::sim::{GlobalManager, SimReport};
+use crate::sim::{SimReport, Simulation};
 use crate::thermal::{native::NativeSolver, ThermalModel};
 use crate::util::benchkit::{fmt_ns, Table};
 use crate::workload::{ModelKind, ALL_CNNS};
@@ -45,7 +45,11 @@ fn params(pipelined: bool, inferences: u32) -> SimParams {
 }
 
 fn run_stream(hw: &HardwareConfig, pipelined: bool, inferences: u32, n_models: usize) -> SimReport {
-    GlobalManager::new(hw.clone(), params(pipelined, inferences))
+    Simulation::builder()
+        .hardware(hw.clone())
+        .params(params(pipelined, inferences))
+        .build()
+        .expect("experiment configuration")
         .run(WorkloadConfig::cnn_stream(n_models, inferences, STREAM_SEED))
         .expect("co-simulation")
 }
@@ -327,8 +331,13 @@ pub fn fig10(quick: bool) -> Table {
     );
     let mut csv = Csv::new(&["inferences", "chipsim_ns", "diff_comm_only_pct", "diff_comm_compute_pct"]);
     for &inf in sweep {
-        let mut gm = GlobalManager::new(hw.clone(), params(true, inf));
-        let report = gm.run(WorkloadConfig::single(ModelKind::VitB16)).expect("vit run");
+        let report = Simulation::builder()
+            .hardware(hw.clone())
+            .params(params(true, inf))
+            .build()
+            .expect("vit configuration")
+            .run(WorkloadConfig::single(ModelKind::VitB16))
+            .expect("vit run");
         // Total run time (weight load + pipelined inferences) compared to
         // the decoupled ideal-pipeline extrapolation: at 1 inference the
         // two coincide (no pipelined-input contention yet), and the gap

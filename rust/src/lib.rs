@@ -11,8 +11,9 @@
 //!
 //! ## Architecture (three layers, AOT via PJRT)
 //!
-//! * **L3 (this crate)** — the Global Manager co-simulation loop, the NoI
-//!   simulator, mapper, compute backends, power tracking, baselines, CLI.
+//! * **L3 (this crate)** — the [`sim::Simulation`] co-simulation loop, the
+//!   NoI simulator, pluggable mappers, compute backends, power tracking,
+//!   baselines, the scenario registry, CLI.
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
 //!   kernels for the thermal solver and the batched IMC estimator, lowered
 //!   once to HLO text under `artifacts/` by `make artifacts`.
@@ -22,17 +23,43 @@
 //!
 //! ## Quickstart
 //!
+//! Every co-simulation is assembled by the [`sim::Simulation`] builder;
+//! each part (mapper, network fidelity, compute backend, thermal
+//! coupling, observers) defaults sensibly and can be swapped
+//! independently:
+//!
 //! ```no_run
 //! use chipsim::prelude::*;
 //!
 //! let hw = HardwareConfig::homogeneous_mesh(4, 4);
-//! let wl = WorkloadConfig::cnn_stream(8, 3, 0xC0FFEE);
 //! let params = SimParams { pipelined: true, ..SimParams::default() };
-//! let report = chipsim::sim::GlobalManager::new(hw, params)
-//!     .run(wl)
-//!     .expect("simulation");
+//! let report = Simulation::builder()
+//!     .hardware(hw)
+//!     .params(params)
+//!     .build()
+//!     .expect("valid configuration")
+//!     .run(WorkloadConfig::cnn_stream(8, 10, 0xC0FFEE))
+//!     .expect("co-simulation");
 //! println!("{}", report.summary());
 //! ```
+//!
+//! Or run a named preset from the scenario registry — and whole batches
+//! of them, in parallel, with deterministic seeds:
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//!
+//! let reg = Registry::builtin();
+//! let report = reg.get("mesh-6x6-quickstart").unwrap().run(0xBEEF).unwrap();
+//! println!("{}", report.summary());
+//!
+//! let outcomes = SweepRunner::new()
+//!     .run(&reg, &["mesh-10x10-cnn", "hetero-mesh", "floret", "ccd-star"])
+//!     .unwrap();
+//! ```
+//!
+//! The pre-builder `sim::GlobalManager` entry point is deprecated and
+//! kept as a thin shim for one release; new code should not use it.
 //!
 //! See `examples/` for complete drivers and `rust/benches/` for the
 //! regeneration harness of every table and figure in the paper.
@@ -44,6 +71,7 @@ pub mod mapping;
 pub mod noc;
 pub mod compute;
 pub mod sim;
+pub mod scenario;
 pub mod power;
 pub mod thermal;
 pub mod baselines;
@@ -55,9 +83,17 @@ pub mod runtime;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::config::{
-        ChipletClass, HardwareConfig, LinkParams, SimParams, TopologyKind, WorkloadConfig,
+        ChipletClass, HardwareConfig, LinkParams, NocFidelity, SimParams, TopologyKind,
+        WorkloadConfig,
     };
-    pub use crate::sim::{GlobalManager, SimReport};
+    pub use crate::mapping::{MapContext, Mapper, NearestNeighbor};
+    pub use crate::scenario::{Registry, Scenario, SweepOutcome, SweepRunner};
+    pub use crate::sim::{
+        SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,
+    };
+    // Kept for the one-release deprecation window; usage still warns.
+    #[allow(deprecated)]
+    pub use crate::sim::GlobalManager;
     pub use crate::workload::{ModelKind, NeuralModel};
 }
 

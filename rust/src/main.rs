@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run          generic co-simulation run with configurable system/workload
+//!   scenarios    list the named presets in the scenario registry
+//!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
 //!   table4..8    regenerate the paper's tables (see DESIGN.md §6)
 //!   fig6..11     regenerate the paper's figures
@@ -10,7 +12,8 @@
 //!
 //! Examples:
 //!   chipsim run --rows 10 --cols 10 --models 50 --inferences 10 --pipelined
-//!   chipsim run --topo floret --noc flit --models 8
+//!   chipsim run --scenario vit-pipeline
+//!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
 
@@ -18,7 +21,8 @@ use chipsim::config::{
     ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, WorkloadConfig,
 };
 use chipsim::experiments;
-use chipsim::sim::GlobalManager;
+use chipsim::scenario::{self, Registry, SweepRunner};
+use chipsim::sim::Simulation;
 use chipsim::util::cli::{Args, HelpText};
 use chipsim::util::logging;
 
@@ -26,10 +30,13 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
+            ("--scenario NAME", "run a named registry scenario (see `chipsim scenarios`)"),
+            ("--scenarios a,b,c|all", "batch: which scenarios to run (default all)"),
+            ("--threads N", "batch: worker threads (default: all cores)"),
             ("--models N", "stream length (default 50)"),
             ("--inferences N", "back-to-back inferences per model (default 10)"),
             ("--pipelined", "enable layer pipelining"),
@@ -49,14 +56,9 @@ fn build_hw(args: &Args) -> anyhow::Result<HardwareConfig> {
     }
     let rows = args.get_usize("rows", 10)?;
     let cols = args.get_usize("cols", 10)?;
-    Ok(match args.get_or("topo", "mesh") {
-        "mesh" => HardwareConfig::homogeneous_mesh(rows, cols),
-        "hetero" => HardwareConfig::heterogeneous_mesh(rows, cols),
-        "floret" => HardwareConfig::floret(rows, cols, args.get_usize("petals", 10)?),
-        "vit" => HardwareConfig::vit_mesh(rows, cols),
-        "ccd" => HardwareConfig::ccd_star(args.get_usize("ccds", 8)?),
-        other => anyhow::bail!("unknown --topo '{other}'"),
-    })
+    let petals = args.get_usize("petals", 10)?;
+    let ccds = args.get_usize("ccds", 8)?;
+    scenario::hardware_preset(args.get_or("topo", "mesh"), rows, cols, petals, ccds)
 }
 
 fn build_params(args: &Args) -> anyhow::Result<SimParams> {
@@ -81,26 +83,97 @@ fn build_params(args: &Args) -> anyhow::Result<SimParams> {
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let hw = build_hw(args)?;
-    let params = build_params(args)?;
-    let n = args.get_usize("models", 50)?;
-    let seed = params.seed;
-    let inferences = params.inferences_per_model;
-    let wl = match args.get("model") {
-        Some(name) => {
-            let kind = chipsim::workload::ModelKind::from_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
-            WorkloadConfig::single(kind)
+    let report = if let Some(name) = args.get("scenario") {
+        // A scenario bundles hardware + params + workload; flags that
+        // would override those pieces are rejected, not silently eaten.
+        let fixed_by_scenario = [
+            "topo", "rows", "cols", "models", "inferences", "noc", "compute", "hw", "model",
+            "petals", "ccds",
+        ];
+        for opt in fixed_by_scenario {
+            anyhow::ensure!(
+                args.get(opt).is_none(),
+                "--{opt} conflicts with --scenario '{name}' (the scenario fixes it); \
+                 drop --scenario or use the generic flags alone"
+            );
         }
-        None => WorkloadConfig::cnn_stream(n, inferences, seed),
+        anyhow::ensure!(
+            !args.flag("pipelined"),
+            "--pipelined conflicts with --scenario '{name}' (the scenario fixes it)"
+        );
+        let reg = Registry::builtin();
+        let sc = reg.get(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+        })?;
+        let seed = args.get_u64("seed", sc.default_seed)?;
+        sc.run(seed)?
+    } else {
+        let hw = build_hw(args)?;
+        let params = build_params(args)?;
+        let n = args.get_usize("models", 50)?;
+        let seed = params.seed;
+        let inferences = params.inferences_per_model;
+        let wl = match args.get("model") {
+            Some(name) => {
+                let kind = chipsim::workload::ModelKind::from_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+                WorkloadConfig::single(kind)
+            }
+            None => WorkloadConfig::cnn_stream(n, inferences, seed),
+        };
+        Simulation::builder().hardware(hw).params(params).build()?.run(wl)?
     };
-    let mut gm = GlobalManager::new(hw, params);
-    let report = gm.run(wl)?;
     print!("{}", report.summary());
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.power.num_chiplets()).collect();
         std::fs::write(path, report.power.to_csv(&chiplets))?;
         println!("power trace written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_scenarios() {
+    let reg = Registry::builtin();
+    println!("registered scenarios ({}):", reg.len());
+    for sc in reg.iter() {
+        println!("  {:<22} {}", sc.name, sc.about);
+    }
+    println!(
+        "\nrun one:    chipsim run --scenario NAME [--seed S]\
+         \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]"
+    );
+}
+
+fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let reg = Registry::builtin();
+    let names: Vec<String> = match args.get("scenarios") {
+        None | Some("all") => reg.names().iter().map(|s| s.to_string()).collect(),
+        Some(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+    };
+    let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let runner = SweepRunner::new()
+        .threads(args.get_usize("threads", 0)?)
+        .base_seed(args.get_u64("seed", 0xC0FFEE)?);
+    let t0 = std::time::Instant::now();
+    let outcomes = runner.run(&reg, &refs)?;
+    println!(
+        "batch: {} scenarios in {:.2} s wall",
+        outcomes.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    for o in &outcomes {
+        match &o.result {
+            Ok(r) => println!(
+                "  {:<22} seed {:#018x}  {} models, {} dropped, span {:.3} ms, {:.2} mJ",
+                o.scenario,
+                o.seed,
+                r.outcomes.len(),
+                r.dropped.len(),
+                r.span_ns as f64 / 1e6,
+                (r.compute_energy_pj + r.comm_energy_pj) / 1e9,
+            ),
+            Err(e) => println!("  {:<22} FAILED: {e:#}", o.scenario),
+        }
     }
     Ok(())
 }
@@ -122,9 +195,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         "mean_resnet18_lat_us", "energy_mj", "mean_util_pct", "peak_link_util_pct",
     ]);
     let presets: Vec<(&str, HardwareConfig)> = vec![
-        ("mesh", HardwareConfig::homogeneous_mesh(rows, cols)),
-        ("hetero", HardwareConfig::heterogeneous_mesh(rows, cols)),
-        ("floret", HardwareConfig::floret(rows, cols, rows)),
+        ("mesh", scenario::hardware_preset("mesh", rows, cols, rows, 8)?),
+        ("hetero", scenario::hardware_preset("hetero", rows, cols, rows, 8)?),
+        ("floret", scenario::hardware_preset("floret", rows, cols, rows, 8)?),
     ];
     for (name, base_hw) in &presets {
         for &w in &widths {
@@ -139,7 +212,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
                     seed,
                     ..SimParams::default()
                 };
-                let report = GlobalManager::new(hw, params)
+                let report = Simulation::builder()
+                    .hardware(hw)
+                    .params(params)
+                    .build()?
                     .run(WorkloadConfig::cnn_stream(n, inferences, seed))?;
                 let lat = report
                     .mean_latency_of(chipsim::workload::ModelKind::ResNet18)
@@ -190,6 +266,8 @@ fn main() -> anyhow::Result<()> {
     let cmd = args.positionals[0].as_str();
     match cmd {
         "run" => cmd_run(&args)?,
+        "scenarios" => cmd_scenarios(),
+        "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,
         "table4" => experiments::table4(quick).print(),
         "fig6" => experiments::fig6(quick).print(),

@@ -112,6 +112,67 @@ impl MemoryLedger {
     }
 }
 
+// ------------------------------------------------------------ Mapper trait
+
+/// Read-only context handed to a [`Mapper`] on every placement attempt.
+///
+/// The co-simulation loop rebuilds this per attempt so the mapper always
+/// sees the *current* system state (the thermal proxy in particular
+/// changes as the run heats chiplets up).
+pub struct MapContext<'a> {
+    pub hw: &'a HardwareConfig,
+    pub topo: &'a Topology,
+    /// Per-chiplet heat proxy (the Global Manager passes accumulated
+    /// dynamic energy) when thermal-aware mapping is enabled.
+    pub heat: Option<&'a [f64]>,
+    /// Hops of locality the mapper may trade to avoid the hottest chiplet.
+    pub heat_weight_hops: f64,
+}
+
+/// Pluggable mapping policy: how a model's layers land on chiplets.
+///
+/// Implementations must be pure placement policies: on success the ledger
+/// reflects the allocation, on `None` it must be left untouched.  The
+/// default is [`NearestNeighbor`]; inject alternatives through
+/// `Simulation::builder().mapper(...)`.
+pub trait Mapper {
+    fn name(&self) -> &'static str;
+
+    /// Try to place the whole model; `None` (ledger untouched) if it does
+    /// not fit right now.
+    fn try_map(
+        &self,
+        ctx: &MapContext,
+        model: &NeuralModel,
+        ledger: &mut MemoryLedger,
+    ) -> Option<ModelMapping>;
+}
+
+/// Stateless default policy: the Simba-style [`NearestNeighborMapper`]
+/// behind the [`Mapper`] trait (honours the thermal-aware context).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NearestNeighbor;
+
+impl Mapper for NearestNeighbor {
+    fn name(&self) -> &'static str {
+        "nearest-neighbor"
+    }
+
+    fn try_map(
+        &self,
+        ctx: &MapContext,
+        model: &NeuralModel,
+        ledger: &mut MemoryLedger,
+    ) -> Option<ModelMapping> {
+        let m = NearestNeighborMapper::new(ctx.hw, ctx.topo);
+        let m = match ctx.heat {
+            Some(h) if ctx.heat_weight_hops > 0.0 => m.with_heat(h, ctx.heat_weight_hops),
+            _ => m,
+        };
+        m.try_map(model, ledger)
+    }
+}
+
 /// The Simba-style nearest-neighbour mapper, with an optional
 /// **thermal-aware** extension (the THERMOS [7] direction the paper
 /// cites): candidate chiplets are ranked by hop distance *plus* a heat
@@ -355,6 +416,22 @@ mod tests {
         for seg in mapping.layers.iter().flatten() {
             assert!(!hw.io_chiplets.contains(&seg.chiplet));
         }
+    }
+
+    #[test]
+    fn trait_object_matches_concrete_mapper() {
+        let (hw, topo) = setup(10, 10);
+        let ctx = MapContext { hw: &hw, topo: &topo, heat: None, heat_weight_hops: 0.0 };
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        let mut l1 = MemoryLedger::new(&hw);
+        let mut l2 = MemoryLedger::new(&hw);
+        let mapper: Box<dyn Mapper> = Box::new(NearestNeighbor);
+        let a = mapper.try_map(&ctx, &m, &mut l1).expect("fits");
+        let b = NearestNeighborMapper::new(&hw, &topo).try_map(&m, &mut l2).expect("fits");
+        let ca: Vec<usize> = a.layers.iter().flatten().map(|s| s.chiplet).collect();
+        let cb: Vec<usize> = b.layers.iter().flatten().map(|s| s.chiplet).collect();
+        assert_eq!(ca, cb);
+        assert_eq!(l1.total_free(), l2.total_free());
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! One compiled executable is cached per artifact name; compilation
 //! happens lazily on first use.  Python is never involved at runtime.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, Value};
@@ -115,10 +117,18 @@ impl F32Tensor {
 }
 
 /// The PJRT runtime: CPU client + artifact registry + executable cache.
+///
+/// The xla-backed client is gated behind the `pjrt` cargo feature (the
+/// `xla` crate and its native archive are not vendored in this offline
+/// build).  Without the feature the registry/manifest half still works;
+/// [`Runtime::exec_f32`] returns an actionable error instead.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// Dispatch counter (perf accounting).
     pub dispatches: u64,
@@ -148,9 +158,14 @@ impl Runtime {
             manifest_path.display()
         );
         let manifest = Manifest::parse(&json::parse_file(&manifest_path)?)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
-        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), dispatches: 0 })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+            Ok(Runtime { client, dir, manifest, cache: HashMap::new(), dispatches: 0 })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Ok(Runtime { dir, manifest, dispatches: 0 })
     }
 
     /// Open at the default directory.
@@ -158,6 +173,7 @@ impl Runtime {
         Self::open(Self::default_dir())
     }
 
+    #[cfg(feature = "pjrt")]
     fn compile(&mut self, name: &str) -> anyhow::Result<()> {
         if self.cache.contains_key(name) {
             return Ok(());
@@ -182,6 +198,17 @@ impl Runtime {
 
     /// Execute artifact `name` with f32 inputs; returns the output tuple
     /// as flat f32 vectors.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn exec_f32(&mut self, name: &str, _inputs: &[F32Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!(
+            "cannot execute artifact '{name}': chipsim was built without the `pjrt` \
+             feature (add the `xla` dependency and build with `--features pjrt`)"
+        )
+    }
+
+    /// Execute artifact `name` with f32 inputs; returns the output tuple
+    /// as flat f32 vectors.
+    #[cfg(feature = "pjrt")]
     pub fn exec_f32(&mut self, name: &str, inputs: &[F32Tensor]) -> anyhow::Result<Vec<Vec<f32>>> {
         self.compile(name)?;
         let entry = &self.manifest.entries[name];

@@ -1,0 +1,452 @@
+//! Named scenarios and the parallel sweep runner.
+//!
+//! A [`Scenario`] bundles the three inputs of a CHIPSIM run — hardware,
+//! parameters, and a seeded workload — under a stable name, so fidelity
+//! and topology combinations are one-liners instead of hand-assembled
+//! preset code duplicated across `main.rs`, `experiments/`, and the
+//! examples.  [`Registry::builtin`] names every preset the repository
+//! ships; register your own with [`Registry::register`].
+//!
+//! [`SweepRunner`] executes a batch of scenarios across threads with
+//! deterministic per-scenario seeds: because every scenario run is an
+//! independent, fully-seeded simulation, the parallel results are
+//! byte-identical to a sequential sweep (asserted by
+//! `rust/tests/builder_api.rs`).
+//!
+//! ```no_run
+//! use chipsim::scenario::{Registry, SweepRunner};
+//!
+//! let reg = Registry::builtin();
+//! let report = reg.get("mesh-10x10-cnn").unwrap().run(0xC0FFEE).unwrap();
+//! println!("{}", report.summary());
+//!
+//! let outcomes = SweepRunner::new()
+//!     .threads(4)
+//!     .run(&reg, &["mesh-10x10-cnn", "hetero-mesh", "floret", "vit-pipeline"])
+//!     .unwrap();
+//! for o in &outcomes {
+//!     println!("{}: {:?} models", o.scenario, o.result.as_ref().map(|r| r.outcomes.len()));
+//! }
+//! ```
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
+use crate::sim::{SimReport, Simulation};
+use crate::util::rng::Rng;
+use crate::workload::ModelKind;
+
+type HwFn = Arc<dyn Fn() -> HardwareConfig + Send + Sync>;
+type WlFn = Arc<dyn Fn(u64) -> WorkloadConfig + Send + Sync>;
+
+/// Construct one of the named hardware presets.  This is the single
+/// source of truth used by `chipsim run --topo ...`, the builtin
+/// registry, and the examples (`petals`/`ccds` are ignored by presets
+/// that do not need them).
+pub fn hardware_preset(
+    name: &str,
+    rows: usize,
+    cols: usize,
+    petals: usize,
+    ccds: usize,
+) -> anyhow::Result<HardwareConfig> {
+    Ok(match name {
+        "mesh" => HardwareConfig::homogeneous_mesh(rows, cols),
+        "hetero" => HardwareConfig::heterogeneous_mesh(rows, cols),
+        "floret" => HardwareConfig::floret(rows, cols, petals),
+        "vit" => HardwareConfig::vit_mesh(rows, cols),
+        "ccd" => HardwareConfig::ccd_star(ccds),
+        other => anyhow::bail!(
+            "unknown hardware preset '{other}' (expected mesh|hetero|floret|vit|ccd)"
+        ),
+    })
+}
+
+/// A named, reproducible co-simulation setup.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// One-line description shown by `chipsim scenarios`.
+    pub about: String,
+    hardware: HwFn,
+    params: SimParams,
+    workload: WlFn,
+    /// Seed used when the caller does not supply one.
+    pub default_seed: u64,
+}
+
+impl Scenario {
+    pub fn new(
+        name: &str,
+        about: &str,
+        hardware: impl Fn() -> HardwareConfig + Send + Sync + 'static,
+        params: SimParams,
+        workload: impl Fn(u64) -> WorkloadConfig + Send + Sync + 'static,
+    ) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            about: about.to_string(),
+            hardware: Arc::new(hardware),
+            params,
+            workload: Arc::new(workload),
+            default_seed: 0xC0FFEE,
+        }
+    }
+
+    pub fn with_default_seed(mut self, seed: u64) -> Scenario {
+        self.default_seed = seed;
+        self
+    }
+
+    /// Instantiate the scenario's hardware configuration.
+    pub fn hardware(&self) -> HardwareConfig {
+        (self.hardware)()
+    }
+
+    pub fn params(&self) -> SimParams {
+        self.params.clone()
+    }
+
+    /// Instantiate the scenario's workload for a seed.
+    pub fn workload(&self, seed: u64) -> WorkloadConfig {
+        (self.workload)(seed)
+    }
+
+    /// Assemble a runnable [`Simulation`] for this scenario.
+    pub fn build(&self) -> anyhow::Result<Simulation> {
+        Simulation::builder().hardware(self.hardware()).params(self.params()).build()
+    }
+
+    /// Build and run to completion with the given workload seed.
+    pub fn run(&self, seed: u64) -> anyhow::Result<SimReport> {
+        self.build()?.run(self.workload(seed))
+    }
+}
+
+/// Ordered, name-addressed collection of scenarios.
+pub struct Registry {
+    scenarios: Vec<Scenario>,
+}
+
+impl Registry {
+    /// An empty registry (compose your own scenario set).
+    pub fn new() -> Registry {
+        Registry { scenarios: Vec::new() }
+    }
+
+    /// Every preset the repository ships, replacing the ad-hoc
+    /// construction previously duplicated across `main.rs::build_hw`,
+    /// `experiments/`, and the examples.
+    pub fn builtin() -> Registry {
+        let mut reg = Registry::new();
+        let pipelined = |inf: u32| SimParams {
+            pipelined: true,
+            inferences_per_model: inf,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        reg.register(Scenario::new(
+            "mesh-10x10-cnn",
+            "paper §V-B primary system: 10x10 type-A mesh, pipelined CNN stream",
+            || hardware_preset("mesh", 10, 10, 0, 0).expect("builtin preset"),
+            pipelined(5),
+            |seed| WorkloadConfig::cnn_stream(12, 5, seed),
+        ));
+        reg.register(Scenario::new(
+            "mesh-6x6-quickstart",
+            "small homogeneous mesh, 8-model CNN stream (the README quickstart)",
+            || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+            pipelined(5),
+            |seed| WorkloadConfig::cnn_stream(8, 5, seed),
+        ));
+        reg.register(Scenario::new(
+            "hetero-mesh",
+            "paper §V-C1: 8x8 checkerboard of type-A/type-B IMC chiplets",
+            || hardware_preset("hetero", 8, 8, 0, 0).expect("builtin preset"),
+            pipelined(5),
+            |seed| WorkloadConfig::cnn_stream(12, 5, seed),
+        ));
+        reg.register(Scenario::new(
+            "floret",
+            "paper §V-C2: 8x8 chiplets on the Floret space-filling NoI",
+            || hardware_preset("floret", 8, 8, 8, 0).expect("builtin preset"),
+            pipelined(5),
+            |seed| WorkloadConfig::cnn_stream(12, 5, seed),
+        ));
+        reg.register(Scenario::new(
+            "vit-pipeline",
+            "paper §V-E: ViT-B/16 weight-stationary, corner I/O dies, input pipelining",
+            || hardware_preset("vit", 10, 10, 0, 0).expect("builtin preset"),
+            pipelined(10),
+            |_seed| WorkloadConfig::single(ModelKind::VitB16),
+        ));
+        reg.register(Scenario::new(
+            "ccd-star",
+            "paper §V-F: Threadripper-like 8-CCD star, CPU backend validation workload",
+            || hardware_preset("ccd", 0, 0, 0, 8).expect("builtin preset"),
+            SimParams {
+                inferences_per_model: 2,
+                warmup_ns: 0,
+                cooldown_ns: 0,
+                ..SimParams::default()
+            },
+            |_seed| {
+                WorkloadConfig::from_kinds(&[
+                    ModelKind::AlexNet,
+                    ModelKind::ResNet18,
+                    ModelKind::ResNet34,
+                    ModelKind::ResNet50,
+                ])
+            },
+        ));
+        reg.register(Scenario::new(
+            "flit-validation",
+            "4x4 mesh at flit-level wormhole fidelity (validation runs)",
+            || hardware_preset("mesh", 4, 4, 0, 0).expect("builtin preset"),
+            SimParams {
+                inferences_per_model: 2,
+                warmup_ns: 0,
+                cooldown_ns: 0,
+                noc_fidelity: crate::config::NocFidelity::Flit,
+                ..SimParams::default()
+            },
+            |_seed| WorkloadConfig::single(ModelKind::ResNet18),
+        ));
+        reg.register(Scenario::new(
+            "thermal-hotspot",
+            "6x6 mesh with THERMOS-style thermal-aware mapping enabled",
+            || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+            SimParams {
+                pipelined: true,
+                inferences_per_model: 3,
+                warmup_ns: 0,
+                cooldown_ns: 0,
+                thermal_aware_hops: 2.0,
+                ..SimParams::default()
+            },
+            |seed| WorkloadConfig::cnn_stream(8, 3, seed),
+        ));
+        reg
+    }
+
+    /// Add (or replace, by name) a scenario.
+    pub fn register(&mut self, scenario: Scenario) {
+        match self.scenarios.iter_mut().find(|s| s.name == scenario.name) {
+            Some(slot) => *slot = scenario,
+            None => self.scenarios.push(scenario),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Scenario> {
+        self.scenarios.iter().find(|s| s.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.scenarios.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Scenario> {
+        self.scenarios.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.scenarios.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+/// Result of one scenario inside a sweep.
+pub struct SweepOutcome {
+    pub scenario: String,
+    /// The derived per-scenario workload seed actually used.
+    pub seed: u64,
+    pub result: anyhow::Result<SimReport>,
+}
+
+/// Executes a batch of registry scenarios, optionally across threads.
+///
+/// Per-scenario seeds derive deterministically from `(base_seed, name)`,
+/// and every scenario run owns its whole simulation state, so thread
+/// scheduling cannot perturb results: `run` and `run_sequential` return
+/// byte-identical reports in the same input order.
+pub struct SweepRunner {
+    threads: usize,
+    base_seed: u64,
+}
+
+impl SweepRunner {
+    pub fn new() -> SweepRunner {
+        SweepRunner { threads: 0, base_seed: 0xC0FFEE }
+    }
+
+    /// Worker thread count; 0 (default) uses the available parallelism.
+    pub fn threads(mut self, n: usize) -> SweepRunner {
+        self.threads = n;
+        self
+    }
+
+    pub fn base_seed(mut self, seed: u64) -> SweepRunner {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Deterministic per-scenario seed: FNV-1a of the name mixed into the
+    /// base seed through one PRNG round (avalanches nearby names apart).
+    pub fn seed_for(&self, name: &str) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Rng::new(self.base_seed ^ h).next_u64()
+    }
+
+    fn resolve<'a>(
+        &self,
+        registry: &'a Registry,
+        names: &[&str],
+    ) -> anyhow::Result<Vec<&'a Scenario>> {
+        names
+            .iter()
+            .map(|&n| {
+                registry.get(n).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scenario '{n}' (registered: {})",
+                        registry.names().join(", ")
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// Run the named scenarios across worker threads.  Outcomes are
+    /// returned in input order regardless of completion order.
+    pub fn run(&self, registry: &Registry, names: &[&str]) -> anyhow::Result<Vec<SweepOutcome>> {
+        let scenarios = self.resolve(registry, names)?;
+        let jobs: Vec<(&Scenario, u64)> =
+            scenarios.iter().map(|s| (*s, self.seed_for(&s.name))).collect();
+        let workers = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+        .min(jobs.len().max(1));
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<SweepOutcome>>> =
+            Mutex::new((0..jobs.len()).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::SeqCst);
+                    if i >= jobs.len() {
+                        break;
+                    }
+                    let (sc, seed) = jobs[i];
+                    let outcome = SweepOutcome {
+                        scenario: sc.name.clone(),
+                        seed,
+                        result: sc.run(seed),
+                    };
+                    slots.lock().expect("sweep slot lock")[i] = Some(outcome);
+                });
+            }
+        });
+        Ok(slots
+            .into_inner()
+            .expect("sweep slots")
+            .into_iter()
+            .map(|o| o.expect("every sweep job writes its slot"))
+            .collect())
+    }
+
+    /// Same batch on the calling thread (reference for determinism tests).
+    pub fn run_sequential(
+        &self,
+        registry: &Registry,
+        names: &[&str],
+    ) -> anyhow::Result<Vec<SweepOutcome>> {
+        let scenarios = self.resolve(registry, names)?;
+        Ok(scenarios
+            .into_iter()
+            .map(|sc| {
+                let seed = self.seed_for(&sc.name);
+                SweepOutcome { scenario: sc.name.clone(), seed, result: sc.run(seed) }
+            })
+            .collect())
+    }
+
+    /// Run every scenario registered in `registry`.
+    pub fn run_all(&self, registry: &Registry) -> anyhow::Result<Vec<SweepOutcome>> {
+        let names = registry.names();
+        self.run(registry, &names)
+    }
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registry_names_the_paper_presets() {
+        let reg = Registry::builtin();
+        for name in ["mesh-10x10-cnn", "hetero-mesh", "floret", "vit-pipeline", "ccd-star"] {
+            assert!(reg.get(name).is_some(), "missing builtin scenario '{name}'");
+        }
+        assert!(reg.len() >= 6);
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        let mut reg = Registry::builtin();
+        let n = reg.len();
+        reg.register(Scenario::new(
+            "floret",
+            "replacement",
+            || HardwareConfig::homogeneous_mesh(2, 2),
+            SimParams::default(),
+            |_| WorkloadConfig::from_kinds(&[]),
+        ));
+        assert_eq!(reg.len(), n);
+        assert_eq!(reg.get("floret").unwrap().about, "replacement");
+    }
+
+    #[test]
+    fn seed_derivation_is_stable_and_name_sensitive() {
+        let r = SweepRunner::new().base_seed(42);
+        assert_eq!(r.seed_for("floret"), r.seed_for("floret"));
+        assert_ne!(r.seed_for("floret"), r.seed_for("floret2"));
+        let r2 = SweepRunner::new().base_seed(43);
+        assert_ne!(r.seed_for("floret"), r2.seed_for("floret"));
+    }
+
+    #[test]
+    fn unknown_scenario_is_an_error() {
+        let reg = Registry::builtin();
+        let err = SweepRunner::new().run(&reg, &["no-such-scenario"]).err();
+        assert!(err.is_some());
+        assert!(err.unwrap().to_string().contains("no-such-scenario"));
+    }
+
+    #[test]
+    fn hardware_preset_rejects_unknown_names() {
+        assert!(hardware_preset("torus", 4, 4, 0, 0).is_err());
+        assert!(hardware_preset("mesh", 4, 4, 0, 0).is_ok());
+    }
+}

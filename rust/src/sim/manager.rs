@@ -1,669 +1,135 @@
-//! The Global Manager: CHIPSIM's co-simulation event loop (paper §III).
+//! Deprecated `GlobalManager` shim over the [`Simulation`] builder API.
+//!
+//! The co-simulation event loop (paper §III) lives in
+//! [`crate::sim::simulation`]; this wrapper preserves the pre-builder
+//! entry point for one release so downstream drivers migrate at their
+//! own pace:
+//!
+//! ```text
+//! GlobalManager::new(hw, params).run(wl)          // old
+//! Simulation::builder().hardware(hw).params(params)
+//!     .build()?.run(wl)                            // new
+//! ```
+//!
+//! Unlike the pre-builder constructor, this shim never panics on backend
+//! construction: if the configured backend cannot be opened (e.g. PJRT
+//! without `make artifacts`), it logs the builder's error and falls back
+//! to the analytical backend.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
-use std::time::Instant;
+use crate::compute::ComputeBackend;
+use crate::config::{ComputeBackendKind, HardwareConfig, SimParams, WorkloadConfig};
+use crate::noc::topology::Topology;
+use crate::sim::report::SimReport;
+use crate::sim::simulation::Simulation;
 
-use crate::compute::{ClassDispatchBackend, ComputeBackend, ComputeResult};
-use crate::config::{ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
-use crate::mapping::{MemoryLedger, ModelMapping, NearestNeighborMapper};
-use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
-use crate::noc::{FlowId, FlowSpec, NetworkSim};
-use crate::power::PowerTracker;
-use crate::sim::report::{ModelOutcome, SimReport};
-use crate::workload::{ArbitrationQueue, ModelRequest, NeuralModel, WorkloadStream};
-use crate::TimeNs;
-
-/// Pipeline double-buffering depth: a stage may run at most this many
-/// inferences ahead of its downstream consumer.
-const PIPELINE_CREDITS: u32 = 2;
-
-/// Sentinel "layer" index for ViT weight-load flows.
-const WEIGHT_LAYER: usize = usize::MAX;
-
-// ----------------------------------------------------------------- events
-
-#[derive(Debug, Clone, PartialEq, Eq)]
-enum Event {
-    /// A model request enters the arbitration queue.
-    Arrive(usize),
-    /// Re-run arbitration (after an unmap or arrival).
-    TryMap,
-    /// A segment's compute finished on its chiplet.
-    ComputeDone { inst: usize, layer: usize, seg: usize, inference: u32 },
-}
-
-#[derive(Debug, Clone, PartialEq, Eq)]
-struct QEntry {
-    t: TimeNs,
-    seq: u64,
-    ev: Event,
-}
-
-impl Ord for QEntry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.t, self.seq).cmp(&(other.t, other.seq))
-    }
-}
-impl PartialOrd for QEntry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-// ------------------------------------------------------------- run state
-
-#[derive(Debug, Default, Clone)]
-struct LayerRuntime {
-    /// Inferences with inputs ready, awaiting dispatch (credit/queue).
-    ready: VecDeque<u32>,
-    /// Inferences dispatched to chiplet queues.
-    dispatched: u32,
-    /// Inferences whose compute fully finished on this layer.
-    completed: u32,
-    /// Per-inference count of finished segments.
-    segs_done: HashMap<u32, usize>,
-    /// Earliest actual compute start per inference (for latency metrics).
-    start_ns: HashMap<u32, TimeNs>,
-    /// Latest compute completion per inference.
-    done_ns: HashMap<u32, TimeNs>,
-}
-
-struct Instance {
-    req: ModelRequest,
-    model: NeuralModel,
-    mapping: ModelMapping,
-    results: Vec<Vec<ComputeResult>>,
-    layers: Vec<LayerRuntime>,
-    mapped_ns: TimeNs,
-    /// Outstanding weight-load flows (ViT weight-stationary start-up).
-    weight_flows: usize,
-    /// inference index -> (flows outstanding into given layer).
-    inflows: HashMap<(usize, u32), usize>,
-    /// Comm span accounting: injection time per (dst layer, inference).
-    comm_start: HashMap<(usize, u32), TimeNs>,
-    comm_ns: Vec<f64>,
-    inference_latency: Vec<u64>,
-    inference_start: HashMap<u32, TimeNs>,
-    finished: bool,
-}
-
-#[derive(Debug, Default)]
-struct ChipletState {
-    busy: bool,
-    queue: VecDeque<(usize, usize, usize, u32)>, // (inst, layer, seg, inference)
-    busy_ns: u64,
-}
-
-/// The co-simulation coordinator.
+/// The pre-builder co-simulation coordinator.
+#[deprecated(
+    note = "use chipsim::sim::Simulation::builder() — GlobalManager will be removed in the next release"
+)]
 pub struct GlobalManager {
-    hw: HardwareConfig,
-    params: SimParams,
-    topo: Topology,
-    backend: Box<dyn ComputeBackend>,
+    inner: Simulation,
 }
 
+#[allow(deprecated)]
 impl GlobalManager {
     pub fn new(hw: HardwareConfig, params: SimParams) -> Self {
-        let topo = Topology::build(&hw);
-        let backend: Box<dyn ComputeBackend> = match params.compute_backend {
-            ComputeBackendKind::Analytical => Box::new(ClassDispatchBackend::new()),
-            ComputeBackendKind::Pjrt => Box::new(
-                crate::compute::pjrt::PjrtImcBackend::open_default()
-                    .expect("PJRT backend requires `make artifacts`"),
-            ),
+        let inner = match Simulation::builder()
+            .hardware(hw.clone())
+            .params(params.clone())
+            .build()
+        {
+            Ok(sim) => sim,
+            // Backend construction is the only fallible step beyond
+            // validation; retry it analytically.  Validation errors
+            // (impossible hardware/params) re-fail in the retry and
+            // surface as a panic carrying the builder's message — the
+            // pre-builder constructor also panicked on such configs.
+            Err(e) if params.compute_backend != ComputeBackendKind::Analytical => {
+                // Loud on stderr as well: library consumers without a
+                // logger installed must still see that the numbers come
+                // from a different backend than requested.
+                eprintln!(
+                    "warning: GlobalManager::new: {e:#}; falling back to the analytical \
+                     compute backend"
+                );
+                log::warn!(
+                    "GlobalManager::new: {e:#}; falling back to the analytical compute backend"
+                );
+                Simulation::builder()
+                    .hardware(hw)
+                    .params(SimParams {
+                        compute_backend: ComputeBackendKind::Analytical,
+                        ..params
+                    })
+                    .build()
+                    .unwrap_or_else(|e| {
+                        panic!("GlobalManager::new: invalid configuration: {e:#}")
+                    })
+            }
+            Err(e) => panic!("GlobalManager::new: invalid configuration: {e:#}"),
         };
-        GlobalManager { hw, params, topo, backend }
+        GlobalManager { inner }
     }
 
     /// Override the compute backend (dependency injection for tests).
     pub fn with_backend(mut self, backend: Box<dyn ComputeBackend>) -> Self {
-        self.backend = backend;
+        self.inner.set_backend(backend);
         self
     }
 
     pub fn topology(&self) -> &Topology {
-        &self.topo
+        self.inner.topology()
     }
 
     /// Run the co-simulation to completion.
     pub fn run(&mut self, workload: WorkloadConfig) -> anyhow::Result<SimReport> {
-        let wall_start = Instant::now();
-        let stream = WorkloadStream::from_kinds(
-            &workload.kinds,
-            self.params.inferences_per_model,
-            workload.injection_interval_ns,
-        );
-        let mut net: Box<dyn NetworkSim> = match self.params.noc_fidelity {
-            NocFidelity::Packet => Box::new(PacketEngine::new(self.topo.clone())),
-            NocFidelity::Flit => Box::new(FlitEngine::new(self.topo.clone())),
-        };
-        let mut power = PowerTracker::new(self.hw.num_chiplets(), self.params.power_bin_ns);
-        for c in 0..self.hw.num_chiplets() {
-            power.set_baseline_mw(
-                c,
-                self.hw.chiplet_type(c).idle_mw + self.hw.link.router_static_mw,
-            );
-        }
-        let mut ledger = MemoryLedger::new(&self.hw);
-        let mut arb = ArbitrationQueue::new(self.params.age_threshold_ns);
-        let mut chiplets: Vec<ChipletState> =
-            (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect();
-        let mut instances: Vec<Instance> = Vec::new();
-        let mut flow_of: HashMap<FlowId, (usize, usize, u32)> = HashMap::new();
-        let mut outcomes: Vec<ModelOutcome> = Vec::new();
-        let mut dropped: Vec<(usize, crate::workload::ModelKind)> = Vec::new();
-        let mut queue: BinaryHeap<Reverse<QEntry>> = BinaryHeap::new();
-        let mut seq: u64 = 0;
-        let push = |queue: &mut BinaryHeap<Reverse<QEntry>>, seq: &mut u64, t: TimeNs, ev: Event| {
-            *seq += 1;
-            queue.push(Reverse(QEntry { t, seq: *seq, ev }));
-        };
-        for (i, req) in stream.requests.iter().enumerate() {
-            push(&mut queue, &mut seq, req.arrival_ns, Event::Arrive(i));
-        }
-        let mut now: TimeNs = 0;
-        let mut compute_energy = 0.0f64;
-        let total_capacity = ledger.total_free();
-
-        macro_rules! start_chiplet_if_idle {
-            ($c:expr, $t:expr) => {{
-                let cid = $c;
-                if !chiplets[cid].busy {
-                    if let Some((inst, layer, seg, inference)) = chiplets[cid].queue.pop_front() {
-                        let r = instances[inst].results[layer][seg];
-                        let lat = r.latency_ns.round().max(1.0) as TimeNs;
-                        chiplets[cid].busy = true;
-                        chiplets[cid].busy_ns += lat;
-                        power.add_energy(cid, $t, lat, r.energy_pj);
-                        compute_energy += r.energy_pj;
-                        let lr = &mut instances[inst].layers[layer];
-                        lr.start_ns.entry(inference).or_insert($t);
-                        if layer == 0 {
-                            instances[inst].inference_start.entry(inference).or_insert($t);
-                        }
-                        push(
-                            &mut queue,
-                            &mut seq,
-                            $t + lat,
-                            Event::ComputeDone { inst, layer, seg, inference },
-                        );
-                    }
-                }
-            }};
-        }
-
-        macro_rules! dispatch_ready {
-            ($inst:expr, $layer:expr, $t:expr) => {{
-                let inst = $inst;
-                let layer = $layer;
-                loop {
-                    let can = {
-                        let me = &instances[inst];
-                        let lr = &me.layers[layer];
-                        if lr.ready.is_empty() {
-                            false
-                        } else if !self.params.pipelined {
-                            true // sequential execution: no overlap possible
-                        } else if layer + 1 >= me.layers.len() {
-                            true
-                        } else {
-                            // Double-buffering credit vs downstream stage.
-                            lr.dispatched < me.layers[layer + 1].completed + PIPELINE_CREDITS
-                        }
-                    };
-                    if !can {
-                        break;
-                    }
-                    let inference = instances[inst].layers[layer].ready.pop_front().unwrap();
-                    instances[inst].layers[layer].dispatched += 1;
-                    let nsegs = instances[inst].mapping.layers[layer].len();
-                    for s in 0..nsegs {
-                        let cid = instances[inst].mapping.layers[layer][s].chiplet;
-                        chiplets[cid].queue.push_back((inst, layer, s, inference));
-                        start_chiplet_if_idle!(cid, $t);
-                    }
-                }
-            }};
-        }
-
-        // Models are immutable per kind: build each once and clone cheaply
-        // (arbitration probes used to rebuild the full layer table per
-        // attempt — a measurable share of wall time, see EXPERIMENTS §Perf).
-        let mut model_cache: HashMap<crate::workload::ModelKind, NeuralModel> = HashMap::new();
-        let mut model_of = |kind: crate::workload::ModelKind| -> NeuralModel {
-            model_cache.entry(kind).or_insert_with(|| NeuralModel::build(kind)).clone()
-        };
-
-        macro_rules! try_map_models {
-            ($t:expr) => {{
-                // Thermal-aware extension: rank chiplets by accumulated
-                // dissipation (temperature proxy) when enabled.
-                let heat: Option<Vec<f64>> = if self.params.thermal_aware_hops > 0.0 {
-                    Some(
-                        (0..self.hw.num_chiplets())
-                            .map(|c| power.dynamic_energy_pj(c))
-                            .collect(),
-                    )
-                } else {
-                    None
-                };
-                let make_mapper = || {
-                    let m = NearestNeighborMapper::new(&self.hw, &self.topo);
-                    match &heat {
-                        Some(h) => m.with_heat(h, self.params.thermal_aware_hops),
-                        None => m,
-                    }
-                };
-                loop {
-                    let taken = arb.take_next_mappable($t, |req| {
-                        let model = model_of(req.kind);
-                        let mut probe = ledger.clone();
-                        make_mapper().try_map(&model, &mut probe).is_some()
-                    });
-                    let Some(req) = taken else { break };
-                    let model = model_of(req.kind);
-                    let mapping =
-                        make_mapper().try_map(&model, &mut ledger).expect("probe said it fits");
-                    // Batched compute evaluation (one backend call per model).
-                    let mut items = Vec::new();
-                    for (li, layer) in mapping.layers.iter().enumerate() {
-                        let _ = li;
-                        for seg in layer {
-                            items.push((self.hw.chiplet_type(seg.chiplet), seg.work));
-                        }
-                    }
-                    let flat = self.backend.evaluate_batch(&items);
-                    let mut results = Vec::with_capacity(mapping.layers.len());
-                    let mut k = 0;
-                    for layer in &mapping.layers {
-                        let n = layer.len();
-                        results.push(flat[k..k + n].to_vec());
-                        k += n;
-                    }
-                    let nlayers = mapping.layers.len();
-                    let inst_id = instances.len();
-                    let mut inst = Instance {
-                        req: req.clone(),
-                        model,
-                        mapping,
-                        results,
-                        layers: vec![LayerRuntime::default(); nlayers],
-                        mapped_ns: $t,
-                        weight_flows: 0,
-                        inflows: HashMap::new(),
-                        comm_start: HashMap::new(),
-                        comm_ns: vec![0.0; req.inferences as usize],
-                        inference_latency: Vec::new(),
-                        inference_start: HashMap::new(),
-                        finished: false,
-                    };
-                    // ViT-style weight-stationary start-up: stream each
-                    // segment's weights from the nearest I/O chiplet.
-                    if !self.hw.io_chiplets.is_empty() {
-                        let mut flows = Vec::new();
-                        for layer in &inst.mapping.layers {
-                            for seg in layer {
-                                let io = *self
-                                    .hw
-                                    .io_chiplets
-                                    .iter()
-                                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet))
-                                    .unwrap();
-                                flows.push(FlowSpec {
-                                    src: io,
-                                    dst: seg.chiplet,
-                                    bytes: seg.mem_bytes,
-                                });
-                            }
-                        }
-                        inst.weight_flows = flows.len();
-                        instances.push(inst);
-                        for f in flows {
-                            let id = net.inject(f, $t);
-                            flow_of.insert(id, (inst_id, WEIGHT_LAYER, 0));
-                        }
-                    } else {
-                        inst.layers[0].ready.push_back(0);
-                        instances.push(inst);
-                        dispatch_ready!(inst_id, 0, $t);
-                    }
-                }
-                // Requests that can never fit even on an empty system are
-                // dropped (and reported) instead of deadlocking the queue.
-                if instances.iter().all(|i| i.finished) {
-                    while let Some(req) = arb.take_next_mappable($t, |_| true) {
-                        let model = model_of(req.kind);
-                        let mut probe = MemoryLedger::new(&self.hw);
-                        let mapper = NearestNeighborMapper::new(&self.hw, &self.topo);
-                        if mapper.try_map(&model, &mut probe).is_none() {
-                            log::warn!(
-                                "dropping model {} ({}): needs {} bytes, system has {}",
-                                req.id,
-                                req.kind.name(),
-                                model.total_weight_bytes(),
-                                total_capacity
-                            );
-                            dropped.push((req.id, req.kind));
-                        } else {
-                            arb.push(req);
-                            break;
-                        }
-                    }
-                }
-            }};
-        }
-
-        macro_rules! emit_layer_flows {
-            ($inst:expr, $layer:expr, $inference:expr, $t:expr) => {{
-                let inst = $inst;
-                let layer = $layer;
-                let inference = $inference;
-                let (flows, expected) = {
-                    let me = &instances[inst];
-                    let out_bytes = me.model.layers[layer].out_bytes;
-                    let srcs = &me.mapping.layers[layer];
-                    let dsts = &me.mapping.layers[layer + 1];
-                    let mut flows = Vec::new();
-                    for s in srcs {
-                        // Each destination segment needs the full activation
-                        // tensor; each source produced `frac` of it.
-                        let bytes = ((out_bytes as f64) * s.frac).ceil().max(1.0) as u64;
-                        for d in dsts {
-                            flows.push(FlowSpec { src: s.chiplet, dst: d.chiplet, bytes });
-                        }
-                    }
-                    let n = flows.len();
-                    (flows, n)
-                };
-                instances[inst].inflows.insert((layer + 1, inference), expected);
-                instances[inst].comm_start.insert((layer + 1, inference), $t);
-                for f in flows {
-                    let id = net.inject(f, $t);
-                    flow_of.insert(id, (inst, layer + 1, inference));
-                }
-            }};
-        }
-
-        macro_rules! finish_instance {
-            ($inst:expr, $t:expr) => {{
-                let inst = $inst;
-                instances[inst].finished = true;
-                ledger.release_mapping(&instances[inst].mapping);
-                let me = &instances[inst];
-                outcomes.push(ModelOutcome {
-                    id: me.req.id,
-                    kind: me.req.kind,
-                    arrival_ns: me.req.arrival_ns,
-                    mapped_ns: me.mapped_ns,
-                    finished_ns: $t,
-                    inferences: me.req.inferences,
-                    inference_latency_ns: me.inference_latency.clone(),
-                    // Pure compute span per inference: sum over layers of the
-                    // slowest segment (segments of a layer run in parallel).
-                    compute_ns: {
-                        let per_inf: f64 = me
-                            .results
-                            .iter()
-                            .map(|layer| {
-                                layer.iter().map(|r| r.latency_ns).fold(0.0f64, f64::max)
-                            })
-                            .sum();
-                        vec![per_inf; me.req.inferences as usize]
-                    },
-                    comm_ns: me.comm_ns.clone(),
-                    segments: me.mapping.total_segments(),
-                });
-                push(&mut queue, &mut seq, $t, Event::TryMap);
-            }};
-        }
-
-        // ------------------------------------------------------ main loop
-        loop {
-            let t_next = queue.peek().map(|Reverse(e)| e.t).unwrap_or(TimeNs::MAX);
-            if net.has_active() {
-                if let Some(c) = net.advance_until(t_next) {
-                    now = now.max(c.time);
-                    for (node, t, pj) in net.drain_energy_events() {
-                        power.add_event(node, t, pj);
-                    }
-                    let Some((inst, layer, inference)) = flow_of.remove(&c.id) else {
-                        continue;
-                    };
-                    if instances[inst].finished {
-                        continue;
-                    }
-                    if layer == WEIGHT_LAYER {
-                        instances[inst].weight_flows -= 1;
-                        if instances[inst].weight_flows == 0 {
-                            instances[inst].layers[0].ready.push_back(0);
-                            dispatch_ready!(inst, 0, c.time);
-                        }
-                    } else {
-                        let left = instances[inst].inflows.get_mut(&(layer, inference)).unwrap();
-                        *left -= 1;
-                        if *left == 0 {
-                            instances[inst].inflows.remove(&(layer, inference));
-                            if let Some(t0) =
-                                instances[inst].comm_start.remove(&(layer, inference))
-                            {
-                                let span = (c.time - t0) as f64;
-                                if let Some(slot) =
-                                    instances[inst].comm_ns.get_mut(inference as usize)
-                                {
-                                    *slot += span;
-                                }
-                            }
-                            instances[inst].layers[layer].ready.push_back(inference);
-                            dispatch_ready!(inst, layer, c.time);
-                        }
-                    }
-                    continue;
-                }
-            }
-            let Some(Reverse(entry)) = queue.pop() else {
-                break;
-            };
-            now = now.max(entry.t);
-            if self.params.max_sim_time_ns > 0 && now > self.params.max_sim_time_ns {
-                log::warn!("max_sim_time reached at {now} ns; truncating run");
-                break;
-            }
-            match entry.ev {
-                Event::Arrive(i) => {
-                    arb.push(stream.requests[i].clone());
-                    try_map_models!(entry.t);
-                }
-                Event::TryMap => {
-                    try_map_models!(entry.t);
-                }
-                Event::ComputeDone { inst, layer, seg, inference } => {
-                    let cid = instances[inst].mapping.layers[layer][seg].chiplet;
-                    chiplets[cid].busy = false;
-                    start_chiplet_if_idle!(cid, entry.t);
-                    let nsegs = instances[inst].mapping.layers[layer].len();
-                    let done = {
-                        let lr = &mut instances[inst].layers[layer];
-                        let cnt = lr.segs_done.entry(inference).or_insert(0);
-                        *cnt += 1;
-                        *cnt == nsegs
-                    };
-                    if !done {
-                        continue;
-                    }
-                    // Whole layer finished this inference.
-                    {
-                        let lr = &mut instances[inst].layers[layer];
-                        lr.segs_done.remove(&inference);
-                        lr.completed += 1;
-                        lr.done_ns.insert(inference, entry.t);
-                    }
-                    let nlayers = instances[inst].layers.len();
-                    let n_inf = instances[inst].req.inferences;
-                    // Free a downstream credit for the upstream stage.
-                    if self.params.pipelined && layer > 0 {
-                        dispatch_ready!(inst, layer - 1, entry.t);
-                    }
-                    // Pipelined: layer 0 chains itself to the next inference.
-                    if self.params.pipelined && layer == 0 && inference + 1 < n_inf {
-                        instances[inst].layers[0].ready.push_back(inference + 1);
-                        dispatch_ready!(inst, 0, entry.t);
-                    }
-                    if layer + 1 < nlayers {
-                        emit_layer_flows!(inst, layer, inference, entry.t);
-                    } else {
-                        // Inference complete.
-                        let start = *instances[inst]
-                            .inference_start
-                            .get(&inference)
-                            .unwrap_or(&instances[inst].mapped_ns);
-                        instances[inst].inference_latency.push(entry.t - start);
-                        if !self.params.pipelined && inference + 1 < n_inf {
-                            instances[inst].layers[0].ready.push_back(inference + 1);
-                            dispatch_ready!(inst, 0, entry.t);
-                        }
-                        if instances[inst].inference_latency.len() == n_inf as usize {
-                            finish_instance!(inst, entry.t);
-                        }
-                    }
-                }
-            }
-        }
-
-        for (node, t, pj) in net.drain_energy_events() {
-            power.add_event(node, t, pj);
-        }
-        let span_ns = now;
-        let link_util =
-            crate::noc::LinkUtilization::from_busy(&net.link_busy_ns(), span_ns);
-        let hi = span_ns.saturating_sub(self.params.cooldown_ns).max(self.params.warmup_ns);
-        Ok(SimReport {
-            outcomes,
-            dropped,
-            span_ns,
-            power,
-            chiplet_busy_ns: chiplets.iter().map(|c| c.busy_ns).collect(),
-            comm_energy_pj: net.comm_energy_pj(),
-            compute_energy_pj: compute_energy,
-            noc_work: net.work_done(),
-            link_util,
-            wall_ns: wall_start.elapsed().as_nanos(),
-            stats_window: (self.params.warmup_ns, hi),
-        })
+        self.inner.run(workload)
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
     use super::*;
     use crate::workload::ModelKind;
 
-    fn small_params() -> SimParams {
-        SimParams {
+    #[test]
+    fn shim_matches_builder_result() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let params = SimParams {
             inferences_per_model: 2,
             warmup_ns: 0,
             cooldown_ns: 0,
             ..SimParams::default()
-        }
-    }
-
-    #[test]
-    fn single_model_completes() {
-        let hw = HardwareConfig::homogeneous_mesh(4, 4);
-        let mut gm = GlobalManager::new(hw, small_params());
-        let report = gm.run(WorkloadConfig::single(ModelKind::ResNet18)).unwrap();
-        assert_eq!(report.outcomes.len(), 1);
-        assert_eq!(report.outcomes[0].inference_latency_ns.len(), 2);
-        assert!(report.outcomes[0].mean_latency_ns() > 0.0);
-        assert!(report.dropped.is_empty());
-    }
-
-    #[test]
-    fn pipelined_is_not_slower_in_throughput() {
-        let hw = HardwareConfig::homogeneous_mesh(4, 4);
-        let mut p1 = small_params();
-        p1.inferences_per_model = 8;
-        let mut p2 = p1.clone();
-        p2.pipelined = true;
-        let r_seq = GlobalManager::new(hw.clone(), p1)
-            .run(WorkloadConfig::single(ModelKind::ResNet18))
-            .unwrap();
-        let r_pipe = GlobalManager::new(hw, p2)
-            .run(WorkloadConfig::single(ModelKind::ResNet18))
-            .unwrap();
-        // Pipelining overlaps layers: total completion time must shrink.
-        assert!(
-            r_pipe.outcomes[0].finished_ns < r_seq.outcomes[0].finished_ns,
-            "pipe {} !< seq {}",
-            r_pipe.outcomes[0].finished_ns,
-            r_seq.outcomes[0].finished_ns
-        );
-    }
-
-    #[test]
-    fn oversized_model_is_dropped_not_deadlocked() {
-        let hw = HardwareConfig::homogeneous_mesh(2, 2); // 8 MiB total
-        let mut gm = GlobalManager::new(hw, small_params());
-        let report = gm.run(WorkloadConfig::single(ModelKind::AlexNet)).unwrap();
-        assert_eq!(report.outcomes.len(), 0);
-        assert_eq!(report.dropped.len(), 1);
-    }
-
-    #[test]
-    fn stream_of_models_all_finish() {
-        let hw = HardwareConfig::homogeneous_mesh(8, 8);
-        let mut params = small_params();
-        params.pipelined = true;
-        let mut gm = GlobalManager::new(hw, params);
-        let wl = WorkloadConfig::from_kinds(&[
-            ModelKind::ResNet18,
-            ModelKind::AlexNet,
-            ModelKind::ResNet34,
-            ModelKind::ResNet18,
-        ]);
-        let report = gm.run(wl).unwrap();
-        assert_eq!(report.outcomes.len() + report.dropped.len(), 4);
-        assert!(report.outcomes.len() >= 3);
-        // Power was tracked.
-        assert!(report.power.num_bins() > 0);
-        assert!(report.comm_energy_pj > 0.0);
-        assert!(report.compute_energy_pj > 0.0);
-    }
-
-    #[test]
-    fn contention_from_parallel_models_inflates_latency() {
-        // One ResNet18 alone vs four running concurrently on the same mesh.
-        let hw = HardwareConfig::homogeneous_mesh(10, 10);
-        let mut params = small_params();
-        params.pipelined = true;
-        params.inferences_per_model = 4;
-        let solo = GlobalManager::new(hw.clone(), params.clone())
-            .run(WorkloadConfig::single(ModelKind::ResNet18))
-            .unwrap();
-        let busy = GlobalManager::new(hw, params)
-            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 4]))
-            .unwrap();
-        let lat_solo = solo.mean_latency_of(ModelKind::ResNet18).unwrap();
-        let lat_busy = busy.mean_latency_of(ModelKind::ResNet18).unwrap();
-        assert!(
-            lat_busy > lat_solo,
-            "contention must inflate latency: busy {lat_busy} !> solo {lat_solo}"
-        );
-    }
-
-    #[test]
-    fn deterministic_given_seed() {
-        let hw = HardwareConfig::homogeneous_mesh(6, 6);
-        let run = || {
-            GlobalManager::new(hw.clone(), small_params())
-                .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::AlexNet]))
-                .unwrap()
         };
-        let a = run();
-        let b = run();
-        assert_eq!(a.span_ns, b.span_ns);
-        let la: Vec<_> = a.outcomes.iter().map(|o| o.inference_latency_ns.clone()).collect();
-        let lb: Vec<_> = b.outcomes.iter().map(|o| o.inference_latency_ns.clone()).collect();
-        assert_eq!(la, lb);
+        let old = GlobalManager::new(hw.clone(), params.clone())
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let new = Simulation::builder()
+            .hardware(hw)
+            .params(params)
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        assert_eq!(old.fingerprint(), new.fingerprint());
+    }
+
+    #[test]
+    fn shim_does_not_panic_on_missing_pjrt_artifacts() {
+        // Even if the PJRT artifacts are absent, construction must fall
+        // back to the analytical backend instead of panicking.
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let params = SimParams {
+            compute_backend: ComputeBackendKind::Pjrt,
+            inferences_per_model: 1,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        let report = GlobalManager::new(hw, params)
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 1);
     }
 }

@@ -1,26 +1,38 @@
 //! The CHIPSIM co-simulation core (paper §III).
 //!
-//! [`GlobalManager`] orchestrates computation and communication simulation
+//! [`Simulation`] orchestrates computation and communication simulation
 //! under a coherent global timeline:
 //!
 //! * **model queue + arbitration** — requests stream in, the age-aware
 //!   queue picks the next mappable model (out-of-order, anti-starvation);
-//! * **mapping** — the nearest-neighbour mapper places each layer, the
-//!   memory ledger tracks occupancy for future mapping decisions;
+//! * **mapping** — the injected [`crate::mapping::Mapper`] policy places
+//!   each layer, the memory ledger tracks occupancy for future mapping
+//!   decisions;
 //! * **compute events** — each mapped layer segment is evaluated by the
-//!   compute backend (batched per model at map time) and completion events
-//!   are scheduled on the global queue;
+//!   injected compute backend (batched per model at map time) and
+//!   completion events are scheduled on the global queue;
 //! * **communication** — all activation transfers of all active models
-//!   share one network engine, advanced in lockstep with the event queue
-//!   so contention between models emerges cycle-accurately;
-//! * **power** — every operation books energy per chiplet at 1 µs bins.
+//!   share one [`crate::noc::NetworkSim`] engine (fidelity injected via
+//!   the builder), advanced in lockstep with the event queue so
+//!   contention between models emerges cycle-accurately;
+//! * **power** — every operation books energy per chiplet at 1 µs bins,
+//!   and [`SimObserver`] probes see the same event stream.
 //!
 //! Pipelined mode implements the paper's §V-B2 semantics: a chiplet that
 //! finished a layer and sent activations immediately starts the next
 //! inference, bounded by a double-buffering credit per pipeline stage.
+//!
+//! Assemble a run with [`Simulation::builder`]; the deprecated
+//! [`GlobalManager`] shim remains for one release.
 
 mod manager;
 mod report;
+mod simulation;
 
+#[allow(deprecated)]
 pub use manager::GlobalManager;
-pub use report::{KindStats, ModelOutcome, SimReport};
+pub use report::{KindStats, ModelOutcome, SimReport, ThermalSummary};
+pub use simulation::{
+    EventCounter, NetworkFactory, ObserverHandle, SimObserver, Simulation, SimulationBuilder,
+    ThermalSpec,
+};

@@ -62,6 +62,19 @@ pub struct KindStats {
     pub mean_comm_ns: f64,
 }
 
+/// End-of-run thermal roll-up (populated when the simulation was built
+/// with a `ThermalSpec` other than `Off`).
+#[derive(Debug, Clone)]
+pub struct ThermalSummary {
+    /// Which solver produced it ("pjrt-aot" or "native").
+    pub solver: &'static str,
+    /// Transient steps integrated.
+    pub steps: usize,
+    pub hottest_c: f64,
+    pub coolest_c: f64,
+    pub spread_k: f64,
+}
+
 /// Full result of a co-simulation run.
 #[derive(Debug)]
 pub struct SimReport {
@@ -85,6 +98,8 @@ pub struct SimReport {
     pub wall_ns: u128,
     /// Statistics window applied (warmup/cooldown trimming).
     pub stats_window: (TimeNs, TimeNs),
+    /// End-of-run thermal summary (None when thermal coupling was off).
+    pub thermal: Option<ThermalSummary>,
 }
 
 impl SimReport {
@@ -152,6 +167,12 @@ impl SimReport {
             self.comm_energy_pj / 1e9,
             self.mean_utilization() * 100.0
         ));
+        if let Some(th) = &self.thermal {
+            s.push_str(&format!(
+                "thermal ({}, {} steps): hottest {:.2} °C, coolest {:.2} °C, spread {:.2} K\n",
+                th.solver, th.steps, th.hottest_c, th.coolest_c, th.spread_k
+            ));
+        }
         for (kind, st) in self.by_kind() {
             s.push_str(&format!(
                 "  {kind:<10} x{:<3} mean inference latency {:>12}  (compute {:>12}, comm {:>12})\n",
@@ -166,6 +187,40 @@ impl SimReport {
 
     pub fn mean_compute_comm_of(&self, kind: ModelKind) -> Option<(f64, f64)> {
         self.by_kind().get(kind.name()).map(|s| (s.mean_compute_ns, s.mean_comm_ns))
+    }
+
+    /// Stable digest of the run for determinism checks: two runs are
+    /// byte-identical iff their fingerprints are equal.  Floats are
+    /// compared via their bit patterns — no rounding slack.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = String::new();
+        let _ = write!(
+            s,
+            "span={};comm={:016x};compute={:016x};work={}",
+            self.span_ns,
+            self.comm_energy_pj.to_bits(),
+            self.compute_energy_pj.to_bits(),
+            self.noc_work
+        );
+        for o in &self.outcomes {
+            let _ = write!(
+                s,
+                ";{}:{}:a{}:m{}:f{}",
+                o.id,
+                o.kind.name(),
+                o.arrival_ns,
+                o.mapped_ns,
+                o.finished_ns
+            );
+            for &l in &o.inference_latency_ns {
+                let _ = write!(s, ",{l}");
+            }
+        }
+        for (id, kind) in &self.dropped {
+            let _ = write!(s, ";drop{}:{}", id, kind.name());
+        }
+        s
     }
 }
 

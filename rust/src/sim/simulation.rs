@@ -1,0 +1,1219 @@
+//! The `Simulation` builder API: CHIPSIM's public entry point.
+//!
+//! A co-simulation is assembled from pluggable parts — hardware, params,
+//! a [`Mapper`] policy, a [`NetworkSim`] fidelity, a `ComputeBackend`,
+//! optional thermal coupling, and any number of [`SimObserver`] probes —
+//! then run to completion:
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//!
+//! let report = Simulation::builder()
+//!     .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+//!     .params(SimParams { pipelined: true, ..SimParams::default() })
+//!     .build()
+//!     .expect("valid configuration")
+//!     .run(WorkloadConfig::cnn_stream(8, 10, 0xBEEF))
+//!     .expect("co-simulation");
+//! println!("{}", report.summary());
+//! ```
+//!
+//! Construction is fallible (`build()` validates the hardware and opens
+//! the compute backend) so a missing PJRT artifact surfaces as an
+//! actionable `Err`, never a panic.  The event loop itself is the paper's
+//! Global Manager (§III): see module docs in [`crate::sim`].
+
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::compute::{ClassDispatchBackend, ComputeBackend, ComputeResult};
+use crate::config::{
+    ChipletClass, ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, TopologyKind,
+    WorkloadConfig,
+};
+use crate::mapping::{MapContext, Mapper, MemoryLedger, ModelMapping, NearestNeighbor};
+use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
+use crate::noc::{FlowId, FlowSpec, NetworkSim};
+use crate::power::PowerTracker;
+use crate::sim::report::{ModelOutcome, SimReport, ThermalSummary};
+use crate::workload::{ArbitrationQueue, ModelKind, ModelRequest, NeuralModel, WorkloadStream};
+use crate::TimeNs;
+
+/// Pipeline double-buffering depth: a stage may run at most this many
+/// inferences ahead of its downstream consumer.
+const PIPELINE_CREDITS: u32 = 2;
+
+/// Sentinel "layer" index for ViT weight-load flows.
+const WEIGHT_LAYER: usize = usize::MAX;
+
+// ------------------------------------------------------------- observers
+
+/// Probe hooks invoked by the co-simulation loop as it progresses.
+///
+/// Observers are shared (`Rc<RefCell<..>>`) so the caller keeps a handle
+/// and can read accumulated state after `run()` returns.  All methods
+/// default to no-ops — implement only what you need.  The built-in power
+/// tracking is itself expressible as an observer: [`PowerTracker`]
+/// implements this trait, so `.observer(Rc::new(RefCell::new(
+/// PowerTracker::new(n, bin))))` attaches an independent power probe.
+pub trait SimObserver {
+    /// A model was mapped onto the system at time `t`.
+    fn on_model_mapped(&mut self, _id: usize, _kind: ModelKind, _t: TimeNs) {}
+    /// Compute energy booked on a chiplet over `[start, start+duration)`.
+    fn on_compute_energy(
+        &mut self,
+        _chiplet: usize,
+        _start: TimeNs,
+        _duration_ns: TimeNs,
+        _energy_pj: f64,
+    ) {
+    }
+    /// Instantaneous NoI energy event at a router node.
+    fn on_noc_energy(&mut self, _node: usize, _t: TimeNs, _energy_pj: f64) {}
+    /// A model instance finished all its inferences.
+    fn on_model_finished(&mut self, _outcome: &ModelOutcome) {}
+    /// A model could never fit and was dropped at time `t`.
+    fn on_model_dropped(&mut self, _id: usize, _kind: ModelKind, _t: TimeNs) {}
+    /// The run completed; the final report is about to be returned.
+    fn on_run_complete(&mut self, _report: &SimReport) {}
+}
+
+/// A shared observer handle, as accepted by `SimulationBuilder::observer`.
+pub type ObserverHandle = Rc<RefCell<dyn SimObserver>>;
+
+/// Power tracking as a pluggable probe: mirrors exactly what the built-in
+/// tracker books, so an attached `PowerTracker` observer reproduces the
+/// report's dynamic-energy profile.
+impl SimObserver for PowerTracker {
+    fn on_compute_energy(
+        &mut self,
+        chiplet: usize,
+        start: TimeNs,
+        duration_ns: TimeNs,
+        energy_pj: f64,
+    ) {
+        self.add_energy(chiplet, start, duration_ns, energy_pj);
+    }
+
+    fn on_noc_energy(&mut self, node: usize, t: TimeNs, energy_pj: f64) {
+        self.add_event(node, t, energy_pj);
+    }
+}
+
+/// Minimal event-counting observer (handy for tests and progress lines).
+#[derive(Debug, Default, Clone)]
+pub struct EventCounter {
+    pub mapped: usize,
+    pub finished: usize,
+    pub dropped: usize,
+    pub compute_events: usize,
+    pub noc_events: usize,
+    pub compute_energy_pj: f64,
+}
+
+impl SimObserver for EventCounter {
+    fn on_model_mapped(&mut self, _id: usize, _kind: ModelKind, _t: TimeNs) {
+        self.mapped += 1;
+    }
+
+    fn on_compute_energy(
+        &mut self,
+        _chiplet: usize,
+        _start: TimeNs,
+        _duration_ns: TimeNs,
+        energy_pj: f64,
+    ) {
+        self.compute_events += 1;
+        self.compute_energy_pj += energy_pj;
+    }
+
+    fn on_noc_energy(&mut self, _node: usize, _t: TimeNs, _energy_pj: f64) {
+        self.noc_events += 1;
+    }
+
+    fn on_model_finished(&mut self, _outcome: &ModelOutcome) {
+        self.finished += 1;
+    }
+
+    fn on_model_dropped(&mut self, _id: usize, _kind: ModelKind, _t: TimeNs) {
+        self.dropped += 1;
+    }
+}
+
+// -------------------------------------------------------------- plug-ins
+
+/// Builds a fresh network engine for a run (fidelity is injected here,
+/// not matched on an enum inside the coordinator).
+pub type NetworkFactory = Box<dyn Fn(&Topology) -> Box<dyn NetworkSim>>;
+
+/// Post-run thermal coupling performed by [`Simulation::run`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThermalSpec {
+    /// No thermal solve (default).
+    Off,
+    /// Native RC solver; power bins decimated by `stride_bins`.
+    Native { stride_bins: usize },
+    /// PJRT AOT artifact when available, native fallback otherwise.
+    Auto { stride_bins: usize },
+}
+
+// --------------------------------------------------------------- builder
+
+/// Staged configuration for a [`Simulation`].  Every part has a default:
+/// 10×10 homogeneous mesh, default [`SimParams`], nearest-neighbour
+/// mapper, packet-fidelity NoI, analytical compute, thermal off.
+pub struct SimulationBuilder {
+    hardware: Option<HardwareConfig>,
+    params: SimParams,
+    mapper: Option<Box<dyn Mapper>>,
+    network: Option<NetworkFactory>,
+    /// Explicit fidelity choice; wins over `params.noc_fidelity` so the
+    /// builder is order-insensitive (`.network_fidelity(..)` survives a
+    /// later `.params(..)`).
+    fidelity: Option<NocFidelity>,
+    compute: Option<Box<dyn ComputeBackend>>,
+    thermal: ThermalSpec,
+    observers: Vec<ObserverHandle>,
+}
+
+impl SimulationBuilder {
+    fn new() -> SimulationBuilder {
+        SimulationBuilder {
+            hardware: None,
+            params: SimParams::default(),
+            mapper: None,
+            network: None,
+            fidelity: None,
+            compute: None,
+            thermal: ThermalSpec::Off,
+            observers: Vec::new(),
+        }
+    }
+
+    /// Target hardware (chiplet grid + NoI).  Default: 10×10 type-A mesh.
+    pub fn hardware(mut self, hw: HardwareConfig) -> Self {
+        self.hardware = Some(hw);
+        self
+    }
+
+    /// Global simulation parameters.
+    pub fn params(mut self, params: SimParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    /// Mapping policy.  Default: [`NearestNeighbor`].
+    pub fn mapper(mut self, mapper: Box<dyn Mapper>) -> Self {
+        self.mapper = Some(mapper);
+        self
+    }
+
+    /// Custom network engine factory (overrides `params.noc_fidelity`).
+    pub fn network<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(&Topology) -> Box<dyn NetworkSim> + 'static,
+    {
+        self.network = Some(Box::new(factory));
+        self
+    }
+
+    /// Convenience: select one of the built-in NoI fidelities (wins over
+    /// `params.noc_fidelity` regardless of call order; replaces any
+    /// custom `network` factory).
+    pub fn network_fidelity(mut self, fidelity: NocFidelity) -> Self {
+        self.fidelity = Some(fidelity);
+        self.network = None;
+        self
+    }
+
+    /// Compute backend instance (overrides `params.compute_backend`).
+    pub fn compute(mut self, backend: Box<dyn ComputeBackend>) -> Self {
+        self.compute = Some(backend);
+        self
+    }
+
+    /// Post-run thermal coupling.  Default: [`ThermalSpec::Off`].
+    pub fn thermal(mut self, spec: ThermalSpec) -> Self {
+        self.thermal = spec;
+        self
+    }
+
+    /// Attach a probe; may be called repeatedly.
+    pub fn observer(mut self, observer: ObserverHandle) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Validate the configuration and assemble a runnable [`Simulation`].
+    ///
+    /// Errors (instead of panicking) on impossible hardware — a
+    /// zero-chiplet grid, I/O-only systems with nothing to compute on,
+    /// out-of-range type or I/O indices — and on backends that cannot be
+    /// constructed (e.g. PJRT without `make artifacts`).
+    pub fn build(self) -> anyhow::Result<Simulation> {
+        let hw = self.hardware.unwrap_or_else(|| HardwareConfig::homogeneous_mesh(10, 10));
+        let params = self.params;
+
+        anyhow::ensure!(
+            hw.num_chiplets() > 0,
+            "hardware has zero chiplets ({}x{} grid)",
+            hw.rows,
+            hw.cols
+        );
+        anyhow::ensure!(
+            hw.type_of.len() == hw.num_chiplets(),
+            "type_of has {} entries but the grid has {} chiplets",
+            hw.type_of.len(),
+            hw.num_chiplets()
+        );
+        for (i, &t) in hw.type_of.iter().enumerate() {
+            anyhow::ensure!(
+                t < hw.chiplet_types.len(),
+                "chiplet {i} references type index {t}, but only {} types are defined",
+                hw.chiplet_types.len()
+            );
+        }
+        let mappable = (0..hw.num_chiplets())
+            .filter(|&c| hw.chiplet_type(c).class != ChipletClass::Io)
+            .count();
+        anyhow::ensure!(
+            mappable > 0,
+            "hardware has no compute chiplets: all {} chiplets are ChipletClass::Io \
+             (nothing can host a layer)",
+            hw.num_chiplets()
+        );
+        for &io in &hw.io_chiplets {
+            anyhow::ensure!(
+                io < hw.num_chiplets(),
+                "io_chiplets references chiplet {io}, but the grid has only {}",
+                hw.num_chiplets()
+            );
+        }
+        if let TopologyKind::Custom { links } = &hw.topology {
+            for &(a, b) in links {
+                anyhow::ensure!(
+                    a < hw.num_chiplets() && b < hw.num_chiplets(),
+                    "custom topology link ({a}, {b}) references a chiplet outside the \
+                     {}-chiplet grid",
+                    hw.num_chiplets()
+                );
+            }
+        }
+        anyhow::ensure!(
+            params.inferences_per_model > 0,
+            "inferences_per_model must be >= 1"
+        );
+        anyhow::ensure!(params.power_bin_ns > 0, "power_bin_ns must be > 0");
+
+        let backend = match self.compute {
+            Some(b) => b,
+            None => default_backend(&params)?,
+        };
+        let fidelity = self.fidelity.unwrap_or(params.noc_fidelity);
+        let network = self.network.unwrap_or_else(|| {
+            Box::new(move |topo: &Topology| -> Box<dyn NetworkSim> {
+                match fidelity {
+                    NocFidelity::Packet => Box::new(PacketEngine::new(topo.clone())),
+                    NocFidelity::Flit => Box::new(FlitEngine::new(topo.clone())),
+                }
+            })
+        });
+        let topo = Topology::build(&hw);
+        Ok(Simulation {
+            hw,
+            params,
+            topo,
+            mapper: self.mapper.unwrap_or_else(|| Box::new(NearestNeighbor)),
+            backend,
+            network,
+            thermal: self.thermal,
+            observers: self.observers,
+        })
+    }
+}
+
+/// Construct the backend selected by `params.compute_backend`, returning
+/// an actionable error instead of panicking when it is unavailable.
+fn default_backend(params: &SimParams) -> anyhow::Result<Box<dyn ComputeBackend>> {
+    match params.compute_backend {
+        ComputeBackendKind::Analytical => Ok(Box::new(ClassDispatchBackend::new())),
+        ComputeBackendKind::Pjrt => {
+            let backend = crate::compute::pjrt::PjrtImcBackend::open_default().map_err(|e| {
+                anyhow::anyhow!(
+                    "PJRT compute backend unavailable: {e}\n  expected AOT artifacts \
+                     (manifest.json + imc_batch_*.hlo.txt) under {}\n  build them with \
+                     `make artifacts` and compile with `--features pjrt`, or select \
+                     ComputeBackendKind::Analytical",
+                    crate::runtime::Runtime::default_dir().display()
+                )
+            })?;
+            Ok(Box::new(backend))
+        }
+    }
+}
+
+// ------------------------------------------------------------ simulation
+
+// (run-state structs shared with the event loop below)
+
+#[derive(Debug, Default, Clone)]
+struct LayerRuntime {
+    /// Inferences with inputs ready, awaiting dispatch (credit/queue).
+    ready: VecDeque<u32>,
+    /// Inferences dispatched to chiplet queues.
+    dispatched: u32,
+    /// Inferences whose compute fully finished on this layer.
+    completed: u32,
+    /// Per-inference count of finished segments.
+    segs_done: HashMap<u32, usize>,
+    /// Earliest actual compute start per inference (for latency metrics).
+    start_ns: HashMap<u32, TimeNs>,
+    /// Latest compute completion per inference.
+    done_ns: HashMap<u32, TimeNs>,
+}
+
+struct Instance {
+    req: ModelRequest,
+    model: NeuralModel,
+    mapping: ModelMapping,
+    results: Vec<Vec<ComputeResult>>,
+    layers: Vec<LayerRuntime>,
+    mapped_ns: TimeNs,
+    /// Outstanding weight-load flows (ViT weight-stationary start-up).
+    weight_flows: usize,
+    /// inference index -> (flows outstanding into given layer).
+    inflows: HashMap<(usize, u32), usize>,
+    /// Comm span accounting: injection time per (dst layer, inference).
+    comm_start: HashMap<(usize, u32), TimeNs>,
+    comm_ns: Vec<f64>,
+    inference_latency: Vec<u64>,
+    inference_start: HashMap<u32, TimeNs>,
+    finished: bool,
+}
+
+#[derive(Debug, Default)]
+struct ChipletState {
+    busy: bool,
+    queue: VecDeque<(usize, usize, usize, u32)>, // (inst, layer, seg, inference)
+    busy_ns: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Event {
+    /// A model request enters the arbitration queue.
+    Arrive(usize),
+    /// Re-run arbitration (after an unmap or arrival).
+    TryMap,
+    /// A segment's compute finished on its chiplet.
+    ComputeDone { inst: usize, layer: usize, seg: usize, inference: u32 },
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct QEntry {
+    t: TimeNs,
+    seq: u64,
+    ev: Event,
+}
+
+impl Ord for QEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+impl PartialOrd for QEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A fully assembled co-simulation: the paper's Global Manager with every
+/// extension point resolved.  Build one with [`Simulation::builder`].
+pub struct Simulation {
+    hw: HardwareConfig,
+    params: SimParams,
+    topo: Topology,
+    mapper: Box<dyn Mapper>,
+    backend: Box<dyn ComputeBackend>,
+    network: NetworkFactory,
+    thermal: ThermalSpec,
+    observers: Vec<ObserverHandle>,
+}
+
+impl Simulation {
+    pub fn builder() -> SimulationBuilder {
+        SimulationBuilder::new()
+    }
+
+    pub fn hardware(&self) -> &HardwareConfig {
+        &self.hw
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn mapper_name(&self) -> &'static str {
+        self.mapper.name()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Swap the compute backend after construction (dependency injection
+    /// for tests and for the deprecated `GlobalManager::with_backend`).
+    pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
+        self.backend = backend;
+    }
+
+    /// Run the co-simulation to completion.  Reusable: each call builds a
+    /// fresh network engine and power profile, so two identical calls
+    /// produce identical reports.
+    pub fn run(&mut self, workload: WorkloadConfig) -> anyhow::Result<SimReport> {
+        let wall_start = Instant::now();
+        let stream = WorkloadStream::from_kinds(
+            &workload.kinds,
+            self.params.inferences_per_model,
+            workload.injection_interval_ns,
+        );
+        let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
+        let mut power = PowerTracker::new(self.hw.num_chiplets(), self.params.power_bin_ns);
+        for c in 0..self.hw.num_chiplets() {
+            power.set_baseline_mw(
+                c,
+                self.hw.chiplet_type(c).idle_mw + self.hw.link.router_static_mw,
+            );
+        }
+        let mut ledger = MemoryLedger::new(&self.hw);
+        let mut arb = ArbitrationQueue::new(self.params.age_threshold_ns);
+        let mut chiplets: Vec<ChipletState> =
+            (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect();
+        let mut instances: Vec<Instance> = Vec::new();
+        let mut flow_of: HashMap<FlowId, (usize, usize, u32)> = HashMap::new();
+        let mut outcomes: Vec<ModelOutcome> = Vec::new();
+        let mut dropped: Vec<(usize, ModelKind)> = Vec::new();
+        let mut queue: BinaryHeap<Reverse<QEntry>> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        let push = |queue: &mut BinaryHeap<Reverse<QEntry>>, seq: &mut u64, t: TimeNs, ev: Event| {
+            *seq += 1;
+            queue.push(Reverse(QEntry { t, seq: *seq, ev }));
+        };
+        for (i, req) in stream.requests.iter().enumerate() {
+            push(&mut queue, &mut seq, req.arrival_ns, Event::Arrive(i));
+        }
+        let mut now: TimeNs = 0;
+        let mut compute_energy = 0.0f64;
+        let total_capacity = ledger.total_free();
+
+        macro_rules! notify {
+            ($($call:tt)*) => {
+                for ob in &self.observers {
+                    ob.borrow_mut().$($call)*;
+                }
+            };
+        }
+
+        macro_rules! start_chiplet_if_idle {
+            ($c:expr, $t:expr) => {{
+                let cid = $c;
+                if !chiplets[cid].busy {
+                    if let Some((inst, layer, seg, inference)) = chiplets[cid].queue.pop_front() {
+                        let r = instances[inst].results[layer][seg];
+                        let lat = r.latency_ns.round().max(1.0) as TimeNs;
+                        chiplets[cid].busy = true;
+                        chiplets[cid].busy_ns += lat;
+                        power.add_energy(cid, $t, lat, r.energy_pj);
+                        notify!(on_compute_energy(cid, $t, lat, r.energy_pj));
+                        compute_energy += r.energy_pj;
+                        let lr = &mut instances[inst].layers[layer];
+                        lr.start_ns.entry(inference).or_insert($t);
+                        if layer == 0 {
+                            instances[inst].inference_start.entry(inference).or_insert($t);
+                        }
+                        push(
+                            &mut queue,
+                            &mut seq,
+                            $t + lat,
+                            Event::ComputeDone { inst, layer, seg, inference },
+                        );
+                    }
+                }
+            }};
+        }
+
+        macro_rules! dispatch_ready {
+            ($inst:expr, $layer:expr, $t:expr) => {{
+                let inst = $inst;
+                let layer = $layer;
+                loop {
+                    let can = {
+                        let me = &instances[inst];
+                        let lr = &me.layers[layer];
+                        if lr.ready.is_empty() {
+                            false
+                        } else if !self.params.pipelined {
+                            true // sequential execution: no overlap possible
+                        } else if layer + 1 >= me.layers.len() {
+                            true
+                        } else {
+                            // Double-buffering credit vs downstream stage.
+                            lr.dispatched < me.layers[layer + 1].completed + PIPELINE_CREDITS
+                        }
+                    };
+                    if !can {
+                        break;
+                    }
+                    let inference = instances[inst].layers[layer].ready.pop_front().unwrap();
+                    instances[inst].layers[layer].dispatched += 1;
+                    let nsegs = instances[inst].mapping.layers[layer].len();
+                    for s in 0..nsegs {
+                        let cid = instances[inst].mapping.layers[layer][s].chiplet;
+                        chiplets[cid].queue.push_back((inst, layer, s, inference));
+                        start_chiplet_if_idle!(cid, $t);
+                    }
+                }
+            }};
+        }
+
+        // Models are immutable per kind: build each once and clone cheaply
+        // (arbitration probes used to rebuild the full layer table per
+        // attempt — a measurable share of wall time, see EXPERIMENTS §Perf).
+        let mut model_cache: HashMap<ModelKind, NeuralModel> = HashMap::new();
+        let mut model_of = |kind: ModelKind| -> NeuralModel {
+            model_cache.entry(kind).or_insert_with(|| NeuralModel::build(kind)).clone()
+        };
+
+        macro_rules! try_map_models {
+            ($t:expr) => {{
+                // Thermal-aware extension: rank chiplets by accumulated
+                // dissipation (temperature proxy) when enabled.
+                let heat: Option<Vec<f64>> = if self.params.thermal_aware_hops > 0.0 {
+                    Some(
+                        (0..self.hw.num_chiplets())
+                            .map(|c| power.dynamic_energy_pj(c))
+                            .collect(),
+                    )
+                } else {
+                    None
+                };
+                let ctx = MapContext {
+                    hw: &self.hw,
+                    topo: &self.topo,
+                    heat: heat.as_deref(),
+                    heat_weight_hops: self.params.thermal_aware_hops,
+                };
+                loop {
+                    let taken = arb.take_next_mappable($t, |req| {
+                        let model = model_of(req.kind);
+                        let mut probe = ledger.clone();
+                        self.mapper.try_map(&ctx, &model, &mut probe).is_some()
+                    });
+                    let Some(req) = taken else { break };
+                    let model = model_of(req.kind);
+                    let mapping = self
+                        .mapper
+                        .try_map(&ctx, &model, &mut ledger)
+                        .expect("probe said it fits");
+                    // Batched compute evaluation (one backend call per model).
+                    let mut items = Vec::new();
+                    for layer in mapping.layers.iter() {
+                        for seg in layer {
+                            items.push((self.hw.chiplet_type(seg.chiplet), seg.work));
+                        }
+                    }
+                    let flat = self.backend.evaluate_batch(&items);
+                    let mut results = Vec::with_capacity(mapping.layers.len());
+                    let mut k = 0;
+                    for layer in &mapping.layers {
+                        let n = layer.len();
+                        results.push(flat[k..k + n].to_vec());
+                        k += n;
+                    }
+                    let nlayers = mapping.layers.len();
+                    let inst_id = instances.len();
+                    notify!(on_model_mapped(req.id, req.kind, $t));
+                    let mut inst = Instance {
+                        req: req.clone(),
+                        model,
+                        mapping,
+                        results,
+                        layers: vec![LayerRuntime::default(); nlayers],
+                        mapped_ns: $t,
+                        weight_flows: 0,
+                        inflows: HashMap::new(),
+                        comm_start: HashMap::new(),
+                        comm_ns: vec![0.0; req.inferences as usize],
+                        inference_latency: Vec::new(),
+                        inference_start: HashMap::new(),
+                        finished: false,
+                    };
+                    // ViT-style weight-stationary start-up: stream each
+                    // segment's weights from the nearest I/O chiplet.
+                    if !self.hw.io_chiplets.is_empty() {
+                        let mut flows = Vec::new();
+                        for layer in &inst.mapping.layers {
+                            for seg in layer {
+                                let io = *self
+                                    .hw
+                                    .io_chiplets
+                                    .iter()
+                                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet))
+                                    .unwrap();
+                                flows.push(FlowSpec {
+                                    src: io,
+                                    dst: seg.chiplet,
+                                    bytes: seg.mem_bytes,
+                                });
+                            }
+                        }
+                        inst.weight_flows = flows.len();
+                        instances.push(inst);
+                        for f in flows {
+                            let id = net.inject(f, $t);
+                            flow_of.insert(id, (inst_id, WEIGHT_LAYER, 0));
+                        }
+                    } else {
+                        inst.layers[0].ready.push_back(0);
+                        instances.push(inst);
+                        dispatch_ready!(inst_id, 0, $t);
+                    }
+                }
+                // Requests that can never fit even on an empty system are
+                // dropped (and reported) instead of deadlocking the queue.
+                if instances.iter().all(|i| i.finished) {
+                    let probe_ctx = MapContext {
+                        hw: &self.hw,
+                        topo: &self.topo,
+                        heat: None,
+                        heat_weight_hops: 0.0,
+                    };
+                    while let Some(req) = arb.take_next_mappable($t, |_| true) {
+                        let model = model_of(req.kind);
+                        let mut probe = MemoryLedger::new(&self.hw);
+                        if self.mapper.try_map(&probe_ctx, &model, &mut probe).is_none() {
+                            log::warn!(
+                                "dropping model {} ({}): needs {} bytes, system has {}",
+                                req.id,
+                                req.kind.name(),
+                                model.total_weight_bytes(),
+                                total_capacity
+                            );
+                            notify!(on_model_dropped(req.id, req.kind, $t));
+                            dropped.push((req.id, req.kind));
+                        } else {
+                            arb.push(req);
+                            break;
+                        }
+                    }
+                }
+            }};
+        }
+
+        macro_rules! emit_layer_flows {
+            ($inst:expr, $layer:expr, $inference:expr, $t:expr) => {{
+                let inst = $inst;
+                let layer = $layer;
+                let inference = $inference;
+                let (flows, expected) = {
+                    let me = &instances[inst];
+                    let out_bytes = me.model.layers[layer].out_bytes;
+                    let srcs = &me.mapping.layers[layer];
+                    let dsts = &me.mapping.layers[layer + 1];
+                    let mut flows = Vec::new();
+                    for s in srcs {
+                        // Each destination segment needs the full activation
+                        // tensor; each source produced `frac` of it.
+                        let bytes = ((out_bytes as f64) * s.frac).ceil().max(1.0) as u64;
+                        for d in dsts {
+                            flows.push(FlowSpec { src: s.chiplet, dst: d.chiplet, bytes });
+                        }
+                    }
+                    let n = flows.len();
+                    (flows, n)
+                };
+                instances[inst].inflows.insert((layer + 1, inference), expected);
+                instances[inst].comm_start.insert((layer + 1, inference), $t);
+                for f in flows {
+                    let id = net.inject(f, $t);
+                    flow_of.insert(id, (inst, layer + 1, inference));
+                }
+            }};
+        }
+
+        macro_rules! finish_instance {
+            ($inst:expr, $t:expr) => {{
+                let inst = $inst;
+                instances[inst].finished = true;
+                ledger.release_mapping(&instances[inst].mapping);
+                let me = &instances[inst];
+                outcomes.push(ModelOutcome {
+                    id: me.req.id,
+                    kind: me.req.kind,
+                    arrival_ns: me.req.arrival_ns,
+                    mapped_ns: me.mapped_ns,
+                    finished_ns: $t,
+                    inferences: me.req.inferences,
+                    inference_latency_ns: me.inference_latency.clone(),
+                    // Pure compute span per inference: sum over layers of the
+                    // slowest segment (segments of a layer run in parallel).
+                    compute_ns: {
+                        let per_inf: f64 = me
+                            .results
+                            .iter()
+                            .map(|layer| {
+                                layer.iter().map(|r| r.latency_ns).fold(0.0f64, f64::max)
+                            })
+                            .sum();
+                        vec![per_inf; me.req.inferences as usize]
+                    },
+                    comm_ns: me.comm_ns.clone(),
+                    segments: me.mapping.total_segments(),
+                });
+                notify!(on_model_finished(outcomes.last().unwrap()));
+                push(&mut queue, &mut seq, $t, Event::TryMap);
+            }};
+        }
+
+        // ------------------------------------------------------ main loop
+        loop {
+            let t_next = queue.peek().map(|Reverse(e)| e.t).unwrap_or(TimeNs::MAX);
+            if net.has_active() {
+                if let Some(c) = net.advance_until(t_next) {
+                    now = now.max(c.time);
+                    for (node, t, pj) in net.drain_energy_events() {
+                        power.add_event(node, t, pj);
+                        notify!(on_noc_energy(node, t, pj));
+                    }
+                    let Some((inst, layer, inference)) = flow_of.remove(&c.id) else {
+                        continue;
+                    };
+                    if instances[inst].finished {
+                        continue;
+                    }
+                    if layer == WEIGHT_LAYER {
+                        instances[inst].weight_flows -= 1;
+                        if instances[inst].weight_flows == 0 {
+                            instances[inst].layers[0].ready.push_back(0);
+                            dispatch_ready!(inst, 0, c.time);
+                        }
+                    } else {
+                        let left = instances[inst].inflows.get_mut(&(layer, inference)).unwrap();
+                        *left -= 1;
+                        if *left == 0 {
+                            instances[inst].inflows.remove(&(layer, inference));
+                            if let Some(t0) =
+                                instances[inst].comm_start.remove(&(layer, inference))
+                            {
+                                let span = (c.time - t0) as f64;
+                                if let Some(slot) =
+                                    instances[inst].comm_ns.get_mut(inference as usize)
+                                {
+                                    *slot += span;
+                                }
+                            }
+                            instances[inst].layers[layer].ready.push_back(inference);
+                            dispatch_ready!(inst, layer, c.time);
+                        }
+                    }
+                    continue;
+                }
+            }
+            let Some(Reverse(entry)) = queue.pop() else {
+                break;
+            };
+            now = now.max(entry.t);
+            if self.params.max_sim_time_ns > 0 && now > self.params.max_sim_time_ns {
+                log::warn!("max_sim_time reached at {now} ns; truncating run");
+                break;
+            }
+            match entry.ev {
+                Event::Arrive(i) => {
+                    arb.push(stream.requests[i].clone());
+                    try_map_models!(entry.t);
+                }
+                Event::TryMap => {
+                    try_map_models!(entry.t);
+                }
+                Event::ComputeDone { inst, layer, seg, inference } => {
+                    let cid = instances[inst].mapping.layers[layer][seg].chiplet;
+                    chiplets[cid].busy = false;
+                    start_chiplet_if_idle!(cid, entry.t);
+                    let nsegs = instances[inst].mapping.layers[layer].len();
+                    let done = {
+                        let lr = &mut instances[inst].layers[layer];
+                        let cnt = lr.segs_done.entry(inference).or_insert(0);
+                        *cnt += 1;
+                        *cnt == nsegs
+                    };
+                    if !done {
+                        continue;
+                    }
+                    // Whole layer finished this inference.
+                    {
+                        let lr = &mut instances[inst].layers[layer];
+                        lr.segs_done.remove(&inference);
+                        lr.completed += 1;
+                        lr.done_ns.insert(inference, entry.t);
+                    }
+                    let nlayers = instances[inst].layers.len();
+                    let n_inf = instances[inst].req.inferences;
+                    // Free a downstream credit for the upstream stage.
+                    if self.params.pipelined && layer > 0 {
+                        dispatch_ready!(inst, layer - 1, entry.t);
+                    }
+                    // Pipelined: layer 0 chains itself to the next inference.
+                    if self.params.pipelined && layer == 0 && inference + 1 < n_inf {
+                        instances[inst].layers[0].ready.push_back(inference + 1);
+                        dispatch_ready!(inst, 0, entry.t);
+                    }
+                    if layer + 1 < nlayers {
+                        emit_layer_flows!(inst, layer, inference, entry.t);
+                    } else {
+                        // Inference complete.
+                        let start = *instances[inst]
+                            .inference_start
+                            .get(&inference)
+                            .unwrap_or(&instances[inst].mapped_ns);
+                        instances[inst].inference_latency.push(entry.t - start);
+                        if !self.params.pipelined && inference + 1 < n_inf {
+                            instances[inst].layers[0].ready.push_back(inference + 1);
+                            dispatch_ready!(inst, 0, entry.t);
+                        }
+                        if instances[inst].inference_latency.len() == n_inf as usize {
+                            finish_instance!(inst, entry.t);
+                        }
+                    }
+                }
+            }
+        }
+
+        for (node, t, pj) in net.drain_energy_events() {
+            power.add_event(node, t, pj);
+            notify!(on_noc_energy(node, t, pj));
+        }
+        let span_ns = now;
+        let link_util =
+            crate::noc::LinkUtilization::from_busy(&net.link_busy_ns(), span_ns);
+        let hi = span_ns.saturating_sub(self.params.cooldown_ns).max(self.params.warmup_ns);
+        let thermal = self.solve_thermal(&power)?;
+        let report = SimReport {
+            outcomes,
+            dropped,
+            span_ns,
+            power,
+            chiplet_busy_ns: chiplets.iter().map(|c| c.busy_ns).collect(),
+            comm_energy_pj: net.comm_energy_pj(),
+            compute_energy_pj: compute_energy,
+            noc_work: net.work_done(),
+            link_util,
+            wall_ns: wall_start.elapsed().as_nanos(),
+            stats_window: (self.params.warmup_ns, hi),
+            thermal,
+        };
+        for ob in &self.observers {
+            ob.borrow_mut().on_run_complete(&report);
+        }
+        Ok(report)
+    }
+
+    /// Post-run thermal coupling (paper §V-D): decimate the 1 µs power
+    /// bins and integrate the RC network, preferring the PJRT AOT solver
+    /// under [`ThermalSpec::Auto`].
+    fn solve_thermal(&self, power: &PowerTracker) -> anyhow::Result<Option<ThermalSummary>> {
+        use crate::thermal::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
+        let (stride, prefer_pjrt) = match self.thermal {
+            ThermalSpec::Off => return Ok(None),
+            ThermalSpec::Native { stride_bins } => (stride_bins.max(1), false),
+            ThermalSpec::Auto { stride_bins } => (stride_bins.max(1), true),
+        };
+        let rows = power.matrix_w(stride);
+        if rows.is_empty() {
+            return Ok(None);
+        }
+        let tm = ThermalModel::build(&self.hw);
+        let dt_s = stride as f64 * power.bin_ns as f64 * 1e-9;
+        let node_steps: Vec<Vec<f64>> = rows.iter().map(|r| tm.node_power(r)).collect();
+        let t0 = vec![0.0; tm.n];
+        let (traj, solver) = if prefer_pjrt {
+            match PjrtThermalSolver::open_default(&tm, dt_s) {
+                Ok(mut s) => (s.transient(&t0, &node_steps)?, "pjrt-aot"),
+                Err(e) => {
+                    log::warn!("PJRT thermal unavailable ({e}); using native solver");
+                    (NativeSolver::new(&tm, dt_s)?.transient(&t0, &node_steps), "native")
+                }
+            }
+        } else {
+            (NativeSolver::new(&tm, dt_s)?.transient(&t0, &node_steps), "native")
+        };
+        let steps = traj.len();
+        let last = match traj.last() {
+            Some(last) => last.clone(),
+            None => return Ok(None),
+        };
+        let temps: Vec<f64> = (0..self.hw.num_chiplets())
+            .map(|c| tm.chiplet_temp(&last, c) + tm.ambient_c)
+            .collect();
+        let hottest = temps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let coolest = temps.iter().cloned().fold(f64::INFINITY, f64::min);
+        Ok(Some(ThermalSummary {
+            solver,
+            steps,
+            hottest_c: hottest,
+            coolest_c: coolest,
+            spread_k: hottest - coolest,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelKind;
+
+    fn small_params() -> SimParams {
+        SimParams {
+            inferences_per_model: 2,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        }
+    }
+
+    fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+        Simulation::builder().hardware(hw).params(params).build().expect("valid config")
+    }
+
+    #[test]
+    fn single_model_completes() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let report = sim(hw, small_params())
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 1);
+        assert_eq!(report.outcomes[0].inference_latency_ns.len(), 2);
+        assert!(report.outcomes[0].mean_latency_ns() > 0.0);
+        assert!(report.dropped.is_empty());
+    }
+
+    #[test]
+    fn pipelined_is_not_slower_in_throughput() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let mut p1 = small_params();
+        p1.inferences_per_model = 8;
+        let mut p2 = p1.clone();
+        p2.pipelined = true;
+        let r_seq = sim(hw.clone(), p1)
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let r_pipe = sim(hw, p2)
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        // Pipelining overlaps layers: total completion time must shrink.
+        assert!(
+            r_pipe.outcomes[0].finished_ns < r_seq.outcomes[0].finished_ns,
+            "pipe {} !< seq {}",
+            r_pipe.outcomes[0].finished_ns,
+            r_seq.outcomes[0].finished_ns
+        );
+    }
+
+    #[test]
+    fn oversized_model_is_dropped_not_deadlocked() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2); // 8 MiB total
+        let report = sim(hw, small_params())
+            .run(WorkloadConfig::single(ModelKind::AlexNet))
+            .unwrap();
+        assert_eq!(report.outcomes.len(), 0);
+        assert_eq!(report.dropped.len(), 1);
+    }
+
+    #[test]
+    fn stream_of_models_all_finish() {
+        let hw = HardwareConfig::homogeneous_mesh(8, 8);
+        let mut params = small_params();
+        params.pipelined = true;
+        let wl = WorkloadConfig::from_kinds(&[
+            ModelKind::ResNet18,
+            ModelKind::AlexNet,
+            ModelKind::ResNet34,
+            ModelKind::ResNet18,
+        ]);
+        let report = sim(hw, params).run(wl).unwrap();
+        assert_eq!(report.outcomes.len() + report.dropped.len(), 4);
+        assert!(report.outcomes.len() >= 3);
+        // Power was tracked.
+        assert!(report.power.num_bins() > 0);
+        assert!(report.comm_energy_pj > 0.0);
+        assert!(report.compute_energy_pj > 0.0);
+    }
+
+    #[test]
+    fn contention_from_parallel_models_inflates_latency() {
+        // One ResNet18 alone vs four running concurrently on the same mesh.
+        let hw = HardwareConfig::homogeneous_mesh(10, 10);
+        let mut params = small_params();
+        params.pipelined = true;
+        params.inferences_per_model = 4;
+        let solo = sim(hw.clone(), params.clone())
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let busy = sim(hw, params)
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 4]))
+            .unwrap();
+        let lat_solo = solo.mean_latency_of(ModelKind::ResNet18).unwrap();
+        let lat_busy = busy.mean_latency_of(ModelKind::ResNet18).unwrap();
+        assert!(
+            lat_busy > lat_solo,
+            "contention must inflate latency: busy {lat_busy} !> solo {lat_solo}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let hw = HardwareConfig::homogeneous_mesh(6, 6);
+        let run = || {
+            sim(hw.clone(), small_params())
+                .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::AlexNet]))
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.span_ns, b.span_ns);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn same_simulation_is_reusable() {
+        // Two run() calls on one Simulation are independent and identical.
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let mut s = sim(hw, small_params());
+        let a = s.run(WorkloadConfig::single(ModelKind::ResNet18)).unwrap();
+        let b = s.run(WorkloadConfig::single(ModelKind::ResNet18)).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn power_observer_matches_builtin_tracker() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let probe = Rc::new(RefCell::new(PowerTracker::new(
+            hw.num_chiplets(),
+            crate::POWER_BIN_NS,
+        )));
+        let report = Simulation::builder()
+            .hardware(hw.clone())
+            .params(small_params())
+            .observer(probe.clone())
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        // The attached probe saw every energy booking the built-in
+        // tracker did (baselines differ: the probe has none set).
+        let p = probe.borrow();
+        for c in 0..hw.num_chiplets() {
+            let a = report.power.dynamic_energy_pj(c);
+            let b = p.dynamic_energy_pj(c);
+            assert!((a - b).abs() <= 1e-9 * a.abs().max(1.0), "chiplet {c}: {a} != {b}");
+        }
+    }
+
+    #[test]
+    fn event_counter_observer_sees_lifecycle() {
+        let hw = HardwareConfig::homogeneous_mesh(6, 6);
+        let counter = Rc::new(RefCell::new(EventCounter::default()));
+        let report = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .observer(counter.clone())
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::AlexNet]))
+            .unwrap();
+        let c = counter.borrow();
+        assert_eq!(c.mapped, report.outcomes.len());
+        assert_eq!(c.finished, report.outcomes.len());
+        assert_eq!(c.dropped, report.dropped.len());
+        assert!(c.compute_events > 0);
+        assert!((c.compute_energy_pj - report.compute_energy_pj).abs() < 1e-6);
+    }
+
+    #[test]
+    fn custom_network_factory_is_used() {
+        // Injecting the flit engine explicitly must match selecting it
+        // via params.noc_fidelity.
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let mut p = small_params();
+        p.noc_fidelity = NocFidelity::Flit;
+        let via_params = sim(hw.clone(), p)
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let via_factory = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .network(|topo| Box::new(FlitEngine::new(topo.clone())))
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        assert_eq!(via_params.fingerprint(), via_factory.fingerprint());
+    }
+
+    #[test]
+    fn network_fidelity_survives_a_later_params_call() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        // .params() after .network_fidelity() must not revert the choice.
+        let a = Simulation::builder()
+            .network_fidelity(NocFidelity::Flit)
+            .hardware(hw.clone())
+            .params(small_params()) // carries the Packet default
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let mut p = small_params();
+        p.noc_fidelity = NocFidelity::Flit;
+        let b = sim(hw, p).run(WorkloadConfig::single(ModelKind::ResNet18)).unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn build_rejects_zero_chiplet_grid() {
+        let hw = HardwareConfig::homogeneous_mesh(0, 4);
+        let err = Simulation::builder().hardware(hw).build().err().expect("must fail");
+        assert!(err.to_string().contains("zero chiplets"), "{err}");
+    }
+
+    #[test]
+    fn build_rejects_io_only_hardware() {
+        let mut hw = HardwareConfig::homogeneous_mesh(2, 2);
+        hw.chiplet_types = vec![crate::config::ChipletTypeParams::io_die()];
+        hw.type_of = vec![0; 4];
+        let err = Simulation::builder().hardware(hw).build().err().expect("must fail");
+        assert!(err.to_string().contains("no compute chiplets"), "{err}");
+    }
+
+    #[test]
+    fn native_thermal_summary_is_populated() {
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let report = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .thermal(ThermalSpec::Native { stride_bins: 10 })
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let th = report.thermal.expect("thermal summary");
+        assert_eq!(th.solver, "native");
+        assert!(th.steps > 0);
+        assert!(th.hottest_c >= th.coolest_c);
+        assert!(th.spread_k >= 0.0);
+    }
+}

@@ -316,7 +316,7 @@ mod tests {
     #[test]
     fn new_models_map_and_simulate() {
         use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
-        use crate::sim::GlobalManager;
+        use crate::sim::Simulation;
         let hw = HardwareConfig::homogeneous_mesh(10, 10);
         let params = SimParams {
             inferences_per_model: 1,
@@ -325,7 +325,11 @@ mod tests {
             ..SimParams::default()
         };
         for kind in [ModelKind::Vgg16, ModelKind::MobileNetV1] {
-            let report = GlobalManager::new(hw.clone(), params.clone())
+            let report = Simulation::builder()
+                .hardware(hw.clone())
+                .params(params.clone())
+                .build()
+                .unwrap()
                 .run(WorkloadConfig::single(kind))
                 .unwrap();
             assert_eq!(report.outcomes.len(), 1, "{kind:?}");

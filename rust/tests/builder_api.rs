@@ -1,0 +1,175 @@
+//! Public-API tests for the `Simulation` builder, the scenario registry,
+//! and the parallel `SweepRunner` (default-fill, invalid-combination
+//! errors, and the parallel == sequential determinism guarantee).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use chipsim::prelude::*;
+use chipsim::sim::EventCounter;
+
+// ------------------------------------------------------------- defaults
+
+#[test]
+fn builder_default_fills_every_part() {
+    // No hardware, params, mapper, network, or compute supplied: the
+    // builder must produce the documented defaults (10x10 type-A mesh,
+    // nearest-neighbour mapper, analytical backend).
+    let sim = Simulation::builder().build().expect("defaults are valid");
+    assert_eq!(sim.hardware().rows, 10);
+    assert_eq!(sim.hardware().cols, 10);
+    assert_eq!(sim.mapper_name(), "nearest-neighbor");
+    assert_eq!(sim.backend_name(), "analytical");
+    assert!(!sim.params().pipelined);
+}
+
+#[test]
+fn builder_runs_a_minimal_workload_with_defaults() {
+    let report = Simulation::builder()
+        .params(SimParams {
+            inferences_per_model: 1,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        })
+        .build()
+        .unwrap()
+        .run(WorkloadConfig::single(ModelKind::ResNet18))
+        .unwrap();
+    assert_eq!(report.outcomes.len(), 1);
+    assert!(report.thermal.is_none(), "thermal defaults to off");
+}
+
+// ------------------------------------------------- invalid combinations
+
+#[test]
+fn zero_chiplet_mesh_is_a_build_error() {
+    for (rows, cols) in [(0, 4), (4, 0), (0, 0)] {
+        let hw = HardwareConfig::homogeneous_mesh(rows, cols);
+        let err = Simulation::builder().hardware(hw).build().err();
+        assert!(err.is_some(), "{rows}x{cols} must fail");
+        assert!(err.unwrap().to_string().contains("zero chiplets"));
+    }
+}
+
+#[test]
+fn io_only_hardware_is_a_build_error() {
+    let mut hw = HardwareConfig::homogeneous_mesh(3, 3);
+    hw.chiplet_types = vec![chipsim::config::ChipletTypeParams::io_die()];
+    hw.type_of = vec![0; 9];
+    let err = Simulation::builder().hardware(hw).build().err().expect("must fail");
+    assert!(err.to_string().contains("no compute chiplets"), "{err}");
+}
+
+#[test]
+fn out_of_range_type_index_is_a_build_error() {
+    let mut hw = HardwareConfig::homogeneous_mesh(2, 2);
+    hw.type_of[3] = 7; // only one chiplet type defined
+    let err = Simulation::builder().hardware(hw).build().err().expect("must fail");
+    assert!(err.to_string().contains("type index"), "{err}");
+}
+
+#[test]
+fn zero_inferences_is_a_build_error() {
+    let err = Simulation::builder()
+        .params(SimParams { inferences_per_model: 0, ..SimParams::default() })
+        .build()
+        .err()
+        .expect("must fail");
+    assert!(err.to_string().contains("inferences_per_model"), "{err}");
+}
+
+// ------------------------------------------------------------ observers
+
+#[test]
+fn observers_from_prelude_compose() {
+    let counter = Rc::new(RefCell::new(EventCounter::default()));
+    let report = Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(4, 4))
+        .params(SimParams {
+            inferences_per_model: 1,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        })
+        .observer(counter.clone())
+        .build()
+        .unwrap()
+        .run(WorkloadConfig::single(ModelKind::ResNet18))
+        .unwrap();
+    assert_eq!(counter.borrow().finished, report.outcomes.len());
+}
+
+// ----------------------------------------------------- scenario registry
+
+#[test]
+fn registry_scenarios_build_valid_simulations() {
+    let reg = Registry::builtin();
+    assert!(reg.len() >= 4, "registry too small: {:?}", reg.names());
+    for sc in reg.iter() {
+        let sim = sc.build().unwrap_or_else(|e| panic!("scenario '{}': {e}", sc.name));
+        assert!(sim.hardware().num_chiplets() > 0);
+    }
+}
+
+#[test]
+fn scenario_run_is_seed_deterministic() {
+    let reg = Registry::builtin();
+    let sc = reg.get("mesh-6x6-quickstart").expect("builtin");
+    let a = sc.run(7).unwrap();
+    let b = sc.run(7).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    // A seed that samples a different CNN stream gives a different run.
+    let base_kinds = sc.workload(7).kinds;
+    let mut alt = 8u64;
+    while sc.workload(alt).kinds == base_kinds {
+        alt += 1;
+    }
+    let c = sc.run(alt).unwrap();
+    assert_ne!(a.fingerprint(), c.fingerprint());
+}
+
+// ----------------------------------------------------------- sweep runner
+
+#[test]
+fn sweep_parallel_matches_sequential_byte_for_byte() {
+    // The acceptance bar: >= 4 registry scenarios, run concurrently,
+    // byte-identical to the sequential reference.
+    let reg = Registry::builtin();
+    let names = [
+        "mesh-6x6-quickstart",
+        "flit-validation",
+        "ccd-star",
+        "thermal-hotspot",
+        "floret",
+    ];
+    let runner = SweepRunner::new().threads(4).base_seed(0xDEC0DE);
+    let par = runner.run(&reg, &names).unwrap();
+    let seq = runner.run_sequential(&reg, &names).unwrap();
+    assert_eq!(par.len(), names.len());
+    for (p, s) in par.iter().zip(&seq) {
+        assert_eq!(p.scenario, s.scenario, "outcome order must match input order");
+        assert_eq!(p.seed, s.seed);
+        let (pr, sr) = (p.result.as_ref().unwrap(), s.result.as_ref().unwrap());
+        assert_eq!(
+            pr.fingerprint(),
+            sr.fingerprint(),
+            "parallel run of '{}' diverged from sequential",
+            p.scenario
+        );
+    }
+}
+
+#[test]
+fn sweep_single_thread_equals_many_threads() {
+    let reg = Registry::builtin();
+    let names = ["mesh-6x6-quickstart", "flit-validation"];
+    let one = SweepRunner::new().threads(1).run(&reg, &names).unwrap();
+    let many = SweepRunner::new().threads(8).run(&reg, &names).unwrap();
+    for (a, b) in one.iter().zip(&many) {
+        assert_eq!(
+            a.result.as_ref().unwrap().fingerprint(),
+            b.result.as_ref().unwrap().fingerprint()
+        );
+    }
+}

@@ -8,7 +8,7 @@ use chipsim::config::{
 use chipsim::noc::engine::PacketEngine;
 use chipsim::noc::topology::{ccd_star, mesh, Topology};
 use chipsim::noc::{FlowSpec, NetworkSim};
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::workload::{ModelKind, NeuralModel};
 use chipsim::TimeNs;
 
@@ -20,6 +20,15 @@ fn params(pipelined: bool, inf: u32) -> SimParams {
         cooldown_ns: 0,
         ..SimParams::default()
     }
+}
+
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid test configuration")
 }
 
 // ------------------------------------------------------------ NoC edges
@@ -99,7 +108,7 @@ fn max_sim_time_truncates_cleanly() {
     let hw = HardwareConfig::homogeneous_mesh(6, 6);
     let mut p = params(false, 50);
     p.max_sim_time_ns = 100_000; // 100 µs — far less than 50 inferences
-    let report = GlobalManager::new(hw, p)
+    let report = sim(hw, p)
         .run(WorkloadConfig::single(ModelKind::ResNet18))
         .unwrap();
     // Model won't finish; no outcome, but no panic/hang either.
@@ -110,7 +119,7 @@ fn max_sim_time_truncates_cleanly() {
 #[test]
 fn zero_inference_model_is_noop_safe() {
     let hw = HardwareConfig::homogeneous_mesh(4, 4);
-    let report = GlobalManager::new(hw, params(true, 1))
+    let report = sim(hw, params(true, 1))
         .run(WorkloadConfig::from_kinds(&[]))
         .unwrap();
     assert!(report.outcomes.is_empty());
@@ -125,7 +134,7 @@ fn vit_weight_load_delays_first_inference() {
     let with_io = HardwareConfig::vit_mesh(10, 10);
     let no_io = HardwareConfig::homogeneous_mesh(10, 10);
     let run = |hw: HardwareConfig| {
-        GlobalManager::new(hw, params(true, 1))
+        sim(hw, params(true, 1))
             .run(WorkloadConfig::single(ModelKind::VitB16))
             .unwrap()
     };
@@ -144,7 +153,7 @@ fn repeated_runs_do_not_leak_chiplet_state() {
     // Two sequential models on a tiny system: second must see all memory
     // returned by the first (regression guard for unmap accounting).
     let hw = HardwareConfig::homogeneous_mesh(4, 4);
-    let report = GlobalManager::new(hw, params(false, 1))
+    let report = sim(hw, params(false, 1))
         .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 4]))
         .unwrap();
     assert_eq!(report.outcomes.len(), 4);
@@ -159,7 +168,7 @@ fn warmup_cooldown_window_filters_stats() {
     let hw = HardwareConfig::homogeneous_mesh(6, 6);
     let mut p = params(false, 1);
     p.warmup_ns = u64::MAX / 2; // absurd warmup: window empty
-    let report = GlobalManager::new(hw, p)
+    let report = sim(hw, p)
         .run(WorkloadConfig::single(ModelKind::ResNet18))
         .unwrap();
     // Falls back to all instances instead of returning nothing.

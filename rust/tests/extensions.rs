@@ -5,7 +5,7 @@ use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
 use chipsim::mapping::{MemoryLedger, NearestNeighborMapper};
 use chipsim::noc::topology::Topology;
 use chipsim::noc::LinkUtilization;
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::workload::{ModelKind, NeuralModel};
 
 fn params(pipelined: bool, inf: u32) -> SimParams {
@@ -18,12 +18,21 @@ fn params(pipelined: bool, inf: u32) -> SimParams {
     }
 }
 
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid test configuration")
+}
+
 // ------------------------------------------------------ link utilization
 
 #[test]
 fn link_utilization_reported_and_bounded() {
     let hw = HardwareConfig::homogeneous_mesh(6, 6);
-    let report = GlobalManager::new(hw, params(true, 3))
+    let report = sim(hw, params(true, 3))
         .run(WorkloadConfig::cnn_stream(6, 3, 0xC0FFEE))
         .unwrap();
     let u = &report.link_util;
@@ -37,10 +46,10 @@ fn link_utilization_reported_and_bounded() {
 #[test]
 fn utilization_grows_with_load() {
     let hw = HardwareConfig::homogeneous_mesh(8, 8);
-    let light = GlobalManager::new(hw.clone(), params(true, 1))
+    let light = sim(hw.clone(), params(true, 1))
         .run(WorkloadConfig::single(ModelKind::ResNet18))
         .unwrap();
-    let heavy = GlobalManager::new(hw, params(true, 10))
+    let heavy = sim(hw, params(true, 10))
         .run(WorkloadConfig::cnn_stream(10, 10, 0xC0FFEE))
         .unwrap();
     assert!(
@@ -124,7 +133,7 @@ fn thermal_aware_cosim_spreads_energy() {
     let run = |aware: f64| {
         let mut p = params(false, 3);
         p.thermal_aware_hops = aware;
-        let report = GlobalManager::new(hw.clone(), p)
+        let report = sim(hw.clone(), p)
             .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18; 5]))
             .unwrap();
         let per: Vec<f64> =
@@ -147,7 +156,7 @@ fn thermal_aware_keeps_correctness_invariants() {
     let hw = HardwareConfig::heterogeneous_mesh(8, 8);
     let mut p = params(true, 2);
     p.thermal_aware_hops = 4.0;
-    let report = GlobalManager::new(hw, p)
+    let report = sim(hw, p)
         .run(WorkloadConfig::cnn_stream(8, 2, 0xC0FFEE))
         .unwrap();
     assert_eq!(report.outcomes.len() + report.dropped.len(), 8);

@@ -5,7 +5,7 @@
 use chipsim::baselines::BaselineEstimator;
 use chipsim::config::{HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
 use chipsim::metrics::inaccuracy_pct;
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::thermal::{native::NativeSolver, ThermalModel};
 use chipsim::workload::{ModelKind, ALL_CNNS};
 
@@ -19,11 +19,20 @@ fn params(pipelined: bool, inferences: u32) -> SimParams {
     }
 }
 
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid test configuration")
+}
+
 #[test]
 fn every_cnn_runs_end_to_end_on_the_paper_mesh() {
     let hw = HardwareConfig::homogeneous_mesh(10, 10);
     for kind in ALL_CNNS {
-        let report = GlobalManager::new(hw.clone(), params(false, 2))
+        let report = sim(hw.clone(), params(false, 2))
             .run(WorkloadConfig::single(kind))
             .unwrap();
         assert_eq!(report.outcomes.len(), 1, "{kind:?}");
@@ -37,7 +46,7 @@ fn every_cnn_runs_end_to_end_on_the_paper_mesh() {
 #[test]
 fn vit_runs_on_the_io_corner_mesh() {
     let hw = HardwareConfig::vit_mesh(10, 10);
-    let report = GlobalManager::new(hw, params(true, 2))
+    let report = sim(hw, params(true, 2))
         .run(WorkloadConfig::single(ModelKind::VitB16))
         .unwrap();
     assert_eq!(report.outcomes.len(), 1);
@@ -50,10 +59,10 @@ fn vit_runs_on_the_io_corner_mesh() {
 #[test]
 fn pipelining_increases_throughput_but_not_below_single_inference_latency() {
     let hw = HardwareConfig::homogeneous_mesh(10, 10);
-    let seq = GlobalManager::new(hw.clone(), params(false, 8))
+    let seq = sim(hw.clone(), params(false, 8))
         .run(WorkloadConfig::single(ModelKind::ResNet34))
         .unwrap();
-    let pipe = GlobalManager::new(hw, params(true, 8))
+    let pipe = sim(hw, params(true, 8))
         .run(WorkloadConfig::single(ModelKind::ResNet34))
         .unwrap();
     let total_seq = seq.outcomes[0].finished_ns - seq.outcomes[0].mapped_ns;
@@ -70,7 +79,7 @@ fn error_grows_with_inference_count_pipelined() {
     let cc = base.comm_compute(ModelKind::ResNet18).unwrap().inference_latency_ns;
     let mut errs = Vec::new();
     for inf in [1u32, 10] {
-        let report = GlobalManager::new(hw.clone(), params(true, inf))
+        let report = sim(hw.clone(), params(true, inf))
             .run(WorkloadConfig::cnn_stream(12, inf, 0xC0FFEE))
             .unwrap();
         let cs = report.mean_latency_of(ModelKind::ResNet18).unwrap();
@@ -87,7 +96,7 @@ fn heterogeneous_mesh_shifts_time_toward_compute() {
     let homog = HardwareConfig::homogeneous_mesh(10, 10);
     let hetero = HardwareConfig::heterogeneous_mesh(10, 10);
     let share = |hw: HardwareConfig| {
-        let report = GlobalManager::new(hw, params(true, 3))
+        let report = sim(hw, params(true, 3))
             .run(WorkloadConfig::cnn_stream(8, 3, 0xC0FFEE))
             .unwrap();
         let (comp, comm) = report.mean_compute_comm_of(ModelKind::ResNet18).unwrap();
@@ -106,7 +115,7 @@ fn heterogeneous_mesh_shifts_time_toward_compute() {
 #[test]
 fn floret_topology_runs_the_full_stream() {
     let hw = HardwareConfig::floret(10, 10, 10);
-    let report = GlobalManager::new(hw, params(true, 2))
+    let report = sim(hw, params(true, 2))
         .run(WorkloadConfig::cnn_stream(8, 2, 0xC0FFEE))
         .unwrap();
     assert!(report.outcomes.len() >= 7);
@@ -122,8 +131,8 @@ fn flit_and_packet_fidelity_agree_on_ordering() {
     let mut p_flit = params(false, 1);
     p_flit.noc_fidelity = NocFidelity::Flit;
     let wl = WorkloadConfig::single(ModelKind::ResNet18);
-    let r_packet = GlobalManager::new(hw.clone(), p_packet).run(wl.clone()).unwrap();
-    let r_flit = GlobalManager::new(hw, p_flit).run(wl).unwrap();
+    let r_packet = sim(hw.clone(), p_packet).run(wl.clone()).unwrap();
+    let r_flit = sim(hw, p_flit).run(wl).unwrap();
     let lp = r_packet.outcomes[0].mean_latency_ns();
     let lf = r_flit.outcomes[0].mean_latency_ns();
     let ratio = lf / lp;
@@ -136,7 +145,7 @@ fn flit_and_packet_fidelity_agree_on_ordering() {
 #[test]
 fn power_profile_feeds_thermal_and_heats_busy_chiplets() {
     let hw = HardwareConfig::homogeneous_mesh(6, 6);
-    let report = GlobalManager::new(hw.clone(), params(true, 4))
+    let report = sim(hw.clone(), params(true, 4))
         .run(WorkloadConfig::cnn_stream(4, 4, 0xF00D))
         .unwrap();
     let tm = ThermalModel::build(&hw);
@@ -157,7 +166,7 @@ fn power_profile_feeds_thermal_and_heats_busy_chiplets() {
 #[test]
 fn dropped_models_are_reported_not_lost() {
     let hw = HardwareConfig::homogeneous_mesh(3, 3); // 18 MiB: AlexNet won't fit
-    let report = GlobalManager::new(hw, params(false, 1))
+    let report = sim(hw, params(false, 1))
         .run(WorkloadConfig::from_kinds(&[
             ModelKind::ResNet18,
             ModelKind::AlexNet,
@@ -172,7 +181,7 @@ fn dropped_models_are_reported_not_lost() {
 #[test]
 fn report_summary_renders() {
     let hw = HardwareConfig::homogeneous_mesh(4, 4);
-    let report = GlobalManager::new(hw, params(false, 1))
+    let report = sim(hw, params(false, 1))
         .run(WorkloadConfig::single(ModelKind::ResNet18))
         .unwrap();
     let s = report.summary();

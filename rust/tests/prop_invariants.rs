@@ -9,10 +9,19 @@ use chipsim::noc::engine::PacketEngine;
 use chipsim::noc::topology::{custom, floret, mesh, Topology};
 use chipsim::noc::{FlowSpec, NetworkSim};
 use chipsim::prop_assert;
-use chipsim::sim::GlobalManager;
+use chipsim::sim::Simulation;
 use chipsim::util::propkit::check;
 use chipsim::util::rng::Rng;
 use chipsim::workload::{ModelKind, NeuralModel, ALL_CNNS};
+
+/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
+    Simulation::builder()
+        .hardware(hw)
+        .params(params)
+        .build()
+        .expect("valid test configuration")
+}
 
 // ------------------------------------------------------------- routing
 
@@ -228,7 +237,7 @@ fn prop_cosim_conserves_models_and_time_is_monotone() {
             seed: rng.next_u64(),
             ..SimParams::default()
         };
-        let report = GlobalManager::new(hw, params)
+        let report = sim(hw, params)
             .run(WorkloadConfig::cnn_stream(n, inferences, rng.next_u64()))
             .unwrap();
         prop_assert!(
@@ -261,7 +270,7 @@ fn prop_power_bins_conserve_booked_energy() {
             cooldown_ns: 0,
             ..SimParams::default()
         };
-        let report = GlobalManager::new(hw.clone(), params)
+        let report = sim(hw.clone(), params)
             .run(WorkloadConfig::cnn_stream(3, 2, rng.next_u64()))
             .unwrap();
         // Dynamic energy in bins == compute + comm energy booked.
@@ -287,7 +296,7 @@ fn prop_cosim_deterministic_for_same_seed() {
                 cooldown_ns: 0,
                 ..SimParams::default()
             };
-            GlobalManager::new(hw, params)
+            sim(hw, params)
                 .run(WorkloadConfig::cnn_stream(4, 2, seed))
                 .unwrap()
         };

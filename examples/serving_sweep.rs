@@ -1,0 +1,68 @@
+//! Serving load sweep: where is this chiplet system's saturation knee?
+//!
+//! Sweeps a Poisson CNN stream across arrival rates on a 6x6 mesh,
+//! printing p50/p99, goodput, and SLO violations per rate, then bisects
+//! for the highest rate still meeting the SLO — the number a capacity
+//! planner actually wants from a simulator.
+//!
+//! Run: `cargo run --release --example serving_sweep`
+
+use chipsim::config::{HardwareConfig, SimParams};
+use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::workload::ModelKind;
+
+fn main() -> anyhow::Result<()> {
+    chipsim::util::logging::init();
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let params = SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    let make_sim = || {
+        Simulation::builder().hardware(hw.clone()).params(params.clone()).build()
+    };
+    let spec = TrafficSpec::new(
+        ArrivalSpec::poisson(1_000.0).kinds(&[ModelKind::ResNet18, ModelKind::ResNet34]),
+    )
+    .horizon_ms(15.0)
+    .warmup_ms(2.0)
+    .window_ms(2.0)
+    .slo_ms(1.0)
+    .steady(None);
+
+    println!("== serving sweep: 6x6 mesh, ResNet18/34 Poisson mix, SLO 1 ms ==");
+    for rate in [500.0, 1_000.0, 2_000.0, 4_000.0] {
+        let probe = TrafficSpec { arrivals: spec.arrivals.with_rate(rate)?, ..spec.clone() };
+        let report = make_sim()?.run_traffic_with(&probe, 0xC0FFEE)?;
+        let st = &report.stats;
+        println!(
+            "  {:>6.0} req/s: p50 {:>8.1} µs  p99 {:>8.1} µs  goodput {:>6.0} req/s  \
+             viol {:>5.2} %  ({} done, {} dropped)",
+            rate,
+            st.overall.hist.quantile(0.5) as f64 / 1e3,
+            st.overall.hist.quantile(0.99) as f64 / 1e3,
+            st.goodput_rps(),
+            st.violation_frac() * 100.0,
+            st.completed(),
+            st.dropped,
+        );
+    }
+
+    let sweep = LoadSweep::new(spec, 500.0, 8_000.0).iters(4);
+    let result = sweep.run(make_sim, 0xC0FFEE)?;
+    println!("\nbisection ({} probes):", result.probes.len());
+    for p in &result.probes {
+        println!(
+            "  {:>7.0} req/s  p99 {:>9.1} µs  viol {:>5.2} %  {}",
+            p.rate_rps,
+            p.p99_ns as f64 / 1e3,
+            p.violation_frac * 100.0,
+            if p.meets_slo { "PASS" } else { "fail" },
+        );
+    }
+    println!("saturation knee: ~{:.0} req/s under the 1 ms SLO", result.knee_rps);
+    Ok(())
+}

@@ -6,6 +6,7 @@
 //!   L3  flit NoI engine         (flit-hops/s, validation fidelity)
 //!   L3  mapper                  (models mapped/s on a busy ledger)
 //!   L3  end-to-end co-sim       (wall time per simulated model)
+//!   L3  streaming traffic       (requests/s through the serving engine)
 //!   L2  native thermal step     (node-updates/s)
 //!   L2  PJRT thermal transient  (steps/s incl. dispatch overhead)
 //!
@@ -111,6 +112,39 @@ fn bench_end_to_end() {
     println!("  -> {} per simulated model", fmt_ns(r.mean_ns / 10.0));
 }
 
+fn bench_traffic_steady_state() {
+    use chipsim::serving::{ArrivalSpec, TrafficSpec};
+    let hw = HardwareConfig::homogeneous_mesh(8, 8);
+    let params = SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    let spec = TrafficSpec::new(
+        ArrivalSpec::poisson(3_000.0).kinds(&[ModelKind::ResNet18, ModelKind::ResNet34]),
+    )
+    .horizon_ms(20.0)
+    .warmup_ms(2.0)
+    .window_ms(2.0)
+    .slo_ms(1.0)
+    .steady(None);
+    let mut served = 0u64;
+    let r = bench("serving: 3 krps poisson x 20 ms on 8x8 mesh", 2, 2000, || {
+        let report = sim(hw.clone(), params.clone())
+            .run_traffic_with(&spec, 0xFEED)
+            .unwrap();
+        served = report.stats.completed() + report.stats.warmup_skipped;
+        std::hint::black_box(report.span_ns());
+    });
+    r.print();
+    println!(
+        "  -> {:.1} k simulated requests/s of wall time ({} per run)",
+        served as f64 / (r.mean_ns / 1e9) / 1e3,
+        served
+    );
+}
+
 fn bench_native_thermal() {
     let hw = HardwareConfig::homogeneous_mesh(10, 10);
     let tm = ThermalModel::build(&hw);
@@ -156,6 +190,7 @@ fn main() {
     bench_flit_engine();
     bench_mapper();
     bench_end_to_end();
+    bench_traffic_steady_state();
     bench_native_thermal();
     bench_pjrt_thermal();
 }

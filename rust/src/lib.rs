@@ -13,7 +13,8 @@
 //!
 //! * **L3 (this crate)** — the [`sim::Simulation`] co-simulation loop, the
 //!   NoI simulator, pluggable mappers, compute backends, power tracking,
-//!   baselines, the scenario registry, CLI.
+//!   the sustained-traffic serving engine ([`serving`]), baselines, the
+//!   scenario registry, CLI.
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
 //!   kernels for the thermal solver and the batched IMC estimator, lowered
 //!   once to HLO text under `artifacts/` by `make artifacts`.
@@ -72,6 +73,7 @@ pub mod noc;
 pub mod compute;
 pub mod sim;
 pub mod scenario;
+pub mod serving;
 pub mod power;
 pub mod thermal;
 pub mod baselines;
@@ -88,6 +90,10 @@ pub mod prelude {
     };
     pub use crate::mapping::{MapContext, Mapper, NearestNeighbor};
     pub use crate::scenario::{Registry, Scenario, SweepOutcome, SweepRunner};
+    pub use crate::serving::{
+        ArrivalSpec, LatencyHistogram, LoadSweep, ServingStats, SteadyState, StopReason,
+        TrafficReport, TrafficSpec,
+    };
     pub use crate::sim::{
         SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,
     };

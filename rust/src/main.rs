@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run          generic co-simulation run with configurable system/workload
+//!   traffic      sustained open-loop serving run (p50/p99, goodput, SLO)
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -13,6 +14,9 @@
 //! Examples:
 //!   chipsim run --rows 10 --cols 10 --models 50 --inferences 10 --pipelined
 //!   chipsim run --scenario vit-pipeline
+//!   chipsim traffic --scenario traffic-poisson-mesh --rate 2000 --seed 7
+//!   chipsim traffic --rows 8 --cols 8 --arrivals burst --rate 3000 --pipelined
+//!   chipsim traffic --sweep --lo 500 --hi 8000       # saturation knee
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -30,7 +34,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -46,6 +50,12 @@ fn help() -> HelpText {
             ("--hw FILE.json", "load hardware config from JSON"),
             ("--quick", "shrink experiment workloads (CI mode)"),
             ("--power-csv FILE", "dump per-chiplet power trace"),
+            ("--arrivals poisson|burst|diurnal|trace", "traffic: arrival process (default poisson)"),
+            ("--rate R", "traffic: mean arrival rate, req/s (default 2000)"),
+            ("--trace FILE.json", "traffic: arrival trace for --arrivals trace"),
+            ("--horizon-ms/--warmup-ms/--window-ms", "traffic: run shape (default 50/5/5)"),
+            ("--slo-ms S", "traffic: end-to-end latency SLO (default 1.0)"),
+            ("--sweep --lo R0 --hi R1 [--iters N]", "traffic: bisect for the saturation knee"),
         ],
     }
 }
@@ -105,6 +115,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let sc = reg.get(name).ok_or_else(|| {
             anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
         })?;
+        anyhow::ensure!(
+            !sc.is_traffic(),
+            "scenario '{name}' is a sustained-traffic scenario; its report is serving \
+             stats, not per-model outcomes — run it with `chipsim traffic --scenario {name}`"
+        );
         let seed = args.get_u64("seed", sc.default_seed)?;
         sc.run(seed)?
     } else {
@@ -132,14 +147,115 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sustained open-loop serving run: arrivals keep coming at the given
+/// rate whether or not the system kept up, and the report is the serving
+/// truth — p50/p99/p99.9, goodput, SLO violations, and a windowed power
+/// trace.  `--sweep` instead bisects over the rate for the saturation
+/// knee.
+fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
+    use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+    let reg = Registry::builtin();
+    type SimFactory = Box<dyn Fn() -> anyhow::Result<Simulation>>;
+    let (spec, seed, make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
+        args.get("scenario")
+    {
+        let sc = reg.get(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+        })?;
+        let seed = args.get_u64("seed", sc.default_seed)?;
+        let spec = sc.traffic_spec(seed).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scenario '{name}' is a batch scenario; run it with `chipsim run --scenario {name}`"
+            )
+        })?;
+        let sc = sc.clone();
+        (spec, seed, Box::new(move || sc.build()))
+    } else {
+        let hw = build_hw(args)?;
+        let params = build_params(args)?;
+        let seed = args.get_u64("seed", params.seed)?;
+        let rate = args.get_f64("rate", 2_000.0)?;
+        let arrivals = match args.get_or("arrivals", "poisson") {
+            "poisson" => ArrivalSpec::poisson(rate),
+            // Bursts at 2x the mean rate, silence between: same offered
+            // load as poisson at --rate, much worse tail.
+            "burst" => ArrivalSpec::on_off(2.0 * rate, 0.0, 5e6, 5e6),
+            "diurnal" => ArrivalSpec::diurnal(
+                rate,
+                0.6,
+                (args.get_f64("period-ms", 20.0)? * 1e6) as u64,
+            ),
+            "trace" => ArrivalSpec::trace_file(args.get("trace").ok_or_else(|| {
+                anyhow::anyhow!("--arrivals trace requires --trace FILE.json")
+            })?)?,
+            other => anyhow::bail!("unknown --arrivals '{other}' (poisson|burst|diurnal|trace)"),
+        }
+        .inferences(args.get_u64("inferences", 1)? as u32);
+        let spec = TrafficSpec::new(arrivals)
+            .horizon_ms(args.get_f64("horizon-ms", 50.0)?)
+            .warmup_ms(args.get_f64("warmup-ms", 5.0)?)
+            .window_ms(args.get_f64("window-ms", 5.0)?)
+            .slo_ms(args.get_f64("slo-ms", 1.0)?);
+        (
+            spec,
+            seed,
+            Box::new(move || {
+                Simulation::builder().hardware(hw.clone()).params(params.clone()).build()
+            }),
+        )
+    };
+    // --rate on a scenario rescales its arrival shape (generic runs
+    // already consumed --rate above).
+    let spec = if args.get("scenario").is_some() && args.get("rate").is_some() {
+        TrafficSpec {
+            arrivals: spec.arrivals.with_rate(args.get_f64("rate", 0.0)?)?,
+            ..spec
+        }
+    } else {
+        spec
+    };
+    if args.flag("sweep") {
+        let lo = args.get_f64("lo", 500.0)?;
+        let hi = args.get_f64("hi", 10_000.0)?;
+        let sweep = LoadSweep::new(spec, lo, hi).iters(args.get_usize("iters", 5)?);
+        let result = sweep.run(|| make_sim(), seed)?;
+        println!("load sweep ({} probes):", result.probes.len());
+        for p in &result.probes {
+            println!(
+                "  {:>8.0} req/s  p99 {:>9.1} µs  goodput {:>8.0} req/s  viol {:>6.2} %  {}",
+                p.rate_rps,
+                p.p99_ns as f64 / 1e3,
+                p.goodput_rps,
+                p.violation_frac * 100.0,
+                if p.meets_slo { "PASS" } else { "fail" },
+            );
+        }
+        println!(
+            "saturation knee: ~{:.0} req/s (highest probed rate meeting the SLO)",
+            result.knee_rps
+        );
+        return Ok(());
+    }
+    let report = make_sim()?.run_traffic_with(&spec, seed)?;
+    print!("{}", report.summary());
+    if let Some(path) = args.get("power-csv") {
+        let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
+        std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
+        println!("tail power trace written to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_scenarios() {
     let reg = Registry::builtin();
     println!("registered scenarios ({}):", reg.len());
     for sc in reg.iter() {
-        println!("  {:<22} {}", sc.name, sc.about);
+        let tag = if sc.is_traffic() { "[traffic] " } else { "" };
+        println!("  {:<22} {tag}{}", sc.name, sc.about);
     }
     println!(
-        "\nrun one:    chipsim run --scenario NAME [--seed S]\
+        "\nrun one:     chipsim run --scenario NAME [--seed S]\
+         \nrun traffic: chipsim traffic --scenario NAME [--rate R] [--seed S]\
          \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]"
     );
 }
@@ -162,7 +278,21 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64()
     );
     for o in &outcomes {
+        let is_traffic = reg.get(&o.scenario).map(|s| s.is_traffic()).unwrap_or(false);
         match &o.result {
+            // Traffic scenarios stream in constant memory: the batch view
+            // shows span/energy only (per-model outcomes are not
+            // retained) — `chipsim traffic --scenario NAME` has the
+            // serving stats.
+            Ok(r) if is_traffic => println!(
+                "  {:<22} seed {:#018x}  [traffic] span {:.3} ms, {:.2} mJ \
+                 (serving stats: `chipsim traffic --scenario {}`)",
+                o.scenario,
+                o.seed,
+                r.span_ns as f64 / 1e6,
+                (r.compute_energy_pj + r.comm_energy_pj) / 1e9,
+                o.scenario,
+            ),
             Ok(r) => println!(
                 "  {:<22} seed {:#018x}  {} models, {} dropped, span {:.3} ms, {:.2} mJ",
                 o.scenario,
@@ -257,7 +387,7 @@ fn cmd_artifacts() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     logging::init();
-    let args = Args::from_env(&["pipelined", "quick", "help"]);
+    let args = Args::from_env(&["pipelined", "quick", "help", "sweep"]);
     if args.flag("help") || args.positionals.is_empty() {
         print!("{}", help().render());
         return Ok(());
@@ -266,6 +396,7 @@ fn main() -> anyhow::Result<()> {
     let cmd = args.positionals[0].as_str();
     match cmd {
         "run" => cmd_run(&args)?,
+        "traffic" => cmd_traffic(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,

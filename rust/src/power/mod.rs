@@ -6,19 +6,78 @@
 //! 1 µs granularity (1 pJ / 1 ns == 1 mW, so bin power in mW is simply
 //! accumulated pJ / bin_ns).  The resulting profiles feed the thermal
 //! model and the Fig. 8 traces.
+//!
+//! Batch runs keep every bin alive for the end-of-run thermal solve.  The
+//! sustained-traffic engine (`crate::serving`) instead calls
+//! [`PowerTracker::drain_window`] as virtual time advances, so hour-long
+//! simulated traces hold only the bins of the trailing window in memory;
+//! drained energy stays accounted in [`PowerTracker::dynamic_energy_pj`].
 
 use crate::TimeNs;
+
+/// A finalized slice of the power profile returned by
+/// [`PowerTracker::drain_window`]: per-chiplet bin energies over
+/// `[start_ns, end_ns())`, removed from the tracker's live storage.
+#[derive(Debug, Clone)]
+pub struct PowerWindow {
+    /// Virtual time of the first drained bin.
+    pub start_ns: TimeNs,
+    /// Bin width (same as the tracker's).
+    pub bin_ns: TimeNs,
+    /// `energy_pj[chiplet][bin]` — dynamic energy, pJ.
+    pub energy_pj: Vec<Vec<f64>>,
+    /// Baseline (idle + static) power per chiplet at drain time, mW.
+    pub baseline_mw: Vec<f64>,
+}
+
+impl PowerWindow {
+    /// Bins in the window (uniform across chiplets).
+    pub fn bins(&self) -> usize {
+        self.energy_pj.first().map_or(0, |r| r.len())
+    }
+
+    pub fn span_ns(&self) -> TimeNs {
+        self.bins() as TimeNs * self.bin_ns
+    }
+
+    pub fn end_ns(&self) -> TimeNs {
+        self.start_ns + self.span_ns()
+    }
+
+    /// Total dynamic energy in the window, pJ.
+    pub fn dynamic_pj(&self) -> f64 {
+        self.energy_pj.iter().map(|r| r.iter().sum::<f64>()).sum()
+    }
+
+    /// Mean total system power over the window (dynamic + baseline), W.
+    pub fn mean_power_w(&self) -> f64 {
+        let span = self.span_ns();
+        if span == 0 {
+            return 0.0;
+        }
+        // pJ/ns == mW; scale to W.
+        let dynamic_w = self.dynamic_pj() / span as f64 * 1e-3;
+        let baseline_w = self.baseline_mw.iter().sum::<f64>() * 1e-3;
+        dynamic_w + baseline_w
+    }
+}
 
 /// Per-chiplet time-binned power profile.
 #[derive(Debug, Clone)]
 pub struct PowerTracker {
     pub bin_ns: TimeNs,
     num_chiplets: usize,
-    /// bins[chiplet][bin] = accumulated energy in pJ.
+    /// bins[chiplet][i] = accumulated energy in pJ of global bin
+    /// `origin_bin + i` (bins before `origin_bin` have been drained).
     bins: Vec<Vec<f64>>,
     /// Constant baseline power per chiplet, mW (idle + router static).
     baseline_mw: Vec<f64>,
     max_time_ns: TimeNs,
+    /// Global index of the first live bin; everything before it was
+    /// handed out through `drain_window`.
+    origin_bin: usize,
+    /// Energy already drained per chiplet, pJ (keeps totals exact).
+    drained_pj: Vec<f64>,
 }
 
 impl PowerTracker {
@@ -30,6 +89,8 @@ impl PowerTracker {
             bins: vec![Vec::new(); num_chiplets],
             baseline_mw: vec![0.0; num_chiplets],
             max_time_ns: 0,
+            origin_bin: 0,
+            drained_pj: vec![0.0; num_chiplets],
         }
     }
 
@@ -42,11 +103,20 @@ impl PowerTracker {
         self.baseline_mw[chiplet] = mw;
     }
 
-    fn ensure_bin(&mut self, chiplet: usize, bin: usize) {
-        let v = &mut self.bins[chiplet];
-        if v.len() <= bin {
-            v.resize(bin + 1, 0.0);
+    /// Book energy into a *global* bin index.  Bookings that land before
+    /// the drained origin fold into the drained total: conservation is
+    /// kept even if a straggler event arrives behind the drain cursor.
+    fn book_bin(&mut self, chiplet: usize, bin: usize, pj: f64) {
+        if bin < self.origin_bin {
+            self.drained_pj[chiplet] += pj;
+            return;
         }
+        let rel = bin - self.origin_bin;
+        let v = &mut self.bins[chiplet];
+        if v.len() <= rel {
+            v.resize(rel + 1, 0.0);
+        }
+        v[rel] += pj;
     }
 
     /// Book `energy_pj` spread uniformly over [start, start+duration).
@@ -59,9 +129,8 @@ impl PowerTracker {
         self.max_time_ns = self.max_time_ns.max(end);
         let first_bin = (start / self.bin_ns) as usize;
         let last_bin = ((end - 1) / self.bin_ns) as usize;
-        self.ensure_bin(chiplet, last_bin);
         if first_bin == last_bin {
-            self.bins[chiplet][first_bin] += energy_pj;
+            self.book_bin(chiplet, first_bin, energy_pj);
             return;
         }
         let per_ns = energy_pj / duration as f64;
@@ -69,7 +138,7 @@ impl PowerTracker {
             let bin_start = bin as TimeNs * self.bin_ns;
             let bin_end = bin_start + self.bin_ns;
             let overlap = end.min(bin_end) - start.max(bin_start);
-            self.bins[chiplet][bin] += per_ns * overlap as f64;
+            self.book_bin(chiplet, bin, per_ns * overlap as f64);
         }
     }
 
@@ -79,60 +148,118 @@ impl PowerTracker {
             return;
         }
         let bin = (t / self.bin_ns) as usize;
-        self.ensure_bin(chiplet, bin);
-        self.bins[chiplet][bin] += energy_pj;
+        self.book_bin(chiplet, bin, energy_pj);
         self.max_time_ns = self.max_time_ns.max(t + 1);
     }
 
-    /// Number of bins covering the profiled interval.
+    /// Number of bins covering the profiled interval (including drained
+    /// ones — this is the *global* bin count).
     pub fn num_bins(&self) -> usize {
         (self.max_time_ns.div_ceil(self.bin_ns)) as usize
     }
 
-    /// Power of one chiplet in one bin, mW (dynamic + baseline).
+    /// Bins currently held in memory.  Bounded in streaming mode, where
+    /// [`drain_window`](Self::drain_window) retires the past; equals
+    /// [`num_bins`](Self::num_bins) when nothing was drained.
+    pub fn live_bins(&self) -> usize {
+        self.bins.iter().map(|v| v.len()).max().unwrap_or(0)
+    }
+
+    /// Global index of the first live bin (count of drained bins).
+    pub fn drained_bins(&self) -> usize {
+        self.origin_bin
+    }
+
+    /// Finalize and remove every bin that ends at or before `before_ns`,
+    /// returning the drained slice as a [`PowerWindow`].  Subsequent
+    /// bookings behind the cursor fold into the drained energy total, so
+    /// [`dynamic_energy_pj`](Self::dynamic_energy_pj) stays exact.  The
+    /// streaming traffic engine calls this one window behind virtual time
+    /// to keep memory constant over arbitrarily long horizons.
+    pub fn drain_window(&mut self, before_ns: TimeNs) -> PowerWindow {
+        // The window's bin count follows the *requested* cutoff, not what
+        // was booked: bins nothing landed in are zeros, so an idle window
+        // still spans its full width and reports baseline power, and the
+        // drain cursor stays on the caller's window boundaries.  Callers
+        // drain incrementally (one window at a time) — allocation is
+        // O(requested span / bin_ns).
+        let cutoff = (before_ns / self.bin_ns) as usize; // first bin kept
+        let n = cutoff.saturating_sub(self.origin_bin);
+        let mut energy = Vec::with_capacity(self.num_chiplets);
+        for c in 0..self.num_chiplets {
+            let take = n.min(self.bins[c].len());
+            let mut row: Vec<f64> = self.bins[c].drain(..take).collect();
+            row.resize(n, 0.0);
+            self.drained_pj[c] += row.iter().sum::<f64>();
+            energy.push(row);
+        }
+        let window = PowerWindow {
+            start_ns: self.origin_bin as TimeNs * self.bin_ns,
+            bin_ns: self.bin_ns,
+            energy_pj: energy,
+            baseline_mw: self.baseline_mw.clone(),
+        };
+        self.origin_bin += n;
+        window
+    }
+
+    /// Power of one chiplet in one (global) bin, mW (dynamic + baseline).
+    /// Drained bins report baseline only — their dynamic share left with
+    /// the [`PowerWindow`] that drained them.
     pub fn power_mw(&self, chiplet: usize, bin: usize) -> f64 {
-        let dynamic = self.bins[chiplet].get(bin).copied().unwrap_or(0.0) / self.bin_ns as f64;
+        let dynamic = bin
+            .checked_sub(self.origin_bin)
+            .and_then(|rel| self.bins[chiplet].get(rel))
+            .copied()
+            .unwrap_or(0.0)
+            / self.bin_ns as f64;
         dynamic + self.baseline_mw[chiplet]
     }
 
-    /// Full power series of one chiplet, mW.
+    /// Power series of one chiplet over the *live* bins, mW.  Covers the
+    /// whole run when nothing was drained; after streaming drains it is
+    /// the trailing window only (the drained past left with its
+    /// [`PowerWindow`]s), so its length never scales with the horizon.
     pub fn series_mw(&self, chiplet: usize) -> Vec<f64> {
-        (0..self.num_bins()).map(|b| self.power_mw(chiplet, b)).collect()
+        (self.origin_bin..self.num_bins()).map(|b| self.power_mw(chiplet, b)).collect()
     }
 
-    /// Total system power series, W.
+    /// Total system power series over the live bins, W.
     pub fn total_series_w(&self) -> Vec<f64> {
-        let n = self.num_bins();
-        let mut total = vec![0.0; n];
+        let mut total = vec![0.0; self.num_bins() - self.origin_bin];
         for c in 0..self.num_chiplets {
-            for (b, t) in total.iter_mut().enumerate() {
-                *t += self.power_mw(c, b) * 1e-3;
+            for (i, t) in total.iter_mut().enumerate() {
+                *t += self.power_mw(c, self.origin_bin + i) * 1e-3;
             }
         }
         total
     }
 
-    /// Total energy booked for a chiplet, pJ (dynamic only).
+    /// Total energy booked for a chiplet, pJ (dynamic only, live +
+    /// drained — draining never changes this total).
     pub fn dynamic_energy_pj(&self, chiplet: usize) -> f64 {
-        self.bins[chiplet].iter().sum()
+        self.drained_pj[chiplet] + self.bins[chiplet].iter().sum::<f64>()
     }
 
-    /// Average power of a chiplet over the run, mW.
+    /// Average power of a chiplet over the live bins, mW.
     pub fn avg_power_mw(&self, chiplet: usize) -> f64 {
-        let n = self.num_bins().max(1);
+        let n = (self.num_bins() - self.origin_bin).max(1);
         self.series_mw(chiplet).iter().sum::<f64>() / n as f64
     }
 
     /// Power matrix [bins x chiplets] in W, decimated by `stride` bins
-    /// (averaged) — the thermal solver's input format.
+    /// (averaged) — the thermal solver's input format.  Only live bins
+    /// are emitted: after streaming drains, the thermal solve covers the
+    /// trailing window instead of allocating O(horizon) rows of
+    /// baseline-only power.
     pub fn matrix_w(&self, stride: usize) -> Vec<Vec<f64>> {
         let stride = stride.max(1);
         let nbins = self.num_bins();
-        let nrows = nbins.div_ceil(stride);
+        let nrows = (nbins - self.origin_bin).div_ceil(stride);
         let mut rows = Vec::with_capacity(nrows);
         for r in 0..nrows {
-            let lo = r * stride;
-            let hi = ((r + 1) * stride).min(nbins).max(lo + 1);
+            let lo = self.origin_bin + r * stride;
+            let hi = (lo + stride).min(nbins).max(lo + 1);
             let row: Vec<f64> = (0..self.num_chiplets)
                 .map(|c| {
                     (lo..hi).map(|b| self.power_mw(c, b)).sum::<f64>() / (hi - lo) as f64 * 1e-3
@@ -143,14 +270,16 @@ impl PowerTracker {
         rows
     }
 
-    /// CSV export: time_us, chiplet0_mw, chiplet1_mw, ...
+    /// CSV export over the live bins: time_us, chiplet0_mw, ...  Time
+    /// stamps stay global, so after streaming drains the rows are the
+    /// trailing window at its true virtual time.
     pub fn to_csv(&self, chiplets: &[usize]) -> String {
         let mut s = String::from("time_us");
         for &c in chiplets {
             s.push_str(&format!(",chiplet{c}_mw"));
         }
         s.push('\n');
-        for b in 0..self.num_bins() {
+        for b in self.origin_bin..self.num_bins() {
             s.push_str(&format!("{}", b as f64 * self.bin_ns as f64 / 1e3));
             for &c in chiplets {
                 s.push_str(&format!(",{:.3}", self.power_mw(c, b)));
@@ -217,6 +346,88 @@ mod tests {
         let m = p.matrix_w(2);
         assert_eq!(m.len(), 1);
         assert!((m[0][0] - 3e-3).abs() < 1e-12); // avg of 2,4 mW in W
+    }
+
+    #[test]
+    fn drained_energy_equals_booked_energy() {
+        // Includes the tail-bin rounding path of add_energy: spans that
+        // start and end mid-bin split via per_ns * overlap, whose parts
+        // must re-sum to the booked total across drains.
+        let mut p = PowerTracker::new(2, 1_000);
+        p.add_energy(0, 500, 2_250, 6_123.456); // mid-bin start and end
+        p.add_energy(0, 7_999, 1, 42.0); // 1 ns tail at a bin boundary
+        p.add_energy(1, 0, 5_000, 1_000.0);
+        p.add_event(1, 9_300, 77.7);
+        let booked = [6_123.456 + 42.0, 1_000.0 + 77.7];
+        let mut drained = [0.0f64; 2];
+        // Drain in three uneven pieces, then past the profiled extent.
+        for cut in [1_500, 4_000, 9_000, 20_000] {
+            let w = p.drain_window(cut);
+            for c in 0..2 {
+                drained[c] += w.energy_pj[c].iter().sum::<f64>();
+            }
+        }
+        for c in 0..2 {
+            assert!(
+                (drained[c] - booked[c]).abs() < 1e-9,
+                "chiplet {c}: drained {} != booked {}",
+                drained[c],
+                booked[c]
+            );
+            // dynamic_energy_pj is invariant under draining.
+            assert!((p.dynamic_energy_pj(c) - booked[c]).abs() < 1e-9);
+        }
+        assert_eq!(p.live_bins(), 0);
+    }
+
+    #[test]
+    fn drain_keeps_live_bins_bounded_and_power_queries_safe() {
+        let mut p = PowerTracker::new(1, 1_000);
+        p.set_baseline_mw(0, 2.0);
+        p.add_energy(0, 0, 1_000, 1_000.0); // bin 0: 1 mW dynamic
+        p.add_energy(0, 5_000, 1_000, 3_000.0); // bin 5: 3 mW dynamic
+        let w = p.drain_window(2_000);
+        assert_eq!(w.bins(), 2);
+        assert_eq!(w.start_ns, 0);
+        assert_eq!(w.end_ns(), 2_000);
+        assert!((w.dynamic_pj() - 1_000.0).abs() < 1e-12);
+        assert_eq!(p.drained_bins(), 2);
+        // Drained bins report baseline only; live bins are unaffected.
+        assert!((p.power_mw(0, 0) - 2.0).abs() < 1e-12);
+        assert!((p.power_mw(0, 5) - 5.0).abs() < 1e-12);
+        assert!(p.live_bins() < p.num_bins());
+        // A straggler booked behind the cursor folds into drained totals.
+        p.add_event(0, 500, 10.0);
+        assert!((p.dynamic_energy_pj(0) - 4_010.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn idle_window_spans_full_width_and_reports_baseline() {
+        // A window in which nothing was booked must still cover its full
+        // span (zero bins) so the trace shows baseline power, not 0 W.
+        let mut p = PowerTracker::new(1, 1_000);
+        p.set_baseline_mw(0, 5.0);
+        let w = p.drain_window(3_000);
+        assert_eq!(w.bins(), 3);
+        assert_eq!(w.end_ns(), 3_000);
+        assert_eq!(w.dynamic_pj(), 0.0);
+        assert!((w.mean_power_w() - 5e-3).abs() < 1e-12);
+        assert_eq!(p.drained_bins(), 3);
+        // The next booking after the idle drain lands correctly.
+        p.add_event(0, 3_500, 9.0);
+        assert!((p.dynamic_energy_pj(0) - 9.0).abs() < 1e-12);
+        assert!((p.power_mw(0, 3) - 5.009).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_mean_power_includes_baseline() {
+        let mut p = PowerTracker::new(2, 1_000);
+        p.set_baseline_mw(0, 1.0);
+        p.set_baseline_mw(1, 1.0);
+        p.add_energy(0, 0, 2_000, 4_000.0); // 2 mW dynamic over 2 bins
+        let w = p.drain_window(2_000);
+        // dynamic: 4000 pJ / 2000 ns = 2 mW; baseline 2 mW total.
+        assert!((w.mean_power_w() - 4e-3).abs() < 1e-12, "{}", w.mean_power_w());
     }
 
     #[test]

@@ -33,12 +33,22 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
+use crate::serving::{ArrivalSpec, SteadyState, TraceEvent, TrafficReport, TrafficSpec};
 use crate::sim::{SimReport, Simulation};
 use crate::util::rng::Rng;
-use crate::workload::ModelKind;
+use crate::workload::{ModelKind, ALL_CNNS};
 
 type HwFn = Arc<dyn Fn() -> HardwareConfig + Send + Sync>;
 type WlFn = Arc<dyn Fn(u64) -> WorkloadConfig + Send + Sync>;
+type TrafficFn = Arc<dyn Fn(u64) -> TrafficSpec + Send + Sync>;
+
+/// What a scenario runs: a one-shot batch workload, or a sustained
+/// open-loop traffic stream (see [`crate::serving`]).
+#[derive(Clone)]
+enum Work {
+    Batch(WlFn),
+    Traffic(TrafficFn),
+}
 
 /// Construct one of the named hardware presets.  This is the single
 /// source of truth used by `chipsim run --topo ...`, the builtin
@@ -71,7 +81,7 @@ pub struct Scenario {
     pub about: String,
     hardware: HwFn,
     params: SimParams,
-    workload: WlFn,
+    work: Work,
     /// Seed used when the caller does not supply one.
     pub default_seed: u64,
 }
@@ -89,7 +99,26 @@ impl Scenario {
             about: about.to_string(),
             hardware: Arc::new(hardware),
             params,
-            workload: Arc::new(workload),
+            work: Work::Batch(Arc::new(workload)),
+            default_seed: 0xC0FFEE,
+        }
+    }
+
+    /// A sustained-traffic scenario: instead of a one-shot batch, it
+    /// streams the [`TrafficSpec`] produced for the run's seed.
+    pub fn traffic(
+        name: &str,
+        about: &str,
+        hardware: impl Fn() -> HardwareConfig + Send + Sync + 'static,
+        params: SimParams,
+        spec: impl Fn(u64) -> TrafficSpec + Send + Sync + 'static,
+    ) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            about: about.to_string(),
+            hardware: Arc::new(hardware),
+            params,
+            work: Work::Traffic(Arc::new(spec)),
             default_seed: 0xC0FFEE,
         }
     }
@@ -108,9 +137,25 @@ impl Scenario {
         self.params.clone()
     }
 
-    /// Instantiate the scenario's workload for a seed.
+    pub fn is_traffic(&self) -> bool {
+        matches!(self.work, Work::Traffic(_))
+    }
+
+    /// Instantiate the scenario's batch workload for a seed (empty for
+    /// traffic scenarios — their requests come from the arrival process).
     pub fn workload(&self, seed: u64) -> WorkloadConfig {
-        (self.workload)(seed)
+        match &self.work {
+            Work::Batch(f) => f(seed),
+            Work::Traffic(_) => WorkloadConfig::from_kinds(&[]),
+        }
+    }
+
+    /// Instantiate the traffic spec for a seed (`None` for batch ones).
+    pub fn traffic_spec(&self, seed: u64) -> Option<TrafficSpec> {
+        match &self.work {
+            Work::Batch(_) => None,
+            Work::Traffic(f) => Some(f(seed)),
+        }
     }
 
     /// Assemble a runnable [`Simulation`] for this scenario.
@@ -118,9 +163,27 @@ impl Scenario {
         Simulation::builder().hardware(self.hardware()).params(self.params()).build()
     }
 
-    /// Build and run to completion with the given workload seed.
+    /// Build and run to completion with the given workload seed.  Traffic
+    /// scenarios run the streaming engine and return its tail
+    /// [`SimReport`] (span, power tail, energy); use
+    /// [`run_traffic`](Self::run_traffic) for the full serving stats.
     pub fn run(&self, seed: u64) -> anyhow::Result<SimReport> {
-        self.build()?.run(self.workload(seed))
+        match &self.work {
+            Work::Batch(f) => self.build()?.run(f(seed)),
+            Work::Traffic(f) => Ok(self.build()?.run_traffic_with(&f(seed), seed)?.sim),
+        }
+    }
+
+    /// Build and run a traffic scenario, returning full serving stats.
+    /// Errors for batch scenarios.
+    pub fn run_traffic(&self, seed: u64) -> anyhow::Result<TrafficReport> {
+        match &self.work {
+            Work::Batch(_) => anyhow::bail!(
+                "scenario '{}' is a batch scenario; run it with Scenario::run",
+                self.name
+            ),
+            Work::Traffic(f) => self.build()?.run_traffic_with(&f(seed), seed),
+        }
     }
 }
 
@@ -213,6 +276,84 @@ impl Registry {
                 ..SimParams::default()
             },
             |_seed| WorkloadConfig::single(ModelKind::ResNet18),
+        ));
+        // ---- sustained-traffic scenarios (open-loop serving) ----
+        let serving_params = || SimParams {
+            pipelined: true,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            ..SimParams::default()
+        };
+        reg.register(Scenario::traffic(
+            "traffic-poisson-mesh",
+            "8x8 mesh serving a 2 krps Poisson CNN stream to steady state",
+            || hardware_preset("mesh", 8, 8, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |_seed| {
+                TrafficSpec::poisson(2_000.0)
+                    .horizon_ms(60.0)
+                    .warmup_ms(10.0)
+                    .window_ms(10.0)
+                    .slo_ms(2.0)
+                    .steady(Some(SteadyState { windows: 3, rel_tol: 0.15, min_per_window: 10 }))
+            },
+        ));
+        reg.register(Scenario::traffic(
+            "traffic-burst-mmpp",
+            "8x8 hetero mesh under bursty on-off MMPP traffic (5 ms bursts)",
+            || hardware_preset("hetero", 8, 8, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |_seed| {
+                TrafficSpec::new(ArrivalSpec::on_off(4_000.0, 250.0, 5e6, 5e6))
+                    .horizon_ms(60.0)
+                    .warmup_ms(10.0)
+                    .window_ms(10.0)
+                    .slo_ms(2.0)
+                    .steady(None) // bursty p99 is not expected to converge
+            },
+        ));
+        reg.register(Scenario::traffic(
+            "traffic-diurnal",
+            "10x10 mesh riding a sinusoidal day/night rate curve (40 ms period)",
+            || hardware_preset("mesh", 10, 10, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |_seed| {
+                TrafficSpec::new(ArrivalSpec::diurnal(2_500.0, 0.6, 40_000_000))
+                    .horizon_ms(80.0)
+                    .warmup_ms(10.0)
+                    .window_ms(10.0)
+                    .slo_ms(2.0)
+                    .steady(None)
+            },
+        ));
+        reg.register(Scenario::traffic(
+            "traffic-trace-replay",
+            "6x6 mesh replaying a seeded synthetic burst trace (trace-replay path)",
+            || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |seed| {
+                // Deterministic synthetic trace: three bursts of uniform
+                // CNN requests — exercises the replay path without a file.
+                let mut rng = Rng::new(seed);
+                let mut events = Vec::new();
+                for burst in 0..3u64 {
+                    let mut t = burst * 10_000_000 + rng.range_u64(0, 500_000);
+                    for _ in 0..40 {
+                        t += rng.range_u64(10_000, 150_000);
+                        events.push(TraceEvent {
+                            at_ns: t,
+                            kind: *rng.choice(&ALL_CNNS),
+                            inferences: 1,
+                        });
+                    }
+                }
+                TrafficSpec::new(ArrivalSpec::trace(events))
+                    .horizon_ms(35.0)
+                    .warmup_ms(2.0)
+                    .window_ms(5.0)
+                    .slo_ms(2.0)
+                    .steady(None)
+            },
         ));
         reg.register(Scenario::new(
             "thermal-hotspot",
@@ -410,6 +551,26 @@ mod tests {
             assert!(reg.get(name).is_some(), "missing builtin scenario '{name}'");
         }
         assert!(reg.len() >= 6);
+    }
+
+    #[test]
+    fn traffic_scenarios_are_registered_and_typed() {
+        let reg = Registry::builtin();
+        for name in [
+            "traffic-poisson-mesh",
+            "traffic-burst-mmpp",
+            "traffic-diurnal",
+            "traffic-trace-replay",
+        ] {
+            let sc = reg.get(name).unwrap_or_else(|| panic!("missing builtin '{name}'"));
+            assert!(sc.is_traffic(), "'{name}' should be a traffic scenario");
+            assert!(sc.traffic_spec(1).is_some());
+            assert!(sc.workload(1).kinds.is_empty());
+        }
+        let batch = reg.get("mesh-10x10-cnn").unwrap();
+        assert!(!batch.is_traffic());
+        assert!(batch.traffic_spec(1).is_none());
+        assert!(batch.run_traffic(1).is_err());
     }
 
     #[test]

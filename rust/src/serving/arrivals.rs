@@ -1,0 +1,729 @@
+//! Open-loop arrival processes for sustained-traffic simulation.
+//!
+//! A serving workload is not a fixed batch: requests keep arriving
+//! whether or not the system has finished the previous ones (open-loop,
+//! the regime where queueing delay and tail latency live).  Every
+//! generator here is **lazy** — it emits one [`ModelRequest`] at a time
+//! as the engine's virtual clock reaches it, so an hour-long simulated
+//! trace never materializes as a `Vec` — and **deterministic per seed**:
+//! the same `(spec, seed)` pair reproduces the exact same stream,
+//! byte for byte.
+//!
+//! Four processes cover the usual serving studies:
+//!
+//! * [`PoissonArrivals`] — memoryless baseline at a constant rate;
+//! * [`OnOffArrivals`] — a two-state Markov-modulated Poisson process
+//!   (bursts at one rate, lulls at another, exponential state holding
+//!   times) for bursty traffic;
+//! * [`DiurnalArrivals`] — a sinusoidal rate curve sampled by thinning,
+//!   the classic day/night load shape compressed to simulation scale;
+//! * [`TraceArrivals`] — replay of a recorded trace (JSON or in-memory).
+
+use std::sync::Arc;
+
+use crate::util::json;
+use crate::util::rng::Rng;
+use crate::workload::{ModelKind, ModelRequest, ALL_CNNS};
+use crate::TimeNs;
+
+/// A lazy, seeded stream of model requests with non-decreasing arrival
+/// times.  `None` means the process is exhausted (only trace replay ever
+/// ends; the synthetic processes are infinite and are cut off by the
+/// engine's horizon).
+pub trait ArrivalProcess {
+    fn name(&self) -> &'static str;
+    fn next_request(&mut self) -> Option<ModelRequest>;
+}
+
+/// Draw an exponential sample with the given mean (inverse CDF).
+/// `1 - f64()` lies in (0, 1], so the logarithm is always finite.
+pub fn sample_exp_ns(rng: &mut Rng, mean_ns: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() * mean_ns
+}
+
+/// Round a nanosecond gap to the integer clock, never below 1 ns (the
+/// stream must make progress).
+fn gap_ns(dt: f64) -> TimeNs {
+    (dt.round() as TimeNs).max(1)
+}
+
+/// Uniform model-kind mix shared by the synthetic generators.
+#[derive(Debug, Clone)]
+struct KindMix {
+    kinds: Vec<ModelKind>,
+}
+
+impl KindMix {
+    fn choose(&self, rng: &mut Rng) -> ModelKind {
+        *rng.choice(&self.kinds)
+    }
+}
+
+// ---------------------------------------------------------------- poisson
+
+/// Constant-rate memoryless arrivals.
+pub struct PoissonArrivals {
+    mix: KindMix,
+    mean_gap_ns: f64,
+    inferences: u32,
+    rng: Rng,
+    t_ns: TimeNs,
+    next_id: usize,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_rps: f64, kinds: &[ModelKind], inferences: u32, seed: u64) -> PoissonArrivals {
+        PoissonArrivals {
+            mix: KindMix { kinds: kinds.to_vec() },
+            mean_gap_ns: 1e9 / rate_rps,
+            inferences,
+            rng: Rng::new(seed),
+            t_ns: 0,
+            next_id: 0,
+        }
+    }
+}
+
+impl ArrivalProcess for PoissonArrivals {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        self.t_ns += gap_ns(sample_exp_ns(&mut self.rng, self.mean_gap_ns));
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(ModelRequest {
+            id,
+            kind: self.mix.choose(&mut self.rng),
+            arrival_ns: self.t_ns,
+            inferences: self.inferences,
+        })
+    }
+}
+
+// ----------------------------------------------------------- on-off MMPP
+
+/// Two-state Markov-modulated Poisson process: arrivals at `rate_on`
+/// during bursts and `rate_off` during lulls, with exponential state
+/// holding times of the configured means.  `rate_off = 0` gives pure
+/// on-off traffic (silence between bursts).
+pub struct OnOffArrivals {
+    mix: KindMix,
+    rate_on_per_ns: f64,
+    rate_off_per_ns: f64,
+    mean_on_ns: f64,
+    mean_off_ns: f64,
+    inferences: u32,
+    rng: Rng,
+    t_ns: TimeNs,
+    on: bool,
+    state_end_ns: TimeNs,
+    next_id: usize,
+}
+
+impl OnOffArrivals {
+    pub fn new(
+        rate_on_rps: f64,
+        rate_off_rps: f64,
+        mean_on_ns: f64,
+        mean_off_ns: f64,
+        kinds: &[ModelKind],
+        inferences: u32,
+        seed: u64,
+    ) -> OnOffArrivals {
+        let mut rng = Rng::new(seed);
+        let first_burst = gap_ns(sample_exp_ns(&mut rng, mean_on_ns));
+        OnOffArrivals {
+            mix: KindMix { kinds: kinds.to_vec() },
+            rate_on_per_ns: rate_on_rps * 1e-9,
+            rate_off_per_ns: rate_off_rps * 1e-9,
+            mean_on_ns,
+            mean_off_ns,
+            inferences,
+            rng,
+            t_ns: 0,
+            on: true,
+            state_end_ns: first_burst,
+            next_id: 0,
+        }
+    }
+
+    fn toggle(&mut self) {
+        self.t_ns = self.state_end_ns;
+        self.on = !self.on;
+        let mean = if self.on { self.mean_on_ns } else { self.mean_off_ns };
+        self.state_end_ns = self.t_ns + gap_ns(sample_exp_ns(&mut self.rng, mean));
+    }
+}
+
+impl ArrivalProcess for OnOffArrivals {
+    fn name(&self) -> &'static str {
+        "on-off"
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        loop {
+            let rate = if self.on { self.rate_on_per_ns } else { self.rate_off_per_ns };
+            if rate <= 0.0 {
+                self.toggle();
+                continue;
+            }
+            // Memorylessness makes re-sampling at a state boundary exact:
+            // the residual of an exponential is the same exponential.
+            let dt = gap_ns(sample_exp_ns(&mut self.rng, 1.0 / rate));
+            if self.t_ns + dt > self.state_end_ns {
+                self.toggle();
+                continue;
+            }
+            self.t_ns += dt;
+            let id = self.next_id;
+            self.next_id += 1;
+            return Some(ModelRequest {
+                id,
+                kind: self.mix.choose(&mut self.rng),
+                arrival_ns: self.t_ns,
+                inferences: self.inferences,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- diurnal
+
+/// Sinusoidal rate curve `base * (1 + amplitude * sin(2πt/period))`,
+/// sampled exactly by thinning against the peak rate (candidate gaps are
+/// drawn at the peak and accepted with probability `rate(t) / peak`).
+pub struct DiurnalArrivals {
+    mix: KindMix,
+    base_per_ns: f64,
+    amplitude: f64,
+    period_ns: f64,
+    inferences: u32,
+    rng: Rng,
+    t_ns: TimeNs,
+    next_id: usize,
+}
+
+impl DiurnalArrivals {
+    pub fn new(
+        base_rps: f64,
+        amplitude: f64,
+        period_ns: TimeNs,
+        kinds: &[ModelKind],
+        inferences: u32,
+        seed: u64,
+    ) -> DiurnalArrivals {
+        DiurnalArrivals {
+            mix: KindMix { kinds: kinds.to_vec() },
+            base_per_ns: base_rps * 1e-9,
+            amplitude,
+            period_ns: period_ns as f64,
+            inferences,
+            rng: Rng::new(seed),
+            t_ns: 0,
+            next_id: 0,
+        }
+    }
+
+    fn rate_at(&self, t: TimeNs) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * (t as f64 / self.period_ns);
+        self.base_per_ns * (1.0 + self.amplitude * phase.sin())
+    }
+}
+
+impl ArrivalProcess for DiurnalArrivals {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        let peak = self.base_per_ns * (1.0 + self.amplitude);
+        loop {
+            self.t_ns += gap_ns(sample_exp_ns(&mut self.rng, 1.0 / peak));
+            let accept = self.rate_at(self.t_ns) / peak;
+            if self.rng.f64() < accept {
+                let id = self.next_id;
+                self.next_id += 1;
+                return Some(ModelRequest {
+                    id,
+                    kind: self.mix.choose(&mut self.rng),
+                    arrival_ns: self.t_ns,
+                    inferences: self.inferences,
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ trace replay
+
+/// One entry of a recorded arrival trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at_ns: TimeNs,
+    pub kind: ModelKind,
+    pub inferences: u32,
+}
+
+/// Replay of a recorded trace, sorted by arrival time at load.
+pub struct TraceArrivals {
+    events: Arc<Vec<TraceEvent>>,
+    idx: usize,
+}
+
+impl TraceArrivals {
+    /// `events` must be sorted by `at_ns` (both [`ArrivalSpec::trace`]
+    /// and [`TraceArrivals::parse`] guarantee it).
+    pub fn new(events: Arc<Vec<TraceEvent>>) -> TraceArrivals {
+        debug_assert!(events.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+        TraceArrivals { events, idx: 0 }
+    }
+
+    /// Parse a trace from JSON: either a top-level array or an object
+    /// with an `"events"` array; each entry is
+    /// `{"t_ns": <u64>, "model": "<name>", "inferences": <u32, opt>}`.
+    /// Entries are sorted by time (the engine requires monotone arrivals).
+    pub fn parse(v: &json::Value) -> anyhow::Result<Vec<TraceEvent>> {
+        let arr = match v.opt("events") {
+            Some(e) => e.as_arr()?,
+            None => v.as_arr()?,
+        };
+        let mut events = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let name = e.get("model")?.as_str()?;
+            let kind = ModelKind::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("trace entry {i}: unknown model '{name}'"))?;
+            let inferences = match e.opt("inferences") {
+                Some(n) => n.as_u64()? as u32,
+                None => 1,
+            };
+            events.push(TraceEvent { at_ns: e.get("t_ns")?.as_u64()?, kind, inferences });
+        }
+        events.sort_by_key(|e| e.at_ns);
+        Ok(events)
+    }
+
+    pub fn from_json_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<TraceArrivals> {
+        let v = json::parse_file(path)?;
+        Ok(TraceArrivals::new(Arc::new(TraceArrivals::parse(&v)?)))
+    }
+}
+
+impl ArrivalProcess for TraceArrivals {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        let e = self.events.get(self.idx)?;
+        let id = self.idx;
+        self.idx += 1;
+        Some(ModelRequest {
+            id,
+            kind: e.kind,
+            arrival_ns: e.at_ns,
+            inferences: e.inferences,
+        })
+    }
+}
+
+// ------------------------------------------------------------------- spec
+
+/// Declarative, cloneable description of an arrival process.  A spec plus
+/// a seed fully determines the stream ([`ArrivalSpec::build`]), which is
+/// what lets traffic scenarios live in the registry and load sweeps
+/// re-run the same workload shape at different rates.
+#[derive(Debug, Clone)]
+pub enum ArrivalSpec {
+    Poisson {
+        rate_rps: f64,
+        kinds: Vec<ModelKind>,
+        inferences: u32,
+    },
+    OnOff {
+        rate_on_rps: f64,
+        rate_off_rps: f64,
+        mean_on_ns: f64,
+        mean_off_ns: f64,
+        kinds: Vec<ModelKind>,
+        inferences: u32,
+    },
+    Diurnal {
+        base_rps: f64,
+        amplitude: f64,
+        period_ns: TimeNs,
+        kinds: Vec<ModelKind>,
+        inferences: u32,
+    },
+    Trace {
+        events: Arc<Vec<TraceEvent>>,
+    },
+}
+
+impl ArrivalSpec {
+    /// Memoryless arrivals over the 4-CNN mix, one inference each.
+    pub fn poisson(rate_rps: f64) -> ArrivalSpec {
+        ArrivalSpec::Poisson { rate_rps, kinds: ALL_CNNS.to_vec(), inferences: 1 }
+    }
+
+    /// Bursty on-off MMPP over the 4-CNN mix.
+    pub fn on_off(
+        rate_on_rps: f64,
+        rate_off_rps: f64,
+        mean_on_ns: f64,
+        mean_off_ns: f64,
+    ) -> ArrivalSpec {
+        ArrivalSpec::OnOff {
+            rate_on_rps,
+            rate_off_rps,
+            mean_on_ns,
+            mean_off_ns,
+            kinds: ALL_CNNS.to_vec(),
+            inferences: 1,
+        }
+    }
+
+    /// Sinusoidal day/night curve over the 4-CNN mix.
+    pub fn diurnal(base_rps: f64, amplitude: f64, period_ns: TimeNs) -> ArrivalSpec {
+        ArrivalSpec::Diurnal {
+            base_rps,
+            amplitude,
+            period_ns,
+            kinds: ALL_CNNS.to_vec(),
+            inferences: 1,
+        }
+    }
+
+    pub fn trace(mut events: Vec<TraceEvent>) -> ArrivalSpec {
+        // The engine requires monotone arrivals; accept caller traces in
+        // any order (the JSON path sorts in parse()).
+        events.sort_by_key(|e| e.at_ns);
+        ArrivalSpec::Trace { events: Arc::new(events) }
+    }
+
+    pub fn trace_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<ArrivalSpec> {
+        let v = json::parse_file(path)?;
+        Ok(ArrivalSpec::Trace { events: Arc::new(TraceArrivals::parse(&v)?) })
+    }
+
+    /// Replace the model mix (no-op for trace replay, which carries its
+    /// own kinds).
+    pub fn kinds(mut self, mix: &[ModelKind]) -> ArrivalSpec {
+        match &mut self {
+            ArrivalSpec::Poisson { kinds, .. }
+            | ArrivalSpec::OnOff { kinds, .. }
+            | ArrivalSpec::Diurnal { kinds, .. } => *kinds = mix.to_vec(),
+            ArrivalSpec::Trace { .. } => {}
+        }
+        self
+    }
+
+    /// Back-to-back inferences per request (no-op for trace replay).
+    pub fn inferences(mut self, n: u32) -> ArrivalSpec {
+        match &mut self {
+            ArrivalSpec::Poisson { inferences, .. }
+            | ArrivalSpec::OnOff { inferences, .. }
+            | ArrivalSpec::Diurnal { inferences, .. } => *inferences = n,
+            ArrivalSpec::Trace { .. } => {}
+        }
+        self
+    }
+
+    /// Nominal mean request rate, req/s (duty-cycle weighted for on-off;
+    /// `None` for trace replay).
+    pub fn rate_rps(&self) -> Option<f64> {
+        match self {
+            ArrivalSpec::Poisson { rate_rps, .. } => Some(*rate_rps),
+            ArrivalSpec::OnOff { rate_on_rps, rate_off_rps, mean_on_ns, mean_off_ns, .. } => {
+                let cycle = mean_on_ns + mean_off_ns;
+                Some((rate_on_rps * mean_on_ns + rate_off_rps * mean_off_ns) / cycle)
+            }
+            ArrivalSpec::Diurnal { base_rps, .. } => Some(*base_rps),
+            ArrivalSpec::Trace { .. } => None,
+        }
+    }
+
+    /// The same traffic *shape* rescaled to a new mean rate — the lever
+    /// the load sweep bisects on.  Errors for trace replay.
+    pub fn with_rate(&self, new_rps: f64) -> anyhow::Result<ArrivalSpec> {
+        anyhow::ensure!(
+            new_rps.is_finite() && new_rps > 0.0,
+            "arrival rate must be positive and finite, got {new_rps}"
+        );
+        let mut spec = self.clone();
+        match &mut spec {
+            ArrivalSpec::Poisson { rate_rps, .. } => *rate_rps = new_rps,
+            ArrivalSpec::OnOff { rate_on_rps, rate_off_rps, .. } => {
+                let old = self.rate_rps().expect("on-off has a rate");
+                anyhow::ensure!(old > 0.0, "on-off spec has zero mean rate; cannot rescale");
+                let k = new_rps / old;
+                *rate_on_rps *= k;
+                *rate_off_rps *= k;
+            }
+            ArrivalSpec::Diurnal { base_rps, .. } => *base_rps = new_rps,
+            ArrivalSpec::Trace { .. } => {
+                anyhow::bail!("trace replay has a fixed timeline; cannot rescale its rate")
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Poisson { .. } => "poisson",
+            ArrivalSpec::OnOff { .. } => "on-off",
+            ArrivalSpec::Diurnal { .. } => "diurnal",
+            ArrivalSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// Instantiate the generator for a seed (validates parameters).
+    pub fn build(&self, seed: u64) -> anyhow::Result<Box<dyn ArrivalProcess>> {
+        let check_rate = |r: f64, what: &str| {
+            anyhow::ensure!(r.is_finite() && r >= 0.0, "{what} must be >= 0 and finite, got {r}");
+            Ok(())
+        };
+        let check_mix = |kinds: &[ModelKind]| {
+            anyhow::ensure!(!kinds.is_empty(), "arrival spec has an empty model mix");
+            Ok(())
+        };
+        Ok(match self {
+            ArrivalSpec::Poisson { rate_rps, kinds, inferences } => {
+                check_mix(kinds)?;
+                anyhow::ensure!(
+                    rate_rps.is_finite() && *rate_rps > 0.0,
+                    "poisson rate must be > 0, got {rate_rps}"
+                );
+                Box::new(PoissonArrivals::new(*rate_rps, kinds, *inferences, seed))
+            }
+            ArrivalSpec::OnOff {
+                rate_on_rps,
+                rate_off_rps,
+                mean_on_ns,
+                mean_off_ns,
+                kinds,
+                inferences,
+            } => {
+                check_mix(kinds)?;
+                check_rate(*rate_on_rps, "on-state rate")?;
+                check_rate(*rate_off_rps, "off-state rate")?;
+                anyhow::ensure!(
+                    *rate_on_rps > 0.0 || *rate_off_rps > 0.0,
+                    "on-off spec never produces arrivals (both rates are 0)"
+                );
+                anyhow::ensure!(
+                    *mean_on_ns > 0.0 && *mean_off_ns > 0.0,
+                    "on/off state means must be > 0"
+                );
+                Box::new(OnOffArrivals::new(
+                    *rate_on_rps,
+                    *rate_off_rps,
+                    *mean_on_ns,
+                    *mean_off_ns,
+                    kinds,
+                    *inferences,
+                    seed,
+                ))
+            }
+            ArrivalSpec::Diurnal { base_rps, amplitude, period_ns, kinds, inferences } => {
+                check_mix(kinds)?;
+                anyhow::ensure!(
+                    base_rps.is_finite() && *base_rps > 0.0,
+                    "diurnal base rate must be > 0, got {base_rps}"
+                );
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(amplitude),
+                    "diurnal amplitude must be in [0, 1], got {amplitude} \
+                     (above 1 the rate would go negative)"
+                );
+                anyhow::ensure!(*period_ns > 0, "diurnal period must be > 0");
+                Box::new(DiurnalArrivals::new(
+                    *base_rps,
+                    *amplitude,
+                    *period_ns,
+                    kinds,
+                    *inferences,
+                    seed,
+                ))
+            }
+            ArrivalSpec::Trace { events } => Box::new(TraceArrivals::new(events.clone())),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(spec: &ArrivalSpec, seed: u64, n: usize) -> Vec<ModelRequest> {
+        let mut gen = spec.build(seed).unwrap();
+        (0..n).map(|_| gen.next_request().unwrap()).collect()
+    }
+
+    #[test]
+    fn poisson_empirical_rate_converges() {
+        let rate = 1_000_000.0; // 1 req/µs keeps the test fast
+        let reqs = drain(&ArrivalSpec::poisson(rate), 42, 50_000);
+        let span_s = reqs.last().unwrap().arrival_ns as f64 * 1e-9;
+        let empirical = reqs.len() as f64 / span_s;
+        let rel = (empirical - rate).abs() / rate;
+        assert!(rel < 0.05, "empirical rate {empirical} vs {rate} (rel err {rel})");
+    }
+
+    #[test]
+    fn streams_are_identical_per_seed_and_differ_across_seeds() {
+        for spec in [
+            ArrivalSpec::poisson(500_000.0),
+            ArrivalSpec::on_off(2_000_000.0, 100_000.0, 50_000.0, 50_000.0),
+            ArrivalSpec::diurnal(500_000.0, 0.8, 1_000_000),
+        ] {
+            let a = drain(&spec, 7, 2_000);
+            let b = drain(&spec, 7, 2_000);
+            assert_eq!(a, b, "{} stream not reproducible", spec.name());
+            let c = drain(&spec, 8, 2_000);
+            assert_ne!(a, c, "{} stream ignores the seed", spec.name());
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_ids_sequential() {
+        for spec in [
+            ArrivalSpec::poisson(1_000_000.0),
+            ArrivalSpec::on_off(2_000_000.0, 0.0, 100_000.0, 100_000.0),
+            ArrivalSpec::diurnal(1_000_000.0, 1.0, 500_000),
+        ] {
+            let reqs = drain(&spec, 3, 5_000);
+            for (i, w) in reqs.windows(2).enumerate() {
+                assert!(w[0].arrival_ns <= w[1].arrival_ns, "{} not monotone", spec.name());
+                assert_eq!(w[0].id + 1, w[1].id, "id gap at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_sampler_hits_its_mean() {
+        let mut rng = Rng::new(11);
+        let mean = 12_345.0;
+        let n = 100_000;
+        let sum: f64 = (0..n).map(|_| sample_exp_ns(&mut rng, mean)).sum();
+        let rel = (sum / n as f64 - mean).abs() / mean;
+        assert!(rel < 0.02, "exp sample mean off by {rel}");
+    }
+
+    #[test]
+    fn on_off_burst_and_idle_durations_honor_their_means() {
+        // Pure on-off traffic (silence between bursts): gaps far above the
+        // in-burst scale mark state transitions, so burst/idle durations
+        // are recoverable from the stream alone.
+        let mean_on = 1_000_000.0; // 1 ms bursts
+        let mean_off = 2_000_000.0; // 2 ms lulls
+        let rate_on = 2_000_000.0; // in-burst gap 1/rate = 500 ns
+        let spec = ArrivalSpec::on_off(rate_on, 0.0, mean_on, mean_off);
+        let reqs = drain(&spec, 19, 120_000); // ~60 bursts of ~2k arrivals
+        let idle_threshold = 200_000; // 200 µs >> 500 ns, << 2 ms
+        let mut idle_gaps: Vec<f64> = Vec::new();
+        let mut burst_spans: Vec<f64> = Vec::new();
+        let mut burst_start = reqs[0].arrival_ns;
+        let mut prev = reqs[0].arrival_ns;
+        for r in &reqs[1..] {
+            let gap = r.arrival_ns - prev;
+            if gap > idle_threshold {
+                idle_gaps.push(gap as f64);
+                burst_spans.push((prev - burst_start) as f64);
+                burst_start = r.arrival_ns;
+            }
+            prev = r.arrival_ns;
+        }
+        assert!(idle_gaps.len() > 20, "need several bursts, saw {}", idle_gaps.len());
+        let mean_gap = idle_gaps.iter().sum::<f64>() / idle_gaps.len() as f64;
+        let mean_burst = burst_spans.iter().sum::<f64>() / burst_spans.len() as f64;
+        let rel_off = (mean_gap - mean_off).abs() / mean_off;
+        let rel_on = (mean_burst - mean_on).abs() / mean_on;
+        assert!(rel_off < 0.25, "idle mean {mean_gap} vs {mean_off} (rel {rel_off})");
+        assert!(rel_on < 0.25, "burst mean {mean_burst} vs {mean_on} (rel {rel_on})");
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let period = 10_000_000; // 10 ms
+        let spec = ArrivalSpec::diurnal(1_000_000.0, 0.9, period);
+        let mut gen = spec.build(5).unwrap();
+        let mut peak = 0usize;
+        let mut trough = 0usize;
+        // Peak quarter is centred on t = period/4, trough on 3*period/4.
+        loop {
+            let r = gen.next_request().unwrap();
+            if r.arrival_ns > 10 * period {
+                break;
+            }
+            let phase = (r.arrival_ns % period) as f64 / period as f64;
+            if (0.125..0.375).contains(&phase) {
+                peak += 1;
+            } else if (0.625..0.875).contains(&phase) {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak as f64 > trough as f64 * 3.0,
+            "peak {peak} not clearly above trough {trough}"
+        );
+    }
+
+    #[test]
+    fn trace_replay_sorts_and_reports_kinds() {
+        // Inline traces are sorted at construction, like JSON ones: an
+        // out-of-order event must not truncate replay at the horizon.
+        let spec = ArrivalSpec::trace(vec![
+            TraceEvent { at_ns: 500, kind: ModelKind::ResNet18, inferences: 2 },
+            TraceEvent { at_ns: 100, kind: ModelKind::AlexNet, inferences: 1 },
+        ]);
+        let mut gen = spec.build(0).unwrap();
+        let a = gen.next_request().unwrap();
+        assert_eq!(a.arrival_ns, 100);
+        assert_eq!(a.kind, ModelKind::AlexNet);
+        let b = gen.next_request().unwrap();
+        assert_eq!(b.arrival_ns, 500);
+        assert_eq!(b.inferences, 2);
+        assert!(gen.next_request().is_none());
+    }
+
+    #[test]
+    fn trace_json_parses_and_sorts() {
+        let v = json::parse(
+            r#"{"events": [
+                {"t_ns": 900, "model": "alexnet"},
+                {"t_ns": 100, "model": "resnet50", "inferences": 3}
+            ]}"#,
+        )
+        .unwrap();
+        let events = TraceArrivals::parse(&v).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].at_ns, 100);
+        assert_eq!(events[0].kind, ModelKind::ResNet50);
+        assert_eq!(events[0].inferences, 3);
+        assert_eq!(events[1].inferences, 1);
+    }
+
+    #[test]
+    fn with_rate_rescales_shapes() {
+        let p = ArrivalSpec::poisson(1_000.0).with_rate(4_000.0).unwrap();
+        assert_eq!(p.rate_rps(), Some(4_000.0));
+        let b = ArrivalSpec::on_off(3_000.0, 1_000.0, 1e6, 1e6);
+        let mean = b.rate_rps().unwrap();
+        assert!((mean - 2_000.0).abs() < 1e-9);
+        let b2 = b.with_rate(4_000.0).unwrap();
+        assert!((b2.rate_rps().unwrap() - 4_000.0).abs() < 1e-9);
+        assert!(ArrivalSpec::trace(vec![]).with_rate(10.0).is_err());
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(ArrivalSpec::poisson(0.0).build(1).is_err());
+        assert!(ArrivalSpec::poisson(f64::NAN).build(1).is_err());
+        assert!(ArrivalSpec::on_off(0.0, 0.0, 1e6, 1e6).build(1).is_err());
+        assert!(ArrivalSpec::on_off(1e3, 0.0, 0.0, 1e6).build(1).is_err());
+        assert!(ArrivalSpec::diurnal(1e3, 1.5, 1_000_000).build(1).is_err());
+        assert!(ArrivalSpec::poisson(1e3).kinds(&[]).build(1).is_err());
+    }
+}

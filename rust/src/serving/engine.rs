@@ -1,0 +1,598 @@
+//! The sustained-traffic engine: drives [`Simulation`]'s event loop in a
+//! bounded-horizon streaming mode.
+//!
+//! Three properties distinguish it from a batch `run()`:
+//!
+//! * **open-loop arrivals** — requests are pulled lazily from an
+//!   [`ArrivalSpec`]-built generator as virtual time advances, cut off at
+//!   the horizon;
+//! * **constant memory** — finished instance state is retired and its
+//!   slot recycled, outcomes stream into fixed-size histograms instead of
+//!   a `Vec`, and [`PowerTracker`] bins drain one window behind virtual
+//!   time, so an hour-long simulated trace costs no more memory than a
+//!   millisecond one;
+//! * **steady-state detection** — the run can stop early once the
+//!   windowed p99 converges, and [`LoadSweep`] bisects over arrival rate
+//!   for the saturation knee (the highest rate still meeting the SLO).
+
+use std::collections::VecDeque;
+
+use crate::power::PowerTracker;
+use crate::sim::{ModelOutcome, RequestSource, SimReport, Simulation, StreamSink};
+use crate::serving::arrivals::{ArrivalProcess, ArrivalSpec};
+use crate::serving::slo::{LatencyHistogram, ServingStats};
+use crate::workload::{ModelKind, ModelRequest};
+use crate::TimeNs;
+
+// ------------------------------------------------------------------- spec
+
+/// Convergence criterion for early stop: the windowed p99 must stay
+/// within `rel_tol` across `windows` consecutive full windows.
+#[derive(Debug, Clone, Copy)]
+pub struct SteadyState {
+    /// Consecutive windows that must agree.
+    pub windows: usize,
+    /// Max relative spread (max-min)/max of their p99s.
+    pub rel_tol: f64,
+    /// Windows with fewer completions than this reset the streak (too
+    /// sparse for a meaningful p99).
+    pub min_per_window: u64,
+}
+
+impl Default for SteadyState {
+    fn default() -> Self {
+        SteadyState { windows: 4, rel_tol: 0.10, min_per_window: 16 }
+    }
+}
+
+/// Full description of a sustained-traffic experiment.  Attach one via
+/// `Simulation::builder().traffic(spec)` and run with
+/// [`Simulation::run_traffic`], or pass it explicitly to
+/// [`Simulation::run_traffic_with`].
+#[derive(Debug, Clone)]
+pub struct TrafficSpec {
+    pub arrivals: ArrivalSpec,
+    /// Arrivals stop at this virtual time; in-flight work then drains.
+    pub horizon_ns: TimeNs,
+    /// Completions before this virtual time are excluded from stats.
+    pub warmup_ns: TimeNs,
+    /// Stats / power-drain window width.
+    pub window_ns: TimeNs,
+    /// End-to-end (arrival -> finish) latency SLO per request.
+    pub slo_ns: TimeNs,
+    /// Early-stop criterion; `None` always runs the full horizon.
+    pub steady: Option<SteadyState>,
+    /// Bounded ring of trailing per-window summaries kept for the report.
+    pub keep_windows: usize,
+}
+
+impl TrafficSpec {
+    pub fn new(arrivals: ArrivalSpec) -> TrafficSpec {
+        TrafficSpec {
+            arrivals,
+            horizon_ns: 50_000_000, // 50 ms
+            warmup_ns: 4_000_000,   // 4 ms
+            window_ns: 2_000_000,   // 2 ms
+            slo_ns: 1_000_000,      // 1 ms end-to-end
+            steady: Some(SteadyState::default()),
+            keep_windows: 32,
+        }
+    }
+
+    /// Poisson arrivals over the 4-CNN mix at `rate_rps`.
+    pub fn poisson(rate_rps: f64) -> TrafficSpec {
+        TrafficSpec::new(ArrivalSpec::poisson(rate_rps))
+    }
+
+    pub fn arrivals(mut self, arrivals: ArrivalSpec) -> TrafficSpec {
+        self.arrivals = arrivals;
+        self
+    }
+
+    pub fn horizon_ms(mut self, ms: f64) -> TrafficSpec {
+        self.horizon_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn warmup_ms(mut self, ms: f64) -> TrafficSpec {
+        self.warmup_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn window_ms(mut self, ms: f64) -> TrafficSpec {
+        self.window_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn slo_ms(mut self, ms: f64) -> TrafficSpec {
+        self.slo_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn slo_us(mut self, us: f64) -> TrafficSpec {
+        self.slo_ns = (us * 1e3) as TimeNs;
+        self
+    }
+
+    pub fn steady(mut self, steady: Option<SteadyState>) -> TrafficSpec {
+        self.steady = steady;
+        self
+    }
+
+    pub fn keep_windows(mut self, n: usize) -> TrafficSpec {
+        self.keep_windows = n.max(1);
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.window_ns > 0, "traffic window_ns must be > 0");
+        anyhow::ensure!(self.slo_ns > 0, "traffic slo_ns must be > 0");
+        anyhow::ensure!(
+            self.horizon_ns >= self.window_ns,
+            "traffic horizon ({} ns) shorter than one window ({} ns)",
+            self.horizon_ns,
+            self.window_ns
+        );
+        anyhow::ensure!(
+            self.warmup_ns < self.horizon_ns,
+            "warm-up ({} ns) swallows the whole horizon ({} ns)",
+            self.warmup_ns,
+            self.horizon_ns
+        );
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------------- source
+
+/// [`RequestSource`] over a lazy arrival process, cut off at a horizon.
+pub struct StreamingSource {
+    generator: Box<dyn ArrivalProcess>,
+    horizon_ns: TimeNs,
+    peeked: Option<ModelRequest>,
+    emitted: u64,
+    exhausted: bool,
+}
+
+impl StreamingSource {
+    pub fn new(generator: Box<dyn ArrivalProcess>, horizon_ns: TimeNs) -> StreamingSource {
+        StreamingSource { generator, horizon_ns, peeked: None, emitted: 0, exhausted: false }
+    }
+
+    fn fill(&mut self) {
+        if self.peeked.is_some() || self.exhausted {
+            return;
+        }
+        match self.generator.next_request() {
+            Some(r) if r.arrival_ns <= self.horizon_ns => self.peeked = Some(r),
+            _ => self.exhausted = true,
+        }
+    }
+
+    /// Requests handed to the simulation so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Whether the generator ran past the horizon (or ran dry).
+    pub fn exhausted(&self) -> bool {
+        self.exhausted && self.peeked.is_none()
+    }
+}
+
+impl RequestSource for StreamingSource {
+    fn peek_arrival_ns(&mut self) -> Option<TimeNs> {
+        self.fill();
+        self.peeked.as_ref().map(|r| r.arrival_ns)
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        self.fill();
+        let r = self.peeked.take();
+        if r.is_some() {
+            self.emitted += 1;
+        }
+        r
+    }
+}
+
+// ------------------------------------------------------------------- sink
+
+/// Aggregate of one finalized stats window.  The power figures cover the
+/// window drained at the boundary, which lags the latency stats by one
+/// window (stragglers may still book energy just behind virtual time).
+#[derive(Debug, Clone)]
+pub struct WindowSummary {
+    /// Virtual time at which the window closed.
+    pub end_ns: TimeNs,
+    /// Post-warm-up completions inside the window.
+    pub completed: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    /// Mean total system power over the drained window, W.
+    pub mean_power_w: f64,
+    /// Dynamic energy drained with the window, pJ.
+    pub dynamic_pj: f64,
+}
+
+/// Why the traffic run ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Windowed p99 converged per the [`SteadyState`] criterion.
+    SteadyState,
+    /// The arrival horizon passed and all in-flight work drained.
+    Drained,
+    /// Something else cut the run short (e.g. `max_sim_time_ns`).
+    Truncated,
+}
+
+struct TrafficSink<'a> {
+    spec: &'a TrafficSpec,
+    stats: ServingStats,
+    window_hist: LatencyHistogram,
+    window_completed: u64,
+    window_end: TimeNs,
+    recent_p99: VecDeque<u64>,
+    windows: VecDeque<WindowSummary>,
+    converged: bool,
+}
+
+impl<'a> TrafficSink<'a> {
+    fn new(spec: &'a TrafficSpec) -> TrafficSink<'a> {
+        TrafficSink {
+            spec,
+            stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
+            window_hist: LatencyHistogram::new(),
+            window_completed: 0,
+            window_end: spec.window_ns,
+            recent_p99: VecDeque::new(),
+            windows: VecDeque::new(),
+            converged: false,
+        }
+    }
+
+    /// Summarize the current stats window against a drained power
+    /// window and append it to the bounded ring (shared by the periodic
+    /// roll and the final partial window).
+    fn push_summary(&mut self, end_ns: TimeNs, drained: &crate::power::PowerWindow) {
+        self.windows.push_back(WindowSummary {
+            end_ns,
+            completed: self.window_completed,
+            p50_ns: self.window_hist.quantile(0.5),
+            p99_ns: self.window_hist.quantile(0.99),
+            mean_power_w: drained.mean_power_w(),
+            dynamic_pj: drained.dynamic_pj(),
+        });
+        if self.windows.len() > self.spec.keep_windows {
+            self.windows.pop_front();
+        }
+    }
+
+    fn roll_window(&mut self, power: &mut PowerTracker) {
+        // Drain one window behind virtual time: in-flight network events
+        // can still book energy just before the boundary, and PowerTracker
+        // folds such stragglers into already-drained totals anyway.
+        let drained = power.drain_window(self.window_end.saturating_sub(self.spec.window_ns));
+        self.push_summary(self.window_end, &drained);
+        let p99 = self.windows.back().expect("just pushed").p99_ns;
+        if let Some(ss) = &self.spec.steady {
+            if self.window_completed >= ss.min_per_window {
+                self.recent_p99.push_back(p99);
+                if self.recent_p99.len() > ss.windows {
+                    self.recent_p99.pop_front();
+                }
+                if self.recent_p99.len() == ss.windows {
+                    let hi = *self.recent_p99.iter().max().unwrap();
+                    let lo = *self.recent_p99.iter().min().unwrap();
+                    if hi > 0 && (hi - lo) as f64 / hi as f64 <= ss.rel_tol {
+                        self.converged = true;
+                    }
+                }
+            } else {
+                // A sparse window breaks the streak.
+                self.recent_p99.clear();
+            }
+        }
+        self.window_hist.reset();
+        self.window_completed = 0;
+        self.window_end += self.spec.window_ns;
+    }
+
+    /// Finalize after the event loop returned: fold the partial last
+    /// window in (using whatever power is still live in the report).
+    fn into_report(
+        mut self,
+        mut sim: SimReport,
+        offered: u64,
+        exhausted: bool,
+        seed: u64,
+    ) -> TrafficReport {
+        if self.window_completed > 0 {
+            let end = self.window_end.min(sim.span_ns + self.spec.window_ns);
+            let drained = sim.power.drain_window(end.saturating_sub(self.spec.window_ns));
+            self.push_summary(sim.span_ns, &drained);
+        }
+        let stop = if self.converged {
+            StopReason::SteadyState
+        } else if exhausted {
+            StopReason::Drained
+        } else {
+            StopReason::Truncated
+        };
+        TrafficReport {
+            seed,
+            offered,
+            stats: self.stats,
+            windows: self.windows.into_iter().collect(),
+            stop,
+            sim,
+        }
+    }
+}
+
+impl StreamSink for TrafficSink<'_> {
+    fn on_outcome(&mut self, outcome: &ModelOutcome, _now: TimeNs) -> bool {
+        let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
+        if self.stats.record(outcome.kind, latency, outcome.finished_ns) {
+            self.window_hist.record(latency);
+            self.window_completed += 1;
+        }
+        // Early stop is driven entirely by on_advance (convergence is
+        // only ever detected at a window boundary).
+        true
+    }
+
+    fn on_advance(&mut self, now: TimeNs, power: &mut PowerTracker) -> bool {
+        while now >= self.window_end {
+            self.roll_window(power);
+            if self.converged {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _now: TimeNs) {
+        self.stats.dropped += 1;
+    }
+
+    fn retain_state(&self) -> bool {
+        false
+    }
+}
+
+// ----------------------------------------------------------------- report
+
+/// Result of a sustained-traffic run.
+#[derive(Debug)]
+pub struct TrafficReport {
+    /// Workload seed the arrival stream was built from.
+    pub seed: u64,
+    /// Requests injected before the horizon.
+    pub offered: u64,
+    /// Cumulative post-warm-up serving statistics.
+    pub stats: ServingStats,
+    /// Trailing per-window summaries (bounded by `spec.keep_windows`).
+    pub windows: Vec<WindowSummary>,
+    pub stop: StopReason,
+    /// Tail simulation state: span, residual power bins, energy totals.
+    /// Per-model outcomes are *not* retained in streaming mode.
+    pub sim: SimReport,
+}
+
+impl TrafficReport {
+    pub fn span_ns(&self) -> TimeNs {
+        self.sim.span_ns
+    }
+
+    /// Mean offered arrival rate actually seen, req/s.
+    pub fn offered_rps(&self) -> f64 {
+        if self.sim.span_ns == 0 {
+            return 0.0;
+        }
+        self.offered as f64 / (self.sim.span_ns as f64 * 1e-9)
+    }
+
+    /// Human-readable roll-up.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let st = &self.stats;
+        let h = &st.overall.hist;
+        let stop = match self.stop {
+            StopReason::SteadyState => "steady state",
+            StopReason::Drained => "horizon drained",
+            StopReason::Truncated => "truncated",
+        };
+        let mut s = format!(
+            "traffic: {} offered ({:.0} req/s), {} completed, {} dropped, {} in warm-up \
+             over {:.3} ms  [stop: {stop}]\n",
+            self.offered,
+            self.offered_rps(),
+            st.completed(),
+            st.dropped,
+            st.warmup_skipped,
+            self.sim.span_ns as f64 / 1e6,
+        );
+        let _ = writeln!(
+            s,
+            "latency (µs): p50 {:.1}  p90 {:.1}  p95 {:.1}  p99 {:.1}  p99.9 {:.1}  max {:.1}",
+            h.quantile(0.5) as f64 / 1e3,
+            h.quantile(0.9) as f64 / 1e3,
+            h.quantile(0.95) as f64 / 1e3,
+            h.quantile(0.99) as f64 / 1e3,
+            h.quantile(0.999) as f64 / 1e3,
+            h.max() as f64 / 1e3,
+        );
+        let _ = writeln!(
+            s,
+            "slo {:.1} µs: {} violations ({:.2} %), goodput {:.0} req/s",
+            st.slo_ns as f64 / 1e3,
+            st.violations(),
+            st.violation_frac() * 100.0,
+            st.goodput_rps(),
+        );
+        for (kind, k) in st.per_kind() {
+            let _ = writeln!(
+                s,
+                "  {kind:<10} x{:<6} p99 {:>9.1} µs  {:>5} violations",
+                k.completed,
+                k.hist.quantile(0.99) as f64 / 1e3,
+                k.violations,
+            );
+        }
+        if !self.windows.is_empty() {
+            let tail: Vec<String> = self
+                .windows
+                .iter()
+                .rev()
+                .take(6)
+                .rev()
+                .map(|w| {
+                    format!(
+                        "[{:.1} ms: {} done, p99 {:.0} µs, {:.2} W]",
+                        w.end_ns as f64 / 1e6,
+                        w.completed,
+                        w.p99_ns as f64 / 1e3,
+                        w.mean_power_w,
+                    )
+                })
+                .collect();
+            let _ = writeln!(s, "windows (µs power trace, trailing): {}", tail.join(" "));
+        }
+        s
+    }
+
+    /// Stable digest for determinism checks (includes the tail sim
+    /// fingerprint, so power/energy differences are caught too).
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "offered={};stop={:?};{};sim:{}",
+            self.offered,
+            self.stop,
+            self.stats.fingerprint(),
+            self.sim.fingerprint(),
+        )
+    }
+}
+
+/// Drive `sim` with the sustained-traffic spec.  Entry point behind
+/// [`Simulation::run_traffic`] / [`Simulation::run_traffic_with`].
+pub fn run_traffic(
+    sim: &mut Simulation,
+    spec: &TrafficSpec,
+    seed: u64,
+) -> anyhow::Result<TrafficReport> {
+    spec.validate()?;
+    let generator = spec.arrivals.build(seed)?;
+    let mut source = StreamingSource::new(generator, spec.horizon_ns);
+    let mut sink = TrafficSink::new(spec);
+    let report = sim.run_with(&mut source, &mut sink)?;
+    let exhausted = source.exhausted();
+    let offered = source.emitted();
+    Ok(sink.into_report(report, offered, exhausted, seed))
+}
+
+// ------------------------------------------------------------- load sweep
+
+/// One probe of a load sweep.
+#[derive(Debug, Clone)]
+pub struct SweepProbe {
+    pub rate_rps: f64,
+    pub p99_ns: u64,
+    pub goodput_rps: f64,
+    pub violation_frac: f64,
+    pub meets_slo: bool,
+}
+
+/// Result of a saturation-knee search.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    /// Every probe evaluated, in evaluation order.
+    pub probes: Vec<SweepProbe>,
+    /// Highest probed rate that met the SLO (0 when even `lo_rps` fails).
+    pub knee_rps: f64,
+}
+
+/// Bisects over arrival rate for the saturation knee: the highest rate
+/// whose post-warm-up p99 stays within the SLO (and whose violation
+/// fraction stays under `max_violation_frac`).  Each probe is an
+/// independent, fully-seeded traffic run, so the search is deterministic.
+#[derive(Debug, Clone)]
+pub struct LoadSweep {
+    /// Template spec; its arrival shape is rescaled per probe.
+    pub spec: TrafficSpec,
+    pub lo_rps: f64,
+    pub hi_rps: f64,
+    /// Bisection steps after probing both endpoints.
+    pub iters: usize,
+    pub max_violation_frac: f64,
+}
+
+impl LoadSweep {
+    pub fn new(spec: TrafficSpec, lo_rps: f64, hi_rps: f64) -> LoadSweep {
+        LoadSweep { spec, lo_rps, hi_rps, iters: 5, max_violation_frac: 0.01 }
+    }
+
+    pub fn iters(mut self, n: usize) -> LoadSweep {
+        self.iters = n;
+        self
+    }
+
+    pub fn max_violation_frac(mut self, f: f64) -> LoadSweep {
+        self.max_violation_frac = f;
+        self
+    }
+
+    /// Run the search.  `make_sim` builds a fresh simulation per probe
+    /// (each probe must start from cold state).
+    pub fn run<F>(&self, mut make_sim: F, seed: u64) -> anyhow::Result<SweepResult>
+    where
+        F: FnMut() -> anyhow::Result<Simulation>,
+    {
+        anyhow::ensure!(
+            self.lo_rps > 0.0 && self.lo_rps < self.hi_rps,
+            "load sweep needs 0 < lo ({}) < hi ({})",
+            self.lo_rps,
+            self.hi_rps
+        );
+        let mut probes = Vec::new();
+        let mut probe = |rate: f64, probes: &mut Vec<SweepProbe>| -> anyhow::Result<bool> {
+            let spec =
+                TrafficSpec { arrivals: self.spec.arrivals.with_rate(rate)?, ..self.spec.clone() };
+            let report = make_sim()?.run_traffic_with(&spec, seed)?;
+            let p99 = report.stats.overall.hist.quantile(0.99);
+            let vf = report.stats.violation_frac();
+            let meets = report.stats.completed() > 0
+                && p99 <= spec.slo_ns
+                && vf <= self.max_violation_frac;
+            probes.push(SweepProbe {
+                rate_rps: rate,
+                p99_ns: p99,
+                goodput_rps: report.stats.goodput_rps(),
+                violation_frac: vf,
+                meets_slo: meets,
+            });
+            Ok(meets)
+        };
+        let lo_ok = probe(self.lo_rps, &mut probes)?;
+        let hi_ok = probe(self.hi_rps, &mut probes)?;
+        if !lo_ok {
+            // Nothing in range is sustainable.
+            return Ok(SweepResult { probes, knee_rps: 0.0 });
+        }
+        if hi_ok {
+            // The knee lies beyond the sweep range.
+            return Ok(SweepResult { probes, knee_rps: self.hi_rps });
+        }
+        let (mut lo, mut hi) = (self.lo_rps, self.hi_rps);
+        for _ in 0..self.iters {
+            let mid = 0.5 * (lo + hi);
+            if probe(mid, &mut probes)? {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Ok(SweepResult { probes, knee_rps: lo })
+    }
+}

@@ -1,0 +1,53 @@
+//! Sustained-traffic serving simulation: open-loop arrivals, SLO
+//! metrics, and a constant-memory streaming engine.
+//!
+//! The batch path (`Simulation::run`) answers "how long does this set of
+//! models take?".  This subsystem answers the serving questions the
+//! ROADMAP's north star actually asks: *what p99 latency and goodput
+//! does this chiplet system sustain at 2,000 req/s?  Where is its
+//! saturation knee?*
+//!
+//! Three parts, layered on the existing event loop through the
+//! [`crate::sim::RequestSource`] / [`crate::sim::StreamSink`] seams:
+//!
+//! * [`arrivals`] — pluggable open-loop generators (Poisson, bursty
+//!   on-off MMPP, diurnal rate curve, trace replay), each a lazy,
+//!   per-seed-deterministic request stream;
+//! * [`slo`] — log-bucketed latency histograms (p50/p90/p99/p99.9),
+//!   per-kind goodput, SLO-violation counting, warm-up truncation;
+//! * [`engine`] — the streaming driver: requests are pulled as virtual
+//!   time advances, finished state is retired, and power bins drain in
+//!   windows, so hour-long simulated traces run in constant memory; with
+//!   steady-state early stop and [`engine::LoadSweep`] bisection for the
+//!   saturation knee.
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//!
+//! let report = Simulation::builder()
+//!     .hardware(HardwareConfig::homogeneous_mesh(8, 8))
+//!     .params(SimParams { pipelined: true, ..SimParams::default() })
+//!     .traffic(TrafficSpec::poisson(2_000.0).horizon_ms(50.0).slo_ms(1.0))
+//!     .build()
+//!     .expect("valid configuration")
+//!     .run_traffic(0xC0FFEE)
+//!     .expect("traffic run");
+//! println!("{}", report.summary());
+//! ```
+//!
+//! Or from the CLI: `chipsim traffic --scenario traffic-poisson-mesh
+//! --rate 2000 --seed 7`.
+
+pub mod arrivals;
+pub mod engine;
+pub mod slo;
+
+pub use arrivals::{
+    ArrivalProcess, ArrivalSpec, DiurnalArrivals, OnOffArrivals, PoissonArrivals, TraceArrivals,
+    TraceEvent,
+};
+pub use engine::{
+    LoadSweep, SteadyState, StopReason, StreamingSource, SweepProbe, SweepResult, TrafficReport,
+    TrafficSpec, WindowSummary,
+};
+pub use slo::{KindServing, LatencyHistogram, ServingStats};

@@ -1,0 +1,361 @@
+//! SLO metrics for sustained serving: log-bucketed latency histograms,
+//! tail quantiles, per-kind goodput, and violation counting.
+//!
+//! The histogram is HDR-style: exact below 32 ns, then 32 sub-buckets
+//! per octave, which bounds the relative quantile error at ~3 % with a
+//! fixed ~2k-slot footprint — independent of how many requests are
+//! recorded, which is what lets the streaming engine track p99.9 over
+//! hours of virtual time in constant memory.
+
+use std::collections::BTreeMap;
+
+use crate::workload::ModelKind;
+use crate::TimeNs;
+
+/// Sub-bucket resolution: 2^5 = 32 buckets per octave (~3 % rel. error).
+const SUB_BITS: u32 = 5;
+const SUB: u64 = 1 << SUB_BITS;
+/// Slots: the linear region (values < 32) plus 32 per remaining octave.
+const SLOTS: usize = ((64 - SUB_BITS as usize) << SUB_BITS as usize) + SUB as usize;
+
+/// Index of the bucket containing `v`.
+fn bucket_of(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    (((shift as u64 + 1) << SUB_BITS) + ((v >> shift) - SUB)) as usize
+}
+
+/// Lower bound and width of bucket `idx` (inverse of [`bucket_of`]).
+fn bucket_bounds(idx: usize) -> (u64, u64) {
+    let idx = idx as u64;
+    if idx < SUB {
+        return (idx, 1);
+    }
+    let block = (idx >> SUB_BITS) - 1;
+    let pos = idx & (SUB - 1);
+    ((SUB + pos) << block, 1u64 << block)
+}
+
+/// Fixed-size log-bucketed latency histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram { counts: vec![0; SLOTS], total: 0, sum: 0.0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v_ns: u64) {
+        self.counts[bucket_of(v_ns)] += 1;
+        self.total += 1;
+        self.sum += v_ns as f64;
+        self.min = self.min.min(v_ns);
+        self.max = self.max.max(v_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile estimate (bucket midpoint, clamped to the observed
+    /// range).  `q` outside [0, 1] is clamped; empty histograms report 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let (lo, width) = bucket_bounds(idx);
+                return (lo + width / 2).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Clear all recorded values (the windowed p99 tracker reuses one
+    /// allocation across windows).
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.total = 0;
+        self.sum = 0.0;
+        self.min = u64::MAX;
+        self.max = 0;
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+// ------------------------------------------------------------------ stats
+
+/// Latency/SLO accounting for one model kind (or the overall stream).
+#[derive(Debug, Clone, Default)]
+pub struct KindServing {
+    pub hist: LatencyHistogram,
+    pub completed: u64,
+    pub violations: u64,
+}
+
+impl KindServing {
+    /// Requests that completed within the SLO.
+    pub fn met_slo(&self) -> u64 {
+        self.completed - self.violations
+    }
+}
+
+/// Cumulative serving statistics over a sustained-traffic run, with
+/// warm-up truncation: requests finishing inside the warm-up window are
+/// counted separately and excluded from every latency/goodput figure.
+#[derive(Debug, Clone)]
+pub struct ServingStats {
+    /// End-to-end latency SLO applied to every request.
+    pub slo_ns: TimeNs,
+    /// Requests finishing before this virtual time are not counted.
+    pub warmup_ns: TimeNs,
+    /// How many completions the warm-up truncated.
+    pub warmup_skipped: u64,
+    /// Requests that could never be mapped and were dropped.
+    pub dropped: u64,
+    pub overall: KindServing,
+    per_kind: BTreeMap<&'static str, KindServing>,
+    /// Finish-time span of counted requests (goodput denominator).
+    first_ns: TimeNs,
+    last_ns: TimeNs,
+}
+
+impl ServingStats {
+    pub fn new(slo_ns: TimeNs, warmup_ns: TimeNs) -> ServingStats {
+        ServingStats {
+            slo_ns,
+            warmup_ns,
+            warmup_skipped: 0,
+            dropped: 0,
+            overall: KindServing::default(),
+            per_kind: BTreeMap::new(),
+            first_ns: TimeNs::MAX,
+            last_ns: 0,
+        }
+    }
+
+    /// Record a completed request.  Returns `false` when the completion
+    /// fell inside the warm-up window and was truncated.
+    pub fn record(&mut self, kind: ModelKind, latency_ns: u64, finished_ns: TimeNs) -> bool {
+        if finished_ns < self.warmup_ns {
+            self.warmup_skipped += 1;
+            return false;
+        }
+        self.first_ns = self.first_ns.min(finished_ns);
+        self.last_ns = self.last_ns.max(finished_ns);
+        let violated = latency_ns > self.slo_ns;
+        for slot in [&mut self.overall, self.per_kind.entry(kind.name()).or_default()] {
+            slot.hist.record(latency_ns);
+            slot.completed += 1;
+            slot.violations += u64::from(violated);
+        }
+        true
+    }
+
+    pub fn per_kind(&self) -> &BTreeMap<&'static str, KindServing> {
+        &self.per_kind
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.overall.completed
+    }
+
+    pub fn violations(&self) -> u64 {
+        self.overall.violations
+    }
+
+    /// Fraction of counted requests that violated the SLO.
+    pub fn violation_frac(&self) -> f64 {
+        if self.overall.completed == 0 {
+            0.0
+        } else {
+            self.overall.violations as f64 / self.overall.completed as f64
+        }
+    }
+
+    /// Span of counted completions, ns.
+    pub fn span_ns(&self) -> TimeNs {
+        self.last_ns.saturating_sub(self.first_ns.min(self.last_ns))
+    }
+
+    /// Within-SLO completions per second of counted span (the serving
+    /// headline: how much useful work the system actually sustains).
+    pub fn goodput_rps(&self) -> f64 {
+        let span = self.span_ns();
+        if span == 0 {
+            return 0.0;
+        }
+        self.overall.met_slo() as f64 / (span as f64 * 1e-9)
+    }
+
+    /// Within-SLO completions per second for one model kind.
+    pub fn goodput_of(&self, kind: ModelKind) -> f64 {
+        let span = self.span_ns();
+        match (span, self.per_kind.get(kind.name())) {
+            (0, _) | (_, None) => 0.0,
+            (_, Some(k)) => k.met_slo() as f64 / (span as f64 * 1e-9),
+        }
+    }
+
+    /// Stable digest for determinism checks.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "done={};viol={};skip={};drop={};span={}",
+            self.overall.completed,
+            self.overall.violations,
+            self.warmup_skipped,
+            self.dropped,
+            self.span_ns(),
+        );
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let _ = write!(s, ";q{}={}", q, self.overall.hist.quantile(q));
+        }
+        for (name, k) in &self.per_kind {
+            let _ = write!(s, ";{}={}v{}", name, k.completed, k.violations);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_a_partition() {
+        // Every value maps into a bucket whose bounds contain it, and
+        // bucket indices are monotone in the value.
+        let mut prev_idx = 0usize;
+        let mut first = true;
+        for v in (0..4_096u64).chain((13..40).map(|k| 1u64 << k)) {
+            let idx = bucket_of(v);
+            let (lo, w) = bucket_bounds(idx);
+            assert!(lo <= v && v < lo + w, "v={v} outside bucket [{lo}, {})", lo + w);
+            assert!(first || idx >= prev_idx, "index not monotone at {v}");
+            prev_idx = idx;
+            first = false;
+        }
+        assert!(bucket_of(u64::MAX) < SLOTS);
+    }
+
+    #[test]
+    fn quantiles_have_bounded_relative_error() {
+        let mut h = LatencyHistogram::new();
+        for v in 1..=100_000u64 {
+            h.record(v);
+        }
+        for (q, exact) in [(0.5, 50_000.0), (0.9, 90_000.0), (0.99, 99_000.0)] {
+            let est = h.quantile(q) as f64;
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.04, "q{q}: {est} vs {exact} (rel {rel})");
+        }
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.quantile(1.0), 100_000);
+        assert_eq!(h.count(), 100_000);
+        assert!((h.mean() - 50_000.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_and_reset_roundtrip() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for v in [10, 100, 1_000] {
+            a.record(v);
+        }
+        for v in [20, 200, 2_000, 20_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 7);
+        assert_eq!(a.min(), 10);
+        assert_eq!(a.max(), 20_000);
+        a.reset();
+        assert!(a.is_empty());
+        assert_eq!(a.quantile(0.99), 0);
+    }
+
+    #[test]
+    fn warmup_truncation_and_slo_counting() {
+        let mut s = ServingStats::new(1_000, 10_000);
+        assert!(!s.record(ModelKind::AlexNet, 500, 5_000)); // warm-up
+        assert!(s.record(ModelKind::AlexNet, 500, 10_000));
+        assert!(s.record(ModelKind::AlexNet, 2_000, 20_000)); // violation
+        assert!(s.record(ModelKind::ResNet18, 900, 30_000));
+        assert_eq!(s.warmup_skipped, 1);
+        assert_eq!(s.completed(), 3);
+        assert_eq!(s.violations(), 1);
+        assert!((s.violation_frac() - 1.0 / 3.0).abs() < 1e-12);
+        // Goodput: 2 within-SLO over the 20 µs counted span.
+        assert_eq!(s.span_ns(), 20_000);
+        assert!((s.goodput_rps() - 2.0 / 20e-6).abs() < 1e-6);
+        assert!(s.goodput_of(ModelKind::ResNet18) > 0.0);
+        assert_eq!(s.per_kind().len(), 2);
+    }
+
+    #[test]
+    fn fingerprint_is_stable() {
+        let mut a = ServingStats::new(1_000, 0);
+        let mut b = ServingStats::new(1_000, 0);
+        for s in [&mut a, &mut b] {
+            s.record(ModelKind::AlexNet, 750, 1_000);
+            s.record(ModelKind::ResNet50, 1_500, 2_000);
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.record(ModelKind::ResNet50, 10, 3_000);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

@@ -33,6 +33,6 @@ mod simulation;
 pub use manager::GlobalManager;
 pub use report::{KindStats, ModelOutcome, SimReport, ThermalSummary};
 pub use simulation::{
-    EventCounter, NetworkFactory, ObserverHandle, SimObserver, Simulation, SimulationBuilder,
-    ThermalSpec,
+    BatchSource, EventCounter, NetworkFactory, NullSink, ObserverHandle, RequestSource,
+    SimObserver, Simulation, SimulationBuilder, StreamSink, ThermalSpec,
 };

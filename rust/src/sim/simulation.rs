@@ -143,6 +143,84 @@ impl SimObserver for EventCounter {
     }
 }
 
+// -------------------------------------------------------- streaming core
+
+/// Lazy, pull-based supplier of model requests for the event loop.
+///
+/// The batch path wraps a precomputed request list ([`BatchSource`]); the
+/// serving subsystem ([`crate::serving`]) streams requests one at a time
+/// from an arrival process, so an hour-long trace never materializes as a
+/// `Vec`.  Implementations must yield non-decreasing `arrival_ns`.
+pub trait RequestSource {
+    /// Arrival time of the next request, without consuming it.
+    fn peek_arrival_ns(&mut self) -> Option<TimeNs>;
+    /// Consume and return the next request.
+    fn next_request(&mut self) -> Option<ModelRequest>;
+}
+
+/// [`RequestSource`] over a precomputed request list (batch semantics).
+pub struct BatchSource {
+    requests: std::vec::IntoIter<ModelRequest>,
+    peeked: Option<ModelRequest>,
+}
+
+impl BatchSource {
+    pub fn new(requests: Vec<ModelRequest>) -> BatchSource {
+        BatchSource { requests: requests.into_iter(), peeked: None }
+    }
+}
+
+impl RequestSource for BatchSource {
+    fn peek_arrival_ns(&mut self) -> Option<TimeNs> {
+        if self.peeked.is_none() {
+            self.peeked = self.requests.next();
+        }
+        self.peeked.as_ref().map(|r| r.arrival_ns)
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        self.peeked.take().or_else(|| self.requests.next())
+    }
+}
+
+/// Hooks a streaming driver installs on the event loop.
+///
+/// The batch path uses the no-op defaults ([`NullSink`]): outcomes
+/// accumulate into the report and every power bin stays live.  The
+/// sustained-traffic engine overrides all three to run in constant
+/// memory: outcomes flow into latency histograms, power bins drain in
+/// windows, and finished instance state is retired for slot reuse.
+pub trait StreamSink {
+    /// A model instance finished.  Return `false` to stop the run.
+    fn on_outcome(&mut self, _outcome: &ModelOutcome, _now: TimeNs) -> bool {
+        true
+    }
+
+    /// Virtual time advanced to `now` (called before each event is
+    /// processed).  The sink may drain power windows here.  Return
+    /// `false` to stop the run (e.g. steady state reached).
+    fn on_advance(&mut self, _now: TimeNs, _power: &mut PowerTracker) -> bool {
+        true
+    }
+
+    /// A request was dropped as unmappable.  Streaming sinks count these
+    /// (the report's `dropped` list is only populated when state is
+    /// retained).
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _now: TimeNs) {}
+
+    /// `true` (default) keeps per-model outcomes and instance state alive
+    /// for the final report; `false` retires finished instances and skips
+    /// outcome accumulation (constant-memory streaming).
+    fn retain_state(&self) -> bool {
+        true
+    }
+}
+
+/// Default no-op sink: plain batch semantics.
+pub struct NullSink;
+
+impl StreamSink for NullSink {}
+
 // -------------------------------------------------------------- plug-ins
 
 /// Builds a fresh network engine for a run (fidelity is injected here,
@@ -177,6 +255,7 @@ pub struct SimulationBuilder {
     compute: Option<Box<dyn ComputeBackend>>,
     thermal: ThermalSpec,
     observers: Vec<ObserverHandle>,
+    traffic: Option<crate::serving::TrafficSpec>,
 }
 
 impl SimulationBuilder {
@@ -190,6 +269,7 @@ impl SimulationBuilder {
             compute: None,
             thermal: ThermalSpec::Off,
             observers: Vec::new(),
+            traffic: None,
         }
     }
 
@@ -244,6 +324,14 @@ impl SimulationBuilder {
     /// Attach a probe; may be called repeatedly.
     pub fn observer(mut self, observer: ObserverHandle) -> Self {
         self.observers.push(observer);
+        self
+    }
+
+    /// Attach a sustained-traffic specification (see [`crate::serving`]).
+    /// The built simulation then serves open-loop arrival streams through
+    /// [`Simulation::run_traffic`] instead of one-shot batch workloads.
+    pub fn traffic(mut self, spec: crate::serving::TrafficSpec) -> Self {
+        self.traffic = Some(spec);
         self
     }
 
@@ -331,6 +419,7 @@ impl SimulationBuilder {
             network,
             thermal: self.thermal,
             observers: self.observers,
+            traffic: self.traffic,
         })
     }
 }
@@ -394,6 +483,23 @@ struct Instance {
     finished: bool,
 }
 
+impl Instance {
+    /// Drop all per-run state, leaving a finished husk whose slot the
+    /// streaming engine recycles — the heap held by a retired instance
+    /// must not scale with how many requests the run has served.
+    fn retire(&mut self) {
+        self.model.layers = Vec::new();
+        self.mapping.layers = Vec::new();
+        self.results = Vec::new();
+        self.layers = Vec::new();
+        self.inflows = HashMap::new();
+        self.comm_start = HashMap::new();
+        self.comm_ns = Vec::new();
+        self.inference_latency = Vec::new();
+        self.inference_start = HashMap::new();
+    }
+}
+
 #[derive(Debug, Default)]
 struct ChipletState {
     busy: bool,
@@ -403,9 +509,9 @@ struct ChipletState {
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 enum Event {
-    /// A model request enters the arbitration queue.
-    Arrive(usize),
-    /// Re-run arbitration (after an unmap or arrival).
+    /// Re-run arbitration (after an unmap or arrival).  Arrivals
+    /// themselves are not queue events: the loop pulls them lazily from
+    /// the [`RequestSource`] as virtual time reaches them.
     TryMap,
     /// A segment's compute finished on its chiplet.
     ComputeDone { inst: usize, layer: usize, seg: usize, inference: u32 },
@@ -440,6 +546,7 @@ pub struct Simulation {
     network: NetworkFactory,
     thermal: ThermalSpec,
     observers: Vec<ObserverHandle>,
+    traffic: Option<crate::serving::TrafficSpec>,
 }
 
 impl Simulation {
@@ -477,12 +584,48 @@ impl Simulation {
     /// fresh network engine and power profile, so two identical calls
     /// produce identical reports.
     pub fn run(&mut self, workload: WorkloadConfig) -> anyhow::Result<SimReport> {
-        let wall_start = Instant::now();
         let stream = WorkloadStream::from_kinds(
             &workload.kinds,
             self.params.inferences_per_model,
             workload.injection_interval_ns,
         );
+        self.run_with(&mut BatchSource::new(stream.requests), &mut NullSink)
+    }
+
+    /// Run a sustained open-loop traffic stream using the spec attached
+    /// via [`SimulationBuilder::traffic`].  See [`crate::serving`].
+    pub fn run_traffic(&mut self, seed: u64) -> anyhow::Result<crate::serving::TrafficReport> {
+        let spec = self.traffic.clone().ok_or_else(|| {
+            anyhow::anyhow!(
+                "no traffic spec attached: configure one with \
+                 Simulation::builder().traffic(..) or call run_traffic_with"
+            )
+        })?;
+        self.run_traffic_with(&spec, seed)
+    }
+
+    /// Run a sustained open-loop traffic stream with an explicit spec.
+    pub fn run_traffic_with(
+        &mut self,
+        spec: &crate::serving::TrafficSpec,
+        seed: u64,
+    ) -> anyhow::Result<crate::serving::TrafficReport> {
+        crate::serving::engine::run_traffic(self, spec, seed)
+    }
+
+    /// Core event loop, generic over where requests come from and what
+    /// happens to finished state.  `run` wires it to a precomputed batch
+    /// ([`BatchSource`] + [`NullSink`]); the serving engine feeds it an
+    /// arrival process and a windowing sink for constant-memory streaming.
+    pub fn run_with(
+        &mut self,
+        source: &mut dyn RequestSource,
+        sink: &mut dyn StreamSink,
+    ) -> anyhow::Result<SimReport> {
+        let wall_start = Instant::now();
+        let retain = sink.retain_state();
+        let mut free_slots: Vec<usize> = Vec::new();
+        let mut stop_requested = false;
         let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
         let mut power = PowerTracker::new(self.hw.num_chiplets(), self.params.power_bin_ns);
         for c in 0..self.hw.num_chiplets() {
@@ -505,9 +648,6 @@ impl Simulation {
             *seq += 1;
             queue.push(Reverse(QEntry { t, seq: *seq, ev }));
         };
-        for (i, req) in stream.requests.iter().enumerate() {
-            push(&mut queue, &mut seq, req.arrival_ns, Event::Arrive(i));
-        }
         let mut now: TimeNs = 0;
         let mut compute_energy = 0.0f64;
         let total_capacity = ledger.total_free();
@@ -637,7 +777,8 @@ impl Simulation {
                         k += n;
                     }
                     let nlayers = mapping.layers.len();
-                    let inst_id = instances.len();
+                    // Reuse a retired slot when streaming; append otherwise.
+                    let inst_id = free_slots.pop().unwrap_or(instances.len());
                     notify!(on_model_mapped(req.id, req.kind, $t));
                     let mut inst = Instance {
                         req: req.clone(),
@@ -674,14 +815,22 @@ impl Simulation {
                             }
                         }
                         inst.weight_flows = flows.len();
-                        instances.push(inst);
+                        if inst_id == instances.len() {
+                            instances.push(inst);
+                        } else {
+                            instances[inst_id] = inst;
+                        }
                         for f in flows {
                             let id = net.inject(f, $t);
                             flow_of.insert(id, (inst_id, WEIGHT_LAYER, 0));
                         }
                     } else {
                         inst.layers[0].ready.push_back(0);
-                        instances.push(inst);
+                        if inst_id == instances.len() {
+                            instances.push(inst);
+                        } else {
+                            instances[inst_id] = inst;
+                        }
                         dispatch_ready!(inst_id, 0, $t);
                     }
                 }
@@ -706,7 +855,10 @@ impl Simulation {
                                 total_capacity
                             );
                             notify!(on_model_dropped(req.id, req.kind, $t));
-                            dropped.push((req.id, req.kind));
+                            sink.on_dropped(req.id, req.kind, $t);
+                            if retain {
+                                dropped.push((req.id, req.kind));
+                            }
                         } else {
                             arb.push(req);
                             break;
@@ -752,38 +904,67 @@ impl Simulation {
                 let inst = $inst;
                 instances[inst].finished = true;
                 ledger.release_mapping(&instances[inst].mapping);
-                let me = &instances[inst];
-                outcomes.push(ModelOutcome {
-                    id: me.req.id,
-                    kind: me.req.kind,
-                    arrival_ns: me.req.arrival_ns,
-                    mapped_ns: me.mapped_ns,
-                    finished_ns: $t,
-                    inferences: me.req.inferences,
-                    inference_latency_ns: me.inference_latency.clone(),
-                    // Pure compute span per inference: sum over layers of the
-                    // slowest segment (segments of a layer run in parallel).
-                    compute_ns: {
-                        let per_inf: f64 = me
-                            .results
-                            .iter()
-                            .map(|layer| {
-                                layer.iter().map(|r| r.latency_ns).fold(0.0f64, f64::max)
-                            })
-                            .sum();
-                        vec![per_inf; me.req.inferences as usize]
-                    },
-                    comm_ns: me.comm_ns.clone(),
-                    segments: me.mapping.total_segments(),
-                });
-                notify!(on_model_finished(outcomes.last().unwrap()));
+                let outcome = {
+                    let me = &instances[inst];
+                    ModelOutcome {
+                        id: me.req.id,
+                        kind: me.req.kind,
+                        arrival_ns: me.req.arrival_ns,
+                        mapped_ns: me.mapped_ns,
+                        finished_ns: $t,
+                        inferences: me.req.inferences,
+                        inference_latency_ns: me.inference_latency.clone(),
+                        // Pure compute span per inference: sum over layers of
+                        // the slowest segment (segments run in parallel).
+                        compute_ns: {
+                            let per_inf: f64 = me
+                                .results
+                                .iter()
+                                .map(|layer| {
+                                    layer.iter().map(|r| r.latency_ns).fold(0.0f64, f64::max)
+                                })
+                                .sum();
+                            vec![per_inf; me.req.inferences as usize]
+                        },
+                        comm_ns: me.comm_ns.clone(),
+                        segments: me.mapping.total_segments(),
+                    }
+                };
+                notify!(on_model_finished(&outcome));
+                if !sink.on_outcome(&outcome, $t) {
+                    stop_requested = true;
+                }
+                if retain {
+                    outcomes.push(outcome);
+                } else {
+                    // Constant-memory streaming: drop the finished state
+                    // and recycle the slot.  An instance can only finish
+                    // after every one of its weight/activation flows
+                    // completed (each completion removes its flow_of
+                    // entry), so no stale flow can be misattributed to
+                    // the slot's next occupant.
+                    debug_assert!(
+                        flow_of.values().all(|v| v.0 != inst),
+                        "retired instance {inst} still has in-flight flows"
+                    );
+                    instances[inst].retire();
+                    free_slots.push(inst);
+                }
                 push(&mut queue, &mut seq, $t, Event::TryMap);
             }};
         }
 
         // ------------------------------------------------------ main loop
         loop {
-            let t_next = queue.peek().map(|Reverse(e)| e.t).unwrap_or(TimeNs::MAX);
+            if stop_requested {
+                break;
+            }
+            let t_queue = queue.peek().map(|Reverse(e)| e.t).unwrap_or(TimeNs::MAX);
+            // At most one upcoming arrival is materialized (inside the
+            // source's peek buffer); the rest stay in the generator until
+            // virtual time reaches them.
+            let t_arrival = source.peek_arrival_ns().unwrap_or(TimeNs::MAX);
+            let t_next = t_queue.min(t_arrival);
             if net.has_active() {
                 if let Some(c) = net.advance_until(t_next) {
                     now = now.max(c.time);
@@ -825,19 +1006,29 @@ impl Simulation {
                     continue;
                 }
             }
-            let Some(Reverse(entry)) = queue.pop() else {
+            if t_next == TimeNs::MAX {
+                break; // queue empty, no arrivals left, network idle
+            }
+            now = now.max(t_next);
+            if !sink.on_advance(now, &mut power) {
                 break;
-            };
-            now = now.max(entry.t);
+            }
             if self.params.max_sim_time_ns > 0 && now > self.params.max_sim_time_ns {
                 log::warn!("max_sim_time reached at {now} ns; truncating run");
                 break;
             }
+            // Arrivals win ties with queue events, matching the old
+            // pre-pushed ordering (arrivals held the smallest seqs).
+            if t_arrival <= t_queue {
+                let req = source.next_request().expect("peeked arrival");
+                arb.push(req);
+                try_map_models!(t_next);
+                continue;
+            }
+            let Some(Reverse(entry)) = queue.pop() else {
+                break;
+            };
             match entry.ev {
-                Event::Arrive(i) => {
-                    arb.push(stream.requests[i].clone());
-                    try_map_models!(entry.t);
-                }
                 Event::TryMap => {
                     try_map_models!(entry.t);
                 }

@@ -6,12 +6,14 @@
 //! blocking once a request exceeds the age threshold — exactly the policy
 //! described in the paper's experimental setup.
 
+use std::collections::VecDeque;
+
 use crate::workload::models::{ModelKind, ALL_CNNS};
 use crate::util::rng::Rng;
 use crate::TimeNs;
 
 /// One model request in the stream.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelRequest {
     pub id: usize,
     pub kind: ModelKind,
@@ -73,18 +75,29 @@ impl WorkloadStream {
 ///   non-skippable and blocks all younger requests until it maps.
 #[derive(Debug)]
 pub struct ArbitrationQueue {
-    pending: Vec<ModelRequest>, // kept sorted by arrival (oldest first)
+    pending: VecDeque<ModelRequest>, // kept sorted by arrival (oldest first)
     pub age_threshold_ns: TimeNs,
 }
 
 impl ArbitrationQueue {
     pub fn new(age_threshold_ns: TimeNs) -> Self {
-        ArbitrationQueue { pending: Vec::new(), age_threshold_ns }
+        ArbitrationQueue { pending: VecDeque::new(), age_threshold_ns }
     }
 
     pub fn push(&mut self, req: ModelRequest) {
-        // Maintain arrival order (stream generators emit in order, so this
-        // is O(1) in practice).
+        // In-order arrivals (every stream generator emits monotone times)
+        // append at the back in O(1).  Out-of-order pushes — bursty
+        // arrival generators, or a request re-queued after a failed drop
+        // probe — fall back to an ordered insert that keeps ties stable
+        // (a new request goes after existing equals).
+        let in_order = match self.pending.back() {
+            Some(back) => back.arrival_ns <= req.arrival_ns,
+            None => true,
+        };
+        if in_order {
+            self.pending.push_back(req);
+            return;
+        }
         let pos = self
             .pending
             .iter()
@@ -112,7 +125,7 @@ impl ArbitrationQueue {
         for i in 0..self.pending.len() {
             let req = &self.pending[i];
             if can_map(req) {
-                return Some(self.pending.remove(i));
+                return self.pending.remove(i);
             }
             let age = now.saturating_sub(req.arrival_ns);
             if age >= self.age_threshold_ns {
@@ -123,9 +136,9 @@ impl ArbitrationQueue {
         None
     }
 
-    /// Peek at pending requests (diagnostics).
-    pub fn pending(&self) -> &[ModelRequest] {
-        &self.pending
+    /// Iterate pending requests, oldest first (diagnostics).
+    pub fn pending(&self) -> impl Iterator<Item = &ModelRequest> {
+        self.pending.iter()
     }
 }
 
@@ -178,6 +191,21 @@ mod tests {
         // request 1 would map.
         assert!(q.take_next_mappable(5_000, |r| r.kind != ModelKind::ResNet50).is_none());
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn out_of_order_push_keeps_arrival_order() {
+        // Bursty generators and re-queued requests can push behind the
+        // back of the queue; the ordered-insert fallback must keep the
+        // oldest-first invariant that arbitration depends on.
+        let mut q = ArbitrationQueue::new(1_000_000);
+        q.push(req(0, ModelKind::AlexNet, 100));
+        q.push(req(1, ModelKind::ResNet18, 50)); // out of order
+        q.push(req(2, ModelKind::ResNet34, 100)); // tie: goes after id 0
+        q.push(req(3, ModelKind::ResNet50, 200)); // fast path
+        let order: Vec<usize> = q.pending().map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 0, 2, 3]);
+        assert_eq!(q.take_next_mappable(0, |_| true).unwrap().id, 1);
     }
 
     #[test]

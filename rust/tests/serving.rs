@@ -1,0 +1,189 @@
+//! Integration tests for the sustained-traffic serving subsystem:
+//! end-to-end SLO metrics, per-seed determinism, steady-state early
+//! stop, and the constant-memory guarantee (a 100x longer horizon must
+//! not grow the PowerTracker's live bin count).
+
+use chipsim::config::{HardwareConfig, SimParams};
+use chipsim::scenario::Registry;
+use chipsim::serving::{ArrivalSpec, SteadyState, StopReason, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::workload::ModelKind;
+
+fn serving_params() -> SimParams {
+    SimParams { pipelined: true, warmup_ns: 0, cooldown_ns: 0, ..SimParams::default() }
+}
+
+fn sim(rows: usize, cols: usize) -> Simulation {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(rows, cols))
+        .params(serving_params())
+        .build()
+        .expect("valid configuration")
+}
+
+/// Light but realistic load: single-kind requests well under saturation,
+/// so runs stay fast in debug builds.
+fn light_spec(horizon_ms: f64) -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(1_000.0).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(horizon_ms)
+        .warmup_ms(0.0)
+        .window_ms(1.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+#[test]
+fn traffic_run_reports_slo_metrics() {
+    let report = sim(6, 6).run_traffic_with(&light_spec(20.0), 0xFEED).unwrap();
+    assert!(report.offered > 0, "no requests offered");
+    let st = &report.stats;
+    assert!(st.completed() > 0, "nothing completed");
+    assert_eq!(
+        report.offered,
+        st.completed() + st.warmup_skipped + st.dropped,
+        "every offered request must be accounted for after drain"
+    );
+    let h = &st.overall.hist;
+    let (p50, p99, p999) = (h.quantile(0.5), h.quantile(0.99), h.quantile(0.999));
+    assert!(p50 > 0 && p50 <= p99 && p99 <= p999 && p999 <= h.max());
+    assert!(st.goodput_rps() > 0.0);
+    assert_eq!(report.stop, StopReason::Drained);
+    // Streaming mode retains no per-model outcomes.
+    assert!(report.sim.outcomes.is_empty());
+    // The summary renders and mentions the headline numbers.
+    let s = report.summary();
+    assert!(s.contains("p99"), "{s}");
+    assert!(s.contains("goodput"), "{s}");
+}
+
+#[test]
+fn impossible_slo_counts_every_completion_as_violation() {
+    let spec = light_spec(10.0).slo_us(1.0); // 1 µs end-to-end: unmeetable
+    let report = sim(6, 6).run_traffic_with(&spec, 0xFEED).unwrap();
+    let st = &report.stats;
+    assert!(st.completed() > 0);
+    assert_eq!(st.violations(), st.completed());
+    assert!((st.violation_frac() - 1.0).abs() < 1e-12);
+    assert_eq!(st.goodput_rps(), 0.0);
+}
+
+#[test]
+fn traffic_is_byte_identical_per_seed() {
+    let spec = light_spec(15.0);
+    let a = sim(6, 6).run_traffic_with(&spec, 42).unwrap();
+    let b = sim(6, 6).run_traffic_with(&spec, 42).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.span_ns(), b.span_ns());
+    let c = sim(6, 6).run_traffic_with(&spec, 43).unwrap();
+    assert_ne!(a.fingerprint(), c.fingerprint(), "seed must matter");
+}
+
+#[test]
+fn constant_memory_with_respect_to_horizon() {
+    // The acceptance bar: a 100x longer simulated horizon must not grow
+    // the PowerTracker's live bin count — windows drain as time advances.
+    let short = sim(6, 6).run_traffic_with(&light_spec(2.0), 7).unwrap();
+    let long = sim(6, 6).run_traffic_with(&light_spec(200.0), 7).unwrap();
+    assert!(long.span_ns() > 50 * short.span_ns(), "long run must actually be long");
+    let window_bins = 1_000; // 1 ms window / 1 µs bins
+    let live_short = short.sim.power.live_bins();
+    let live_long = long.sim.power.live_bins();
+    assert!(
+        live_long <= 4 * window_bins,
+        "live bins must stay within a few windows, got {live_long}"
+    );
+    assert!(
+        live_long <= live_short.max(2 * window_bins) * 2,
+        "live bins grew with horizon: {live_short} -> {live_long}"
+    );
+    // The long run really did profile (and drain) two orders of magnitude
+    // more bins, and energy accounting survived the draining.
+    assert!(long.sim.power.drained_bins() > 20 * short.sim.power.num_bins().max(1));
+    let total_dynamic: f64 =
+        (0..long.sim.power.num_chiplets()).map(|c| long.sim.power.dynamic_energy_pj(c)).sum();
+    assert!(
+        (total_dynamic - long.sim.compute_energy_pj - long.sim.comm_energy_pj).abs()
+            <= 1e-6 * total_dynamic.max(1.0),
+        "drained power lost energy: bins {total_dynamic} vs booked {}",
+        long.sim.compute_energy_pj + long.sim.comm_energy_pj
+    );
+    // Bounded window ring: the report keeps a tail, not the whole trace.
+    assert!(long.windows.len() <= 32);
+}
+
+#[test]
+fn steady_state_detection_stops_early() {
+    // With a generous tolerance any two consecutive populated windows
+    // agree, so the run must stop long before the horizon.
+    let spec = light_spec(200.0)
+        .steady(Some(SteadyState { windows: 2, rel_tol: 10.0, min_per_window: 1 }));
+    let report = sim(6, 6).run_traffic_with(&spec, 11).unwrap();
+    assert_eq!(report.stop, StopReason::SteadyState);
+    assert!(
+        report.span_ns() < 50_000_000,
+        "expected early stop, ran to {} ns",
+        report.span_ns()
+    );
+}
+
+#[test]
+fn builder_attached_traffic_spec_round_trips() {
+    let report = Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(serving_params())
+        .traffic(light_spec(5.0))
+        .build()
+        .unwrap()
+        .run_traffic(0xBEEF)
+        .unwrap();
+    assert!(report.stats.completed() > 0);
+    // Without an attached spec, run_traffic is an actionable error.
+    let err = sim(4, 4).run_traffic(0xBEEF).err().expect("must fail");
+    assert!(err.to_string().contains("traffic"), "{err}");
+}
+
+#[test]
+fn trace_replay_scenario_is_deterministic_and_drains() {
+    let reg = Registry::builtin();
+    let sc = reg.get("traffic-trace-replay").expect("registered");
+    let a = sc.run_traffic(5).unwrap();
+    let b = sc.run_traffic(5).unwrap();
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.offered, 120, "3 bursts x 40 requests");
+    assert_eq!(
+        a.offered,
+        a.stats.completed() + a.stats.warmup_skipped + a.stats.dropped
+    );
+}
+
+#[test]
+fn bursty_traffic_inflates_tail_over_poisson() {
+    // Same mean offered rate, very different arrival structure: the
+    // on-off burst stream must show a worse p99 than smooth Poisson.
+    let mesh = || sim(6, 6);
+    let base = TrafficSpec::new(ArrivalSpec::poisson(1_500.0).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(30.0)
+        .warmup_ms(0.0)
+        .window_ms(1.0)
+        .slo_ms(2.0)
+        .steady(None);
+    let smooth = mesh().run_traffic_with(&base, 3).unwrap();
+    // 20x the mean rate inside 1 ms bursts (19 ms silent): same offered
+    // load, heavy in-burst contention and queueing.
+    let bursty_spec = TrafficSpec {
+        arrivals: ArrivalSpec::on_off(30_000.0, 0.0, 1e6, 19e6).kinds(&[ModelKind::ResNet18]),
+        ..base
+    };
+    let bursty = mesh().run_traffic_with(&bursty_spec, 3).unwrap();
+    let mean_smooth = smooth.stats.overall.hist.mean();
+    let mean_bursty = bursty.stats.overall.hist.mean();
+    assert!(
+        mean_bursty > mean_smooth,
+        "bursts must hurt latency: bursty {mean_bursty} !> smooth {mean_smooth}"
+    );
+    assert!(
+        bursty.stats.overall.hist.quantile(0.99) >= smooth.stats.overall.hist.quantile(0.99),
+        "bursty p99 must not beat smooth p99"
+    );
+}

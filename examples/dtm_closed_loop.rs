@@ -1,0 +1,72 @@
+//! Closed-loop DTM: the throttle-vs-SLO tradeoff in one screen.
+//!
+//!     cargo run --release --example dtm_closed_loop
+//!
+//! Runs the same saturating traffic three times — uncontrolled (NoOp),
+//! threshold-throttled, and PID-governed — with the thermal RC network
+//! stepped *inside* the simulation loop and the governor's per-chiplet
+//! f/V choices feeding back into compute latency and dynamic power.
+//! Prints peak temperature, ceiling violations, throttle residency, and
+//! the serving-side price (p99, goodput), then writes the threshold
+//! run's per-window temperature/frequency trace into the results dir.
+
+use chipsim::dtm::GovernorSpec;
+use chipsim::metrics;
+use chipsim::prelude::*;
+use chipsim::serving::ArrivalSpec;
+
+fn main() -> anyhow::Result<()> {
+    chipsim::util::logging::init();
+    let hw = || HardwareConfig::homogeneous_mesh(4, 4);
+    let params = SimParams { pipelined: true, warmup_ns: 0, cooldown_ns: 0, ..SimParams::default() };
+    let spec = TrafficSpec::new(
+        ArrivalSpec::poisson(5_000.0).kinds(&[ModelKind::ResNet18]).inferences(2),
+    )
+    .horizon_ms(20.0)
+    .warmup_ms(2.0)
+    .window_ms(2.0)
+    .slo_ms(2.0)
+    .steady(None);
+
+    // Setpoints sit a couple of kelvin over the 45 °C ambient: that is
+    // where a millisecond-scale horizon lands (the package heats on a
+    // seconds-scale RC constant; see README "Thermal & DTM").
+    let ceiling = 47.0;
+    let governors = [
+        GovernorSpec::noop(ceiling),
+        GovernorSpec::threshold(ceiling),
+        GovernorSpec::pid(ceiling - 1.0),
+    ];
+
+    println!(
+        "{:<20} {:>8} {:>6} {:>10} {:>10} {:>9}",
+        "governor", "peak_c", "viol", "resid_pct", "p99_us", "goodput"
+    );
+    let mut threshold_csv = None;
+    for governor in governors {
+        let report = Simulation::builder()
+            .hardware(hw())
+            .params(params.clone())
+            .thermal(ThermalSpec::InLoop { window_ns: 100_000, governor })
+            .build()?
+            .run_traffic_with(&spec, 0xD7A)?;
+        let d = report.dtm().expect("in-loop run attaches a DtmReport");
+        println!(
+            "{:<20} {:>8.2} {:>6} {:>10.1} {:>10.1} {:>9.0}",
+            d.governor,
+            d.peak_c,
+            d.ceiling_violations,
+            d.throttle_residency * 100.0,
+            report.stats.overall.hist.quantile(0.99) as f64 / 1e3,
+            report.stats.goodput_rps(),
+        );
+        if d.governor == "threshold-throttle" {
+            threshold_csv = Some(d.timeline_csv());
+        }
+    }
+    if let Some(csv) = threshold_csv {
+        let path = metrics::write_result("dtm_threshold_timeline.csv", &csv)?;
+        println!("threshold window trace written to {}", path.display());
+    }
+    Ok(())
+}

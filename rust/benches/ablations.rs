@@ -15,7 +15,7 @@ use chipsim::sim::Simulation;
 use chipsim::util::benchkit::{fmt_ns, Table};
 use chipsim::workload::ModelKind;
 
-/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+/// Shared builder-API assembly for this target.
 fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
     Simulation::builder()
         .hardware(hw)

@@ -7,6 +7,7 @@
 //!   L3  mapper                  (models mapped/s on a busy ledger)
 //!   L3  end-to-end co-sim       (wall time per simulated model)
 //!   L3  streaming traffic       (requests/s through the serving engine)
+//!   L3  closed-loop DTM         (control windows/s incl. in-loop thermal)
 //!   L2  native thermal step     (node-updates/s)
 //!   L2  PJRT thermal transient  (steps/s incl. dispatch overhead)
 //!
@@ -24,7 +25,7 @@ use chipsim::util::benchkit::{bench, fmt_ns};
 use chipsim::util::rng::Rng;
 use chipsim::workload::{ModelKind, NeuralModel};
 
-/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+/// Shared builder-API assembly for this target's cases.
 fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
     Simulation::builder()
         .hardware(hw)
@@ -145,6 +146,49 @@ fn bench_traffic_steady_state() {
     );
 }
 
+fn bench_dtm_closed_loop() {
+    use chipsim::dtm::GovernorSpec;
+    use chipsim::serving::{ArrivalSpec, TrafficSpec};
+    use chipsim::sim::ThermalSpec;
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let params = SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    let spec = TrafficSpec::new(
+        ArrivalSpec::poisson(3_000.0).kinds(&[ModelKind::ResNet18, ModelKind::ResNet34]),
+    )
+    .horizon_ms(10.0)
+    .warmup_ms(1.0)
+    .window_ms(2.0)
+    .slo_ms(2.0)
+    .steady(None);
+    let mut windows = 0u64;
+    let r = bench("dtm: 3 krps x 10 ms closed loop on 6x6 mesh", 2, 2000, || {
+        let report = Simulation::builder()
+            .hardware(hw.clone())
+            .params(params.clone())
+            .thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::threshold(48.0),
+            })
+            .build()
+            .expect("valid bench configuration")
+            .run_traffic_with(&spec, 0xD7A)
+            .unwrap();
+        windows = report.dtm().map(|d| d.windows).unwrap_or(0);
+        std::hint::black_box(report.span_ns());
+    });
+    r.print();
+    println!(
+        "  -> {:.1} k control windows/s of wall time ({} per run)",
+        windows as f64 / (r.mean_ns / 1e9) / 1e3,
+        windows
+    );
+}
+
 fn bench_native_thermal() {
     let hw = HardwareConfig::homogeneous_mesh(10, 10);
     let tm = ThermalModel::build(&hw);
@@ -191,6 +235,7 @@ fn main() {
     bench_mapper();
     bench_end_to_end();
     bench_traffic_steady_state();
+    bench_dtm_closed_loop();
     bench_native_thermal();
     bench_pjrt_thermal();
 }

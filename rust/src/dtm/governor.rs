@@ -1,0 +1,179 @@
+//! DVFS governors: the policy half of the closed thermal loop.
+//!
+//! A [`Governor`] looks at the latest sensor readings once per control
+//! window and picks a per-chiplet operating point from the discrete
+//! [`DvfsTable`](super::DvfsTable).  Three built-ins:
+//!
+//! * [`NoOpGovernor`] — never throttles (the uncontrolled baseline every
+//!   DTM experiment compares against);
+//! * [`ThresholdThrottle`] — reactive hysteresis band: one state slower
+//!   above `hot_c`, one state faster below `cold_c`, hold in between
+//!   (the band prevents limit-cycling on sensor noise);
+//! * [`PidDvfs`] — per-chiplet PID on the temperature error, mapped onto
+//!   the nearest discrete state (smoother residency near the target at
+//!   the cost of tuning).
+
+use super::DvfsTable;
+use crate::TimeNs;
+
+/// A DVFS policy: maps sensor temperatures to per-chiplet table indices.
+///
+/// `state[c]` holds chiplet `c`'s current index into the table (0 =
+/// fastest); implementations mutate it in place.  Called once per
+/// control window with monotonically increasing `now_ns`.
+pub trait Governor {
+    fn name(&self) -> &'static str;
+
+    fn decide(&mut self, now_ns: TimeNs, temps_c: &[f64], table: &DvfsTable, state: &mut [usize]);
+}
+
+/// Never throttles: every chiplet stays at the fastest state.
+pub struct NoOpGovernor;
+
+impl Governor for NoOpGovernor {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
+    fn decide(&mut self, _now: TimeNs, _temps: &[f64], _table: &DvfsTable, _state: &mut [usize]) {}
+}
+
+/// Reactive throttle with a hysteresis band: step one table position
+/// slower while the reading exceeds `hot_c`, one position faster once it
+/// falls below `cold_c`, hold inside the band.
+pub struct ThresholdThrottle {
+    pub hot_c: f64,
+    pub cold_c: f64,
+}
+
+impl ThresholdThrottle {
+    pub fn new(hot_c: f64, cold_c: f64) -> ThresholdThrottle {
+        assert!(hot_c > cold_c, "hysteresis band needs hot_c ({hot_c}) > cold_c ({cold_c})");
+        ThresholdThrottle { hot_c, cold_c }
+    }
+}
+
+impl Governor for ThresholdThrottle {
+    fn name(&self) -> &'static str {
+        "threshold-throttle"
+    }
+
+    fn decide(&mut self, _now: TimeNs, temps_c: &[f64], table: &DvfsTable, state: &mut [usize]) {
+        let slowest = table.states.len() - 1;
+        for (c, idx) in state.iter_mut().enumerate() {
+            let t = temps_c.get(c).copied().unwrap_or(0.0);
+            if t > self.hot_c {
+                *idx = (*idx + 1).min(slowest);
+            } else if t < self.cold_c {
+                *idx = idx.saturating_sub(1);
+            }
+        }
+    }
+}
+
+/// Per-chiplet PID controller on `reading - target_c`, mapped to the
+/// nearest discrete frequency scale.  Positive control output means "too
+/// hot, slow down"; the integral term is clamped for anti-windup.
+pub struct PidDvfs {
+    pub target_c: f64,
+    pub kp: f64,
+    pub ki: f64,
+    pub kd: f64,
+    integral: Vec<f64>,
+    prev_err: Vec<f64>,
+}
+
+impl PidDvfs {
+    /// Default gains: proportional-dominant with a slow integral, sized
+    /// so a ~5 K excursion above target commands roughly half the DVFS
+    /// range.
+    pub fn new(target_c: f64) -> PidDvfs {
+        PidDvfs::with_gains(target_c, 0.08, 0.02, 0.04)
+    }
+
+    pub fn with_gains(target_c: f64, kp: f64, ki: f64, kd: f64) -> PidDvfs {
+        PidDvfs { target_c, kp, ki, kd, integral: Vec::new(), prev_err: Vec::new() }
+    }
+}
+
+impl Governor for PidDvfs {
+    fn name(&self) -> &'static str {
+        "pid-dvfs"
+    }
+
+    fn decide(&mut self, _now: TimeNs, temps_c: &[f64], table: &DvfsTable, state: &mut [usize]) {
+        if self.integral.len() != state.len() {
+            self.integral = vec![0.0; state.len()];
+            self.prev_err = vec![0.0; state.len()];
+        }
+        let min_f = table.min_freq_scale();
+        for (c, idx) in state.iter_mut().enumerate() {
+            let err = temps_c.get(c).copied().unwrap_or(self.target_c) - self.target_c;
+            // Anti-windup: bound the integral so a long hot spell does
+            // not lock the chiplet slow for the rest of the run.
+            self.integral[c] = (self.integral[c] + err).clamp(-25.0, 25.0);
+            let deriv = err - self.prev_err[c];
+            self.prev_err[c] = err;
+            let u = self.kp * err + self.ki * self.integral[c] + self.kd * deriv;
+            let want = (1.0 - u).clamp(min_f, 1.0);
+            *idx = table.nearest(want);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dtm::DvfsTable;
+
+    fn table() -> DvfsTable {
+        DvfsTable::default_four()
+    }
+
+    #[test]
+    fn noop_never_moves() {
+        let t = table();
+        let mut g = NoOpGovernor;
+        let mut state = vec![0usize; 3];
+        g.decide(0, &[500.0, 500.0, 500.0], &t, &mut state);
+        assert_eq!(state, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn threshold_steps_down_when_hot_and_back_up_when_cold() {
+        let t = table();
+        let mut g = ThresholdThrottle::new(80.0, 70.0);
+        let mut state = vec![0usize; 1];
+        // Hot: one step per decision, saturating at the slowest state.
+        for want in [1, 2, 3, 3] {
+            g.decide(0, &[85.0], &t, &mut state);
+            assert_eq!(state[0], want);
+        }
+        // Inside the band: hold.
+        g.decide(0, &[75.0], &t, &mut state);
+        assert_eq!(state[0], 3);
+        // Cold: step back up to full speed.
+        for want in [2, 1, 0, 0] {
+            g.decide(0, &[60.0], &t, &mut state);
+            assert_eq!(state[0], want);
+        }
+    }
+
+    #[test]
+    fn pid_throttles_above_target_and_releases_below() {
+        let t = table();
+        let mut g = PidDvfs::new(70.0);
+        let mut state = vec![0usize; 1];
+        // Far above target: drives toward the slow end.
+        for _ in 0..6 {
+            g.decide(0, &[85.0], &t, &mut state);
+        }
+        assert!(state[0] >= 2, "hot PID should throttle, got state {}", state[0]);
+        // Well below target: recovers to full speed (anti-windup lets
+        // the integral unwind in bounded time).
+        for _ in 0..60 {
+            g.decide(0, &[50.0], &t, &mut state);
+        }
+        assert_eq!(state[0], 0);
+    }
+}

@@ -1,0 +1,680 @@
+//! Closed-loop dynamic thermal management (DTM).
+//!
+//! The paper motivates microsecond-granularity power profiling with
+//! "precise transient thermal analysis" (§IV-C/§V-D); this subsystem
+//! closes the loop so temperature can act back on execution *during* the
+//! run instead of being a post-mortem:
+//!
+//! ```text
+//!   power bins ──drain──▶ ThermalStepper ──temps──▶ SensorBank
+//!        ▲                                              │ readings
+//!        │                                              ▼
+//!   compute latency/energy ◀──f/V state── Governor (threshold / PID)
+//! ```
+//!
+//! Every `window_ns` of virtual time the [`DtmRuntime`] drains the just-
+//! closed power window, advances the RC network one window
+//! ([`ThermalStepper`](crate::thermal::stepper::ThermalStepper)), polls
+//! the per-chiplet [`SensorBank`] (quantized + noisy, seed-
+//! deterministic), and lets the configured [`Governor`] pick each
+//! chiplet's operating point from a discrete [`DvfsTable`].  The chosen
+//! state scales the latency and dynamic energy of *subsequently issued*
+//! compute segments (in-flight work finishes at its issued rate) through
+//! the hooks in `sim::simulation`.
+//!
+//! Enable it on any simulation — batch or sustained traffic — with
+//! `ThermalSpec::InLoop { window_ns, governor }`; the run then attaches
+//! a [`DtmReport`] (throttle residency, ceiling violations, temperature
+//! and frequency timelines) to the `SimReport` / `TrafficReport`.  From
+//! the CLI: `chipsim dtm` (see `chipsim dtm --help`).
+
+pub mod governor;
+pub mod sensors;
+
+use std::collections::VecDeque;
+
+pub use governor::{Governor, NoOpGovernor, PidDvfs, ThresholdThrottle};
+pub use sensors::{SensorBank, SensorSpec};
+
+use crate::config::HardwareConfig;
+use crate::power::PowerTracker;
+use crate::sim::StreamSink;
+use crate::thermal::stepper::ThermalStepper;
+use crate::TimeNs;
+
+// ------------------------------------------------------------ DVFS table
+
+/// One discrete operating point.  Frequency scales compute latency as
+/// `1/freq_scale`; dynamic energy per operation scales as `volt_scale²`
+/// (CMOS `E ∝ C·V²`; the `f·V²` power factor follows because the same
+/// work then takes `1/f` longer).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DvfsState {
+    pub freq_scale: f64,
+    pub volt_scale: f64,
+}
+
+impl DvfsState {
+    pub fn latency_factor(&self) -> f64 {
+        1.0 / self.freq_scale.max(1e-6)
+    }
+
+    pub fn energy_factor(&self) -> f64 {
+        self.volt_scale * self.volt_scale
+    }
+}
+
+/// Ordered table of operating points, fastest first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DvfsTable {
+    pub states: Vec<DvfsState>,
+}
+
+impl DvfsTable {
+    /// The default ladder: nominal plus three throttle steps down to
+    /// 0.4× frequency at 0.7× voltage (≈5× lower dynamic power density).
+    pub fn default_four() -> DvfsTable {
+        DvfsTable {
+            states: vec![
+                DvfsState { freq_scale: 1.0, volt_scale: 1.0 },
+                DvfsState { freq_scale: 0.8, volt_scale: 0.9 },
+                DvfsState { freq_scale: 0.6, volt_scale: 0.8 },
+                DvfsState { freq_scale: 0.4, volt_scale: 0.7 },
+            ],
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.states.is_empty(), "DVFS table has no states");
+        for (i, s) in self.states.iter().enumerate() {
+            anyhow::ensure!(
+                s.freq_scale > 0.0 && s.freq_scale <= 1.0,
+                "DVFS state {i}: freq_scale {} outside (0, 1]",
+                s.freq_scale
+            );
+            anyhow::ensure!(
+                s.volt_scale > 0.0 && s.volt_scale <= 1.0,
+                "DVFS state {i}: volt_scale {} outside (0, 1]",
+                s.volt_scale
+            );
+        }
+        for w in self.states.windows(2) {
+            anyhow::ensure!(
+                w[1].freq_scale < w[0].freq_scale,
+                "DVFS table must be ordered fastest first (strictly decreasing freq_scale)"
+            );
+        }
+        anyhow::ensure!(
+            (self.states[0].freq_scale - 1.0).abs() < 1e-12,
+            "DVFS state 0 must be the nominal 1.0x point"
+        );
+        Ok(())
+    }
+
+    pub fn min_freq_scale(&self) -> f64 {
+        self.states.last().map(|s| s.freq_scale).unwrap_or(1.0)
+    }
+
+    /// Index of the state whose frequency is closest to `want` (ties go
+    /// to the faster state).
+    pub fn nearest(&self, want_freq: f64) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (i, s) in self.states.iter().enumerate() {
+            let d = (s.freq_scale - want_freq).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+// --------------------------------------------------------- configuration
+
+/// Which control policy drives the loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GovernorPolicy {
+    /// Uncontrolled baseline: full speed always.
+    NoOp,
+    /// Hysteresis-band reactive throttle.
+    ThresholdThrottle { hot_c: f64, cold_c: f64 },
+    /// Per-chiplet PID toward `target_c`.
+    PidDvfs { target_c: f64, kp: f64, ki: f64, kd: f64 },
+}
+
+/// Complete control-loop configuration: policy, sensor fidelity, DVFS
+/// table, and reporting knobs.  This is the `governor` payload of
+/// `ThermalSpec::InLoop { window_ns, governor }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GovernorSpec {
+    pub policy: GovernorPolicy,
+    pub sensors: SensorSpec,
+    pub table: DvfsTable,
+    /// Thermal ceiling for violation accounting (and the default anchor
+    /// the convenience constructors derive their setpoints from), °C.
+    pub ceiling_c: f64,
+    /// Power bins per implicit-Euler step inside a control window
+    /// (0 = one step per window).
+    pub stride_bins: usize,
+    /// Trailing per-window samples kept in the [`DtmReport`] timeline.
+    pub keep_timeline: usize,
+}
+
+impl GovernorSpec {
+    fn base(policy: GovernorPolicy, ceiling_c: f64) -> GovernorSpec {
+        GovernorSpec {
+            policy,
+            sensors: SensorSpec::default(),
+            table: DvfsTable::default_four(),
+            ceiling_c,
+            stride_bins: 0,
+            keep_timeline: 1024,
+        }
+    }
+
+    /// Uncontrolled baseline that still steps thermal and reports
+    /// ceiling violations.
+    pub fn noop(ceiling_c: f64) -> GovernorSpec {
+        GovernorSpec::base(GovernorPolicy::NoOp, ceiling_c)
+    }
+
+    /// Threshold throttle with a default band just under the ceiling
+    /// (hot = ceiling − 1 °C, cold = ceiling − 3 °C).
+    pub fn threshold(ceiling_c: f64) -> GovernorSpec {
+        GovernorSpec::base(
+            GovernorPolicy::ThresholdThrottle { hot_c: ceiling_c - 1.0, cold_c: ceiling_c - 3.0 },
+            ceiling_c,
+        )
+    }
+
+    /// Threshold throttle with an explicit hysteresis band.
+    pub fn threshold_band(hot_c: f64, cold_c: f64, ceiling_c: f64) -> GovernorSpec {
+        GovernorSpec::base(GovernorPolicy::ThresholdThrottle { hot_c, cold_c }, ceiling_c)
+    }
+
+    /// PID toward `target_c` with default gains; the reporting ceiling
+    /// sits 2 °C above the target.
+    pub fn pid(target_c: f64) -> GovernorSpec {
+        GovernorSpec::base(
+            GovernorPolicy::PidDvfs { target_c, kp: 0.08, ki: 0.02, kd: 0.04 },
+            target_c + 2.0,
+        )
+    }
+
+    pub fn sensors(mut self, sensors: SensorSpec) -> GovernorSpec {
+        self.sensors = sensors;
+        self
+    }
+
+    /// Override the reporting ceiling (the convenience constructors
+    /// derive a default from their setpoint).
+    pub fn ceiling(mut self, ceiling_c: f64) -> GovernorSpec {
+        self.ceiling_c = ceiling_c;
+        self
+    }
+
+    pub fn table(mut self, table: DvfsTable) -> GovernorSpec {
+        self.table = table;
+        self
+    }
+
+    pub fn stride_bins(mut self, stride: usize) -> GovernorSpec {
+        self.stride_bins = stride;
+        self
+    }
+
+    pub fn keep_timeline(mut self, n: usize) -> GovernorSpec {
+        self.keep_timeline = n.max(1);
+        self
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.policy {
+            GovernorPolicy::NoOp => "noop",
+            GovernorPolicy::ThresholdThrottle { .. } => "threshold-throttle",
+            GovernorPolicy::PidDvfs { .. } => "pid-dvfs",
+        }
+    }
+
+    /// Instantiate the policy as a fresh, stateless-at-start governor.
+    pub fn build(&self) -> Box<dyn Governor> {
+        match self.policy {
+            GovernorPolicy::NoOp => Box::new(NoOpGovernor),
+            GovernorPolicy::ThresholdThrottle { hot_c, cold_c } => {
+                Box::new(ThresholdThrottle::new(hot_c, cold_c))
+            }
+            GovernorPolicy::PidDvfs { target_c, kp, ki, kd } => {
+                Box::new(PidDvfs::with_gains(target_c, kp, ki, kd))
+            }
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.table.validate()?;
+        if let GovernorPolicy::ThresholdThrottle { hot_c, cold_c } = self.policy {
+            anyhow::ensure!(
+                hot_c > cold_c,
+                "threshold governor needs hot_c ({hot_c}) > cold_c ({cold_c})"
+            );
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------------- runtime
+
+/// One finalized control window in the report timeline.
+#[derive(Debug, Clone)]
+pub struct DtmWindowSample {
+    /// Virtual time the window closed.
+    pub end_ns: TimeNs,
+    /// True hottest chiplet at the boundary, °C.
+    pub hottest_c: f64,
+    /// Hottest *sensor reading* the governor acted on, °C.
+    pub sensor_hottest_c: f64,
+    /// Mean frequency scale across chiplets after the decision.
+    pub mean_freq_scale: f64,
+    /// Slowest chiplet's frequency scale after the decision.
+    pub min_freq_scale: f64,
+    /// Chiplets below the nominal state after the decision.
+    pub throttled: usize,
+}
+
+/// The in-loop controller owned by `Simulation::run_with` when built
+/// with `ThermalSpec::InLoop`.  Drains power windows on its control
+/// cadence (forwarding each to the run's [`StreamSink`] so streaming
+/// stats stay fed), steps thermal, polls sensors, and applies the
+/// governor.
+pub struct DtmRuntime {
+    window_ns: TimeNs,
+    next_end: TimeNs,
+    spec: GovernorSpec,
+    stepper: ThermalStepper,
+    sensors: SensorBank,
+    governor: Box<dyn Governor>,
+    /// Streaming runs drain closed windows (constant memory, forwarded
+    /// to the sink); state-retaining batch runs peek non-destructively
+    /// so the report keeps its full per-bin power trace.
+    drain: bool,
+    /// Current per-chiplet table index (0 = fastest).
+    idx: Vec<usize>,
+    windows: u64,
+    violations: u64,
+    transitions: u64,
+    throttled_chiplet_windows: u64,
+    peak_c: f64,
+    timeline: VecDeque<DtmWindowSample>,
+}
+
+impl DtmRuntime {
+    /// `run_seed` feeds the sensor-noise stream (the traffic seed for
+    /// serving runs, `params.seed` otherwise); `drain` selects between
+    /// draining closed windows (streaming) and peeking them (batch).
+    pub fn new(
+        hw: &HardwareConfig,
+        bin_ns: TimeNs,
+        window_ns: TimeNs,
+        spec: &GovernorSpec,
+        run_seed: u64,
+        drain: bool,
+    ) -> anyhow::Result<DtmRuntime> {
+        spec.validate()?;
+        anyhow::ensure!(
+            window_ns >= bin_ns && window_ns % bin_ns == 0,
+            "DTM window ({window_ns} ns) must be a whole multiple of the power bin \
+             ({bin_ns} ns) so drain cursors land on window boundaries"
+        );
+        let window_bins = (window_ns / bin_ns) as usize;
+        let stride = if spec.stride_bins == 0 {
+            window_bins
+        } else {
+            spec.stride_bins.min(window_bins)
+        };
+        // A group spanning a control boundary would leave the governor
+        // acting on temperatures that lag the boundary by the carry.
+        anyhow::ensure!(
+            window_bins % stride == 0,
+            "DTM stride_bins ({stride}) must divide the control window ({window_bins} \
+             bins) so every window closes on a whole thermal step"
+        );
+        // In-loop stepping is native-only: the control loop must be
+        // deterministic and dispatch-free on the hot path.
+        let stepper = ThermalStepper::new(hw, bin_ns, stride, false)?;
+        let nch = hw.num_chiplets();
+        Ok(DtmRuntime {
+            window_ns,
+            next_end: window_ns,
+            stepper,
+            sensors: SensorBank::new(nch, spec.sensors.clone(), run_seed),
+            governor: spec.build(),
+            spec: spec.clone(),
+            drain,
+            idx: vec![0; nch],
+            windows: 0,
+            violations: 0,
+            transitions: 0,
+            throttled_chiplet_windows: 0,
+            peak_c: f64::NEG_INFINITY,
+            timeline: VecDeque::new(),
+        })
+    }
+
+    /// Latency multiplier for work issued on `chiplet` right now.
+    pub fn latency_factor(&self, chiplet: usize) -> f64 {
+        self.spec.table.states[self.idx[chiplet]].latency_factor()
+    }
+
+    /// Dynamic-energy multiplier for work issued on `chiplet` right now.
+    pub fn energy_factor(&self, chiplet: usize) -> f64 {
+        self.spec.table.states[self.idx[chiplet]].energy_factor()
+    }
+
+    /// Advance the control loop to virtual time `now`: close every
+    /// elapsed window — drain its power (forwarded to `sink`), step the
+    /// RC network, poll sensors, run the governor.
+    pub fn on_advance(
+        &mut self,
+        now: TimeNs,
+        power: &mut PowerTracker,
+        sink: &mut dyn StreamSink,
+    ) -> anyhow::Result<()> {
+        while now >= self.next_end {
+            let window = if self.drain {
+                let w = power.drain_window(self.next_end);
+                sink.on_power_window(&w);
+                w
+            } else {
+                power.window_view(self.next_end - self.window_ns, self.next_end)
+            };
+            self.stepper.ingest(&window)?;
+            let temps = self.stepper.chiplet_temps_c();
+            let hottest = temps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            self.peak_c = self.peak_c.max(hottest);
+            if hottest > self.spec.ceiling_c {
+                self.violations += 1;
+            }
+            let readings = self.sensors.read(self.next_end, &temps);
+            let sensor_hottest = readings.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let prev = self.idx.clone();
+            self.governor.decide(self.next_end, readings, &self.spec.table, &mut self.idx);
+            self.transitions +=
+                prev.iter().zip(&self.idx).filter(|(a, b)| a != b).count() as u64;
+            let throttled = self.idx.iter().filter(|&&i| i > 0).count();
+            self.throttled_chiplet_windows += throttled as u64;
+            self.windows += 1;
+            let scales: Vec<f64> =
+                self.idx.iter().map(|&i| self.spec.table.states[i].freq_scale).collect();
+            self.timeline.push_back(DtmWindowSample {
+                end_ns: self.next_end,
+                hottest_c: hottest,
+                sensor_hottest_c: sensor_hottest,
+                mean_freq_scale: scales.iter().sum::<f64>() / scales.len().max(1) as f64,
+                min_freq_scale: scales.iter().cloned().fold(1.0, f64::min),
+                throttled,
+            });
+            if self.timeline.len() > self.spec.keep_timeline {
+                self.timeline.pop_front();
+            }
+            self.next_end += self.window_ns;
+        }
+        Ok(())
+    }
+
+    /// Finalize after the event loop returned: fold the still-live power
+    /// tail into the thermal state (non-destructively) and assemble the
+    /// report.  In drain mode the tail is also forwarded to the sink, so
+    /// externally-fed streaming power stats account every joule even
+    /// when the run ends mid-window (or before the first one closes).
+    pub fn finish(
+        mut self,
+        power: &PowerTracker,
+        sink: &mut dyn StreamSink,
+    ) -> anyhow::Result<DtmReport> {
+        // The last, still-open control window: everything after the last
+        // closed boundary.  In drain mode that is exactly the live bins;
+        // in peek mode the live bins also cover already-stepped windows,
+        // so the view starts at the boundary instead.
+        let start = self.next_end.saturating_sub(self.window_ns);
+        let end = power.num_bins() as TimeNs * power.bin_ns;
+        if self.drain {
+            let tail = power.window_view(start, end);
+            if tail.bins() > 0 {
+                sink.on_power_window(&tail);
+            }
+            self.stepper.ingest_live(power)?;
+        } else {
+            self.stepper.ingest(&power.window_view(start, end))?;
+        }
+        self.stepper.flush()?;
+        let final_temps = self.stepper.chiplet_temps_c();
+        let tail_hottest = final_temps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let peak_c = self.peak_c.max(tail_hottest);
+        let nch = self.idx.len().max(1) as u64;
+        Ok(DtmReport {
+            governor: self.governor.name(),
+            solver: self.stepper.solver(),
+            window_ns: self.window_ns,
+            ceiling_c: self.spec.ceiling_c,
+            windows: self.windows,
+            ceiling_violations: self.violations,
+            peak_c,
+            throttle_residency: if self.windows == 0 {
+                0.0
+            } else {
+                self.throttled_chiplet_windows as f64 / (self.windows * nch) as f64
+            },
+            transitions: self.transitions,
+            steps: self.stepper.steps(),
+            final_freq_scale: self
+                .idx
+                .iter()
+                .map(|&i| self.spec.table.states[i].freq_scale)
+                .collect(),
+            final_temps_c: final_temps,
+            timeline: self.timeline.into_iter().collect(),
+        })
+    }
+}
+
+// --------------------------------------------------------------- report
+
+/// Result of a closed-loop DTM run, attached to `SimReport::dtm` (and
+/// therefore reachable from `TrafficReport::dtm()`).
+#[derive(Debug, Clone)]
+pub struct DtmReport {
+    pub governor: &'static str,
+    /// Thermal backend that stepped the loop ("native").
+    pub solver: &'static str,
+    /// Control period, ns.
+    pub window_ns: TimeNs,
+    pub ceiling_c: f64,
+    /// Control windows evaluated.
+    pub windows: u64,
+    /// Windows whose true hottest chiplet exceeded the ceiling.
+    pub ceiling_violations: u64,
+    /// Hottest true chiplet temperature observed at any window boundary
+    /// (or at run end), °C.
+    pub peak_c: f64,
+    /// Fraction of (chiplet × window) pairs spent below nominal speed.
+    pub throttle_residency: f64,
+    /// Total DVFS state changes across chiplets.
+    pub transitions: u64,
+    /// Implicit-Euler steps integrated (incl. the end-of-run tail).
+    pub steps: usize,
+    pub final_temps_c: Vec<f64>,
+    pub final_freq_scale: Vec<f64>,
+    /// Trailing per-window samples (bounded by `keep_timeline`).
+    pub timeline: Vec<DtmWindowSample>,
+}
+
+impl DtmReport {
+    /// Human-readable roll-up (one paragraph, newline-terminated).
+    pub fn summary(&self) -> String {
+        format!(
+            "dtm ({}, {} windows of {:.0} µs): peak {:.2} °C vs ceiling {:.1} °C \
+             ({} violations), throttle residency {:.1} %, {} transitions\n",
+            self.governor,
+            self.windows,
+            self.window_ns as f64 / 1e3,
+            self.peak_c,
+            self.ceiling_c,
+            self.ceiling_violations,
+            self.throttle_residency * 100.0,
+            self.transitions,
+        )
+    }
+
+    /// Per-window temperature/frequency trace (`chipsim dtm --csv`).
+    pub fn timeline_csv(&self) -> String {
+        let mut s = String::from(
+            "end_us,hottest_c,sensor_hottest_c,mean_freq_scale,min_freq_scale,throttled\n",
+        );
+        for w in &self.timeline {
+            s.push_str(&format!(
+                "{:.3},{:.4},{:.4},{:.4},{:.4},{}\n",
+                w.end_ns as f64 / 1e3,
+                w.hottest_c,
+                w.sensor_hottest_c,
+                w.mean_freq_scale,
+                w.min_freq_scale,
+                w.throttled,
+            ));
+        }
+        s
+    }
+
+    /// Stable digest for determinism checks: floats enter via their bit
+    /// patterns, so two reports are byte-identical iff this matches.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "gov={};win={};n={};viol={};trans={};peak={:016x};res={:016x}",
+            self.governor,
+            self.window_ns,
+            self.windows,
+            self.ceiling_violations,
+            self.transitions,
+            self.peak_c.to_bits(),
+            self.throttle_residency.to_bits(),
+        );
+        for t in &self.final_temps_c {
+            let _ = write!(s, ",t{:016x}", t.to_bits());
+        }
+        for f in &self.final_freq_scale {
+            let _ = write!(s, ",f{:016x}", f.to_bits());
+        }
+        for w in &self.timeline {
+            let _ = write!(
+                s,
+                ";{}:{:016x}:{:016x}:{:016x}:{}",
+                w.end_ns,
+                w.hottest_c.to_bits(),
+                w.sensor_hottest_c.to_bits(),
+                w.mean_freq_scale.to_bits(),
+                w.throttled
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_table_validates_and_orders() {
+        let t = DvfsTable::default_four();
+        t.validate().unwrap();
+        assert_eq!(t.nearest(1.0), 0);
+        assert_eq!(t.nearest(0.75), 1);
+        assert_eq!(t.nearest(0.0), 3);
+        assert!((t.min_freq_scale() - 0.4).abs() < 1e-12);
+        // Deepest state cuts dynamic power density ~5x: E·f factor.
+        let s = t.states[3];
+        assert!((s.energy_factor() - 0.49).abs() < 1e-12);
+        assert!((s.latency_factor() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_tables_are_rejected() {
+        let empty = DvfsTable { states: vec![] };
+        assert!(empty.validate().is_err());
+        let unordered = DvfsTable {
+            states: vec![
+                DvfsState { freq_scale: 1.0, volt_scale: 1.0 },
+                DvfsState { freq_scale: 1.0, volt_scale: 0.9 },
+            ],
+        };
+        assert!(unordered.validate().is_err());
+        let no_nominal = DvfsTable {
+            states: vec![DvfsState { freq_scale: 0.9, volt_scale: 1.0 }],
+        };
+        assert!(no_nominal.validate().is_err());
+    }
+
+    #[test]
+    fn governor_spec_constructors_name_their_policy() {
+        assert_eq!(GovernorSpec::noop(80.0).name(), "noop");
+        assert_eq!(GovernorSpec::threshold(80.0).name(), "threshold-throttle");
+        assert_eq!(GovernorSpec::pid(75.0).name(), "pid-dvfs");
+        GovernorSpec::threshold(80.0).validate().unwrap();
+        assert!(GovernorSpec::threshold_band(60.0, 70.0, 80.0).validate().is_err());
+    }
+
+    #[test]
+    fn runtime_requires_aligned_windows() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let spec = GovernorSpec::noop(60.0);
+        assert!(DtmRuntime::new(&hw, 1_000, 1_500, &spec, 0, true).is_err());
+        assert!(DtmRuntime::new(&hw, 1_000, 2_000, &spec, 0, true).is_ok());
+    }
+
+    #[test]
+    fn peek_and_drain_modes_agree_thermally() {
+        // Batch runs peek windows (report keeps its power trace);
+        // streaming runs drain them.  Both must integrate the same
+        // thermal trajectory, tail included.
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let spec = GovernorSpec::noop(60.0).sensors(SensorSpec::ideal());
+        let run = |drain: bool| {
+            let mut rt = DtmRuntime::new(&hw, 1_000, 2_000, &spec, 3, drain).unwrap();
+            let mut power = PowerTracker::new(4, 1_000);
+            for c in 0..4 {
+                power.set_baseline_mw(c, 1.0);
+            }
+            power.add_energy(0, 500, 6_000, 9_000.0);
+            rt.on_advance(7_000, &mut power, &mut crate::sim::NullSink).unwrap();
+            let rep = rt.finish(&power, &mut crate::sim::NullSink).unwrap();
+            (rep, power.drained_bins())
+        };
+        let (a, drained_a) = run(true);
+        let (b, drained_b) = run(false);
+        assert!(drained_a > 0, "drain mode must retire bins");
+        assert_eq!(drained_b, 0, "peek mode must leave the tracker intact");
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.steps, b.steps);
+        for (x, y) in a.final_temps_c.iter().zip(&b.final_temps_c) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn empty_run_report_is_sane() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let rt =
+            DtmRuntime::new(&hw, 1_000, 2_000, &GovernorSpec::noop(60.0), 7, false).unwrap();
+        let power = PowerTracker::new(hw.num_chiplets(), 1_000);
+        let rep = rt.finish(&power, &mut crate::sim::NullSink).unwrap();
+        assert_eq!(rep.windows, 0);
+        assert_eq!(rep.ceiling_violations, 0);
+        assert_eq!(rep.throttle_residency, 0.0);
+        assert_eq!(rep.final_freq_scale, vec![1.0; 4]);
+        // No bins at all: the only temperature evidence is ambient.
+        assert!(rep.final_temps_c.iter().all(|t| t.is_finite()));
+        assert!(!rep.summary().is_empty());
+        assert!(rep.timeline_csv().starts_with("end_us,"));
+    }
+}

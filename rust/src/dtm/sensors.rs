@@ -1,0 +1,139 @@
+//! Per-chiplet temperature sensors: what the governor *sees*.
+//!
+//! Real DTM controllers act on thermal-diode readings, not ground truth:
+//! sensors quantize (typically 0.25–1 °C steps), carry noise, and are
+//! polled at a fixed period rather than continuously.  [`SensorBank`]
+//! models all three over the stepper's true chiplet temperatures, with
+//! seed-deterministic Gaussian noise so a DTM run is byte-reproducible.
+
+use crate::util::rng::Rng;
+use crate::TimeNs;
+
+/// Sensor fidelity configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SensorSpec {
+    /// Quantization step, °C (0 = continuous readout).
+    pub quant_c: f64,
+    /// Gaussian read-noise sigma, °C (0 = noiseless).
+    pub noise_sigma_c: f64,
+    /// Polling period, ns.  Between polls the bank holds the last
+    /// reading.  0 polls at every control window.
+    pub period_ns: TimeNs,
+    /// Noise stream seed, mixed with the simulation seed.
+    pub seed: u64,
+}
+
+impl Default for SensorSpec {
+    fn default() -> Self {
+        SensorSpec { quant_c: 0.25, noise_sigma_c: 0.1, period_ns: 0, seed: 0x5E45_0217 }
+    }
+}
+
+impl SensorSpec {
+    /// Noiseless, continuous, every-window sensors (testing / oracles).
+    pub fn ideal() -> SensorSpec {
+        SensorSpec { quant_c: 0.0, noise_sigma_c: 0.0, period_ns: 0, seed: 0 }
+    }
+}
+
+/// One sensor per chiplet, sharing a deterministic noise stream.
+pub struct SensorBank {
+    spec: SensorSpec,
+    rng: Rng,
+    readings: Vec<f64>,
+    last_poll_ns: Option<TimeNs>,
+}
+
+impl SensorBank {
+    pub fn new(num_chiplets: usize, spec: SensorSpec, run_seed: u64) -> SensorBank {
+        // One PRNG round avalanches (run_seed, sensor seed) pairs apart.
+        let mut mixer = Rng::new(run_seed ^ spec.seed.rotate_left(17));
+        let rng = mixer.fork();
+        SensorBank { spec, rng, readings: vec![0.0; num_chiplets], last_poll_ns: None }
+    }
+
+    /// Sample the sensors at `now` against the true temperatures (°C).
+    /// Polls only when the period elapsed; otherwise the previous
+    /// readings are returned unchanged (stale data is part of the model).
+    pub fn read(&mut self, now: TimeNs, true_temps_c: &[f64]) -> &[f64] {
+        let due = match self.last_poll_ns {
+            None => true,
+            Some(last) => now >= last.saturating_add(self.spec.period_ns),
+        };
+        if due {
+            self.last_poll_ns = Some(now);
+            self.readings.clear();
+            for &t in true_temps_c {
+                let mut v = t;
+                if self.spec.noise_sigma_c > 0.0 {
+                    v += self.spec.noise_sigma_c * gauss(&mut self.rng);
+                }
+                if self.spec.quant_c > 0.0 {
+                    v = (v / self.spec.quant_c).round() * self.spec.quant_c;
+                }
+                self.readings.push(v);
+            }
+        }
+        &self.readings
+    }
+}
+
+/// Standard-normal sample via Box–Muller (one draw per call; the partner
+/// sample is discarded for a simpler deterministic stream).
+fn gauss(rng: &mut Rng) -> f64 {
+    let u1 = rng.f64().max(1e-300);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_sensors_pass_truth_through() {
+        let mut bank = SensorBank::new(3, SensorSpec::ideal(), 42);
+        let truth = [45.0, 52.25, 61.5];
+        assert_eq!(bank.read(0, &truth), &truth);
+    }
+
+    #[test]
+    fn quantization_snaps_to_steps() {
+        let spec = SensorSpec { quant_c: 0.5, noise_sigma_c: 0.0, period_ns: 0, seed: 0 };
+        let mut bank = SensorBank::new(2, spec, 1);
+        let r = bank.read(0, &[45.13, 45.38]).to_vec();
+        assert_eq!(r, vec![45.0, 45.5]);
+    }
+
+    #[test]
+    fn noise_is_seed_deterministic_and_seed_sensitive() {
+        let spec = SensorSpec { quant_c: 0.0, noise_sigma_c: 0.5, period_ns: 0, seed: 7 };
+        let truth = [50.0; 4];
+        let mut a = SensorBank::new(4, spec.clone(), 99);
+        let mut b = SensorBank::new(4, spec.clone(), 99);
+        assert_eq!(a.read(0, &truth), b.read(0, &truth));
+        let mut c = SensorBank::new(4, spec, 100);
+        assert_ne!(a.read(1, &truth), c.read(1, &truth));
+    }
+
+    #[test]
+    fn polling_period_holds_readings_between_polls() {
+        let spec = SensorSpec { quant_c: 0.0, noise_sigma_c: 0.0, period_ns: 1_000, seed: 0 };
+        let mut bank = SensorBank::new(1, spec, 0);
+        assert_eq!(bank.read(0, &[45.0]), &[45.0]);
+        // Truth moved, but the next poll is not due yet: stale reading.
+        assert_eq!(bank.read(500, &[60.0]), &[45.0]);
+        assert_eq!(bank.read(1_000, &[60.0]), &[60.0]);
+    }
+
+    #[test]
+    fn gauss_is_roughly_standard_normal() {
+        let mut rng = Rng::new(1234);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| gauss(&mut rng)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+}

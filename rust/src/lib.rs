@@ -59,8 +59,11 @@
 //!     .unwrap();
 //! ```
 //!
-//! The pre-builder `sim::GlobalManager` entry point is deprecated and
-//! kept as a thin shim for one release; new code should not use it.
+//! Closed-loop dynamic thermal management lives in [`dtm`]: build a
+//! simulation with `ThermalSpec::InLoop { window_ns, governor }` and the
+//! run steps the RC network in-loop, polls per-chiplet sensors, and lets
+//! a DVFS governor scale the latency and dynamic power of subsequently
+//! issued compute.
 //!
 //! See `examples/` for complete drivers and `rust/benches/` for the
 //! regeneration harness of every table and figure in the paper.
@@ -76,6 +79,7 @@ pub mod scenario;
 pub mod serving;
 pub mod power;
 pub mod thermal;
+pub mod dtm;
 pub mod baselines;
 pub mod experiments;
 pub mod hwemu;
@@ -94,12 +98,12 @@ pub mod prelude {
         ArrivalSpec, LatencyHistogram, LoadSweep, ServingStats, SteadyState, StopReason,
         TrafficReport, TrafficSpec,
     };
+    pub use crate::dtm::{
+        DtmReport, DvfsState, DvfsTable, Governor, GovernorPolicy, GovernorSpec, SensorSpec,
+    };
     pub use crate::sim::{
         SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,
     };
-    // Kept for the one-release deprecation window; usage still warns.
-    #[allow(deprecated)]
-    pub use crate::sim::GlobalManager;
     pub use crate::workload::{ModelKind, NeuralModel};
 }
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run          generic co-simulation run with configurable system/workload
 //!   traffic      sustained open-loop serving run (p50/p99, goodput, SLO)
+//!   dtm          closed-loop dynamic thermal management run / governor sweep
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -17,6 +18,8 @@
 //!   chipsim traffic --scenario traffic-poisson-mesh --rate 2000 --seed 7
 //!   chipsim traffic --rows 8 --cols 8 --arrivals burst --rate 3000 --pipelined
 //!   chipsim traffic --sweep --lo 500 --hi 8000       # saturation knee
+//!   chipsim dtm --scenario dtm-thermal-ceiling --csv dtm.csv
+//!   chipsim dtm --rows 6 --cols 6 --pipelined --sweep  # governor tradeoff
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -34,7 +37,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|dtm|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -56,6 +59,12 @@ fn help() -> HelpText {
             ("--horizon-ms/--warmup-ms/--window-ms", "traffic: run shape (default 50/5/5)"),
             ("--slo-ms S", "traffic: end-to-end latency SLO (default 1.0)"),
             ("--sweep --lo R0 --hi R1 [--iters N]", "traffic: bisect for the saturation knee"),
+            ("--governor noop|threshold|pid", "dtm: DVFS policy (default threshold)"),
+            ("--ceiling C", "dtm: thermal ceiling, °C (default 48)"),
+            ("--dtm-window-us W", "dtm: control period, µs (default 100)"),
+            ("--csv FILE", "dtm: write the per-window temperature/frequency trace"),
+            ("--keep-timeline N", "dtm: window samples kept for --csv (default: whole horizon)"),
+            ("dtm --sweep", "dtm: run noop/threshold/pid at one seed, print the tradeoff"),
         ],
     }
 }
@@ -246,11 +255,151 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Closed-loop DTM run: the thermal stepper runs inside the event loop,
+/// per-chiplet sensors feed a DVFS governor, and the chosen operating
+/// points act back on compute latency and dynamic power.  Prints the
+/// serving stats plus the DtmReport roll-up; `--csv` dumps the
+/// per-window temperature/frequency trace; `--sweep` compares the three
+/// built-in governors on one seed (the throttle-vs-SLO tradeoff).
+fn cmd_dtm(args: &Args) -> anyhow::Result<()> {
+    use chipsim::dtm::GovernorSpec;
+    use chipsim::serving::{TrafficReport, TrafficSpec};
+    use chipsim::sim::ThermalSpec;
+    let reg = Registry::builtin();
+    let window_ns = (args.get_f64("dtm-window-us", 100.0)? * 1e3) as u64;
+    let ceiling = args.get_f64("ceiling", 48.0)?;
+    let governor_of = |name: &str| -> anyhow::Result<GovernorSpec> {
+        Ok(match name {
+            "noop" => GovernorSpec::noop(ceiling),
+            "threshold" => GovernorSpec::threshold(ceiling),
+            // Violations are accounted against the *requested* ceiling
+            // (pid() would otherwise derive its own from the setpoint).
+            "pid" => GovernorSpec::pid(ceiling - 1.5).ceiling(ceiling),
+            other => anyhow::bail!("unknown --governor '{other}' (noop|threshold|pid)"),
+        })
+    };
+    let (hw, params, spec, seed, scenario_thermal) = if let Some(name) = args.get("scenario") {
+        let sc = reg.get(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+        })?;
+        if args.get("governor").is_none() && !args.flag("sweep") && sc.thermal().is_in_loop() {
+            // The preset's in-loop spec will run as-is: reject knobs that
+            // would otherwise be silently ignored (--governor and --sweep
+            // take the generic path, where they apply).
+            for opt in ["ceiling", "dtm-window-us"] {
+                anyhow::ensure!(
+                    args.get(opt).is_none(),
+                    "--{opt} is ignored by scenario '{name}' unless --governor or --sweep \
+                     is also given (the preset fixes its own control spec)"
+                );
+            }
+        }
+        let seed = args.get_u64("seed", sc.default_seed)?;
+        let mut spec = sc.traffic_spec(seed).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scenario '{name}' is a batch scenario; dtm needs a traffic scenario \
+                 (try dtm-thermal-ceiling or dtm-throttle-slo)"
+            )
+        })?;
+        // --rate rescales the preset's arrival shape, like `chipsim
+        // traffic --scenario ... --rate R`.
+        if args.get("rate").is_some() {
+            spec.arrivals = spec.arrivals.with_rate(args.get_f64("rate", 0.0)?)?;
+        }
+        (sc.hardware(), sc.params(), spec, seed, Some(sc.thermal().clone()))
+    } else {
+        let hw = build_hw(args)?;
+        let params = build_params(args)?;
+        let seed = args.get_u64("seed", params.seed)?;
+        let spec = TrafficSpec::poisson(args.get_f64("rate", 3_000.0)?)
+            .horizon_ms(args.get_f64("horizon-ms", 30.0)?)
+            .warmup_ms(args.get_f64("warmup-ms", 5.0)?)
+            .window_ms(args.get_f64("window-ms", 5.0)?)
+            .slo_ms(args.get_f64("slo-ms", 2.0)?)
+            .steady(None);
+        (hw, params, spec, seed, None)
+    };
+    // Timeline ring size: default covers the whole horizon so --csv is
+    // never silently truncated; --keep-timeline bounds it explicitly.
+    let keep_timeline = args.get_usize(
+        "keep-timeline",
+        ((spec.horizon_ns / window_ns.max(1)) as usize + 2).max(1024),
+    )?;
+    let run_one = |win: u64, governor: GovernorSpec| -> anyhow::Result<TrafficReport> {
+        Simulation::builder()
+            .hardware(hw.clone())
+            .params(params.clone())
+            .thermal(ThermalSpec::InLoop { window_ns: win, governor })
+            .build()?
+            .run_traffic_with(&spec, seed)
+    };
+    if args.flag("sweep") {
+        use chipsim::util::benchkit::Table;
+        let mut table = Table::new(
+            "DTM governor sweep: thermal ceiling vs serving SLO",
+            &["governor", "peak_c", "violations", "residency_pct", "p99_us", "goodput_rps"],
+        );
+        for g in ["noop", "threshold", "pid"] {
+            let report = run_one(window_ns, governor_of(g)?.keep_timeline(keep_timeline))?;
+            let d = report.dtm().expect("in-loop run attaches a DtmReport");
+            table.row(vec![
+                d.governor.to_string(),
+                format!("{:.2}", d.peak_c),
+                d.ceiling_violations.to_string(),
+                format!("{:.1}", d.throttle_residency * 100.0),
+                format!("{:.1}", report.stats.overall.hist.quantile(0.99) as f64 / 1e3),
+                format!("{:.0}", report.stats.goodput_rps()),
+            ]);
+        }
+        table.print();
+        return Ok(());
+    }
+    // A dtm-* scenario carries its own in-loop spec; --governor replaces
+    // it (and equips plain traffic scenarios with one).  --keep-timeline
+    // still applies to the preset's governor.
+    let report = match (&scenario_thermal, args.get("governor")) {
+        (Some(ThermalSpec::InLoop { window_ns: preset_win, governor }), None) => {
+            let governor = if args.get("keep-timeline").is_some() {
+                governor.clone().keep_timeline(keep_timeline)
+            } else {
+                governor.clone()
+            };
+            run_one(*preset_win, governor)?
+        }
+        (_, explicit) => run_one(
+            window_ns,
+            governor_of(explicit.unwrap_or("threshold"))?.keep_timeline(keep_timeline),
+        )?,
+    };
+    print!("{}", report.summary());
+    if let Some(path) = args.get("csv") {
+        let d = report.dtm().expect("in-loop run attaches a DtmReport");
+        std::fs::write(path, d.timeline_csv())?;
+        if (d.timeline.len() as u64) < d.windows {
+            println!(
+                "dtm window trace written to {path} (trailing {} of {} windows — pass \
+                 --keep-timeline N to keep more)",
+                d.timeline.len(),
+                d.windows
+            );
+        } else {
+            println!("dtm window trace written to {path}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_scenarios() {
     let reg = Registry::builtin();
     println!("registered scenarios ({}):", reg.len());
     for sc in reg.iter() {
-        let tag = if sc.is_traffic() { "[traffic] " } else { "" };
+        let tag = if sc.is_dtm() {
+            "[dtm] "
+        } else if sc.is_traffic() {
+            "[traffic] "
+        } else {
+            ""
+        };
         println!("  {:<22} {tag}{}", sc.name, sc.about);
     }
     println!(
@@ -397,6 +546,7 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "run" => cmd_run(&args)?,
         "traffic" => cmd_traffic(&args)?,
+        "dtm" => cmd_dtm(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,

@@ -203,6 +203,56 @@ impl PowerTracker {
         window
     }
 
+    /// Non-destructive snapshot of `[start_ns, end_ns)` as a
+    /// [`PowerWindow`] (nothing is drained).  Bins already drained, or
+    /// beyond the profiled extent, read as zeros.  The in-loop DTM
+    /// controller uses this on state-retaining (batch) runs so the
+    /// report keeps its full per-bin power trace.
+    pub fn window_view(&self, start_ns: TimeNs, end_ns: TimeNs) -> PowerWindow {
+        let first = (start_ns / self.bin_ns) as usize;
+        let cutoff = (end_ns / self.bin_ns) as usize;
+        let energy = (0..self.num_chiplets)
+            .map(|c| {
+                (first..cutoff)
+                    .map(|bin| {
+                        bin.checked_sub(self.origin_bin)
+                            .and_then(|rel| self.bins[c].get(rel))
+                            .copied()
+                            .unwrap_or(0.0)
+                    })
+                    .collect()
+            })
+            .collect();
+        PowerWindow {
+            start_ns: first as TimeNs * self.bin_ns,
+            bin_ns: self.bin_ns,
+            energy_pj: energy,
+            baseline_mw: self.baseline_mw.clone(),
+        }
+    }
+
+    /// Non-destructive snapshot of all live bins as a [`PowerWindow`]
+    /// (nothing is drained; the tracker is unchanged).  Convenience for
+    /// consumers that want the whole live trace as one window — the
+    /// end-of-run thermal tail instead streams bins directly via
+    /// `ThermalStepper::ingest_live` to avoid the copy.
+    pub fn live_window(&self) -> PowerWindow {
+        let n = self.num_bins().saturating_sub(self.origin_bin);
+        let energy = (0..self.num_chiplets)
+            .map(|c| {
+                let mut row = self.bins[c].clone();
+                row.resize(n, 0.0);
+                row
+            })
+            .collect();
+        PowerWindow {
+            start_ns: self.origin_bin as TimeNs * self.bin_ns,
+            bin_ns: self.bin_ns,
+            energy_pj: energy,
+            baseline_mw: self.baseline_mw.clone(),
+        }
+    }
+
     /// Power of one chiplet in one (global) bin, mW (dynamic + baseline).
     /// Drained bins report baseline only — their dynamic share left with
     /// the [`PowerWindow`] that drained them.
@@ -428,6 +478,50 @@ mod tests {
         let w = p.drain_window(2_000);
         // dynamic: 4000 pJ / 2000 ns = 2 mW; baseline 2 mW total.
         assert!((w.mean_power_w() - 4e-3).abs() < 1e-12, "{}", w.mean_power_w());
+    }
+
+    #[test]
+    fn window_view_reads_without_draining() {
+        let mut p = PowerTracker::new(1, 1_000);
+        p.set_baseline_mw(0, 2.0);
+        p.add_energy(0, 0, 4_000, 8_000.0); // 2000 pJ in each of bins 0..4
+        let w = p.window_view(1_000, 3_000);
+        assert_eq!(w.start_ns, 1_000);
+        assert_eq!(w.bins(), 2);
+        assert!((w.dynamic_pj() - 4_000.0).abs() < 1e-9);
+        assert_eq!(p.drained_bins(), 0, "a view must not drain");
+        // Beyond the profiled extent and behind a drain cursor: zeros.
+        let tail = p.window_view(3_000, 6_000);
+        assert!((tail.dynamic_pj() - 2_000.0).abs() < 1e-9);
+        p.drain_window(2_000);
+        let behind = p.window_view(0, 2_000);
+        assert_eq!(behind.dynamic_pj(), 0.0);
+        // An empty/inverted span yields a zero-bin window.
+        assert_eq!(p.window_view(5_000, 5_000).bins(), 0);
+    }
+
+    #[test]
+    fn live_window_snapshot_is_nondestructive() {
+        let mut p = PowerTracker::new(2, 1_000);
+        p.set_baseline_mw(0, 1.0);
+        p.add_energy(0, 0, 3_000, 9_000.0);
+        p.add_event(1, 4_500, 50.0);
+        let before_live = p.live_bins();
+        let w = p.live_window();
+        assert_eq!(w.start_ns, 0);
+        assert_eq!(w.bins(), p.num_bins());
+        assert!((w.dynamic_pj() - 9_050.0).abs() < 1e-9);
+        assert_eq!(w.baseline_mw, vec![1.0, 0.0]);
+        // Snapshot, not a drain: tracker state is untouched.
+        assert_eq!(p.live_bins(), before_live);
+        assert_eq!(p.drained_bins(), 0);
+        // After draining, the snapshot covers only the remaining tail at
+        // its true global offset.
+        p.drain_window(2_000);
+        let tail = p.live_window();
+        assert_eq!(tail.start_ns, 2_000);
+        assert_eq!(tail.bins(), p.num_bins() - 2);
+        assert!((tail.dynamic_pj() - (3_000.0 + 50.0)).abs() < 1e-9);
     }
 
     #[test]

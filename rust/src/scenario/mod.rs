@@ -33,8 +33,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
+use crate::dtm::GovernorSpec;
 use crate::serving::{ArrivalSpec, SteadyState, TraceEvent, TrafficReport, TrafficSpec};
-use crate::sim::{SimReport, Simulation};
+use crate::sim::{SimReport, Simulation, ThermalSpec};
 use crate::util::rng::Rng;
 use crate::workload::{ModelKind, ALL_CNNS};
 
@@ -82,6 +83,9 @@ pub struct Scenario {
     hardware: HwFn,
     params: SimParams,
     work: Work,
+    /// Thermal coupling applied when the scenario builds its simulation
+    /// (Off unless set with [`Scenario::with_thermal`]).
+    thermal: ThermalSpec,
     /// Seed used when the caller does not supply one.
     pub default_seed: u64,
 }
@@ -100,6 +104,7 @@ impl Scenario {
             hardware: Arc::new(hardware),
             params,
             work: Work::Batch(Arc::new(workload)),
+            thermal: ThermalSpec::Off,
             default_seed: 0xC0FFEE,
         }
     }
@@ -119,6 +124,7 @@ impl Scenario {
             hardware: Arc::new(hardware),
             params,
             work: Work::Traffic(Arc::new(spec)),
+            thermal: ThermalSpec::Off,
             default_seed: 0xC0FFEE,
         }
     }
@@ -126,6 +132,22 @@ impl Scenario {
     pub fn with_default_seed(mut self, seed: u64) -> Scenario {
         self.default_seed = seed;
         self
+    }
+
+    /// Attach thermal coupling (e.g. `ThermalSpec::InLoop` for the
+    /// closed-loop DTM presets).
+    pub fn with_thermal(mut self, thermal: ThermalSpec) -> Scenario {
+        self.thermal = thermal;
+        self
+    }
+
+    pub fn thermal(&self) -> &ThermalSpec {
+        &self.thermal
+    }
+
+    /// Whether this scenario runs closed-loop DTM.
+    pub fn is_dtm(&self) -> bool {
+        self.thermal.is_in_loop()
     }
 
     /// Instantiate the scenario's hardware configuration.
@@ -160,7 +182,11 @@ impl Scenario {
 
     /// Assemble a runnable [`Simulation`] for this scenario.
     pub fn build(&self) -> anyhow::Result<Simulation> {
-        Simulation::builder().hardware(self.hardware()).params(self.params()).build()
+        Simulation::builder()
+            .hardware(self.hardware())
+            .params(self.params())
+            .thermal(self.thermal.clone())
+            .build()
     }
 
     /// Build and run to completion with the given workload seed.  Traffic
@@ -355,6 +381,50 @@ impl Registry {
                     .steady(None)
             },
         ));
+        // ---- closed-loop DTM scenarios (see crate::dtm) ----
+        // Control period 100 µs; one implicit-Euler step per window
+        // (stride 0).  Temperatures over ms-scale horizons sit a few
+        // kelvin over the 45 °C ambient, so the setpoints live there.
+        reg.register(
+            Scenario::traffic(
+                "dtm-thermal-ceiling",
+                "6x6 mesh near saturation with threshold-throttle DVFS at a 48 °C ceiling",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::poisson(3_000.0)
+                        .horizon_ms(30.0)
+                        .warmup_ms(5.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::threshold_band(47.0, 46.2, 48.0),
+            }),
+        );
+        reg.register(
+            Scenario::traffic(
+                "dtm-throttle-slo",
+                "6x6 mesh with PID DVFS toward 46.5 °C — the throttle-vs-SLO tradeoff probe",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::poisson(3_000.0)
+                        .horizon_ms(30.0)
+                        .warmup_ms(5.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::pid(46.5),
+            }),
+        );
         reg.register(Scenario::new(
             "thermal-hotspot",
             "6x6 mesh with THERMOS-style thermal-aware mapping enabled",
@@ -571,6 +641,18 @@ mod tests {
         assert!(!batch.is_traffic());
         assert!(batch.traffic_spec(1).is_none());
         assert!(batch.run_traffic(1).is_err());
+    }
+
+    #[test]
+    fn dtm_scenarios_are_registered_with_in_loop_thermal() {
+        let reg = Registry::builtin();
+        for name in ["dtm-thermal-ceiling", "dtm-throttle-slo"] {
+            let sc = reg.get(name).unwrap_or_else(|| panic!("missing builtin '{name}'"));
+            assert!(sc.is_traffic(), "'{name}' should be a traffic scenario");
+            assert!(sc.is_dtm(), "'{name}' should run closed-loop DTM");
+            assert!(sc.thermal().is_in_loop());
+        }
+        assert!(!reg.get("mesh-10x10-cnn").unwrap().is_dtm());
     }
 
     #[test]

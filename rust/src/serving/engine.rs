@@ -17,8 +17,9 @@
 
 use std::collections::VecDeque;
 
-use crate::power::PowerTracker;
-use crate::sim::{ModelOutcome, RequestSource, SimReport, Simulation, StreamSink};
+use crate::dtm::DtmReport;
+use crate::power::PowerWindow;
+use crate::sim::{ModelOutcome, PowerPort, RequestSource, SimReport, Simulation, StreamSink};
 use crate::serving::arrivals::{ArrivalProcess, ArrivalSpec};
 use crate::serving::slo::{LatencyHistogram, ServingStats};
 use crate::workload::{ModelKind, ModelRequest};
@@ -235,10 +236,17 @@ struct TrafficSink<'a> {
     recent_p99: VecDeque<u64>,
     windows: VecDeque<WindowSummary>,
     converged: bool,
+    /// When the simulation runs closed-loop DTM, its controller owns the
+    /// drain clock and forwards every drained window here; the sink then
+    /// must not drain on its own (two cursors would split windows).
+    external_power: bool,
+    fed_dynamic_pj: f64,
+    fed_span_ns: TimeNs,
+    fed_baseline_mw: f64,
 }
 
 impl<'a> TrafficSink<'a> {
-    fn new(spec: &'a TrafficSpec) -> TrafficSink<'a> {
+    fn new(spec: &'a TrafficSpec, external_power: bool) -> TrafficSink<'a> {
         TrafficSink {
             spec,
             stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
@@ -248,32 +256,58 @@ impl<'a> TrafficSink<'a> {
             recent_p99: VecDeque::new(),
             windows: VecDeque::new(),
             converged: false,
+            external_power,
+            fed_dynamic_pj: 0.0,
+            fed_span_ns: 0,
+            fed_baseline_mw: 0.0,
         }
     }
 
-    /// Summarize the current stats window against a drained power
-    /// window and append it to the bounded ring (shared by the periodic
-    /// roll and the final partial window).
-    fn push_summary(&mut self, end_ns: TimeNs, drained: &crate::power::PowerWindow) {
+    /// Summarize the current stats window and append it to the bounded
+    /// ring (shared by the periodic roll and the final partial window).
+    fn push_summary(&mut self, end_ns: TimeNs, mean_power_w: f64, dynamic_pj: f64) {
         self.windows.push_back(WindowSummary {
             end_ns,
             completed: self.window_completed,
             p50_ns: self.window_hist.quantile(0.5),
             p99_ns: self.window_hist.quantile(0.99),
-            mean_power_w: drained.mean_power_w(),
-            dynamic_pj: drained.dynamic_pj(),
+            mean_power_w,
+            dynamic_pj,
         });
         if self.windows.len() > self.spec.keep_windows {
             self.windows.pop_front();
         }
     }
 
-    fn roll_window(&mut self, power: &mut PowerTracker) {
-        // Drain one window behind virtual time: in-flight network events
-        // can still book energy just before the boundary, and PowerTracker
-        // folds such stragglers into already-drained totals anyway.
-        let drained = power.drain_window(self.window_end.saturating_sub(self.spec.window_ns));
-        self.push_summary(self.window_end, &drained);
+    /// Mean power / energy of the externally fed windows accumulated
+    /// since the last roll, then reset.  Lags the DTM drain cadence by
+    /// up to one control window (like the self-drained path lags by one
+    /// stats window).
+    fn take_fed_power(&mut self) -> (f64, f64) {
+        let dynamic_pj = self.fed_dynamic_pj;
+        let mean_w = if self.fed_span_ns > 0 {
+            (dynamic_pj / self.fed_span_ns as f64 + self.fed_baseline_mw) * 1e-3
+        } else {
+            0.0
+        };
+        self.fed_dynamic_pj = 0.0;
+        self.fed_span_ns = 0;
+        (mean_w, dynamic_pj)
+    }
+
+    fn roll_window(&mut self, power: &mut PowerPort<'_>) {
+        if self.external_power {
+            let (mean_w, dynamic_pj) = self.take_fed_power();
+            self.push_summary(self.window_end, mean_w, dynamic_pj);
+        } else {
+            // Drain one window behind virtual time: in-flight network
+            // events can still book energy just before the boundary, and
+            // PowerTracker folds such stragglers into already-drained
+            // totals anyway.
+            let drained =
+                power.drain_window(self.window_end.saturating_sub(self.spec.window_ns));
+            self.push_summary(self.window_end, drained.mean_power_w(), drained.dynamic_pj());
+        }
         let p99 = self.windows.back().expect("just pushed").p99_ns;
         if let Some(ss) = &self.spec.steady {
             if self.window_completed >= ss.min_per_window {
@@ -308,9 +342,14 @@ impl<'a> TrafficSink<'a> {
         seed: u64,
     ) -> TrafficReport {
         if self.window_completed > 0 {
-            let end = self.window_end.min(sim.span_ns + self.spec.window_ns);
-            let drained = sim.power.drain_window(end.saturating_sub(self.spec.window_ns));
-            self.push_summary(sim.span_ns, &drained);
+            if self.external_power {
+                let (mean_w, dynamic_pj) = self.take_fed_power();
+                self.push_summary(sim.span_ns, mean_w, dynamic_pj);
+            } else {
+                let end = self.window_end.min(sim.span_ns + self.spec.window_ns);
+                let drained = sim.power.drain_window(end.saturating_sub(self.spec.window_ns));
+                self.push_summary(sim.span_ns, drained.mean_power_w(), drained.dynamic_pj());
+            }
         }
         let stop = if self.converged {
             StopReason::SteadyState
@@ -342,7 +381,7 @@ impl StreamSink for TrafficSink<'_> {
         true
     }
 
-    fn on_advance(&mut self, now: TimeNs, power: &mut PowerTracker) -> bool {
+    fn on_advance(&mut self, now: TimeNs, power: &mut PowerPort<'_>) -> bool {
         while now >= self.window_end {
             self.roll_window(power);
             if self.converged {
@@ -350,6 +389,12 @@ impl StreamSink for TrafficSink<'_> {
             }
         }
         true
+    }
+
+    fn on_power_window(&mut self, window: &PowerWindow) {
+        self.fed_dynamic_pj += window.dynamic_pj();
+        self.fed_span_ns += window.span_ns();
+        self.fed_baseline_mw = window.baseline_mw.iter().sum();
     }
 
     fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _now: TimeNs) {
@@ -383,6 +428,12 @@ pub struct TrafficReport {
 impl TrafficReport {
     pub fn span_ns(&self) -> TimeNs {
         self.sim.span_ns
+    }
+
+    /// Closed-loop DTM results, when the simulation was built with
+    /// `ThermalSpec::InLoop`.
+    pub fn dtm(&self) -> Option<&DtmReport> {
+        self.sim.dtm.as_ref()
     }
 
     /// Mean offered arrival rate actually seen, req/s.
@@ -459,6 +510,9 @@ impl TrafficReport {
                 .collect();
             let _ = writeln!(s, "windows (µs power trace, trailing): {}", tail.join(" "));
         }
+        if let Some(d) = self.dtm() {
+            s.push_str(&d.summary());
+        }
         s
     }
 
@@ -485,8 +539,10 @@ pub fn run_traffic(
     spec.validate()?;
     let generator = spec.arrivals.build(seed)?;
     let mut source = StreamingSource::new(generator, spec.horizon_ns);
-    let mut sink = TrafficSink::new(spec);
-    let report = sim.run_with(&mut source, &mut sink)?;
+    let mut sink = TrafficSink::new(spec, sim.thermal_spec().is_in_loop());
+    // The traffic seed doubles as the run seed so in-loop DTM sensor
+    // noise gets a fresh realization per run (not one shared stream).
+    let report = sim.run_with_seeded(&mut source, &mut sink, seed)?;
     let exhausted = source.exhausted();
     let offered = source.emitted();
     Ok(sink.into_report(report, offered, exhausted, seed))

@@ -22,17 +22,15 @@
 //! finished a layer and sent activations immediately starts the next
 //! inference, bounded by a double-buffering credit per pipeline stage.
 //!
-//! Assemble a run with [`Simulation::builder`]; the deprecated
-//! [`GlobalManager`] shim remains for one release.
+//! Assemble a run with [`Simulation::builder`].  (The pre-builder
+//! `GlobalManager` shim served out its one-release deprecation window
+//! and is gone; `Simulation::builder()` is the only entry point.)
 
-mod manager;
 mod report;
 mod simulation;
 
-#[allow(deprecated)]
-pub use manager::GlobalManager;
 pub use report::{KindStats, ModelOutcome, SimReport, ThermalSummary};
 pub use simulation::{
-    BatchSource, EventCounter, NetworkFactory, NullSink, ObserverHandle, RequestSource,
-    SimObserver, Simulation, SimulationBuilder, StreamSink, ThermalSpec,
+    BatchSource, EventCounter, NetworkFactory, NullSink, ObserverHandle, PowerPort,
+    RequestSource, SimObserver, Simulation, SimulationBuilder, StreamSink, ThermalSpec,
 };

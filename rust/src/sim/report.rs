@@ -2,6 +2,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::dtm::DtmReport;
 use crate::noc::LinkUtilization;
 use crate::power::PowerTracker;
 use crate::util::benchkit::fmt_ns;
@@ -100,6 +101,8 @@ pub struct SimReport {
     pub stats_window: (TimeNs, TimeNs),
     /// End-of-run thermal summary (None when thermal coupling was off).
     pub thermal: Option<ThermalSummary>,
+    /// Closed-loop DTM results (populated by `ThermalSpec::InLoop`).
+    pub dtm: Option<DtmReport>,
 }
 
 impl SimReport {
@@ -173,6 +176,9 @@ impl SimReport {
                 th.solver, th.steps, th.hottest_c, th.coolest_c, th.spread_k
             ));
         }
+        if let Some(d) = &self.dtm {
+            s.push_str(&d.summary());
+        }
         for (kind, st) in self.by_kind() {
             s.push_str(&format!(
                 "  {kind:<10} x{:<3} mean inference latency {:>12}  (compute {:>12}, comm {:>12})\n",
@@ -219,6 +225,9 @@ impl SimReport {
         }
         for (id, kind) in &self.dropped {
             let _ = write!(s, ";drop{}:{}", id, kind.name());
+        }
+        if let Some(d) = &self.dtm {
+            let _ = write!(s, ";dtm[{}]", d.fingerprint());
         }
         s
     }

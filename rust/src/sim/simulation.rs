@@ -34,11 +34,13 @@ use crate::config::{
     ChipletClass, ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, TopologyKind,
     WorkloadConfig,
 };
+use crate::dtm::DtmRuntime;
 use crate::mapping::{MapContext, Mapper, MemoryLedger, ModelMapping, NearestNeighbor};
 use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
 use crate::noc::{FlowId, FlowSpec, NetworkSim};
-use crate::power::PowerTracker;
+use crate::power::{PowerTracker, PowerWindow};
 use crate::sim::report::{ModelOutcome, SimReport, ThermalSummary};
+use crate::thermal::stepper::ThermalStepper;
 use crate::workload::{ArbitrationQueue, ModelKind, ModelRequest, NeuralModel, WorkloadStream};
 use crate::TimeNs;
 
@@ -183,13 +185,51 @@ impl RequestSource for BatchSource {
     }
 }
 
+/// Window-draining handle passed to [`StreamSink::on_advance`].
+///
+/// All in-loop drains flow through it so the post-mortem thermal stepper
+/// (`ThermalSpec::Native`/`Auto` on a streaming run) sees every drained
+/// window instead of only the tail still live at the end of the run —
+/// previously a traffic run with thermal enabled silently solved thermal
+/// over the trailing window alone.
+pub struct PowerPort<'a> {
+    tracker: &'a mut PowerTracker,
+    stepper: Option<&'a mut ThermalStepper>,
+    err: &'a mut Option<anyhow::Error>,
+}
+
+impl<'a> PowerPort<'a> {
+    pub fn new(
+        tracker: &'a mut PowerTracker,
+        stepper: Option<&'a mut ThermalStepper>,
+        err: &'a mut Option<anyhow::Error>,
+    ) -> PowerPort<'a> {
+        PowerPort { tracker, stepper, err }
+    }
+
+    /// Drain a window from the tracker, feeding it to the attached
+    /// thermal stepper first.  Stepper failures (only possible on the
+    /// PJRT path) are deferred to the event loop, which fails the run.
+    pub fn drain_window(&mut self, before_ns: TimeNs) -> PowerWindow {
+        let window = self.tracker.drain_window(before_ns);
+        if let Some(stepper) = self.stepper.as_mut() {
+            if let Err(e) = stepper.ingest(&window) {
+                if self.err.is_none() {
+                    *self.err = Some(e.context("in-loop thermal stepping failed"));
+                }
+            }
+        }
+        window
+    }
+}
+
 /// Hooks a streaming driver installs on the event loop.
 ///
 /// The batch path uses the no-op defaults ([`NullSink`]): outcomes
 /// accumulate into the report and every power bin stays live.  The
-/// sustained-traffic engine overrides all three to run in constant
-/// memory: outcomes flow into latency histograms, power bins drain in
-/// windows, and finished instance state is retired for slot reuse.
+/// sustained-traffic engine overrides them to run in constant memory:
+/// outcomes flow into latency histograms, power bins drain in windows,
+/// and finished instance state is retired for slot reuse.
 pub trait StreamSink {
     /// A model instance finished.  Return `false` to stop the run.
     fn on_outcome(&mut self, _outcome: &ModelOutcome, _now: TimeNs) -> bool {
@@ -197,11 +237,17 @@ pub trait StreamSink {
     }
 
     /// Virtual time advanced to `now` (called before each event is
-    /// processed).  The sink may drain power windows here.  Return
-    /// `false` to stop the run (e.g. steady state reached).
-    fn on_advance(&mut self, _now: TimeNs, _power: &mut PowerTracker) -> bool {
+    /// processed).  The sink may drain power windows through the port.
+    /// Return `false` to stop the run (e.g. steady state reached).
+    fn on_advance(&mut self, _now: TimeNs, _power: &mut PowerPort<'_>) -> bool {
         true
     }
+
+    /// A power window was drained *by the in-loop DTM controller* on its
+    /// control cadence.  Sinks that normally drain their own windows
+    /// must not drain when this feed is active (the serving engine
+    /// checks `Simulation::thermal_spec().is_in_loop()` up front).
+    fn on_power_window(&mut self, _window: &PowerWindow) {}
 
     /// A request was dropped as unmappable.  Streaming sinks count these
     /// (the report's `dropped` list is only populated when state is
@@ -227,8 +273,15 @@ impl StreamSink for NullSink {}
 /// not matched on an enum inside the coordinator).
 pub type NetworkFactory = Box<dyn Fn(&Topology) -> Box<dyn NetworkSim>>;
 
-/// Post-run thermal coupling performed by [`Simulation::run`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Thermal coupling performed by [`Simulation::run`].
+///
+/// `Native`/`Auto` integrate the RC network incrementally as power
+/// windows drain (and over the live tail at the end), so streaming runs
+/// get the *whole-horizon* trajectory, not just the undrained tail.
+/// `InLoop` goes further and closes the loop: temperatures feed sensors
+/// and a DVFS governor whose chosen operating points scale subsequently
+/// issued compute (see [`crate::dtm`]).
+#[derive(Debug, Clone, PartialEq)]
 pub enum ThermalSpec {
     /// No thermal solve (default).
     Off,
@@ -236,6 +289,16 @@ pub enum ThermalSpec {
     Native { stride_bins: usize },
     /// PJRT AOT artifact when available, native fallback otherwise.
     Auto { stride_bins: usize },
+    /// Closed-loop dynamic thermal management: step thermal every
+    /// `window_ns` of virtual time and let `governor` pick per-chiplet
+    /// DVFS states that act back on execution.
+    InLoop { window_ns: TimeNs, governor: crate::dtm::GovernorSpec },
+}
+
+impl ThermalSpec {
+    pub fn is_in_loop(&self) -> bool {
+        matches!(self, ThermalSpec::InLoop { .. })
+    }
 }
 
 // --------------------------------------------------------------- builder
@@ -574,8 +637,13 @@ impl Simulation {
         self.backend.name()
     }
 
+    /// The thermal coupling this simulation was built with.
+    pub fn thermal_spec(&self) -> &ThermalSpec {
+        &self.thermal
+    }
+
     /// Swap the compute backend after construction (dependency injection
-    /// for tests and for the deprecated `GlobalManager::with_backend`).
+    /// for tests).
     pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
         self.backend = backend;
     }
@@ -622,12 +690,61 @@ impl Simulation {
         source: &mut dyn RequestSource,
         sink: &mut dyn StreamSink,
     ) -> anyhow::Result<SimReport> {
+        let seed = self.params.seed;
+        self.run_with_seeded(source, sink, seed)
+    }
+
+    /// [`run_with`](Self::run_with) with an explicit run seed for the
+    /// seed-consuming in-loop components (DTM sensor noise).  The
+    /// serving engine passes its per-run traffic seed here so noise
+    /// realizations vary run to run; `run_with` falls back to
+    /// `params.seed`.
+    pub fn run_with_seeded(
+        &mut self,
+        source: &mut dyn RequestSource,
+        sink: &mut dyn StreamSink,
+        run_seed: u64,
+    ) -> anyhow::Result<SimReport> {
         let wall_start = Instant::now();
         let retain = sink.retain_state();
         let mut free_slots: Vec<usize> = Vec::new();
         let mut stop_requested = false;
         let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
         let mut power = PowerTracker::new(self.hw.num_chiplets(), self.params.power_bin_ns);
+        // Thermal coupling: Native/Auto attach an incremental stepper to
+        // the sink's drain path (post-mortem trajectory over the whole
+        // horizon); InLoop instead owns a full DTM controller that drains
+        // on its control cadence and feeds frequency/voltage back.
+        let mut stepper: Option<ThermalStepper> = match &self.thermal {
+            ThermalSpec::Off | ThermalSpec::InLoop { .. } => None,
+            ThermalSpec::Native { stride_bins } => Some(ThermalStepper::new(
+                &self.hw,
+                self.params.power_bin_ns,
+                (*stride_bins).max(1),
+                false,
+            )?),
+            ThermalSpec::Auto { stride_bins } => Some(ThermalStepper::new(
+                &self.hw,
+                self.params.power_bin_ns,
+                (*stride_bins).max(1),
+                true,
+            )?),
+        };
+        let mut thermal_err: Option<anyhow::Error> = None;
+        let mut dtm_rt: Option<DtmRuntime> = match &self.thermal {
+            ThermalSpec::InLoop { window_ns, governor } => Some(DtmRuntime::new(
+                &self.hw,
+                self.params.power_bin_ns,
+                *window_ns,
+                governor,
+                run_seed,
+                // Streaming sinks retire state and expect drained
+                // windows; batch runs peek so the report's power trace
+                // stays intact.
+                !retain,
+            )?),
+            _ => None,
+        };
         for c in 0..self.hw.num_chiplets() {
             power.set_baseline_mw(
                 c,
@@ -666,12 +783,20 @@ impl Simulation {
                 if !chiplets[cid].busy {
                     if let Some((inst, layer, seg, inference)) = chiplets[cid].queue.pop_front() {
                         let r = instances[inst].results[layer][seg];
-                        let lat = r.latency_ns.round().max(1.0) as TimeNs;
+                        // DVFS feedback: the chiplet's current operating
+                        // point scales work *issued now*; in-flight
+                        // segments finish at their issued rate.
+                        let (lat_scale, energy_scale) = match dtm_rt.as_ref() {
+                            Some(d) => (d.latency_factor(cid), d.energy_factor(cid)),
+                            None => (1.0, 1.0),
+                        };
+                        let lat = (r.latency_ns * lat_scale).round().max(1.0) as TimeNs;
+                        let energy = r.energy_pj * energy_scale;
                         chiplets[cid].busy = true;
                         chiplets[cid].busy_ns += lat;
-                        power.add_energy(cid, $t, lat, r.energy_pj);
-                        notify!(on_compute_energy(cid, $t, lat, r.energy_pj));
-                        compute_energy += r.energy_pj;
+                        power.add_energy(cid, $t, lat, energy);
+                        notify!(on_compute_energy(cid, $t, lat, energy));
+                        compute_energy += energy;
                         let lr = &mut instances[inst].layers[layer];
                         lr.start_ns.entry(inference).or_insert($t);
                         if layer == 0 {
@@ -1010,7 +1135,32 @@ impl Simulation {
                 break; // queue empty, no arrivals left, network idle
             }
             now = now.max(t_next);
-            if !sink.on_advance(now, &mut power) {
+            // The network flushes hop energy only on flow completions;
+            // when a thermal consumer drains windows in-loop (DTM, or a
+            // streaming sink feeding the Native/Auto stepper), book
+            // whatever the engine has generated so far first — energy
+            // landing behind a drain cursor folds into drained totals
+            // without ever reaching the RC integration.
+            if dtm_rt.is_some() || stepper.is_some() {
+                for (node, t, pj) in net.drain_energy_events() {
+                    power.add_event(node, t, pj);
+                    notify!(on_noc_energy(node, t, pj));
+                }
+            }
+            if let Some(d) = dtm_rt.as_mut() {
+                // Close elapsed control windows first so the operating
+                // points the next events see reflect the window that
+                // just ended.
+                d.on_advance(now, &mut power, &mut *sink)?;
+            }
+            let keep_going = sink.on_advance(
+                now,
+                &mut PowerPort::new(&mut power, stepper.as_mut(), &mut thermal_err),
+            );
+            if let Some(e) = thermal_err.take() {
+                return Err(e);
+            }
+            if !keep_going {
                 break;
             }
             if self.params.max_sim_time_ns > 0 && now > self.params.max_sim_time_ns {
@@ -1093,7 +1243,23 @@ impl Simulation {
         let link_util =
             crate::noc::LinkUtilization::from_busy(&net.link_busy_ns(), span_ns);
         let hi = span_ns.saturating_sub(self.params.cooldown_ns).max(self.params.warmup_ns);
-        let thermal = self.solve_thermal(&power)?;
+        // Fold the still-live power tail into the thermal state and roll
+        // the summary up.  Whatever drained mid-run already went through
+        // the stepper (PowerPort) or the DTM controller, so the summary
+        // covers the whole horizon even for streaming runs.
+        let (thermal, dtm) = match (dtm_rt, stepper) {
+            (Some(d), _) => {
+                let rep = d.finish(&power, &mut *sink)?;
+                let thermal = summarize_thermal(rep.solver, rep.steps, &rep.final_temps_c);
+                (thermal, Some(rep))
+            }
+            (None, Some(mut st)) => {
+                st.ingest_live(&power)?;
+                st.flush()?;
+                (summarize_thermal(st.solver(), st.steps(), &st.chiplet_temps_c()), None)
+            }
+            (None, None) => (None, None),
+        };
         let report = SimReport {
             outcomes,
             dropped,
@@ -1107,6 +1273,7 @@ impl Simulation {
             wall_ns: wall_start.elapsed().as_nanos(),
             stats_window: (self.params.warmup_ns, hi),
             thermal,
+            dtm,
         };
         for ob in &self.observers {
             ob.borrow_mut().on_run_complete(&report);
@@ -1114,53 +1281,28 @@ impl Simulation {
         Ok(report)
     }
 
-    /// Post-run thermal coupling (paper §V-D): decimate the 1 µs power
-    /// bins and integrate the RC network, preferring the PJRT AOT solver
-    /// under [`ThermalSpec::Auto`].
-    fn solve_thermal(&self, power: &PowerTracker) -> anyhow::Result<Option<ThermalSummary>> {
-        use crate::thermal::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
-        let (stride, prefer_pjrt) = match self.thermal {
-            ThermalSpec::Off => return Ok(None),
-            ThermalSpec::Native { stride_bins } => (stride_bins.max(1), false),
-            ThermalSpec::Auto { stride_bins } => (stride_bins.max(1), true),
-        };
-        let rows = power.matrix_w(stride);
-        if rows.is_empty() {
-            return Ok(None);
-        }
-        let tm = ThermalModel::build(&self.hw);
-        let dt_s = stride as f64 * power.bin_ns as f64 * 1e-9;
-        let node_steps: Vec<Vec<f64>> = rows.iter().map(|r| tm.node_power(r)).collect();
-        let t0 = vec![0.0; tm.n];
-        let (traj, solver) = if prefer_pjrt {
-            match PjrtThermalSolver::open_default(&tm, dt_s) {
-                Ok(mut s) => (s.transient(&t0, &node_steps)?, "pjrt-aot"),
-                Err(e) => {
-                    log::warn!("PJRT thermal unavailable ({e}); using native solver");
-                    (NativeSolver::new(&tm, dt_s)?.transient(&t0, &node_steps), "native")
-                }
-            }
-        } else {
-            (NativeSolver::new(&tm, dt_s)?.transient(&t0, &node_steps), "native")
-        };
-        let steps = traj.len();
-        let last = match traj.last() {
-            Some(last) => last.clone(),
-            None => return Ok(None),
-        };
-        let temps: Vec<f64> = (0..self.hw.num_chiplets())
-            .map(|c| tm.chiplet_temp(&last, c) + tm.ambient_c)
-            .collect();
-        let hottest = temps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let coolest = temps.iter().cloned().fold(f64::INFINITY, f64::min);
-        Ok(Some(ThermalSummary {
-            solver,
-            steps,
-            hottest_c: hottest,
-            coolest_c: coolest,
-            spread_k: hottest - coolest,
-        }))
+}
+
+/// Roll the stepper's final state up into the report's summary (`None`
+/// when no power was ever integrated, matching the pre-stepper
+/// behaviour on empty runs).
+fn summarize_thermal(
+    solver: &'static str,
+    steps: usize,
+    temps_c: &[f64],
+) -> Option<ThermalSummary> {
+    if steps == 0 {
+        return None;
     }
+    let hottest = temps_c.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let coolest = temps_c.iter().cloned().fold(f64::INFINITY, f64::min);
+    Some(ThermalSummary {
+        solver,
+        steps,
+        hottest_c: hottest,
+        coolest_c: coolest,
+        spread_k: hottest - coolest,
+    })
 }
 
 #[cfg(test)]
@@ -1406,5 +1548,98 @@ mod tests {
         assert!(th.steps > 0);
         assert!(th.hottest_c >= th.coolest_c);
         assert!(th.spread_k >= 0.0);
+        assert!(report.dtm.is_none());
+    }
+
+    #[test]
+    fn in_loop_dtm_attaches_report_and_thermal_summary() {
+        use crate::dtm::GovernorSpec;
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let report = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .thermal(ThermalSpec::InLoop {
+                window_ns: 10_000,
+                governor: GovernorSpec::noop(200.0),
+            })
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let dtm = report.dtm.as_ref().expect("dtm report");
+        assert_eq!(dtm.governor, "noop");
+        assert!(dtm.windows > 0, "run spans several control windows");
+        assert!(dtm.steps > 0);
+        assert_eq!(dtm.ceiling_violations, 0, "a 200 °C ceiling cannot be hit");
+        assert_eq!(dtm.throttle_residency, 0.0);
+        assert!(!dtm.timeline.is_empty());
+        let th = report.thermal.expect("in-loop runs still attach a summary");
+        assert_eq!(th.solver, "native");
+        assert!(th.hottest_c >= th.coolest_c);
+    }
+
+    #[test]
+    fn noop_dtm_does_not_perturb_execution() {
+        use crate::dtm::GovernorSpec;
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let plain = sim(hw.clone(), small_params())
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let dtm = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .thermal(ThermalSpec::InLoop {
+                window_ns: 5_000,
+                governor: GovernorSpec::noop(200.0),
+            })
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        assert_eq!(plain.span_ns, dtm.span_ns);
+        assert_eq!(
+            plain.compute_energy_pj.to_bits(),
+            dtm.compute_energy_pj.to_bits(),
+            "a 1.0x operating point must not change booked energy"
+        );
+        assert_eq!(
+            plain.outcomes[0].inference_latency_ns,
+            dtm.outcomes[0].inference_latency_ns
+        );
+    }
+
+    #[test]
+    fn aggressive_throttle_slows_execution_and_reports_residency() {
+        use crate::dtm::GovernorSpec;
+        let hw = HardwareConfig::homogeneous_mesh(4, 4);
+        let plain = sim(hw.clone(), small_params())
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        // A hot threshold below ambient throttles every window: the
+        // feedback must visibly stretch execution and book less energy.
+        let throttled = Simulation::builder()
+            .hardware(hw)
+            .params(small_params())
+            .thermal(ThermalSpec::InLoop {
+                window_ns: 5_000,
+                governor: GovernorSpec::threshold_band(1.0, 0.0, 300.0),
+            })
+            .build()
+            .unwrap()
+            .run(WorkloadConfig::single(ModelKind::ResNet18))
+            .unwrap();
+        let dtm = throttled.dtm.as_ref().expect("dtm report");
+        assert!(dtm.throttle_residency > 0.0, "always-hot threshold must throttle");
+        assert!(dtm.transitions > 0);
+        assert!(
+            throttled.span_ns > plain.span_ns,
+            "throttled compute must stretch the run: {} !> {}",
+            throttled.span_ns,
+            plain.span_ns
+        );
+        assert!(
+            throttled.compute_energy_pj < plain.compute_energy_pj,
+            "lower voltage must book less dynamic energy"
+        );
     }
 }

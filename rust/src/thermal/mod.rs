@@ -19,6 +19,7 @@
 
 pub mod native;
 pub mod pjrt;
+pub mod stepper;
 
 use crate::config::HardwareConfig;
 use crate::util::linalg::{Lu, Mat};
@@ -375,6 +376,21 @@ mod tests {
         for i in 0..tm.n {
             let s: f64 = (0..tm.n).map(|j| a[(i, j)]).sum();
             assert!(s <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn temps_csv_lists_every_chiplet_in_absolute_degrees() {
+        let (hw, tm) = model_4x4();
+        let p = tm.node_power(&vec![1.5; hw.num_chiplets()]);
+        let t = crate::util::linalg::Lu::factor(&tm.g).unwrap().solve(&p);
+        let csv = tm.temps_csv(&t, hw.num_chiplets());
+        assert!(csv.starts_with("chiplet,temp_c\n"));
+        assert_eq!(csv.lines().count(), 1 + hw.num_chiplets());
+        // Every reported value is absolute (>= ambient under heating).
+        for line in csv.lines().skip(1) {
+            let temp: f64 = line.split(',').nth(1).unwrap().parse().unwrap();
+            assert!(temp >= consts::T_AMBIENT, "{line}");
         }
     }
 

@@ -119,6 +119,26 @@ mod tests {
     }
 
     #[test]
+    fn transient_is_the_composition_of_single_steps() {
+        // The incremental stepping used by the DTM loop relies on
+        // transient(t0, [p1..pk]) == step(..step(step(t0,p1),p2)..,pk).
+        let (hw, tm, s) = setup();
+        let mut chips = vec![0.0; hw.num_chiplets()];
+        chips[0] = 4.0;
+        chips[8] = 1.0;
+        let p = tm.node_power(&chips);
+        let steps = vec![p.clone(); 7];
+        let traj = s.transient(&vec![0.0; tm.n], &steps);
+        let mut t = vec![0.0; tm.n];
+        for _ in 0..7 {
+            t = s.step(&t, &p);
+        }
+        for i in 0..tm.n {
+            assert!((traj[6][i] - t[i]).abs() < 1e-15, "node {i}");
+        }
+    }
+
+    #[test]
     fn superposition_holds() {
         // Linear system: T(p1 + p2) == T(p1) + T(p2).
         let (hw, tm, s) = setup();

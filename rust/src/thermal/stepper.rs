@@ -1,0 +1,361 @@
+//! Incremental thermal integration over streamed power windows.
+//!
+//! The batch flow solves thermal post-mortem from the whole power trace;
+//! a streaming run has no whole trace — [`PowerTracker`] bins drain one
+//! window behind virtual time.  [`ThermalStepper`] closes that gap: it
+//! precomputes the implicit-Euler step matrices once (native solver, or
+//! the PJRT AOT artifact when available) and then advances the RC state
+//! one drained [`PowerWindow`] at a time, so the thermal trajectory is
+//! exact over the *entire* horizon while memory stays constant.
+//!
+//! Consumers:
+//! * `Simulation::run_with` attaches a stepper to the window-drain path
+//!   (`sim::PowerPort`) for `ThermalSpec::Native`/`Auto`, so traffic runs
+//!   no longer compute thermal on only the undrained tail of the trace;
+//! * the closed-loop DTM controller (`crate::dtm`) steps it every control
+//!   window and feeds the resulting temperatures to its governor.
+
+use super::{native::NativeSolver, pjrt::PjrtThermalSolver, ThermalModel};
+use crate::config::HardwareConfig;
+use crate::power::PowerWindow;
+use crate::TimeNs;
+
+enum Backend {
+    Native(NativeSolver),
+    Pjrt(Box<PjrtThermalSolver>),
+}
+
+/// Incremental RC-network integrator: feed it power windows as they are
+/// drained and read chiplet temperatures between feeds.
+///
+/// Stride groups are tracked *globally*: a window whose bin count is not
+/// a multiple of `stride_bins` leaves its partial group in a carry that
+/// the next window continues, so the integration is identical no matter
+/// how the same bins were split into windows.  Call [`flush`](Self::flush)
+/// once at end of run to integrate the final short group (averaged over
+/// its actual bins, stepped at the full dt — matching the last short row
+/// of the old whole-trace decimation).
+pub struct ThermalStepper {
+    model: ThermalModel,
+    backend: Backend,
+    /// Power bins averaged per integration step.
+    stride_bins: usize,
+    bin_ns: TimeNs,
+    /// Current ΔT above ambient, node space.
+    t: Vec<f64>,
+    steps: usize,
+    solver: &'static str,
+    /// Partial stride group carried across windows: accumulated energy
+    /// (dynamic + baseline-as-energy), pJ per chiplet.
+    carry_pj: Vec<f64>,
+    carry_bins: usize,
+}
+
+impl ThermalStepper {
+    /// Build the RC network for `hw` and precompute step matrices for a
+    /// timestep of `stride_bins` power bins.  With `prefer_pjrt` the AOT
+    /// artifact is tried first and the native solver is the fallback
+    /// (mirroring `ThermalSpec::Auto`).
+    pub fn new(
+        hw: &HardwareConfig,
+        bin_ns: TimeNs,
+        stride_bins: usize,
+        prefer_pjrt: bool,
+    ) -> anyhow::Result<ThermalStepper> {
+        anyhow::ensure!(bin_ns > 0, "thermal stepper needs bin_ns > 0");
+        let stride_bins = stride_bins.max(1);
+        let model = ThermalModel::build(hw);
+        let dt_s = stride_bins as f64 * bin_ns as f64 * 1e-9;
+        let (backend, solver) = if prefer_pjrt {
+            match PjrtThermalSolver::open_default(&model, dt_s) {
+                Ok(s) => (Backend::Pjrt(Box::new(s)), "pjrt-aot"),
+                Err(e) => {
+                    log::warn!("PJRT thermal unavailable ({e}); using native solver");
+                    (Backend::Native(NativeSolver::new(&model, dt_s)?), "native")
+                }
+            }
+        } else {
+            (Backend::Native(NativeSolver::new(&model, dt_s)?), "native")
+        };
+        let t = vec![0.0; model.n];
+        let carry_pj = vec![0.0; model.chiplet_nodes.len()];
+        Ok(ThermalStepper {
+            model,
+            backend,
+            stride_bins,
+            bin_ns,
+            t,
+            steps: 0,
+            solver,
+            carry_pj,
+            carry_bins: 0,
+        })
+    }
+
+    /// Integrate one power window: bins accumulate into the global
+    /// stride group (continuing any carry from earlier windows) and each
+    /// completed group is one implicit-Euler step.  Returns the number
+    /// of steps taken; an incomplete trailing group stays in the carry.
+    pub fn ingest(&mut self, w: &PowerWindow) -> anyhow::Result<usize> {
+        let bins = w.bins();
+        if bins == 0 {
+            return Ok(0);
+        }
+        debug_assert_eq!(w.bin_ns, self.bin_ns, "window bin width mismatch");
+        let nch = self.model.chiplet_nodes.len();
+        let mut rows = Vec::with_capacity((self.carry_bins + bins) / self.stride_bins);
+        for bin in 0..bins {
+            for c in 0..nch {
+                let dyn_pj =
+                    w.energy_pj.get(c).and_then(|row| row.get(bin)).copied().unwrap_or(0.0);
+                let baseline_pj =
+                    w.baseline_mw.get(c).copied().unwrap_or(0.0) * w.bin_ns as f64;
+                self.carry_pj[c] += dyn_pj + baseline_pj;
+            }
+            self.carry_bins += 1;
+            if self.carry_bins == self.stride_bins {
+                let row = self.take_group_row();
+                rows.push(row);
+            }
+        }
+        self.advance(rows)
+    }
+
+    /// Stream the tracker's live bins into the stepper without
+    /// materializing a snapshot (the end-of-run tail of a batch run can
+    /// be the whole trace).
+    pub fn ingest_live(&mut self, power: &crate::power::PowerTracker) -> anyhow::Result<usize> {
+        debug_assert_eq!(power.bin_ns, self.bin_ns, "tracker bin width mismatch");
+        let nch = self.model.chiplet_nodes.len();
+        let first = power.drained_bins();
+        let total = power.num_bins();
+        let mut rows = Vec::new();
+        for bin in first..total {
+            for c in 0..nch {
+                // dynamic + baseline power, mW, over one bin -> pJ.
+                self.carry_pj[c] += power.power_mw(c, bin) * self.bin_ns as f64;
+            }
+            self.carry_bins += 1;
+            if self.carry_bins == self.stride_bins {
+                let row = self.take_group_row();
+                rows.push(row);
+            }
+        }
+        self.advance(rows)
+    }
+
+    /// Integrate any partial stride group left in the carry (mean power
+    /// over its actual bins, one full-dt step).  Call once at end of
+    /// run, after the last ingest.
+    pub fn flush(&mut self) -> anyhow::Result<usize> {
+        if self.carry_bins == 0 {
+            return Ok(0);
+        }
+        let row = self.take_group_row();
+        self.advance(vec![row])
+    }
+
+    /// Close the current group: mean power in W per chiplet, expanded to
+    /// node space; resets the carry.
+    fn take_group_row(&mut self) -> Vec<f64> {
+        let span_ns = self.carry_bins as f64 * self.bin_ns as f64;
+        let chiplet_w: Vec<f64> =
+            self.carry_pj.iter().map(|pj| pj / span_ns * 1e-3).collect();
+        for pj in self.carry_pj.iter_mut() {
+            *pj = 0.0;
+        }
+        self.carry_bins = 0;
+        self.model.node_power(&chiplet_w)
+    }
+
+    fn advance(&mut self, rows: Vec<Vec<f64>>) -> anyhow::Result<usize> {
+        if rows.is_empty() {
+            return Ok(0);
+        }
+        let traj = match &mut self.backend {
+            Backend::Native(s) => s.transient(&self.t, &rows),
+            Backend::Pjrt(s) => s.transient(&self.t, &rows)?,
+        };
+        if let Some(last) = traj.last() {
+            self.t = last.clone();
+        }
+        self.steps += rows.len();
+        Ok(rows.len())
+    }
+
+    /// Which solver integrates the steps ("native" or "pjrt-aot").
+    pub fn solver(&self) -> &'static str {
+        self.solver
+    }
+
+    /// Implicit-Euler steps integrated so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Current ΔT above ambient, node space.
+    pub fn delta_t(&self) -> &[f64] {
+        &self.t
+    }
+
+    pub fn model(&self) -> &ThermalModel {
+        &self.model
+    }
+
+    /// Current absolute per-chiplet temperatures, °C.
+    pub fn chiplet_temps_c(&self) -> Vec<f64> {
+        (0..self.model.chiplet_nodes.len())
+            .map(|c| self.model.chiplet_temp(&self.t, c) + self.model.ambient_c)
+            .collect()
+    }
+
+    /// Current hottest chiplet, °C.
+    pub fn hottest_c(&self) -> f64 {
+        self.chiplet_temps_c().into_iter().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::PowerTracker;
+
+    fn hw() -> HardwareConfig {
+        HardwareConfig::homogeneous_mesh(3, 3)
+    }
+
+    /// A window with `watts` of flat per-chiplet power over `bins` bins.
+    fn flat_window(
+        nch: usize,
+        bins: usize,
+        bin_ns: TimeNs,
+        start_ns: TimeNs,
+        watts: f64,
+    ) -> PowerWindow {
+        // watts -> mW -> pJ per bin (mW * ns).
+        let pj_per_bin = watts * 1e3 * bin_ns as f64;
+        PowerWindow {
+            start_ns,
+            bin_ns,
+            energy_pj: vec![vec![pj_per_bin; bins]; nch],
+            baseline_mw: vec![0.0; nch],
+        }
+    }
+
+    #[test]
+    fn windowed_ingest_matches_one_shot_transient() {
+        // Feeding N windows must land on the same state as one batch
+        // transient over the concatenated rows (same dt, same powers).
+        let hw = hw();
+        let mut stepper = ThermalStepper::new(&hw, 1_000, 10, false).unwrap();
+        let nch = hw.num_chiplets();
+        for k in 0..5u64 {
+            let w = flat_window(nch, 20, 1_000, k * 20_000, 2.0);
+            stepper.ingest(&w).unwrap();
+        }
+        assert_eq!(stepper.steps(), 10); // 5 windows x 20 bins / stride 10
+        let tm = ThermalModel::build(&hw);
+        let solver = NativeSolver::new(&tm, 10.0 * 1_000.0 * 1e-9).unwrap();
+        let p = tm.node_power(&vec![2.0; nch]);
+        let traj = solver.transient(&vec![0.0; tm.n], &vec![p; 10]);
+        let want = traj.last().unwrap();
+        for i in 0..tm.n {
+            assert!(
+                (stepper.delta_t()[i] - want[i]).abs() < 1e-12,
+                "node {i}: {} vs {}",
+                stepper.delta_t()[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn constant_power_converges_to_steady_state_via_windows() {
+        // Long constant-power feed through windows converges to the
+        // direct steady-state solve 0 = -G T + P.
+        let hw = hw();
+        let nch = hw.num_chiplets();
+        // 0.1 s steps: 100 windows x 10 bins of 1 ms, stride 100 -> one
+        // step per window, 10 s simulated.
+        let bin_ns = 1_000_000; // 1 ms bins
+        let mut stepper = ThermalStepper::new(&hw, bin_ns, 100, false).unwrap();
+        for k in 0..100u64 {
+            let w = flat_window(nch, 100, bin_ns, k * 100_000_000, 3.0);
+            stepper.ingest(&w).unwrap();
+        }
+        let tm = stepper.model();
+        let p = tm.node_power(&vec![3.0; nch]);
+        let steady = NativeSolver::steady(tm, &p).unwrap();
+        for i in 0..tm.n {
+            let err = (stepper.delta_t()[i] - steady[i]).abs() / steady[i].abs().max(1e-9);
+            assert!(err < 0.05, "node {i}: {} vs steady {}", stepper.delta_t()[i], steady[i]);
+        }
+        assert!(stepper.hottest_c() > tm.ambient_c);
+    }
+
+    #[test]
+    fn empty_and_idle_windows_are_safe() {
+        let hw = hw();
+        let mut stepper = ThermalStepper::new(&hw, 1_000, 10, false).unwrap();
+        let mut tracker = PowerTracker::new(hw.num_chiplets(), 1_000);
+        // Nothing booked: an empty drain integrates zero steps.
+        let w = tracker.drain_window(0);
+        assert_eq!(stepper.ingest(&w).unwrap(), 0);
+        // An idle (all-zero) 5-bin window is shorter than the 10-bin
+        // stride: it stays in the carry until flushed.
+        let w = tracker.drain_window(5_000);
+        assert_eq!(stepper.ingest(&w).unwrap(), 0);
+        assert_eq!(stepper.flush().unwrap(), 1);
+        assert_eq!(stepper.flush().unwrap(), 0, "flush is idempotent");
+        assert!(stepper.delta_t().iter().all(|&x| x.abs() < 1e-12));
+        let temps = stepper.chiplet_temps_c();
+        assert_eq!(temps.len(), hw.num_chiplets());
+        assert!(temps.iter().all(|&t| (t - stepper.model().ambient_c).abs() < 1e-9));
+    }
+
+    #[test]
+    fn stride_groups_are_continuous_across_misaligned_windows() {
+        // 3 windows of 15 bins with a 10-bin stride must integrate the
+        // exact same trajectory as one 45-bin window: the partial group
+        // carries over instead of being stepped short at full dt.
+        let hw = hw();
+        let nch = hw.num_chiplets();
+        let run = |splits: &[usize]| {
+            let mut stepper = ThermalStepper::new(&hw, 1_000, 10, false).unwrap();
+            let mut start = 0u64;
+            for &bins in splits {
+                let w = flat_window(nch, bins, 1_000, start, 1.5);
+                stepper.ingest(&w).unwrap();
+                start += bins as u64 * 1_000;
+            }
+            stepper.flush().unwrap();
+            (stepper.steps(), stepper.delta_t().to_vec())
+        };
+        let (steps_split, t_split) = run(&[15, 15, 15]);
+        let (steps_whole, t_whole) = run(&[45]);
+        assert_eq!(steps_split, steps_whole);
+        assert_eq!(steps_split, 5, "45 bins / stride 10 = 4 full groups + 1 flushed tail");
+        for (a, b) in t_split.iter().zip(&t_whole) {
+            assert!((a - b).abs() < 1e-15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn ingest_live_matches_window_ingest() {
+        let hw = hw();
+        let mut tracker = PowerTracker::new(hw.num_chiplets(), 1_000);
+        tracker.set_baseline_mw(0, 2.0);
+        tracker.add_energy(0, 500, 7_000, 21_000.0);
+        tracker.add_event(3, 9_100, 500.0);
+        let mut via_live = ThermalStepper::new(&hw, 1_000, 4, false).unwrap();
+        via_live.ingest_live(&tracker).unwrap();
+        via_live.flush().unwrap();
+        let mut via_window = ThermalStepper::new(&hw, 1_000, 4, false).unwrap();
+        via_window.ingest(&tracker.live_window()).unwrap();
+        via_window.flush().unwrap();
+        assert_eq!(via_live.steps(), via_window.steps());
+        for (a, b) in via_live.delta_t().iter().zip(via_window.delta_t()) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+}

@@ -6,6 +6,11 @@
 //!  2. experiment tables: [`Table`] prints the paper-style rows that each
 //!     bench target regenerates, and can dump them as JSON for
 //!     EXPERIMENTS.md bookkeeping.
+//!
+//! When the `CHIPSIM_BENCH_JSON` environment variable names a directory,
+//! every [`bench`] call additionally writes its result there as
+//! `BENCH_<case>.json`, so CI can upload the bench trajectory as a
+//! workflow artifact instead of scraping stdout.
 
 use std::time::Instant;
 
@@ -21,6 +26,40 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Filesystem-safe case name: `BENCH_<slug>.json`.
+    pub fn case_slug(&self) -> String {
+        let mut slug: String = self
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        while slug.contains("__") {
+            slug = slug.replace("__", "_");
+        }
+        slug.trim_matches('_').to_string()
+    }
+
+    /// Machine-readable form of one timed case.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("name", Value::from(self.name.clone())),
+            ("iters", self.iters.into()),
+            ("mean_ns", self.mean_ns.into()),
+            ("p50_ns", self.p50_ns.into()),
+            ("p95_ns", self.p95_ns.into()),
+            ("min_ns", self.min_ns.into()),
+        ])
+    }
+
+    /// Write `BENCH_<case>.json` into `dir` (created if missing).
+    pub fn save_json(&self, dir: &str) -> anyhow::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(format!("BENCH_{}.json", self.case_slug()));
+        std::fs::write(&path, crate::util::json::to_string_pretty(&self.to_json()))?;
+        Ok(path)
+    }
+
     pub fn print(&self) {
         println!(
             "bench {:<40} iters={:<6} mean={:>12} p50={:>12} p95={:>12} min={:>12}",
@@ -64,14 +103,22 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: 
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-    BenchResult {
+    let result = BenchResult {
         name: name.to_string(),
         iters: samples.len(),
         mean_ns: mean,
         p50_ns: pct(0.5),
         p95_ns: pct(0.95),
         min_ns: samples[0],
+    };
+    if let Ok(dir) = std::env::var("CHIPSIM_BENCH_JSON") {
+        if !dir.is_empty() {
+            if let Err(e) = result.save_json(&dir) {
+                eprintln!("benchkit: could not write BENCH json into {dir}: {e:#}");
+            }
+        }
     }
+    result
 }
 
 /// A paper-style results table.
@@ -194,5 +241,26 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_json_artifact_round_trips() {
+        let r = BenchResult {
+            name: "noc/packet: 200 flows x 64KB on 10x10 mesh".into(),
+            iters: 12,
+            mean_ns: 1234.5,
+            p50_ns: 1200.0,
+            p95_ns: 1500.0,
+            min_ns: 1100.0,
+        };
+        assert_eq!(r.case_slug(), "noc_packet_200_flows_x_64KB_on_10x10_mesh");
+        let dir = std::env::temp_dir().join("chipsim-benchkit-test");
+        let path = r.save_json(dir.to_str().unwrap()).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("BENCH_"));
+        let parsed =
+            crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("iters").unwrap().as_usize().unwrap(), 12);
+        assert!((parsed.get("mean_ns").unwrap().as_f64().unwrap() - 1234.5).abs() < 1e-9);
+        let _ = std::fs::remove_file(path);
     }
 }

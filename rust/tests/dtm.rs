@@ -1,0 +1,167 @@
+//! Integration tests for closed-loop dynamic thermal management:
+//! per-seed determinism (including sensor noise), the thermal-ceiling
+//! guarantee of the threshold governor against the uncontrolled NoOp
+//! baseline, and the streaming-thermal regression (drained power windows
+//! must reach the thermal solve, not just the live tail).
+
+use chipsim::config::{HardwareConfig, SimParams};
+use chipsim::dtm::{GovernorSpec, SensorSpec};
+use chipsim::scenario::Registry;
+use chipsim::serving::{ArrivalSpec, StreamingSource, TrafficReport, TrafficSpec};
+use chipsim::sim::{BatchSource, NullSink, RequestSource, Simulation, ThermalSpec};
+use chipsim::thermal::consts::T_AMBIENT;
+use chipsim::workload::ModelKind;
+
+fn serving_params() -> SimParams {
+    SimParams { pipelined: true, warmup_ns: 0, cooldown_ns: 0, ..SimParams::default() }
+}
+
+/// A hot, saturating load: more offered work than a 4x4 mesh serves, so
+/// chiplets stay as busy as the NoI allows for the whole horizon.
+fn hot_spec() -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(5_000.0).kinds(&[ModelKind::ResNet18]).inferences(2))
+        .horizon_ms(20.0)
+        .warmup_ms(0.0)
+        .window_ms(2.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+fn run_dtm(governor: GovernorSpec, window_ns: u64, seed: u64) -> TrafficReport {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(4, 4))
+        .params(serving_params())
+        .thermal(ThermalSpec::InLoop { window_ns, governor })
+        .build()
+        .expect("valid configuration")
+        .run_traffic_with(&hot_spec(), seed)
+        .expect("traffic run")
+}
+
+#[test]
+fn threshold_throttle_caps_temperature_where_noop_exceeds_it() {
+    // Self-calibrating ceiling: measure the uncontrolled excursion above
+    // ambient, then place the ceiling at 60 % of it and the hysteresis
+    // band below that.  NoOp exceeds the ceiling by construction; the
+    // throttle governor must stay under it.
+    let noop = run_dtm(GovernorSpec::noop(1_000.0).sensors(SensorSpec::ideal()), 50_000, 9);
+    let noop_dtm = noop.dtm().expect("dtm report");
+    let rise = noop_dtm.peak_c - T_AMBIENT;
+    assert!(
+        rise > 0.05,
+        "calibration workload too cold to discriminate: peak {:.3} °C",
+        noop_dtm.peak_c
+    );
+    let ceiling = T_AMBIENT + 0.6 * rise;
+    assert!(noop_dtm.peak_c > ceiling, "uncontrolled run must exceed the ceiling");
+
+    let governor = GovernorSpec::threshold_band(
+        T_AMBIENT + 0.30 * rise, // hot: start throttling well under the ceiling
+        T_AMBIENT + 0.15 * rise, // cold: release with hysteresis
+        ceiling,
+    )
+    .sensors(SensorSpec::ideal());
+    let capped = run_dtm(governor, 50_000, 9);
+    let capped_dtm = capped.dtm().expect("dtm report");
+    assert!(
+        capped_dtm.peak_c < ceiling,
+        "throttle must cap the hottest chiplet: peak {:.3} °C !< ceiling {:.3} °C \
+         (noop peaked at {:.3} °C)",
+        capped_dtm.peak_c,
+        ceiling,
+        noop_dtm.peak_c
+    );
+    assert_eq!(capped_dtm.ceiling_violations, 0);
+    assert!(capped_dtm.throttle_residency > 0.0, "the governor must actually throttle");
+    assert!(capped_dtm.transitions > 0);
+    // The thermal win costs serving capacity: the throttled run cannot
+    // complete more work than the uncontrolled one.
+    assert!(capped.stats.completed() <= noop.stats.completed());
+}
+
+#[test]
+fn dtm_scenarios_are_byte_identical_per_seed_including_sensor_noise() {
+    let reg = Registry::builtin();
+    for name in ["dtm-thermal-ceiling", "dtm-throttle-slo"] {
+        let sc = reg.get(name).unwrap_or_else(|| panic!("missing builtin '{name}'"));
+        let a = sc.run_traffic(21).expect("dtm traffic run");
+        let b = sc.run_traffic(21).expect("dtm traffic run");
+        let (da, db) = (a.dtm().expect("dtm report"), b.dtm().expect("dtm report"));
+        assert_eq!(da.fingerprint(), db.fingerprint(), "{name}: DtmReport must match");
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{name}: TrafficReport must match");
+        assert!(da.windows > 0 && da.steps > 0, "{name}: the control loop must have run");
+        // A different arrival seed must show up in the thermal trace.
+        let c = sc.run_traffic(22).expect("dtm traffic run");
+        assert_ne!(
+            da.fingerprint(),
+            c.dtm().expect("dtm report").fingerprint(),
+            "{name}: seed must matter"
+        );
+    }
+}
+
+#[test]
+fn streaming_thermal_covers_drained_windows_not_just_the_tail() {
+    // Regression for the pre-DTM bug: a traffic run drained power
+    // windows as time advanced, and the post-run thermal solve then only
+    // saw the live tail.  The incremental stepper must make a streaming
+    // run's thermal summary match a batch run over the identical request
+    // stream (same bins, same stride grouping, same step sequence).
+    let hw = HardwareConfig::homogeneous_mesh(4, 4);
+    let spec = TrafficSpec::new(ArrivalSpec::poisson(2_000.0).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(8.0)
+        .warmup_ms(0.0)
+        .window_ms(2.0) // 2000 bins per drain, a whole multiple of the stride
+        .slo_ms(2.0)
+        .steady(None);
+    let thermal = ThermalSpec::Native { stride_bins: 20 };
+    let seed = 77;
+
+    let streaming = Simulation::builder()
+        .hardware(hw.clone())
+        .params(serving_params())
+        .thermal(thermal.clone())
+        .build()
+        .unwrap()
+        .run_traffic_with(&spec, seed)
+        .unwrap();
+    assert!(
+        streaming.sim.power.drained_bins() > 0,
+        "test premise: the traffic run must have drained windows"
+    );
+
+    // Batch reference: the same requests through the same event loop,
+    // with every power bin kept live until the end-of-run solve.
+    let mut source =
+        StreamingSource::new(spec.arrivals.build(seed).unwrap(), spec.horizon_ns);
+    let mut requests = Vec::new();
+    while let Some(r) = source.next_request() {
+        requests.push(r);
+    }
+    let batch = Simulation::builder()
+        .hardware(hw)
+        .params(serving_params())
+        .thermal(thermal)
+        .build()
+        .unwrap()
+        .run_with(&mut BatchSource::new(requests), &mut NullSink)
+        .unwrap();
+    assert_eq!(batch.power.drained_bins(), 0, "batch reference must not drain");
+    assert_eq!(streaming.sim.span_ns, batch.span_ns, "identical event streams expected");
+
+    let th_stream = streaming.sim.thermal.as_ref().expect("streaming thermal summary");
+    let th_batch = batch.thermal.as_ref().expect("batch thermal summary");
+    assert_eq!(th_stream.steps, th_batch.steps, "both must integrate the whole horizon");
+    assert!(
+        (th_stream.hottest_c - th_batch.hottest_c).abs() < 1e-9,
+        "hottest: streaming {} vs batch {}",
+        th_stream.hottest_c,
+        th_batch.hottest_c
+    );
+    assert!(
+        (th_stream.coolest_c - th_batch.coolest_c).abs() < 1e-9,
+        "coolest: streaming {} vs batch {}",
+        th_stream.coolest_c,
+        th_batch.coolest_c
+    );
+}

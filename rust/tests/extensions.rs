@@ -18,7 +18,7 @@ fn params(pipelined: bool, inf: u32) -> SimParams {
     }
 }
 
-/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+/// Shared builder-API assembly for this target.
 fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
     Simulation::builder()
         .hardware(hw)

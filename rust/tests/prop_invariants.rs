@@ -14,7 +14,7 @@ use chipsim::util::propkit::check;
 use chipsim::util::rng::Rng;
 use chipsim::workload::{ModelKind, NeuralModel, ALL_CNNS};
 
-/// Builder-API assembly for the migrated `GlobalManager::new` call sites.
+/// Shared builder-API assembly for this target.
 fn sim(hw: HardwareConfig, params: SimParams) -> Simulation {
     Simulation::builder()
         .hardware(hw)

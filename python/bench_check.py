@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Guard the NoC flit-engine throughput against perf regressions.
+
+Usage: bench_check.py <fresh_dir> <baseline_dir> [--factor 2.0]
+
+Compares the `flit_hops_per_s` metric of every `BENCH_noc_flit*.json`
+artifact produced by `cargo bench --bench perf_hotpaths` (written into
+<fresh_dir> via CHIPSIM_BENCH_JSON) against the committed baseline of the
+same name in <baseline_dir> (the repo root).  Fails when a fresh result
+drops more than `factor` times below its baseline.
+
+The committed baselines double as the perf trajectory: rerunning the
+bench without CHIPSIM_BENCH_JSON overwrites them in place, so each commit
+records the numbers of its era.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+METRIC = "flit_hops_per_s"
+
+
+def load_doc(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def metric_of(doc):
+    return (doc.get("metrics") or {}).get(METRIC)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh_dir", help="directory with freshly generated BENCH_*.json")
+    ap.add_argument("baseline_dir", help="directory with committed baseline BENCH_*.json")
+    ap.add_argument(
+        "--factor",
+        type=float,
+        default=2.0,
+        help="fail when fresh throughput < baseline / factor (default 2.0)",
+    )
+    args = ap.parse_args()
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_noc_flit*.json")))
+    failures = []
+    checked = 0
+    for base_path in baselines:
+        name = os.path.basename(base_path)
+        base_doc = load_doc(base_path)
+        base = metric_of(base_doc)
+        # A baseline stamped "estimated": true was never measured (the
+        # bootstrap committed before a toolchain existed): report but do
+        # not fail on it.  The first real `cargo bench` run rewrites the
+        # file without the stamp, arming the gate.
+        estimated = bool(base_doc.get("estimated"))
+        if base is None:
+            failures.append(f"{name}: baseline has no '{METRIC}' metric")
+            continue
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh result missing from {args.fresh_dir}")
+            continue
+        fresh = metric_of(load_doc(fresh_path))
+        if fresh is None:
+            failures.append(f"{name}: fresh result has no '{METRIC}' metric")
+            continue
+        checked += 1
+        ratio = fresh / base if base > 0 else float("inf")
+        tag = " [estimated baseline, advisory]" if estimated else ""
+        print(f"{name}: baseline {base:.3g} fresh {fresh:.3g} flit-hops/s ({ratio:.2f}x){tag}")
+        if fresh < base / args.factor:
+            msg = (
+                f"{name}: {METRIC} regressed more than {args.factor}x below baseline "
+                f"({fresh:.3g} < {base:.3g} / {args.factor})"
+            )
+            if estimated:
+                print(f"ADVISORY (not failing, baseline is estimated): {msg}")
+            else:
+                failures.append(msg)
+
+    if not baselines:
+        failures.append(
+            f"no BENCH_noc_flit*.json baselines found in {args.baseline_dir} — "
+            "the flit perf guard checked nothing"
+        )
+    if failures:
+        print("\nbench_check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"bench_check OK ({checked} flit case(s) within {args.factor}x of baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,7 +3,9 @@
 //!
 //! Covered paths:
 //!   L3  packet NoI engine       (bytes·hops/s under load)
-//!   L3  flit NoI engine         (flit-hops/s, validation fidelity)
+//!   L3  flit NoI engine         (flit-hops/s, wormhole fidelity)
+//!   L3  flit NoI engine, large  (96 flows x 64KB on 12x12 — infeasible
+//!                                before the active-set rewrite)
 //!   L3  mapper                  (models mapped/s on a busy ledger)
 //!   L3  end-to-end co-sim       (wall time per simulated model)
 //!   L3  streaming traffic       (requests/s through the serving engine)
@@ -64,20 +66,57 @@ fn bench_packet_engine() {
     );
 }
 
-fn bench_flit_engine() {
-    let topo = mesh(6, 6, &LinkParams::default());
-    let r = bench("noc/flit: 24 flows x 8KB on 6x6 mesh", 3, 1500, || {
+/// Run one flit-engine case and record flit-hops/s (the regression metric
+/// `python/bench_check.py` guards in CI) into the JSON artifact.
+fn flit_case(
+    name: &'static str,
+    rows: usize,
+    cols: usize,
+    flows: usize,
+    bytes: u64,
+    seed: u64,
+    min_iters: usize,
+    min_time_ms: u64,
+) {
+    let p = LinkParams::default();
+    let topo = mesh(rows, cols, &p);
+    let nodes = rows * cols;
+    let run = |topo: &Topology| -> u64 {
         let mut e = FlitEngine::new(topo.clone());
-        let mut rng = Rng::new(9);
-        for _ in 0..24 {
-            let src = rng.below_usize(36);
-            let dst = (src + 1 + rng.below_usize(35)) % 36;
-            e.inject(FlowSpec { src, dst, bytes: 8_192 }, 0);
+        let mut rng = Rng::new(seed);
+        for i in 0..flows {
+            let src = rng.below_usize(nodes);
+            let dst = (src + 1 + rng.below_usize(nodes - 1)) % nodes;
+            e.inject(FlowSpec { src, dst, bytes }, i as u64 * 50);
         }
         while e.advance_until(u64::MAX).is_some() {}
-        std::hint::black_box(e.work_done());
+        e.work_done()
+    };
+    // Capture work_done from inside the timed closure (deterministic
+    // across iterations) instead of paying one extra un-timed run.
+    let work = std::cell::Cell::new(0u64);
+    let r = bench(name, min_iters, min_time_ms, || {
+        work.set(std::hint::black_box(run(&topo)));
     });
+    // work_done counts byte-hops; one flit is `width_bytes` bytes.
+    let flit_hops = (work.get() / p.width_bytes) as f64;
+    let rate = flit_hops / (r.mean_ns / 1e9);
+    let r = r.with_metric("flit_hops_per_s", rate);
+    if let Err(e) = r.save_json(&chipsim::util::benchkit::bench_json_dir()) {
+        eprintln!("benchkit: could not persist flit metrics: {e:#}");
+    }
     r.print();
+    println!("  -> {:.2} M flit-hops/s", rate / 1e6);
+}
+
+fn bench_flit_engine() {
+    flit_case("noc/flit: 24 flows x 8KB on 6x6 mesh", 6, 6, 24, 8_192, 9, 3, 1500);
+}
+
+fn bench_flit_engine_large() {
+    // Serving-scale wormhole case: was O(links²) per cycle before the
+    // active-set rewrite and did not finish in bench time.
+    flit_case("noc/flit-large: 96 flows x 64KB on 12x12 mesh", 12, 12, 96, 65_536, 11, 2, 1500);
 }
 
 fn bench_mapper() {
@@ -232,6 +271,7 @@ fn main() {
     println!("== perf_hotpaths ==");
     bench_packet_engine();
     bench_flit_engine();
+    bench_flit_engine_large();
     bench_mapper();
     bench_end_to_end();
     bench_traffic_steady_state();

@@ -450,9 +450,13 @@ fn link_from_json(v: &Value) -> anyhow::Result<LinkParams> {
 /// Which network model the co-simulation uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum NocFidelity {
-    /// Contention-aware packet/virtual-cut-through model (default; fast).
+    /// Contention-aware packet/virtual-cut-through model (default;
+    /// coarsest, fastest).
     Packet,
-    /// Flit-level wormhole with credit flow control (validation; slower).
+    /// Flit-level wormhole with credit flow control.  The active-set,
+    /// cycle-skipping engine scales with traffic (not cycles × links), so
+    /// it is usable at serving scale whenever per-flit arbitration
+    /// accuracy matters.
     Flit,
 }
 

@@ -47,11 +47,27 @@ impl ModelMapping {
 }
 
 /// Per-chiplet free weight memory.
+///
+/// Supports cheap speculative probes: [`checkpoint`](Self::checkpoint)
+/// opens a journal of subsequent alloc/release deltas, and
+/// [`rollback`](Self::rollback) undoes them in O(changes) — the mapping
+/// hot path used to clone the whole ledger (two `Vec<u64>` the size of
+/// the system) for every placement attempt of every queued request.
 #[derive(Debug, Clone)]
 pub struct MemoryLedger {
     free: Vec<u64>,
     capacity: Vec<u64>,
+    /// (chiplet, bytes, was_alloc) deltas since the outermost active
+    /// checkpoint; empty (and not appended to) when no checkpoint is open.
+    journal: Vec<(usize, u64, bool)>,
+    journal_depth: usize,
 }
+
+/// Token returned by [`MemoryLedger::checkpoint`]; pass it back to
+/// `rollback` or `commit`.
+#[derive(Debug)]
+#[must_use = "a checkpoint must be rolled back or committed"]
+pub struct LedgerMark(usize);
 
 impl MemoryLedger {
     pub fn new(hw: &HardwareConfig) -> MemoryLedger {
@@ -65,7 +81,45 @@ impl MemoryLedger {
                 }
             })
             .collect();
-        MemoryLedger { free: capacity.clone(), capacity }
+        MemoryLedger {
+            free: capacity.clone(),
+            capacity,
+            journal: Vec::new(),
+            journal_depth: 0,
+        }
+    }
+
+    /// Start journaling changes so they can be undone with
+    /// [`rollback`](Self::rollback).  Checkpoints nest.
+    pub fn checkpoint(&mut self) -> LedgerMark {
+        self.journal_depth += 1;
+        LedgerMark(self.journal.len())
+    }
+
+    /// Undo every alloc/release recorded since `mark`.
+    pub fn rollback(&mut self, mark: LedgerMark) {
+        while self.journal.len() > mark.0 {
+            let (chiplet, bytes, was_alloc) = self.journal.pop().unwrap();
+            if was_alloc {
+                self.free[chiplet] += bytes;
+            } else {
+                self.free[chiplet] -= bytes;
+            }
+        }
+        self.close_checkpoint();
+    }
+
+    /// Keep the changes recorded since `mark`.
+    pub fn commit(&mut self, mark: LedgerMark) {
+        debug_assert!(mark.0 <= self.journal.len());
+        self.close_checkpoint();
+    }
+
+    fn close_checkpoint(&mut self) {
+        self.journal_depth -= 1;
+        if self.journal_depth == 0 {
+            self.journal.clear();
+        }
     }
 
     pub fn free_bytes(&self, chiplet: usize) -> u64 {
@@ -83,6 +137,9 @@ impl MemoryLedger {
     pub fn alloc(&mut self, chiplet: usize, bytes: u64) {
         assert!(self.free[chiplet] >= bytes, "over-allocation on chiplet {chiplet}");
         self.free[chiplet] -= bytes;
+        if self.journal_depth > 0 {
+            self.journal.push((chiplet, bytes, true));
+        }
     }
 
     pub fn release(&mut self, chiplet: usize, bytes: u64) {
@@ -91,6 +148,9 @@ impl MemoryLedger {
             self.free[chiplet] <= self.capacity[chiplet],
             "double free on chiplet {chiplet}"
         );
+        if self.journal_depth > 0 {
+            self.journal.push((chiplet, bytes, false));
+        }
     }
 
     /// Release everything a mapping allocated.
@@ -230,25 +290,33 @@ impl<'a> NearestNeighborMapper<'a> {
     /// possible (two layers on one chiplet would serialize on its compute
     /// resource).  Reuse is allowed as a fallback when the system is full.
     pub fn try_map(&self, model: &NeuralModel, ledger: &mut MemoryLedger) -> Option<ModelMapping> {
-        let mut work = ledger.clone();
+        // Speculate directly on the ledger under a checkpoint: a failed
+        // attempt rolls its allocations back in O(changes) instead of
+        // paying a full ledger clone per probe (`place_layer` only
+        // allocates on its success paths, so partial layers never leak).
+        let mark = ledger.checkpoint();
         let mut layers: Vec<Vec<Segment>> = Vec::with_capacity(model.layers.len());
         let mut prev_chiplets: Vec<usize> = Vec::new();
         let mut used: std::collections::HashSet<usize> = std::collections::HashSet::new();
         for layer in &model.layers {
             let needed = layer.weight_bytes.max(MIN_LAYER_BYTES);
             let placed = self
-                .place_layer(layer, needed, &prev_chiplets, &used, &mut work)
+                .place_layer(layer, needed, &prev_chiplets, &used, ledger)
                 .or_else(|| {
                     // Fall back to allowing same-model chiplet reuse.
-                    self.place_layer(layer, needed, &prev_chiplets, &Default::default(), &mut work)
-                })?;
+                    self.place_layer(layer, needed, &prev_chiplets, &Default::default(), ledger)
+                });
+            let Some(placed) = placed else {
+                ledger.rollback(mark);
+                return None;
+            };
             for s in &placed {
                 used.insert(s.chiplet);
             }
             prev_chiplets = placed.iter().map(|s| s.chiplet).collect();
             layers.push(placed);
         }
-        *ledger = work;
+        ledger.commit(mark);
         Some(ModelMapping { layers })
     }
 
@@ -326,6 +394,51 @@ mod tests {
         let hw = HardwareConfig::homogeneous_mesh(rows, cols);
         let topo = Topology::build(&hw);
         (hw, topo)
+    }
+
+    #[test]
+    fn ledger_rollback_restores_free_bytes() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let mut ledger = MemoryLedger::new(&hw);
+        let before: Vec<u64> = (0..4).map(|c| ledger.free_bytes(c)).collect();
+        let mark = ledger.checkpoint();
+        ledger.alloc(0, 1_000);
+        ledger.alloc(1, 2_000);
+        ledger.release(0, 500);
+        ledger.rollback(mark);
+        let after: Vec<u64> = (0..4).map(|c| ledger.free_bytes(c)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn ledger_commit_keeps_changes_and_nested_rollback_is_scoped() {
+        let hw = HardwareConfig::homogeneous_mesh(2, 2);
+        let mut ledger = MemoryLedger::new(&hw);
+        let outer = ledger.checkpoint();
+        ledger.alloc(0, 1_000);
+        let inner = ledger.checkpoint();
+        ledger.alloc(0, 50);
+        ledger.rollback(inner); // undoes only the inner 50
+        ledger.commit(outer);
+        assert_eq!(ledger.free_bytes(0), ledger.capacity(0) - 1_000);
+        // Changes outside any checkpoint are plain mutations.
+        ledger.release(0, 1_000);
+        assert_eq!(ledger.free_bytes(0), ledger.capacity(0));
+    }
+
+    #[test]
+    fn failed_try_map_leaves_ledger_untouched_without_cloning() {
+        // AlexNet does not fit a 2x2 system: probe must roll back fully.
+        let (hw, topo) = setup(2, 2);
+        let mut ledger = MemoryLedger::new(&hw);
+        let mapper = NearestNeighborMapper::new(&hw, &topo);
+        let m = NeuralModel::build(ModelKind::AlexNet);
+        let before = ledger.total_free();
+        assert!(mapper.try_map(&m, &mut ledger).is_none());
+        assert_eq!(ledger.total_free(), before);
+        for c in 0..hw.num_chiplets() {
+            assert_eq!(ledger.free_bytes(c), ledger.capacity(c));
+        }
     }
 
     #[test]

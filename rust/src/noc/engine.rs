@@ -16,7 +16,7 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
 use super::topology::Topology;
-use super::{FlowCompletion, FlowId, FlowSpec, FlowStats, NetworkSim};
+use super::{EnergyLog, FlowCompletion, FlowId, FlowSpec, FlowStats, NetworkSim};
 use crate::TimeNs;
 
 /// Flits per packet (HeteroGarnet-style message segmentation).
@@ -73,9 +73,9 @@ pub struct PacketEngine {
     completions: BinaryHeap<Reverse<(TimeNs, FlowId)>>,
     next_flow_id: FlowId,
     next_seq: u64,
-    /// (node, time, pj) dynamic-energy events (drained by power tracker).
-    energy_events: Vec<(usize, TimeNs, f64)>,
-    total_energy_pj: f64,
+    /// (node, time, pj) dynamic-energy events, coalesced per power bin
+    /// (drained by the power tracker).
+    energy: EnergyLog,
     /// Byte-hops processed (throughput metric for perf benches).
     work: u64,
     /// Current simulated network time (monotone).
@@ -91,6 +91,7 @@ pub struct PacketEngine {
 impl PacketEngine {
     pub fn new(topo: Topology) -> Self {
         let nlinks = topo.links.len();
+        let nnodes = topo.num_nodes;
         let hop_ns = topo.hop_ns().round() as TimeNs;
         let full_pkt_bytes: Vec<u64> =
             topo.links.iter().map(|l| PACKET_FLITS * l.width_bytes).collect();
@@ -111,8 +112,7 @@ impl PacketEngine {
             completions: BinaryHeap::new(),
             next_flow_id: 0,
             next_seq: 0,
-            energy_events: Vec::new(),
-            total_energy_pj: 0.0,
+            energy: EnergyLog::new(nnodes),
             work: 0,
             now: 0,
         }
@@ -169,8 +169,7 @@ impl PacketEngine {
         // Book dynamic link energy at the source node of the link.
         let link = &self.topo.links[link_idx];
         let pj = ev.bytes as f64 * link.e_per_byte_pj;
-        self.energy_events.push((link.src, start, pj));
-        self.total_energy_pj += pj;
+        self.energy.push(link.src, start, pj);
         self.work += ev.bytes;
         let seq = self.seq();
         self.events.push(Reverse(PacketEvent {
@@ -260,11 +259,15 @@ impl NetworkSim for PacketEngine {
     }
 
     fn comm_energy_pj(&self) -> f64 {
-        self.total_energy_pj
+        self.energy.total_pj()
     }
 
     fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)> {
-        std::mem::take(&mut self.energy_events)
+        self.energy.drain()
+    }
+
+    fn set_energy_bin_ns(&mut self, bin_ns: TimeNs) {
+        self.energy.set_bin_ns(bin_ns);
     }
 
     fn work_done(&self) -> u64 {
@@ -396,6 +399,22 @@ mod tests {
         assert!(!events.is_empty());
         let sum: f64 = events.iter().map(|&(_, _, pj)| pj).sum();
         assert!((sum - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn energy_coalescing_preserves_totals() {
+        let run = |bin: TimeNs| {
+            let mut e = engine(1, 4);
+            e.set_energy_bin_ns(bin);
+            run_flow(&mut e, FlowSpec { src: 0, dst: 3, bytes: 10_000 }, 0);
+            let ev = e.drain_energy_events();
+            (ev.len(), ev.iter().map(|&(_, _, pj)| pj).sum::<f64>(), e.comm_energy_pj())
+        };
+        let (n_fine, sum_fine, total_fine) = run(1);
+        let (n_bin, sum_bin, total_bin) = run(1_000);
+        assert!(n_bin <= n_fine, "{n_bin} !<= {n_fine}");
+        assert!((sum_fine - sum_bin).abs() < 1e-6);
+        assert_eq!(total_fine.to_bits(), total_bin.to_bits());
     }
 
     #[test]

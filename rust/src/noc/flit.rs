@@ -1,4 +1,4 @@
-//! Cycle-driven flit-level wormhole engine (validation fidelity).
+//! Cycle-driven flit-level wormhole engine (production-fast).
 //!
 //! This is the closest analog to HeteroGarnet's router model that is
 //! practical from scratch: per-input-port FIFO buffers, wormhole switching
@@ -9,16 +9,52 @@
 //! It shares `Topology` and packet segmentation with the default
 //! [`super::engine::PacketEngine`]; integration tests assert the two agree
 //! on uncontended latency to within the router-pipeline approximation and
-//! rank contended flows identically.  Use `--noc flit` to select it; it is
-//! O(cycles × links) and therefore reserved for small/validation runs.
+//! rank contended flows identically.  Select it with `--noc flit`.
+//!
+//! ## Active-set, cycle-skipping scheduler
+//!
+//! A naive cycle-driven engine costs O(cycles × links) — every link is
+//! re-examined every cycle whether or not anything near it can move.  This
+//! engine keeps the *exact* cycle-for-cycle semantics of that dense scan
+//! (asserted byte-for-byte by the differential harness against the
+//! reference implementation in `#[cfg(test)] mod reference`) while paying
+//! only for actual traffic:
+//!
+//! * **Precomputed router inputs** — each router's candidate input list
+//!   (in-links + local injection queue) comes from
+//!   [`Topology::in_links`], built once at construction; the dense scan
+//!   rebuilt it by filtering *all* links for *every* link each cycle,
+//!   making a cycle O(links²).
+//! * **Active set** — per-router counts of non-empty inputs select, each
+//!   cycle, only the output links whose source router could possibly
+//!   allocate or traverse.  A link whose router has no buffered flit is
+//!   provably a no-op under the dense semantics (allocation scans empty
+//!   fronts, traversal needs a front) and is skipped.  Candidates are
+//!   processed in ascending link index, the dense scan's order, because
+//!   intra-cycle pops are observable across links (credits and queue
+//!   fronts).
+//! * **Cycle skipping** — a cycle in which no flit moved leaves the
+//!   switch state frozen (allocation-only cycles change `bound`/`rr` but
+//!   cannot unblock themselves; credits only return on movement), so the
+//!   engine jumps `cycle` straight to the next in-flight arrival instead
+//!   of spinning once per empty cycle.
+//! * **Flat state + coalesced energy** — per-flow state lives in a slab
+//!   indexed by the sequential `FlowId` (the packet engine's §Perf
+//!   lesson) and per-flit-hop energy folds into one
+//!   [`super::EnergyLog`] entry per (node, power-bin).
+//!
+//! Cost therefore scales with flit-hops simulated, not with
+//! `cycles × links`, making flit fidelity usable for full serving-scale
+//! scenarios (see the `traffic-poisson-flit` / `dtm-ceiling-flit`
+//! presets), not just validation runs.
 
 use std::collections::{HashMap, VecDeque};
 
 use super::topology::Topology;
-use super::{FlowCompletion, FlowId, FlowSpec, FlowStats, NetworkSim};
+use super::{EnergyLog, FlowCompletion, FlowId, FlowSpec, FlowStats, NetworkSim};
 use crate::TimeNs;
 
-/// Input buffer depth in flits (per router input port).
+/// Default input buffer depth in flits (per router input port).
 const BUF_FLITS: usize = 8;
 /// Flits per packet — must match the packet engine's segmentation.
 const PACKET_FLITS: u64 = super::engine::PACKET_FLITS;
@@ -41,8 +77,8 @@ struct InPort {
 }
 
 impl InPort {
-    fn new() -> Self {
-        InPort { buf: VecDeque::with_capacity(BUF_FLITS), credits: BUF_FLITS }
+    fn new(depth: usize) -> Self {
+        InPort { buf: VecDeque::with_capacity(depth), credits: depth }
     }
 }
 
@@ -54,33 +90,6 @@ struct FlowProgress {
     tails_left: u64,
 }
 
-/// The wormhole flit engine.
-pub struct FlitEngine {
-    topo: Topology,
-    /// Per-link input port at the *destination* router of the link.
-    ports: Vec<InPort>,
-    /// Per-node local injection queue (treated as an extra input).
-    inject_q: Vec<VecDeque<Flit>>,
-    /// Output binding: link -> Some((source kind, packet uid)).
-    /// source kind: usize::MAX..=usize::MAX-? we encode input as
-    /// `InputRef::Link(l)` or `InputRef::Local(node)`.
-    bound: Vec<Option<(InputRef, FlowId, u64)>>,
-    /// Round-robin pointers per link (over candidate inputs).
-    rr: Vec<usize>,
-    /// Flits in flight over a link: (arrival_cycle, link, flit).
-    in_flight: VecDeque<(u64, usize, Flit)>,
-    flows: HashMap<FlowId, FlowProgress>,
-    finished: HashMap<FlowId, FlowStats>,
-    completions: VecDeque<(TimeNs, FlowId)>,
-    next_flow_id: FlowId,
-    cycle: u64,
-    energy_events: Vec<(usize, TimeNs, f64)>,
-    total_energy_pj: f64,
-    work: u64,
-    /// Cycles each link transferred a flit (busy accounting).
-    link_busy_cycles: Vec<u64>,
-}
-
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum InputRef {
     /// Input buffer fed by a link (index).
@@ -89,29 +98,88 @@ enum InputRef {
     Local(usize),
 }
 
+/// The wormhole flit engine.
+pub struct FlitEngine {
+    topo: Topology,
+    /// Per-link input port at the *destination* router of the link.
+    ports: Vec<InPort>,
+    /// Per-node local injection queue (treated as an extra input).
+    inject_q: Vec<VecDeque<Flit>>,
+    /// Output binding: link -> Some((input, flow, packet uid)).
+    bound: Vec<Option<(InputRef, FlowId, u64)>>,
+    /// Round-robin pointers per link (over candidate inputs).
+    rr: Vec<usize>,
+    /// Flits in flight over a link: (arrival_cycle, link, flit).  Hop
+    /// latency is constant, so push order is already arrival order.
+    in_flight: VecDeque<(u64, usize, Flit)>,
+    /// Per-flow state, indexed by the sequential `FlowId` (slab — the
+    /// per-flit HashMap lookup was a measurable cost, as it was in the
+    /// packet engine).
+    flows: Vec<Option<FlowProgress>>,
+    active_flows: usize,
+    finished: HashMap<FlowId, FlowStats>,
+    completions: VecDeque<(TimeNs, FlowId)>,
+    next_flow_id: FlowId,
+    cycle: u64,
+    energy: EnergyLog,
+    work: u64,
+    /// Cycles each link transferred a flit (busy accounting).
+    link_busy_cycles: Vec<u64>,
+    /// Candidate input lists per router: in-links (ascending link index)
+    /// then the local injection queue — precomputed once.
+    inputs: Vec<Vec<InputRef>>,
+    /// Number of non-empty candidate inputs per router; a router with
+    /// zero pending inputs cannot allocate or traverse any of its output
+    /// links this cycle.
+    pending_inputs: Vec<u32>,
+    /// Total flits sitting in ports + injection queues (busy test).
+    buffered: u64,
+    /// Reusable scratch list of candidate links for the current cycle.
+    candidates: Vec<usize>,
+}
+
 impl FlitEngine {
     pub fn new(topo: Topology) -> Self {
+        Self::with_buffer_depth(topo, BUF_FLITS)
+    }
+
+    /// Construct with an explicit per-port buffer depth (flits).  The
+    /// differential harness sweeps this; `new` uses [`BUF_FLITS`].
+    pub fn with_buffer_depth(topo: Topology, buf_flits: usize) -> Self {
         for l in &topo.links {
             assert_eq!(l.clock_div, 1, "flit engine requires homogeneous clocks");
         }
+        let depth = buf_flits.max(1);
         let nlinks = topo.links.len();
         let nnodes = topo.num_nodes;
+        let inputs: Vec<Vec<InputRef>> = (0..nnodes)
+            .map(|n| {
+                let mut v: Vec<InputRef> =
+                    topo.in_links[n].iter().map(|&l| InputRef::Link(l)).collect();
+                v.push(InputRef::Local(n));
+                v
+            })
+            .collect();
         FlitEngine {
-            ports: (0..nlinks).map(|_| InPort::new()).collect(),
+            ports: (0..nlinks).map(|_| InPort::new(depth)).collect(),
             inject_q: vec![VecDeque::new(); nnodes],
             bound: vec![None; nlinks],
             rr: vec![0; nlinks],
             in_flight: VecDeque::new(),
-            topo,
-            flows: HashMap::new(),
+            flows: Vec::new(),
+            active_flows: 0,
             finished: HashMap::new(),
             completions: VecDeque::new(),
             next_flow_id: 0,
             cycle: 0,
-            energy_events: Vec::new(),
-            total_energy_pj: 0.0,
+            energy: EnergyLog::new(nnodes),
             work: 0,
             link_busy_cycles: vec![0; nlinks],
+            inputs,
+            pending_inputs: vec![0; nnodes],
+            buffered: 0,
+            candidates: Vec::new(),
+            topo,
         }
     }
 
@@ -119,8 +187,28 @@ impl FlitEngine {
         (cycle as f64 * self.topo.cycle_ns).round() as TimeNs
     }
 
+    /// Smallest cycle whose [`ns`](Self::ns) stamp is `>= t`.
+    ///
+    /// `ceil(t / cycle_ns)` alone disagrees with `ns`'s *rounding* for
+    /// non-integer `cycle_ns`, so an injection fast-forward could land on
+    /// a cycle stamped before the injection time (events appearing to
+    /// precede their cause).  Anchoring on `ns` itself makes the pair
+    /// consistent by construction for any clock.
     fn cycle_of(&self, t: TimeNs) -> u64 {
-        (t as f64 / self.topo.cycle_ns).ceil() as u64
+        let mut c = (t as f64 / self.topo.cycle_ns).ceil() as u64;
+        while c > 0 && self.ns(c - 1) >= t {
+            c -= 1;
+        }
+        while c < u64::MAX && self.ns(c) < t {
+            c += 1;
+        }
+        c
+    }
+
+    /// Smallest cycle `>= self.cycle` whose stamp reaches `t` — where a
+    /// per-cycle loop idling toward `t` would come to rest.
+    fn first_cycle_at(&self, t: TimeNs) -> u64 {
+        self.cycle.max(self.cycle_of(t))
     }
 
     /// The output link a flit wants at router `node`.
@@ -132,20 +220,6 @@ impl FlitEngine {
         }
     }
 
-    /// Candidate inputs of router `node`: all in-links plus local queue.
-    fn inputs_of(&self, node: usize) -> Vec<InputRef> {
-        let mut v: Vec<InputRef> = self
-            .topo
-            .links
-            .iter()
-            .enumerate()
-            .filter(|(_, l)| l.dst == node)
-            .map(|(i, _)| InputRef::Link(i))
-            .collect();
-        v.push(InputRef::Local(node));
-        v
-    }
-
     fn front(&self, input: InputRef) -> Option<&Flit> {
         match input {
             InputRef::Link(l) => self.ports[l].buf.front(),
@@ -154,17 +228,27 @@ impl FlitEngine {
     }
 
     fn pop(&mut self, input: InputRef) -> Flit {
+        self.buffered -= 1;
         match input {
             InputRef::Link(l) => {
                 let f = self.ports[l].buf.pop_front().unwrap();
                 self.ports[l].credits += 1;
+                if self.ports[l].buf.is_empty() {
+                    self.pending_inputs[self.topo.links[l].dst] -= 1;
+                }
                 f
             }
-            InputRef::Local(n) => self.inject_q[n].pop_front().unwrap(),
+            InputRef::Local(n) => {
+                let f = self.inject_q[n].pop_front().unwrap();
+                if self.inject_q[n].is_empty() {
+                    self.pending_inputs[n] -= 1;
+                }
+                f
+            }
         }
     }
 
-    /// One router+link cycle.  Returns true if anything moved.
+    /// One router+link cycle.  Returns true if any flit moved.
     fn step_cycle(&mut self) -> bool {
         let mut moved = false;
         self.cycle += 1;
@@ -184,24 +268,39 @@ impl FlitEngine {
                     self.finish_packet(flit, now_ns);
                 }
             } else {
+                if self.ports[link].buf.is_empty() {
+                    self.pending_inputs[node] += 1;
+                }
                 self.ports[link].buf.push_back(flit);
+                self.buffered += 1;
             }
             moved = true;
         }
 
-        // 2. Switch allocation + traversal per output link.
-        for link in 0..self.topo.links.len() {
+        // 2. Switch allocation + traversal, restricted to output links of
+        // routers that hold at least one buffered flit.  Processed in
+        // ascending link index — identical to the dense 0..links scan
+        // with its no-op links removed.
+        let mut cands = std::mem::take(&mut self.candidates);
+        cands.clear();
+        for n in 0..self.topo.num_nodes {
+            if self.pending_inputs[n] > 0 {
+                cands.extend_from_slice(&self.topo.out_links[n]);
+            }
+        }
+        cands.sort_unstable();
+        for &link in &cands {
             // Allocate if free.
             if self.bound[link].is_none() {
                 let node = self.topo.links[link].src;
-                let inputs = self.inputs_of(node);
-                let start = self.rr[link] % inputs.len();
-                for k in 0..inputs.len() {
-                    let input = inputs[(start + k) % inputs.len()];
+                let ninputs = self.inputs[node].len();
+                let start = self.rr[link] % ninputs;
+                for k in 0..ninputs {
+                    let input = self.inputs[node][(start + k) % ninputs];
                     if let Some(f) = self.front(input) {
                         if f.is_head && self.route_out(node, f.dst) == Some(link) {
                             self.bound[link] = Some((input, f.flow, f.pkt));
-                            self.rr[link] = (start + k + 1) % inputs.len();
+                            self.rr[link] = (start + k + 1) % ninputs;
                             break;
                         }
                     }
@@ -222,12 +321,9 @@ impl FlitEngine {
                         }
                         let arrival = self.cycle + self.topo.hop_latency_cycles.max(1);
                         self.in_flight.push_back((arrival, link, f));
-                        // Keep in_flight sorted by arrival (hop latency is
-                        // constant, so push_back order is already sorted).
                         let l = &self.topo.links[link];
                         let pj = l.width_bytes as f64 * l.e_per_byte_pj;
-                        self.energy_events.push((l.src, now_ns, pj));
-                        self.total_energy_pj += pj;
+                        self.energy.push(l.src, now_ns, pj);
                         self.work += l.width_bytes;
                         self.link_busy_cycles[link] += 1;
                         if f.is_tail {
@@ -238,17 +334,17 @@ impl FlitEngine {
                 }
             }
         }
+        self.candidates = cands;
         moved
     }
 
     fn finish_packet(&mut self, tail: Flit, now_ns: TimeNs) {
-        let done = {
-            let fp = self.flows.get_mut(&tail.flow).expect("tail for unknown flow");
-            fp.tails_left -= 1;
-            fp.tails_left == 0
-        };
-        if done {
-            let fp = self.flows.remove(&tail.flow).unwrap();
+        let slot = &mut self.flows[tail.flow as usize];
+        let fp = slot.as_mut().expect("tail for unknown flow");
+        fp.tails_left -= 1;
+        if fp.tails_left == 0 {
+            let fp = slot.take().unwrap();
+            self.active_flows -= 1;
             let stats = FlowStats {
                 spec: fp.spec,
                 injected_ns: fp.injected_ns,
@@ -262,9 +358,7 @@ impl FlitEngine {
 
     /// True if any flit anywhere is still queued/in flight.
     fn network_busy(&self) -> bool {
-        !self.in_flight.is_empty()
-            || self.ports.iter().any(|p| !p.buf.is_empty())
-            || self.inject_q.iter().any(|q| !q.is_empty())
+        !self.in_flight.is_empty() || self.buffered > 0
     }
 }
 
@@ -272,6 +366,7 @@ impl NetworkSim for FlitEngine {
     fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId {
         let id = self.next_flow_id;
         self.next_flow_id += 1;
+        debug_assert_eq!(self.flows.len(), id as usize);
         // Catch the engine's clock up to the injection time without
         // simulating idle cycles one by one.
         let inj_cycle = self.cycle_of(now);
@@ -281,6 +376,7 @@ impl NetworkSim for FlitEngine {
         let path = self.topo.path(spec.src, spec.dst);
         if path.is_empty() {
             let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
+            self.flows.push(None);
             self.finished.insert(id, stats);
             self.completions.push_back((now, id));
             return id;
@@ -288,10 +384,17 @@ impl NetworkSim for FlitEngine {
         let width = self.topo.links[path[0]].width_bytes;
         let payload_flits = spec.bytes.max(1).div_ceil(width);
         let npackets = payload_flits.div_ceil(PACKET_FLITS);
-        self.flows.insert(
-            id,
-            FlowProgress { spec, injected_ns: now, hops: path.len() as u32, tails_left: npackets },
-        );
+        self.flows.push(Some(FlowProgress {
+            spec,
+            injected_ns: now,
+            hops: path.len() as u32,
+            tails_left: npackets,
+        }));
+        self.active_flows += 1;
+        if self.inject_q[spec.src].is_empty() {
+            self.pending_inputs[spec.src] += 1;
+        }
+        self.buffered += payload_flits;
         let mut remaining = payload_flits;
         for pkt in 0..npackets {
             let in_this = remaining.min(PACKET_FLITS);
@@ -318,15 +421,33 @@ impl NetworkSim for FlitEngine {
                 }
                 return None;
             }
-            if !self.network_busy() || self.ns(self.cycle) >= t {
+            if !self.network_busy() || self.ns(self.cycle) >= t || self.cycle == u64::MAX {
                 return None;
             }
-            self.step_cycle();
+            if !self.step_cycle() {
+                // Nothing moved: the switch state is frozen until the
+                // next in-flight arrival, so the intervening cycles are
+                // provably no-ops — jump over them (bounded by where the
+                // per-cycle loop would rest for this `t`).
+                match self.in_flight.front() {
+                    Some(&(arr, _, _)) if arr > self.cycle + 1 => {
+                        self.cycle = (arr - 1).min(self.first_cycle_at(t));
+                    }
+                    Some(_) => {} // arrival due next cycle: nothing to skip
+                    None => {
+                        // Hard-blocked with nothing in flight: no state
+                        // change is possible before new injections.
+                        // Consume the requested horizon and yield.
+                        self.cycle = self.first_cycle_at(t);
+                        return None;
+                    }
+                }
+            }
         }
     }
 
     fn has_active(&self) -> bool {
-        !self.flows.is_empty() || !self.completions.is_empty()
+        self.active_flows > 0 || !self.completions.is_empty()
     }
 
     fn stats(&self, id: FlowId) -> Option<FlowStats> {
@@ -334,11 +455,15 @@ impl NetworkSim for FlitEngine {
     }
 
     fn comm_energy_pj(&self) -> f64 {
-        self.total_energy_pj
+        self.energy.total_pj()
     }
 
     fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)> {
-        std::mem::take(&mut self.energy_events)
+        self.energy.drain()
+    }
+
+    fn set_energy_bin_ns(&mut self, bin_ns: TimeNs) {
+        self.energy.set_bin_ns(bin_ns);
     }
 
     fn work_done(&self) -> u64 {
@@ -353,12 +478,304 @@ impl NetworkSim for FlitEngine {
     }
 }
 
+/// The pre-rewrite dense-scan engine, kept verbatim (modulo the shared
+/// `cycle_of` rounding fix) as the semantic reference for the
+/// differential harness: every cycle it re-derives each router's input
+/// list from the full link list and examines every link, and it books one
+/// energy event per flit-hop.  O(cycles × links²) — test-only.
+#[cfg(test)]
+mod reference {
+    use super::*;
+
+    pub struct RefFlitEngine {
+        topo: Topology,
+        ports: Vec<InPort>,
+        inject_q: Vec<VecDeque<Flit>>,
+        bound: Vec<Option<(InputRef, FlowId, u64)>>,
+        rr: Vec<usize>,
+        in_flight: VecDeque<(u64, usize, Flit)>,
+        flows: HashMap<FlowId, FlowProgress>,
+        finished: HashMap<FlowId, FlowStats>,
+        completions: VecDeque<(TimeNs, FlowId)>,
+        next_flow_id: FlowId,
+        cycle: u64,
+        energy_events: Vec<(usize, TimeNs, f64)>,
+        total_energy_pj: f64,
+        work: u64,
+        link_busy_cycles: Vec<u64>,
+    }
+
+    impl RefFlitEngine {
+        pub fn with_buffer_depth(topo: Topology, buf_flits: usize) -> Self {
+            let depth = buf_flits.max(1);
+            let nlinks = topo.links.len();
+            let nnodes = topo.num_nodes;
+            RefFlitEngine {
+                ports: (0..nlinks).map(|_| InPort::new(depth)).collect(),
+                inject_q: vec![VecDeque::new(); nnodes],
+                bound: vec![None; nlinks],
+                rr: vec![0; nlinks],
+                in_flight: VecDeque::new(),
+                topo,
+                flows: HashMap::new(),
+                finished: HashMap::new(),
+                completions: VecDeque::new(),
+                next_flow_id: 0,
+                cycle: 0,
+                energy_events: Vec::new(),
+                total_energy_pj: 0.0,
+                work: 0,
+                link_busy_cycles: vec![0; nlinks],
+            }
+        }
+
+        fn ns(&self, cycle: u64) -> TimeNs {
+            (cycle as f64 * self.topo.cycle_ns).round() as TimeNs
+        }
+
+        fn cycle_of(&self, t: TimeNs) -> u64 {
+            let mut c = (t as f64 / self.topo.cycle_ns).ceil() as u64;
+            while c > 0 && self.ns(c - 1) >= t {
+                c -= 1;
+            }
+            while c < u64::MAX && self.ns(c) < t {
+                c += 1;
+            }
+            c
+        }
+
+        fn route_out(&self, node: usize, dst: usize) -> Option<usize> {
+            if node == dst {
+                None
+            } else {
+                Some(self.topo.route[node][dst])
+            }
+        }
+
+        /// Candidate inputs of router `node`, rebuilt from scratch —
+        /// the allocation pattern the active-set rewrite removed.
+        fn inputs_of(&self, node: usize) -> Vec<InputRef> {
+            let mut v: Vec<InputRef> = self
+                .topo
+                .links
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.dst == node)
+                .map(|(i, _)| InputRef::Link(i))
+                .collect();
+            v.push(InputRef::Local(node));
+            v
+        }
+
+        fn front(&self, input: InputRef) -> Option<&Flit> {
+            match input {
+                InputRef::Link(l) => self.ports[l].buf.front(),
+                InputRef::Local(n) => self.inject_q[n].front(),
+            }
+        }
+
+        fn pop(&mut self, input: InputRef) -> Flit {
+            match input {
+                InputRef::Link(l) => {
+                    let f = self.ports[l].buf.pop_front().unwrap();
+                    self.ports[l].credits += 1;
+                    f
+                }
+                InputRef::Local(n) => self.inject_q[n].pop_front().unwrap(),
+            }
+        }
+
+        fn step_cycle(&mut self) -> bool {
+            let mut moved = false;
+            self.cycle += 1;
+            let now_ns = self.ns(self.cycle);
+
+            while let Some(&(arr, link, flit)) = self.in_flight.front() {
+                if arr > self.cycle {
+                    break;
+                }
+                self.in_flight.pop_front();
+                let node = self.topo.links[link].dst;
+                if flit.dst == node {
+                    self.ports[link].credits += 1;
+                    if flit.is_tail {
+                        self.finish_packet(flit, now_ns);
+                    }
+                } else {
+                    self.ports[link].buf.push_back(flit);
+                }
+                moved = true;
+            }
+
+            for link in 0..self.topo.links.len() {
+                if self.bound[link].is_none() {
+                    let node = self.topo.links[link].src;
+                    let inputs = self.inputs_of(node);
+                    let start = self.rr[link] % inputs.len();
+                    for k in 0..inputs.len() {
+                        let input = inputs[(start + k) % inputs.len()];
+                        if let Some(f) = self.front(input) {
+                            if f.is_head && self.route_out(node, f.dst) == Some(link) {
+                                self.bound[link] = Some((input, f.flow, f.pkt));
+                                self.rr[link] = (start + k + 1) % inputs.len();
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some((input, flow, pkt)) = self.bound[link] {
+                    let ready =
+                        matches!(self.front(input), Some(f) if f.flow == flow && f.pkt == pkt);
+                    if ready {
+                        let downstream_dst = self.topo.links[link].dst;
+                        let f = *self.front(input).unwrap();
+                        let will_eject = f.dst == downstream_dst;
+                        if will_eject || self.ports[link].credits > 0 {
+                            let f = self.pop(input);
+                            if !will_eject {
+                                self.ports[link].credits -= 1;
+                            }
+                            let arrival = self.cycle + self.topo.hop_latency_cycles.max(1);
+                            self.in_flight.push_back((arrival, link, f));
+                            let l = &self.topo.links[link];
+                            let pj = l.width_bytes as f64 * l.e_per_byte_pj;
+                            self.energy_events.push((l.src, now_ns, pj));
+                            self.total_energy_pj += pj;
+                            self.work += l.width_bytes;
+                            self.link_busy_cycles[link] += 1;
+                            if f.is_tail {
+                                self.bound[link] = None;
+                            }
+                            moved = true;
+                        }
+                    }
+                }
+            }
+            moved
+        }
+
+        fn finish_packet(&mut self, tail: Flit, now_ns: TimeNs) {
+            let done = {
+                let fp = self.flows.get_mut(&tail.flow).expect("tail for unknown flow");
+                fp.tails_left -= 1;
+                fp.tails_left == 0
+            };
+            if done {
+                let fp = self.flows.remove(&tail.flow).unwrap();
+                let stats = FlowStats {
+                    spec: fp.spec,
+                    injected_ns: fp.injected_ns,
+                    completed_ns: now_ns,
+                    hops: fp.hops,
+                };
+                self.finished.insert(tail.flow, stats);
+                self.completions.push_back((now_ns, tail.flow));
+            }
+        }
+
+        fn network_busy(&self) -> bool {
+            !self.in_flight.is_empty()
+                || self.ports.iter().any(|p| !p.buf.is_empty())
+                || self.inject_q.iter().any(|q| !q.is_empty())
+        }
+    }
+
+    impl NetworkSim for RefFlitEngine {
+        fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId {
+            let id = self.next_flow_id;
+            self.next_flow_id += 1;
+            let inj_cycle = self.cycle_of(now);
+            if !self.network_busy() && inj_cycle > self.cycle {
+                self.cycle = inj_cycle;
+            }
+            let path = self.topo.path(spec.src, spec.dst);
+            if path.is_empty() {
+                let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
+                self.finished.insert(id, stats);
+                self.completions.push_back((now, id));
+                return id;
+            }
+            let width = self.topo.links[path[0]].width_bytes;
+            let payload_flits = spec.bytes.max(1).div_ceil(width);
+            let npackets = payload_flits.div_ceil(PACKET_FLITS);
+            self.flows.insert(
+                id,
+                FlowProgress {
+                    spec,
+                    injected_ns: now,
+                    hops: path.len() as u32,
+                    tails_left: npackets,
+                },
+            );
+            let mut remaining = payload_flits;
+            for pkt in 0..npackets {
+                let in_this = remaining.min(PACKET_FLITS);
+                remaining -= in_this;
+                for k in 0..in_this {
+                    self.inject_q[spec.src].push_back(Flit {
+                        flow: id,
+                        pkt,
+                        is_head: k == 0,
+                        is_tail: k == in_this - 1,
+                        dst: spec.dst,
+                    });
+                }
+            }
+            id
+        }
+
+        fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion> {
+            loop {
+                if let Some(&(ct, _)) = self.completions.front() {
+                    if ct <= t {
+                        let (time, id) = self.completions.pop_front().unwrap();
+                        return Some(FlowCompletion { id, time });
+                    }
+                    return None;
+                }
+                if !self.network_busy() || self.ns(self.cycle) >= t {
+                    return None;
+                }
+                self.step_cycle();
+            }
+        }
+
+        fn has_active(&self) -> bool {
+            !self.flows.is_empty() || !self.completions.is_empty()
+        }
+
+        fn stats(&self, id: FlowId) -> Option<FlowStats> {
+            self.finished.get(&id).copied()
+        }
+
+        fn comm_energy_pj(&self) -> f64 {
+            self.total_energy_pj
+        }
+
+        fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)> {
+            std::mem::take(&mut self.energy_events)
+        }
+
+        fn work_done(&self) -> u64 {
+            self.work
+        }
+
+        fn link_busy_ns(&self) -> Vec<TimeNs> {
+            self.link_busy_cycles
+                .iter()
+                .map(|&c| (c as f64 * self.topo.cycle_ns).round() as TimeNs)
+                .collect()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::LinkParams;
     use crate::noc::engine::PacketEngine;
-    use crate::noc::topology::mesh;
+    use crate::noc::topology::{custom, mesh};
+    use crate::util::rng::Rng;
 
     fn flit_engine(rows: usize, cols: usize) -> FlitEngine {
         FlitEngine::new(mesh(rows, cols, &LinkParams::default()))
@@ -451,5 +868,237 @@ mod tests {
         let done = complete_all(&mut e);
         assert_eq!(done.len(), 12);
         assert!(!e.has_active());
+    }
+
+    #[test]
+    fn cycle_skipping_crosses_long_gaps_cheaply() {
+        // A flow injected after a huge idle gap, then another one later:
+        // both must complete with small latencies and the engine must not
+        // spin through the gap (this test would take minutes per-cycle).
+        let mut e = flit_engine(1, 2);
+        let a = e.inject(FlowSpec { src: 0, dst: 1, bytes: 512 }, 0);
+        assert!(e.advance_until(10_000).is_some());
+        let b = e.inject(FlowSpec { src: 0, dst: 1, bytes: 512 }, 40_000_000_000);
+        let c = e.advance_until(TimeNs::MAX).unwrap();
+        assert_eq!(c.id, b);
+        assert!(e.stats(a).unwrap().latency_ns() < 100);
+        assert!(e.stats(b).unwrap().latency_ns() < 100);
+        assert!(e.stats(b).unwrap().completed_ns >= 40_000_000_000);
+    }
+
+    #[test]
+    fn ns_and_cycle_of_agree_on_the_boundary() {
+        // For any clock, cycle_of(t) is the first cycle whose ns() stamp
+        // reaches t — never one early (the round-vs-ceil asymmetry).
+        for ghz in [1.0, 0.5, 2.0, 3.0, 0.8, 1.6] {
+            let p = LinkParams { clock_ghz: ghz, ..LinkParams::default() };
+            let e = FlitEngine::new(mesh(1, 2, &p));
+            for t in 0..500u64 {
+                let c = e.cycle_of(t);
+                assert!(
+                    e.ns(c) >= t,
+                    "ghz={ghz} t={t}: cycle_of={c} stamps at {} (< t: one cycle early)",
+                    e.ns(c)
+                );
+                if c > 0 {
+                    assert!(
+                        e.ns(c - 1) < t,
+                        "ghz={ghz} t={t}: cycle_of={c} is not minimal (ns({})={})",
+                        c - 1,
+                        e.ns(c - 1)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn injection_timestamps_never_precede_injection() {
+        // Non-integer cycle_ns (1.6 GHz -> 0.625 ns/cy): a flow injected
+        // at an off-grid time must not complete with a stamp implying it
+        // started a cycle early.
+        let p = LinkParams { clock_ghz: 1.6, ..LinkParams::default() };
+        for t in [1u64, 3, 7, 13, 101, 1_001, 99_999] {
+            let mut e = FlitEngine::new(mesh(1, 2, &p));
+            let id = e.inject(FlowSpec { src: 0, dst: 1, bytes: 64 }, t);
+            complete_all(&mut e);
+            let s = e.stats(id).unwrap();
+            assert!(s.completed_ns >= s.injected_ns, "t={t}: {s:?}");
+        }
+    }
+
+    // ---------------------------------------------- differential harness
+
+    /// A pre-generated drive schedule, replayed identically on both
+    /// engines.
+    #[derive(Debug, Clone)]
+    enum Op {
+        Inject(FlowSpec, TimeNs),
+        Advance(TimeNs),
+    }
+
+    fn run_script(e: &mut dyn NetworkSim, script: &[Op]) -> Vec<(FlowId, TimeNs)> {
+        let mut out = Vec::new();
+        for op in script {
+            match *op {
+                Op::Inject(spec, at) => {
+                    e.inject(spec, at);
+                }
+                Op::Advance(t) => {
+                    while let Some(c) = e.advance_until(t) {
+                        out.push((c.id, c.time));
+                    }
+                }
+            }
+        }
+        // Drain to completion.
+        while let Some(c) = e.advance_until(TimeNs::MAX) {
+            out.push((c.id, c.time));
+        }
+        out
+    }
+
+    /// Random script: monotone injection times with bounded advances in
+    /// between (exercising fast-forward, bounded advancement, and the
+    /// cycle-skip path).
+    fn random_script(rng: &mut Rng, nodes: usize, nflows: usize) -> Vec<Op> {
+        let mut script = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..nflows {
+            t += rng.below(30_000);
+            let src = rng.below_usize(nodes);
+            // dst may equal src (empty-path flows complete instantly).
+            let dst = rng.below_usize(nodes);
+            let bytes = 1 + rng.below(16_384);
+            script.push(Op::Inject(FlowSpec { src, dst, bytes }, t));
+            if rng.below(3) == 0 {
+                script.push(Op::Advance(t + rng.below(5_000)));
+            }
+        }
+        script
+    }
+
+    fn assert_engines_match(
+        mut new_engine: FlitEngine,
+        mut ref_engine: reference::RefFlitEngine,
+        script: &[Op],
+        label: &str,
+    ) {
+        let got = run_script(&mut new_engine, script);
+        let want = run_script(&mut ref_engine, script);
+        assert_eq!(got, want, "{label}: completion sequences diverge");
+        for &(id, _) in &want {
+            assert_eq!(
+                new_engine.stats(id),
+                ref_engine.stats(id),
+                "{label}: FlowStats diverge for flow {id}"
+            );
+        }
+        assert_eq!(
+            new_engine.comm_energy_pj().to_bits(),
+            ref_engine.comm_energy_pj().to_bits(),
+            "{label}: energy totals diverge ({} vs {})",
+            new_engine.comm_energy_pj(),
+            ref_engine.comm_energy_pj()
+        );
+        assert_eq!(
+            new_engine.work_done(),
+            ref_engine.work_done(),
+            "{label}: work diverges"
+        );
+        assert_eq!(
+            new_engine.link_busy_ns(),
+            ref_engine.link_busy_ns(),
+            "{label}: link busy accounting diverges"
+        );
+        // Coalesced events must sum to the reference's per-hop events.
+        let sum = |ev: Vec<(usize, TimeNs, f64)>| -> f64 {
+            ev.into_iter().map(|(_, _, pj)| pj).sum()
+        };
+        let a = sum(new_engine.drain_energy_events());
+        let b = sum(ref_engine.drain_energy_events());
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+            "{label}: drained energy diverges: {a} vs {b}"
+        );
+    }
+
+    #[test]
+    fn differential_randomized_meshes_match_reference() {
+        for seed in 0..6u64 {
+            let mut rng = Rng::new(0xF117 + seed);
+            let rows = 2 + rng.below_usize(3);
+            let cols = 2 + rng.below_usize(3);
+            let depth = [1, 2, 4, 8, 16][rng.below_usize(5)];
+            let nflows = 2 + rng.below_usize(9);
+            let p = LinkParams::default();
+            let topo = mesh(rows, cols, &p);
+            let script = random_script(&mut rng, rows * cols, nflows);
+            assert_engines_match(
+                FlitEngine::with_buffer_depth(topo.clone(), depth),
+                reference::RefFlitEngine::with_buffer_depth(topo, depth),
+                &script,
+                &format!("mesh {rows}x{cols} depth={depth} seed={seed}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_non_integer_clock_matches_reference() {
+        // 1.6 GHz and 3 GHz clocks: the ns/cycle_of rounding interplay
+        // must stay identical through fast-forward and cycle skips.
+        for (seed, ghz) in [(0u64, 1.6f64), (1, 3.0), (2, 0.8)] {
+            let mut rng = Rng::new(0xC10C + seed);
+            let p = LinkParams { clock_ghz: ghz, ..LinkParams::default() };
+            let topo = mesh(2, 3, &p);
+            let script = random_script(&mut rng, 6, 8);
+            assert_engines_match(
+                FlitEngine::new(topo.clone()),
+                reference::RefFlitEngine::with_buffer_depth(topo, 8),
+                &script,
+                &format!("clock {ghz} GHz seed={seed}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_custom_line_matches_reference() {
+        // A long line stresses wormhole chaining across many hops, and a
+        // tiny buffer stresses credit stalls (the cycle-skip trigger).
+        let mut rng = Rng::new(0x11E);
+        let p = LinkParams::default();
+        let topo = custom(7, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 6)], &p);
+        for depth in [1usize, 2, 8] {
+            let script = random_script(&mut rng, 7, 8);
+            assert_engines_match(
+                FlitEngine::with_buffer_depth(topo.clone(), depth),
+                reference::RefFlitEngine::with_buffer_depth(topo.clone(), depth),
+                &script,
+                &format!("line depth={depth}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_bursty_same_destination_matches_reference() {
+        // Hot-spot traffic: everything converges on one corner, maximizing
+        // allocation contention and rr-pointer churn.
+        let p = LinkParams::default();
+        let topo = mesh(3, 3, &p);
+        let mut script = Vec::new();
+        for i in 0..8usize {
+            script.push(Op::Inject(
+                FlowSpec { src: i, dst: 8, bytes: 2_048 + 512 * i as u64 },
+                (i as u64) * 7,
+            ));
+        }
+        script.push(Op::Advance(100));
+        script.push(Op::Advance(1_000));
+        assert_engines_match(
+            FlitEngine::new(topo.clone()),
+            reference::RefFlitEngine::with_buffer_depth(topo, 8),
+            &script,
+            "hot-spot 3x3",
+        );
     }
 }

@@ -11,10 +11,13 @@
 //! * [`engine::PacketEngine`] — event-driven virtual-cut-through model at
 //!   packet (16-flit) granularity: per-link FIFO serialization, cut-through
 //!   pipelining across hops, heterogeneous link widths/clocks.  Default —
-//!   fast enough for the full 50-model experiments.
+//!   fastest, coarsest contention model.
 //! * [`flit::FlitEngine`] — cycle-driven wormhole model with per-port
-//!   input buffers, credit flow control and round-robin switch allocation.
-//!   Used for validation and small runs (`--noc flit`).
+//!   input buffers, credit flow control and round-robin switch allocation
+//!   (`--noc flit`).  Production-fast: an active-set scheduler touches
+//!   only routers that can move and idle stretches are cycle-skipped, so
+//!   its cost scales with traffic, not with `cycles × links` — pick it
+//!   whenever per-flit arbitration accuracy matters, at any system size.
 //!
 //! Both implement [`NetworkSim`], the interface the Global Manager drives
 //! in lockstep with the global event queue.
@@ -44,7 +47,7 @@ pub struct FlowCompletion {
 }
 
 /// Per-flow statistics retained after completion.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlowStats {
     pub spec: FlowSpec,
     pub injected_ns: TimeNs,
@@ -80,6 +83,12 @@ pub trait NetworkSim {
     /// Drain (node, time, energy_pj) events accumulated since last call —
     /// consumed by the power tracker at 1 µs bins.
     fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)>;
+    /// Hint the granularity at which drained energy events are consumed.
+    /// Engines may coalesce per-hop energy into one event per (node, bin)
+    /// — the Global Manager passes its power-tracker bin so the binned
+    /// profile is unchanged while the event list shrinks by orders of
+    /// magnitude.  Default: ignored (per-hop events).
+    fn set_energy_bin_ns(&mut self, _bin_ns: TimeNs) {}
     /// Sum of flit-hops (or byte-hops) simulated — throughput metric.
     fn work_done(&self) -> u64;
     /// Cumulative busy time per link, ns (utilization = busy / span).
@@ -87,6 +96,71 @@ pub trait NetworkSim {
     /// analysis (Fig. 7 root-causing) and DSE reports.
     fn link_busy_ns(&self) -> Vec<TimeNs> {
         Vec::new()
+    }
+}
+
+/// Coalescing accumulator for (node, time, energy_pj) dynamic-energy
+/// events.
+///
+/// The flit engine books one event per flit-hop and the packet engine one
+/// per packet-hop; the consumer ([`crate::power::PowerTracker`]) only
+/// resolves them to `bin_ns` buckets anyway.  `EnergyLog` therefore folds
+/// every event that lands in the same (node, bin) as the node's previous
+/// event into that entry (timestamped at the bin start), instead of one
+/// heap entry per hop.  With the default `bin_ns = 1` coalescing only
+/// merges same-timestamp hops; engines inherit the real tracker bin via
+/// [`NetworkSim::set_energy_bin_ns`].  Totals are preserved exactly: the
+/// running `total_pj` adds per hop in booking order regardless of how
+/// entries coalesce.
+#[derive(Debug, Clone)]
+pub struct EnergyLog {
+    events: Vec<(usize, TimeNs, f64)>,
+    /// Index of each node's most recent entry in `events` (usize::MAX
+    /// when none since the last drain) — O(1) coalescing, no hashing.
+    last: Vec<usize>,
+    bin_ns: TimeNs,
+    total_pj: f64,
+}
+
+impl EnergyLog {
+    pub fn new(num_nodes: usize) -> EnergyLog {
+        EnergyLog { events: Vec::new(), last: vec![usize::MAX; num_nodes], bin_ns: 1, total_pj: 0.0 }
+    }
+
+    /// Set the coalescing granularity (clamped to >= 1 ns).
+    pub fn set_bin_ns(&mut self, bin_ns: TimeNs) {
+        self.bin_ns = bin_ns.max(1);
+    }
+
+    /// Book `pj` of dynamic energy at `node` at time `t`.
+    pub fn push(&mut self, node: usize, t: TimeNs, pj: f64) {
+        self.total_pj += pj;
+        let stamp = t - t % self.bin_ns;
+        if let Some(e) = self.events.get_mut(self.last[node]) {
+            if e.1 == stamp {
+                e.2 += pj;
+                return;
+            }
+        }
+        self.last[node] = self.events.len();
+        self.events.push((node, stamp, pj));
+    }
+
+    /// Take all pending events (each at most one per (node, bin) since
+    /// the previous drain, per node-consecutive booking).
+    pub fn drain(&mut self) -> Vec<(usize, TimeNs, f64)> {
+        self.last.fill(usize::MAX);
+        std::mem::take(&mut self.events)
+    }
+
+    /// Total energy booked so far (exact running sum, unaffected by
+    /// coalescing).
+    pub fn total_pj(&self) -> f64 {
+        self.total_pj
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.events.len()
     }
 }
 
@@ -113,5 +187,38 @@ impl LinkUtilization {
             .map(|(i, &v)| (i, v))
             .unwrap_or((0, 0.0));
         LinkUtilization { per_link, mean, peak, hottest }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_log_coalesces_within_a_bin_and_preserves_totals() {
+        let mut log = EnergyLog::new(3);
+        log.set_bin_ns(1_000);
+        log.push(0, 10, 1.0);
+        log.push(0, 900, 2.0); // same (node, bin) -> coalesces
+        log.push(1, 950, 4.0); // other node -> own entry
+        log.push(0, 1_010, 8.0); // next bin -> new entry
+        let ev = log.drain();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0], (0, 0, 3.0));
+        assert_eq!(ev[1], (1, 0, 4.0));
+        assert_eq!(ev[2], (0, 1_000, 8.0));
+        assert_eq!(log.total_pj(), 15.0);
+        // After a drain the node restarts a fresh entry even in-bin.
+        log.push(0, 1_020, 16.0);
+        assert_eq!(log.drain(), vec![(0, 1_000, 16.0)]);
+    }
+
+    #[test]
+    fn energy_log_default_bin_merges_only_identical_timestamps() {
+        let mut log = EnergyLog::new(1);
+        log.push(0, 5, 1.0);
+        log.push(0, 5, 1.0);
+        log.push(0, 6, 1.0);
+        assert_eq!(log.drain(), vec![(0, 5, 2.0), (0, 6, 1.0)]);
     }
 }

@@ -29,8 +29,13 @@ pub struct Link {
 pub struct Topology {
     pub num_nodes: usize,
     pub links: Vec<Link>,
-    /// Outgoing link indices per node.
+    /// Outgoing link indices per node, in ascending link-index order.
     pub out_links: Vec<Vec<usize>>,
+    /// Incoming link indices per node, in ascending link-index order.
+    /// Precomputed once so per-router input lists are O(degree) lookups;
+    /// the flit engine's switch allocator used to rebuild this by
+    /// scanning every link of the topology on every cycle.
+    pub in_links: Vec<Vec<usize>>,
     /// `route[src][dst]` = link index of the next hop (usize::MAX on diag).
     pub route: Vec<Vec<usize>>,
     /// `hop_table[src][dst]` = hop count of the routed path (0 on diag).
@@ -112,13 +117,16 @@ impl Topology {
 
     fn with_links(num_nodes: usize, links: Vec<Link>, p: &LinkParams) -> Topology {
         let mut out_links = vec![Vec::new(); num_nodes];
+        let mut in_links = vec![Vec::new(); num_nodes];
         for (i, l) in links.iter().enumerate() {
             out_links[l.src].push(i);
+            in_links[l.dst].push(i);
         }
         let mut t = Topology {
             num_nodes,
             links,
             out_links,
+            in_links,
             route: Vec::new(),
             hop_table: Vec::new(),
             cycle_ns: 1.0 / p.clock_ghz,
@@ -135,11 +143,9 @@ impl Topology {
 fn bfs_routes(t: &Topology) -> Vec<Vec<usize>> {
     let n = t.num_nodes;
     let mut route = vec![vec![usize::MAX; n]; n];
-    // Reverse adjacency: for BFS from destination over reversed edges.
-    let mut in_links = vec![Vec::new(); n];
-    for (i, l) in t.links.iter().enumerate() {
-        in_links[l.dst].push(i);
-    }
+    // BFS from each destination over reversed edges (precomputed
+    // `in_links` adjacency).
+    let in_links = &t.in_links;
     for dst in 0..n {
         let mut dist = vec![usize::MAX; n];
         dist[dst] = 0;
@@ -434,5 +440,24 @@ mod tests {
     #[should_panic]
     fn custom_rejects_out_of_range() {
         custom(2, &[(0, 5)], &p());
+    }
+
+    #[test]
+    fn adjacency_tables_match_link_list() {
+        for t in [mesh(4, 5, &p()), floret(4, 4, 4, &p()), ccd_star(6, &p())] {
+            for n in 0..t.num_nodes {
+                // Sorted ascending, and consistent with the link list.
+                assert!(t.in_links[n].windows(2).all(|w| w[0] < w[1]));
+                assert!(t.out_links[n].windows(2).all(|w| w[0] < w[1]));
+                for &l in &t.in_links[n] {
+                    assert_eq!(t.links[l].dst, n);
+                }
+                for &l in &t.out_links[n] {
+                    assert_eq!(t.links[l].src, n);
+                }
+            }
+            let in_total: usize = t.in_links.iter().map(|v| v.len()).sum();
+            assert_eq!(in_total, t.links.len());
+        }
     }
 }

@@ -292,7 +292,7 @@ impl Registry {
         ));
         reg.register(Scenario::new(
             "flit-validation",
-            "4x4 mesh at flit-level wormhole fidelity (validation runs)",
+            "4x4 mesh at flit-level wormhole fidelity (packet-vs-flit cross-check)",
             || hardware_preset("mesh", 4, 4, 0, 0).expect("builtin preset"),
             SimParams {
                 inferences_per_model: 2,
@@ -381,6 +381,51 @@ impl Registry {
                     .steady(None)
             },
         ));
+        // ---- flit-fidelity serving (active-set wormhole engine) ----
+        // The cycle-skipping flit engine makes per-flit arbitration
+        // affordable at serving scale; these presets mirror the packet
+        // ones at full wormhole fidelity.
+        let flit_serving_params = || SimParams {
+            pipelined: true,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            noc_fidelity: crate::config::NocFidelity::Flit,
+            ..SimParams::default()
+        };
+        reg.register(Scenario::traffic(
+            "traffic-poisson-flit",
+            "6x6 mesh serving a 1.5 krps Poisson CNN stream at flit-level wormhole fidelity",
+            || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+            flit_serving_params(),
+            |_seed| {
+                TrafficSpec::poisson(1_500.0)
+                    .horizon_ms(20.0)
+                    .warmup_ms(2.0)
+                    .window_ms(5.0)
+                    .slo_ms(2.0)
+                    .steady(None)
+            },
+        ));
+        reg.register(
+            Scenario::traffic(
+                "dtm-ceiling-flit",
+                "6x6 mesh with threshold DVFS at a 48 °C ceiling, flit-level NoI contention",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                flit_serving_params(),
+                |_seed| {
+                    TrafficSpec::poisson(2_000.0)
+                        .horizon_ms(15.0)
+                        .warmup_ms(2.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::threshold_band(47.0, 46.2, 48.0),
+            }),
+        );
         // ---- closed-loop DTM scenarios (see crate::dtm) ----
         // Control period 100 µs; one implicit-Euler step per window
         // (stride 0).  Temperatures over ms-scale horizons sit a few
@@ -641,6 +686,18 @@ mod tests {
         assert!(!batch.is_traffic());
         assert!(batch.traffic_spec(1).is_none());
         assert!(batch.run_traffic(1).is_err());
+    }
+
+    #[test]
+    fn flit_fidelity_presets_are_registered() {
+        use crate::config::NocFidelity;
+        let reg = Registry::builtin();
+        let poisson = reg.get("traffic-poisson-flit").expect("flit traffic preset");
+        assert!(poisson.is_traffic());
+        assert_eq!(poisson.params().noc_fidelity, NocFidelity::Flit);
+        let dtm = reg.get("dtm-ceiling-flit").expect("flit dtm preset");
+        assert!(dtm.is_dtm());
+        assert_eq!(dtm.params().noc_fidelity, NocFidelity::Flit);
     }
 
     #[test]

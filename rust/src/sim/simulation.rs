@@ -365,7 +365,9 @@ impl SimulationBuilder {
 
     /// Convenience: select one of the built-in NoI fidelities (wins over
     /// `params.noc_fidelity` regardless of call order; replaces any
-    /// custom `network` factory).
+    /// custom `network` factory).  Both fidelities scale to full
+    /// serving-size runs: `Flit` costs per flit-hop actually simulated
+    /// (active-set + cycle skipping), not per cycle × link.
     pub fn network_fidelity(mut self, fidelity: NocFidelity) -> Self {
         self.fidelity = Some(fidelity);
         self.network = None;
@@ -710,6 +712,10 @@ impl Simulation {
         let mut free_slots: Vec<usize> = Vec::new();
         let mut stop_requested = false;
         let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
+        // Hop energy is only ever consumed at power-bin granularity, so
+        // let the engine coalesce its event stream to the tracker's bin
+        // (one entry per (node, bin) instead of one per flit/packet hop).
+        net.set_energy_bin_ns(self.params.power_bin_ns);
         let mut power = PowerTracker::new(self.hw.num_chiplets(), self.params.power_bin_ns);
         // Thermal coupling: Native/Auto attach an incremental stepper to
         // the sink's drain path (post-mortem trajectory over the whole
@@ -875,17 +881,19 @@ impl Simulation {
                     heat_weight_hops: self.params.thermal_aware_hops,
                 };
                 loop {
+                    // Probe and commit in one pass: the mapper journals
+                    // its allocations on the live ledger and rolls back on
+                    // failure, so a successful probe *is* the mapping — no
+                    // speculative ledger clone, no second placement pass.
+                    let mut probed: Option<ModelMapping> = None;
                     let taken = arb.take_next_mappable($t, |req| {
                         let model = model_of(req.kind);
-                        let mut probe = ledger.clone();
-                        self.mapper.try_map(&ctx, &model, &mut probe).is_some()
+                        probed = self.mapper.try_map(&ctx, &model, &mut ledger);
+                        probed.is_some()
                     });
                     let Some(req) = taken else { break };
                     let model = model_of(req.kind);
-                    let mapping = self
-                        .mapper
-                        .try_map(&ctx, &model, &mut ledger)
-                        .expect("probe said it fits");
+                    let mapping = probed.take().expect("probe said it fits");
                     // Batched compute evaluation (one backend call per model).
                     let mut items = Vec::new();
                     for layer in mapping.layers.iter() {
@@ -905,8 +913,9 @@ impl Simulation {
                     // Reuse a retired slot when streaming; append otherwise.
                     let inst_id = free_slots.pop().unwrap_or(instances.len());
                     notify!(on_model_mapped(req.id, req.kind, $t));
+                    let inferences = req.inferences;
                     let mut inst = Instance {
-                        req: req.clone(),
+                        req,
                         model,
                         mapping,
                         results,
@@ -915,7 +924,7 @@ impl Simulation {
                         weight_flows: 0,
                         inflows: HashMap::new(),
                         comm_start: HashMap::new(),
-                        comm_ns: vec![0.0; req.inferences as usize],
+                        comm_ns: vec![0.0; inferences as usize],
                         inference_latency: Vec::new(),
                         inference_start: HashMap::new(),
                         finished: false,

@@ -7,10 +7,12 @@
 //!     bench target regenerates, and can dump them as JSON for
 //!     EXPERIMENTS.md bookkeeping.
 //!
-//! When the `CHIPSIM_BENCH_JSON` environment variable names a directory,
-//! every [`bench`] call additionally writes its result there as
-//! `BENCH_<case>.json`, so CI can upload the bench trajectory as a
-//! workflow artifact instead of scraping stdout.
+//! Every [`bench`] call writes its result as `BENCH_<case>.json` into
+//! [`bench_json_dir`] — the repo root by default (committed baselines
+//! form the perf trajectory), or the directory named by the
+//! `CHIPSIM_BENCH_JSON` environment variable (CI writes fresh results to
+//! a scratch dir there and compares them against the committed baselines
+//! with `python/bench_check.py`).
 
 use std::time::Instant;
 
@@ -23,6 +25,9 @@ pub struct BenchResult {
     pub p50_ns: f64,
     pub p95_ns: f64,
     pub min_ns: f64,
+    /// Derived throughput metrics (e.g. `flit_hops_per_s`) carried into
+    /// the JSON artifact for regression checks.
+    pub metrics: Vec<(String, f64)>,
 }
 
 impl BenchResult {
@@ -39,6 +44,13 @@ impl BenchResult {
         slug.trim_matches('_').to_string()
     }
 
+    /// Attach a derived metric (returns self for chaining); re-save with
+    /// [`save_json`](Self::save_json) to persist it into the artifact.
+    pub fn with_metric(mut self, name: &str, value: f64) -> Self {
+        self.metrics.push((name.to_string(), value));
+        self
+    }
+
     /// Machine-readable form of one timed case.
     pub fn to_json(&self) -> crate::util::json::Value {
         use crate::util::json::Value;
@@ -49,6 +61,15 @@ impl BenchResult {
             ("p50_ns", self.p50_ns.into()),
             ("p95_ns", self.p95_ns.into()),
             ("min_ns", self.min_ns.into()),
+            (
+                "metrics",
+                Value::obj(
+                    self.metrics
+                        .iter()
+                        .map(|(k, v)| (k.as_str(), Value::from(*v)))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -86,6 +107,17 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Directory `BENCH_<case>.json` artifacts are written to: the value of
+/// `CHIPSIM_BENCH_JSON` when set and non-empty, otherwise the current
+/// directory (`cargo bench` runs from the workspace root, so results land
+/// next to the committed baselines and the perf trajectory tracks in git).
+pub fn bench_json_dir() -> String {
+    match std::env::var("CHIPSIM_BENCH_JSON") {
+        Ok(dir) if !dir.is_empty() => dir,
+        _ => ".".to_string(),
+    }
+}
+
 /// Time `f` for at least `min_iters` iterations and `min_time_ms`
 /// milliseconds after one warmup call.  Returns stats over per-iter times.
 pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: F) -> BenchResult {
@@ -110,12 +142,13 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: 
         p50_ns: pct(0.5),
         p95_ns: pct(0.95),
         min_ns: samples[0],
+        metrics: Vec::new(),
     };
-    if let Ok(dir) = std::env::var("CHIPSIM_BENCH_JSON") {
-        if !dir.is_empty() {
-            if let Err(e) = result.save_json(&dir) {
-                eprintln!("benchkit: could not write BENCH json into {dir}: {e:#}");
-            }
+    // Unit tests exercise the stats path without littering artifacts.
+    if !cfg!(test) {
+        let dir = bench_json_dir();
+        if let Err(e) = result.save_json(&dir) {
+            eprintln!("benchkit: could not write BENCH json into {dir}: {e:#}");
         }
     }
     result
@@ -252,7 +285,9 @@ mod tests {
             p50_ns: 1200.0,
             p95_ns: 1500.0,
             min_ns: 1100.0,
-        };
+            metrics: Vec::new(),
+        }
+        .with_metric("flit_hops_per_s", 2.5e7);
         assert_eq!(r.case_slug(), "noc_packet_200_flows_x_64KB_on_10x10_mesh");
         let dir = std::env::temp_dir().join("chipsim-benchkit-test");
         let path = r.save_json(dir.to_str().unwrap()).unwrap();
@@ -261,6 +296,8 @@ mod tests {
             crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("iters").unwrap().as_usize().unwrap(), 12);
         assert!((parsed.get("mean_ns").unwrap().as_f64().unwrap() - 1234.5).abs() < 1e-9);
+        let m = parsed.get("metrics").unwrap();
+        assert!((m.get("flit_hops_per_s").unwrap().as_f64().unwrap() - 2.5e7).abs() < 1.0);
         let _ = std::fs::remove_file(path);
     }
 }

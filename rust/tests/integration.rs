@@ -179,6 +179,62 @@ fn dropped_models_are_reported_not_lost() {
 }
 
 #[test]
+fn packet_and_flit_agree_on_uncontended_latency_and_contended_ranking() {
+    // Post-rewrite regression guard: the active-set flit engine must
+    // still (a) match the packet engine on uncontended latency to within
+    // the router-pipeline approximation, and (b) rank contended flows
+    // identically.
+    use chipsim::config::LinkParams;
+    use chipsim::noc::engine::PacketEngine;
+    use chipsim::noc::flit::FlitEngine;
+    use chipsim::noc::topology::mesh;
+    use chipsim::noc::{FlowSpec, NetworkSim};
+
+    // (a) Uncontended: one flow at a time across sizes and hop counts.
+    for (hops, bytes) in [(1usize, 512u64), (3, 4_096), (5, 32_768)] {
+        let topo = mesh(1, hops + 1, &LinkParams::default());
+        let mut fe = FlitEngine::new(topo.clone());
+        let fid = fe.inject(FlowSpec { src: 0, dst: hops, bytes }, 0);
+        while fe.advance_until(u64::MAX).is_some() {}
+        let mut pe = PacketEngine::new(topo);
+        let pid = pe.inject(FlowSpec { src: 0, dst: hops, bytes }, 0);
+        while pe.advance_until(u64::MAX).is_some() {}
+        let fl = fe.stats(fid).unwrap().latency_ns() as f64;
+        let pl = pe.stats(pid).unwrap().latency_ns() as f64;
+        let ratio = fl / pl;
+        assert!(
+            (0.5..=1.6).contains(&ratio),
+            "hops={hops} bytes={bytes}: flit {fl} vs packet {pl} (ratio {ratio})"
+        );
+    }
+
+    // (b) Contended: four flows over the same 0->3 path with strongly
+    // separated sizes, plus one flow on a disjoint row.  Latency ranking
+    // must be identical across fidelities.
+    let rank = |make: &dyn Fn(chipsim::noc::topology::Topology) -> Box<dyn NetworkSim>| {
+        let topo = mesh(2, 4, &LinkParams::default());
+        let mut e = make(topo);
+        let specs = [
+            FlowSpec { src: 0, dst: 3, bytes: 2_048 },
+            FlowSpec { src: 0, dst: 3, bytes: 16_384 },
+            FlowSpec { src: 0, dst: 3, bytes: 131_072 },
+            FlowSpec { src: 4, dst: 7, bytes: 8_192 }, // disjoint row
+        ];
+        let ids: Vec<_> = specs.iter().map(|&s| e.inject(s, 0)).collect();
+        while e.advance_until(u64::MAX).is_some() {}
+        let mut order: Vec<usize> = (0..ids.len()).collect();
+        order.sort_by_key(|&i| e.stats(ids[i]).unwrap().latency_ns());
+        order
+    };
+    let flit_order = rank(&|t| Box::new(FlitEngine::new(t)));
+    let packet_order = rank(&|t| Box::new(PacketEngine::new(t)));
+    assert_eq!(
+        flit_order, packet_order,
+        "contended flow ranking diverges between fidelities"
+    );
+}
+
+#[test]
 fn report_summary_renders() {
     let hw = HardwareConfig::homogeneous_mesh(4, 4);
     let report = sim(hw, params(false, 1))

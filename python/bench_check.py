@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Guard the NoC flit-engine throughput against perf regressions.
 
-Usage: bench_check.py <fresh_dir> <baseline_dir> [--factor 2.0]
+Usage: bench_check.py <fresh_dir> <baseline_dir> [--factor 1.5] [--enforce-measured]
 
 Compares the `flit_hops_per_s` metric of every `BENCH_noc_flit*.json`
 artifact produced by `cargo bench --bench perf_hotpaths` (written into
@@ -12,6 +12,11 @@ drops more than `factor` times below its baseline.
 The committed baselines double as the perf trajectory: rerunning the
 bench without CHIPSIM_BENCH_JSON overwrites them in place, so each commit
 records the numbers of its era.
+
+With --enforce-measured the gate refuses to run against baselines still
+stamped `"estimated": true` — an estimated baseline silently downgrades
+the check to advisory, which is exactly the regression this flag exists
+to prevent.  CI passes it, so the perf trajectory is actually enforced.
 """
 
 import argparse
@@ -39,8 +44,13 @@ def main():
     ap.add_argument(
         "--factor",
         type=float,
-        default=2.0,
-        help="fail when fresh throughput < baseline / factor (default 2.0)",
+        default=1.5,
+        help="fail when fresh throughput < baseline / factor (default 1.5)",
+    )
+    ap.add_argument(
+        "--enforce-measured",
+        action="store_true",
+        help="fail on baselines stamped 'estimated' instead of downgrading to advisory",
     )
     args = ap.parse_args()
 
@@ -56,6 +66,12 @@ def main():
         # not fail on it.  The first real `cargo bench` run rewrites the
         # file without the stamp, arming the gate.
         estimated = bool(base_doc.get("estimated"))
+        if estimated and args.enforce_measured:
+            failures.append(
+                f"{name}: baseline is stamped 'estimated' — the gate would be advisory; "
+                "refresh it from a measured CI bench-json artifact"
+            )
+            continue
         if base is None:
             failures.append(f"{name}: baseline has no '{METRIC}' metric")
             continue

@@ -1,0 +1,3 @@
+# Makes tests/ a package so pytest imports modules as tests.<name> and
+# the relative import in test_model.py (`from .test_kernel import ...`)
+# resolves.  Run from python/: `python -m pytest tests -q`.

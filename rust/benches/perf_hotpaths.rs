@@ -9,6 +9,7 @@
 //!   L3  mapper                  (models mapped/s on a busy ledger)
 //!   L3  end-to-end co-sim       (wall time per simulated model)
 //!   L3  streaming traffic       (requests/s through the serving engine)
+//!   L3  multi-tenant mix        (co-executed requests/s, 2 tenants sharing the NoI)
 //!   L3  closed-loop DTM         (control windows/s incl. in-loop thermal)
 //!   L2  native thermal step     (node-updates/s)
 //!   L2  PJRT thermal transient  (steps/s incl. dispatch overhead)
@@ -185,6 +186,52 @@ fn bench_traffic_steady_state() {
     );
 }
 
+fn bench_mix_coexecution() {
+    use chipsim::mapping::PlacementPolicy;
+    use chipsim::serving::mix::{run_mix, TenantSpec, WorkloadMix};
+    let hw = HardwareConfig::homogeneous_mesh(8, 8);
+    let params = SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        ..SimParams::default()
+    };
+    let mix = WorkloadMix::new(vec![
+        TenantSpec::poisson("a", ModelKind::ResNet18, 1_500.0).slo_ms(2.0),
+        TenantSpec::poisson("b", ModelKind::ResNet34, 1_500.0).slo_ms(2.0),
+    ])
+    .placement(PlacementPolicy::DisjointPartition)
+    .horizon_ms(10.0)
+    .warmup_ms(1.0)
+    .window_ms(2.0);
+    let mut served = 0u64;
+    let r = bench("mix: 2 tenants x 1.5 krps x 10 ms on 8x8 mesh", 2, 2000, || {
+        let report = run_mix(
+            || {
+                Simulation::builder()
+                    .hardware(hw.clone())
+                    .params(params.clone())
+                    .build()
+            },
+            &mix,
+            0x1117,
+        )
+        .unwrap();
+        served = report
+            .tenants
+            .iter()
+            .map(|t| t.stats.completed() + t.stats.warmup_skipped)
+            .sum();
+        std::hint::black_box(report.span_ns());
+    });
+    r.print();
+    println!(
+        "  -> {:.1} k co-executed requests/s of wall time ({} per run)",
+        served as f64 / (r.mean_ns / 1e9) / 1e3,
+        served
+    );
+}
+
 fn bench_dtm_closed_loop() {
     use chipsim::dtm::GovernorSpec;
     use chipsim::serving::{ArrivalSpec, TrafficSpec};
@@ -275,6 +322,7 @@ fn main() {
     bench_mapper();
     bench_end_to_end();
     bench_traffic_steady_state();
+    bench_mix_coexecution();
     bench_dtm_closed_loop();
     bench_native_thermal();
     bench_pjrt_thermal();

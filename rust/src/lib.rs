@@ -92,11 +92,11 @@ pub mod prelude {
         ChipletClass, HardwareConfig, LinkParams, NocFidelity, SimParams, TopologyKind,
         WorkloadConfig,
     };
-    pub use crate::mapping::{MapContext, Mapper, NearestNeighbor};
+    pub use crate::mapping::{MapContext, Mapper, NearestNeighbor, PlacementPolicy, TenantDemand};
     pub use crate::scenario::{Registry, Scenario, SweepOutcome, SweepRunner};
     pub use crate::serving::{
-        ArrivalSpec, LatencyHistogram, LoadSweep, ServingStats, SteadyState, StopReason,
-        TrafficReport, TrafficSpec,
+        ArrivalSpec, InterferenceMatrix, LatencyHistogram, LoadSweep, MixReport, ServingStats,
+        SteadyState, StopReason, TenantSpec, TrafficReport, TrafficSpec, WorkloadMix,
     };
     pub use crate::dtm::{
         DtmReport, DvfsState, DvfsTable, Governor, GovernorPolicy, GovernorSpec, SensorSpec,

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   run          generic co-simulation run with configurable system/workload
 //!   traffic      sustained open-loop serving run (p50/p99, goodput, SLO)
+//!   mix          multi-tenant co-execution (per-tenant SLOs, interference matrix)
 //!   dtm          closed-loop dynamic thermal management run / governor sweep
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
@@ -18,6 +19,8 @@
 //!   chipsim traffic --scenario traffic-poisson-mesh --rate 2000 --seed 7
 //!   chipsim traffic --rows 8 --cols 8 --arrivals burst --rate 3000 --pipelined
 //!   chipsim traffic --sweep --lo 500 --hi 8000       # saturation knee
+//!   chipsim mix --scenario mix-contended-interleaved --sweep interference
+//!   chipsim mix --tenants resnet18@1500,resnet50@400@5000 --placement disjoint
 //!   chipsim dtm --scenario dtm-thermal-ceiling --csv dtm.csv
 //!   chipsim dtm --rows 6 --cols 6 --pipelined --sweep  # governor tradeoff
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
@@ -37,7 +40,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|dtm|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|mix|dtm|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -59,6 +62,9 @@ fn help() -> HelpText {
             ("--horizon-ms/--warmup-ms/--window-ms", "traffic: run shape (default 50/5/5)"),
             ("--slo-ms S", "traffic: end-to-end latency SLO (default 1.0)"),
             ("--sweep --lo R0 --hi R1 [--iters N]", "traffic: bisect for the saturation knee"),
+            ("--tenants k@r[@slo_us],...", "mix: e.g. resnet18@1500,resnet50@400@5000"),
+            ("--placement disjoint|interleaved|greedy", "mix: placement (default disjoint)"),
+            ("mix --sweep interference", "mix: run tenants solo too; print the matrix"),
             ("--governor noop|threshold|pid", "dtm: DVFS policy (default threshold)"),
             ("--ceiling C", "dtm: thermal ceiling, °C (default 48)"),
             ("--dtm-window-us W", "dtm: control period, µs (default 100)"),
@@ -129,6 +135,11 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             "scenario '{name}' is a sustained-traffic scenario; its report is serving \
              stats, not per-model outcomes — run it with `chipsim traffic --scenario {name}`"
         );
+        anyhow::ensure!(
+            !sc.is_mix(),
+            "scenario '{name}' is a multi-tenant mix; its report is per-tenant serving \
+             stats — run it with `chipsim mix --scenario {name}`"
+        );
         let seed = args.get_u64("seed", sc.default_seed)?;
         sc.run(seed)?
     } else {
@@ -173,9 +184,17 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         })?;
         let seed = args.get_u64("seed", sc.default_seed)?;
         let spec = sc.traffic_spec(seed).ok_or_else(|| {
-            anyhow::anyhow!(
-                "scenario '{name}' is a batch scenario; run it with `chipsim run --scenario {name}`"
-            )
+            if sc.is_mix() {
+                anyhow::anyhow!(
+                    "scenario '{name}' is a multi-tenant mix; run it with \
+                     `chipsim mix --scenario {name}`"
+                )
+            } else {
+                anyhow::anyhow!(
+                    "scenario '{name}' is a batch scenario; run it with \
+                     `chipsim run --scenario {name}`"
+                )
+            }
         })?;
         let sc = sc.clone();
         (spec, seed, Box::new(move || sc.build()))
@@ -246,6 +265,124 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let report = make_sim()?.run_traffic_with(&spec, seed)?;
+    print!("{}", report.summary());
+    if let Some(path) = args.get("power-csv") {
+        let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
+        std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
+        println!("tail power trace written to {path}");
+    }
+    Ok(())
+}
+
+/// Multi-tenant co-execution: N tenants (model + arrival process + SLO
+/// each) share one chiplet system under a placement policy, so NoI
+/// contention, chiplet queueing, and memory pressure between them are
+/// simulated, not estimated.  `--sweep interference` additionally runs
+/// every tenant solo on its same placement and prints the interference
+/// matrix (solo vs co-located tail latency).
+fn cmd_mix(args: &Args) -> anyhow::Result<()> {
+    use chipsim::mapping::PlacementPolicy;
+    use chipsim::serving::mix::{run_mix, TenantSpec, WorkloadMix};
+    use chipsim::sim::ThermalSpec;
+    let reg = Registry::builtin();
+    // `--sweep interference` (also accepted: bare `--sweep`, `--sweep=interference`).
+    let sweep = if args.flag("sweep") || args.get("sweep").is_some() {
+        let kind = args
+            .get("sweep")
+            .map(|s| s.to_string())
+            .or_else(|| args.positionals.get(1).cloned())
+            .unwrap_or_else(|| "interference".to_string());
+        anyhow::ensure!(
+            kind == "interference",
+            "unknown mix sweep '{kind}' (expected: interference)"
+        );
+        true
+    } else {
+        false
+    };
+    let (hw, params, thermal, mix, seed) = if let Some(name) = args.get("scenario") {
+        let sc = reg.get(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+        })?;
+        // The preset fixes its tenants and run shape; flags that would
+        // override them are rejected, not silently eaten (--placement
+        // and --sweep deliberately remain live overrides).
+        for opt in [
+            "tenants", "horizon-ms", "warmup-ms", "window-ms", "slo-ms", "topo", "rows",
+            "cols", "noc", "compute", "hw",
+        ] {
+            anyhow::ensure!(
+                args.get(opt).is_none(),
+                "--{opt} conflicts with --scenario '{name}' (the scenario fixes it); \
+                 drop --scenario or use the generic mix flags alone"
+            );
+        }
+        let seed = args.get_u64("seed", sc.default_seed)?;
+        let mix = sc.mix_spec(seed).ok_or_else(|| {
+            anyhow::anyhow!(
+                "scenario '{name}' is not a multi-tenant mix; `chipsim scenarios` tags \
+                 mix presets with [mix]"
+            )
+        })?;
+        (sc.hardware(), sc.params(), sc.thermal().clone(), mix, seed)
+    } else {
+        let hw = build_hw(args)?;
+        let params = build_params(args)?;
+        let seed = args.get_u64("seed", params.seed)?;
+        let tenants_arg = args.get("tenants").ok_or_else(|| {
+            anyhow::anyhow!(
+                "mix needs --tenants kind@rate[@slo_us],... or --scenario mix-* \
+                 (see `chipsim scenarios`)"
+            )
+        })?;
+        let default_slo_ms = args.get_f64("slo-ms", 2.0)?;
+        let mut tenants = Vec::new();
+        for (idx, part) in tenants_arg.split(',').enumerate() {
+            let part = part.trim();
+            let fields: Vec<&str> = part.split('@').collect();
+            anyhow::ensure!(
+                fields.len() == 2 || fields.len() == 3,
+                "tenant '{part}': expected kind@rate[@slo_us]"
+            );
+            let kind = chipsim::workload::ModelKind::from_name(fields[0])
+                .ok_or_else(|| anyhow::anyhow!("tenant '{part}': unknown model '{}'", fields[0]))?;
+            let rate: f64 = fields[1]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("tenant '{part}': bad rate '{}': {e}", fields[1]))?;
+            let mut tenant = TenantSpec::poisson(&format!("{}-{idx}", fields[0]), kind, rate);
+            tenant = match fields.get(2) {
+                Some(slo) => tenant.slo_us(slo.parse().map_err(|e| {
+                    anyhow::anyhow!("tenant '{part}': bad slo_us '{slo}': {e}")
+                })?),
+                None => tenant.slo_ms(default_slo_ms),
+            };
+            tenants.push(tenant);
+        }
+        let mix = WorkloadMix::new(tenants)
+            .horizon_ms(args.get_f64("horizon-ms", 30.0)?)
+            .warmup_ms(args.get_f64("warmup-ms", 4.0)?)
+            .window_ms(args.get_f64("window-ms", 5.0)?);
+        (hw, params, ThermalSpec::Off, mix, seed)
+    };
+    let mix = match args.get("placement") {
+        Some(p) => mix.placement(PlacementPolicy::from_name(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown --placement '{p}' (disjoint|interleaved|greedy)")
+        })?),
+        None => mix,
+    };
+    let interference = sweep || mix.interference;
+    let mix = mix.interference(interference);
+    let report = run_mix(
+        || {
+            Simulation::builder()
+                .hardware(hw.clone())
+                .params(params.clone())
+                .thermal(thermal.clone())
+                .build()
+        },
+        &mix,
+        seed,
+    )?;
     print!("{}", report.summary());
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
@@ -395,6 +532,8 @@ fn cmd_scenarios() {
     for sc in reg.iter() {
         let tag = if sc.is_dtm() {
             "[dtm] "
+        } else if sc.is_mix() {
+            "[mix] "
         } else if sc.is_traffic() {
             "[traffic] "
         } else {
@@ -405,6 +544,7 @@ fn cmd_scenarios() {
     println!(
         "\nrun one:     chipsim run --scenario NAME [--seed S]\
          \nrun traffic: chipsim traffic --scenario NAME [--rate R] [--seed S]\
+         \nrun a mix:   chipsim mix --scenario NAME [--sweep interference] [--seed S]\
          \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]"
     );
 }
@@ -427,15 +567,19 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64()
     );
     for o in &outcomes {
-        let is_traffic = reg.get(&o.scenario).map(|s| s.is_traffic()).unwrap_or(false);
+        let (is_streaming, tag, cmd) = match reg.get(&o.scenario) {
+            Some(s) if s.is_mix() => (true, "[mix]", "mix"),
+            Some(s) if s.is_traffic() => (true, "[traffic]", "traffic"),
+            _ => (false, "", ""),
+        };
         match &o.result {
-            // Traffic scenarios stream in constant memory: the batch view
-            // shows span/energy only (per-model outcomes are not
-            // retained) — `chipsim traffic --scenario NAME` has the
-            // serving stats.
-            Ok(r) if is_traffic => println!(
-                "  {:<22} seed {:#018x}  [traffic] span {:.3} ms, {:.2} mJ \
-                 (serving stats: `chipsim traffic --scenario {}`)",
+            // Traffic and mix scenarios stream in constant memory: the
+            // batch view shows span/energy only (per-model outcomes are
+            // not retained) — `chipsim traffic|mix --scenario NAME` has
+            // the serving stats.
+            Ok(r) if is_streaming => println!(
+                "  {:<22} seed {:#018x}  {tag} span {:.3} ms, {:.2} mJ \
+                 (serving stats: `chipsim {cmd} --scenario {}`)",
                 o.scenario,
                 o.seed,
                 r.span_ns as f64 / 1e6,
@@ -546,6 +690,7 @@ fn main() -> anyhow::Result<()> {
     match cmd {
         "run" => cmd_run(&args)?,
         "traffic" => cmd_traffic(&args)?,
+        "mix" => cmd_mix(&args)?,
         "dtm" => cmd_dtm(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,

@@ -9,6 +9,15 @@
 //!
 //! [`MemoryLedger`] tracks per-chiplet weight-memory occupancy so the
 //! system state stays accurate across model map/unmap events.
+//!
+//! Multi-tenant co-execution adds a second dimension: [`placement`]
+//! computes per-tenant chiplet masks (disjoint partition, interleaved,
+//! greedy best-fit), and [`MapContext::allowed`] confines a request's
+//! segments to its tenant's mask.
+
+pub mod placement;
+
+pub use placement::{PlacementPolicy, TenantDemand};
 
 use crate::compute::SegmentWork;
 use crate::config::{ChipletClass, HardwareConfig};
@@ -187,6 +196,11 @@ pub struct MapContext<'a> {
     pub heat: Option<&'a [f64]>,
     /// Hops of locality the mapper may trade to avoid the hottest chiplet.
     pub heat_weight_hops: f64,
+    /// Per-chiplet placement mask of the requesting tenant: when `Some`,
+    /// every segment must land on a chiplet with `allowed[c] == true`
+    /// (multi-tenant placement, see [`placement`]).  `None` permits any
+    /// compute chiplet — the single-tenant behaviour.
+    pub allowed: Option<&'a [bool]>,
 }
 
 /// Pluggable mapping policy: how a model's layers land on chiplets.
@@ -229,6 +243,10 @@ impl Mapper for NearestNeighbor {
             Some(h) if ctx.heat_weight_hops > 0.0 => m.with_heat(h, ctx.heat_weight_hops),
             _ => m,
         };
+        let m = match ctx.allowed {
+            Some(mask) => m.with_allowed(mask),
+            None => m,
+        };
         m.try_map(model, ledger)
     }
 }
@@ -246,11 +264,19 @@ pub struct NearestNeighborMapper<'a> {
     heat: Option<Vec<f64>>,
     /// Hops of locality a mapper will trade to avoid the hottest chiplet.
     heat_weight_hops: f64,
+    /// Optional tenant placement mask: segments only land where `true`.
+    allowed: Option<&'a [bool]>,
 }
 
 impl<'a> NearestNeighborMapper<'a> {
     pub fn new(hw: &'a HardwareConfig, topo: &'a Topology) -> Self {
-        NearestNeighborMapper { hw, topo, heat: None, heat_weight_hops: 0.0 }
+        NearestNeighborMapper { hw, topo, heat: None, heat_weight_hops: 0.0, allowed: None }
+    }
+
+    /// Confine placement to the chiplets a tenant's mask allows.
+    pub fn with_allowed(mut self, mask: &'a [bool]) -> Self {
+        self.allowed = Some(mask);
+        self
     }
 
     /// Enable thermal-aware ranking: `heat` is normalized to [0, 1] and
@@ -272,7 +298,11 @@ impl<'a> NearestNeighborMapper<'a> {
     }
 
     fn mappable(&self, chiplet: usize) -> bool {
-        self.hw.chiplet_type(chiplet).class != ChipletClass::Io
+        let allowed = match self.allowed {
+            Some(mask) => mask.get(chiplet).copied().unwrap_or(false),
+            None => true,
+        };
+        allowed && self.hw.chiplet_type(chiplet).class != ChipletClass::Io
     }
 
     /// Hop distance from `c` to the nearest chiplet in `anchors`
@@ -532,9 +562,35 @@ mod tests {
     }
 
     #[test]
+    fn allowed_mask_confines_segments() {
+        let (hw, topo) = setup(6, 6);
+        let mut ledger = MemoryLedger::new(&hw);
+        // Allow only the top three rows (18 chiplets, 36 MiB): ResNet18
+        // (~11.7 MB) fits inside the mask.
+        let mask: Vec<bool> = (0..hw.num_chiplets()).map(|c| c < 18).collect();
+        let mapper = NearestNeighborMapper::new(&hw, &topo).with_allowed(&mask);
+        let m = NeuralModel::build(ModelKind::ResNet18);
+        let mapping = mapper.try_map(&m, &mut ledger).expect("fits inside the mask");
+        for seg in mapping.layers.iter().flatten() {
+            assert!(mask[seg.chiplet], "segment on disallowed chiplet {}", seg.chiplet);
+        }
+        // Nothing outside the mask was charged.
+        for c in 18..hw.num_chiplets() {
+            assert_eq!(ledger.free_bytes(c), ledger.capacity(c));
+        }
+        // An all-false mask can never map anything, and rolls back fully.
+        let none = vec![false; hw.num_chiplets()];
+        let before = ledger.total_free();
+        let blocked = NearestNeighborMapper::new(&hw, &topo).with_allowed(&none);
+        assert!(blocked.try_map(&m, &mut ledger).is_none());
+        assert_eq!(ledger.total_free(), before);
+    }
+
+    #[test]
     fn trait_object_matches_concrete_mapper() {
         let (hw, topo) = setup(10, 10);
-        let ctx = MapContext { hw: &hw, topo: &topo, heat: None, heat_weight_hops: 0.0 };
+        let ctx =
+            MapContext { hw: &hw, topo: &topo, heat: None, heat_weight_hops: 0.0, allowed: None };
         let m = NeuralModel::build(ModelKind::ResNet18);
         let mut l1 = MemoryLedger::new(&hw);
         let mut l2 = MemoryLedger::new(&hw);

@@ -1,0 +1,505 @@
+//! Tenant placement policies for multi-tenant co-execution.
+//!
+//! A [`crate::serving::mix::WorkloadMix`] puts N tenants on one chiplet
+//! system at the same time.  Before the co-simulation starts, a
+//! [`PlacementPolicy`] turns the tenants' memory demands into per-tenant
+//! chiplet masks; during the run, every mapping attempt of a tenant's
+//! request is confined to its mask via [`super::MapContext::allowed`].
+//!
+//! All feasibility probing happens on a [`MemoryLedger`] under a journal
+//! checkpoint: an infeasible mix rolls its speculative allocations back
+//! in O(changes) and leaves the caller's ledger untouched — the same
+//! mechanism the mapping hot path uses for failed placement attempts.
+
+use crate::config::{ChipletClass, HardwareConfig};
+use crate::mapping::MemoryLedger;
+use crate::noc::topology::Topology;
+use crate::workload::{ModelKind, NeuralModel};
+
+/// How a workload mix divides the chiplet system among its tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Contiguous spatial partition: compute chiplets are split into
+    /// disjoint runs (row-major order) sized proportionally to each
+    /// tenant's memory demand.  No chiplet serves two tenants, so
+    /// interference is confined to links their X-Y routes share.
+    DisjointPartition,
+    /// Every tenant may map anywhere: full sharing of compute chiplets
+    /// and the NoI — the maximum-interference baseline.
+    Interleaved,
+    /// Greedy best-fit: tenants (largest demand first) grab the
+    /// topologically tightest cluster of still-unassigned chiplets whose
+    /// capacity covers their demand, journaled on the [`MemoryLedger`];
+    /// leftover chiplets then fold into the nearest region so no
+    /// capacity is stranded outside every mask.  Masks are disjoint,
+    /// like [`PlacementPolicy::DisjointPartition`], but regions follow
+    /// demand and topology instead of a fixed split.
+    GreedyBestFit,
+}
+
+impl PlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::DisjointPartition => "disjoint",
+            PlacementPolicy::Interleaved => "interleaved",
+            PlacementPolicy::GreedyBestFit => "greedy",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "disjoint" | "partition" | "disjoint-partition" => {
+                Some(PlacementPolicy::DisjointPartition)
+            }
+            "interleaved" | "shared" => Some(PlacementPolicy::Interleaved),
+            "greedy" | "best-fit" | "greedy-best-fit" => Some(PlacementPolicy::GreedyBestFit),
+            _ => None,
+        }
+    }
+
+    /// Whether this policy guarantees pairwise-disjoint tenant masks.
+    pub fn is_disjoint(&self) -> bool {
+        !matches!(self, PlacementPolicy::Interleaved)
+    }
+}
+
+/// Memory demand of one tenant, derived from the models it serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantDemand {
+    /// Sizing weight: bytes to co-host one instance of each distinct
+    /// model kind the tenant serves (proportional-share numerator).
+    pub weight_bytes: u64,
+    /// Hard floor: the tenant's largest single model must fit its
+    /// region, or no request of that kind can ever map.
+    pub min_bytes: u64,
+}
+
+impl TenantDemand {
+    pub fn new(weight_bytes: u64, min_bytes: u64) -> TenantDemand {
+        TenantDemand { weight_bytes: weight_bytes.max(1), min_bytes }
+    }
+
+    /// Demand of a tenant serving the given model kinds.
+    pub fn of_kinds(kinds: &[ModelKind]) -> TenantDemand {
+        let mut distinct: Vec<ModelKind> = Vec::new();
+        for &k in kinds {
+            if !distinct.contains(&k) {
+                distinct.push(k);
+            }
+        }
+        let sizes: Vec<u64> =
+            distinct.iter().map(|&k| NeuralModel::build(k).total_weight_bytes()).collect();
+        TenantDemand::new(sizes.iter().sum(), sizes.iter().copied().max().unwrap_or(0))
+    }
+}
+
+/// Compute chiplet ids (non-I/O), ascending — the row-major order the
+/// disjoint partitioner splits.
+fn compute_chiplets(hw: &HardwareConfig) -> Vec<usize> {
+    (0..hw.num_chiplets()).filter(|&c| hw.chiplet_type(c).class != ChipletClass::Io).collect()
+}
+
+fn masks_of(regions: &[Vec<usize>], n: usize) -> Vec<Vec<bool>> {
+    regions
+        .iter()
+        .map(|region| {
+            let mut mask = vec![false; n];
+            for &c in region {
+                mask[c] = true;
+            }
+            mask
+        })
+        .collect()
+}
+
+/// Compute per-tenant placement masks for `demands` under `policy`.
+///
+/// The ledger is used as a speculative scratchpad (capacity probing under
+/// a journal checkpoint) and is restored to its entry state before
+/// returning — on success *and* on an infeasible mix.
+pub fn compute_placements(
+    policy: PlacementPolicy,
+    hw: &HardwareConfig,
+    topo: &Topology,
+    demands: &[TenantDemand],
+    ledger: &mut MemoryLedger,
+) -> anyhow::Result<Vec<Vec<bool>>> {
+    anyhow::ensure!(!demands.is_empty(), "placement needs at least one tenant");
+    let compute = compute_chiplets(hw);
+    anyhow::ensure!(
+        !compute.is_empty(),
+        "hardware has no compute chiplets to place tenants on"
+    );
+    match policy {
+        PlacementPolicy::Interleaved => {
+            let total: u64 = compute.iter().map(|&c| ledger.capacity(c)).sum();
+            for (i, d) in demands.iter().enumerate() {
+                anyhow::ensure!(
+                    d.min_bytes <= total,
+                    "tenant {i}: largest model ({} bytes) exceeds total system \
+                     capacity ({total} bytes)",
+                    d.min_bytes
+                );
+            }
+            Ok(vec![masks_of(&[compute.clone()], hw.num_chiplets()).remove(0); demands.len()])
+        }
+        PlacementPolicy::DisjointPartition => {
+            disjoint_partition(hw, demands, &compute, ledger)
+        }
+        PlacementPolicy::GreedyBestFit => greedy_best_fit(hw, topo, demands, &compute, ledger),
+    }
+}
+
+/// Largest-remainder apportionment of `n` chiplets over demand weights;
+/// every tenant gets at least one chiplet.
+fn apportion(n: usize, demands: &[TenantDemand]) -> anyhow::Result<Vec<usize>> {
+    let t = demands.len();
+    anyhow::ensure!(
+        t <= n,
+        "{t} tenants cannot partition {n} compute chiplets (need one each)"
+    );
+    let total_w: u128 = demands.iter().map(|d| d.weight_bytes as u128).sum();
+    let mut shares: Vec<usize> = Vec::with_capacity(t);
+    let mut remainders: Vec<(u128, usize)> = Vec::with_capacity(t);
+    for (i, d) in demands.iter().enumerate() {
+        let exact = n as u128 * d.weight_bytes as u128;
+        shares.push((exact / total_w) as usize);
+        remainders.push((exact % total_w, i));
+    }
+    let mut assigned: usize = shares.iter().sum();
+    // Hand leftovers to the largest remainders (ties resolved by tenant
+    // index, so the split is deterministic).
+    remainders.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let mut k = 0;
+    while assigned < n {
+        shares[remainders[k % t].1] += 1;
+        assigned += 1;
+        k += 1;
+    }
+    // Guarantee a non-empty region per tenant by shaving the largest.
+    for i in 0..t {
+        while shares[i] == 0 {
+            let largest = (0..t).max_by_key(|&j| shares[j]).expect("t >= 1");
+            anyhow::ensure!(
+                shares[largest] > 1,
+                "cannot give every tenant a chiplet: {n} compute chiplets, {t} tenants"
+            );
+            shares[largest] -= 1;
+            shares[i] += 1;
+        }
+    }
+    Ok(shares)
+}
+
+fn disjoint_partition(
+    hw: &HardwareConfig,
+    demands: &[TenantDemand],
+    compute: &[usize],
+    ledger: &mut MemoryLedger,
+) -> anyhow::Result<Vec<Vec<bool>>> {
+    let shares = apportion(compute.len(), demands)?;
+    let mark = ledger.checkpoint();
+    let mut regions: Vec<Vec<usize>> = Vec::with_capacity(demands.len());
+    let mut next = 0usize;
+    for (i, (&share, d)) in shares.iter().zip(demands).enumerate() {
+        let region: Vec<usize> = compute[next..next + share].to_vec();
+        next += share;
+        let mut capacity = 0u64;
+        for &c in &region {
+            // Booking the chiplet's whole free capacity marks it taken in
+            // the journal; `alloc` asserts nothing is booked twice.
+            let free = ledger.free_bytes(c);
+            ledger.alloc(c, free);
+            capacity += free;
+        }
+        if capacity < d.min_bytes {
+            ledger.rollback(mark);
+            anyhow::bail!(
+                "infeasible mix: tenant {i}'s partition ({} chiplets, {capacity} bytes) \
+                 cannot hold its largest model ({} bytes)",
+                region.len(),
+                d.min_bytes
+            );
+        }
+        regions.push(region);
+    }
+    // Placement is a pure probe: undo the speculative capacity bookings.
+    ledger.rollback(mark);
+    Ok(masks_of(&regions, hw.num_chiplets()))
+}
+
+fn greedy_best_fit(
+    hw: &HardwareConfig,
+    topo: &Topology,
+    demands: &[TenantDemand],
+    compute: &[usize],
+    ledger: &mut MemoryLedger,
+) -> anyhow::Result<Vec<Vec<bool>>> {
+    anyhow::ensure!(
+        demands.len() <= compute.len(),
+        "{} tenants cannot partition {} compute chiplets (need one each)",
+        demands.len(),
+        compute.len()
+    );
+    // Largest demand first (ties by index) so big tenants still find
+    // contiguous room; region growth is nearest-to-region, like the
+    // nearest-neighbour mapper's layer chaining.
+    let mut order: Vec<usize> = (0..demands.len()).collect();
+    order.sort_by(|&a, &b| {
+        demands[b].weight_bytes.cmp(&demands[a].weight_bytes).then(a.cmp(&b))
+    });
+    let mark = ledger.checkpoint();
+    let mut taken = vec![false; hw.num_chiplets()];
+    let mut regions: Vec<Vec<usize>> = vec![Vec::new(); demands.len()];
+    for &i in &order {
+        let d = &demands[i];
+        let want = d.weight_bytes.max(d.min_bytes);
+        let mut capacity = 0u64;
+        let mut region: Vec<usize> = Vec::new();
+        // Reserve one chiplet per still-unplaced tenant so later tenants
+        // are never left regionless by an over-greedy earlier one.
+        let placed_after = order.iter().filter(|&&j| regions[j].is_empty() && j != i).count();
+        loop {
+            let free_left = compute.iter().filter(|&&c| !taken[c]).count();
+            if capacity >= want || free_left <= placed_after {
+                break;
+            }
+            let candidate = compute
+                .iter()
+                .copied()
+                .filter(|&c| !taken[c])
+                .min_by_key(|&c| {
+                    let dist = region
+                        .iter()
+                        .map(|&r| topo.hops(r, c))
+                        .min()
+                        .unwrap_or(0);
+                    (dist, c)
+                });
+            let Some(c) = candidate else { break };
+            let free = ledger.free_bytes(c);
+            ledger.alloc(c, free);
+            taken[c] = true;
+            capacity += free;
+            region.push(c);
+        }
+        if capacity < d.min_bytes || region.is_empty() {
+            ledger.rollback(mark);
+            anyhow::bail!(
+                "infeasible mix: tenant {i} found only {capacity} bytes across {} \
+                 chiplets for a {} byte model (journal rolled back)",
+                region.len(),
+                d.min_bytes
+            );
+        }
+        regions[i] = region;
+    }
+    // Fold leftover chiplets into the nearest region (ties: lower tenant
+    // index).  Stranding them outside every mask would cap each tenant at
+    // roughly one resident model while part of the machine sits idle.
+    let leftovers: Vec<usize> = compute.iter().copied().filter(|&c| !taken[c]).collect();
+    for c in leftovers {
+        let owner = (0..regions.len())
+            .min_by_key(|&i| {
+                let dist = regions[i].iter().map(|&r| topo.hops(r, c)).min().unwrap_or(0);
+                (dist, i)
+            })
+            .expect("every tenant has a region by now");
+        regions[owner].push(c);
+        taken[c] = true;
+    }
+    for region in &mut regions {
+        region.sort_unstable();
+    }
+    ledger.rollback(mark);
+    Ok(masks_of(&regions, hw.num_chiplets()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propkit::check;
+
+    fn mesh(rows: usize, cols: usize) -> (HardwareConfig, Topology) {
+        let hw = HardwareConfig::homogeneous_mesh(rows, cols);
+        let topo = Topology::build(&hw);
+        (hw, topo)
+    }
+
+    fn ledger_is_pristine(hw: &HardwareConfig, ledger: &MemoryLedger) -> bool {
+        (0..hw.num_chiplets()).all(|c| ledger.free_bytes(c) == ledger.capacity(c))
+    }
+
+    #[test]
+    fn interleaved_masks_cover_all_compute_chiplets() {
+        let hw = HardwareConfig::vit_mesh(6, 6);
+        let topo = Topology::build(&hw);
+        let mut ledger = MemoryLedger::new(&hw);
+        let demands = vec![TenantDemand::new(1_000, 1_000); 3];
+        let masks = compute_placements(
+            PlacementPolicy::Interleaved,
+            &hw,
+            &topo,
+            &demands,
+            &mut ledger,
+        )
+        .unwrap();
+        assert_eq!(masks.len(), 3);
+        for mask in &masks {
+            for c in 0..hw.num_chiplets() {
+                let is_io = hw.chiplet_type(c).class == ChipletClass::Io;
+                assert_eq!(mask[c], !is_io, "chiplet {c}");
+            }
+        }
+        assert!(ledger_is_pristine(&hw, &ledger));
+    }
+
+    #[test]
+    fn disjoint_shares_follow_demand() {
+        let (hw, topo) = mesh(6, 6);
+        let mut ledger = MemoryLedger::new(&hw);
+        // 3:1 demand ratio over 36 chiplets -> 27 + 9.
+        let demands = vec![
+            TenantDemand::new(3_000_000, 1_000_000),
+            TenantDemand::new(1_000_000, 500_000),
+        ];
+        let masks = compute_placements(
+            PlacementPolicy::DisjointPartition,
+            &hw,
+            &topo,
+            &demands,
+            &mut ledger,
+        )
+        .unwrap();
+        let sizes: Vec<usize> =
+            masks.iter().map(|m| m.iter().filter(|&&b| b).count()).collect();
+        assert_eq!(sizes, vec![27, 9]);
+        assert!(ledger_is_pristine(&hw, &ledger));
+    }
+
+    #[test]
+    fn infeasible_mix_errors_and_rolls_the_journal_back() {
+        let (hw, topo) = mesh(2, 2); // 4 chiplets x 2 MiB = 8 MiB
+        let mut ledger = MemoryLedger::new(&hw);
+        let huge = 64 * 1024 * 1024;
+        for policy in [PlacementPolicy::DisjointPartition, PlacementPolicy::GreedyBestFit] {
+            let demands =
+                vec![TenantDemand::new(huge, huge), TenantDemand::new(1_000, 1_000)];
+            let err = compute_placements(policy, &hw, &topo, &demands, &mut ledger)
+                .err()
+                .expect("mix cannot fit");
+            assert!(err.to_string().contains("infeasible"), "{err}");
+            assert!(
+                ledger_is_pristine(&hw, &ledger),
+                "{policy:?} left speculative allocations behind"
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_folds_leftover_chiplets_into_regions() {
+        let (hw, topo) = mesh(8, 8); // 64 chiplets, far more than demand needs
+        let mut ledger = MemoryLedger::new(&hw);
+        let demands = vec![
+            TenantDemand::new(20 * 1024 * 1024, 20 * 1024 * 1024),
+            TenantDemand::new(8 * 1024 * 1024, 8 * 1024 * 1024),
+        ];
+        let masks = compute_placements(
+            PlacementPolicy::GreedyBestFit,
+            &hw,
+            &topo,
+            &demands,
+            &mut ledger,
+        )
+        .unwrap();
+        // Every compute chiplet belongs to exactly one tenant: nothing
+        // is stranded outside both masks.
+        for c in 0..hw.num_chiplets() {
+            let owners = masks.iter().filter(|m| m[c]).count();
+            assert_eq!(owners, 1, "chiplet {c} owned by {owners} tenants");
+        }
+        assert!(ledger_is_pristine(&hw, &ledger));
+    }
+
+    #[test]
+    fn more_tenants_than_chiplets_is_an_error() {
+        let (hw, topo) = mesh(2, 2);
+        let mut ledger = MemoryLedger::new(&hw);
+        let demands = vec![TenantDemand::new(1_000, 100); 5];
+        for policy in [PlacementPolicy::DisjointPartition, PlacementPolicy::GreedyBestFit] {
+            assert!(compute_placements(policy, &hw, &topo, &demands, &mut ledger).is_err());
+            assert!(ledger_is_pristine(&hw, &ledger));
+        }
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [
+            PlacementPolicy::DisjointPartition,
+            PlacementPolicy::Interleaved,
+            PlacementPolicy::GreedyBestFit,
+        ] {
+            assert_eq!(PlacementPolicy::from_name(p.name()), Some(p));
+        }
+        assert!(PlacementPolicy::from_name("no-such-policy").is_none());
+        assert!(PlacementPolicy::DisjointPartition.is_disjoint());
+        assert!(PlacementPolicy::GreedyBestFit.is_disjoint());
+        assert!(!PlacementPolicy::Interleaved.is_disjoint());
+    }
+
+    /// The headline invariant: disjoint policies never double-book a
+    /// chiplet, every tenant gets a non-empty region, and the ledger is
+    /// restored whether the mix fits or not.
+    #[test]
+    fn prop_disjoint_policies_never_double_book() {
+        check("placement-disjoint", 60, |rng| {
+            let rows = 2 + rng.below_usize(5);
+            let cols = 2 + rng.below_usize(5);
+            let (hw, topo) = mesh(rows, cols);
+            let tenants = 1 + rng.below_usize(4);
+            let demands: Vec<TenantDemand> = (0..tenants)
+                .map(|_| {
+                    let min = rng.range_u64(1_000, 6 * 1024 * 1024);
+                    TenantDemand::new(min + rng.range_u64(0, 8 * 1024 * 1024), min)
+                })
+                .collect();
+            let policy = if rng.chance(0.5) {
+                PlacementPolicy::DisjointPartition
+            } else {
+                PlacementPolicy::GreedyBestFit
+            };
+            let mut ledger = MemoryLedger::new(&hw);
+            let result = compute_placements(policy, &hw, &topo, &demands, &mut ledger);
+            prop_assert!(
+                ledger_is_pristine(&hw, &ledger),
+                "{policy:?} must restore the ledger (feasible or not)"
+            );
+            if let Ok(masks) = result {
+                prop_assert!(masks.len() == tenants, "one mask per tenant");
+                let mut owner = vec![usize::MAX; hw.num_chiplets()];
+                for (t, mask) in masks.iter().enumerate() {
+                    let mut region = 0usize;
+                    for (c, &allowed) in mask.iter().enumerate() {
+                        if !allowed {
+                            continue;
+                        }
+                        region += 1;
+                        prop_assert!(
+                            hw.chiplet_type(c).class != ChipletClass::Io,
+                            "tenant {t} was handed I/O chiplet {c}"
+                        );
+                        prop_assert!(
+                            owner[c] == usize::MAX,
+                            "chiplet {c} double-booked by tenants {} and {t}",
+                            owner[c]
+                        );
+                        owner[c] = t;
+                    }
+                    prop_assert!(region > 0, "tenant {t} got an empty region");
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -164,6 +164,59 @@ impl EnergyLog {
     }
 }
 
+/// Per-tenant NoI traffic totals (multi-tenant flow attribution).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TenantComm {
+    /// Flows injected on the tenant's behalf.
+    pub flows: u64,
+    /// Payload bytes moved.
+    pub bytes: u64,
+    /// Bytes × route hops — the tenant's share of NoI work, comparable
+    /// to [`NetworkSim::work_done`].
+    pub byte_hops: u64,
+}
+
+/// Attribution of injected flows to tenants.
+///
+/// The Global Manager knows which tenant owns every flow it injects
+/// (weight loads and activation transfers alike); this accumulator turns
+/// that knowledge into per-tenant traffic totals so a multi-tenant mix
+/// can report each tenant's share of the *shared* interposer — the
+/// quantity that explains cross-tenant interference.  Engines stay
+/// tenant-blind: contention arises from arbitration over the same links,
+/// attribution happens at the injection boundary.
+#[derive(Debug, Clone, Default)]
+pub struct TenantTraffic {
+    per: Vec<TenantComm>,
+}
+
+impl TenantTraffic {
+    pub fn new() -> TenantTraffic {
+        TenantTraffic::default()
+    }
+
+    /// Book one injected flow for `tenant` (`hops` along its route).
+    pub fn add_flow(&mut self, tenant: usize, bytes: u64, hops: usize) {
+        if tenant >= self.per.len() {
+            self.per.resize(tenant + 1, TenantComm::default());
+        }
+        let t = &mut self.per[tenant];
+        t.flows += 1;
+        t.bytes += bytes;
+        t.byte_hops += bytes * hops as u64;
+    }
+
+    /// Totals per tenant index (dense; tenants that injected nothing are
+    /// zero entries).
+    pub fn per_tenant(&self) -> &[TenantComm] {
+        &self.per
+    }
+
+    pub fn into_vec(self) -> Vec<TenantComm> {
+        self.per
+    }
+}
+
 /// Per-link utilization summary over a simulated span.
 #[derive(Debug, Clone)]
 pub struct LinkUtilization {
@@ -220,5 +273,19 @@ mod tests {
         log.push(0, 5, 1.0);
         log.push(0, 6, 1.0);
         assert_eq!(log.drain(), vec![(0, 5, 2.0), (0, 6, 1.0)]);
+    }
+
+    #[test]
+    fn tenant_traffic_attributes_flows_densely() {
+        let mut t = TenantTraffic::new();
+        t.add_flow(2, 100, 3);
+        t.add_flow(0, 50, 2);
+        t.add_flow(2, 10, 1);
+        let per = t.per_tenant();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per[0], TenantComm { flows: 1, bytes: 50, byte_hops: 100 });
+        assert_eq!(per[1], TenantComm::default());
+        assert_eq!(per[2], TenantComm { flows: 2, bytes: 110, byte_hops: 310 });
+        assert_eq!(t.into_vec().len(), 3);
     }
 }

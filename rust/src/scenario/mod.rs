@@ -34,7 +34,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
 use crate::dtm::GovernorSpec;
-use crate::serving::{ArrivalSpec, SteadyState, TraceEvent, TrafficReport, TrafficSpec};
+use crate::mapping::PlacementPolicy;
+use crate::serving::{
+    ArrivalSpec, MixReport, SteadyState, TenantSpec, TraceEvent, TrafficReport, TrafficSpec,
+    WorkloadMix,
+};
 use crate::sim::{SimReport, Simulation, ThermalSpec};
 use crate::util::rng::Rng;
 use crate::workload::{ModelKind, ALL_CNNS};
@@ -42,13 +46,16 @@ use crate::workload::{ModelKind, ALL_CNNS};
 type HwFn = Arc<dyn Fn() -> HardwareConfig + Send + Sync>;
 type WlFn = Arc<dyn Fn(u64) -> WorkloadConfig + Send + Sync>;
 type TrafficFn = Arc<dyn Fn(u64) -> TrafficSpec + Send + Sync>;
+type MixFn = Arc<dyn Fn(u64) -> WorkloadMix + Send + Sync>;
 
-/// What a scenario runs: a one-shot batch workload, or a sustained
-/// open-loop traffic stream (see [`crate::serving`]).
+/// What a scenario runs: a one-shot batch workload, a sustained
+/// open-loop traffic stream (see [`crate::serving`]), or a multi-tenant
+/// co-execution mix (see [`crate::serving::mix`]).
 #[derive(Clone)]
 enum Work {
     Batch(WlFn),
     Traffic(TrafficFn),
+    Mix(MixFn),
 }
 
 /// Construct one of the named hardware presets.  This is the single
@@ -129,6 +136,26 @@ impl Scenario {
         }
     }
 
+    /// A multi-tenant co-execution scenario: N tenants share the chiplet
+    /// system under a placement policy (see [`crate::serving::mix`]).
+    pub fn mix(
+        name: &str,
+        about: &str,
+        hardware: impl Fn() -> HardwareConfig + Send + Sync + 'static,
+        params: SimParams,
+        spec: impl Fn(u64) -> WorkloadMix + Send + Sync + 'static,
+    ) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            about: about.to_string(),
+            hardware: Arc::new(hardware),
+            params,
+            work: Work::Mix(Arc::new(spec)),
+            thermal: ThermalSpec::Off,
+            default_seed: 0xC0FFEE,
+        }
+    }
+
     pub fn with_default_seed(mut self, seed: u64) -> Scenario {
         self.default_seed = seed;
         self
@@ -163,20 +190,35 @@ impl Scenario {
         matches!(self.work, Work::Traffic(_))
     }
 
+    /// Whether this scenario is a multi-tenant co-execution mix.
+    pub fn is_mix(&self) -> bool {
+        matches!(self.work, Work::Mix(_))
+    }
+
     /// Instantiate the scenario's batch workload for a seed (empty for
-    /// traffic scenarios — their requests come from the arrival process).
+    /// traffic and mix scenarios — their requests come from arrival
+    /// processes).
     pub fn workload(&self, seed: u64) -> WorkloadConfig {
         match &self.work {
             Work::Batch(f) => f(seed),
-            Work::Traffic(_) => WorkloadConfig::from_kinds(&[]),
+            Work::Traffic(_) | Work::Mix(_) => WorkloadConfig::from_kinds(&[]),
         }
     }
 
-    /// Instantiate the traffic spec for a seed (`None` for batch ones).
+    /// Instantiate the traffic spec for a seed (`None` for batch and mix
+    /// ones).
     pub fn traffic_spec(&self, seed: u64) -> Option<TrafficSpec> {
         match &self.work {
-            Work::Batch(_) => None,
+            Work::Batch(_) | Work::Mix(_) => None,
             Work::Traffic(f) => Some(f(seed)),
+        }
+    }
+
+    /// Instantiate the workload mix for a seed (`None` for non-mix ones).
+    pub fn mix_spec(&self, seed: u64) -> Option<WorkloadMix> {
+        match &self.work {
+            Work::Mix(f) => Some(f(seed)),
+            _ => None,
         }
     }
 
@@ -190,25 +232,51 @@ impl Scenario {
     }
 
     /// Build and run to completion with the given workload seed.  Traffic
-    /// scenarios run the streaming engine and return its tail
+    /// and mix scenarios run the streaming engine and return its tail
     /// [`SimReport`] (span, power tail, energy); use
-    /// [`run_traffic`](Self::run_traffic) for the full serving stats.
+    /// [`run_traffic`](Self::run_traffic) / [`run_mix`](Self::run_mix)
+    /// for the full serving stats.  Mix scenarios skip their solo
+    /// interference baselines on this path (co-located pass only).
     pub fn run(&self, seed: u64) -> anyhow::Result<SimReport> {
         match &self.work {
             Work::Batch(f) => self.build()?.run(f(seed)),
             Work::Traffic(f) => Ok(self.build()?.run_traffic_with(&f(seed), seed)?.sim),
+            Work::Mix(f) => {
+                let mix = f(seed).interference(false);
+                Ok(crate::serving::mix::run_mix(|| self.build(), &mix, seed)?.sim)
+            }
         }
     }
 
     /// Build and run a traffic scenario, returning full serving stats.
-    /// Errors for batch scenarios.
+    /// Errors for batch and mix scenarios.
     pub fn run_traffic(&self, seed: u64) -> anyhow::Result<TrafficReport> {
         match &self.work {
             Work::Batch(_) => anyhow::bail!(
                 "scenario '{}' is a batch scenario; run it with Scenario::run",
                 self.name
             ),
+            Work::Mix(_) => anyhow::bail!(
+                "scenario '{}' is a multi-tenant mix; run it with Scenario::run_mix \
+                 (or `chipsim mix --scenario {}`)",
+                self.name,
+                self.name
+            ),
             Work::Traffic(f) => self.build()?.run_traffic_with(&f(seed), seed),
+        }
+    }
+
+    /// Build and run a mix scenario, returning per-tenant serving stats
+    /// (and the interference matrix when the spec enables it).  Errors
+    /// for batch and traffic scenarios.
+    pub fn run_mix(&self, seed: u64) -> anyhow::Result<MixReport> {
+        match &self.work {
+            Work::Mix(f) => crate::serving::mix::run_mix(|| self.build(), &f(seed), seed),
+            _ => anyhow::bail!(
+                "scenario '{}' is not a multi-tenant mix; run it with Scenario::run \
+                 or Scenario::run_traffic",
+                self.name
+            ),
         }
     }
 }
@@ -470,6 +538,89 @@ impl Registry {
                 governor: GovernorSpec::pid(46.5),
             }),
         );
+        // ---- multi-tenant co-execution mixes (see crate::serving::mix) ----
+        // Concurrent DNN tenants on one system: contention for the shared
+        // NoI, chiplet queues, and weight memory is cross-tenant by
+        // construction.  `chipsim mix --scenario NAME [--sweep interference]`.
+        reg.register(Scenario::mix(
+            "mix-vit-resnet-partitioned",
+            "12x12 mesh: ViT-B/16 tenant + ResNet18 tenant on disjoint spatial partitions",
+            || hardware_preset("mesh", 12, 12, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |_seed| {
+                WorkloadMix::new(vec![
+                    TenantSpec::poisson("vit", ModelKind::VitB16, 80.0).slo_ms(10.0),
+                    TenantSpec::poisson("resnet", ModelKind::ResNet18, 1_200.0).slo_ms(2.0),
+                ])
+                .placement(PlacementPolicy::DisjointPartition)
+                .horizon_ms(20.0)
+                .warmup_ms(2.0)
+                .window_ms(5.0)
+            },
+        ));
+        reg.register(Scenario::mix(
+            "mix-contended-interleaved",
+            "6x6 mesh with narrow 8 B links: two CNN tenants fully interleaved — the \
+             constrained-bandwidth interference probe",
+            || {
+                let mut hw = hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset");
+                // Quarter-width links starve the shared NoI so co-location
+                // visibly inflates tails over the solo baselines.
+                hw.link.width_bytes = 8;
+                hw
+            },
+            serving_params(),
+            |_seed| {
+                WorkloadMix::new(vec![
+                    TenantSpec::poisson("latency", ModelKind::ResNet18, 1_500.0).slo_ms(2.0),
+                    TenantSpec::poisson("batch", ModelKind::ResNet34, 700.0).slo_ms(8.0),
+                ])
+                .placement(PlacementPolicy::Interleaved)
+                .horizon_ms(30.0)
+                .warmup_ms(2.0)
+                .window_ms(5.0)
+                .interference(true)
+            },
+        ));
+        reg.register(Scenario::mix(
+            "mix-background-noise-greedy",
+            "8x8 mesh: a latency-sensitive ResNet34 tenant vs bursty AlexNet background \
+             noise, greedy best-fit placement",
+            || hardware_preset("mesh", 8, 8, 0, 0).expect("builtin preset"),
+            serving_params(),
+            |_seed| {
+                WorkloadMix::new(vec![
+                    TenantSpec::poisson("serve", ModelKind::ResNet34, 800.0).slo_ms(2.0),
+                    TenantSpec::new(
+                        "noise",
+                        ArrivalSpec::on_off(2_000.0, 0.0, 2e6, 2e6)
+                            .kinds(&[ModelKind::AlexNet]),
+                    )
+                    .slo_ms(8.0),
+                ])
+                .placement(PlacementPolicy::GreedyBestFit)
+                .horizon_ms(20.0)
+                .warmup_ms(2.0)
+                .window_ms(5.0)
+            },
+        ));
+        reg.register(Scenario::mix(
+            "mix-duo-partitioned-flit",
+            "6x6 mesh at flit-level wormhole fidelity: ResNet50 + ResNet18 tenants on \
+             disjoint partitions",
+            || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+            flit_serving_params(),
+            |_seed| {
+                WorkloadMix::new(vec![
+                    TenantSpec::poisson("fifty", ModelKind::ResNet50, 500.0).slo_ms(4.0),
+                    TenantSpec::poisson("eighteen", ModelKind::ResNet18, 1_000.0).slo_ms(2.0),
+                ])
+                .placement(PlacementPolicy::DisjointPartition)
+                .horizon_ms(10.0)
+                .warmup_ms(1.0)
+                .window_ms(2.5)
+            },
+        ));
         reg.register(Scenario::new(
             "thermal-hotspot",
             "6x6 mesh with THERMOS-style thermal-aware mapping enabled",
@@ -536,6 +687,10 @@ pub struct SweepOutcome {
 /// and every scenario run owns its whole simulation state, so thread
 /// scheduling cannot perturb results: `run` and `run_sequential` return
 /// byte-identical reports in the same input order.
+///
+/// A scenario that *panics* is caught and surfaced as that scenario's
+/// `Err` outcome instead of unwinding through the worker thread — one
+/// broken preset can no longer poison a whole threaded sweep.
 pub struct SweepRunner {
     threads: usize,
     base_seed: u64,
@@ -566,6 +721,25 @@ impl SweepRunner {
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
         Rng::new(self.base_seed ^ h).next_u64()
+    }
+
+    /// Run one scenario with panics converted into `Err` results (the
+    /// registry accepts user-registered scenarios whose closures may
+    /// panic; a sweep must report that, not die).
+    fn run_caught(sc: &Scenario, seed: u64) -> anyhow::Result<SimReport> {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sc.run(seed))) {
+            Ok(result) => result,
+            Err(payload) => {
+                let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                Err(anyhow::anyhow!("scenario '{}' panicked: {msg}", sc.name))
+            }
+        }
     }
 
     fn resolve<'a>(
@@ -612,7 +786,7 @@ impl SweepRunner {
                     let outcome = SweepOutcome {
                         scenario: sc.name.clone(),
                         seed,
-                        result: sc.run(seed),
+                        result: SweepRunner::run_caught(sc, seed),
                     };
                     slots.lock().expect("sweep slot lock")[i] = Some(outcome);
                 });
@@ -637,7 +811,11 @@ impl SweepRunner {
             .into_iter()
             .map(|sc| {
                 let seed = self.seed_for(&sc.name);
-                SweepOutcome { scenario: sc.name.clone(), seed, result: sc.run(seed) }
+                SweepOutcome {
+                    scenario: sc.name.clone(),
+                    seed,
+                    result: SweepRunner::run_caught(sc, seed),
+                }
             })
             .collect())
     }
@@ -710,6 +888,64 @@ mod tests {
             assert!(sc.thermal().is_in_loop());
         }
         assert!(!reg.get("mesh-10x10-cnn").unwrap().is_dtm());
+    }
+
+    #[test]
+    fn mix_scenarios_are_registered_and_typed() {
+        let reg = Registry::builtin();
+        for name in [
+            "mix-vit-resnet-partitioned",
+            "mix-contended-interleaved",
+            "mix-background-noise-greedy",
+            "mix-duo-partitioned-flit",
+        ] {
+            let sc = reg.get(name).unwrap_or_else(|| panic!("missing builtin '{name}'"));
+            assert!(sc.is_mix(), "'{name}' should be a mix scenario");
+            assert!(!sc.is_traffic());
+            let mix = sc.mix_spec(1).expect("mix spec");
+            assert!(mix.tenants.len() >= 2, "'{name}' should co-run >= 2 tenants");
+            assert!(mix.validate().is_ok(), "'{name}' spec must validate");
+            assert!(sc.workload(1).kinds.is_empty());
+            assert!(sc.traffic_spec(1).is_none());
+            assert!(sc.run_traffic(1).is_err());
+        }
+        let flit = reg.get("mix-duo-partitioned-flit").unwrap();
+        assert_eq!(flit.params().noc_fidelity, crate::config::NocFidelity::Flit);
+        assert!(reg.get("mesh-10x10-cnn").unwrap().mix_spec(1).is_none());
+        assert!(reg.get("mesh-10x10-cnn").unwrap().run_mix(1).is_err());
+    }
+
+    #[test]
+    fn sweep_surfaces_a_panicking_scenario_as_its_own_failure() {
+        let mut reg = Registry::builtin();
+        reg.register(Scenario::new(
+            "boom",
+            "hardware closure panics (sweep must survive)",
+            || panic!("intentional test panic"),
+            SimParams {
+                inferences_per_model: 1,
+                warmup_ns: 0,
+                cooldown_ns: 0,
+                ..SimParams::default()
+            },
+            |_| WorkloadConfig::single(ModelKind::ResNet18),
+        ));
+        let outcomes = SweepRunner::new()
+            .threads(2)
+            .run(&reg, &["boom", "mesh-6x6-quickstart"])
+            .expect("the sweep itself must not die");
+        assert_eq!(outcomes.len(), 2);
+        let boom = &outcomes[0];
+        let err = boom.result.as_ref().err().expect("panicking scenario reports Err");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(err.to_string().contains("intentional test panic"), "{err}");
+        assert!(
+            outcomes[1].result.is_ok(),
+            "healthy scenario must complete despite the neighbour's panic"
+        );
+        // Sequential path surfaces the same failure.
+        let seq = SweepRunner::new().run_sequential(&reg, &["boom"]).unwrap();
+        assert!(seq[0].result.is_err());
     }
 
     #[test]

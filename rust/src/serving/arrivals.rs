@@ -98,6 +98,7 @@ impl ArrivalProcess for PoissonArrivals {
             kind: self.mix.choose(&mut self.rng),
             arrival_ns: self.t_ns,
             inferences: self.inferences,
+            tenant: 0,
         })
     }
 }
@@ -184,6 +185,7 @@ impl ArrivalProcess for OnOffArrivals {
                 kind: self.mix.choose(&mut self.rng),
                 arrival_ns: self.t_ns,
                 inferences: self.inferences,
+                tenant: 0,
             });
         }
     }
@@ -250,6 +252,7 @@ impl ArrivalProcess for DiurnalArrivals {
                     kind: self.mix.choose(&mut self.rng),
                     arrival_ns: self.t_ns,
                     inferences: self.inferences,
+                    tenant: 0,
                 });
             }
         }
@@ -324,6 +327,7 @@ impl ArrivalProcess for TraceArrivals {
             kind: e.kind,
             arrival_ns: e.at_ns,
             inferences: e.inferences,
+            tenant: 0,
         })
     }
 }
@@ -428,6 +432,30 @@ impl ArrivalSpec {
             ArrivalSpec::Trace { .. } => {}
         }
         self
+    }
+
+    /// Distinct model kinds this spec can emit (in first-appearance
+    /// order).  Placement policies size tenant partitions from the models
+    /// behind a spec, so trace replay reports the kinds of its events.
+    pub fn model_kinds(&self) -> Vec<ModelKind> {
+        let dedup = |kinds: &[ModelKind]| {
+            let mut out: Vec<ModelKind> = Vec::new();
+            for &k in kinds {
+                if !out.contains(&k) {
+                    out.push(k);
+                }
+            }
+            out
+        };
+        match self {
+            ArrivalSpec::Poisson { kinds, .. }
+            | ArrivalSpec::OnOff { kinds, .. }
+            | ArrivalSpec::Diurnal { kinds, .. } => dedup(kinds),
+            ArrivalSpec::Trace { events } => {
+                let kinds: Vec<ModelKind> = events.iter().map(|e| e.kind).collect();
+                dedup(&kinds)
+            }
+        }
     }
 
     /// Nominal mean request rate, req/s (duty-cycle weighted for on-off;

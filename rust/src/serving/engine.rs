@@ -227,40 +227,55 @@ pub enum StopReason {
     Truncated,
 }
 
-struct TrafficSink<'a> {
-    spec: &'a TrafficSpec,
-    stats: ServingStats,
+/// Shared window accounting for streaming sinks ([`TrafficSink`] here
+/// and the multi-tenant `MixSink`): latencies of the open stats window,
+/// the power drained one window behind virtual time, and the bounded
+/// ring of [`WindowSummary`]s.
+pub(crate) struct WindowRoller {
+    window_ns: TimeNs,
+    keep_windows: usize,
+    /// When the simulation runs closed-loop DTM, its controller owns the
+    /// drain clock and forwards every drained window here; the roller
+    /// then must not drain on its own (two cursors would split windows).
+    external_power: bool,
     window_hist: LatencyHistogram,
     window_completed: u64,
     window_end: TimeNs,
-    recent_p99: VecDeque<u64>,
     windows: VecDeque<WindowSummary>,
-    converged: bool,
-    /// When the simulation runs closed-loop DTM, its controller owns the
-    /// drain clock and forwards every drained window here; the sink then
-    /// must not drain on its own (two cursors would split windows).
-    external_power: bool,
     fed_dynamic_pj: f64,
     fed_span_ns: TimeNs,
     fed_baseline_mw: f64,
 }
 
-impl<'a> TrafficSink<'a> {
-    fn new(spec: &'a TrafficSpec, external_power: bool) -> TrafficSink<'a> {
-        TrafficSink {
-            spec,
-            stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
+impl WindowRoller {
+    pub(crate) fn new(
+        window_ns: TimeNs,
+        keep_windows: usize,
+        external_power: bool,
+    ) -> WindowRoller {
+        WindowRoller {
+            window_ns,
+            keep_windows: keep_windows.max(1),
+            external_power,
             window_hist: LatencyHistogram::new(),
             window_completed: 0,
-            window_end: spec.window_ns,
-            recent_p99: VecDeque::new(),
+            window_end: window_ns,
             windows: VecDeque::new(),
-            converged: false,
-            external_power,
             fed_dynamic_pj: 0.0,
             fed_span_ns: 0,
             fed_baseline_mw: 0.0,
         }
+    }
+
+    /// Record one counted (post-warm-up) completion into the open window.
+    pub(crate) fn record(&mut self, latency_ns: u64) {
+        self.window_hist.record(latency_ns);
+        self.window_completed += 1;
+    }
+
+    /// Whether virtual time has passed the open window's boundary.
+    pub(crate) fn due(&self, now: TimeNs) -> bool {
+        now >= self.window_end
     }
 
     /// Summarize the current stats window and append it to the bounded
@@ -274,7 +289,7 @@ impl<'a> TrafficSink<'a> {
             mean_power_w,
             dynamic_pj,
         });
-        if self.windows.len() > self.spec.keep_windows {
+        if self.windows.len() > self.keep_windows {
             self.windows.pop_front();
         }
     }
@@ -295,7 +310,9 @@ impl<'a> TrafficSink<'a> {
         (mean_w, dynamic_pj)
     }
 
-    fn roll_window(&mut self, power: &mut PowerPort<'_>) {
+    /// Close the open window and start the next one.  Returns the closed
+    /// window's `(completions, p99)` for steady-state detection.
+    pub(crate) fn roll(&mut self, power: &mut PowerPort<'_>) -> (u64, u64) {
         if self.external_power {
             let (mean_w, dynamic_pj) = self.take_fed_power();
             self.push_summary(self.window_end, mean_w, dynamic_pj);
@@ -304,13 +321,65 @@ impl<'a> TrafficSink<'a> {
             // events can still book energy just before the boundary, and
             // PowerTracker folds such stragglers into already-drained
             // totals anyway.
-            let drained =
-                power.drain_window(self.window_end.saturating_sub(self.spec.window_ns));
+            let drained = power.drain_window(self.window_end.saturating_sub(self.window_ns));
             self.push_summary(self.window_end, drained.mean_power_w(), drained.dynamic_pj());
         }
-        let p99 = self.windows.back().expect("just pushed").p99_ns;
+        let closed = self.windows.back().expect("just pushed");
+        let result = (closed.completed, closed.p99_ns);
+        self.window_hist.reset();
+        self.window_completed = 0;
+        self.window_end += self.window_ns;
+        result
+    }
+
+    /// A DTM-drained window arrived (external-power mode).
+    pub(crate) fn on_power_window(&mut self, window: &PowerWindow) {
+        self.fed_dynamic_pj += window.dynamic_pj();
+        self.fed_span_ns += window.span_ns();
+        self.fed_baseline_mw = window.baseline_mw.iter().sum();
+    }
+
+    /// Finalize after the event loop returned: fold the partial last
+    /// window in (using whatever power is still live in the report) and
+    /// hand the ring back.
+    pub(crate) fn finish(mut self, sim: &mut SimReport) -> Vec<WindowSummary> {
+        if self.window_completed > 0 {
+            if self.external_power {
+                let (mean_w, dynamic_pj) = self.take_fed_power();
+                self.push_summary(sim.span_ns, mean_w, dynamic_pj);
+            } else {
+                let end = self.window_end.min(sim.span_ns + self.window_ns);
+                let drained = sim.power.drain_window(end.saturating_sub(self.window_ns));
+                self.push_summary(sim.span_ns, drained.mean_power_w(), drained.dynamic_pj());
+            }
+        }
+        self.windows.into_iter().collect()
+    }
+}
+
+struct TrafficSink<'a> {
+    spec: &'a TrafficSpec,
+    stats: ServingStats,
+    roller: WindowRoller,
+    recent_p99: VecDeque<u64>,
+    converged: bool,
+}
+
+impl<'a> TrafficSink<'a> {
+    fn new(spec: &'a TrafficSpec, external_power: bool) -> TrafficSink<'a> {
+        TrafficSink {
+            spec,
+            stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
+            roller: WindowRoller::new(spec.window_ns, spec.keep_windows, external_power),
+            recent_p99: VecDeque::new(),
+            converged: false,
+        }
+    }
+
+    /// Steady-state detection over the just-closed window.
+    fn note_window(&mut self, completed: u64, p99: u64) {
         if let Some(ss) = &self.spec.steady {
-            if self.window_completed >= ss.min_per_window {
+            if completed >= ss.min_per_window {
                 self.recent_p99.push_back(p99);
                 if self.recent_p99.len() > ss.windows {
                     self.recent_p99.pop_front();
@@ -327,30 +396,17 @@ impl<'a> TrafficSink<'a> {
                 self.recent_p99.clear();
             }
         }
-        self.window_hist.reset();
-        self.window_completed = 0;
-        self.window_end += self.spec.window_ns;
     }
 
-    /// Finalize after the event loop returned: fold the partial last
-    /// window in (using whatever power is still live in the report).
+    /// Finalize after the event loop returned.
     fn into_report(
-        mut self,
+        self,
         mut sim: SimReport,
         offered: u64,
         exhausted: bool,
         seed: u64,
     ) -> TrafficReport {
-        if self.window_completed > 0 {
-            if self.external_power {
-                let (mean_w, dynamic_pj) = self.take_fed_power();
-                self.push_summary(sim.span_ns, mean_w, dynamic_pj);
-            } else {
-                let end = self.window_end.min(sim.span_ns + self.spec.window_ns);
-                let drained = sim.power.drain_window(end.saturating_sub(self.spec.window_ns));
-                self.push_summary(sim.span_ns, drained.mean_power_w(), drained.dynamic_pj());
-            }
-        }
+        let windows = self.roller.finish(&mut sim);
         let stop = if self.converged {
             StopReason::SteadyState
         } else if exhausted {
@@ -358,14 +414,7 @@ impl<'a> TrafficSink<'a> {
         } else {
             StopReason::Truncated
         };
-        TrafficReport {
-            seed,
-            offered,
-            stats: self.stats,
-            windows: self.windows.into_iter().collect(),
-            stop,
-            sim,
-        }
+        TrafficReport { seed, offered, stats: self.stats, windows, stop, sim }
     }
 }
 
@@ -373,8 +422,7 @@ impl StreamSink for TrafficSink<'_> {
     fn on_outcome(&mut self, outcome: &ModelOutcome, _now: TimeNs) -> bool {
         let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
         if self.stats.record(outcome.kind, latency, outcome.finished_ns) {
-            self.window_hist.record(latency);
-            self.window_completed += 1;
+            self.roller.record(latency);
         }
         // Early stop is driven entirely by on_advance (convergence is
         // only ever detected at a window boundary).
@@ -382,8 +430,9 @@ impl StreamSink for TrafficSink<'_> {
     }
 
     fn on_advance(&mut self, now: TimeNs, power: &mut PowerPort<'_>) -> bool {
-        while now >= self.window_end {
-            self.roll_window(power);
+        while self.roller.due(now) {
+            let (completed, p99) = self.roller.roll(power);
+            self.note_window(completed, p99);
             if self.converged {
                 return false;
             }
@@ -392,12 +441,10 @@ impl StreamSink for TrafficSink<'_> {
     }
 
     fn on_power_window(&mut self, window: &PowerWindow) {
-        self.fed_dynamic_pj += window.dynamic_pj();
-        self.fed_span_ns += window.span_ns();
-        self.fed_baseline_mw = window.baseline_mw.iter().sum();
+        self.roller.on_power_window(window);
     }
 
-    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _now: TimeNs) {
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _tenant: usize, _now: TimeNs) {
         self.stats.dropped += 1;
     }
 

@@ -1,0 +1,715 @@
+//! Multi-tenant co-execution: N DNN serving tenants resident on one
+//! chiplet system at the same time.
+//!
+//! CHIPSIM's core claim is that computation and communication are
+//! modeled *concurrently*, so contention between co-running workloads is
+//! captured rather than averaged away.  This module is where that claim
+//! pays off: a [`WorkloadMix`] puts several [`TenantSpec`]s — each its
+//! own model mix, arrival process, and SLO — onto one simulation, whose
+//! single shared [`crate::noc::NetworkSim`] makes packet/flit
+//! contention, power, and DTM throttling cross-tenant *by construction*.
+//!
+//! * a [`crate::mapping::PlacementPolicy`] turns tenant memory demands
+//!   into per-chiplet masks (disjoint partition, interleaved, greedy
+//!   best-fit) before the run; every mapping attempt is confined to the
+//!   requesting tenant's mask;
+//! * [`MixSource`] merges the tenants' lazy arrival streams into one
+//!   monotone request stream, tagging each request with its tenant;
+//! * [`MixSink`] splits completions back out into per-tenant
+//!   [`ServingStats`] (p50–p99.9, goodput, SLO violations);
+//! * [`run_mix`] drives the co-located run and, when
+//!   [`WorkloadMix::interference`] is set, re-runs every tenant *solo on
+//!   its same placement* to fill the [`InterferenceMatrix`]: co-located
+//!   vs solo tail latency, the signature of cross-tenant contention.
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//! use chipsim::serving::mix::{run_mix, TenantSpec, WorkloadMix};
+//!
+//! let mix = WorkloadMix::new(vec![
+//!     TenantSpec::new("latency", ArrivalSpec::poisson(1_200.0)).slo_ms(2.0),
+//!     TenantSpec::new("batch", ArrivalSpec::poisson(400.0)).slo_ms(8.0),
+//! ])
+//! .placement(PlacementPolicy::DisjointPartition)
+//! .horizon_ms(30.0)
+//! .interference(true);
+//! let report = run_mix(
+//!     || {
+//!         Simulation::builder()
+//!             .hardware(HardwareConfig::homogeneous_mesh(8, 8))
+//!             .params(SimParams { pipelined: true, ..SimParams::default() })
+//!             .build()
+//!     },
+//!     &mix,
+//!     0xC0FFEE,
+//! )
+//! .expect("mix run");
+//! println!("{}", report.summary());
+//! ```
+
+use crate::mapping::placement::{compute_placements, PlacementPolicy, TenantDemand};
+use crate::mapping::MemoryLedger;
+use crate::noc::TenantComm;
+use crate::power::PowerWindow;
+use crate::serving::arrivals::{ArrivalProcess, ArrivalSpec};
+use crate::serving::engine::{WindowRoller, WindowSummary};
+use crate::serving::slo::ServingStats;
+use crate::sim::{ModelOutcome, PowerPort, RequestSource, SimReport, Simulation, StreamSink};
+use crate::util::rng::Rng;
+use crate::workload::{ModelKind, ModelRequest};
+use crate::TimeNs;
+
+// ------------------------------------------------------------------ tenants
+
+/// One tenant of a multi-tenant mix: a named serving workload with its
+/// own arrival process and latency SLO.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub arrivals: ArrivalSpec,
+    /// End-to-end (arrival → finish) latency SLO for this tenant.
+    pub slo_ns: TimeNs,
+}
+
+impl TenantSpec {
+    pub fn new(name: &str, arrivals: ArrivalSpec) -> TenantSpec {
+        TenantSpec { name: name.to_string(), arrivals, slo_ns: 1_000_000 }
+    }
+
+    /// Poisson arrivals of a single model kind — the common CLI shape.
+    pub fn poisson(name: &str, kind: ModelKind, rate_rps: f64) -> TenantSpec {
+        TenantSpec::new(name, ArrivalSpec::poisson(rate_rps).kinds(&[kind]))
+    }
+
+    pub fn slo_ms(mut self, ms: f64) -> TenantSpec {
+        self.slo_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn slo_us(mut self, us: f64) -> TenantSpec {
+        self.slo_ns = (us * 1e3) as TimeNs;
+        self
+    }
+
+    /// Memory demand used by placement policies to size this tenant's
+    /// chiplet region.
+    pub fn demand(&self) -> TenantDemand {
+        TenantDemand::of_kinds(&self.arrivals.model_kinds())
+    }
+}
+
+/// A set of tenants co-resident on one chiplet system, plus the shared
+/// run shape (horizon, warm-up, stats window) and placement policy.
+#[derive(Debug, Clone)]
+pub struct WorkloadMix {
+    pub tenants: Vec<TenantSpec>,
+    pub placement: PlacementPolicy,
+    /// Arrivals stop at this virtual time; in-flight work then drains.
+    pub horizon_ns: TimeNs,
+    /// Completions before this virtual time are excluded from stats.
+    pub warmup_ns: TimeNs,
+    /// Stats / power-drain window width.
+    pub window_ns: TimeNs,
+    /// Bounded ring of trailing per-window summaries kept for the report.
+    pub keep_windows: usize,
+    /// Also run every tenant solo (same placement, same seed) to fill
+    /// the [`InterferenceMatrix`].  Costs N extra runs.
+    pub interference: bool,
+}
+
+impl WorkloadMix {
+    pub fn new(tenants: Vec<TenantSpec>) -> WorkloadMix {
+        WorkloadMix {
+            tenants,
+            placement: PlacementPolicy::DisjointPartition,
+            horizon_ns: 30_000_000, // 30 ms
+            warmup_ns: 4_000_000,   // 4 ms
+            window_ns: 2_000_000,   // 2 ms
+            keep_windows: 32,
+            interference: false,
+        }
+    }
+
+    pub fn placement(mut self, policy: PlacementPolicy) -> WorkloadMix {
+        self.placement = policy;
+        self
+    }
+
+    pub fn horizon_ms(mut self, ms: f64) -> WorkloadMix {
+        self.horizon_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn warmup_ms(mut self, ms: f64) -> WorkloadMix {
+        self.warmup_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn window_ms(mut self, ms: f64) -> WorkloadMix {
+        self.window_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn keep_windows(mut self, n: usize) -> WorkloadMix {
+        self.keep_windows = n.max(1);
+        self
+    }
+
+    pub fn interference(mut self, on: bool) -> WorkloadMix {
+        self.interference = on;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.tenants.is_empty(), "a mix needs at least one tenant");
+        for (i, t) in self.tenants.iter().enumerate() {
+            anyhow::ensure!(!t.name.is_empty(), "tenant {i} has an empty name");
+            anyhow::ensure!(t.slo_ns > 0, "tenant '{}': slo_ns must be > 0", t.name);
+            anyhow::ensure!(
+                !self.tenants[..i].iter().any(|o| o.name == t.name),
+                "duplicate tenant name '{}'",
+                t.name
+            );
+        }
+        anyhow::ensure!(self.window_ns > 0, "mix window_ns must be > 0");
+        anyhow::ensure!(
+            self.horizon_ns >= self.window_ns,
+            "mix horizon ({} ns) shorter than one window ({} ns)",
+            self.horizon_ns,
+            self.window_ns
+        );
+        anyhow::ensure!(
+            self.warmup_ns < self.horizon_ns,
+            "warm-up ({} ns) swallows the whole horizon ({} ns)",
+            self.warmup_ns,
+            self.horizon_ns
+        );
+        Ok(())
+    }
+
+    /// Per-tenant memory demands in tenant order.
+    pub fn demands(&self) -> Vec<TenantDemand> {
+        self.tenants.iter().map(|t| t.demand()).collect()
+    }
+}
+
+/// Per-tenant arrival seed: deterministic in `(mix seed, tenant index)`
+/// and — crucially — identical between the co-located run and the
+/// tenant's solo baseline, so both replay byte-identical request streams.
+fn tenant_seed(seed: u64, idx: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ seed;
+    for b in (idx as u64).to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Rng::new(h).next_u64()
+}
+
+// ------------------------------------------------------------------- source
+
+struct Lane {
+    tenant: usize,
+    generator: Box<dyn ArrivalProcess>,
+    horizon_ns: TimeNs,
+    peeked: Option<ModelRequest>,
+    exhausted: bool,
+    emitted: u64,
+}
+
+impl Lane {
+    fn fill(&mut self) {
+        if self.peeked.is_some() || self.exhausted {
+            return;
+        }
+        match self.generator.next_request() {
+            Some(r) if r.arrival_ns <= self.horizon_ns => self.peeked = Some(r),
+            _ => self.exhausted = true,
+        }
+    }
+}
+
+/// [`RequestSource`] merging N tenant arrival streams into one monotone
+/// stream.  Each emitted request carries its tenant index; ids are
+/// renumbered globally (ties between lanes resolve by tenant order, so
+/// the merge is deterministic).
+pub struct MixSource {
+    lanes: Vec<Lane>,
+    next_id: usize,
+}
+
+impl MixSource {
+    /// All tenants of the mix (the co-located run).
+    pub fn new(mix: &WorkloadMix, seed: u64) -> anyhow::Result<MixSource> {
+        MixSource::build(mix, seed, None)
+    }
+
+    /// Only tenant `idx`, with the *same* per-tenant seed the co-located
+    /// run uses — the solo baseline of the interference matrix.
+    pub fn solo(mix: &WorkloadMix, seed: u64, idx: usize) -> anyhow::Result<MixSource> {
+        anyhow::ensure!(idx < mix.tenants.len(), "no tenant {idx} in a {}-tenant mix",
+            mix.tenants.len());
+        MixSource::build(mix, seed, Some(idx))
+    }
+
+    fn build(mix: &WorkloadMix, seed: u64, only: Option<usize>) -> anyhow::Result<MixSource> {
+        let mut lanes = Vec::new();
+        for (idx, tenant) in mix.tenants.iter().enumerate() {
+            if only.is_some_and(|o| o != idx) {
+                continue;
+            }
+            lanes.push(Lane {
+                tenant: idx,
+                generator: tenant.arrivals.build(tenant_seed(seed, idx))?,
+                horizon_ns: mix.horizon_ns,
+                peeked: None,
+                exhausted: false,
+                emitted: 0,
+            });
+        }
+        Ok(MixSource { lanes, next_id: 0 })
+    }
+
+    /// Lane index holding the earliest pending arrival.
+    fn pick(&mut self) -> Option<usize> {
+        let mut best: Option<(TimeNs, usize)> = None;
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            lane.fill();
+            if let Some(r) = &lane.peeked {
+                let key = (r.arrival_ns, i);
+                let better = match best {
+                    Some(b) => key < b,
+                    None => true,
+                };
+                if better {
+                    best = Some(key);
+                }
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Requests emitted for tenant `idx` so far.
+    pub fn emitted_of(&self, idx: usize) -> u64 {
+        self.lanes.iter().find(|l| l.tenant == idx).map_or(0, |l| l.emitted)
+    }
+
+    /// Whether every lane ran past the horizon (or dry).
+    pub fn exhausted(&self) -> bool {
+        self.lanes.iter().all(|l| l.exhausted && l.peeked.is_none())
+    }
+}
+
+impl RequestSource for MixSource {
+    fn peek_arrival_ns(&mut self) -> Option<TimeNs> {
+        let i = self.pick()?;
+        self.lanes[i].peeked.as_ref().map(|r| r.arrival_ns)
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        let i = self.pick()?;
+        let lane = &mut self.lanes[i];
+        let mut req = lane.peeked.take()?;
+        req.tenant = lane.tenant;
+        req.id = self.next_id;
+        self.next_id += 1;
+        lane.emitted += 1;
+        Some(req)
+    }
+}
+
+// --------------------------------------------------------------------- sink
+
+/// [`StreamSink`] splitting completions into per-tenant [`ServingStats`].
+/// Window/power accounting is the same [`WindowRoller`] the single-tenant
+/// traffic engine uses (one window behind virtual time; DTM-owned when
+/// in-loop); the pooled window trace covers all tenants together.
+pub struct MixSink {
+    per: Vec<ServingStats>,
+    roller: WindowRoller,
+}
+
+impl MixSink {
+    pub fn new(mix: &WorkloadMix, external_power: bool) -> MixSink {
+        MixSink {
+            per: mix
+                .tenants
+                .iter()
+                .map(|t| ServingStats::new(t.slo_ns, mix.warmup_ns))
+                .collect(),
+            roller: WindowRoller::new(mix.window_ns, mix.keep_windows, external_power),
+        }
+    }
+
+    /// Finalize after the event loop returned: fold the partial last
+    /// window in and hand back the per-tenant stats.
+    pub fn into_parts(self, sim: &mut SimReport) -> (Vec<ServingStats>, Vec<WindowSummary>) {
+        let windows = self.roller.finish(sim);
+        (self.per, windows)
+    }
+}
+
+impl StreamSink for MixSink {
+    fn on_outcome(&mut self, outcome: &ModelOutcome, _now: TimeNs) -> bool {
+        let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
+        debug_assert!(outcome.tenant < self.per.len(), "outcome from unknown tenant");
+        if let Some(stats) = self.per.get_mut(outcome.tenant) {
+            if stats.record(outcome.kind, latency, outcome.finished_ns) {
+                self.roller.record(latency);
+            }
+        }
+        true
+    }
+
+    fn on_advance(&mut self, now: TimeNs, power: &mut PowerPort<'_>) -> bool {
+        while self.roller.due(now) {
+            self.roller.roll(power);
+        }
+        true
+    }
+
+    fn on_power_window(&mut self, window: &PowerWindow) {
+        self.roller.on_power_window(window);
+    }
+
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, tenant: usize, _now: TimeNs) {
+        if let Some(stats) = self.per.get_mut(tenant) {
+            stats.dropped += 1;
+        }
+    }
+
+    fn retain_state(&self) -> bool {
+        false
+    }
+}
+
+// ------------------------------------------------------------------- report
+
+/// One tenant's results inside a mix run.
+#[derive(Debug)]
+pub struct TenantOutcome {
+    pub name: String,
+    /// Requests injected before the horizon.
+    pub offered: u64,
+    /// Chiplets in this tenant's placement mask.
+    pub chiplets: usize,
+    pub slo_ns: TimeNs,
+    /// Cumulative post-warm-up serving statistics.
+    pub stats: ServingStats,
+    /// The tenant's share of NoI traffic (flow→tenant attribution).
+    pub comm: TenantComm,
+}
+
+/// Solo-vs-co-located tail latency of one tenant: the interference
+/// matrix row.  The solo baseline runs the tenant alone *on the same
+/// placement* with the same arrival stream, so any difference is pure
+/// cross-tenant contention (shared links, shared chiplet queues, shared
+/// thermal budget) — not a placement artifact.
+#[derive(Debug, Clone)]
+pub struct InterferenceEntry {
+    pub tenant: String,
+    pub solo_completed: u64,
+    pub solo_p50_ns: u64,
+    pub solo_p99_ns: u64,
+    pub solo_goodput_rps: f64,
+    pub co_completed: u64,
+    pub co_p50_ns: u64,
+    pub co_p99_ns: u64,
+    pub co_goodput_rps: f64,
+}
+
+impl InterferenceEntry {
+    /// Co-located p99 over solo p99 (1.0 = no interference).
+    pub fn p99_slowdown(&self) -> f64 {
+        if self.solo_p99_ns == 0 {
+            return if self.co_p99_ns == 0 { 1.0 } else { f64::INFINITY };
+        }
+        self.co_p99_ns as f64 / self.solo_p99_ns as f64
+    }
+}
+
+/// Per-tenant solo-vs-co-located comparison.
+#[derive(Debug, Clone, Default)]
+pub struct InterferenceMatrix {
+    pub entries: Vec<InterferenceEntry>,
+}
+
+impl InterferenceMatrix {
+    /// The worst p99 slowdown any tenant suffers from co-location.
+    pub fn max_p99_slowdown(&self) -> f64 {
+        self.entries.iter().map(|e| e.p99_slowdown()).fold(0.0, f64::max)
+    }
+
+    pub fn get(&self, tenant: &str) -> Option<&InterferenceEntry> {
+        self.entries.iter().find(|e| e.tenant == tenant)
+    }
+}
+
+/// Result of a multi-tenant mix run.
+#[derive(Debug)]
+pub struct MixReport {
+    pub seed: u64,
+    pub placement: PlacementPolicy,
+    pub tenants: Vec<TenantOutcome>,
+    /// Trailing per-window summaries of the co-located run (all tenants
+    /// pooled; bounded by `WorkloadMix::keep_windows`).
+    pub windows: Vec<WindowSummary>,
+    /// Filled when the mix ran with `interference(true)`.
+    pub interference: Option<InterferenceMatrix>,
+    /// Tail simulation state of the co-located run.
+    pub sim: SimReport,
+}
+
+impl MixReport {
+    pub fn span_ns(&self) -> TimeNs {
+        self.sim.span_ns
+    }
+
+    /// Closed-loop DTM results, when the simulation was built with
+    /// `ThermalSpec::InLoop`.
+    pub fn dtm(&self) -> Option<&crate::dtm::DtmReport> {
+        self.sim.dtm.as_ref()
+    }
+
+    /// Human-readable roll-up: one block per tenant, then the
+    /// interference matrix when present.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "mix: {} tenants ({} placement) over {:.3} ms\n",
+            self.tenants.len(),
+            self.placement.name(),
+            self.sim.span_ns as f64 / 1e6,
+        );
+        for t in &self.tenants {
+            let h = &t.stats.overall.hist;
+            let _ = writeln!(
+                s,
+                "  {:<12} {:>3} chiplets  {:>6} offered  {:>6} done  {:>4} dropped  \
+                 p50 {:>8.1} µs  p99 {:>8.1} µs  slo {:.1} µs: {} viol ({:.2} %), \
+                 goodput {:.0} req/s",
+                t.name,
+                t.chiplets,
+                t.offered,
+                t.stats.completed(),
+                t.stats.dropped,
+                h.quantile(0.5) as f64 / 1e3,
+                h.quantile(0.99) as f64 / 1e3,
+                t.slo_ns as f64 / 1e3,
+                t.stats.violations(),
+                t.stats.violation_frac() * 100.0,
+                t.stats.goodput_rps(),
+            );
+            let _ = writeln!(
+                s,
+                "  {:<12} noi: {} flows, {:.2} MB, {:.2} M byte-hops",
+                "",
+                t.comm.flows,
+                t.comm.bytes as f64 / 1e6,
+                t.comm.byte_hops as f64 / 1e6,
+            );
+        }
+        if let Some(matrix) = &self.interference {
+            s.push_str("interference matrix (solo -> co-located):\n");
+            for e in &matrix.entries {
+                let _ = writeln!(
+                    s,
+                    "  {:<12} p99 {:>8.1} -> {:>8.1} µs ({:.2}x)   goodput {:>7.0} -> \
+                     {:>7.0} req/s",
+                    e.tenant,
+                    e.solo_p99_ns as f64 / 1e3,
+                    e.co_p99_ns as f64 / 1e3,
+                    e.p99_slowdown(),
+                    e.solo_goodput_rps,
+                    e.co_goodput_rps,
+                );
+            }
+        }
+        if let Some(d) = self.dtm() {
+            s.push_str(&d.summary());
+        }
+        s
+    }
+
+    /// Stable digest for determinism checks.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!("seed={};placement={}", self.seed, self.placement.name());
+        for t in &self.tenants {
+            let _ = write!(
+                s,
+                ";{}[offered={};chiplets={};{};comm={}b{}h]",
+                t.name,
+                t.offered,
+                t.chiplets,
+                t.stats.fingerprint(),
+                t.comm.bytes,
+                t.comm.byte_hops,
+            );
+        }
+        let _ = write!(s, ";sim:{}", self.sim.fingerprint());
+        s
+    }
+}
+
+// ------------------------------------------------------------------- driver
+
+/// Run a co-located mix (and its solo baselines when requested).
+///
+/// `make_sim` builds a fresh, identically-configured [`Simulation`] per
+/// run — the co-located pass plus one pass per tenant when
+/// [`WorkloadMix::interference`] is set.  Placement masks are computed
+/// once from the mix and installed on every pass, so solo baselines
+/// differ from the co-located run *only* in which tenants are present.
+pub fn run_mix<F>(make_sim: F, mix: &WorkloadMix, seed: u64) -> anyhow::Result<MixReport>
+where
+    F: Fn() -> anyhow::Result<Simulation>,
+{
+    mix.validate()?;
+    let mut sim = make_sim()?;
+    let demands = mix.demands();
+    let mut ledger = MemoryLedger::new(sim.hardware());
+    let masks = compute_placements(
+        mix.placement,
+        sim.hardware(),
+        sim.topology(),
+        &demands,
+        &mut ledger,
+    )?;
+    let chiplets_per: Vec<usize> =
+        masks.iter().map(|m| m.iter().filter(|&&b| b).count()).collect();
+
+    // ---- co-located pass: all tenants share the one simulation ----
+    sim.set_tenant_masks(masks.clone());
+    let external = sim.thermal_spec().is_in_loop();
+    let mut source = MixSource::new(mix, seed)?;
+    let mut sink = MixSink::new(mix, external);
+    let mut report = sim.run_with_seeded(&mut source, &mut sink, seed)?;
+    let (co_stats, windows) = sink.into_parts(&mut report);
+
+    // ---- solo baselines (interference matrix) ----
+    let interference = if mix.interference {
+        let mut entries = Vec::with_capacity(mix.tenants.len());
+        for (idx, tenant) in mix.tenants.iter().enumerate() {
+            let mut solo_sim = make_sim()?;
+            solo_sim.set_tenant_masks(masks.clone());
+            let solo_external = solo_sim.thermal_spec().is_in_loop();
+            let mut solo_source = MixSource::solo(mix, seed, idx)?;
+            let mut solo_sink = MixSink::new(mix, solo_external);
+            let mut solo_report =
+                solo_sim.run_with_seeded(&mut solo_source, &mut solo_sink, seed)?;
+            let (solo_stats, _) = solo_sink.into_parts(&mut solo_report);
+            let solo = &solo_stats[idx];
+            let co = &co_stats[idx];
+            entries.push(InterferenceEntry {
+                tenant: tenant.name.clone(),
+                solo_completed: solo.completed(),
+                solo_p50_ns: solo.overall.hist.quantile(0.5),
+                solo_p99_ns: solo.overall.hist.quantile(0.99),
+                solo_goodput_rps: solo.goodput_rps(),
+                co_completed: co.completed(),
+                co_p50_ns: co.overall.hist.quantile(0.5),
+                co_p99_ns: co.overall.hist.quantile(0.99),
+                co_goodput_rps: co.goodput_rps(),
+            });
+        }
+        Some(InterferenceMatrix { entries })
+    } else {
+        None
+    };
+
+    let tenants = mix
+        .tenants
+        .iter()
+        .zip(co_stats)
+        .enumerate()
+        .map(|(idx, (spec, stats))| TenantOutcome {
+            name: spec.name.clone(),
+            offered: source.emitted_of(idx),
+            chiplets: chiplets_per[idx],
+            slo_ns: spec.slo_ns,
+            stats,
+            comm: report.tenant_comm.get(idx).copied().unwrap_or_default(),
+        })
+        .collect();
+    Ok(MixReport {
+        seed,
+        placement: mix.placement,
+        tenants,
+        windows,
+        interference,
+        sim: report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_validation_rejects_bad_shapes() {
+        assert!(WorkloadMix::new(vec![]).validate().is_err());
+        let t = |n: &str| TenantSpec::poisson(n, ModelKind::ResNet18, 500.0);
+        let dup = WorkloadMix::new(vec![t("a"), t("a")]);
+        assert!(dup.validate().unwrap_err().to_string().contains("duplicate"));
+        let ok = WorkloadMix::new(vec![t("a"), t("b")]);
+        assert!(ok.validate().is_ok());
+        let swallowed = WorkloadMix::new(vec![t("a")]).horizon_ms(1.0).warmup_ms(2.0);
+        assert!(swallowed.validate().is_err());
+    }
+
+    #[test]
+    fn mix_source_merges_monotone_and_tags_tenants() {
+        let mix = WorkloadMix::new(vec![
+            TenantSpec::poisson("a", ModelKind::ResNet18, 500_000.0),
+            TenantSpec::poisson("b", ModelKind::AlexNet, 500_000.0),
+        ])
+        .horizon_ms(1.0);
+        let mut src = MixSource::new(&mix, 7).unwrap();
+        let mut last = 0;
+        let mut seen = [0u64; 2];
+        let mut next_id = 0usize;
+        while let Some(r) = src.next_request() {
+            assert!(r.arrival_ns >= last, "merge must stay monotone");
+            assert_eq!(r.id, next_id, "ids are renumbered globally");
+            next_id += 1;
+            last = r.arrival_ns;
+            assert!(r.tenant < 2);
+            seen[r.tenant] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "both lanes must emit: {seen:?}");
+        assert_eq!(src.emitted_of(0), seen[0]);
+        assert_eq!(src.emitted_of(1), seen[1]);
+        assert!(src.exhausted());
+    }
+
+    #[test]
+    fn solo_source_replays_the_same_lane_stream() {
+        let mix = WorkloadMix::new(vec![
+            TenantSpec::poisson("a", ModelKind::ResNet18, 300_000.0),
+            TenantSpec::poisson("b", ModelKind::AlexNet, 700_000.0),
+        ])
+        .horizon_ms(1.0);
+        let mut both = MixSource::new(&mix, 21).unwrap();
+        let mut only_b: Vec<(TimeNs, ModelKind)> = Vec::new();
+        while let Some(r) = both.next_request() {
+            if r.tenant == 1 {
+                only_b.push((r.arrival_ns, r.kind));
+            }
+        }
+        let mut solo = MixSource::solo(&mix, 21, 1).unwrap();
+        let mut replay: Vec<(TimeNs, ModelKind)> = Vec::new();
+        while let Some(r) = solo.next_request() {
+            assert_eq!(r.tenant, 1, "solo source keeps the tenant index");
+            replay.push((r.arrival_ns, r.kind));
+        }
+        assert_eq!(only_b, replay, "solo baseline must see the identical stream");
+        assert!(MixSource::solo(&mix, 21, 2).is_err());
+    }
+
+    #[test]
+    fn tenant_seed_is_stable_and_index_sensitive() {
+        assert_eq!(tenant_seed(1, 0), tenant_seed(1, 0));
+        assert_ne!(tenant_seed(1, 0), tenant_seed(1, 1));
+        assert_ne!(tenant_seed(1, 0), tenant_seed(2, 0));
+    }
+}

@@ -19,7 +19,11 @@
 //!   time advances, finished state is retired, and power bins drain in
 //!   windows, so hour-long simulated traces run in constant memory; with
 //!   steady-state early stop and [`engine::LoadSweep`] bisection for the
-//!   saturation knee.
+//!   saturation knee;
+//! * [`mix`] — multi-tenant co-execution: a [`mix::WorkloadMix`] of N
+//!   tenants (model mix + arrival process + SLO each) shares one
+//!   simulation under a placement policy, with per-tenant stats and a
+//!   solo-vs-co-located interference matrix.
 //!
 //! ```no_run
 //! use chipsim::prelude::*;
@@ -40,6 +44,7 @@
 
 pub mod arrivals;
 pub mod engine;
+pub mod mix;
 pub mod slo;
 
 pub use arrivals::{
@@ -49,5 +54,9 @@ pub use arrivals::{
 pub use engine::{
     LoadSweep, SteadyState, StopReason, StreamingSource, SweepProbe, SweepResult, TrafficReport,
     TrafficSpec, WindowSummary,
+};
+pub use mix::{
+    run_mix, InterferenceEntry, InterferenceMatrix, MixReport, MixSource, TenantOutcome,
+    TenantSpec, WorkloadMix,
 };
 pub use slo::{KindServing, LatencyHistogram, ServingStats};

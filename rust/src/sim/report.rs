@@ -3,7 +3,7 @@
 use std::collections::BTreeMap;
 
 use crate::dtm::DtmReport;
-use crate::noc::LinkUtilization;
+use crate::noc::{LinkUtilization, TenantComm};
 use crate::power::PowerTracker;
 use crate::util::benchkit::fmt_ns;
 use crate::workload::ModelKind;
@@ -14,6 +14,8 @@ use crate::TimeNs;
 pub struct ModelOutcome {
     pub id: usize,
     pub kind: ModelKind,
+    /// Owning tenant in a multi-tenant mix (0 for single-tenant runs).
+    pub tenant: usize,
     pub arrival_ns: TimeNs,
     pub mapped_ns: TimeNs,
     pub finished_ns: TimeNs,
@@ -95,6 +97,9 @@ pub struct SimReport {
     pub noc_work: u64,
     /// Per-link NoI utilization over the run (bottleneck analysis).
     pub link_util: LinkUtilization,
+    /// NoI traffic attributed per tenant (dense by tenant index; a
+    /// single-tenant run books everything under tenant 0).
+    pub tenant_comm: Vec<TenantComm>,
     /// Wall-clock runtime of the simulation itself, ns.
     pub wall_ns: u128,
     /// Statistics window applied (warmup/cooldown trimming).

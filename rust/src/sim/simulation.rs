@@ -37,7 +37,7 @@ use crate::config::{
 use crate::dtm::DtmRuntime;
 use crate::mapping::{MapContext, Mapper, MemoryLedger, ModelMapping, NearestNeighbor};
 use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
-use crate::noc::{FlowId, FlowSpec, NetworkSim};
+use crate::noc::{FlowId, FlowSpec, NetworkSim, TenantTraffic};
 use crate::power::{PowerTracker, PowerWindow};
 use crate::sim::report::{ModelOutcome, SimReport, ThermalSummary};
 use crate::thermal::stepper::ThermalStepper;
@@ -251,8 +251,9 @@ pub trait StreamSink {
 
     /// A request was dropped as unmappable.  Streaming sinks count these
     /// (the report's `dropped` list is only populated when state is
-    /// retained).
-    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _now: TimeNs) {}
+    /// retained).  `tenant` is the owning tenant index (0 outside
+    /// multi-tenant mixes) so per-tenant sinks can attribute the loss.
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _tenant: usize, _now: TimeNs) {}
 
     /// `true` (default) keeps per-model outcomes and instance state alive
     /// for the final report; `false` retires finished instances and skips
@@ -485,6 +486,7 @@ impl SimulationBuilder {
             thermal: self.thermal,
             observers: self.observers,
             traffic: self.traffic,
+            tenant_masks: None,
         })
     }
 }
@@ -612,6 +614,10 @@ pub struct Simulation {
     thermal: ThermalSpec,
     observers: Vec<ObserverHandle>,
     traffic: Option<crate::serving::TrafficSpec>,
+    /// Per-tenant placement masks (index = `ModelRequest::tenant`): when
+    /// set, a request only maps onto chiplets its tenant's mask allows.
+    /// Installed by the multi-tenant mix engine ([`crate::serving::mix`]).
+    tenant_masks: Option<Vec<Vec<bool>>>,
 }
 
 impl Simulation {
@@ -648,6 +654,25 @@ impl Simulation {
     /// for tests).
     pub fn set_backend(&mut self, backend: Box<dyn ComputeBackend>) {
         self.backend = backend;
+    }
+
+    /// Install per-tenant placement masks (index = request tenant).
+    /// Requests of tenant `t` then only map onto chiplets where
+    /// `masks[t][c]` is true; requests with a tenant index beyond the
+    /// table fall back to unrestricted placement.  Compute masks with
+    /// [`crate::mapping::placement::compute_placements`].
+    pub fn set_tenant_masks(&mut self, masks: Vec<Vec<bool>>) {
+        self.tenant_masks = Some(masks);
+    }
+
+    /// Remove any installed tenant masks (single-tenant behaviour).
+    pub fn clear_tenant_masks(&mut self) {
+        self.tenant_masks = None;
+    }
+
+    /// The installed per-tenant placement masks, if any.
+    pub fn tenant_masks(&self) -> Option<&[Vec<bool>]> {
+        self.tenant_masks.as_deref()
     }
 
     /// Run the co-simulation to completion.  Reusable: each call builds a
@@ -762,6 +787,14 @@ impl Simulation {
         let mut chiplets: Vec<ChipletState> =
             (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect();
         let mut instances: Vec<Instance> = Vec::new();
+        // Multi-tenant accounting: NoI traffic attributed per tenant, and
+        // how many instances each tenant has resident (the drop probe only
+        // examines a tenant's queue while it has nothing mapped).  Sized
+        // up front from the mask table so "tenant never mapped anything
+        // yet" reads as an explicit zero, not a missing slot.
+        let mut tenant_traffic = TenantTraffic::new();
+        let mut tenant_active: Vec<u64> =
+            vec![0; self.tenant_masks.as_ref().map(|m| m.len()).unwrap_or(1).max(1)];
         let mut flow_of: HashMap<FlowId, (usize, usize, u32)> = HashMap::new();
         let mut outcomes: Vec<ModelOutcome> = Vec::new();
         let mut dropped: Vec<(usize, ModelKind)> = Vec::new();
@@ -874,20 +907,23 @@ impl Simulation {
                 } else {
                     None
                 };
-                let ctx = MapContext {
-                    hw: &self.hw,
-                    topo: &self.topo,
-                    heat: heat.as_deref(),
-                    heat_weight_hops: self.params.thermal_aware_hops,
-                };
                 loop {
                     // Probe and commit in one pass: the mapper journals
                     // its allocations on the live ledger and rolls back on
                     // failure, so a successful probe *is* the mapping — no
                     // speculative ledger clone, no second placement pass.
+                    // The context is per-request: placement masks confine
+                    // each request to its owning tenant's chiplets.
                     let mut probed: Option<ModelMapping> = None;
                     let taken = arb.take_next_mappable($t, |req| {
                         let model = model_of(req.kind);
+                        let ctx = MapContext {
+                            hw: &self.hw,
+                            topo: &self.topo,
+                            heat: heat.as_deref(),
+                            heat_weight_hops: self.params.thermal_aware_hops,
+                            allowed: mask_of(&self.tenant_masks, req.tenant),
+                        };
                         probed = self.mapper.try_map(&ctx, &model, &mut ledger);
                         probed.is_some()
                     });
@@ -914,6 +950,11 @@ impl Simulation {
                     let inst_id = free_slots.pop().unwrap_or(instances.len());
                     notify!(on_model_mapped(req.id, req.kind, $t));
                     let inferences = req.inferences;
+                    let tenant = req.tenant;
+                    if tenant >= tenant_active.len() {
+                        tenant_active.resize(tenant + 1, 0);
+                    }
+                    tenant_active[tenant] += 1;
                     let mut inst = Instance {
                         req,
                         model,
@@ -955,6 +996,7 @@ impl Simulation {
                             instances[inst_id] = inst;
                         }
                         for f in flows {
+                            tenant_traffic.add_flow(tenant, f.bytes, self.topo.hops(f.src, f.dst));
                             let id = net.inject(f, $t);
                             flow_of.insert(id, (inst_id, WEIGHT_LAYER, 0));
                         }
@@ -968,36 +1010,68 @@ impl Simulation {
                         dispatch_ready!(inst_id, 0, $t);
                     }
                 }
-                // Requests that can never fit even on an empty system are
-                // dropped (and reported) instead of deadlocking the queue.
-                if instances.iter().all(|i| i.finished) {
-                    let probe_ctx = MapContext {
-                        hw: &self.hw,
-                        topo: &self.topo,
-                        heat: None,
-                        heat_weight_hops: 0.0,
-                    };
-                    while let Some(req) = arb.take_next_mappable($t, |_| true) {
-                        let model = model_of(req.kind);
-                        let mut probe = MemoryLedger::new(&self.hw);
-                        if self.mapper.try_map(&probe_ctx, &model, &mut probe).is_none() {
-                            log::warn!(
-                                "dropping model {} ({}): needs {} bytes, system has {}",
-                                req.id,
-                                req.kind.name(),
-                                model.total_weight_bytes(),
-                                total_capacity
-                            );
-                            notify!(on_model_dropped(req.id, req.kind, $t));
-                            sink.on_dropped(req.id, req.kind, $t);
-                            if retain {
-                                dropped.push((req.id, req.kind));
-                            }
-                        } else {
-                            arb.push(req);
-                            break;
+                // Requests that can never fit even on an *empty* system —
+                // or, under placement masks, an empty tenant partition —
+                // are dropped (and reported) instead of deadlocking the
+                // queue.  A tenant's queue is only probed while it has
+                // nothing mapped: a busy tenant's unmappable request may
+                // simply be waiting for its own instances to unmap, which
+                // is the normal backlog case, not a dead one.  The guard
+                // keeps the whole walk off the hot path: a saturated run
+                // (every tenant busy) skips it with one vector scan
+                // instead of touching the backlog per event.  Within one
+                // pass, a tenant whose oldest pending request turns out
+                // to fit an empty placement is memoized and its younger
+                // requests skipped — an idle tenant queueing behind a
+                // co-tenant's memory pays one empty-fit probe per event,
+                // not one per backlog entry.
+                let mut dropped_any = false;
+                let mut fits_empty: Vec<usize> = Vec::new();
+                while !arb.is_empty() && tenant_active.iter().any(|&a| a == 0) {
+                    let taken = arb.take_next_mappable($t, |req| {
+                        if tenant_active.get(req.tenant).copied().unwrap_or(0) > 0
+                            || fits_empty.contains(&req.tenant)
+                        {
+                            return false;
                         }
+                        let model = model_of(req.kind);
+                        let probe_ctx = MapContext {
+                            hw: &self.hw,
+                            topo: &self.topo,
+                            heat: None,
+                            heat_weight_hops: 0.0,
+                            allowed: mask_of(&self.tenant_masks, req.tenant),
+                        };
+                        let mut probe = MemoryLedger::new(&self.hw);
+                        // Taking the request == sentencing it to drop.
+                        if self.mapper.try_map(&probe_ctx, &model, &mut probe).is_some() {
+                            fits_empty.push(req.tenant);
+                            return false;
+                        }
+                        true
+                    });
+                    let Some(req) = taken else { break };
+                    log::warn!(
+                        "dropping model {} ({}, tenant {}): needs {} bytes, cannot fit \
+                         its empty placement (system capacity {})",
+                        req.id,
+                        req.kind.name(),
+                        req.tenant,
+                        model_of(req.kind).total_weight_bytes(),
+                        total_capacity
+                    );
+                    notify!(on_model_dropped(req.id, req.kind, $t));
+                    sink.on_dropped(req.id, req.kind, req.tenant, $t);
+                    if retain {
+                        dropped.push((req.id, req.kind));
                     }
+                    dropped_any = true;
+                }
+                if dropped_any {
+                    // A dropped request may have been the over-age blocker
+                    // pinning younger, mappable requests in the queue:
+                    // re-run arbitration once the event is processed.
+                    push(&mut queue, &mut seq, $t, Event::TryMap);
                 }
             }};
         }
@@ -1007,7 +1081,7 @@ impl Simulation {
                 let inst = $inst;
                 let layer = $layer;
                 let inference = $inference;
-                let (flows, expected) = {
+                let (flows, expected, tenant) = {
                     let me = &instances[inst];
                     let out_bytes = me.model.layers[layer].out_bytes;
                     let srcs = &me.mapping.layers[layer];
@@ -1022,11 +1096,12 @@ impl Simulation {
                         }
                     }
                     let n = flows.len();
-                    (flows, n)
+                    (flows, n, me.req.tenant)
                 };
                 instances[inst].inflows.insert((layer + 1, inference), expected);
                 instances[inst].comm_start.insert((layer + 1, inference), $t);
                 for f in flows {
+                    tenant_traffic.add_flow(tenant, f.bytes, self.topo.hops(f.src, f.dst));
                     let id = net.inject(f, $t);
                     flow_of.insert(id, (inst, layer + 1, inference));
                 }
@@ -1038,11 +1113,15 @@ impl Simulation {
                 let inst = $inst;
                 instances[inst].finished = true;
                 ledger.release_mapping(&instances[inst].mapping);
+                if let Some(active) = tenant_active.get_mut(instances[inst].req.tenant) {
+                    *active = active.saturating_sub(1);
+                }
                 let outcome = {
                     let me = &instances[inst];
                     ModelOutcome {
                         id: me.req.id,
                         kind: me.req.kind,
+                        tenant: me.req.tenant,
                         arrival_ns: me.req.arrival_ns,
                         mapped_ns: me.mapped_ns,
                         finished_ns: $t,
@@ -1279,6 +1358,7 @@ impl Simulation {
             compute_energy_pj: compute_energy,
             noc_work: net.work_done(),
             link_util,
+            tenant_comm: tenant_traffic.into_vec(),
             wall_ns: wall_start.elapsed().as_nanos(),
             stats_window: (self.params.warmup_ns, hi),
             thermal,
@@ -1290,6 +1370,12 @@ impl Simulation {
         Ok(report)
     }
 
+}
+
+/// Placement mask of `tenant` (`None` = unrestricted placement — the
+/// single-tenant default, and the fallback for tenants beyond the table).
+fn mask_of(masks: &Option<Vec<Vec<bool>>>, tenant: usize) -> Option<&[bool]> {
+    masks.as_ref().and_then(|m| m.get(tenant)).map(|v| v.as_slice())
 }
 
 /// Roll the stepper's final state up into the report's summary (`None`

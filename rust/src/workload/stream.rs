@@ -21,6 +21,10 @@ pub struct ModelRequest {
     pub arrival_ns: TimeNs,
     /// Back-to-back inferences to execute once mapped (paper Table III).
     pub inferences: u32,
+    /// Owning tenant in a multi-tenant mix (0 for single-tenant runs).
+    /// Placement masks, SLO accounting, and NoI flow attribution key off
+    /// this index (see [`crate::serving::mix`]).
+    pub tenant: usize,
 }
 
 /// Generator for the paper's driver workload: `n` models uniformly sampled
@@ -41,6 +45,7 @@ impl WorkloadStream {
                 kind: *rng.choice(&ALL_CNNS),
                 arrival_ns: id as TimeNs * injection_interval_ns,
                 inferences,
+                tenant: 0,
             })
             .collect();
         WorkloadStream { requests }
@@ -56,6 +61,7 @@ impl WorkloadStream {
                 kind,
                 arrival_ns: id as TimeNs * injection_interval_ns,
                 inferences,
+                tenant: 0,
             })
             .collect();
         WorkloadStream { requests }
@@ -147,7 +153,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize, kind: ModelKind, arrival: TimeNs) -> ModelRequest {
-        ModelRequest { id, kind, arrival_ns: arrival, inferences: 1 }
+        ModelRequest { id, kind, arrival_ns: arrival, inferences: 1, tenant: 0 }
     }
 
     #[test]

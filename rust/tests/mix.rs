@@ -1,0 +1,239 @@
+//! Integration tests for multi-tenant co-execution: end-to-end mix runs
+//! in both NoC fidelities, the solo-vs-co-located interference matrix,
+//! per-tenant accounting, and determinism.
+
+use chipsim::config::{HardwareConfig, SimParams};
+use chipsim::mapping::PlacementPolicy;
+use chipsim::scenario::Registry;
+use chipsim::serving::mix::{run_mix, MixReport, TenantSpec, WorkloadMix};
+use chipsim::sim::Simulation;
+use chipsim::workload::ModelKind;
+
+fn serving_params() -> SimParams {
+    SimParams { pipelined: true, warmup_ns: 0, cooldown_ns: 0, ..SimParams::default() }
+}
+
+fn run_on(hw: &HardwareConfig, mix: &WorkloadMix, seed: u64) -> MixReport {
+    let hw = hw.clone();
+    run_mix(
+        move || {
+            Simulation::builder()
+                .hardware(hw.clone())
+                .params(serving_params())
+                .build()
+        },
+        mix,
+        seed,
+    )
+    .expect("mix run")
+}
+
+/// Every offered request must be accounted for once the horizon drains:
+/// counted, truncated by warm-up, or dropped.
+fn assert_accounted(report: &MixReport) {
+    for t in &report.tenants {
+        assert_eq!(
+            t.offered,
+            t.stats.completed() + t.stats.warmup_skipped + t.stats.dropped,
+            "tenant '{}' loses requests: {} offered vs {} done + {} warmup + {} dropped",
+            t.name,
+            t.offered,
+            t.stats.completed(),
+            t.stats.warmup_skipped,
+            t.stats.dropped,
+        );
+    }
+}
+
+#[test]
+fn contended_mix_reports_interference_with_co_p99_at_least_solo() {
+    // The constrained-bandwidth preset: narrow links, fully interleaved
+    // placement — co-location must not look free.
+    let reg = Registry::builtin();
+    let sc = reg.get("mix-contended-interleaved").expect("builtin mix preset");
+    let report = sc.run_mix(0xC0FFEE).expect("mix preset runs end-to-end");
+    assert_eq!(report.tenants.len(), 2);
+    assert_accounted(&report);
+    for t in &report.tenants {
+        assert!(t.offered > 0, "tenant '{}' offered nothing", t.name);
+        assert!(t.stats.completed() > 0, "tenant '{}' completed nothing", t.name);
+        assert!(t.chiplets > 0);
+        assert!(t.comm.flows > 0 && t.comm.byte_hops > 0, "no NoI attribution for '{}'", t.name);
+    }
+    let matrix = report.interference.as_ref().expect("preset enables the interference sweep");
+    assert_eq!(matrix.entries.len(), 2);
+    for e in &matrix.entries {
+        assert!(e.solo_p99_ns > 0, "solo baseline of '{}' is empty", e.tenant);
+        assert!(e.co_p99_ns > 0);
+    }
+    // The acceptance property: sharing a constrained fabric makes the
+    // co-located tail at least as bad as the solo tail for someone.
+    assert!(
+        matrix.max_p99_slowdown() >= 1.0,
+        "co-location cannot beat every tenant's solo p99: {:?}",
+        matrix
+            .entries
+            .iter()
+            .map(|e| (e.tenant.clone(), e.solo_p99_ns, e.co_p99_ns))
+            .collect::<Vec<_>>()
+    );
+    // The summary renders the matrix.
+    let s = report.summary();
+    assert!(s.contains("interference matrix"), "{s}");
+}
+
+#[test]
+fn flit_fidelity_mix_runs_end_to_end() {
+    let reg = Registry::builtin();
+    let sc = reg.get("mix-duo-partitioned-flit").expect("builtin flit mix preset");
+    assert_eq!(sc.params().noc_fidelity, chipsim::config::NocFidelity::Flit);
+    let report = sc.run_mix(0xBEEF).expect("flit mix runs end-to-end");
+    assert_eq!(report.tenants.len(), 2);
+    assert_accounted(&report);
+    for t in &report.tenants {
+        assert!(t.stats.completed() > 0, "tenant '{}' completed nothing", t.name);
+        assert!(t.comm.byte_hops > 0);
+    }
+    assert_eq!(report.placement, PlacementPolicy::DisjointPartition);
+    // Disjoint partitions: no chiplet serves two tenants.
+    let a = &report.tenants[0];
+    let b = &report.tenants[1];
+    assert!(a.chiplets + b.chiplets <= 36);
+}
+
+#[test]
+fn disjoint_partitions_reproduce_solo_latency_when_bandwidth_is_unconstrained() {
+    // Two equal tenants split a 6x6 mesh into complete row bands (equal
+    // demands -> 18 + 18 chiplets), and 256 B links make communication
+    // negligible.  With nothing shared, the co-located run must
+    // reproduce each tenant's solo behaviour.
+    let mut hw = HardwareConfig::homogeneous_mesh(6, 6);
+    hw.link.width_bytes = 256;
+    let mix = WorkloadMix::new(vec![
+        TenantSpec::poisson("north", ModelKind::ResNet18, 800.0).slo_ms(2.0),
+        TenantSpec::poisson("south", ModelKind::ResNet18, 800.0).slo_ms(2.0),
+    ])
+    .placement(PlacementPolicy::DisjointPartition)
+    .horizon_ms(20.0)
+    .warmup_ms(2.0)
+    .window_ms(5.0)
+    .interference(true);
+    let report = run_on(&hw, &mix, 0x5EED);
+    assert_accounted(&report);
+    assert_eq!(report.tenants[0].chiplets, 18);
+    assert_eq!(report.tenants[1].chiplets, 18);
+    let matrix = report.interference.as_ref().expect("interference enabled");
+    for (t, e) in report.tenants.iter().zip(&matrix.entries) {
+        assert!(t.stats.completed() > 20, "tenant '{}' too sparse to compare", t.name);
+        // Identical arrival stream, disjoint chiplets, idle links: solo
+        // and co-located completions must match one for one.
+        assert_eq!(
+            e.co_completed, e.solo_completed,
+            "tenant '{}': co-located run must complete the same requests solo did",
+            e.tenant
+        );
+        let rel = |a: u64, b: u64| {
+            (a as f64 - b as f64).abs() / (b as f64).max(1.0)
+        };
+        assert!(
+            rel(e.co_p99_ns, e.solo_p99_ns) < 0.01,
+            "tenant '{}': co p99 {} vs solo p99 {} differ with nothing shared",
+            e.tenant,
+            e.co_p99_ns,
+            e.solo_p99_ns
+        );
+        assert!(
+            rel(e.co_p50_ns, e.solo_p50_ns) < 0.01,
+            "tenant '{}': co p50 {} vs solo p50 {} differ with nothing shared",
+            e.tenant,
+            e.co_p50_ns,
+            e.solo_p50_ns
+        );
+    }
+}
+
+#[test]
+fn mix_is_deterministic_per_seed() {
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let mix = WorkloadMix::new(vec![
+        TenantSpec::poisson("a", ModelKind::ResNet18, 600.0).slo_ms(2.0),
+        TenantSpec::poisson("b", ModelKind::AlexNet, 300.0).slo_ms(4.0),
+    ])
+    .placement(PlacementPolicy::GreedyBestFit)
+    .horizon_ms(10.0)
+    .warmup_ms(1.0)
+    .window_ms(2.0);
+    let x = run_on(&hw, &mix, 42);
+    let y = run_on(&hw, &mix, 42);
+    assert_eq!(x.fingerprint(), y.fingerprint());
+    let z = run_on(&hw, &mix, 43);
+    assert_ne!(x.fingerprint(), z.fingerprint(), "seed must matter");
+}
+
+#[test]
+fn infeasible_mix_is_rejected_up_front() {
+    // AlexNet (~61 MB) cannot fit any partition of a 4x4 system (32 MiB
+    // total): placement must fail fast with the journal rolled back, not
+    // let the run limp along dropping everything.
+    let hw = HardwareConfig::homogeneous_mesh(4, 4);
+    let mix = WorkloadMix::new(vec![
+        TenantSpec::poisson("fits", ModelKind::ResNet18, 400.0).slo_ms(2.0),
+        TenantSpec::poisson("huge", ModelKind::AlexNet, 200.0).slo_ms(4.0),
+    ])
+    .placement(PlacementPolicy::DisjointPartition)
+    .horizon_ms(5.0)
+    .warmup_ms(0.5)
+    .window_ms(1.0);
+    let err = run_mix(
+        {
+            let hw = hw.clone();
+            move || Simulation::builder().hardware(hw.clone()).params(serving_params()).build()
+        },
+        &mix,
+        7,
+    )
+    .err()
+    .expect("placement must reject the infeasible mix");
+    assert!(err.to_string().contains("infeasible"), "{err}");
+}
+
+#[test]
+fn oversized_request_drops_within_its_partition_while_other_tenant_serves() {
+    use chipsim::sim::{BatchSource, NullSink};
+    use chipsim::workload::ModelRequest;
+    // Hand-built masks: tenant 0 owns rows 0..3, tenant 1 rows 3..6
+    // (18 chiplets = 36 MiB — AlexNet's ~61 MB can never map there, and
+    // its fc6 layer alone outgrows the partition).  The request must be
+    // dropped promptly, attributed to tenant 1, while tenant 0 serves.
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let n = hw.num_chiplets();
+    let mut sim = Simulation::builder()
+        .hardware(hw.clone())
+        .params(serving_params())
+        .build()
+        .unwrap();
+    sim.set_tenant_masks(vec![
+        (0..n).map(|c| c < 18).collect(),
+        (0..n).map(|c| c >= 18).collect(),
+    ]);
+    let req = |id: usize, kind, arrival_ns, tenant| ModelRequest {
+        id,
+        kind,
+        arrival_ns,
+        inferences: 1,
+        tenant,
+    };
+    let reqs = vec![
+        req(0, ModelKind::ResNet18, 0, 0),
+        req(1, ModelKind::AlexNet, 10, 1),
+        req(2, ModelKind::ResNet18, 20, 0),
+    ];
+    let report = sim.run_with(&mut BatchSource::new(reqs), &mut NullSink).unwrap();
+    assert_eq!(report.dropped, vec![(1, ModelKind::AlexNet)]);
+    assert_eq!(report.outcomes.len(), 2);
+    assert!(report.outcomes.iter().all(|o| o.tenant == 0));
+    // NoI flow attribution: the serving tenant moved activations, the
+    // dropped one never injected a flow.
+    assert!(report.tenant_comm[0].byte_hops > 0);
+    assert_eq!(report.tenant_comm.get(1).map(|c| c.flows).unwrap_or(0), 0);
+}

@@ -14,8 +14,7 @@
 //! power profile is pushed through the AOT thermal artifact when
 //! available.  Results are recorded in EXPERIMENTS.md.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use chipsim::baselines::BaselineEstimator;
 use chipsim::config::{HardwareConfig, SimParams, WorkloadConfig};
@@ -41,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             cooldown_ns: 0,
             ..SimParams::default()
         };
-        let counter = Rc::new(RefCell::new(EventCounter::default()));
+        let counter = Arc::new(Mutex::new(EventCounter::default()));
         let t0 = std::time::Instant::now();
         let report = Simulation::builder()
             .hardware(hw.clone())
@@ -55,8 +54,8 @@ fn main() -> anyhow::Result<()> {
             report.outcomes.len(),
             fmt_ns(report.span_ns as f64),
             t0.elapsed(),
-            counter.borrow().mapped,
-            counter.borrow().compute_events,
+            counter.lock().unwrap().mapped,
+            counter.lock().unwrap().compute_events,
         );
         let mut t = Table::new(
             &format!("baseline inaccuracy ({mode}, 10 inf/model)"),

@@ -11,6 +11,7 @@
 //!   L3  streaming traffic       (requests/s through the serving engine)
 //!   L3  multi-tenant mix        (co-executed requests/s, 2 tenants sharing the NoI)
 //!   L3  closed-loop DTM         (control windows/s incl. in-loop thermal)
+//!   L3  fleet serving           (fleet requests/s: 4 boards, epoch dispatcher)
 //!   L2  native thermal step     (node-updates/s)
 //!   L2  PJRT thermal transient  (steps/s incl. dispatch overhead)
 //!
@@ -275,6 +276,54 @@ fn bench_dtm_closed_loop() {
     );
 }
 
+/// Whole-fleet serving throughput: dispatcher + routing + the parallel
+/// epoch advance of 4 replica boards.  `fleet_requests_per_s` lands in
+/// the JSON artifact for visibility; `python/bench_check.py` does not
+/// enforce it yet (its floor file is added via `--ratchet` once CI has
+/// measured baselines).
+fn bench_fleet_serving() {
+    use chipsim::fleet::{parse_routing, Fleet, FleetSpec};
+    use chipsim::serving::{ArrivalSpec, TrafficSpec};
+    let board = || {
+        Simulation::builder()
+            .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+            .params(SimParams {
+                pipelined: true,
+                warmup_ns: 0,
+                cooldown_ns: 0,
+                ..SimParams::default()
+            })
+            .build()
+    };
+    let spec = TrafficSpec::new(
+        ArrivalSpec::poisson(8_000.0).kinds(&[ModelKind::ResNet18, ModelKind::ResNet34]),
+    )
+    .horizon_ms(10.0)
+    .warmup_ms(1.0)
+    .window_ms(2.0)
+    .slo_ms(2.0)
+    .steady(None);
+    let mut served = 0u64;
+    let r = bench("fleet: 4x 6x6 boards, 8 krps x 10 ms, least-outstanding", 2, 2000, || {
+        let report = Fleet::new(
+            FleetSpec::new(spec.clone(), 4),
+            board,
+            parse_routing("least-outstanding").unwrap(),
+        )
+        .run(0xF1EE7)
+        .unwrap();
+        served = report.global.completed() + report.global.warmup_skipped;
+        std::hint::black_box(report.epochs);
+    });
+    let rate = served as f64 / (r.mean_ns / 1e9);
+    let r = r.with_metric("fleet_requests_per_s", rate);
+    if let Err(e) = r.save_json(&chipsim::util::benchkit::bench_json_dir()) {
+        eprintln!("benchkit: could not persist fleet metrics: {e:#}");
+    }
+    r.print();
+    println!("  -> {:.1} k fleet requests/s of wall time ({served} per run)", rate / 1e3);
+}
+
 fn bench_native_thermal() {
     let hw = HardwareConfig::homogeneous_mesh(10, 10);
     let tm = ThermalModel::build(&hw);
@@ -324,6 +373,7 @@ fn main() {
     bench_traffic_steady_state();
     bench_mix_coexecution();
     bench_dtm_closed_loop();
+    bench_fleet_serving();
     bench_native_thermal();
     bench_pjrt_thermal();
 }

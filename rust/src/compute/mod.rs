@@ -59,10 +59,12 @@ pub struct ComputeResult {
 
 /// A compute simulator backend.
 ///
-/// Not `Send`: the PJRT client wraps non-thread-safe FFI handles; each
-/// simulation owns its backend on one thread (compute *parallelism* in
-/// CHIPSIM is event-level, not thread-level).
-pub trait ComputeBackend {
+/// `Send` (not `Sync`): each simulation owns its backend exclusively, and
+/// the fleet layer moves whole replica boards across worker-pool threads
+/// between epochs.  Compute *parallelism* within one board is still
+/// event-level, not thread-level — a backend is never called from two
+/// threads at once.
+pub trait ComputeBackend: Send {
     fn name(&self) -> &'static str;
 
     /// Evaluate one segment on one chiplet type.

@@ -20,8 +20,9 @@ use crate::TimeNs;
 ///
 /// `state[c]` holds chiplet `c`'s current index into the table (0 =
 /// fastest); implementations mutate it in place.  Called once per
-/// control window with monotonically increasing `now_ns`.
-pub trait Governor {
+/// control window with monotonically increasing `now_ns`.  `Send` so DTM
+/// state can ride a run session across fleet worker-pool threads.
+pub trait Governor: Send {
     fn name(&self) -> &'static str;
 
     fn decide(&mut self, now_ns: TimeNs, temps_c: &[f64], table: &DvfsTable, state: &mut [usize]);

@@ -371,6 +371,13 @@ impl DtmRuntime {
         self.spec.table.states[self.idx[chiplet]].energy_factor()
     }
 
+    /// Hottest chiplet temperature as of the last closed control window
+    /// (ambient before any window closed).  The fleet's thermal-aware
+    /// routing and emergency-migration predicate read this between epochs.
+    pub fn hottest_c(&self) -> f64 {
+        self.stepper.hottest_c()
+    }
+
     /// Advance the control loop to virtual time `now`: close every
     /// elapsed window — drain its power (forwarded to `sink`), step the
     /// RC network, poll sensors, run the governor.

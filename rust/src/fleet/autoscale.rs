@@ -1,0 +1,200 @@
+//! Autoscaling policies: how many boards the fleet *wants* at a barrier.
+//!
+//! A policy only states the desired replica count; the fleet applies it
+//! with the mechanical costs — a scaled-up board spends
+//! `cold_start_ns` loading model weights before it accepts work, and a
+//! scaled-down board drains its backlog onto the survivors before it
+//! retires.  Policies are consulted once per epoch barrier from the
+//! same snapshots routing sees.
+
+use crate::fleet::ReplicaSnapshot;
+use crate::TimeNs;
+
+/// Desired fleet size as a function of barrier state.  The returned
+/// count is clamped by the caller to `[1, max]`; policies should still
+/// clamp themselves so hysteresis reasoning stays local.
+pub trait Autoscaler: Send {
+    fn name(&self) -> &'static str;
+    /// `current` counts live boards, including ones still cold-starting
+    /// (they are capacity already paid for).
+    fn desired(
+        &mut self,
+        now_ns: TimeNs,
+        snaps: &[ReplicaSnapshot],
+        current: usize,
+        max: usize,
+    ) -> usize;
+}
+
+/// One scale decision the fleet acted on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleEvent {
+    pub at_ns: TimeNs,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// Hold mean compute utilization near a target: one board up when the
+/// fleet runs hotter than `target + band`, one down when cooler than
+/// `target - band`.  The dead band is the hysteresis that stops the
+/// fleet oscillating around the target every epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct TargetUtilization {
+    pub target: f64,
+    pub band: f64,
+}
+
+impl Default for TargetUtilization {
+    fn default() -> TargetUtilization {
+        TargetUtilization { target: 0.65, band: 0.15 }
+    }
+}
+
+impl Autoscaler for TargetUtilization {
+    fn name(&self) -> &'static str {
+        "util"
+    }
+
+    fn desired(
+        &mut self,
+        _now_ns: TimeNs,
+        snaps: &[ReplicaSnapshot],
+        current: usize,
+        max: usize,
+    ) -> usize {
+        if snaps.is_empty() {
+            return current.clamp(1, max);
+        }
+        let mean = snaps.iter().map(|s| s.busy_frac).sum::<f64>() / snaps.len() as f64;
+        if mean > self.target + self.band {
+            (current + 1).min(max)
+        } else if mean < self.target - self.band {
+            current.saturating_sub(1).max(1)
+        } else {
+            current
+        }
+    }
+}
+
+/// Size the fleet from backlog: enough boards that no replica carries
+/// more than `per_replica` outstanding requests.  Reacts faster than
+/// utilization (queues grow before compute saturates) at the price of
+/// more scale churn on bursty arrivals.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueDepth {
+    pub per_replica: usize,
+}
+
+impl Default for QueueDepth {
+    fn default() -> QueueDepth {
+        QueueDepth { per_replica: 16 }
+    }
+}
+
+impl Autoscaler for QueueDepth {
+    fn name(&self) -> &'static str {
+        "queue"
+    }
+
+    fn desired(
+        &mut self,
+        _now_ns: TimeNs,
+        snaps: &[ReplicaSnapshot],
+        _current: usize,
+        max: usize,
+    ) -> usize {
+        let total: usize = snaps.iter().map(|s| s.outstanding).sum();
+        let per = self.per_replica.max(1);
+        total.div_ceil(per).clamp(1, max)
+    }
+}
+
+/// Resolve an autoscaler by CLI/preset name; `"none"`/`"off"` disables
+/// autoscaling (fixed fleet).  `util` and `queue` accept an optional
+/// `:value` parameter (target fraction / queue depth).
+pub fn parse_autoscaler(name: &str) -> anyhow::Result<Option<Box<dyn Autoscaler>>> {
+    let (kind, arg) = match name.split_once(':') {
+        Some((k, v)) => (k, Some(v)),
+        None => (name, None),
+    };
+    Ok(match kind {
+        "none" | "off" => None,
+        "util" => {
+            let mut p = TargetUtilization::default();
+            if let Some(v) = arg {
+                p.target = v
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("bad util target '{v}'"))?;
+                anyhow::ensure!(
+                    p.target > 0.0 && p.target < 1.0,
+                    "util target must be in (0, 1), got {}",
+                    p.target
+                );
+            }
+            Some(Box::new(p))
+        }
+        "queue" => {
+            let mut p = QueueDepth::default();
+            if let Some(v) = arg {
+                p.per_replica = v
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad queue depth '{v}'"))?;
+                anyhow::ensure!(p.per_replica > 0, "queue depth must be positive");
+            }
+            Some(Box::new(p))
+        }
+        other => anyhow::bail!(
+            "unknown autoscaler '{other}' (expected none, util[:target], or queue[:depth])"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: usize, outstanding: usize, busy_frac: f64) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id,
+            accepting: true,
+            outstanding,
+            queue_depth: 0,
+            busy_frac,
+            hottest_c: None,
+            now: 0,
+        }
+    }
+
+    #[test]
+    fn util_scales_up_down_and_holds_in_band() {
+        let mut p = TargetUtilization { target: 0.6, band: 0.1 };
+        let hot = [snap(0, 0, 0.95), snap(1, 0, 0.85)];
+        assert_eq!(p.desired(0, &hot, 2, 4), 3);
+        let cool = [snap(0, 0, 0.1), snap(1, 0, 0.2)];
+        assert_eq!(p.desired(0, &cool, 2, 4), 1);
+        let inband = [snap(0, 0, 0.55), snap(1, 0, 0.65)];
+        assert_eq!(p.desired(0, &inband, 2, 4), 2);
+        // Never below one board, never above max.
+        assert_eq!(p.desired(0, &cool, 1, 4), 1);
+        assert_eq!(p.desired(0, &hot, 4, 4), 4);
+    }
+
+    #[test]
+    fn queue_depth_sizes_from_backlog() {
+        let mut p = QueueDepth { per_replica: 8 };
+        let snaps = [snap(0, 20, 0.0), snap(1, 5, 0.0)];
+        assert_eq!(p.desired(0, &snaps, 2, 8), 4); // ceil(25 / 8)
+        let idle = [snap(0, 0, 0.0)];
+        assert_eq!(p.desired(0, &idle, 1, 8), 1);
+    }
+
+    #[test]
+    fn parse_handles_args_and_rejects_junk() {
+        assert!(parse_autoscaler("none").unwrap().is_none());
+        assert_eq!(parse_autoscaler("util:0.8").unwrap().unwrap().name(), "util");
+        assert_eq!(parse_autoscaler("queue:4").unwrap().unwrap().name(), "queue");
+        assert!(parse_autoscaler("util:1.5").is_err());
+        assert!(parse_autoscaler("queue:0").is_err());
+        assert!(parse_autoscaler("banana").is_err());
+    }
+}

@@ -1,0 +1,829 @@
+//! Fleet-scale serving: a datacenter of chiplet boards behind one
+//! dispatcher.
+//!
+//! A [`Fleet`] owns N replica boards — each a full board-level
+//! [`Simulation`] with its own NoI state, thermal RC network, DTM
+//! governor, and independent deterministic seed — and drives them from a
+//! single global arrival stream through a pluggable
+//! [`RoutingPolicy`](routing::RoutingPolicy).  An optional
+//! [`Autoscaler`](autoscale::Autoscaler) grows and shrinks the fleet
+//! with an explicit model cold-start cost, and a thermal-emergency
+//! predicate migrates queued work away from boards that trip it.
+//!
+//! # The epoch-barrier clock model
+//!
+//! Replicas are discrete-event simulations with private virtual clocks;
+//! the dispatcher needs a *consistent* view of all of them to route
+//! well.  The fleet therefore advances in bounded virtual-time epochs:
+//!
+//! ```text
+//!   barrier k                      barrier k+1
+//!      |   epoch k: (B, B+epoch_ns]   |
+//!      v                              v
+//!  snapshot ──► migrate ──► autoscale ──► route ──► advance ∥ ──► ...
+//! ```
+//!
+//! At each barrier the dispatcher (single-threaded) takes a
+//! [`ReplicaSnapshot`] of every board — outstanding work, compute
+//! utilization, hottest sensor reading — then performs all control
+//! decisions against that frozen state: thermal-emergency migration,
+//! scale up/down, and routing of every arrival that falls inside the
+//! upcoming epoch.  Only then do all boards advance *in parallel* on the
+//! shared worker pool ([`crate::util::pool`]) to the common epoch end;
+//! the pool join is the barrier.  No replica ever runs ahead of another
+//! by more than one epoch, so routing never observes a board's future,
+//! and the whole construction is deterministic: identical seeds produce
+//! byte-identical [`FleetReport`]s for any worker-thread count, because
+//! threads only decide *when* a replica advances, never *what* it
+//! observes.
+//!
+//! Epochs whose span contains no arrivals and no replica events are
+//! skipped (the dispatcher fast-forwards to the next known wake time),
+//! so a sparse trace does not pay per-epoch overhead across dead time.
+//!
+//! ```no_run
+//! use chipsim::prelude::*;
+//!
+//! let spec = FleetSpec::new(TrafficSpec::poisson(8_000.0).steady(None), 4);
+//! let report = Fleet::new(
+//!     spec,
+//!     || {
+//!         Simulation::builder()
+//!             .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+//!             .build()
+//!     },
+//!     Box::new(chipsim::fleet::LeastOutstanding),
+//! )
+//! .run(7)
+//! .expect("fleet run");
+//! println!("{}", report.summary());
+//! ```
+
+pub mod autoscale;
+pub mod routing;
+
+pub use autoscale::{parse_autoscaler, Autoscaler, QueueDepth, ScaleEvent, TargetUtilization};
+pub use routing::{
+    parse_routing, LeastOutstanding, RoundRobin, RoutingPolicy, SessionAffinity, ThermalAware,
+};
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::serving::engine::WindowRoller;
+use crate::serving::{ServingStats, StreamingSource, TrafficSpec, WindowSummary};
+use crate::sim::{
+    ModelOutcome, PowerPort, RequestSource, RunStatus, SimReport, Simulation, StreamSink,
+};
+use crate::util::rng::Rng;
+use crate::workload::{ModelKind, ModelRequest};
+use crate::TimeNs;
+
+// -------------------------------------------------------------------- spec
+
+/// Configuration of a fleet run.  The embedded [`TrafficSpec`] describes
+/// the *global* offered load and the SLO every replica is held to;
+/// steady-state early stop is ignored (a fleet always runs its full
+/// horizon — convergence of one board says nothing about the others).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub traffic: TrafficSpec,
+    /// Boards at t=0 (these start warm).
+    pub replicas: usize,
+    /// Autoscaling ceiling; clamped up to `replicas`.
+    pub max_replicas: usize,
+    /// Epoch width: the routing/control cadence and the bound on
+    /// replica clock skew.
+    pub epoch_ns: TimeNs,
+    /// Virtual time a scaled-up board spends loading weights before it
+    /// accepts requests.
+    pub cold_start_ns: TimeNs,
+    /// Hottest-sensor threshold (°C) above which a board's queued work
+    /// is migrated away at the barrier; `None` disables migration.
+    pub emergency_c: Option<f64>,
+    /// Worker threads for the parallel advance (0 = available
+    /// parallelism).  Does not affect results, only wall clock.
+    pub threads: usize,
+}
+
+impl FleetSpec {
+    pub fn new(traffic: TrafficSpec, replicas: usize) -> FleetSpec {
+        FleetSpec {
+            traffic,
+            replicas,
+            max_replicas: replicas,
+            epoch_ns: 200_000, // 200 µs
+            cold_start_ns: 5_000_000, // 5 ms to load weights
+            emergency_c: None,
+            threads: 0,
+        }
+    }
+
+    pub fn max_replicas(mut self, n: usize) -> FleetSpec {
+        self.max_replicas = n;
+        self
+    }
+
+    pub fn epoch_us(mut self, us: f64) -> FleetSpec {
+        self.epoch_ns = (us * 1e3) as TimeNs;
+        self
+    }
+
+    pub fn cold_start_ms(mut self, ms: f64) -> FleetSpec {
+        self.cold_start_ns = (ms * 1e6) as TimeNs;
+        self
+    }
+
+    pub fn emergency_c(mut self, c: f64) -> FleetSpec {
+        self.emergency_c = Some(c);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> FleetSpec {
+        self.threads = n;
+        self
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        self.traffic.validate()?;
+        anyhow::ensure!(self.replicas >= 1, "fleet needs at least one replica");
+        anyhow::ensure!(self.epoch_ns > 0, "fleet epoch_ns must be > 0");
+        Ok(())
+    }
+}
+
+// --------------------------------------------------------------- snapshot
+
+/// Barrier-consistent view of one replica, as seen by routing,
+/// autoscaling, and migration.  All fields are frozen at the barrier;
+/// the dispatcher bumps `outstanding` as it routes within an epoch so
+/// consecutive decisions see their own effect.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSnapshot {
+    /// Stable replica index (position in [`FleetReport::replicas`]).
+    pub id: usize,
+    /// Warm, not retiring, not in thermal emergency.
+    pub accepting: bool,
+    /// Requests on the board (admission queue + in flight) plus the
+    /// dispatcher-side epoch buffer.
+    pub outstanding: usize,
+    /// Board admission-queue depth only.
+    pub queue_depth: usize,
+    /// Fraction of chiplets busy at the barrier.
+    pub busy_frac: f64,
+    /// Hottest sensor/solver reading, if the board runs thermal state.
+    pub hottest_c: Option<f64>,
+    /// The replica's virtual clock at the barrier.
+    pub now: TimeNs,
+}
+
+// ----------------------------------------------------------------- source
+
+/// Dispatcher-side arrival buffer for one replica: requests routed (or
+/// migrated) to the board but not yet consumed by its event loop.
+/// Ordered by arrival time with stable ties, so migrated-in work
+/// interleaves correctly with routed work.
+#[derive(Debug, Default)]
+struct ReplicaSource {
+    buf: VecDeque<ModelRequest>,
+}
+
+impl ReplicaSource {
+    fn push(&mut self, req: ModelRequest) {
+        match self.buf.back() {
+            Some(last) if last.arrival_ns > req.arrival_ns => {
+                let at = self.buf.partition_point(|r| r.arrival_ns <= req.arrival_ns);
+                self.buf.insert(at, req);
+            }
+            _ => self.buf.push_back(req),
+        }
+    }
+
+    fn drain(&mut self) -> Vec<ModelRequest> {
+        self.buf.drain(..).collect()
+    }
+
+    fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl RequestSource for ReplicaSource {
+    fn peek_arrival_ns(&mut self) -> Option<TimeNs> {
+        self.buf.front().map(|r| r.arrival_ns)
+    }
+
+    fn next_request(&mut self) -> Option<ModelRequest> {
+        self.buf.pop_front()
+    }
+}
+
+// ------------------------------------------------------------------- sink
+
+/// Per-replica streaming sink: the single-board `TrafficSink` without
+/// steady-state detection (fleets run the full horizon).  Latency is
+/// end-to-end from the *global* arrival time, so dispatcher queueing,
+/// cold starts, and migration delays all count against the SLO.
+struct FleetSink {
+    stats: ServingStats,
+    roller: WindowRoller,
+}
+
+impl FleetSink {
+    fn new(spec: &TrafficSpec, external_power: bool) -> FleetSink {
+        FleetSink {
+            stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
+            roller: WindowRoller::new(spec.window_ns, spec.keep_windows, external_power),
+        }
+    }
+
+    fn into_parts(self, sim: &mut SimReport) -> (ServingStats, Vec<WindowSummary>) {
+        let windows = self.roller.finish(sim);
+        (self.stats, windows)
+    }
+}
+
+impl StreamSink for FleetSink {
+    fn on_outcome(&mut self, outcome: &ModelOutcome, _now: TimeNs) -> bool {
+        let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
+        if self.stats.record(outcome.kind, latency, outcome.finished_ns) {
+            self.roller.record(latency);
+        }
+        true
+    }
+
+    fn on_advance(&mut self, now: TimeNs, power: &mut PowerPort<'_>) -> bool {
+        while self.roller.due(now) {
+            self.roller.roll(power);
+        }
+        true
+    }
+
+    fn on_power_window(&mut self, window: &crate::power::PowerWindow) {
+        self.roller.on_power_window(window);
+    }
+
+    fn on_dropped(&mut self, _id: usize, _kind: ModelKind, _tenant: usize, _now: TimeNs) {
+        self.stats.dropped += 1;
+    }
+
+    fn retain_state(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------- replica
+
+/// One board plus its open run session and dispatcher-side state.
+struct Replica {
+    id: usize,
+    sim: Simulation,
+    session: crate::sim::RunSession,
+    source: ReplicaSource,
+    sink: FleetSink,
+    status: RunStatus,
+    /// Virtual time the board finishes its cold start (0 = born warm).
+    ready_at: TimeNs,
+    /// Scaled down: drains in-flight work, accepts nothing new.
+    retiring: bool,
+    routed: u64,
+    migrated_out: u64,
+    util_timeline: Vec<(TimeNs, f64)>,
+    temp_timeline: Vec<(TimeNs, f64)>,
+}
+
+impl Replica {
+    fn snapshot(&self, barrier: TimeNs) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id: self.id,
+            accepting: !self.retiring
+                && barrier >= self.ready_at
+                && !matches!(self.status, RunStatus::Stopped),
+            outstanding: self.session.outstanding() + self.source.len(),
+            queue_depth: self.session.queue_depth(),
+            busy_frac: self.session.busy_frac(),
+            hottest_c: self.session.hottest_c(),
+            now: self.session.now(),
+        }
+    }
+}
+
+/// Independent per-replica run seed: FNV-1a over the replica index,
+/// keyed by the fleet seed, whitened through the PRNG — the same
+/// derivation the scenario sweep uses per scenario name, so replica 0
+/// of seed S never collides with a single-board run of seed S+1.
+fn replica_seed(seed: u64, id: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ seed;
+    for b in (id as u64).to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Rng::new(h).next_u64()
+}
+
+// ------------------------------------------------------------------ fleet
+
+/// N replica boards, one dispatcher, one global arrival stream.  See the
+/// module docs for the epoch-barrier clock model.
+pub struct Fleet {
+    spec: FleetSpec,
+    make_sim: Box<dyn FnMut() -> anyhow::Result<Simulation>>,
+    routing: Box<dyn RoutingPolicy>,
+    autoscaler: Option<Box<dyn Autoscaler>>,
+}
+
+impl Fleet {
+    /// `make_sim` builds one replica board; it is called once per
+    /// initial replica and again on every scale-up (boards must be
+    /// identical for routing to be meaningful).
+    pub fn new(
+        spec: FleetSpec,
+        make_sim: impl FnMut() -> anyhow::Result<Simulation> + 'static,
+        routing: Box<dyn RoutingPolicy>,
+    ) -> Fleet {
+        Fleet { spec, make_sim: Box::new(make_sim), routing, autoscaler: None }
+    }
+
+    pub fn autoscaler(mut self, autoscaler: Option<Box<dyn Autoscaler>>) -> Fleet {
+        self.autoscaler = autoscaler;
+        self
+    }
+
+    /// Run the fleet to completion: the arrival horizon passes and every
+    /// board drains.  Deterministic in `seed` for any `threads`.
+    pub fn run(&mut self, seed: u64) -> anyhow::Result<FleetReport> {
+        self.spec.validate()?;
+        let Fleet { spec, make_sim, routing, autoscaler } = self;
+        let max_replicas = spec.max_replicas.max(spec.replicas);
+        let epoch = spec.epoch_ns;
+
+        let generator = spec.traffic.arrivals.build(seed)?;
+        let mut global = StreamingSource::new(generator, spec.traffic.horizon_ns);
+
+        let mut spawn = |id: usize, ready_at: TimeNs| -> anyhow::Result<Replica> {
+            let mut sim = make_sim()?;
+            let external_power = sim.thermal_spec().is_in_loop();
+            let sink = FleetSink::new(&spec.traffic, external_power);
+            let session = sim.begin_run(replica_seed(seed, id), sink.retain_state())?;
+            Ok(Replica {
+                id,
+                sim,
+                session,
+                source: ReplicaSource::default(),
+                sink,
+                status: RunStatus::Idle,
+                ready_at,
+                retiring: false,
+                routed: 0,
+                migrated_out: 0,
+                util_timeline: Vec::new(),
+                temp_timeline: Vec::new(),
+            })
+        };
+
+        let mut replicas: Vec<Replica> = Vec::new();
+        for id in 0..spec.replicas {
+            replicas.push(spawn(id, 0)?);
+        }
+
+        let mut scale_events: Vec<ScaleEvent> = Vec::new();
+        let mut migrations: u64 = 0;
+        let mut epochs: u64 = 0;
+        let mut barrier: TimeNs = 0;
+        let mut until: TimeNs = epoch;
+
+        loop {
+            // ---- barrier: all control decisions on frozen state ----
+            let mut snaps: Vec<ReplicaSnapshot> =
+                replicas.iter().map(|r| r.snapshot(barrier)).collect();
+
+            // Thermal emergency: stop routing to tripped boards and move
+            // their queued (not yet in-flight) work to the survivors.
+            if let Some(limit) = spec.emergency_c {
+                let hot: Vec<usize> = snaps
+                    .iter()
+                    .filter(|s| s.accepting && s.hottest_c.map_or(false, |t| t >= limit))
+                    .map(|s| s.id)
+                    .collect();
+                for id in &hot {
+                    snaps[*id].accepting = false;
+                }
+                for id in hot {
+                    migrations += migrate_out(&mut replicas, id, routing.as_mut(), &mut snaps);
+                }
+            }
+
+            // Autoscale against the same frozen state.
+            if let Some(scaler) = autoscaler.as_mut() {
+                let current = replicas.iter().filter(|r| !r.retiring).count();
+                let desired = scaler
+                    .desired(barrier, &snaps, current, max_replicas)
+                    .clamp(1, max_replicas);
+                if desired != current {
+                    scale_events.push(ScaleEvent { at_ns: barrier, from: current, to: desired });
+                }
+                for _ in current..desired {
+                    let id = replicas.len();
+                    replicas.push(spawn(id, barrier + spec.cold_start_ns)?);
+                    snaps.push(replicas[id].snapshot(barrier));
+                }
+                // Retire highest-index boards first; their queued work
+                // migrates to the survivors, in-flight work drains.
+                for _ in desired..current {
+                    if let Some(id) = replicas.iter().rposition(|r| !r.retiring) {
+                        replicas[id].retiring = true;
+                        snaps[id].accepting = false;
+                        migrations +=
+                            migrate_out(&mut replicas, id, routing.as_mut(), &mut snaps);
+                    }
+                }
+            }
+
+            // Route every arrival inside the upcoming epoch.  Arrivals
+            // stay in the global stream while no board is accepting
+            // (all cold / emergency); they are routed — with their
+            // original arrival time — as soon as one is.
+            let mut accepting: Vec<ReplicaSnapshot> =
+                snaps.iter().filter(|s| s.accepting).copied().collect();
+            if accepting.is_empty() {
+                anyhow::ensure!(
+                    global.peek_arrival_ns().is_none()
+                        || !replicas
+                            .iter()
+                            .all(|r| matches!(r.status, RunStatus::Stopped)),
+                    "all replicas stopped (max_sim_time?) with arrivals pending"
+                );
+            } else {
+                while let Some(t) = global.peek_arrival_ns() {
+                    if t > until {
+                        break;
+                    }
+                    let req = global.next_request().expect("peeked request");
+                    let j = routing.route(&req, &accepting);
+                    let id = accepting[j].id;
+                    accepting[j].outstanding += 1;
+                    replicas[id].routed += 1;
+                    replicas[id].source.push(req);
+                }
+            }
+
+            // ---- advance every board to the epoch end, in parallel ----
+            let cells: Vec<Mutex<&mut Replica>> = replicas.iter_mut().map(Mutex::new).collect();
+            let results = crate::util::pool::map_catching(spec.threads, cells.len(), |i| {
+                let mut guard = cells[i].lock().expect("replica cell");
+                let r: &mut Replica = &mut guard;
+                if matches!(r.status, RunStatus::Stopped) {
+                    return Ok(RunStatus::Stopped);
+                }
+                let Replica { sim, session, source, sink, .. } = r;
+                sim.advance_run(session, source, sink, until).map_err(|e| format!("{e:#}"))
+            });
+            drop(cells);
+            for (i, slot) in results.into_iter().enumerate() {
+                let status = slot
+                    .map_err(|p| anyhow::anyhow!("replica {i} panicked: {p}"))?
+                    .map_err(|e| anyhow::anyhow!("replica {i} failed: {e}"))?;
+                replicas[i].status = status;
+            }
+            epochs += 1;
+            for r in replicas.iter_mut() {
+                r.util_timeline.push((until, r.session.busy_frac()));
+                if let Some(t) = r.session.hottest_c() {
+                    r.temp_timeline.push((until, t));
+                }
+            }
+
+            // ---- termination / fast-forward across dead time ----
+            let exhausted = global.peek_arrival_ns().is_none();
+            let drained = replicas.iter().all(|r| match r.status {
+                RunStatus::Stopped => true,
+                RunStatus::Idle => r.source.is_empty(),
+                RunStatus::Paused { .. } => false,
+            });
+            if exhausted && drained {
+                break;
+            }
+            let mut wake = global.peek_arrival_ns().unwrap_or(TimeNs::MAX);
+            for r in &replicas {
+                if let RunStatus::Paused { next_event_ns } = r.status {
+                    wake = wake.min(next_event_ns);
+                }
+                if r.ready_at > until {
+                    wake = wake.min(r.ready_at);
+                }
+            }
+            barrier = until;
+            until = if wake != TimeNs::MAX && wake > until {
+                // Next epoch boundary at or after the wake time.
+                wake.saturating_add(epoch - 1) / epoch * epoch
+            } else {
+                until + epoch
+            };
+        }
+
+        // ---- aggregate ----
+        let offered = global.emitted();
+        let mut global_stats =
+            ServingStats::new(spec.traffic.slo_ns, spec.traffic.warmup_ns);
+        let mut reports = Vec::with_capacity(replicas.len());
+        for r in replicas {
+            let Replica {
+                id,
+                mut sim,
+                session,
+                mut sink,
+                source,
+                status: _,
+                ready_at,
+                retiring,
+                routed,
+                migrated_out,
+                util_timeline,
+                temp_timeline,
+            } = r;
+            debug_assert!(source.is_empty(), "replica {id} retains unserved arrivals");
+            let mut sim_report = sim.finish_run(session, &mut sink)?;
+            let (stats, windows) = sink.into_parts(&mut sim_report);
+            global_stats.merge(&stats);
+            reports.push(ReplicaReport {
+                id,
+                routed,
+                migrated_out,
+                ready_at,
+                retired: retiring,
+                stats,
+                windows,
+                sim: sim_report,
+                util_timeline,
+                temp_timeline,
+            });
+        }
+        Ok(FleetReport {
+            seed,
+            offered,
+            epochs,
+            migrations,
+            scale_events,
+            global: global_stats,
+            replicas: reports,
+        })
+    }
+}
+
+/// Move a replica's queued work — its dispatcher buffer plus the board's
+/// admission backlog (in-flight instances stay put) — onto the accepting
+/// replicas, preserving original arrival times.  Returns the number of
+/// requests moved; a no-op when nowhere accepts.
+fn migrate_out(
+    replicas: &mut [Replica],
+    from: usize,
+    routing: &mut dyn RoutingPolicy,
+    snaps: &mut [ReplicaSnapshot],
+) -> u64 {
+    let mut moved = replicas[from].source.drain();
+    moved.extend(replicas[from].session.drain_backlog());
+    if moved.is_empty() {
+        return 0;
+    }
+    moved.sort_by_key(|r| (r.arrival_ns, r.id));
+    let accepting: Vec<usize> =
+        snaps.iter().filter(|s| s.accepting && s.id != from).map(|s| s.id).collect();
+    if accepting.is_empty() {
+        for req in moved {
+            replicas[from].source.push(req);
+        }
+        return 0;
+    }
+    let mut view: Vec<ReplicaSnapshot> =
+        accepting.iter().map(|&id| snaps[id]).collect();
+    let n = moved.len() as u64;
+    for req in moved {
+        let j = routing.route(&req, &view);
+        let id = view[j].id;
+        view[j].outstanding += 1;
+        snaps[id].outstanding += 1;
+        replicas[id].source.push(req);
+    }
+    replicas[from].migrated_out += n;
+    n
+}
+
+// ----------------------------------------------------------------- report
+
+/// Everything one board did over the fleet run.
+#[derive(Debug)]
+pub struct ReplicaReport {
+    pub id: usize,
+    /// Requests the dispatcher routed here (including later migrations
+    /// away; excludes migrations in).
+    pub routed: u64,
+    /// Requests migrated off this board (emergency or retirement).
+    pub migrated_out: u64,
+    /// When the board finished cold start (0 = initial board).
+    pub ready_at: TimeNs,
+    /// Scaled down before the run ended.
+    pub retired: bool,
+    /// Post-warm-up serving stats for requests served *by this board*.
+    pub stats: ServingStats,
+    /// Trailing per-window summaries.
+    pub windows: Vec<WindowSummary>,
+    /// Tail board-level simulation report (power, energy, NoI work).
+    pub sim: SimReport,
+    /// `(epoch_end_ns, busy_frac)` at every barrier.
+    pub util_timeline: Vec<(TimeNs, f64)>,
+    /// `(epoch_end_ns, hottest_c)` at barriers with thermal state.
+    pub temp_timeline: Vec<(TimeNs, f64)>,
+}
+
+/// Aggregate of a fleet run: global SLO stats plus per-replica detail.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub seed: u64,
+    /// Requests pulled from the global arrival stream.
+    pub offered: u64,
+    /// Barriers executed (epochs actually advanced, dead time skipped).
+    pub epochs: u64,
+    /// Requests re-routed away from emergency/retiring boards.
+    pub migrations: u64,
+    pub scale_events: Vec<ScaleEvent>,
+    /// Fleet-wide post-warm-up serving stats (all replicas merged).
+    pub global: ServingStats,
+    pub replicas: Vec<ReplicaReport>,
+}
+
+impl FleetReport {
+    /// Fleet-wide goodput: SLO-met completions over the global span.
+    pub fn goodput_rps(&self) -> f64 {
+        self.global.goodput_rps()
+    }
+
+    /// Peak number of simultaneously live (non-retired) boards.
+    pub fn peak_replicas(&self) -> usize {
+        self.scale_events
+            .iter()
+            .map(|e| e.to)
+            .chain(std::iter::once(self.replicas.iter().filter(|r| !r.retired).count()))
+            .max()
+            .unwrap_or(self.replicas.len())
+    }
+
+    /// Human-readable roll-up.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let st = &self.global;
+        let h = &st.overall.hist;
+        let mut s = format!(
+            "fleet: {} boards ({} scale events, {} migrations), {} offered, \
+             {} completed, {} dropped over {:.3} ms\n",
+            self.replicas.len(),
+            self.scale_events.len(),
+            self.migrations,
+            self.offered,
+            st.completed(),
+            st.dropped,
+            st.span_ns() as f64 / 1e6,
+        );
+        let _ = writeln!(
+            s,
+            "global latency (µs): p50 {:.1}  p99 {:.1}  max {:.1};  slo {:.1} µs: \
+             {} violations ({:.2} %), goodput {:.0} req/s",
+            h.quantile(0.5) as f64 / 1e3,
+            h.quantile(0.99) as f64 / 1e3,
+            h.max() as f64 / 1e3,
+            st.slo_ns as f64 / 1e3,
+            st.violations(),
+            st.violation_frac() * 100.0,
+            st.goodput_rps(),
+        );
+        for r in &self.replicas {
+            let peak_c = r
+                .temp_timeline
+                .iter()
+                .map(|(_, t)| *t)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let mean_util = if r.util_timeline.is_empty() {
+                0.0
+            } else {
+                r.util_timeline.iter().map(|(_, u)| *u).sum::<f64>()
+                    / r.util_timeline.len() as f64
+            };
+            let _ = write!(
+                s,
+                "  board {:<2} {} routed, {} completed, p99 {:>8.1} µs, mean util {:>5.1}%",
+                r.id,
+                r.routed,
+                r.stats.completed(),
+                r.stats.overall.hist.quantile(0.99) as f64 / 1e3,
+                mean_util * 100.0,
+            );
+            if peak_c.is_finite() {
+                let _ = write!(s, ", peak {peak_c:.1} °C");
+            }
+            if r.migrated_out > 0 {
+                let _ = write!(s, ", {} migrated out", r.migrated_out);
+            }
+            if r.ready_at > 0 {
+                let _ = write!(s, ", cold-started @{:.2} ms", r.ready_at as f64 / 1e6);
+            }
+            if r.retired {
+                s.push_str(", retired");
+            }
+            s.push('\n');
+        }
+        for e in &self.scale_events {
+            let _ = writeln!(
+                s,
+                "  scale @{:.2} ms: {} -> {} boards",
+                e.at_ns as f64 / 1e6,
+                e.from,
+                e.to
+            );
+        }
+        s
+    }
+
+    /// Stable digest for determinism checks: two fleet runs are
+    /// byte-identical iff their fingerprints are equal.  Wall-clock
+    /// fields are excluded; floats compare via bit patterns.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "seed={};offered={};epochs={};migr={};global[{}]",
+            self.seed,
+            self.offered,
+            self.epochs,
+            self.migrations,
+            self.global.fingerprint(),
+        );
+        for e in &self.scale_events {
+            let _ = write!(s, ";scale@{}:{}->{}", e.at_ns, e.from, e.to);
+        }
+        for r in &self.replicas {
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            let mut fold = |v: u64| {
+                for b in v.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                }
+            };
+            for (t, u) in &r.util_timeline {
+                fold(*t);
+                fold(u.to_bits());
+            }
+            for (t, c) in &r.temp_timeline {
+                fold(*t);
+                fold(c.to_bits());
+            }
+            let _ = write!(
+                s,
+                ";r{}[routed={};out={};ready={};{};sim:{};tl:{:016x}]",
+                r.id,
+                r.routed,
+                r.migrated_out,
+                r.ready_at,
+                r.stats.fingerprint(),
+                r.sim.fingerprint(),
+                h,
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replica_source_orders_by_arrival_with_stable_ties() {
+        let mut src = ReplicaSource::default();
+        let req = |id: usize, t: TimeNs| ModelRequest {
+            id,
+            kind: ModelKind::AlexNet,
+            arrival_ns: t,
+            inferences: 1,
+            tenant: 0,
+        };
+        src.push(req(0, 50));
+        src.push(req(1, 10)); // migrated-in, older
+        src.push(req(2, 50)); // tie: lands after id 0
+        src.push(req(3, 30));
+        let order: Vec<usize> =
+            std::iter::from_fn(|| src.next_request()).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn replica_seeds_are_distinct_and_stable() {
+        let a = replica_seed(7, 0);
+        let b = replica_seed(7, 1);
+        let c = replica_seed(8, 0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, replica_seed(7, 0));
+    }
+}

@@ -1,0 +1,196 @@
+//! Pluggable request-routing policies for the fleet dispatcher.
+//!
+//! A policy sees only the dispatcher's per-epoch [`ReplicaSnapshot`]s —
+//! never the live boards — so routing is a pure function of barrier
+//! state plus the policy's own memory (the round-robin cursor).  The
+//! dispatcher bumps the chosen snapshot's `outstanding` after every
+//! decision, so a burst of arrivals inside one epoch still spreads
+//! instead of dog-piling the replica that looked emptiest at the
+//! barrier.
+
+use crate::fleet::ReplicaSnapshot;
+use crate::workload::ModelRequest;
+
+/// Picks a replica for each incoming request.
+///
+/// `snaps` holds only *accepting* replicas (alive, warm, not retiring);
+/// the returned value is an index into that slice, and the slice is
+/// never empty when `route` is called.  Policies must be deterministic:
+/// identical snapshots and request must yield the identical choice.
+pub trait RoutingPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn route(&mut self, req: &ModelRequest, snaps: &[ReplicaSnapshot]) -> usize;
+}
+
+/// Cycle through accepting replicas in order, ignoring load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _req: &ModelRequest, snaps: &[ReplicaSnapshot]) -> usize {
+        let i = self.next % snaps.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// Send each request to the replica with the fewest requests in flight
+/// (board queue + epoch buffer), breaking ties by replica id.
+#[derive(Debug, Default)]
+pub struct LeastOutstanding;
+
+impl RoutingPolicy for LeastOutstanding {
+    fn name(&self) -> &'static str {
+        "least-outstanding"
+    }
+
+    fn route(&mut self, _req: &ModelRequest, snaps: &[ReplicaSnapshot]) -> usize {
+        snaps
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| (s.outstanding, s.id))
+            .map(|(i, _)| i)
+            .expect("route called with accepting replicas")
+    }
+}
+
+/// Pin each request *kind* to one replica (hash of the kind name modulo
+/// the accepting count) — the stand-in for session/model affinity: a
+/// replica serves a stable subset of models, so its weight cache and
+/// mapper state stay hot.  Affinity degrades when the accepting set
+/// changes size (scale events remap kinds), matching real consistent-ish
+/// hashing behaviour under churn.
+#[derive(Debug, Default)]
+pub struct SessionAffinity;
+
+impl RoutingPolicy for SessionAffinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn route(&mut self, req: &ModelRequest, snaps: &[ReplicaSnapshot]) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in req.kind.name().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h % snaps.len() as u64) as usize
+    }
+}
+
+/// Prefer the coolest board: minimize the hottest-chiplet temperature
+/// reported by each replica's thermal sensors at the barrier.  Replicas
+/// without thermal state (thermal coupling off, or no control window
+/// closed yet) sort after instrumented ones; ties fall back to least
+/// outstanding, then id — so on an athermal fleet this degrades to
+/// [`LeastOutstanding`].
+#[derive(Debug, Default)]
+pub struct ThermalAware;
+
+impl RoutingPolicy for ThermalAware {
+    fn name(&self) -> &'static str {
+        "thermal"
+    }
+
+    fn route(&mut self, _req: &ModelRequest, snaps: &[ReplicaSnapshot]) -> usize {
+        snaps
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let ta = a.hottest_c.unwrap_or(f64::INFINITY);
+                let tb = b.hottest_c.unwrap_or(f64::INFINITY);
+                ta.total_cmp(&tb)
+                    .then_with(|| a.outstanding.cmp(&b.outstanding))
+                    .then_with(|| a.id.cmp(&b.id))
+            })
+            .map(|(i, _)| i)
+            .expect("route called with accepting replicas")
+    }
+}
+
+/// Resolve a policy by CLI/preset name.
+pub fn parse_routing(name: &str) -> anyhow::Result<Box<dyn RoutingPolicy>> {
+    Ok(match name {
+        "round-robin" | "rr" => Box::new(RoundRobin::default()),
+        "least-outstanding" | "lo" => Box::new(LeastOutstanding),
+        "affinity" => Box::new(SessionAffinity),
+        "thermal" => Box::new(ThermalAware),
+        other => anyhow::bail!(
+            "unknown routing policy '{other}' \
+             (expected round-robin, least-outstanding, affinity, or thermal)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ModelKind;
+
+    fn snap(id: usize, outstanding: usize, hottest_c: Option<f64>) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id,
+            accepting: true,
+            outstanding,
+            queue_depth: 0,
+            busy_frac: 0.0,
+            hottest_c,
+            now: 0,
+        }
+    }
+
+    fn req(kind: ModelKind) -> ModelRequest {
+        ModelRequest { id: 0, kind, arrival_ns: 0, inferences: 1, tenant: 0 }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let snaps = [snap(0, 9, None), snap(1, 0, None), snap(2, 5, None)];
+        let mut p = RoundRobin::default();
+        let picks: Vec<usize> =
+            (0..6).map(|_| p.route(&req(ModelKind::AlexNet), &snaps)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_picks_emptiest_then_lowest_id() {
+        let snaps = [snap(0, 3, None), snap(1, 1, None), snap(2, 1, None)];
+        let mut p = LeastOutstanding;
+        assert_eq!(p.route(&req(ModelKind::AlexNet), &snaps), 1);
+    }
+
+    #[test]
+    fn affinity_is_stable_per_kind() {
+        let snaps = [snap(0, 0, None), snap(1, 0, None), snap(2, 0, None)];
+        let mut p = SessionAffinity;
+        let a = p.route(&req(ModelKind::AlexNet), &snaps);
+        let b = p.route(&req(ModelKind::AlexNet), &snaps);
+        assert_eq!(a, b);
+        for kind in [ModelKind::AlexNet, ModelKind::ResNet18, ModelKind::ResNet34] {
+            let i = p.route(&req(kind), &snaps);
+            assert!(i < snaps.len());
+        }
+    }
+
+    #[test]
+    fn thermal_prefers_coolest_and_falls_back_to_load() {
+        let snaps = [snap(0, 0, Some(71.0)), snap(1, 4, Some(58.5)), snap(2, 0, None)];
+        let mut p = ThermalAware;
+        assert_eq!(p.route(&req(ModelKind::AlexNet), &snaps), 1);
+        // All athermal: degrades to least-outstanding.
+        let cold = [snap(0, 2, None), snap(1, 1, None)];
+        assert_eq!(p.route(&req(ModelKind::AlexNet), &cold), 1);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names() {
+        assert!(parse_routing("least-outstanding").is_ok());
+        assert!(parse_routing("banana").is_err());
+    }
+}

@@ -13,8 +13,8 @@
 //!
 //! * **L3 (this crate)** — the [`sim::Simulation`] co-simulation loop, the
 //!   NoI simulator, pluggable mappers, compute backends, power tracking,
-//!   the sustained-traffic serving engine ([`serving`]), baselines, the
-//!   scenario registry, CLI.
+//!   the sustained-traffic serving engine ([`serving`]), the fleet-scale
+//!   serving layer ([`fleet`]), baselines, the scenario registry, CLI.
 //! * **L2/L1 (python/compile, build-time only)** — JAX graphs + Pallas
 //!   kernels for the thermal solver and the batched IMC estimator, lowered
 //!   once to HLO text under `artifacts/` by `make artifacts`.
@@ -77,6 +77,7 @@ pub mod compute;
 pub mod sim;
 pub mod scenario;
 pub mod serving;
+pub mod fleet;
 pub mod power;
 pub mod thermal;
 pub mod dtm;
@@ -100,6 +101,9 @@ pub mod prelude {
     };
     pub use crate::dtm::{
         DtmReport, DvfsState, DvfsTable, Governor, GovernorPolicy, GovernorSpec, SensorSpec,
+    };
+    pub use crate::fleet::{
+        Autoscaler, Fleet, FleetReport, FleetSpec, ReplicaSnapshot, RoutingPolicy, ScaleEvent,
     };
     pub use crate::sim::{
         SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,

@@ -5,6 +5,7 @@
 //!   traffic      sustained open-loop serving run (p50/p99, goodput, SLO)
 //!   mix          multi-tenant co-execution (per-tenant SLOs, interference matrix)
 //!   dtm          closed-loop dynamic thermal management run / governor sweep
+//!   fleet        fleet-scale serving: N replica boards behind one dispatcher
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -23,6 +24,10 @@
 //!   chipsim mix --tenants resnet18@1500,resnet50@400@5000 --placement disjoint
 //!   chipsim dtm --scenario dtm-thermal-ceiling --csv dtm.csv
 //!   chipsim dtm --rows 6 --cols 6 --pipelined --sweep  # governor tradeoff
+//!   chipsim fleet --scenario fleet-least-outstanding --seed 7
+//!   chipsim fleet --replicas 4 --routing thermal --rate 9000 --rows 6 --cols 6
+//!   chipsim fleet --scenario fleet-round-robin --sweep routing-compare
+//!   chipsim fleet --scenario fleet-least-outstanding --sweep knee --lo 2000 --hi 20000
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -40,7 +45,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|mix|dtm|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|mix|dtm|fleet|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -71,6 +76,14 @@ fn help() -> HelpText {
             ("--csv FILE", "dtm: write the per-window temperature/frequency trace"),
             ("--keep-timeline N", "dtm: window samples kept for --csv (default: whole horizon)"),
             ("dtm --sweep", "dtm: run noop/threshold/pid at one seed, print the tradeoff"),
+            ("--replicas N / --max-replicas N", "fleet: boards at t=0 / autoscale ceiling"),
+            ("--routing round-robin|least-outstanding|affinity|thermal", "fleet: dispatch policy"),
+            ("--autoscale none|util[:target]|queue[:depth]", "fleet: autoscaling policy"),
+            ("--epoch-us E", "fleet: barrier cadence, µs (default 200)"),
+            ("--cold-start-ms C", "fleet: scale-up weight-load time (default 5)"),
+            ("--emergency-c T", "fleet: migrate queued work off boards above T °C"),
+            ("fleet --sweep routing-compare", "fleet: run all four routing policies at one seed"),
+            ("fleet --sweep knee --lo R0 --hi R1", "fleet: bisect for the fleet saturation knee"),
         ],
     }
 }
@@ -526,11 +539,186 @@ fn cmd_dtm(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fleet-scale serving: N replica boards (each a full co-simulation with
+/// its own network, thermal, and DTM state) behind one dispatcher pulling
+/// from one global arrival stream.  Routing, autoscaling, and
+/// thermal-emergency migration are pluggable; the report aggregates
+/// per-replica serving stats into global p50/p99/goodput plus scale and
+/// migration events.  `--sweep routing-compare` races all four routing
+/// policies on the same seed; `--sweep knee` bisects over the offered
+/// rate for the *fleet* saturation knee (same bisection as `chipsim
+/// traffic --sweep`, driving a whole fleet per probe).
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    use std::sync::Arc;
+
+    use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
+    use chipsim::scenario::FleetPreset;
+    use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+    let reg = Registry::builtin();
+    type SimFactory = Arc<dyn Fn() -> anyhow::Result<Simulation>>;
+    let (spec, seed, make_sim, preset): (TrafficSpec, u64, SimFactory, Option<FleetPreset>) =
+        if let Some(name) = args.get("scenario") {
+            let sc = reg.get(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+            })?;
+            let seed = args.get_u64("seed", sc.default_seed)?;
+            let spec = sc.traffic_spec(seed).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "scenario '{name}' is not a traffic scenario; a fleet serves an \
+                     arrival stream (fleet-* and traffic-* presets qualify)"
+                )
+            })?;
+            let preset = sc.fleet_preset().cloned();
+            let sc = sc.clone();
+            (spec, seed, Arc::new(move || sc.build()), preset)
+        } else {
+            let hw = build_hw(args)?;
+            let params = build_params(args)?;
+            let seed = args.get_u64("seed", params.seed)?;
+            let rate = args.get_f64("rate", 6_000.0)?;
+            let arrivals = match args.get_or("arrivals", "poisson") {
+                "poisson" => ArrivalSpec::poisson(rate),
+                "burst" => ArrivalSpec::on_off(2.0 * rate, 0.0, 5e6, 5e6),
+                "diurnal" => ArrivalSpec::diurnal(
+                    rate,
+                    0.6,
+                    (args.get_f64("period-ms", 20.0)? * 1e6) as u64,
+                ),
+                "trace" => ArrivalSpec::trace_file(args.get("trace").ok_or_else(|| {
+                    anyhow::anyhow!("--arrivals trace requires --trace FILE.json")
+                })?)?,
+                other => {
+                    anyhow::bail!("unknown --arrivals '{other}' (poisson|burst|diurnal|trace)")
+                }
+            }
+            .inferences(args.get_u64("inferences", 1)? as u32);
+            let spec = TrafficSpec::new(arrivals)
+                .horizon_ms(args.get_f64("horizon-ms", 30.0)?)
+                .warmup_ms(args.get_f64("warmup-ms", 5.0)?)
+                .window_ms(args.get_f64("window-ms", 5.0)?)
+                .slo_ms(args.get_f64("slo-ms", 2.0)?);
+            (
+                spec,
+                seed,
+                Arc::new(move || {
+                    Simulation::builder().hardware(hw.clone()).params(params.clone()).build()
+                }),
+                None,
+            )
+        };
+    // --rate on a scenario rescales its arrival shape (generic runs
+    // already consumed --rate above).  Steady-state early stop never
+    // applies to fleets: the full horizon always runs.
+    let mut spec = TrafficSpec { steady: None, ..spec };
+    if args.get("scenario").is_some() && args.get("rate").is_some() {
+        spec.arrivals = spec.arrivals.with_rate(args.get_f64("rate", 0.0)?)?;
+    }
+    // CLI knobs override the preset, which overrides the defaults.
+    let p = preset.as_ref();
+    let replicas = args.get_usize("replicas", p.map_or(4, |p| p.replicas))?;
+    let max_replicas =
+        args.get_usize("max-replicas", p.map_or(replicas, |p| p.max_replicas))?;
+    let routing_name =
+        args.get_or("routing", p.map_or("least-outstanding", |p| p.routing)).to_string();
+    let autoscale_name = args.get_or("autoscale", p.map_or("none", |p| p.autoscale)).to_string();
+    let epoch_us = args.get_f64("epoch-us", p.map_or(200.0, |p| p.epoch_ns as f64 / 1e3))?;
+    let cold_ms =
+        args.get_f64("cold-start-ms", p.map_or(5.0, |p| p.cold_start_ns as f64 / 1e6))?;
+    let emergency = match args.get("emergency-c") {
+        Some(_) => Some(args.get_f64("emergency-c", 0.0)?),
+        None => p.and_then(|p| p.emergency_c),
+    };
+    let threads = args.get_usize("threads", 0)?;
+    let fleet_spec = |traffic: TrafficSpec| {
+        let mut fs = FleetSpec::new(traffic, replicas)
+            .max_replicas(max_replicas)
+            .epoch_us(epoch_us)
+            .cold_start_ms(cold_ms)
+            .threads(threads);
+        if let Some(c) = emergency {
+            fs = fs.emergency_c(c);
+        }
+        fs
+    };
+    let build_fleet = |traffic: TrafficSpec, routing: &str| -> anyhow::Result<Fleet> {
+        let f = make_sim.clone();
+        Ok(Fleet::new(fleet_spec(traffic), move || f(), parse_routing(routing)?)
+            .autoscaler(parse_autoscaler(&autoscale_name)?))
+    };
+    // `--sweep routing-compare` (also: bare `--sweep`, `--sweep=knee`).
+    let sweep_kind = if args.flag("sweep") || args.get("sweep").is_some() {
+        Some(
+            args.get("sweep")
+                .map(|s| s.to_string())
+                .or_else(|| args.positionals.get(1).cloned())
+                .unwrap_or_else(|| "routing-compare".to_string()),
+        )
+    } else {
+        None
+    };
+    match sweep_kind.as_deref() {
+        Some("routing-compare") => {
+            use chipsim::util::benchkit::Table;
+            let mut table = Table::new(
+                "fleet routing compare (same seed, same arrival stream)",
+                &["routing", "completed", "p99_us", "viol_pct", "goodput_rps", "migrations"],
+            );
+            for name in ["round-robin", "least-outstanding", "affinity", "thermal"] {
+                let report = build_fleet(spec.clone(), name)?.run(seed)?;
+                table.row(vec![
+                    name.to_string(),
+                    report.global.completed().to_string(),
+                    format!("{:.1}", report.global.overall.hist.quantile(0.99) as f64 / 1e3),
+                    format!("{:.2}", report.global.violation_frac() * 100.0),
+                    format!("{:.0}", report.goodput_rps()),
+                    report.migrations.to_string(),
+                ]);
+            }
+            table.print();
+        }
+        Some("knee") => {
+            let lo = args.get_f64("lo", 1_000.0)?;
+            let hi = args.get_f64("hi", 20_000.0)?;
+            let sweep = LoadSweep::new(spec.clone(), lo, hi).iters(args.get_usize("iters", 5)?);
+            let result = sweep.run_with_probe(|probe_spec| {
+                Ok(build_fleet(probe_spec.clone(), &routing_name)?.run(seed)?.global)
+            })?;
+            println!(
+                "fleet load sweep ({replicas} replicas, {routing_name} routing, \
+                 {} probes):",
+                result.probes.len()
+            );
+            for pr in &result.probes {
+                println!(
+                    "  {:>8.0} req/s  p99 {:>9.1} µs  goodput {:>8.0} req/s  viol {:>6.2} %  {}",
+                    pr.rate_rps,
+                    pr.p99_ns as f64 / 1e3,
+                    pr.goodput_rps,
+                    pr.violation_frac * 100.0,
+                    if pr.meets_slo { "PASS" } else { "fail" },
+                );
+            }
+            println!(
+                "fleet saturation knee: ~{:.0} req/s (highest probed rate meeting the SLO)",
+                result.knee_rps
+            );
+        }
+        Some(other) => anyhow::bail!("unknown fleet sweep '{other}' (routing-compare|knee)"),
+        None => {
+            let report = build_fleet(spec, &routing_name)?.run(seed)?;
+            print!("{}", report.summary());
+        }
+    }
+    Ok(())
+}
+
 fn cmd_scenarios() {
     let reg = Registry::builtin();
     println!("registered scenarios ({}):", reg.len());
     for sc in reg.iter() {
-        let tag = if sc.is_dtm() {
+        let tag = if sc.is_fleet() {
+            "[fleet] "
+        } else if sc.is_dtm() {
             "[dtm] "
         } else if sc.is_mix() {
             "[mix] "
@@ -545,6 +733,7 @@ fn cmd_scenarios() {
         "\nrun one:     chipsim run --scenario NAME [--seed S]\
          \nrun traffic: chipsim traffic --scenario NAME [--rate R] [--seed S]\
          \nrun a mix:   chipsim mix --scenario NAME [--sweep interference] [--seed S]\
+         \nrun a fleet: chipsim fleet --scenario NAME [--routing P] [--seed S]\
          \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]"
     );
 }
@@ -692,6 +881,7 @@ fn main() -> anyhow::Result<()> {
         "traffic" => cmd_traffic(&args)?,
         "mix" => cmd_mix(&args)?,
         "dtm" => cmd_dtm(&args)?,
+        "fleet" => cmd_fleet(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,

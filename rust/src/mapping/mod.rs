@@ -208,8 +208,9 @@ pub struct MapContext<'a> {
 /// Implementations must be pure placement policies: on success the ledger
 /// reflects the allocation, on `None` it must be left untouched.  The
 /// default is [`NearestNeighbor`]; inject alternatives through
-/// `Simulation::builder().mapper(...)`.
-pub trait Mapper {
+/// `Simulation::builder().mapper(...)`.  `Send` so a simulation (which
+/// owns its mapper) can move across fleet worker-pool threads.
+pub trait Mapper: Send {
     fn name(&self) -> &'static str;
 
     /// Try to place the whole model; `None` (ledger untouched) if it does

@@ -69,7 +69,10 @@ impl FlowStats {
 /// calls it repeatedly before processing any global event at `t`, so flow
 /// completions interleave correctly with compute events on the coherent
 /// global timeline.
-pub trait NetworkSim {
+///
+/// `Send` so a whole run session can migrate across fleet worker-pool
+/// threads between epochs; an engine is owned by one run at a time.
+pub trait NetworkSim: Send {
     /// Inject a flow at time `now` (must be >= all previously passed times).
     fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId;
     /// Advance to `t`; return the earliest unreported completion <= t.

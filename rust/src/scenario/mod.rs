@@ -29,8 +29,7 @@
 //! }
 //! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
 use crate::dtm::GovernorSpec;
@@ -81,6 +80,23 @@ pub fn hardware_preset(
     })
 }
 
+/// Fleet overlay for a traffic scenario: how many replica boards serve
+/// the (global) arrival stream, behind which routing and autoscaling
+/// policies.  Names resolve through [`crate::fleet::parse_routing`] /
+/// [`crate::fleet::parse_autoscaler`]; `chipsim fleet --scenario NAME`
+/// applies the overlay, and every knob stays CLI-overridable.
+#[derive(Debug, Clone)]
+pub struct FleetPreset {
+    pub replicas: usize,
+    pub max_replicas: usize,
+    pub routing: &'static str,
+    /// `"none"` fixes the fleet size.
+    pub autoscale: &'static str,
+    pub epoch_ns: u64,
+    pub cold_start_ns: u64,
+    pub emergency_c: Option<f64>,
+}
+
 /// A named, reproducible co-simulation setup.
 #[derive(Clone)]
 pub struct Scenario {
@@ -93,6 +109,8 @@ pub struct Scenario {
     /// Thermal coupling applied when the scenario builds its simulation
     /// (Off unless set with [`Scenario::with_thermal`]).
     thermal: ThermalSpec,
+    /// Fleet overlay (None for single-board scenarios).
+    fleet: Option<FleetPreset>,
     /// Seed used when the caller does not supply one.
     pub default_seed: u64,
 }
@@ -112,6 +130,7 @@ impl Scenario {
             params,
             work: Work::Batch(Arc::new(workload)),
             thermal: ThermalSpec::Off,
+            fleet: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -132,6 +151,7 @@ impl Scenario {
             params,
             work: Work::Traffic(Arc::new(spec)),
             thermal: ThermalSpec::Off,
+            fleet: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -152,6 +172,7 @@ impl Scenario {
             params,
             work: Work::Mix(Arc::new(spec)),
             thermal: ThermalSpec::Off,
+            fleet: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -175,6 +196,23 @@ impl Scenario {
     /// Whether this scenario runs closed-loop DTM.
     pub fn is_dtm(&self) -> bool {
         self.thermal.is_in_loop()
+    }
+
+    /// Attach a fleet overlay (traffic scenarios only): `chipsim fleet
+    /// --scenario NAME` serves this scenario's arrival stream from
+    /// `preset.replicas` replica boards instead of one.
+    pub fn with_fleet(mut self, preset: FleetPreset) -> Scenario {
+        self.fleet = Some(preset);
+        self
+    }
+
+    pub fn fleet_preset(&self) -> Option<&FleetPreset> {
+        self.fleet.as_ref()
+    }
+
+    /// Whether this scenario carries a fleet overlay.
+    pub fn is_fleet(&self) -> bool {
+        self.fleet.is_some()
     }
 
     /// Instantiate the scenario's hardware configuration.
@@ -621,6 +659,114 @@ impl Registry {
                 .window_ms(2.5)
             },
         ));
+        // ---- fleet-scale serving (see crate::fleet) ----
+        // N replica boards behind one dispatcher; `chipsim fleet
+        // --scenario NAME` applies the overlay (all knobs overridable).
+        // Board = 6x6 mesh; one board saturates around 3 krps (the
+        // dtm-thermal-ceiling operating point), so the 4-board fleets
+        // serve ~3x that comfortably and expose routing differences.
+        let fleet_traffic = |rate: f64| {
+            move |_seed: u64| {
+                TrafficSpec::poisson(rate)
+                    .horizon_ms(30.0)
+                    .warmup_ms(5.0)
+                    .window_ms(5.0)
+                    .slo_ms(2.0)
+                    .steady(None) // fleets always run the full horizon
+            }
+        };
+        reg.register(
+            Scenario::traffic(
+                "fleet-round-robin",
+                "4x 6x6-mesh boards, round-robin dispatch of a 9 krps Poisson stream",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                fleet_traffic(9_000.0),
+            )
+            .with_fleet(FleetPreset {
+                replicas: 4,
+                max_replicas: 4,
+                routing: "round-robin",
+                autoscale: "none",
+                epoch_ns: 200_000,
+                cold_start_ns: 5_000_000,
+                emergency_c: None,
+            }),
+        );
+        reg.register(
+            Scenario::traffic(
+                "fleet-least-outstanding",
+                "4x 6x6-mesh boards, least-outstanding dispatch — the routing-compare twin",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                fleet_traffic(9_000.0),
+            )
+            .with_fleet(FleetPreset {
+                replicas: 4,
+                max_replicas: 4,
+                routing: "least-outstanding",
+                autoscale: "none",
+                epoch_ns: 200_000,
+                cold_start_ns: 5_000_000,
+                emergency_c: None,
+            }),
+        );
+        reg.register(
+            Scenario::traffic(
+                "fleet-autoscale-diurnal",
+                "2..6 boards riding a day/night rate curve, queue-depth autoscaler with \
+                 5 ms cold starts",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::new(ArrivalSpec::diurnal(7_000.0, 0.7, 30_000_000))
+                        .horizon_ms(60.0)
+                        .warmup_ms(5.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_fleet(FleetPreset {
+                replicas: 2,
+                max_replicas: 6,
+                routing: "least-outstanding",
+                autoscale: "queue:24",
+                epoch_ns: 200_000,
+                cold_start_ns: 5_000_000,
+                emergency_c: None,
+            }),
+        );
+        reg.register(
+            Scenario::traffic(
+                "fleet-thermal-migrate",
+                "3 DTM boards under bursty load: thermal-aware routing, queued work \
+                 migrates off boards above 47.5 degC",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::new(ArrivalSpec::on_off(9_000.0, 600.0, 5e6, 5e6))
+                        .horizon_ms(30.0)
+                        .warmup_ms(5.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::threshold_band(47.0, 46.2, 48.0),
+            })
+            .with_fleet(FleetPreset {
+                replicas: 3,
+                max_replicas: 3,
+                routing: "thermal",
+                autoscale: "none",
+                epoch_ns: 200_000,
+                cold_start_ns: 5_000_000,
+                emergency_c: Some(47.5),
+            }),
+        );
         reg.register(Scenario::new(
             "thermal-hotspot",
             "6x6 mesh with THERMOS-style thermal-aware mapping enabled",
@@ -729,16 +875,11 @@ impl SweepRunner {
     fn run_caught(sc: &Scenario, seed: u64) -> anyhow::Result<SimReport> {
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sc.run(seed))) {
             Ok(result) => result,
-            Err(payload) => {
-                let msg = if let Some(s) = payload.downcast_ref::<&str>() {
-                    (*s).to_string()
-                } else if let Some(s) = payload.downcast_ref::<String>() {
-                    s.clone()
-                } else {
-                    "non-string panic payload".to_string()
-                };
-                Err(anyhow::anyhow!("scenario '{}' panicked: {msg}", sc.name))
-            }
+            Err(payload) => Err(anyhow::anyhow!(
+                "scenario '{}' panicked: {}",
+                sc.name,
+                crate::util::pool::panic_message(payload)
+            )),
         }
     }
 
@@ -760,43 +901,33 @@ impl SweepRunner {
             .collect()
     }
 
-    /// Run the named scenarios across worker threads.  Outcomes are
-    /// returned in input order regardless of completion order.
+    /// Run the named scenarios across worker threads (the shared
+    /// [`crate::util::pool`] implementation).  Outcomes are returned in
+    /// input order regardless of completion order.
     pub fn run(&self, registry: &Registry, names: &[&str]) -> anyhow::Result<Vec<SweepOutcome>> {
         let scenarios = self.resolve(registry, names)?;
         let jobs: Vec<(&Scenario, u64)> =
             scenarios.iter().map(|s| (*s, self.seed_for(&s.name))).collect();
-        let workers = if self.threads > 0 {
-            self.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        }
-        .min(jobs.len().max(1));
-        let next = AtomicUsize::new(0);
-        let slots: Mutex<Vec<Option<SweepOutcome>>> =
-            Mutex::new((0..jobs.len()).map(|_| None).collect());
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::SeqCst);
-                    if i >= jobs.len() {
-                        break;
-                    }
-                    let (sc, seed) = jobs[i];
-                    let outcome = SweepOutcome {
-                        scenario: sc.name.clone(),
-                        seed,
-                        result: SweepRunner::run_caught(sc, seed),
-                    };
-                    slots.lock().expect("sweep slot lock")[i] = Some(outcome);
-                });
+        let results = crate::util::pool::map_catching(self.threads, jobs.len(), |i| {
+            let (sc, seed) = jobs[i];
+            SweepOutcome {
+                scenario: sc.name.clone(),
+                seed,
+                result: SweepRunner::run_caught(sc, seed),
             }
         });
-        Ok(slots
-            .into_inner()
-            .expect("sweep slots")
+        // run_caught already converts scenario panics; the pool-level
+        // catch only fires if outcome assembly itself panicked.
+        Ok(results
             .into_iter()
-            .map(|o| o.expect("every sweep job writes its slot"))
+            .zip(jobs)
+            .map(|(out, (sc, seed))| {
+                out.unwrap_or_else(|msg| SweepOutcome {
+                    scenario: sc.name.clone(),
+                    seed,
+                    result: Err(anyhow::anyhow!("scenario '{}' panicked: {msg}", sc.name)),
+                })
+            })
             .collect())
     }
 

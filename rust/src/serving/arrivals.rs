@@ -29,8 +29,9 @@ use crate::TimeNs;
 /// A lazy, seeded stream of model requests with non-decreasing arrival
 /// times.  `None` means the process is exhausted (only trace replay ever
 /// ends; the synthetic processes are infinite and are cut off by the
-/// engine's horizon).
-pub trait ArrivalProcess {
+/// engine's horizon).  `Send` so the fleet dispatcher can own the global
+/// stream while replicas advance on worker threads.
+pub trait ArrivalProcess: Send {
     fn name(&self) -> &'static str;
     fn next_request(&mut self) -> Option<ModelRequest>;
 }

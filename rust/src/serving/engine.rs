@@ -646,11 +646,27 @@ impl LoadSweep {
         self
     }
 
-    /// Run the search.  `make_sim` builds a fresh simulation per probe
-    /// (each probe must start from cold state).
+    /// Run the search against single boards.  `make_sim` builds a fresh
+    /// simulation per probe (each probe must start from cold state).
     pub fn run<F>(&self, mut make_sim: F, seed: u64) -> anyhow::Result<SweepResult>
     where
         F: FnMut() -> anyhow::Result<Simulation>,
+    {
+        self.run_with_probe(|spec| {
+            let report = make_sim()?.run_traffic_with(spec, seed)?;
+            Ok(report.stats)
+        })
+    }
+
+    /// Run the search with a pluggable probe: `probe` receives the
+    /// rate-rescaled spec and returns the post-warm-up serving stats of
+    /// whatever system it drove — a single board ([`run`](Self::run)
+    /// wires it to `run_traffic_with`) or a whole fleet (`chipsim fleet
+    /// --sweep knee` builds a [`crate::fleet::Fleet`] per probe).  The
+    /// bisection itself is system-agnostic.
+    pub fn run_with_probe<P>(&self, mut probe: P) -> anyhow::Result<SweepResult>
+    where
+        P: FnMut(&TrafficSpec) -> anyhow::Result<ServingStats>,
     {
         anyhow::ensure!(
             self.lo_rps > 0.0 && self.lo_rps < self.hi_rps,
@@ -659,26 +675,25 @@ impl LoadSweep {
             self.hi_rps
         );
         let mut probes = Vec::new();
-        let mut probe = |rate: f64, probes: &mut Vec<SweepProbe>| -> anyhow::Result<bool> {
+        let mut eval = |rate: f64, probes: &mut Vec<SweepProbe>| -> anyhow::Result<bool> {
             let spec =
                 TrafficSpec { arrivals: self.spec.arrivals.with_rate(rate)?, ..self.spec.clone() };
-            let report = make_sim()?.run_traffic_with(&spec, seed)?;
-            let p99 = report.stats.overall.hist.quantile(0.99);
-            let vf = report.stats.violation_frac();
-            let meets = report.stats.completed() > 0
-                && p99 <= spec.slo_ns
-                && vf <= self.max_violation_frac;
+            let stats = probe(&spec)?;
+            let p99 = stats.overall.hist.quantile(0.99);
+            let vf = stats.violation_frac();
+            let meets =
+                stats.completed() > 0 && p99 <= spec.slo_ns && vf <= self.max_violation_frac;
             probes.push(SweepProbe {
                 rate_rps: rate,
                 p99_ns: p99,
-                goodput_rps: report.stats.goodput_rps(),
+                goodput_rps: stats.goodput_rps(),
                 violation_frac: vf,
                 meets_slo: meets,
             });
             Ok(meets)
         };
-        let lo_ok = probe(self.lo_rps, &mut probes)?;
-        let hi_ok = probe(self.hi_rps, &mut probes)?;
+        let lo_ok = eval(self.lo_rps, &mut probes)?;
+        let hi_ok = eval(self.hi_rps, &mut probes)?;
         if !lo_ok {
             // Nothing in range is sustainable.
             return Ok(SweepResult { probes, knee_rps: 0.0 });
@@ -690,7 +705,7 @@ impl LoadSweep {
         let (mut lo, mut hi) = (self.lo_rps, self.hi_rps);
         for _ in 0..self.iters {
             let mid = 0.5 * (lo + hi);
-            if probe(mid, &mut probes)? {
+            if eval(mid, &mut probes)? {
                 lo = mid;
             } else {
                 hi = mid;

@@ -250,6 +250,26 @@ impl ServingStats {
         }
     }
 
+    /// Fold another run's statistics into this one (fleet aggregation:
+    /// per-replica stats merge into the global view).  Histograms add
+    /// bucket-wise, so merged quantiles are exactly what one stream
+    /// containing both runs' completions would report.
+    pub fn merge(&mut self, other: &ServingStats) {
+        self.warmup_skipped += other.warmup_skipped;
+        self.dropped += other.dropped;
+        self.overall.hist.merge(&other.overall.hist);
+        self.overall.completed += other.overall.completed;
+        self.overall.violations += other.overall.violations;
+        for (name, k) in &other.per_kind {
+            let slot = self.per_kind.entry(name).or_default();
+            slot.hist.merge(&k.hist);
+            slot.completed += k.completed;
+            slot.violations += k.violations;
+        }
+        self.first_ns = self.first_ns.min(other.first_ns);
+        self.last_ns = self.last_ns.max(other.last_ns);
+    }
+
     /// Stable digest for determinism checks.
     pub fn fingerprint(&self) -> String {
         use std::fmt::Write;

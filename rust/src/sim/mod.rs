@@ -32,5 +32,6 @@ mod simulation;
 pub use report::{KindStats, ModelOutcome, SimReport, ThermalSummary};
 pub use simulation::{
     BatchSource, EventCounter, NetworkFactory, NullSink, ObserverHandle, PowerPort,
-    RequestSource, SimObserver, Simulation, SimulationBuilder, StreamSink, ThermalSpec,
+    RequestSource, RunSession, RunStatus, SimObserver, Simulation, SimulationBuilder,
+    StreamSink, ThermalSpec,
 };

@@ -23,10 +23,9 @@
 //! actionable `Err`, never a panic.  The event loop itself is the paper's
 //! Global Manager (§III): see module docs in [`crate::sim`].
 
-use std::cell::RefCell;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::compute::{ClassDispatchBackend, ComputeBackend, ComputeResult};
@@ -55,13 +54,15 @@ const WEIGHT_LAYER: usize = usize::MAX;
 
 /// Probe hooks invoked by the co-simulation loop as it progresses.
 ///
-/// Observers are shared (`Rc<RefCell<..>>`) so the caller keeps a handle
-/// and can read accumulated state after `run()` returns.  All methods
-/// default to no-ops — implement only what you need.  The built-in power
-/// tracking is itself expressible as an observer: [`PowerTracker`]
-/// implements this trait, so `.observer(Rc::new(RefCell::new(
-/// PowerTracker::new(n, bin))))` attaches an independent power probe.
-pub trait SimObserver {
+/// Observers are shared (`Arc<Mutex<..>>`) so the caller keeps a handle
+/// and can read accumulated state after `run()` returns — and so a whole
+/// `Simulation` is `Send`, which lets the fleet layer advance replica
+/// boards on a worker pool.  All methods default to no-ops — implement
+/// only what you need.  The built-in power tracking is itself expressible
+/// as an observer: [`PowerTracker`] implements this trait, so
+/// `.observer(Arc::new(Mutex::new(PowerTracker::new(n, bin))))` attaches
+/// an independent power probe.
+pub trait SimObserver: Send {
     /// A model was mapped onto the system at time `t`.
     fn on_model_mapped(&mut self, _id: usize, _kind: ModelKind, _t: TimeNs) {}
     /// Compute energy booked on a chiplet over `[start, start+duration)`.
@@ -84,7 +85,7 @@ pub trait SimObserver {
 }
 
 /// A shared observer handle, as accepted by `SimulationBuilder::observer`.
-pub type ObserverHandle = Rc<RefCell<dyn SimObserver>>;
+pub type ObserverHandle = Arc<Mutex<dyn SimObserver>>;
 
 /// Power tracking as a pluggable probe: mirrors exactly what the built-in
 /// tracker books, so an attached `PowerTracker` observer reproduces the
@@ -271,8 +272,9 @@ impl StreamSink for NullSink {}
 // -------------------------------------------------------------- plug-ins
 
 /// Builds a fresh network engine for a run (fidelity is injected here,
-/// not matched on an enum inside the coordinator).
-pub type NetworkFactory = Box<dyn Fn(&Topology) -> Box<dyn NetworkSim>>;
+/// not matched on an enum inside the coordinator).  `Send + Sync` so a
+/// `Simulation` can move between the fleet worker pool's threads.
+pub type NetworkFactory = Box<dyn Fn(&Topology) -> Box<dyn NetworkSim> + Send + Sync>;
 
 /// Thermal coupling performed by [`Simulation::run`].
 ///
@@ -358,7 +360,7 @@ impl SimulationBuilder {
     /// Custom network engine factory (overrides `params.noc_fidelity`).
     pub fn network<F>(mut self, factory: F) -> Self
     where
-        F: Fn(&Topology) -> Box<dyn NetworkSim> + 'static,
+        F: Fn(&Topology) -> Box<dyn NetworkSim> + Send + Sync + 'static,
     {
         self.network = Some(Box::new(factory));
         self
@@ -602,6 +604,123 @@ impl PartialOrd for QEntry {
     }
 }
 
+/// Schedule a queue event (monotone sequence numbers break time ties in
+/// insertion order, which is what makes runs byte-identical per seed).
+fn push_event(queue: &mut BinaryHeap<Reverse<QEntry>>, seq: &mut u64, t: TimeNs, ev: Event) {
+    *seq += 1;
+    queue.push(Reverse(QEntry { t, seq: *seq, ev }));
+}
+
+// --------------------------------------------------------- run sessions
+
+/// Why [`Simulation::advance_run`] returned control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    /// Everything at or before the epoch boundary has been processed.
+    /// `next_event_ns` is the earliest *known* future event (queue entry
+    /// or peeked arrival); `TimeNs::MAX` when only in-flight network
+    /// traffic remains (its completion times are not queryable).
+    Paused { next_event_ns: TimeNs },
+    /// Sources drained, event queue empty, network idle: advancing
+    /// further can do nothing — the run is ready for `finish_run`.
+    Idle,
+    /// The sink requested a stop (steady state, SLO abort) or
+    /// `max_sim_time_ns` was hit.
+    Stopped,
+}
+
+/// All live state of one co-simulation run between epochs.
+///
+/// [`Simulation::begin_run`] creates it, [`Simulation::advance_run`]
+/// advances it up to a virtual-time boundary (possibly many times), and
+/// [`Simulation::finish_run`] consumes it into the final [`SimReport`].
+/// A monolithic run is exactly `begin` + one `advance(TimeNs::MAX)` +
+/// `finish`, which is what [`Simulation::run_with_seeded`] does — the
+/// epoch-bounded path exists so the fleet layer can interleave many
+/// replica boards under one global clock while each keeps byte-identical
+/// event ordering.  `Send`, so sessions can migrate across worker-pool
+/// threads between epochs.
+pub struct RunSession {
+    wall_start: Instant,
+    retain: bool,
+    free_slots: Vec<usize>,
+    stop_requested: bool,
+    net: Box<dyn NetworkSim>,
+    power: PowerTracker,
+    stepper: Option<ThermalStepper>,
+    thermal_err: Option<anyhow::Error>,
+    dtm_rt: Option<DtmRuntime>,
+    ledger: MemoryLedger,
+    arb: ArbitrationQueue,
+    chiplets: Vec<ChipletState>,
+    instances: Vec<Instance>,
+    tenant_traffic: TenantTraffic,
+    tenant_active: Vec<u64>,
+    flow_of: HashMap<FlowId, (usize, usize, u32)>,
+    outcomes: Vec<ModelOutcome>,
+    dropped: Vec<(usize, ModelKind)>,
+    queue: BinaryHeap<Reverse<QEntry>>,
+    seq: u64,
+    now: TimeNs,
+    compute_energy: f64,
+    total_capacity: u64,
+    model_cache: HashMap<ModelKind, NeuralModel>,
+}
+
+impl RunSession {
+    /// Virtual time the session has advanced to.
+    pub fn now(&self) -> TimeNs {
+        self.now
+    }
+
+    /// Requests on the board that have not finished: arbitration backlog
+    /// plus mapped, in-flight instances.  The routing metric
+    /// least-outstanding balances on exactly this number.
+    pub fn outstanding(&self) -> usize {
+        self.arb.len() + self.instances.iter().filter(|i| !i.finished).count()
+    }
+
+    /// Requests waiting in the arbitration queue (arrived, not mapped).
+    pub fn queue_depth(&self) -> usize {
+        self.arb.len()
+    }
+
+    /// Fraction of chiplets currently executing a segment (instantaneous
+    /// utilization snapshot for autoscaling policies).
+    pub fn busy_frac(&self) -> f64 {
+        if self.chiplets.is_empty() {
+            return 0.0;
+        }
+        self.chiplets.iter().filter(|c| c.busy).count() as f64 / self.chiplets.len() as f64
+    }
+
+    /// Hottest chiplet temperature the run's thermal state knows about:
+    /// the in-loop DTM stepper when the run closes the loop, the
+    /// post-mortem stepper under `ThermalSpec::Native`/`Auto`, `None`
+    /// with thermal off.  Thermal-aware fleet routing reads this.
+    pub fn hottest_c(&self) -> Option<f64> {
+        if let Some(d) = &self.dtm_rt {
+            return Some(d.hottest_c());
+        }
+        if let Some(st) = &self.stepper {
+            if st.steps() > 0 {
+                return Some(
+                    st.chiplet_temps_c().iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                );
+            }
+        }
+        None
+    }
+
+    /// Remove and return every request still waiting in the arbitration
+    /// queue (oldest first).  The fleet migration hook drains a replica
+    /// that tripped its thermal-emergency predicate and re-routes the
+    /// backlog; mapped, in-flight instances stay and finish locally.
+    pub fn drain_backlog(&mut self) -> Vec<ModelRequest> {
+        self.arb.drain_pending()
+    }
+}
+
 /// A fully assembled co-simulation: the paper's Global Manager with every
 /// extension point resolved.  Build one with [`Simulation::builder`].
 pub struct Simulation {
@@ -725,17 +844,28 @@ impl Simulation {
     /// seed-consuming in-loop components (DTM sensor noise).  The
     /// serving engine passes its per-run traffic seed here so noise
     /// realizations vary run to run; `run_with` falls back to
-    /// `params.seed`.
+    /// `params.seed`.  Exactly equivalent to [`begin_run`](Self::begin_run)
+    /// + one unbounded [`advance_run`](Self::advance_run) +
+    /// [`finish_run`](Self::finish_run).
     pub fn run_with_seeded(
         &mut self,
         source: &mut dyn RequestSource,
         sink: &mut dyn StreamSink,
         run_seed: u64,
     ) -> anyhow::Result<SimReport> {
+        let mut session = self.begin_run(run_seed, sink.retain_state())?;
+        self.advance_run(&mut session, source, sink, TimeNs::MAX)?;
+        self.finish_run(session, sink)
+    }
+
+    /// Allocate the live state of one run: network engine, power tracker,
+    /// thermal stepper / DTM controller, arbitration queue, event queue.
+    /// `retain` mirrors [`StreamSink::retain_state`] — batch sinks keep
+    /// outcomes and power bins, streaming sinks drain them.  Drive the
+    /// returned session with [`advance_run`](Self::advance_run) and close
+    /// it with [`finish_run`](Self::finish_run).
+    pub fn begin_run(&mut self, run_seed: u64, retain: bool) -> anyhow::Result<RunSession> {
         let wall_start = Instant::now();
-        let retain = sink.retain_state();
-        let mut free_slots: Vec<usize> = Vec::new();
-        let mut stop_requested = false;
         let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
         // Hop energy is only ever consumed at power-bin granularity, so
         // let the engine coalesce its event stream to the tracker's bin
@@ -746,7 +876,7 @@ impl Simulation {
         // the sink's drain path (post-mortem trajectory over the whole
         // horizon); InLoop instead owns a full DTM controller that drains
         // on its control cadence and feeds frequency/voltage back.
-        let mut stepper: Option<ThermalStepper> = match &self.thermal {
+        let stepper: Option<ThermalStepper> = match &self.thermal {
             ThermalSpec::Off | ThermalSpec::InLoop { .. } => None,
             ThermalSpec::Native { stride_bins } => Some(ThermalStepper::new(
                 &self.hw,
@@ -761,8 +891,7 @@ impl Simulation {
                 true,
             )?),
         };
-        let mut thermal_err: Option<anyhow::Error> = None;
-        let mut dtm_rt: Option<DtmRuntime> = match &self.thermal {
+        let dtm_rt: Option<DtmRuntime> = match &self.thermal {
             ThermalSpec::InLoop { window_ns, governor } => Some(DtmRuntime::new(
                 &self.hw,
                 self.params.power_bin_ns,
@@ -782,36 +911,89 @@ impl Simulation {
                 self.hw.chiplet_type(c).idle_mw + self.hw.link.router_static_mw,
             );
         }
-        let mut ledger = MemoryLedger::new(&self.hw);
-        let mut arb = ArbitrationQueue::new(self.params.age_threshold_ns);
-        let mut chiplets: Vec<ChipletState> =
-            (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect();
-        let mut instances: Vec<Instance> = Vec::new();
-        // Multi-tenant accounting: NoI traffic attributed per tenant, and
-        // how many instances each tenant has resident (the drop probe only
-        // examines a tenant's queue while it has nothing mapped).  Sized
-        // up front from the mask table so "tenant never mapped anything
-        // yet" reads as an explicit zero, not a missing slot.
-        let mut tenant_traffic = TenantTraffic::new();
-        let mut tenant_active: Vec<u64> =
-            vec![0; self.tenant_masks.as_ref().map(|m| m.len()).unwrap_or(1).max(1)];
-        let mut flow_of: HashMap<FlowId, (usize, usize, u32)> = HashMap::new();
-        let mut outcomes: Vec<ModelOutcome> = Vec::new();
-        let mut dropped: Vec<(usize, ModelKind)> = Vec::new();
-        let mut queue: BinaryHeap<Reverse<QEntry>> = BinaryHeap::new();
-        let mut seq: u64 = 0;
-        let push = |queue: &mut BinaryHeap<Reverse<QEntry>>, seq: &mut u64, t: TimeNs, ev: Event| {
-            *seq += 1;
-            queue.push(Reverse(QEntry { t, seq: *seq, ev }));
-        };
-        let mut now: TimeNs = 0;
-        let mut compute_energy = 0.0f64;
+        let ledger = MemoryLedger::new(&self.hw);
         let total_capacity = ledger.total_free();
+        Ok(RunSession {
+            wall_start,
+            retain,
+            free_slots: Vec::new(),
+            stop_requested: false,
+            net,
+            power,
+            stepper,
+            thermal_err: None,
+            dtm_rt,
+            ledger,
+            arb: ArbitrationQueue::new(self.params.age_threshold_ns),
+            chiplets: (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect(),
+            instances: Vec::new(),
+            // Multi-tenant accounting: NoI traffic attributed per tenant,
+            // and how many instances each tenant has resident (the drop
+            // probe only examines a tenant's queue while it has nothing
+            // mapped).  Sized up front from the mask table so "tenant
+            // never mapped anything yet" reads as an explicit zero, not a
+            // missing slot.
+            tenant_traffic: TenantTraffic::new(),
+            tenant_active: vec![
+                0;
+                self.tenant_masks.as_ref().map(|m| m.len()).unwrap_or(1).max(1)
+            ],
+            flow_of: HashMap::new(),
+            outcomes: Vec::new(),
+            dropped: Vec::new(),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            now: 0,
+            compute_energy: 0.0,
+            total_capacity,
+            model_cache: HashMap::new(),
+        })
+    }
+
+    /// Advance the session, processing every arrival and queue event with
+    /// `t <= until` (an absolute virtual time; `TimeNs::MAX` = run to
+    /// completion).  Bounding the epoch never changes a replica's own
+    /// event order, so an epoch-chopped run is byte-identical to an
+    /// unbounded one — the fleet dispatcher relies on this when it
+    /// advances replicas in lockstep between global clock barriers.
+    pub fn advance_run(
+        &mut self,
+        s: &mut RunSession,
+        source: &mut dyn RequestSource,
+        sink: &mut dyn StreamSink,
+        until: TimeNs,
+    ) -> anyhow::Result<RunStatus> {
+        let RunSession {
+            retain,
+            free_slots,
+            stop_requested,
+            net,
+            power,
+            stepper,
+            thermal_err,
+            dtm_rt,
+            ledger,
+            arb,
+            chiplets,
+            instances,
+            tenant_traffic,
+            tenant_active,
+            flow_of,
+            outcomes,
+            dropped,
+            queue,
+            seq,
+            now,
+            compute_energy,
+            total_capacity,
+            model_cache,
+            ..
+        } = s;
 
         macro_rules! notify {
             ($($call:tt)*) => {
                 for ob in &self.observers {
-                    ob.borrow_mut().$($call)*;
+                    ob.lock().expect("observer lock").$($call)*;
                 }
             };
         }
@@ -835,15 +1017,15 @@ impl Simulation {
                         chiplets[cid].busy_ns += lat;
                         power.add_energy(cid, $t, lat, energy);
                         notify!(on_compute_energy(cid, $t, lat, energy));
-                        compute_energy += energy;
+                        *compute_energy += energy;
                         let lr = &mut instances[inst].layers[layer];
                         lr.start_ns.entry(inference).or_insert($t);
                         if layer == 0 {
                             instances[inst].inference_start.entry(inference).or_insert($t);
                         }
-                        push(
-                            &mut queue,
-                            &mut seq,
+                        push_event(
+                            queue,
+                            seq,
                             $t + lat,
                             Event::ComputeDone { inst, layer, seg, inference },
                         );
@@ -889,7 +1071,7 @@ impl Simulation {
         // Models are immutable per kind: build each once and clone cheaply
         // (arbitration probes used to rebuild the full layer table per
         // attempt — a measurable share of wall time, see EXPERIMENTS §Perf).
-        let mut model_cache: HashMap<ModelKind, NeuralModel> = HashMap::new();
+        // The cache lives in the session so epoch-bounded runs keep it warm.
         let mut model_of = |kind: ModelKind| -> NeuralModel {
             model_cache.entry(kind).or_insert_with(|| NeuralModel::build(kind)).clone()
         };
@@ -1062,7 +1244,7 @@ impl Simulation {
                     );
                     notify!(on_model_dropped(req.id, req.kind, $t));
                     sink.on_dropped(req.id, req.kind, req.tenant, $t);
-                    if retain {
+                    if *retain {
                         dropped.push((req.id, req.kind));
                     }
                     dropped_any = true;
@@ -1071,7 +1253,7 @@ impl Simulation {
                     // A dropped request may have been the over-age blocker
                     // pinning younger, mappable requests in the queue:
                     // re-run arbitration once the event is processed.
-                    push(&mut queue, &mut seq, $t, Event::TryMap);
+                    push_event(queue, seq, $t, Event::TryMap);
                 }
             }};
         }
@@ -1145,9 +1327,9 @@ impl Simulation {
                 };
                 notify!(on_model_finished(&outcome));
                 if !sink.on_outcome(&outcome, $t) {
-                    stop_requested = true;
+                    *stop_requested = true;
                 }
-                if retain {
+                if *retain {
                     outcomes.push(outcome);
                 } else {
                     // Constant-memory streaming: drop the finished state
@@ -1163,14 +1345,14 @@ impl Simulation {
                     instances[inst].retire();
                     free_slots.push(inst);
                 }
-                push(&mut queue, &mut seq, $t, Event::TryMap);
+                push_event(queue, seq, $t, Event::TryMap);
             }};
         }
 
         // ------------------------------------------------------ main loop
         loop {
-            if stop_requested {
-                break;
+            if *stop_requested {
+                return Ok(RunStatus::Stopped);
             }
             let t_queue = queue.peek().map(|Reverse(e)| e.t).unwrap_or(TimeNs::MAX);
             // At most one upcoming arrival is materialized (inside the
@@ -1179,8 +1361,10 @@ impl Simulation {
             let t_arrival = source.peek_arrival_ns().unwrap_or(TimeNs::MAX);
             let t_next = t_queue.min(t_arrival);
             if net.has_active() {
-                if let Some(c) = net.advance_until(t_next) {
-                    now = now.max(c.time);
+                // The network never advances past the epoch boundary:
+                // completions after `until` belong to a later epoch.
+                if let Some(c) = net.advance_until(t_next.min(until)) {
+                    *now = (*now).max(c.time);
                     for (node, t, pj) in net.drain_energy_events() {
                         power.add_event(node, t, pj);
                         notify!(on_noc_energy(node, t, pj));
@@ -1219,10 +1403,21 @@ impl Simulation {
                     continue;
                 }
             }
-            if t_next == TimeNs::MAX {
-                break; // queue empty, no arrivals left, network idle
+            if t_next > until {
+                // Everything at or before the boundary is processed.  Only
+                // in-flight network traffic (no queryable completion time)
+                // can still be pending when `t_next` is `MAX`.
+                return Ok(if t_next == TimeNs::MAX && !net.has_active() {
+                    RunStatus::Idle
+                } else {
+                    RunStatus::Paused { next_event_ns: t_next }
+                });
             }
-            now = now.max(t_next);
+            if t_next == TimeNs::MAX {
+                // Queue empty, no arrivals left, network idle.
+                return Ok(RunStatus::Idle);
+            }
+            *now = (*now).max(t_next);
             // The network flushes hop energy only on flow completions;
             // when a thermal consumer drains windows in-loop (DTM, or a
             // streaming sink feeding the Native/Auto stepper), book
@@ -1239,21 +1434,21 @@ impl Simulation {
                 // Close elapsed control windows first so the operating
                 // points the next events see reflect the window that
                 // just ended.
-                d.on_advance(now, &mut power, &mut *sink)?;
+                d.on_advance(*now, &mut *power, &mut *sink)?;
             }
             let keep_going = sink.on_advance(
-                now,
-                &mut PowerPort::new(&mut power, stepper.as_mut(), &mut thermal_err),
+                *now,
+                &mut PowerPort::new(&mut *power, stepper.as_mut(), &mut *thermal_err),
             );
             if let Some(e) = thermal_err.take() {
                 return Err(e);
             }
             if !keep_going {
-                break;
+                return Ok(RunStatus::Stopped);
             }
-            if self.params.max_sim_time_ns > 0 && now > self.params.max_sim_time_ns {
+            if self.params.max_sim_time_ns > 0 && *now > self.params.max_sim_time_ns {
                 log::warn!("max_sim_time reached at {now} ns; truncating run");
-                break;
+                return Ok(RunStatus::Stopped);
             }
             // Arrivals win ties with queue events, matching the old
             // pre-pushed ordering (arrivals held the smallest seqs).
@@ -1264,7 +1459,7 @@ impl Simulation {
                 continue;
             }
             let Some(Reverse(entry)) = queue.pop() else {
-                break;
+                return Ok(RunStatus::Idle);
             };
             match entry.ev {
                 Event::TryMap => {
@@ -1323,9 +1518,35 @@ impl Simulation {
             }
         }
 
+    }
+
+    /// Consume the session into the final [`SimReport`]: book the
+    /// network's residual energy, fold the live power tail into the
+    /// thermal/DTM state, and notify observers of completion.
+    pub fn finish_run(
+        &mut self,
+        s: RunSession,
+        sink: &mut dyn StreamSink,
+    ) -> anyhow::Result<SimReport> {
+        let RunSession {
+            wall_start,
+            mut net,
+            mut power,
+            stepper,
+            dtm_rt,
+            chiplets,
+            tenant_traffic,
+            outcomes,
+            dropped,
+            now,
+            compute_energy,
+            ..
+        } = s;
         for (node, t, pj) in net.drain_energy_events() {
             power.add_event(node, t, pj);
-            notify!(on_noc_energy(node, t, pj));
+            for ob in &self.observers {
+                ob.lock().expect("observer lock").on_noc_energy(node, t, pj);
+            }
         }
         let span_ns = now;
         let link_util =
@@ -1365,11 +1586,10 @@ impl Simulation {
             dtm,
         };
         for ob in &self.observers {
-            ob.borrow_mut().on_run_complete(&report);
+            ob.lock().expect("observer lock").on_run_complete(&report);
         }
         Ok(report)
     }
-
 }
 
 /// Placement mask of `tenant` (`None` = unrestricted placement — the
@@ -1530,7 +1750,7 @@ mod tests {
     #[test]
     fn power_observer_matches_builtin_tracker() {
         let hw = HardwareConfig::homogeneous_mesh(4, 4);
-        let probe = Rc::new(RefCell::new(PowerTracker::new(
+        let probe = Arc::new(Mutex::new(PowerTracker::new(
             hw.num_chiplets(),
             crate::POWER_BIN_NS,
         )));
@@ -1544,7 +1764,7 @@ mod tests {
             .unwrap();
         // The attached probe saw every energy booking the built-in
         // tracker did (baselines differ: the probe has none set).
-        let p = probe.borrow();
+        let p = probe.lock().unwrap();
         for c in 0..hw.num_chiplets() {
             let a = report.power.dynamic_energy_pj(c);
             let b = p.dynamic_energy_pj(c);
@@ -1555,7 +1775,7 @@ mod tests {
     #[test]
     fn event_counter_observer_sees_lifecycle() {
         let hw = HardwareConfig::homogeneous_mesh(6, 6);
-        let counter = Rc::new(RefCell::new(EventCounter::default()));
+        let counter = Arc::new(Mutex::new(EventCounter::default()));
         let report = Simulation::builder()
             .hardware(hw)
             .params(small_params())
@@ -1564,12 +1784,50 @@ mod tests {
             .unwrap()
             .run(WorkloadConfig::from_kinds(&[ModelKind::ResNet18, ModelKind::AlexNet]))
             .unwrap();
-        let c = counter.borrow();
+        let c = counter.lock().unwrap();
         assert_eq!(c.mapped, report.outcomes.len());
         assert_eq!(c.finished, report.outcomes.len());
         assert_eq!(c.dropped, report.dropped.len());
         assert!(c.compute_events > 0);
         assert!((c.compute_energy_pj - report.compute_energy_pj).abs() < 1e-6);
+    }
+
+    #[test]
+    fn epoch_bounded_session_matches_monolithic() {
+        // Chopping a run into bounded virtual-time epochs must not change
+        // a single byte of the result — the fleet layer depends on this.
+        let hw = HardwareConfig::homogeneous_mesh(6, 6);
+        let kinds = [ModelKind::ResNet18, ModelKind::AlexNet, ModelKind::ResNet34];
+        let mono = sim(hw.clone(), small_params())
+            .run(WorkloadConfig::from_kinds(&kinds))
+            .unwrap();
+        let mut s = sim(hw, small_params());
+        let seed = s.params().seed;
+        let stream = WorkloadStream::from_kinds(
+            &kinds,
+            s.params().inferences_per_model,
+            WorkloadConfig::from_kinds(&kinds).injection_interval_ns,
+        );
+        let mut source = BatchSource::new(stream.requests);
+        let mut sink = NullSink;
+        let mut session = s.begin_run(seed, sink.retain_state()).unwrap();
+        let epoch_ns: TimeNs = 20_000; // far smaller than the run span
+        let mut until = epoch_ns;
+        let mut epochs = 0usize;
+        loop {
+            match s.advance_run(&mut session, &mut source, &mut sink, until).unwrap() {
+                RunStatus::Idle | RunStatus::Stopped => break,
+                RunStatus::Paused { .. } => {
+                    until += epoch_ns;
+                    epochs += 1;
+                }
+            }
+        }
+        assert!(epochs > 2, "epoch size too coarse to exercise pausing: {epochs}");
+        let chopped = s.finish_run(session, &mut sink).unwrap();
+        assert_eq!(mono.fingerprint(), chopped.fingerprint());
+        assert_eq!(mono.span_ns, chopped.span_ns);
+        assert_eq!(mono.outcomes.len(), chopped.outcomes.len());
     }
 
     #[test]

@@ -13,11 +13,13 @@
 //! | [`propkit`]| proptest        | property-based testing driver          |
 //! | [`linalg`] | nalgebra        | dense LU/inverse for thermal precompute|
 //! | [`logging`]| env_logger      | `log` facade backend                   |
+//! | [`pool`]   | rayon           | scoped panic-catching worker pool      |
 
 pub mod benchkit;
 pub mod cli;
 pub mod json;
 pub mod linalg;
 pub mod logging;
+pub mod pool;
 pub mod propkit;
 pub mod rng;

@@ -1,0 +1,111 @@
+//! Shared scoped worker pool for embarrassingly-parallel jobs.
+//!
+//! One implementation of the work-pulling / panic-catching pattern used
+//! everywhere CHIPSIM fans independent jobs across threads: the scenario
+//! [`SweepRunner`](crate::scenario::SweepRunner) (one job per scenario)
+//! and the fleet dispatcher (one job per replica board per epoch).
+//! Jobs are indexed `0..n`; workers pull the next index off an atomic
+//! counter, so scheduling order never affects results — each slot is
+//! written exactly once, and the output vector is in input order.  A
+//! panicking job is caught at the job boundary and surfaced as that
+//! slot's `Err(message)` instead of unwinding through (and poisoning)
+//! the whole pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i in 0..n` across `threads` workers (`0` =
+/// available parallelism), returning results in index order.  A panic
+/// inside `f(i)` becomes `Err(panic message)` for slot `i`; the other
+/// jobs are unaffected.
+pub fn map_catching<R, F>(threads: usize, n: usize, f: F) -> Vec<Result<R, String>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1)
+    }
+    .min(n);
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<R, String>>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let out =
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                        Ok(r) => Ok(r),
+                        Err(payload) => Err(panic_message(payload)),
+                    };
+                slots.lock().expect("pool slot lock")[i] = Some(out);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .expect("pool slots")
+        .into_iter()
+        .map(|o| o.expect("every pool job writes its slot"))
+        .collect()
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover `panic!`, `assert!`, and `unwrap`).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_input_order() {
+        for threads in [1, 4] {
+            let out = map_catching(threads, 20, |i| i * i);
+            let got: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+            let want: Vec<usize> = (0..20).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn a_panicking_job_does_not_poison_the_pool() {
+        let out = map_catching(3, 5, |i| {
+            if i == 2 {
+                panic!("job {i} exploded");
+            }
+            i
+        });
+        assert_eq!(out.len(), 5);
+        for (i, r) in out.iter().enumerate() {
+            if i == 2 {
+                assert!(r.as_ref().unwrap_err().contains("exploded"));
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_returns_empty() {
+        let out: Vec<Result<usize, String>> = map_catching(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+}

@@ -146,6 +146,14 @@ impl ArbitrationQueue {
     pub fn pending(&self) -> impl Iterator<Item = &ModelRequest> {
         self.pending.iter()
     }
+
+    /// Remove and return every pending request, oldest first.  The fleet
+    /// migration hook uses this to pull the backlog off a board that
+    /// tripped its thermal-emergency predicate and re-route it elsewhere
+    /// (original arrival times are preserved by the caller).
+    pub fn drain_pending(&mut self) -> Vec<ModelRequest> {
+        self.pending.drain(..).collect()
+    }
 }
 
 #[cfg(test)]

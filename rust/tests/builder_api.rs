@@ -2,8 +2,7 @@
 //! and the parallel `SweepRunner` (default-fill, invalid-combination
 //! errors, and the parallel == sequential determinism guarantee).
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use chipsim::prelude::*;
 use chipsim::sim::EventCounter;
@@ -83,7 +82,7 @@ fn zero_inferences_is_a_build_error() {
 
 #[test]
 fn observers_from_prelude_compose() {
-    let counter = Rc::new(RefCell::new(EventCounter::default()));
+    let counter = Arc::new(Mutex::new(EventCounter::default()));
     let report = Simulation::builder()
         .hardware(HardwareConfig::homogeneous_mesh(4, 4))
         .params(SimParams {
@@ -97,7 +96,7 @@ fn observers_from_prelude_compose() {
         .unwrap()
         .run(WorkloadConfig::single(ModelKind::ResNet18))
         .unwrap();
-    assert_eq!(counter.borrow().finished, report.outcomes.len());
+    assert_eq!(counter.lock().unwrap().finished, report.outcomes.len());
 }
 
 // ----------------------------------------------------- scenario registry

@@ -1,0 +1,265 @@
+//! Integration tests for the fleet-scale serving subsystem: worker-pool
+//! thread counts must not change a single bit of the report, a
+//! one-replica fleet must reproduce the single-board traffic engine
+//! exactly, autoscaling/migration must actually fire, and the headline
+//! acceptance bar — a 4-replica least-outstanding fleet sustains at
+//! least 3.5x the single-board saturation-knee goodput.
+
+use chipsim::config::{HardwareConfig, SimParams};
+use chipsim::dtm::GovernorSpec;
+use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
+use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+use chipsim::sim::{Simulation, ThermalSpec};
+use chipsim::workload::ModelKind;
+
+fn serving_params() -> SimParams {
+    SimParams { pipelined: true, warmup_ns: 0, cooldown_ns: 0, ..SimParams::default() }
+}
+
+fn board() -> anyhow::Result<Simulation> {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(serving_params())
+        .build()
+}
+
+/// Single-kind load keeps debug-build runs fast (same idiom as the
+/// serving tests).
+fn light_spec(rate: f64, horizon_ms: f64) -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(rate).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(horizon_ms)
+        .warmup_ms(2.0)
+        .window_ms(2.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+// --------------------------------------------------- thread determinism
+
+#[test]
+fn fleet_fingerprint_is_identical_across_worker_thread_counts() {
+    // Bursty arrivals onto a fixed 3-board fleet: the parallel advance
+    // must be invisible — 1 worker thread and 4 produce byte-identical
+    // reports for the same seed.
+    let spec =
+        TrafficSpec::new(ArrivalSpec::on_off(8_000.0, 500.0, 2e6, 2e6).kinds(&[
+            ModelKind::ResNet18,
+        ]))
+        .horizon_ms(10.0)
+        .warmup_ms(2.0)
+        .window_ms(2.0)
+        .slo_ms(2.0)
+        .steady(None);
+    let run = |threads: usize| {
+        Fleet::new(
+            FleetSpec::new(spec.clone(), 3).threads(threads),
+            board,
+            parse_routing("round-robin").unwrap(),
+        )
+        .run(0xF1EE7)
+        .unwrap()
+    };
+    let one = run(1);
+    let many = run(4);
+    assert!(one.global.completed() > 0, "fleet served nothing");
+    assert_eq!(
+        one.fingerprint(),
+        many.fingerprint(),
+        "worker thread count changed the fleet outcome"
+    );
+}
+
+#[test]
+fn autoscaling_fleet_is_thread_deterministic_too() {
+    // Scale-ups/downs happen at barriers on frozen snapshots, so they
+    // must also be independent of the worker pool size.
+    let spec = TrafficSpec::new(
+        ArrivalSpec::diurnal(5_000.0, 0.8, 6_000_000).kinds(&[ModelKind::ResNet18]),
+    )
+    .horizon_ms(12.0)
+    .warmup_ms(2.0)
+    .window_ms(2.0)
+    .slo_ms(2.0)
+    .steady(None);
+    let run = |threads: usize| {
+        Fleet::new(
+            FleetSpec::new(spec.clone(), 2).max_replicas(5).threads(threads),
+            board,
+            parse_routing("least-outstanding").unwrap(),
+        )
+        .autoscaler(parse_autoscaler("queue:16").unwrap())
+        .run(0xACE)
+        .unwrap()
+    };
+    let one = run(1);
+    let many = run(8);
+    assert_eq!(one.fingerprint(), many.fingerprint());
+    assert_eq!(one.scale_events, many.scale_events);
+}
+
+// ------------------------------------------------ single-board identity
+
+#[test]
+fn one_replica_round_robin_fleet_equals_the_single_board_engine() {
+    // A fleet of one board behind round-robin is just the traffic engine
+    // with extra bookkeeping: stats, offered count, and the board-level
+    // simulation report must match `run_traffic_with` exactly.
+    let spec = light_spec(1_500.0, 12.0);
+    let seed = 42;
+    let fleet = Fleet::new(
+        FleetSpec::new(spec.clone(), 1),
+        board,
+        parse_routing("round-robin").unwrap(),
+    )
+    .run(seed)
+    .unwrap();
+    let single = board().unwrap().run_traffic_with(&spec, seed).unwrap();
+    assert!(single.stats.completed() > 0);
+    assert_eq!(fleet.offered, single.offered, "offered streams diverged");
+    assert_eq!(
+        fleet.replicas[0].stats.fingerprint(),
+        single.stats.fingerprint(),
+        "serving stats diverged"
+    );
+    assert_eq!(
+        fleet.replicas[0].sim.fingerprint(),
+        single.sim.fingerprint(),
+        "board-level co-simulation diverged"
+    );
+    // The global merge of one replica is that replica.
+    assert_eq!(fleet.global.fingerprint(), single.stats.fingerprint());
+}
+
+// ------------------------------------------------- autoscale / migrate
+
+#[test]
+fn queue_autoscaler_grows_the_fleet_under_overload() {
+    // 8 krps into one 6x6 board (~3 krps capacity): the queue-depth
+    // policy must scale up, and cold boards must not serve before their
+    // ready time.
+    let spec = light_spec(8_000.0, 15.0);
+    let report = Fleet::new(
+        FleetSpec::new(spec, 1).max_replicas(4),
+        board,
+        parse_routing("least-outstanding").unwrap(),
+    )
+    .autoscaler(parse_autoscaler("queue:16").unwrap())
+    .run(0xBEEF)
+    .unwrap();
+    assert!(!report.scale_events.is_empty(), "overload never triggered a scale-up");
+    assert!(report.peak_replicas() > 1);
+    for r in &report.replicas {
+        if r.ready_at > 0 && r.stats.completed() > 0 {
+            // Every request served by a cold-started board finished
+            // after the board was ready.
+            assert!(r.sim.span_ns > 0);
+        }
+    }
+    // Scale-ups actually carried load: the late boards served requests.
+    let late_served: u64 =
+        report.replicas.iter().filter(|r| r.ready_at > 0).map(|r| r.stats.completed()).sum();
+    assert!(late_served > 0, "cold-started boards never served anything");
+}
+
+#[test]
+fn thermal_emergency_migrates_queued_work_off_hot_boards() {
+    // DTM boards under saturating load, with the migration threshold set
+    // below the governor's ceiling so it trips while queues are non-empty.
+    let dtm_board = || {
+        Simulation::builder()
+            .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+            .params(serving_params())
+            .thermal(ThermalSpec::InLoop {
+                window_ns: 100_000,
+                governor: GovernorSpec::threshold_band(47.0, 46.2, 48.0),
+            })
+            .build()
+    };
+    let spec = light_spec(9_000.0, 15.0);
+    let run = |threads: usize| {
+        Fleet::new(
+            FleetSpec::new(spec.clone(), 3).emergency_c(46.0).threads(threads),
+            dtm_board,
+            parse_routing("thermal").unwrap(),
+        )
+        .run(0x7E47)
+        .unwrap()
+    };
+    let report = run(1);
+    assert!(report.global.completed() > 0);
+    // Thermal telemetry flowed into the report.
+    assert!(
+        report.replicas.iter().any(|r| !r.temp_timeline.is_empty()),
+        "in-loop boards must report temperatures"
+    );
+    // Migration bookkeeping is consistent even if the threshold never
+    // tripped at a barrier with queued work.
+    let out: u64 = report.replicas.iter().map(|r| r.migrated_out).sum();
+    assert_eq!(out, report.migrations);
+    // And the whole thing stays thread-deterministic with thermal state.
+    assert_eq!(report.fingerprint(), run(4).fingerprint());
+}
+
+// --------------------------------------------------- acceptance scaling
+
+#[test]
+fn four_replica_fleet_sustains_3_5x_the_single_board_knee() {
+    // Find the single-board saturation knee, then offer 4x that rate to
+    // a 4-replica least-outstanding fleet: goodput must reach at least
+    // 3.5x the single board's knee goodput.
+    let spec = light_spec(1_000.0, 15.0);
+    let sweep = LoadSweep::new(spec.clone(), 500.0, 6_000.0).iters(4);
+    let result = sweep.run(|| board(), 7).unwrap();
+    assert!(result.knee_rps > 0.0, "6x6 board must sustain something in range");
+    let knee_goodput = result
+        .probes
+        .iter()
+        .filter(|p| p.meets_slo)
+        .map(|p| p.goodput_rps)
+        .fold(0.0_f64, f64::max);
+    assert!(knee_goodput > 0.0);
+
+    let fleet_spec = TrafficSpec {
+        arrivals: spec.arrivals.with_rate(4.0 * result.knee_rps).unwrap(),
+        ..spec
+    };
+    let report = Fleet::new(
+        FleetSpec::new(fleet_spec, 4),
+        board,
+        parse_routing("least-outstanding").unwrap(),
+    )
+    .run(7)
+    .unwrap();
+    assert!(
+        report.goodput_rps() >= 3.5 * knee_goodput,
+        "fleet goodput {:.0} req/s < 3.5x single-board knee goodput {:.0} req/s",
+        report.goodput_rps(),
+        knee_goodput
+    );
+}
+
+// -------------------------------------------------------- LoadSweep probe
+
+#[test]
+fn load_sweep_probe_closure_drives_a_fleet() {
+    // The knee bisection is system-agnostic: run_with_probe over a
+    // 2-board fleet finds a knee at least as high as one board's.
+    let spec = light_spec(1_000.0, 10.0);
+    let single = LoadSweep::new(spec.clone(), 500.0, 8_000.0).iters(3).run(|| board(), 9).unwrap();
+    let fleet = LoadSweep::new(spec, 500.0, 8_000.0).iters(3).run_with_probe(|probe_spec| {
+        let report = Fleet::new(
+            FleetSpec::new(probe_spec.clone(), 2),
+            board,
+            parse_routing("least-outstanding")?,
+        )
+        .run(9)?;
+        Ok(report.global)
+    })
+    .unwrap();
+    assert!(
+        fleet.knee_rps >= single.knee_rps,
+        "2 boards ({:.0} rps) must not saturate before 1 ({:.0} rps)",
+        fleet.knee_rps,
+        single.knee_rps
+    );
+}

@@ -1,12 +1,17 @@
 #!/usr/bin/env python3
-"""Guard the NoC flit-engine throughput against perf regressions.
+"""Guard hot-path throughput metrics against perf regressions.
 
 Usage: bench_check.py <fresh_dir> <baseline_dir> [--factor 1.5] [--enforce-measured]
        bench_check.py <fresh_dir> <baseline_dir> --ratchet
 
-Compares the `flit_hops_per_s` metric of every `BENCH_noc_flit*.json`
-artifact produced by `cargo bench --bench perf_hotpaths` (written into
-<fresh_dir> via CHIPSIM_BENCH_JSON) against the committed baseline of the
+Each entry in CHECKS pairs a glob of `BENCH_*.json` artifacts produced by
+`cargo bench --bench perf_hotpaths` (written into <fresh_dir> via
+CHIPSIM_BENCH_JSON) with the throughput metric it enforces:
+
+  - `BENCH_noc_flit*.json`  -> `flit_hops_per_s`   (flit-level NoI engine)
+  - `BENCH_fleet*.json`     -> `fleet_requests_per_s` (fleet serving loop)
+
+Every fresh artifact is compared against the committed baseline of the
 same name in <baseline_dir> (the repo root).  Fails when a fresh result
 drops more than `factor` times below its baseline.
 
@@ -18,16 +23,16 @@ With --enforce-measured the gate refuses to run against baselines still
 stamped `"estimated": true` — an estimated baseline silently downgrades
 the check to advisory, which is exactly the regression this flag exists
 to prevent.  CI passes it, so the perf trajectory is actually enforced.
+(A conservative committed floor without the stamp IS enforced: it only
+carries a "note" explaining its provenance until the first ratchet.)
 
 With --ratchet, instead of checking, the committed floors are rewritten
 from the fresh artifact: download CI's `bench-json` artifact of a green
 run, then `python3 python/bench_check.py <artifact_dir> . --ratchet` and
 commit the result.  Every `BENCH_*.json` in the artifact (not just the
-flit cases) is copied over its committal twin, any `"estimated"` stamp is
-dropped, and `"measured": true` is set — which arms the gate for metrics
-the glob enforces and records a real baseline for the ones it does not
-(e.g. the fleet-serving case) so a later glob widening starts from
-measured numbers.
+enforced cases) is copied over its committed twin, any `"estimated"`
+stamp and provenance `"note"` are dropped, and `"measured": true` is set
+— so the gate runs against real numbers from then on.
 """
 
 import argparse
@@ -36,7 +41,11 @@ import json
 import os
 import sys
 
-METRIC = "flit_hops_per_s"
+# (artifact glob, enforced metric) — one row per guarded hot path.
+CHECKS = [
+    ("BENCH_noc_flit*.json", "flit_hops_per_s"),
+    ("BENCH_fleet*.json", "fleet_requests_per_s"),
+]
 
 
 def load_doc(path):
@@ -44,8 +53,8 @@ def load_doc(path):
         return json.load(f)
 
 
-def metric_of(doc):
-    return (doc.get("metrics") or {}).get(METRIC)
+def metric_of(doc, metric):
+    return (doc.get("metrics") or {}).get(metric)
 
 
 def ratchet(fresh_dir, baseline_dir):
@@ -65,11 +74,63 @@ def ratchet(fresh_dir, baseline_dir):
             json.dump(doc, f, indent=2)
             f.write("\n")
         verb = "ratcheted" if existed else "adopted (new baseline)"
-        m = metric_of(doc)
-        detail = f" {METRIC}={m:.3g}" if m is not None else ""
+        metrics = doc.get("metrics") or {}
+        detail = "".join(f" {k}={v:.3g}" for k, v in sorted(metrics.items()))
         print(f"{name}: {verb}{detail}")
     print(f"ratchet OK ({len(fresh)} baseline(s) rewritten — review and commit the diff)")
     return 0
+
+
+def check_glob(pattern, metric, args, failures):
+    """Compare every baseline matching `pattern`; returns cases checked."""
+    baselines = sorted(glob.glob(os.path.join(args.baseline_dir, pattern)))
+    if not baselines:
+        failures.append(
+            f"no {pattern} baselines found in {args.baseline_dir} — "
+            f"the '{metric}' perf guard checked nothing"
+        )
+        return 0
+    checked = 0
+    for base_path in baselines:
+        name = os.path.basename(base_path)
+        base_doc = load_doc(base_path)
+        base = metric_of(base_doc, metric)
+        # A baseline stamped "estimated": true was never measured (the
+        # bootstrap committed before a toolchain existed): report but do
+        # not fail on it.  The first real `cargo bench` run rewrites the
+        # file without the stamp, arming the gate.
+        estimated = bool(base_doc.get("estimated"))
+        if estimated and args.enforce_measured:
+            failures.append(
+                f"{name}: baseline is stamped 'estimated' — the gate would be advisory; "
+                "refresh it from a measured CI bench-json artifact"
+            )
+            continue
+        if base is None:
+            failures.append(f"{name}: baseline has no '{metric}' metric")
+            continue
+        fresh_path = os.path.join(args.fresh_dir, name)
+        if not os.path.exists(fresh_path):
+            failures.append(f"{name}: fresh result missing from {args.fresh_dir}")
+            continue
+        fresh = metric_of(load_doc(fresh_path), metric)
+        if fresh is None:
+            failures.append(f"{name}: fresh result has no '{metric}' metric")
+            continue
+        checked += 1
+        ratio = fresh / base if base > 0 else float("inf")
+        tag = " [estimated baseline, advisory]" if estimated else ""
+        print(f"{name}: baseline {base:.3g} fresh {fresh:.3g} {metric} ({ratio:.2f}x){tag}")
+        if fresh < base / args.factor:
+            msg = (
+                f"{name}: {metric} regressed more than {args.factor}x below baseline "
+                f"({fresh:.3g} < {base:.3g} / {args.factor})"
+            )
+            if estimated:
+                print(f"ADVISORY (not failing, baseline is estimated): {msg}")
+            else:
+                failures.append(msg)
+    return checked
 
 
 def main():
@@ -98,60 +159,17 @@ def main():
     if args.ratchet:
         return ratchet(args.fresh_dir, args.baseline_dir)
 
-    baselines = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_noc_flit*.json")))
     failures = []
     checked = 0
-    for base_path in baselines:
-        name = os.path.basename(base_path)
-        base_doc = load_doc(base_path)
-        base = metric_of(base_doc)
-        # A baseline stamped "estimated": true was never measured (the
-        # bootstrap committed before a toolchain existed): report but do
-        # not fail on it.  The first real `cargo bench` run rewrites the
-        # file without the stamp, arming the gate.
-        estimated = bool(base_doc.get("estimated"))
-        if estimated and args.enforce_measured:
-            failures.append(
-                f"{name}: baseline is stamped 'estimated' — the gate would be advisory; "
-                "refresh it from a measured CI bench-json artifact"
-            )
-            continue
-        if base is None:
-            failures.append(f"{name}: baseline has no '{METRIC}' metric")
-            continue
-        fresh_path = os.path.join(args.fresh_dir, name)
-        if not os.path.exists(fresh_path):
-            failures.append(f"{name}: fresh result missing from {args.fresh_dir}")
-            continue
-        fresh = metric_of(load_doc(fresh_path))
-        if fresh is None:
-            failures.append(f"{name}: fresh result has no '{METRIC}' metric")
-            continue
-        checked += 1
-        ratio = fresh / base if base > 0 else float("inf")
-        tag = " [estimated baseline, advisory]" if estimated else ""
-        print(f"{name}: baseline {base:.3g} fresh {fresh:.3g} flit-hops/s ({ratio:.2f}x){tag}")
-        if fresh < base / args.factor:
-            msg = (
-                f"{name}: {METRIC} regressed more than {args.factor}x below baseline "
-                f"({fresh:.3g} < {base:.3g} / {args.factor})"
-            )
-            if estimated:
-                print(f"ADVISORY (not failing, baseline is estimated): {msg}")
-            else:
-                failures.append(msg)
+    for pattern, metric in CHECKS:
+        checked += check_glob(pattern, metric, args, failures)
 
-    if not baselines:
-        failures.append(
-            f"no BENCH_noc_flit*.json baselines found in {args.baseline_dir} — "
-            "the flit perf guard checked nothing"
-        )
     if failures:
         print("\nbench_check FAILED:", file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         return 1
-    print(f"bench_check OK ({checked} flit case(s) within {args.factor}x of baseline)")
+    print(f"bench_check OK ({checked} case(s) within {args.factor}x of baseline)")
     return 0
 
 

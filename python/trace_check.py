@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Validate a chipsim flight-recorder trace against the Chrome trace-event format.
+
+Usage: trace_check.py <trace.json> [<more.json> ...]
+
+Structural checks (stdlib only, no Perfetto dependency):
+
+  - the document is a JSON object with a non-empty `traceEvents` array;
+  - every event has a known phase (`X i C b n e M`), integer pid/tid,
+    a string name, and (except metadata) a non-negative numeric `ts`;
+  - complete spans (`X`) carry a non-negative `dur`;
+  - spans on the same (pid, tid) track strictly nest: a span either
+    contains the next one or ends before it starts — partial overlap
+    would render as garbage in Perfetto and indicates a recorder bug;
+  - async events (`b`/`n`/`e`) balance per (pid, cat, id): begins and
+    ends pair up, nothing fires before the first begin or after the
+    last end;
+  - every request-lifecycle track (async events named `request`)
+    reaches a terminal state: its final `e` event carries a non-empty
+    `args.state` (finished / dropped / truncated);
+  - counter events (`C`) carry only numeric series values.
+
+CI generates a trace with `chipsim trace --scenario <fleet preset>` and
+runs this checker over it, so the exported document stays loadable in
+Perfetto / chrome://tracing as the recorder evolves.
+"""
+
+import json
+import sys
+
+PHASES = {"X", "i", "C", "b", "n", "e", "M"}
+# Span-nesting tolerance in trace-event time units (µs): ts/dur are
+# nanoseconds divided by 1e3, so 1e-6 µs = 1/1000 of the ns grid.
+EPS = 1e-6
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_events(events, errors):
+    """Per-event field checks; returns events grouped for the structural passes."""
+    spans = {}  # (pid, tid) -> [(ts, dur, name)]
+    asyncs = {}  # (pid, cat, id) -> [(ts, ph, name, args)]
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in PHASES:
+            errors.append(f"{where}: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errors.append(f"{where}: missing or empty 'name'")
+        for key in ("pid", "tid"):
+            if not (isinstance(ev.get(key), int) and not isinstance(ev.get(key), bool)):
+                errors.append(f"{where}: '{key}' must be an integer")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not is_num(ts) or ts < 0:
+            errors.append(f"{where} ({ev.get('name')}): bad 'ts' {ts!r}")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not is_num(dur) or dur < 0:
+                errors.append(f"{where} ({ev.get('name')}): negative or missing 'dur' {dur!r}")
+            else:
+                spans.setdefault((ev.get("pid"), ev.get("tid")), []).append(
+                    (ts, dur, ev["name"])
+                )
+        elif ph in ("b", "n", "e"):
+            if not isinstance(ev.get("id"), str) or not ev["id"]:
+                errors.append(f"{where} ({ev.get('name')}): async event without 'id'")
+                continue
+            key = (ev.get("pid"), ev.get("cat"), ev["id"])
+            asyncs.setdefault(key, []).append((ts, ph, ev["name"], ev.get("args") or {}))
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                errors.append(f"{where} ({ev.get('name')}): counter without series")
+            else:
+                for k, v in args.items():
+                    if not is_num(v):
+                        errors.append(
+                            f"{where} ({ev.get('name')}): counter series '{k}' not numeric"
+                        )
+    return spans, asyncs
+
+
+def check_nesting(spans, errors):
+    """Spans on one track must nest or be disjoint — no partial overlap."""
+    for (pid, tid), track in sorted(spans.items()):
+        # Sort by start, longest first on ties, so a parent precedes the
+        # children it contains.
+        track.sort(key=lambda s: (s[0], -s[1]))
+        stack = []  # end times of open ancestor spans
+        for ts, dur, name in track:
+            end = ts + dur
+            while stack and stack[-1] <= ts + EPS:
+                stack.pop()
+            if stack and end > stack[-1] + EPS:
+                errors.append(
+                    f"track pid={pid} tid={tid}: span '{name}' [{ts}, {end}] "
+                    f"partially overlaps an earlier span ending at {stack[-1]}"
+                )
+                continue
+            stack.append(end)
+
+
+def check_async(asyncs, errors):
+    """Begin/end balance per async track, plus request terminal states."""
+    requests = terminal = 0
+    for (pid, cat, aid), evs in sorted(asyncs.items()):
+        evs.sort(key=lambda e: e[0])
+        label = f"async pid={pid} cat={cat} id={aid}"
+        begins = [e for e in evs if e[1] == "b"]
+        ends = [e for e in evs if e[1] == "e"]
+        if not begins:
+            errors.append(f"{label}: events without a 'b' begin")
+            continue
+        if len(begins) != len(ends):
+            errors.append(f"{label}: {len(begins)} begin(s) vs {len(ends)} end(s)")
+            continue
+        first_b = min(e[0] for e in begins)
+        last_e = max(e[0] for e in ends)
+        if any(e[0] < first_b for e in evs):
+            errors.append(f"{label}: event fires before the first begin")
+        if any(e[0] > last_e for e in evs):
+            errors.append(f"{label}: event fires after the last end")
+        if any(e[2] == "request" for e in evs):
+            requests += 1
+            final = max(ends, key=lambda e: e[0])
+            state = final[3].get("state")
+            if isinstance(state, str) and state:
+                terminal += 1
+            else:
+                errors.append(f"{label}: request never reaches a terminal state")
+    return requests, terminal
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: FAILED\n  - unreadable: {e}", file=sys.stderr)
+        return 1
+    errors = []
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list):
+        errors.append("document has no 'traceEvents' array")
+        events = []
+    elif not events:
+        errors.append("'traceEvents' is empty — the recorder traced nothing")
+    spans, asyncs = check_events(events, errors)
+    check_nesting(spans, errors)
+    requests, terminal = check_async(asyncs, errors)
+    if errors:
+        print(f"{path}: FAILED", file=sys.stderr)
+        shown = errors[:20]
+        for e in shown:
+            print(f"  - {e}", file=sys.stderr)
+        if len(errors) > len(shown):
+            print(f"  - ... and {len(errors) - len(shown)} more", file=sys.stderr)
+        return 1
+    nspans = sum(len(t) for t in spans.values())
+    print(
+        f"{path}: OK ({len(events)} events, {nspans} spans on {len(spans)} tracks, "
+        f"{len(asyncs)} async tracks, {terminal}/{requests} requests terminal)"
+    )
+    return 0
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    return max(check_file(p) for p in argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

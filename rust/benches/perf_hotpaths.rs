@@ -278,9 +278,9 @@ fn bench_dtm_closed_loop() {
 
 /// Whole-fleet serving throughput: dispatcher + routing + the parallel
 /// epoch advance of 4 replica boards.  `fleet_requests_per_s` lands in
-/// the JSON artifact for visibility; `python/bench_check.py` does not
-/// enforce it yet (its floor file is added via `--ratchet` once CI has
-/// measured baselines).
+/// the JSON artifact and is enforced by `python/bench_check.py` against
+/// a conservative committed floor (ratchet it to measured numbers with
+/// `--ratchet` once CI has baselines).
 fn bench_fleet_serving() {
     use chipsim::fleet::{parse_routing, Fleet, FleetSpec};
     use chipsim::serving::{ArrivalSpec, TrafficSpec};

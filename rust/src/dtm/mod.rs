@@ -378,6 +378,17 @@ impl DtmRuntime {
         self.stepper.hottest_c()
     }
 
+    /// Chiplets currently running below the top DVFS level (the flight
+    /// recorder's governor-state gauge; `idx` itself stays private).
+    pub fn throttled_chiplets(&self) -> usize {
+        self.idx.iter().filter(|&&i| i > 0).count()
+    }
+
+    /// Deepest DVFS level currently applied anywhere (0 = no throttle).
+    pub fn max_dvfs_level(&self) -> usize {
+        self.idx.iter().copied().max().unwrap_or(0)
+    }
+
     /// Advance the control loop to virtual time `now`: close every
     /// elapsed window — drain its power (forwarded to `sink`), step the
     /// RC network, poll sensors, run the governor.

@@ -295,7 +295,7 @@ pub fn fig9(quick: bool) -> Table {
             (traj.last().cloned().unwrap_or_else(|| vec![0.0; tm.n]), "pjrt-aot")
         }
         Err(e) => {
-            log::warn!("PJRT thermal unavailable ({e}); using native solver");
+            crate::warn_once!("PJRT thermal unavailable ({e}); using native solver");
             let s = NativeSolver::new(&tm, dt_s).expect("native solver");
             let traj = s.transient(&vec![0.0; tm.n], &node_steps);
             (traj.last().cloned().unwrap_or_else(|| vec![0.0; tm.n]), "native")

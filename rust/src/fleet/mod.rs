@@ -75,6 +75,7 @@ use crate::serving::{ServingStats, StreamingSource, TrafficSpec, WindowSummary};
 use crate::sim::{
     ModelOutcome, PowerPort, RequestSource, RunStatus, SimReport, Simulation, StreamSink,
 };
+use crate::trace::{handle, BreakdownStats, TraceConfig, TraceHandle, TraceRecorder, PID_STRIDE};
 use crate::util::rng::Rng;
 use crate::workload::{ModelKind, ModelRequest};
 use crate::TimeNs;
@@ -231,6 +232,7 @@ impl RequestSource for ReplicaSource {
 struct FleetSink {
     stats: ServingStats,
     roller: WindowRoller,
+    breakdown: BreakdownStats,
 }
 
 impl FleetSink {
@@ -238,12 +240,16 @@ impl FleetSink {
         FleetSink {
             stats: ServingStats::new(spec.slo_ns, spec.warmup_ns),
             roller: WindowRoller::new(spec.window_ns, spec.keep_windows, external_power),
+            breakdown: BreakdownStats::new(),
         }
     }
 
-    fn into_parts(self, sim: &mut SimReport) -> (ServingStats, Vec<WindowSummary>) {
+    fn into_parts(
+        self,
+        sim: &mut SimReport,
+    ) -> (ServingStats, BreakdownStats, Vec<WindowSummary>) {
         let windows = self.roller.finish(sim);
-        (self.stats, windows)
+        (self.stats, self.breakdown, windows)
     }
 }
 
@@ -252,6 +258,9 @@ impl StreamSink for FleetSink {
         let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
         if self.stats.record(outcome.kind, latency, outcome.finished_ns) {
             self.roller.record(latency);
+            if let Some(bd) = &outcome.breakdown {
+                self.breakdown.record(bd);
+            }
         }
         true
     }
@@ -334,6 +343,8 @@ pub struct Fleet {
     make_sim: Box<dyn FnMut() -> anyhow::Result<Simulation>>,
     routing: Box<dyn RoutingPolicy>,
     autoscaler: Option<Box<dyn Autoscaler>>,
+    trace_cfg: Option<TraceConfig>,
+    tracers: Vec<TraceHandle>,
 }
 
 impl Fleet {
@@ -345,7 +356,14 @@ impl Fleet {
         make_sim: impl FnMut() -> anyhow::Result<Simulation> + 'static,
         routing: Box<dyn RoutingPolicy>,
     ) -> Fleet {
-        Fleet { spec, make_sim: Box::new(make_sim), routing, autoscaler: None }
+        Fleet {
+            spec,
+            make_sim: Box::new(make_sim),
+            routing,
+            autoscaler: None,
+            trace_cfg: None,
+            tracers: Vec::new(),
+        }
     }
 
     pub fn autoscaler(mut self, autoscaler: Option<Box<dyn Autoscaler>>) -> Fleet {
@@ -353,11 +371,27 @@ impl Fleet {
         self
     }
 
+    /// Install a flight recorder on every replica board (including
+    /// scale-ups).  Replica `r` records with pid base `r * PID_STRIDE`,
+    /// so [`tracers`](Self::tracers) merge into one Perfetto document
+    /// with disjoint track ids via [`crate::trace::merge_export`].
+    pub fn trace(mut self, cfg: Option<TraceConfig>) -> Fleet {
+        self.trace_cfg = cfg;
+        self
+    }
+
+    /// Per-replica recorders of the last [`run`](Self::run), in replica
+    /// order.  Empty unless [`trace`](Self::trace) was set.
+    pub fn tracers(&self) -> &[TraceHandle] {
+        &self.tracers
+    }
+
     /// Run the fleet to completion: the arrival horizon passes and every
     /// board drains.  Deterministic in `seed` for any `threads`.
     pub fn run(&mut self, seed: u64) -> anyhow::Result<FleetReport> {
         self.spec.validate()?;
-        let Fleet { spec, make_sim, routing, autoscaler } = self;
+        self.tracers.clear();
+        let Fleet { spec, make_sim, routing, autoscaler, trace_cfg, tracers } = self;
         let max_replicas = spec.max_replicas.max(spec.replicas);
         let epoch = spec.epoch_ns;
 
@@ -366,6 +400,10 @@ impl Fleet {
 
         let mut spawn = |id: usize, ready_at: TimeNs| -> anyhow::Result<Replica> {
             let mut sim = make_sim()?;
+            if let Some(cfg) = trace_cfg.as_ref() {
+                let rec = TraceRecorder::new(cfg.clone()).with_pid_base(id as u32 * PID_STRIDE);
+                tracers.push(sim.set_tracer(handle(rec)));
+            }
             let external_power = sim.thermal_spec().is_in_loop();
             let sink = FleetSink::new(&spec.traffic, external_power);
             let session = sim.begin_run(replica_seed(seed, id), sink.retain_state())?;
@@ -529,6 +567,7 @@ impl Fleet {
         let offered = global.emitted();
         let mut global_stats =
             ServingStats::new(spec.traffic.slo_ns, spec.traffic.warmup_ns);
+        let mut global_breakdown = BreakdownStats::new();
         let mut reports = Vec::with_capacity(replicas.len());
         for r in replicas {
             let Replica {
@@ -547,8 +586,9 @@ impl Fleet {
             } = r;
             debug_assert!(source.is_empty(), "replica {id} retains unserved arrivals");
             let mut sim_report = sim.finish_run(session, &mut sink)?;
-            let (stats, windows) = sink.into_parts(&mut sim_report);
+            let (stats, breakdown, windows) = sink.into_parts(&mut sim_report);
             global_stats.merge(&stats);
+            global_breakdown.merge(&breakdown);
             reports.push(ReplicaReport {
                 id,
                 routed,
@@ -556,6 +596,7 @@ impl Fleet {
                 ready_at,
                 retired: retiring,
                 stats,
+                breakdown,
                 windows,
                 sim: sim_report,
                 util_timeline,
@@ -569,6 +610,7 @@ impl Fleet {
             migrations,
             scale_events,
             global: global_stats,
+            breakdown: global_breakdown,
             replicas: reports,
         })
     }
@@ -629,6 +671,9 @@ pub struct ReplicaReport {
     pub retired: bool,
     /// Post-warm-up serving stats for requests served *by this board*.
     pub stats: ServingStats,
+    /// Per-component latency breakdown for requests served by this board
+    /// (empty unless the fleet was traced with breakdowns enabled).
+    pub breakdown: BreakdownStats,
     /// Trailing per-window summaries.
     pub windows: Vec<WindowSummary>,
     /// Tail board-level simulation report (power, energy, NoI work).
@@ -652,6 +697,10 @@ pub struct FleetReport {
     pub scale_events: Vec<ScaleEvent>,
     /// Fleet-wide post-warm-up serving stats (all replicas merged).
     pub global: ServingStats,
+    /// Fleet-wide latency breakdown (all replicas merged; empty unless
+    /// traced with breakdowns on — excluded from
+    /// [`fingerprint`](Self::fingerprint)).
+    pub breakdown: BreakdownStats,
     pub replicas: Vec<ReplicaReport>,
 }
 
@@ -742,6 +791,9 @@ impl FleetReport {
                 e.from,
                 e.to
             );
+        }
+        if !self.breakdown.is_empty() {
+            s.push_str(&self.breakdown.table().render());
         }
         s
     }

@@ -75,6 +75,7 @@ pub mod mapping;
 pub mod noc;
 pub mod compute;
 pub mod sim;
+pub mod trace;
 pub mod scenario;
 pub mod serving;
 pub mod fleet;
@@ -107,6 +108,9 @@ pub mod prelude {
     };
     pub use crate::sim::{
         SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,
+    };
+    pub use crate::trace::{
+        BreakdownStats, LatencyBreakdown, TraceCategories, TraceConfig, TraceRecorder,
     };
     pub use crate::workload::{ModelKind, NeuralModel};
 }

@@ -6,6 +6,7 @@
 //!   mix          multi-tenant co-execution (per-tenant SLOs, interference matrix)
 //!   dtm          closed-loop dynamic thermal management run / governor sweep
 //!   fleet        fleet-scale serving: N replica boards behind one dispatcher
+//!   trace        flight-recorder run of a named scenario -> Perfetto JSON
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -28,6 +29,8 @@
 //!   chipsim fleet --replicas 4 --routing thermal --rate 9000 --rows 6 --cols 6
 //!   chipsim fleet --scenario fleet-round-robin --sweep routing-compare
 //!   chipsim fleet --scenario fleet-least-outstanding --sweep knee --lo 2000 --hi 20000
+//!   chipsim trace --scenario fleet-least-outstanding   # results/trace_<name>.json
+//!   chipsim traffic --scenario traffic-poisson-mesh --trace --trace-filter request,noi
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -45,7 +48,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|mix|dtm|fleet|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|mix|dtm|fleet|trace|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -63,7 +66,7 @@ fn help() -> HelpText {
             ("--power-csv FILE", "dump per-chiplet power trace"),
             ("--arrivals poisson|burst|diurnal|trace", "traffic: arrival process (default poisson)"),
             ("--rate R", "traffic: mean arrival rate, req/s (default 2000)"),
-            ("--trace FILE.json", "traffic: arrival trace for --arrivals trace"),
+            ("--trace-file FILE.json", "traffic: arrival trace for --arrivals trace"),
             ("--horizon-ms/--warmup-ms/--window-ms", "traffic: run shape (default 50/5/5)"),
             ("--slo-ms S", "traffic: end-to-end latency SLO (default 1.0)"),
             ("--sweep --lo R0 --hi R1 [--iters N]", "traffic: bisect for the saturation knee"),
@@ -84,6 +87,10 @@ fn help() -> HelpText {
             ("--emergency-c T", "fleet: migrate queued work off boards above T °C"),
             ("fleet --sweep routing-compare", "fleet: run all four routing policies at one seed"),
             ("fleet --sweep knee --lo R0 --hi R1", "fleet: bisect for the fleet saturation knee"),
+            ("--trace", "traffic/mix/fleet: record a flight-recorder trace of the run"),
+            ("--trace-filter CATS", "trace categories: all or request,compute,noi,dtm,gauges"),
+            ("--trace-out FILE.json", "trace output path (default results/trace_<name>.json)"),
+            ("trace --scenario NAME", "run any preset fully traced; also prints the breakdown"),
         ],
     }
 }
@@ -118,6 +125,44 @@ fn build_params(args: &Args) -> anyhow::Result<SimParams> {
         },
         ..SimParams::default()
     })
+}
+
+/// `--trace` / `--trace-filter` / `--trace-out` on the serving
+/// subcommands: a runtime trace config, or `None` when tracing is off
+/// (the hook sites then cost a single pointer check per event).
+fn build_trace(args: &Args) -> anyhow::Result<Option<chipsim::trace::TraceConfig>> {
+    if !args.flag("trace") && args.get("trace-filter").is_none() && args.get("trace-out").is_none()
+    {
+        return Ok(None);
+    }
+    let mut cfg = chipsim::trace::TraceConfig::default();
+    if let Some(f) = args.get("trace-filter") {
+        cfg.categories = chipsim::trace::TraceCategories::parse(f)?;
+    }
+    Ok(Some(cfg))
+}
+
+/// Write an exported trace document to `--trace-out`, or into the
+/// results dir under `default_name`.
+fn write_trace(
+    doc: &chipsim::util::json::Value,
+    out: Option<&str>,
+    default_name: &str,
+) -> anyhow::Result<()> {
+    match out {
+        Some(path) => {
+            std::fs::write(path, chipsim::util::json::to_string_pretty(doc))?;
+            println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+        }
+        None => {
+            let path = chipsim::metrics::write_json(default_name, doc)?;
+            println!(
+                "trace written to {} (load in Perfetto / chrome://tracing)",
+                path.display()
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
@@ -226,8 +271,8 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
                 0.6,
                 (args.get_f64("period-ms", 20.0)? * 1e6) as u64,
             ),
-            "trace" => ArrivalSpec::trace_file(args.get("trace").ok_or_else(|| {
-                anyhow::anyhow!("--arrivals trace requires --trace FILE.json")
+            "trace" => ArrivalSpec::trace_file(args.get("trace-file").ok_or_else(|| {
+                anyhow::anyhow!("--arrivals trace requires --trace-file FILE.json")
             })?)?,
             other => anyhow::bail!("unknown --arrivals '{other}' (poisson|burst|diurnal|trace)"),
         }
@@ -255,7 +300,12 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     } else {
         spec
     };
+    let trace_cfg = build_trace(args)?;
     if args.flag("sweep") {
+        anyhow::ensure!(
+            trace_cfg.is_none(),
+            "--trace does not combine with --sweep (trace a single run)"
+        );
         let lo = args.get_f64("lo", 500.0)?;
         let hi = args.get_f64("hi", 10_000.0)?;
         let sweep = LoadSweep::new(spec, lo, hi).iters(args.get_usize("iters", 5)?);
@@ -277,8 +327,15 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         );
         return Ok(());
     }
-    let report = make_sim()?.run_traffic_with(&spec, seed)?;
+    let mut sim = make_sim()?;
+    let tracer = trace_cfg.map(|cfg| sim.set_trace(cfg));
+    let report = sim.run_traffic_with(&spec, seed)?;
     print!("{}", report.summary());
+    if let Some(h) = tracer {
+        let rec = h.lock().expect("trace lock");
+        let name = format!("trace_{}.json", args.get("scenario").unwrap_or("traffic"));
+        write_trace(&rec.export(), args.get("trace-out"), &name)?;
+    }
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
         std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
@@ -385,18 +442,36 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
     };
     let interference = sweep || mix.interference;
     let mix = mix.interference(interference);
+    let trace_cfg = build_trace(args)?;
+    // Only the first board built — the co-located pass — records; solo
+    // interference baselines run untraced (they would otherwise reset
+    // the shared recorder).
+    let tracer: std::cell::RefCell<Option<chipsim::trace::TraceHandle>> =
+        std::cell::RefCell::new(None);
     let report = run_mix(
         || {
-            Simulation::builder()
+            let mut sim = Simulation::builder()
                 .hardware(hw.clone())
                 .params(params.clone())
                 .thermal(thermal.clone())
-                .build()
+                .build()?;
+            if let Some(cfg) = &trace_cfg {
+                let mut slot = tracer.borrow_mut();
+                if slot.is_none() {
+                    *slot = Some(sim.set_trace(cfg.clone()));
+                }
+            }
+            Ok(sim)
         },
         &mix,
         seed,
     )?;
     print!("{}", report.summary());
+    if let Some(h) = tracer.into_inner() {
+        let rec = h.lock().expect("trace lock");
+        let name = format!("trace_{}.json", args.get("scenario").unwrap_or("mix"));
+        write_trace(&rec.export(), args.get("trace-out"), &name)?;
+    }
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
         std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
@@ -584,8 +659,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
                     0.6,
                     (args.get_f64("period-ms", 20.0)? * 1e6) as u64,
                 ),
-                "trace" => ArrivalSpec::trace_file(args.get("trace").ok_or_else(|| {
-                    anyhow::anyhow!("--arrivals trace requires --trace FILE.json")
+                "trace" => ArrivalSpec::trace_file(args.get("trace-file").ok_or_else(|| {
+                    anyhow::anyhow!("--arrivals trace requires --trace-file FILE.json")
                 })?)?,
                 other => {
                     anyhow::bail!("unknown --arrivals '{other}' (poisson|burst|diurnal|trace)")
@@ -640,10 +715,12 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
         fs
     };
+    let trace_cfg = build_trace(args)?;
     let build_fleet = |traffic: TrafficSpec, routing: &str| -> anyhow::Result<Fleet> {
         let f = make_sim.clone();
         Ok(Fleet::new(fleet_spec(traffic), move || f(), parse_routing(routing)?)
-            .autoscaler(parse_autoscaler(&autoscale_name)?))
+            .autoscaler(parse_autoscaler(&autoscale_name)?)
+            .trace(trace_cfg.clone()))
     };
     // `--sweep routing-compare` (also: bare `--sweep`, `--sweep=knee`).
     let sweep_kind = if args.flag("sweep") || args.get("sweep").is_some() {
@@ -656,6 +733,10 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     } else {
         None
     };
+    anyhow::ensure!(
+        sweep_kind.is_none() || trace_cfg.is_none(),
+        "--trace does not combine with --sweep (trace a single run)"
+    );
     match sweep_kind.as_deref() {
         Some("routing-compare") => {
             use chipsim::util::benchkit::Table;
@@ -705,9 +786,108 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
         Some(other) => anyhow::bail!("unknown fleet sweep '{other}' (routing-compare|knee)"),
         None => {
-            let report = build_fleet(spec, &routing_name)?.run(seed)?;
+            let mut fleet = build_fleet(spec, &routing_name)?;
+            let report = fleet.run(seed)?;
             print!("{}", report.summary());
+            if !fleet.tracers().is_empty() {
+                let recs: Vec<_> = fleet
+                    .tracers()
+                    .iter()
+                    .map(|h| h.lock().expect("trace lock"))
+                    .collect();
+                let refs: Vec<&chipsim::trace::TraceRecorder> =
+                    recs.iter().map(|g| &**g).collect();
+                let name = format!("trace_{}.json", args.get("scenario").unwrap_or("fleet"));
+                write_trace(&chipsim::trace::merge_export(&refs), args.get("trace-out"), &name)?;
+            }
         }
+    }
+    Ok(())
+}
+
+/// Flight-recorder run of one named scenario — traffic, mix, fleet, or
+/// batch — with every category on by default: prints the usual summary
+/// (including the per-component latency breakdown for serving runs) and
+/// writes Chrome trace-event JSON for Perfetto / chrome://tracing.
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
+    use chipsim::serving::TrafficSpec;
+    use chipsim::trace::{merge_export, TraceCategories, TraceConfig, TraceRecorder};
+    let reg = Registry::builtin();
+    let name = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| args.positionals.get(1).cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!("trace needs --scenario NAME (see `chipsim scenarios`)")
+        })?;
+    let sc = reg.get(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+    })?;
+    let seed = args.get_u64("seed", sc.default_seed)?;
+    let mut cfg = TraceConfig::default();
+    if let Some(f) = args.get("trace-filter") {
+        cfg.categories = TraceCategories::parse(f)?;
+    }
+    let out_name = format!("trace_{name}.json");
+    let out = args.get("trace-out");
+    if sc.is_fleet() {
+        let p = sc.fleet_preset().expect("fleet scenario carries a preset").clone();
+        let spec = TrafficSpec {
+            steady: None,
+            ..sc.traffic_spec(seed).expect("fleet preset serves a traffic spec")
+        };
+        let mut fs = FleetSpec::new(spec, p.replicas)
+            .max_replicas(p.max_replicas)
+            .threads(args.get_usize("threads", 0)?);
+        fs.epoch_ns = p.epoch_ns;
+        fs.cold_start_ns = p.cold_start_ns;
+        fs.emergency_c = p.emergency_c;
+        let sc = sc.clone();
+        let mut fleet = Fleet::new(fs, move || sc.build(), parse_routing(p.routing)?)
+            .autoscaler(parse_autoscaler(p.autoscale)?)
+            .trace(Some(cfg));
+        let report = fleet.run(seed)?;
+        print!("{}", report.summary());
+        let recs: Vec<_> =
+            fleet.tracers().iter().map(|h| h.lock().expect("trace lock")).collect();
+        let refs: Vec<&TraceRecorder> = recs.iter().map(|g| &**g).collect();
+        write_trace(&merge_export(&refs), out, &out_name)?;
+    } else if sc.is_mix() {
+        let mix = sc.mix_spec(seed).expect("mix scenario carries a mix").interference(false);
+        let tracer: std::cell::RefCell<Option<chipsim::trace::TraceHandle>> =
+            std::cell::RefCell::new(None);
+        let report = chipsim::serving::mix::run_mix(
+            || {
+                let mut sim = sc.build()?;
+                let mut slot = tracer.borrow_mut();
+                if slot.is_none() {
+                    *slot = Some(sim.set_trace(cfg.clone()));
+                }
+                Ok(sim)
+            },
+            &mix,
+            seed,
+        )?;
+        print!("{}", report.summary());
+        let h = tracer.into_inner().expect("mix run builds at least one board");
+        let rec = h.lock().expect("trace lock");
+        write_trace(&rec.export(), out, &out_name)?;
+    } else if sc.is_traffic() {
+        let spec = sc.traffic_spec(seed).expect("traffic scenario carries a spec");
+        let mut sim = sc.build()?;
+        let h = sim.set_trace(cfg);
+        let report = sim.run_traffic_with(&spec, seed)?;
+        print!("{}", report.summary());
+        let rec = h.lock().expect("trace lock");
+        write_trace(&rec.export(), out, &out_name)?;
+    } else {
+        let mut sim = sc.build()?;
+        let h = sim.set_trace(cfg);
+        let report = sim.run(sc.workload(seed))?;
+        print!("{}", report.summary());
+        let rec = h.lock().expect("trace lock");
+        write_trace(&rec.export(), out, &out_name)?;
     }
     Ok(())
 }
@@ -869,7 +1049,7 @@ fn cmd_artifacts() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     logging::init();
-    let args = Args::from_env(&["pipelined", "quick", "help", "sweep"]);
+    let args = Args::from_env(&["pipelined", "quick", "help", "sweep", "trace"]);
     if args.flag("help") || args.positionals.is_empty() {
         print!("{}", help().render());
         return Ok(());
@@ -882,6 +1062,7 @@ fn main() -> anyhow::Result<()> {
         "mix" => cmd_mix(&args)?,
         "dtm" => cmd_dtm(&args)?,
         "fleet" => cmd_fleet(&args)?,
+        "trace" => cmd_trace(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,

@@ -39,14 +39,27 @@ pub fn results_dir() -> PathBuf {
     dir
 }
 
-/// Write a string artifact into the results dir; returns the path.
-pub fn write_result(name: &str, contents: &str) -> anyhow::Result<PathBuf> {
-    let path = results_dir().join(name);
+/// Write a string artifact into an explicit directory; returns the
+/// path.  This is the injectable seam — tests pass a scratch dir here
+/// instead of mutating the process-global `CHIPSIM_RESULTS` (which
+/// races under the parallel test harness).
+pub fn write_result_in(dir: &Path, name: &str, contents: &str) -> anyhow::Result<PathBuf> {
+    let path = dir.join(name);
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     std::fs::write(&path, contents)?;
     Ok(path)
+}
+
+/// Write a string artifact into the results dir; returns the path.
+pub fn write_result(name: &str, contents: &str) -> anyhow::Result<PathBuf> {
+    write_result_in(&results_dir(), name, contents)
+}
+
+/// Write a JSON artifact into an explicit directory.
+pub fn write_json_in(dir: &Path, name: &str, v: &Value) -> anyhow::Result<PathBuf> {
+    write_result_in(dir, name, &crate::util::json::to_string_pretty(v))
 }
 
 /// Write a JSON artifact into the results dir.
@@ -98,9 +111,15 @@ pub fn pct_cell(x: f64) -> String {
     format!("{x:.0}%")
 }
 
+/// True if `name` exists inside `dir` (injectable twin of
+/// [`result_exists`]).
+pub fn result_exists_in(dir: &Path, name: &str) -> bool {
+    dir.join(name).exists()
+}
+
 /// True if `path` exists inside the results dir (idempotence checks).
 pub fn result_exists(name: &str) -> bool {
-    Path::new(&results_dir()).join(name).exists()
+    result_exists_in(&results_dir(), name)
 }
 
 #[cfg(test)]
@@ -124,10 +143,13 @@ mod tests {
 
     #[test]
     fn write_and_check_result() {
-        std::env::set_var("CHIPSIM_RESULTS", "/tmp/chipsim-test-results");
-        let p = write_result("unit/test.txt", "hello").unwrap();
+        // Injected directory, not the process-global CHIPSIM_RESULTS:
+        // mutating the environment races with concurrently running tests.
+        let dir = std::env::temp_dir().join("chipsim-test-results");
+        let p = write_result_in(&dir, "unit/test.txt", "hello").unwrap();
         assert!(p.exists());
-        assert!(result_exists("unit/test.txt"));
-        std::env::remove_var("CHIPSIM_RESULTS");
+        assert!(result_exists_in(&dir, "unit/test.txt"));
+        assert!(!result_exists_in(&dir, "unit/absent.txt"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -100,6 +100,29 @@ pub trait NetworkSim: Send {
     fn link_busy_ns(&self) -> Vec<TimeNs> {
         Vec::new()
     }
+    /// Enable/disable per-link occupancy tracing.  Off by default; the
+    /// flight recorder ([`crate::trace`]) turns it on so engines log
+    /// [`LinkTraceEvent`]s for every link occupancy.  Default: ignored
+    /// (engines without link tracing simply produce no events).
+    fn set_link_trace(&mut self, _enabled: bool) {}
+    /// Drain link-occupancy events accumulated since the last call (in
+    /// deterministic simulation order).  Default: none.
+    fn drain_link_trace(&mut self) -> Vec<LinkTraceEvent> {
+        Vec::new()
+    }
+}
+
+/// One link occupancy recorded by an engine with link tracing enabled:
+/// flow `flow` held link `link` for `[start_ns, start_ns + dur_ns)`,
+/// having waited `stall_ns` behind earlier traffic for the grant
+/// (`0` when the engine cannot attribute stalls per occupancy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkTraceEvent {
+    pub link: usize,
+    pub flow: FlowId,
+    pub start_ns: TimeNs,
+    pub dur_ns: TimeNs,
+    pub stall_ns: TimeNs,
 }
 
 /// Coalescing accumulator for (node, time, energy_pj) dynamic-energy

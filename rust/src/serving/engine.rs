@@ -22,6 +22,7 @@ use crate::power::PowerWindow;
 use crate::sim::{ModelOutcome, PowerPort, RequestSource, SimReport, Simulation, StreamSink};
 use crate::serving::arrivals::{ArrivalProcess, ArrivalSpec};
 use crate::serving::slo::{LatencyHistogram, ServingStats};
+use crate::trace::BreakdownStats;
 use crate::workload::{ModelKind, ModelRequest};
 use crate::TimeNs;
 
@@ -363,6 +364,7 @@ struct TrafficSink<'a> {
     roller: WindowRoller,
     recent_p99: VecDeque<u64>,
     converged: bool,
+    breakdown: BreakdownStats,
 }
 
 impl<'a> TrafficSink<'a> {
@@ -373,6 +375,7 @@ impl<'a> TrafficSink<'a> {
             roller: WindowRoller::new(spec.window_ns, spec.keep_windows, external_power),
             recent_p99: VecDeque::new(),
             converged: false,
+            breakdown: BreakdownStats::new(),
         }
     }
 
@@ -414,7 +417,15 @@ impl<'a> TrafficSink<'a> {
         } else {
             StopReason::Truncated
         };
-        TrafficReport { seed, offered, stats: self.stats, windows, stop, sim }
+        TrafficReport {
+            seed,
+            offered,
+            stats: self.stats,
+            windows,
+            stop,
+            breakdown: self.breakdown,
+            sim,
+        }
     }
 }
 
@@ -423,6 +434,9 @@ impl StreamSink for TrafficSink<'_> {
         let latency = outcome.finished_ns.saturating_sub(outcome.arrival_ns);
         if self.stats.record(outcome.kind, latency, outcome.finished_ns) {
             self.roller.record(latency);
+            if let Some(bd) = &outcome.breakdown {
+                self.breakdown.record(bd);
+            }
         }
         // Early stop is driven entirely by on_advance (convergence is
         // only ever detected at a window boundary).
@@ -467,6 +481,11 @@ pub struct TrafficReport {
     /// Trailing per-window summaries (bounded by `spec.keep_windows`).
     pub windows: Vec<WindowSummary>,
     pub stop: StopReason,
+    /// Per-component latency breakdown over post-warm-up completions.
+    /// Empty unless a flight recorder with breakdowns enabled was
+    /// installed; excluded from [`fingerprint`](Self::fingerprint) so
+    /// traced and untraced runs digest identically.
+    pub breakdown: BreakdownStats,
     /// Tail simulation state: span, residual power bins, energy totals.
     /// Per-model outcomes are *not* retained in streaming mode.
     pub sim: SimReport,
@@ -556,6 +575,9 @@ impl TrafficReport {
                 })
                 .collect();
             let _ = writeln!(s, "windows (µs power trace, trailing): {}", tail.join(" "));
+        }
+        if !self.breakdown.is_empty() {
+            s.push_str(&self.breakdown.table().render());
         }
         if let Some(d) = self.dtm() {
             s.push_str(&d.summary());

@@ -55,6 +55,7 @@ use crate::serving::arrivals::{ArrivalProcess, ArrivalSpec};
 use crate::serving::engine::{WindowRoller, WindowSummary};
 use crate::serving::slo::ServingStats;
 use crate::sim::{ModelOutcome, PowerPort, RequestSource, SimReport, Simulation, StreamSink};
+use crate::trace::BreakdownStats;
 use crate::util::rng::Rng;
 use crate::workload::{ModelKind, ModelRequest};
 use crate::TimeNs;
@@ -325,6 +326,7 @@ impl RequestSource for MixSource {
 /// in-loop); the pooled window trace covers all tenants together.
 pub struct MixSink {
     per: Vec<ServingStats>,
+    breakdowns: Vec<BreakdownStats>,
     roller: WindowRoller,
 }
 
@@ -336,15 +338,19 @@ impl MixSink {
                 .iter()
                 .map(|t| ServingStats::new(t.slo_ns, mix.warmup_ns))
                 .collect(),
+            breakdowns: mix.tenants.iter().map(|_| BreakdownStats::new()).collect(),
             roller: WindowRoller::new(mix.window_ns, mix.keep_windows, external_power),
         }
     }
 
     /// Finalize after the event loop returned: fold the partial last
-    /// window in and hand back the per-tenant stats.
-    pub fn into_parts(self, sim: &mut SimReport) -> (Vec<ServingStats>, Vec<WindowSummary>) {
+    /// window in and hand back the per-tenant stats and breakdowns.
+    pub fn into_parts(
+        self,
+        sim: &mut SimReport,
+    ) -> (Vec<ServingStats>, Vec<BreakdownStats>, Vec<WindowSummary>) {
         let windows = self.roller.finish(sim);
-        (self.per, windows)
+        (self.per, self.breakdowns, windows)
     }
 }
 
@@ -355,6 +361,9 @@ impl StreamSink for MixSink {
         if let Some(stats) = self.per.get_mut(outcome.tenant) {
             if stats.record(outcome.kind, latency, outcome.finished_ns) {
                 self.roller.record(latency);
+                if let Some(bd) = &outcome.breakdown {
+                    self.breakdowns[outcome.tenant].record(bd);
+                }
             }
         }
         true
@@ -395,6 +404,10 @@ pub struct TenantOutcome {
     pub slo_ns: TimeNs,
     /// Cumulative post-warm-up serving statistics.
     pub stats: ServingStats,
+    /// Per-component latency breakdown over this tenant's post-warm-up
+    /// completions (empty unless the run was traced with breakdowns on;
+    /// excluded from [`MixReport::fingerprint`]).
+    pub breakdown: BreakdownStats,
     /// The tenant's share of NoI traffic (flow→tenant attribution).
     pub comm: TenantComm,
 }
@@ -470,6 +483,16 @@ impl MixReport {
         self.sim.dtm.as_ref()
     }
 
+    /// All tenants' latency breakdowns pooled into one aggregate (empty
+    /// unless the run was traced with breakdowns enabled).
+    pub fn breakdown(&self) -> BreakdownStats {
+        let mut pooled = BreakdownStats::new();
+        for t in &self.tenants {
+            pooled.merge(&t.breakdown);
+        }
+        pooled
+    }
+
     /// Human-readable roll-up: one block per tenant, then the
     /// interference matrix when present.
     pub fn summary(&self) -> String {
@@ -507,6 +530,10 @@ impl MixReport {
                 t.comm.bytes as f64 / 1e6,
                 t.comm.byte_hops as f64 / 1e6,
             );
+        }
+        let pooled = self.breakdown();
+        if !pooled.is_empty() {
+            s.push_str(&pooled.table().render());
         }
         if let Some(matrix) = &self.interference {
             s.push_str("interference matrix (solo -> co-located):\n");
@@ -584,7 +611,7 @@ where
     let mut source = MixSource::new(mix, seed)?;
     let mut sink = MixSink::new(mix, external);
     let mut report = sim.run_with_seeded(&mut source, &mut sink, seed)?;
-    let (co_stats, windows) = sink.into_parts(&mut report);
+    let (co_stats, co_breakdowns, windows) = sink.into_parts(&mut report);
 
     // ---- solo baselines (interference matrix) ----
     let interference = if mix.interference {
@@ -597,7 +624,7 @@ where
             let mut solo_sink = MixSink::new(mix, solo_external);
             let mut solo_report =
                 solo_sim.run_with_seeded(&mut solo_source, &mut solo_sink, seed)?;
-            let (solo_stats, _) = solo_sink.into_parts(&mut solo_report);
+            let (solo_stats, _, _) = solo_sink.into_parts(&mut solo_report);
             let solo = &solo_stats[idx];
             let co = &co_stats[idx];
             entries.push(InterferenceEntry {
@@ -620,14 +647,15 @@ where
     let tenants = mix
         .tenants
         .iter()
-        .zip(co_stats)
+        .zip(co_stats.into_iter().zip(co_breakdowns))
         .enumerate()
-        .map(|(idx, (spec, stats))| TenantOutcome {
+        .map(|(idx, (spec, (stats, breakdown)))| TenantOutcome {
             name: spec.name.clone(),
             offered: source.emitted_of(idx),
             chiplets: chiplets_per[idx],
             slo_ns: spec.slo_ns,
             stats,
+            breakdown,
             comm: report.tenant_comm.get(idx).copied().unwrap_or_default(),
         })
         .collect();

@@ -31,6 +31,12 @@ pub struct ModelOutcome {
     pub comm_ns: Vec<f64>,
     /// Total segments in the mapping (occupancy metric).
     pub segments: usize,
+    /// Latency breakdown (components sum exactly to
+    /// `finished_ns - arrival_ns`).  Populated only when a flight
+    /// recorder with breakdown enabled is installed; deliberately
+    /// excluded from [`SimReport::fingerprint`] so a tracing-off run is
+    /// bitwise-identical to a never-instrumented one.
+    pub breakdown: Option<crate::trace::LatencyBreakdown>,
 }
 
 impl ModelOutcome {

@@ -40,6 +40,7 @@ use crate::noc::{FlowId, FlowSpec, NetworkSim, TenantTraffic};
 use crate::power::{PowerTracker, PowerWindow};
 use crate::sim::report::{ModelOutcome, SimReport, ThermalSummary};
 use crate::thermal::stepper::ThermalStepper;
+use crate::trace::{BreakdownAcc, TraceConfig, TraceHandle};
 use crate::workload::{ArbitrationQueue, ModelKind, ModelRequest, NeuralModel, WorkloadStream};
 use crate::TimeNs;
 
@@ -49,6 +50,28 @@ const PIPELINE_CREDITS: u32 = 2;
 
 /// Sentinel "layer" index for ViT weight-load flows.
 const WEIGHT_LAYER: usize = usize::MAX;
+
+/// Run `$body` with the flight recorder locked as `$tr` — only when a
+/// recorder is installed, and only when the crate is built with the
+/// `trace` feature (default).  `--no-default-features` compiles every
+/// hook site out entirely; with the feature on but no recorder
+/// installed, a hook costs one `Option` branch.
+#[cfg(feature = "trace")]
+macro_rules! trace_hook {
+    ($tracer:expr, |$tr:ident| $body:block) => {
+        if let Some(__h) = $tracer.as_ref() {
+            // Some hooks only feed a breakdown accumulator and leave the
+            // recorder itself untouched.
+            #[allow(unused_mut, unused_variables)]
+            let mut $tr = __h.lock().expect("trace recorder lock");
+            $body
+        }
+    };
+}
+#[cfg(not(feature = "trace"))]
+macro_rules! trace_hook {
+    ($tracer:expr, |$tr:ident| $body:block) => {};
+}
 
 // ------------------------------------------------------------- observers
 
@@ -322,6 +345,7 @@ pub struct SimulationBuilder {
     thermal: ThermalSpec,
     observers: Vec<ObserverHandle>,
     traffic: Option<crate::serving::TrafficSpec>,
+    tracer: Option<TraceHandle>,
 }
 
 impl SimulationBuilder {
@@ -336,6 +360,7 @@ impl SimulationBuilder {
             thermal: ThermalSpec::Off,
             observers: Vec::new(),
             traffic: None,
+            tracer: None,
         }
     }
 
@@ -400,6 +425,22 @@ impl SimulationBuilder {
     /// [`Simulation::run_traffic`] instead of one-shot batch workloads.
     pub fn traffic(mut self, spec: crate::serving::TrafficSpec) -> Self {
         self.traffic = Some(spec);
+        self
+    }
+
+    /// Attach a flight recorder built from `cfg` (request-lifecycle
+    /// tracing, Perfetto export, latency breakdowns — see
+    /// [`crate::trace`]).  Keep a handle for reading the trace back with
+    /// [`Simulation::tracer`].
+    pub fn trace(self, cfg: TraceConfig) -> Self {
+        self.tracer(crate::trace::handle(crate::trace::TraceRecorder::new(cfg)))
+    }
+
+    /// Attach an existing shared recorder — e.g. one per replica board
+    /// with a distinct pid base, merged later with
+    /// [`crate::trace::merge_export`].
+    pub fn tracer(mut self, tracer: TraceHandle) -> Self {
+        self.tracer = Some(tracer);
         self
     }
 
@@ -489,6 +530,7 @@ impl SimulationBuilder {
             observers: self.observers,
             traffic: self.traffic,
             tenant_masks: None,
+            tracer: self.tracer,
         })
     }
 }
@@ -550,6 +592,10 @@ struct Instance {
     inference_latency: Vec<u64>,
     inference_start: HashMap<u32, TimeNs>,
     finished: bool,
+    /// Latency-breakdown accumulator: populated only when a flight
+    /// recorder with breakdowns enabled is installed (boxed so the
+    /// common untraced instance stays small).
+    bd: Option<Box<BreakdownAcc>>,
 }
 
 impl Instance {
@@ -566,6 +612,7 @@ impl Instance {
         self.comm_ns = Vec::new();
         self.inference_latency = Vec::new();
         self.inference_start = HashMap::new();
+        self.bd = None;
     }
 }
 
@@ -737,6 +784,8 @@ pub struct Simulation {
     /// set, a request only maps onto chiplets its tenant's mask allows.
     /// Installed by the multi-tenant mix engine ([`crate::serving::mix`]).
     tenant_masks: Option<Vec<Vec<bool>>>,
+    /// Optional flight recorder (see [`crate::trace`]).
+    tracer: Option<TraceHandle>,
 }
 
 impl Simulation {
@@ -792,6 +841,31 @@ impl Simulation {
     /// The installed per-tenant placement masks, if any.
     pub fn tenant_masks(&self) -> Option<&[Vec<bool>]> {
         self.tenant_masks.as_deref()
+    }
+
+    /// Install (or replace) a flight recorder after construction —
+    /// `Scenario::build` returns a finished `Simulation`, so the CLI
+    /// attaches tracing here.  Returns the handle for reading the trace
+    /// back once a run completes.
+    pub fn set_tracer(&mut self, tracer: TraceHandle) -> TraceHandle {
+        self.tracer = Some(tracer.clone());
+        tracer
+    }
+
+    /// Convenience over [`set_tracer`](Self::set_tracer): build the
+    /// recorder from `cfg`.
+    pub fn set_trace(&mut self, cfg: TraceConfig) -> TraceHandle {
+        self.set_tracer(crate::trace::handle(crate::trace::TraceRecorder::new(cfg)))
+    }
+
+    /// The installed flight recorder, if any.
+    pub fn tracer(&self) -> Option<&TraceHandle> {
+        self.tracer.as_ref()
+    }
+
+    /// Remove the flight recorder (runs stop tracing).
+    pub fn clear_tracer(&mut self) {
+        self.tracer = None;
     }
 
     /// Run the co-simulation to completion.  Reusable: each call builds a
@@ -866,6 +940,8 @@ impl Simulation {
     /// it with [`finish_run`](Self::finish_run).
     pub fn begin_run(&mut self, run_seed: u64, retain: bool) -> anyhow::Result<RunSession> {
         let wall_start = Instant::now();
+        // warn_once! deduplicates per run.
+        crate::util::logging::reset_warn_once();
         let mut net: Box<dyn NetworkSim> = (self.network)(&self.topo);
         // Hop energy is only ever consumed at power-bin granularity, so
         // let the engine coalesce its event stream to the tracker's bin
@@ -913,6 +989,28 @@ impl Simulation {
         }
         let ledger = MemoryLedger::new(&self.hw);
         let total_capacity = ledger.total_free();
+        // Arm the flight recorder: fresh buffers (byte-identical reuse),
+        // track metadata, and per-link tracing in the network engine.
+        // Compiled out without the `trace` feature.
+        #[cfg(feature = "trace")]
+        if let Some(h) = &self.tracer {
+            let mut tr = h.lock().expect("trace recorder lock");
+            use crate::trace::{TraceCategories as TC, PID_CHIPLET, PID_GAUGE, PID_NOI, PID_REQUEST};
+            tr.reset();
+            tr.name_process(PID_CHIPLET, "chiplets");
+            for c in 0..self.hw.num_chiplets() {
+                tr.name_thread(PID_CHIPLET, c as u32, &format!("chiplet {c}"));
+            }
+            if tr.enabled(TC::NOI) {
+                net.set_link_trace(true);
+                tr.name_process(PID_NOI, "NoI links");
+                for (l, link) in self.topo.links.iter().enumerate() {
+                    tr.name_thread(PID_NOI, l as u32, &format!("link {}->{}", link.src, link.dst));
+                }
+            }
+            tr.name_process(PID_REQUEST, "requests");
+            tr.name_process(PID_GAUGE, "gauges");
+        }
         Ok(RunSession {
             wall_start,
             retain,
@@ -990,6 +1088,10 @@ impl Simulation {
             ..
         } = s;
 
+        // One shared-handle clone per epoch, not per event.
+        #[cfg(feature = "trace")]
+        let tracer = self.tracer.clone();
+
         macro_rules! notify {
             ($($call:tt)*) => {
                 for ob in &self.observers {
@@ -1029,6 +1131,28 @@ impl Simulation {
                             $t + lat,
                             Event::ComputeDone { inst, layer, seg, inference },
                         );
+                        trace_hook!(tracer, |tr| {
+                            use crate::trace::TraceCategories as TC;
+                            if tr.enabled(TC::COMPUTE) {
+                                tr.span(
+                                    TC::COMPUTE,
+                                    crate::trace::PID_CHIPLET,
+                                    cid as u32,
+                                    format!("L{layer} {}", instances[inst].req.kind.name()),
+                                    $t,
+                                    lat,
+                                    vec![
+                                        ("req", (instances[inst].req.id as u64).into()),
+                                        ("seg", (seg as u64).into()),
+                                        ("inference", (inference as u64).into()),
+                                        ("dvfs_latency_factor", lat_scale.into()),
+                                    ],
+                                );
+                            }
+                            if let Some(bd) = instances[inst].bd.as_deref_mut() {
+                                bd.on_compute($t, lat, r.latency_ns.round().max(1.0) as TimeNs);
+                            }
+                        });
                     }
                 }
             }};
@@ -1151,7 +1275,26 @@ impl Simulation {
                         inference_latency: Vec::new(),
                         inference_start: HashMap::new(),
                         finished: false,
+                        bd: None,
                     };
+                    trace_hook!(tracer, |tr| {
+                        use crate::trace::TraceCategories as TC;
+                        let r = &inst.req;
+                        tr.async_instant(
+                            TC::REQUEST,
+                            crate::trace::PID_REQUEST,
+                            tenant as u32,
+                            "request",
+                            r.id as u64,
+                            $t,
+                            vec![("state", "mapped".into()), ("kind", r.kind.name().into())],
+                        );
+                        if tr.breakdown_enabled() {
+                            let mut bd = Box::new(BreakdownAcc::new(r.arrival_ns));
+                            bd.on_mapped($t);
+                            inst.bd = Some(bd);
+                        }
+                    });
                     // ViT-style weight-stationary start-up: stream each
                     // segment's weights from the nearest I/O chiplet.
                     if !self.hw.io_chiplets.is_empty() {
@@ -1172,6 +1315,14 @@ impl Simulation {
                             }
                         }
                         inst.weight_flows = flows.len();
+                        trace_hook!(tracer, |tr| {
+                            if let Some(bd) = inst.bd.as_deref_mut() {
+                                for f in &flows {
+                                    let ideal = ideal_flow_ns(&self.topo, f.src, f.dst, f.bytes);
+                                    bd.on_flows(WEIGHT_LAYER, 0, $t, ideal);
+                                }
+                            }
+                        });
                         if inst_id == instances.len() {
                             instances.push(inst);
                         } else {
@@ -1233,10 +1384,13 @@ impl Simulation {
                         true
                     });
                     let Some(req) = taken else { break };
-                    log::warn!(
-                        "dropping model {} ({}, tenant {}): needs {} bytes, cannot fit \
-                         its empty placement (system capacity {})",
-                        req.id,
+                    // Per-run dedup: a saturated run can drop the same
+                    // oversized kind thousands of times; the message is
+                    // id-free so one line covers the whole (kind, tenant)
+                    // class and the request track records each drop.
+                    crate::warn_once!(
+                        "dropping {} requests of tenant {}: {} bytes cannot fit an empty \
+                         placement (system capacity {})",
                         req.kind.name(),
                         req.tenant,
                         model_of(req.kind).total_weight_bytes(),
@@ -1244,6 +1398,17 @@ impl Simulation {
                     );
                     notify!(on_model_dropped(req.id, req.kind, $t));
                     sink.on_dropped(req.id, req.kind, req.tenant, $t);
+                    trace_hook!(tracer, |tr| {
+                        tr.async_end(
+                            crate::trace::TraceCategories::REQUEST,
+                            crate::trace::PID_REQUEST,
+                            req.tenant as u32,
+                            "request",
+                            req.id as u64,
+                            $t,
+                            vec![("state", "dropped".into())],
+                        );
+                    });
                     if *retain {
                         dropped.push((req.id, req.kind));
                     }
@@ -1282,6 +1447,29 @@ impl Simulation {
                 };
                 instances[inst].inflows.insert((layer + 1, inference), expected);
                 instances[inst].comm_start.insert((layer + 1, inference), $t);
+                trace_hook!(tracer, |tr| {
+                    use crate::trace::TraceCategories as TC;
+                    if tr.enabled(TC::NOI) {
+                        tr.instant(
+                            TC::NOI,
+                            crate::trace::PID_REQUEST,
+                            tenant as u32,
+                            format!("flows L{layer}->L{}", layer + 1),
+                            $t,
+                            vec![
+                                ("req", (instances[inst].req.id as u64).into()),
+                                ("flows", (expected as u64).into()),
+                                ("inference", (inference as u64).into()),
+                            ],
+                        );
+                    }
+                    if let Some(bd) = instances[inst].bd.as_deref_mut() {
+                        for f in &flows {
+                            let ideal = ideal_flow_ns(&self.topo, f.src, f.dst, f.bytes);
+                            bd.on_flows(layer + 1, inference, $t, ideal);
+                        }
+                    }
+                });
                 for f in flows {
                     tenant_traffic.add_flow(tenant, f.bytes, self.topo.hops(f.src, f.dst));
                     let id = net.inject(f, $t);
@@ -1298,6 +1486,8 @@ impl Simulation {
                 if let Some(active) = tenant_active.get_mut(instances[inst].req.tenant) {
                     *active = active.saturating_sub(1);
                 }
+                // Finalize the breakdown (always `None` when untraced).
+                let bd_final = instances[inst].bd.take().map(|b| b.finish($t));
                 let outcome = {
                     let me = &instances[inst];
                     ModelOutcome {
@@ -1323,9 +1513,21 @@ impl Simulation {
                         },
                         comm_ns: me.comm_ns.clone(),
                         segments: me.mapping.total_segments(),
+                        breakdown: bd_final,
                     }
                 };
                 notify!(on_model_finished(&outcome));
+                trace_hook!(tracer, |tr| {
+                    tr.async_end(
+                        crate::trace::TraceCategories::REQUEST,
+                        crate::trace::PID_REQUEST,
+                        outcome.tenant as u32,
+                        "request",
+                        outcome.id as u64,
+                        $t,
+                        vec![("state", "finished".into())],
+                    );
+                });
                 if !sink.on_outcome(&outcome, $t) {
                     *stop_requested = true;
                 }
@@ -1369,6 +1571,22 @@ impl Simulation {
                         power.add_event(node, t, pj);
                         notify!(on_noc_energy(node, t, pj));
                     }
+                    trace_hook!(tracer, |tr| {
+                        use crate::trace::TraceCategories as TC;
+                        if tr.enabled(TC::NOI) {
+                            for ev in net.drain_link_trace() {
+                                tr.span(
+                                    TC::NOI,
+                                    crate::trace::PID_NOI,
+                                    ev.link as u32,
+                                    format!("flow {}", ev.flow),
+                                    ev.start_ns,
+                                    ev.dur_ns,
+                                    vec![("stall_ns", ev.stall_ns.into())],
+                                );
+                            }
+                        }
+                    });
                     let Some((inst, layer, inference)) = flow_of.remove(&c.id) else {
                         continue;
                     };
@@ -1378,6 +1596,11 @@ impl Simulation {
                     if layer == WEIGHT_LAYER {
                         instances[inst].weight_flows -= 1;
                         if instances[inst].weight_flows == 0 {
+                            trace_hook!(tracer, |tr| {
+                                if let Some(bd) = instances[inst].bd.as_deref_mut() {
+                                    bd.on_comm_done(WEIGHT_LAYER, 0, c.time);
+                                }
+                            });
                             instances[inst].layers[0].ready.push_back(0);
                             dispatch_ready!(inst, 0, c.time);
                         }
@@ -1396,6 +1619,11 @@ impl Simulation {
                                     *slot += span;
                                 }
                             }
+                            trace_hook!(tracer, |tr| {
+                                if let Some(bd) = instances[inst].bd.as_deref_mut() {
+                                    bd.on_comm_done(layer, inference, c.time);
+                                }
+                            });
                             instances[inst].layers[layer].ready.push_back(inference);
                             dispatch_ready!(inst, layer, c.time);
                         }
@@ -1418,6 +1646,7 @@ impl Simulation {
                 return Ok(RunStatus::Idle);
             }
             *now = (*now).max(t_next);
+            crate::util::logging::set_sim_now(*now);
             // The network flushes hop energy only on flow completions;
             // when a thermal consumer drains windows in-loop (DTM, or a
             // streaming sink feeding the Native/Auto stepper), book
@@ -1436,6 +1665,56 @@ impl Simulation {
                 // just ended.
                 d.on_advance(*now, &mut *power, &mut *sink)?;
             }
+            trace_hook!(tracer, |tr| {
+                use crate::trace::TraceCategories as TC;
+                if tr.gauge_due(*now) {
+                    let busy = chiplets.iter().filter(|c| c.busy).count();
+                    tr.counter(
+                        TC::GAUGES,
+                        crate::trace::PID_GAUGE,
+                        "queue depth",
+                        *now,
+                        vec![("requests", arb.len() as f64)],
+                    );
+                    tr.counter(
+                        TC::GAUGES,
+                        crate::trace::PID_GAUGE,
+                        "busy chiplets",
+                        *now,
+                        vec![("busy", busy as f64)],
+                    );
+                    if let Some(d) = dtm_rt.as_ref() {
+                        tr.counter(
+                            TC::GAUGES,
+                            crate::trace::PID_GAUGE,
+                            "thermal",
+                            *now,
+                            vec![
+                                ("hottest_c", d.hottest_c()),
+                                ("throttled_chiplets", d.throttled_chiplets() as f64),
+                            ],
+                        );
+                    }
+                }
+                if let Some(d) = dtm_rt.as_ref() {
+                    if tr.enabled(TC::DTM) {
+                        let n = d.throttled_chiplets();
+                        if tr.throttled_changed(n) {
+                            tr.instant(
+                                TC::DTM,
+                                crate::trace::PID_GAUGE,
+                                "governor",
+                                *now,
+                                vec![
+                                    ("throttled_chiplets", (n as u64).into()),
+                                    ("max_dvfs_level", (d.max_dvfs_level() as u64).into()),
+                                    ("hottest_c", d.hottest_c().into()),
+                                ],
+                            );
+                        }
+                    }
+                }
+            });
             let keep_going = sink.on_advance(
                 *now,
                 &mut PowerPort::new(&mut *power, stepper.as_mut(), &mut *thermal_err),
@@ -1447,13 +1726,38 @@ impl Simulation {
                 return Ok(RunStatus::Stopped);
             }
             if self.params.max_sim_time_ns > 0 && *now > self.params.max_sim_time_ns {
-                log::warn!("max_sim_time reached at {now} ns; truncating run");
+                // The sim-time log prefix carries the exact truncation
+                // point; the id-free message dedups across sweep repeats.
+                crate::warn_once!(
+                    "max_sim_time {} ns reached; truncating run",
+                    self.params.max_sim_time_ns
+                );
                 return Ok(RunStatus::Stopped);
             }
             // Arrivals win ties with queue events, matching the old
             // pre-pushed ordering (arrivals held the smallest seqs).
             if t_arrival <= t_queue {
                 let req = source.next_request().expect("peeked arrival");
+                trace_hook!(tracer, |tr| {
+                    use crate::trace::TraceCategories as TC;
+                    if tr.enabled(TC::REQUEST) {
+                        let tenant = req.tenant as u32;
+                        tr.name_thread(
+                            crate::trace::PID_REQUEST,
+                            tenant,
+                            &format!("tenant {}", req.tenant),
+                        );
+                        tr.async_begin(
+                            TC::REQUEST,
+                            crate::trace::PID_REQUEST,
+                            tenant,
+                            "request",
+                            req.id as u64,
+                            req.arrival_ns,
+                            vec![("kind", req.kind.name().into())],
+                        );
+                    }
+                });
                 arb.push(req);
                 try_map_models!(t_next);
                 continue;
@@ -1540,14 +1844,62 @@ impl Simulation {
             dropped,
             now,
             compute_energy,
+            instances,
+            mut arb,
             ..
         } = s;
+        crate::util::logging::clear_sim_now();
         for (node, t, pj) in net.drain_energy_events() {
             power.add_event(node, t, pj);
             for ob in &self.observers {
                 ob.lock().expect("observer lock").on_noc_energy(node, t, pj);
             }
         }
+        // Flush the recorder: residual link spans plus a terminal event
+        // for everything still queued or in flight, so every request
+        // track reaches a terminal state even on truncated runs.
+        #[cfg(feature = "trace")]
+        if let Some(h) = &self.tracer {
+            let mut tr = h.lock().expect("trace recorder lock");
+            use crate::trace::{TraceCategories as TC, PID_NOI, PID_REQUEST};
+            if tr.enabled(TC::NOI) {
+                for ev in net.drain_link_trace() {
+                    tr.span(
+                        TC::NOI,
+                        PID_NOI,
+                        ev.link as u32,
+                        format!("flow {}", ev.flow),
+                        ev.start_ns,
+                        ev.dur_ns,
+                        vec![("stall_ns", ev.stall_ns.into())],
+                    );
+                }
+            }
+            for i in instances.iter().filter(|i| !i.finished) {
+                tr.async_end(
+                    TC::REQUEST,
+                    PID_REQUEST,
+                    i.req.tenant as u32,
+                    "request",
+                    i.req.id as u64,
+                    now,
+                    vec![("state", "truncated".into())],
+                );
+            }
+            for req in arb.drain_pending() {
+                tr.async_end(
+                    TC::REQUEST,
+                    PID_REQUEST,
+                    req.tenant as u32,
+                    "request",
+                    req.id as u64,
+                    now,
+                    vec![("state", "truncated".into())],
+                );
+            }
+        }
+        #[cfg(not(feature = "trace"))]
+        let _ = (&instances, &mut arb);
         let span_ns = now;
         let link_util =
             crate::noc::LinkUtilization::from_busy(&net.link_busy_ns(), span_ns);
@@ -1596,6 +1948,27 @@ impl Simulation {
 /// single-tenant default, and the fallback for tenants beyond the table).
 fn mask_of(masks: &Option<Vec<Vec<bool>>>, tenant: usize) -> Option<&[bool]> {
     masks.as_ref().and_then(|m| m.get(tenant)).map(|v| v.as_slice())
+}
+
+/// Zero-contention latency estimate of one flow, feeding the breakdown's
+/// NoI-serialization floor: the head packet pipelines through the route
+/// (hop latency + one packet serialization per hop) and the remaining
+/// payload streams behind it at link rate.  Matches the packet engine's
+/// uncontended multi-packet latency exactly; for the flit engine it is
+/// the same quantity up to the router-pipeline approximation.
+#[cfg(feature = "trace")]
+fn ideal_flow_ns(topo: &Topology, src: usize, dst: usize, bytes: u64) -> u64 {
+    let path = topo.path(src, dst);
+    if path.is_empty() {
+        return 0;
+    }
+    let hop = topo.hop_ns().round() as u64;
+    let link0 = path[0];
+    let pkt_bytes = crate::noc::engine::PACKET_FLITS * topo.links[link0].width_bytes;
+    let bytes = bytes.max(1);
+    let pkt_ser = (topo.ser_ns(link0, bytes.min(pkt_bytes)).round() as u64).max(1);
+    let full_ser = (topo.ser_ns(link0, bytes).round() as u64).max(1);
+    path.len() as u64 * (hop + pkt_ser) + full_ser.saturating_sub(pkt_ser)
 }
 
 /// Roll the stepper's final state up into the report's summary (`None`

@@ -70,7 +70,7 @@ impl ThermalStepper {
             match PjrtThermalSolver::open_default(&model, dt_s) {
                 Ok(s) => (Backend::Pjrt(Box::new(s)), "pjrt-aot"),
                 Err(e) => {
-                    log::warn!("PJRT thermal unavailable ({e}); using native solver");
+                    crate::warn_once!("PJRT thermal unavailable ({e}); using native solver");
                     (Backend::Native(NativeSolver::new(&model, dt_s)?), "native")
                 }
             }

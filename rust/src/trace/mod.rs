@@ -1,0 +1,1022 @@
+//! Flight recorder: request-lifecycle tracing, Perfetto export, and
+//! latency breakdown.
+//!
+//! A [`TraceRecorder`] is a deterministic, bounded-memory event buffer
+//! threaded through every layer of the co-simulation: global arrival →
+//! dispatch queue → mapping attempts → per-layer compute on each chiplet
+//! (with the DVFS level in effect) → NoI transfers (with per-link
+//! stall/contention detail) → completion or drop, plus per-window gauges
+//! (queue depth, busy chiplets, sensor temperature, governor state).
+//!
+//! ## Trace format
+//!
+//! [`TraceRecorder::export`] emits the Chrome trace-event JSON format
+//! (`{"traceEvents": [...]}`) loadable in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`.  Tracks map onto
+//! the format's process/thread ids:
+//!
+//! | pid (`+ replica × PID_STRIDE`) | process          | tid          |
+//! |--------------------------------|------------------|--------------|
+//! | [`PID_CHIPLET`]                | board compute    | chiplet id   |
+//! | [`PID_NOI`]                    | NoI links        | link id      |
+//! | [`PID_REQUEST`]                | request lifecycle| tenant id    |
+//! | [`PID_GAUGE`]                  | gauges/counters  | 0            |
+//!
+//! Requests are async `b`/`n`/`e` events keyed by request id, so every
+//! request reaches exactly one terminal state (`finish`, `drop`, or
+//! `truncated` when the run ends mid-flight).  Compute and link
+//! transfers are complete (`X`) spans; gauges are counter (`C`) series.
+//!
+//! ## Determinism and overhead
+//!
+//! Recording never consults wall-clock time or unordered maps, so a
+//! trace is byte-identical for a given seed and configuration.  The ring
+//! buffer is capped at [`TraceConfig::capacity`] events; overflow evicts
+//! the oldest event and counts it in `otherData.dropped_events`.
+//! Tracing is **off by default**: the hot-path hooks cost one
+//! `Option::is_some` branch when disabled, and the `trace` cargo feature
+//! (on by default) can compile even that out.
+//!
+//! ## Latency breakdown
+//!
+//! [`BreakdownAcc`] accumulates per-request interval evidence and
+//! [`BreakdownAcc::finish`] converts it into a [`LatencyBreakdown`]
+//! whose six components **sum exactly** to the end-to-end latency:
+//!
+//! * `dispatch_queue` — arrival until the model is mapped (admission,
+//!   mapping retries, fleet dispatch buffering);
+//! * `mapping_wait` — post-admission stall where neither compute nor
+//!   communication of this request made progress (chiplet queueing,
+//!   pipeline-credit waits);
+//! * `compute` — union of compute spans, net of throttling;
+//! * `dtm_throttle` — extra compute time attributable to DVFS scaling;
+//! * `noi_serialization` — zero-contention transfer time (hops + wire);
+//! * `noi_contention` — communication time beyond the ideal (queueing on
+//!   links, fabric interference).
+//!
+//! Overlapping work is attributed once (compute wins over communication,
+//! matching the pipelining model), so the components partition the
+//! request's lifetime.  [`BreakdownStats`] aggregates breakdowns into
+//! per-component p50/p99 histograms for `TrafficReport`/`FleetReport`.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::serving::slo::LatencyHistogram;
+use crate::util::json::Value;
+use crate::TimeNs;
+
+/// Process-id of the per-chiplet compute tracks.
+pub const PID_CHIPLET: u32 = 1;
+/// Process-id of the per-NoI-link transfer tracks.
+pub const PID_NOI: u32 = 2;
+/// Process-id of the request-lifecycle (async) tracks, one per tenant.
+pub const PID_REQUEST: u32 = 3;
+/// Process-id of the gauge/counter tracks.
+pub const PID_GAUGE: u32 = 4;
+/// Pid stride between replica boards in a merged fleet trace.
+pub const PID_STRIDE: u32 = 8;
+
+/// Bitmask of event categories a recorder accepts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCategories(u32);
+
+impl TraceCategories {
+    /// Request lifecycle: arrival, map, retries, finish, drop.
+    pub const REQUEST: TraceCategories = TraceCategories(1);
+    /// Per-layer compute spans on chiplet tracks.
+    pub const COMPUTE: TraceCategories = TraceCategories(1 << 1);
+    /// NoI flow and per-link transfer spans.
+    pub const NOI: TraceCategories = TraceCategories(1 << 2);
+    /// Thermal/governor instants and spans.
+    pub const DTM: TraceCategories = TraceCategories(1 << 3);
+    /// Periodic counter series (queue depth, busy chiplets, temps).
+    pub const GAUGES: TraceCategories = TraceCategories(1 << 4);
+    /// Fleet-level events (dispatch, autoscale, migration).
+    pub const FLEET: TraceCategories = TraceCategories(1 << 5);
+
+    const NAMES: [(&'static str, TraceCategories); 6] = [
+        ("request", TraceCategories::REQUEST),
+        ("compute", TraceCategories::COMPUTE),
+        ("noi", TraceCategories::NOI),
+        ("dtm", TraceCategories::DTM),
+        ("gauges", TraceCategories::GAUGES),
+        ("fleet", TraceCategories::FLEET),
+    ];
+
+    /// Every category.
+    pub fn all() -> TraceCategories {
+        TraceCategories(0x3F)
+    }
+
+    /// No category (records nothing).
+    pub fn none() -> TraceCategories {
+        TraceCategories(0)
+    }
+
+    /// Union of two masks.
+    pub fn with(self, other: TraceCategories) -> TraceCategories {
+        TraceCategories(self.0 | other.0)
+    }
+
+    /// True when every bit of `other` is enabled in `self`.
+    pub fn contains(self, other: TraceCategories) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    /// Parse a comma-separated filter like `"request,compute,noi"`.
+    /// `"all"` enables everything.
+    pub fn parse(s: &str) -> anyhow::Result<TraceCategories> {
+        let mut out = TraceCategories::none();
+        for tok in s.split(',') {
+            let tok = tok.trim().to_ascii_lowercase();
+            if tok.is_empty() {
+                continue;
+            }
+            if tok == "all" {
+                return Ok(TraceCategories::all());
+            }
+            match Self::NAMES.iter().find(|(n, _)| *n == tok) {
+                Some((_, c)) => out = out.with(*c),
+                None => anyhow::bail!(
+                    "unknown trace category '{tok}' (expected one of: all, request, \
+                     compute, noi, dtm, gauges, fleet)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical label of a single-bit category (export `cat` field).
+    fn label(self) -> &'static str {
+        Self::NAMES
+            .iter()
+            .find(|(_, c)| c.0 == self.0)
+            .map(|(n, _)| *n)
+            .unwrap_or("trace")
+    }
+}
+
+/// Runtime tracing configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Category filter; defaults to [`TraceCategories::all`].
+    pub categories: TraceCategories,
+    /// Ring-buffer capacity in events; overflow evicts oldest.
+    pub capacity: usize,
+    /// Gauge sampling cadence in sim-ns.
+    pub gauge_ns: TimeNs,
+    /// Derive a [`LatencyBreakdown`] per completed request.
+    pub breakdown: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig {
+            categories: TraceCategories::all(),
+            capacity: 1 << 20,
+            gauge_ns: 100_000,
+            breakdown: true,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Restrict recording to `cats`.
+    pub fn categories(mut self, cats: TraceCategories) -> TraceConfig {
+        self.categories = cats;
+        self
+    }
+
+    /// Cap the ring buffer at `cap` events.
+    pub fn capacity(mut self, cap: usize) -> TraceConfig {
+        self.capacity = cap.max(1);
+        self
+    }
+
+    /// Sample gauges every `ns` of sim time.
+    pub fn gauge_ns(mut self, ns: TimeNs) -> TraceConfig {
+        self.gauge_ns = ns.max(1);
+        self
+    }
+
+    /// Enable/disable per-request latency breakdown derivation.
+    pub fn breakdown(mut self, on: bool) -> TraceConfig {
+        self.breakdown = on;
+        self
+    }
+}
+
+/// Event phase (subset of the Chrome trace-event phases we emit).
+#[derive(Debug, Clone)]
+enum Ph {
+    /// Complete span ("X") with a duration.
+    Span { dur: TimeNs },
+    /// Thread-scoped instant ("i").
+    Instant,
+    /// Counter sample ("C"); the series live in `args`.
+    Counter,
+    /// Async begin ("b") keyed by id.
+    AsyncBegin { id: u64 },
+    /// Async instant ("n") keyed by id.
+    AsyncInstant { id: u64 },
+    /// Async end ("e") keyed by id.
+    AsyncEnd { id: u64 },
+}
+
+#[derive(Debug, Clone)]
+struct Rec {
+    ts: TimeNs,
+    pid: u32,
+    tid: u32,
+    cat: &'static str,
+    name: String,
+    ph: Ph,
+    args: Vec<(&'static str, Value)>,
+}
+
+/// Shared handle to a recorder, installable on a `Simulation`.
+pub type TraceHandle = Arc<Mutex<TraceRecorder>>;
+
+/// Wrap a recorder into a [`TraceHandle`].
+pub fn handle(rec: TraceRecorder) -> TraceHandle {
+    Arc::new(Mutex::new(rec))
+}
+
+/// Deterministic bounded-memory flight recorder (see module docs).
+#[derive(Debug)]
+pub struct TraceRecorder {
+    cfg: TraceConfig,
+    pid_base: u32,
+    events: VecDeque<Rec>,
+    dropped: u64,
+    procs: BTreeMap<u32, String>,
+    threads: BTreeMap<(u32, u32), String>,
+    /// Gauge sampling cursor (sim-time of the next due sample).
+    next_gauge_ns: TimeNs,
+    /// Last DTM throttled-chiplet count seen (change detection).
+    last_throttled: Option<usize>,
+}
+
+impl TraceRecorder {
+    pub fn new(cfg: TraceConfig) -> TraceRecorder {
+        TraceRecorder {
+            cfg,
+            pid_base: 0,
+            events: VecDeque::new(),
+            dropped: 0,
+            procs: BTreeMap::new(),
+            threads: BTreeMap::new(),
+            next_gauge_ns: 0,
+            last_throttled: None,
+        }
+    }
+
+    /// Offset every pid by `base` (merged fleet traces give replica `r`
+    /// base `r * PID_STRIDE`).
+    pub fn with_pid_base(mut self, base: u32) -> TraceRecorder {
+        self.pid_base = base;
+        self
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// True when `cat` passes the category filter — check before paying
+    /// for argument construction at a hook site.
+    pub fn enabled(&self, cat: TraceCategories) -> bool {
+        self.cfg.categories.contains(cat)
+    }
+
+    /// True when per-request breakdowns should be accumulated.
+    pub fn breakdown_enabled(&self) -> bool {
+        self.cfg.breakdown
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted by the ring-buffer cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Clear all buffered state so the recorder can be reused by the
+    /// next run with byte-identical output.
+    pub fn reset(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+        self.procs.clear();
+        self.threads.clear();
+        self.next_gauge_ns = 0;
+        self.last_throttled = None;
+    }
+
+    /// True when a gauge sample is due at sim-time `now` (and advances
+    /// the cursor one [`TraceConfig::gauge_ns`] period past `now`).
+    /// Always false with the `gauges` category filtered out.
+    pub fn gauge_due(&mut self, now: TimeNs) -> bool {
+        if !self.enabled(TraceCategories::GAUGES) || now < self.next_gauge_ns {
+            return false;
+        }
+        self.next_gauge_ns = now + self.cfg.gauge_ns.max(1);
+        true
+    }
+
+    /// Change detector for the DTM throttled-chiplet count: true when
+    /// `n` differs from the previously reported value.
+    pub fn throttled_changed(&mut self, n: usize) -> bool {
+        if self.last_throttled == Some(n) {
+            false
+        } else {
+            self.last_throttled = Some(n);
+            true
+        }
+    }
+
+    fn push(&mut self, rec: Rec) {
+        if self.events.len() >= self.cfg.capacity {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(rec);
+    }
+
+    /// Name a process track (idempotent; first name wins).
+    pub fn name_process(&mut self, pid: u32, name: &str) {
+        let pid = self.pid_base + pid;
+        self.procs.entry(pid).or_insert_with(|| name.to_string());
+    }
+
+    /// Name a thread track (idempotent; first name wins).
+    pub fn name_thread(&mut self, pid: u32, tid: u32, name: &str) {
+        let pid = self.pid_base + pid;
+        self.threads.entry((pid, tid)).or_insert_with(|| name.to_string());
+    }
+
+    /// Record a complete span (`X`).
+    pub fn span(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        tid: u32,
+        name: impl Into<String>,
+        ts: TimeNs,
+        dur: TimeNs,
+        args: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        self.push(Rec { ts, pid, tid, cat: cat.label(), name: name.into(), ph: Ph::Span { dur }, args });
+    }
+
+    /// Record a thread-scoped instant (`i`).
+    pub fn instant(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        tid: u32,
+        name: impl Into<String>,
+        ts: TimeNs,
+        args: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        self.push(Rec { ts, pid, tid, cat: cat.label(), name: name.into(), ph: Ph::Instant, args });
+    }
+
+    /// Record a counter sample (`C`); `series` are the stacked values.
+    pub fn counter(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        name: impl Into<String>,
+        ts: TimeNs,
+        series: Vec<(&'static str, f64)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        let args = series.into_iter().map(|(k, v)| (k, Value::from(v))).collect();
+        self.push(Rec { ts, pid, tid: 0, cat: cat.label(), name: name.into(), ph: Ph::Counter, args });
+    }
+
+    /// Begin an async lifecycle (`b`) keyed by `id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn async_begin(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        tid: u32,
+        name: impl Into<String>,
+        id: u64,
+        ts: TimeNs,
+        args: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        self.push(Rec { ts, pid, tid, cat: cat.label(), name: name.into(), ph: Ph::AsyncBegin { id }, args });
+    }
+
+    /// Async instant (`n`) inside the lifecycle keyed by `id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn async_instant(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        tid: u32,
+        name: impl Into<String>,
+        id: u64,
+        ts: TimeNs,
+        args: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        self.push(Rec { ts, pid, tid, cat: cat.label(), name: name.into(), ph: Ph::AsyncInstant { id }, args });
+    }
+
+    /// End an async lifecycle (`e`) keyed by `id`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn async_end(
+        &mut self,
+        cat: TraceCategories,
+        pid: u32,
+        tid: u32,
+        name: impl Into<String>,
+        id: u64,
+        ts: TimeNs,
+        args: Vec<(&'static str, Value)>,
+    ) {
+        if !self.enabled(cat) {
+            return;
+        }
+        let pid = self.pid_base + pid;
+        self.push(Rec { ts, pid, tid, cat: cat.label(), name: name.into(), ph: Ph::AsyncEnd { id }, args });
+    }
+
+    fn rec_to_json(r: &Rec) -> Value {
+        let (ph, extra): (&str, Vec<(&'static str, Value)>) = match &r.ph {
+            Ph::Span { dur } => ("X", vec![("dur", Value::from(*dur as f64 / 1e3))]),
+            Ph::Instant => ("i", vec![("s", Value::from("t"))]),
+            Ph::Counter => ("C", vec![]),
+            Ph::AsyncBegin { id } => ("b", vec![("id", Value::from(format!("{id:#x}")))]),
+            Ph::AsyncInstant { id } => ("n", vec![("id", Value::from(format!("{id:#x}")))]),
+            Ph::AsyncEnd { id } => ("e", vec![("id", Value::from(format!("{id:#x}")))]),
+        };
+        let mut fields: Vec<(&str, Value)> = vec![
+            ("name", Value::from(r.name.clone())),
+            ("cat", Value::from(r.cat)),
+            ("ph", Value::from(ph)),
+            ("ts", Value::from(r.ts as f64 / 1e3)),
+            ("pid", Value::from(r.pid as u64)),
+            ("tid", Value::from(r.tid as u64)),
+        ];
+        fields.extend(extra);
+        fields.push((
+            "args",
+            Value::obj(r.args.iter().map(|(k, v)| (*k, v.clone())).collect()),
+        ));
+        Value::obj(fields)
+    }
+
+    fn meta_events(&self) -> Vec<Value> {
+        let mut out = Vec::new();
+        for (pid, name) in &self.procs {
+            out.push(Value::obj(vec![
+                ("name", Value::from("process_name")),
+                ("ph", Value::from("M")),
+                ("pid", Value::from(*pid as u64)),
+                ("tid", Value::from(0u64)),
+                ("args", Value::obj(vec![("name", Value::from(name.clone()))])),
+            ]));
+        }
+        for ((pid, tid), name) in &self.threads {
+            out.push(Value::obj(vec![
+                ("name", Value::from("thread_name")),
+                ("ph", Value::from("M")),
+                ("pid", Value::from(*pid as u64)),
+                ("tid", Value::from(*tid as u64)),
+                ("args", Value::obj(vec![("name", Value::from(name.clone()))])),
+            ]));
+        }
+        out
+    }
+
+    /// Export as a Chrome trace-event JSON document.
+    pub fn export(&self) -> Value {
+        merge_export(std::slice::from_ref(self))
+    }
+
+    /// Compact single-line JSON string of [`export`](Self::export).
+    pub fn export_string(&self) -> String {
+        crate::util::json::to_string(&self.export())
+    }
+
+    /// FNV-1a fingerprint of the exported JSON (byte-identical traces
+    /// fingerprint identically).
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a(self.export_string().as_bytes())
+    }
+}
+
+/// Merge several recorders (e.g. one per fleet replica, each with its
+/// own pid base) into one Chrome trace-event document.
+pub fn merge_export(recs: &[&TraceRecorder]) -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    let mut dropped = 0u64;
+    for r in recs {
+        events.extend(r.meta_events());
+    }
+    for r in recs {
+        dropped += r.dropped;
+        events.extend(r.events.iter().map(TraceRecorder::rec_to_json));
+    }
+    Value::obj(vec![
+        ("traceEvents", Value::Arr(events)),
+        ("displayTimeUnit", Value::from("ns")),
+        (
+            "otherData",
+            Value::obj(vec![
+                ("generator", Value::from("chipsim flight recorder")),
+                ("dropped_events", Value::from(dropped as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// FNV-1a 64-bit hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Latency breakdown
+// ---------------------------------------------------------------------------
+
+/// Where one completed request's end-to-end latency went.  The six
+/// components sum **exactly** to `finished - arrival` (see module docs
+/// for the attribution rules).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyBreakdown {
+    pub dispatch_queue_ns: u64,
+    pub mapping_wait_ns: u64,
+    pub compute_ns: u64,
+    pub dtm_throttle_ns: u64,
+    pub noi_serialization_ns: u64,
+    pub noi_contention_ns: u64,
+}
+
+impl LatencyBreakdown {
+    /// Sum of all components == end-to-end latency.
+    pub fn total_ns(&self) -> u64 {
+        self.dispatch_queue_ns
+            + self.mapping_wait_ns
+            + self.compute_ns
+            + self.dtm_throttle_ns
+            + self.noi_serialization_ns
+            + self.noi_contention_ns
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("dispatch_queue_ns", self.dispatch_queue_ns.into()),
+            ("mapping_wait_ns", self.mapping_wait_ns.into()),
+            ("compute_ns", self.compute_ns.into()),
+            ("dtm_throttle_ns", self.dtm_throttle_ns.into()),
+            ("noi_serialization_ns", self.noi_serialization_ns.into()),
+            ("noi_contention_ns", self.noi_contention_ns.into()),
+            ("total_ns", self.total_ns().into()),
+        ])
+    }
+}
+
+/// Per-request accumulator of breakdown evidence, owned by the
+/// simulation's in-flight instance state and finalized at completion.
+#[derive(Debug, Clone, Default)]
+pub struct BreakdownAcc {
+    arrival_ns: TimeNs,
+    mapped_ns: TimeNs,
+    /// Compute spans [start, end).
+    compute: Vec<(TimeNs, TimeNs)>,
+    /// Sum of (actual - unthrottled) compute latency.
+    throttle_ns: u64,
+    /// Communication spans [start, end).
+    comm: Vec<(TimeNs, TimeNs)>,
+    /// Sum of per-flow zero-contention latency estimates.
+    ideal_comm_ns: u64,
+    /// Open communication windows keyed by (destination layer,
+    /// inference): emission time and the zero-contention estimate of the
+    /// slowest flow in the batch.  Closed by [`on_comm_done`].
+    ///
+    /// [`on_comm_done`]: BreakdownAcc::on_comm_done
+    pending: HashMap<(usize, u32), (TimeNs, u64)>,
+}
+
+impl BreakdownAcc {
+    pub fn new(arrival_ns: TimeNs) -> BreakdownAcc {
+        BreakdownAcc { arrival_ns, mapped_ns: arrival_ns, ..BreakdownAcc::default() }
+    }
+
+    /// The model was mapped at `t` (after zero or more retries).
+    pub fn on_mapped(&mut self, t: TimeNs) {
+        self.mapped_ns = t.max(self.arrival_ns);
+    }
+
+    /// A compute segment ran [start, start+dur); `base_dur` is what it
+    /// would have taken unthrottled (DVFS level 0).
+    pub fn on_compute(&mut self, start: TimeNs, dur: TimeNs, base_dur: TimeNs) {
+        if dur == 0 {
+            return;
+        }
+        self.compute.push((start, start + dur));
+        self.throttle_ns += dur.saturating_sub(base_dur);
+    }
+
+    /// A flow of this request occupied [start, end) on the fabric;
+    /// `ideal_ns` is its zero-contention latency estimate.
+    pub fn on_comm(&mut self, start: TimeNs, end: TimeNs, ideal_ns: TimeNs) {
+        if end <= start {
+            return;
+        }
+        self.comm.push((start, end));
+        self.ideal_comm_ns += ideal_ns.min(end - start);
+    }
+
+    /// A batch of flows feeding (`layer`, `inference`) was emitted at
+    /// `start`; `ideal_ns` is the zero-contention latency estimate of
+    /// one such flow.  Repeated calls for the same key keep the earliest
+    /// start and the slowest estimate (the batch completes when its last
+    /// flow lands).
+    pub fn on_flows(&mut self, layer: usize, inference: u32, start: TimeNs, ideal_ns: u64) {
+        let e = self.pending.entry((layer, inference)).or_insert((start, ideal_ns));
+        e.0 = e.0.min(start);
+        e.1 = e.1.max(ideal_ns);
+    }
+
+    /// The last flow feeding (`layer`, `inference`) landed at `end`,
+    /// closing the communication window opened by [`on_flows`].
+    ///
+    /// [`on_flows`]: BreakdownAcc::on_flows
+    pub fn on_comm_done(&mut self, layer: usize, inference: u32, end: TimeNs) {
+        if let Some((start, ideal)) = self.pending.remove(&(layer, inference)) {
+            self.on_comm(start, end, ideal);
+        }
+    }
+
+    /// Finalize into a [`LatencyBreakdown`] whose components sum exactly
+    /// to `finished - arrival`.
+    pub fn finish(&self, finished: TimeNs) -> LatencyBreakdown {
+        let arrival = self.arrival_ns.min(finished);
+        let mapped = self.mapped_ns.clamp(arrival, finished);
+        let comp = merge_intervals(self.compute.clone());
+        let comm = merge_intervals(self.comm.clone());
+        let compute_cov = clipped_len(&comp, mapped, finished);
+        let comm_cov = clipped_len_minus(&comm, &comp, mapped, finished);
+        let exec = finished - mapped;
+        debug_assert!(compute_cov + comm_cov <= exec);
+        let mapping_wait = exec - compute_cov - comm_cov;
+        let dtm = self.throttle_ns.min(compute_cov);
+        let ser = self.ideal_comm_ns.min(comm_cov);
+        LatencyBreakdown {
+            dispatch_queue_ns: mapped - arrival,
+            mapping_wait_ns: mapping_wait,
+            compute_ns: compute_cov - dtm,
+            dtm_throttle_ns: dtm,
+            noi_serialization_ns: ser,
+            noi_contention_ns: comm_cov - ser,
+        }
+    }
+}
+
+/// Sort and coalesce intervals into a disjoint, ordered set.
+fn merge_intervals(mut v: Vec<(TimeNs, TimeNs)>) -> Vec<(TimeNs, TimeNs)> {
+    v.retain(|(s, e)| e > s);
+    v.sort_unstable();
+    let mut out: Vec<(TimeNs, TimeNs)> = Vec::with_capacity(v.len());
+    for (s, e) in v {
+        match out.last_mut() {
+            Some((_, pe)) if s <= *pe => *pe = (*pe).max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Total length of disjoint ordered intervals clipped to [lo, hi].
+fn clipped_len(merged: &[(TimeNs, TimeNs)], lo: TimeNs, hi: TimeNs) -> u64 {
+    merged.iter().map(|&(s, e)| e.min(hi).saturating_sub(s.max(lo))).sum()
+}
+
+/// Length of `a ∩ [lo, hi] \ b` for disjoint ordered interval sets.
+fn clipped_len_minus(
+    a: &[(TimeNs, TimeNs)],
+    b: &[(TimeNs, TimeNs)],
+    lo: TimeNs,
+    hi: TimeNs,
+) -> u64 {
+    let mut total = 0u64;
+    for &(s, e) in a {
+        let (s, e) = (s.max(lo), e.min(hi));
+        if e <= s {
+            continue;
+        }
+        let mut len = e - s;
+        for &(bs, be) in b {
+            if be <= s {
+                continue;
+            }
+            if bs >= e {
+                break;
+            }
+            len -= be.min(e) - bs.max(s);
+        }
+        total += len;
+    }
+    total
+}
+
+/// Per-component latency histograms aggregated over completed requests.
+#[derive(Debug, Clone)]
+pub struct BreakdownStats {
+    pub count: u64,
+    pub dispatch_queue: LatencyHistogram,
+    pub mapping_wait: LatencyHistogram,
+    pub compute: LatencyHistogram,
+    pub dtm_throttle: LatencyHistogram,
+    pub noi_serialization: LatencyHistogram,
+    pub noi_contention: LatencyHistogram,
+    pub end_to_end: LatencyHistogram,
+}
+
+impl Default for BreakdownStats {
+    fn default() -> BreakdownStats {
+        BreakdownStats::new()
+    }
+}
+
+impl BreakdownStats {
+    pub fn new() -> BreakdownStats {
+        BreakdownStats {
+            count: 0,
+            dispatch_queue: LatencyHistogram::new(),
+            mapping_wait: LatencyHistogram::new(),
+            compute: LatencyHistogram::new(),
+            dtm_throttle: LatencyHistogram::new(),
+            noi_serialization: LatencyHistogram::new(),
+            noi_contention: LatencyHistogram::new(),
+            end_to_end: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn record(&mut self, b: &LatencyBreakdown) {
+        self.count += 1;
+        self.dispatch_queue.record(b.dispatch_queue_ns);
+        self.mapping_wait.record(b.mapping_wait_ns);
+        self.compute.record(b.compute_ns);
+        self.dtm_throttle.record(b.dtm_throttle_ns);
+        self.noi_serialization.record(b.noi_serialization_ns);
+        self.noi_contention.record(b.noi_contention_ns);
+        self.end_to_end.record(b.total_ns());
+    }
+
+    pub fn merge(&mut self, other: &BreakdownStats) {
+        self.count += other.count;
+        self.dispatch_queue.merge(&other.dispatch_queue);
+        self.mapping_wait.merge(&other.mapping_wait);
+        self.compute.merge(&other.compute);
+        self.dtm_throttle.merge(&other.dtm_throttle);
+        self.noi_serialization.merge(&other.noi_serialization);
+        self.noi_contention.merge(&other.noi_contention);
+        self.end_to_end.merge(&other.end_to_end);
+    }
+
+    /// (label, histogram) rows in canonical order.
+    pub fn rows(&self) -> Vec<(&'static str, &LatencyHistogram)> {
+        vec![
+            ("dispatch-queue", &self.dispatch_queue),
+            ("mapping-wait", &self.mapping_wait),
+            ("compute", &self.compute),
+            ("dtm-throttle", &self.dtm_throttle),
+            ("noi-serialization", &self.noi_serialization),
+            ("noi-contention", &self.noi_contention),
+            ("end-to-end", &self.end_to_end),
+        ]
+    }
+
+    /// Paper-style table: per-component mean/p50/p99 and the mean share
+    /// of end-to-end latency.
+    pub fn table(&self) -> crate::util::benchkit::Table {
+        let mut t = crate::util::benchkit::Table::new(
+            "latency breakdown (per completed request)",
+            &["component", "mean", "p50", "p99", "share"],
+        );
+        let e2e_mean = self.end_to_end.mean().max(1e-9);
+        for (name, h) in self.rows() {
+            let share = if name == "end-to-end" {
+                "100%".to_string()
+            } else {
+                format!("{:.1}%", h.mean() / e2e_mean * 100.0)
+            };
+            t.row(vec![
+                name.to_string(),
+                crate::util::benchkit::fmt_ns(h.mean()),
+                crate::util::benchkit::fmt_ns(h.quantile(0.50) as f64),
+                crate::util::benchkit::fmt_ns(h.quantile(0.99) as f64),
+                share,
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields: Vec<(&str, Value)> = vec![("count", self.count.into())];
+        let rows = self.rows();
+        for (name, h) in rows {
+            fields.push((
+                name,
+                Value::obj(vec![
+                    ("mean_ns", h.mean().into()),
+                    ("p50_ns", h.quantile(0.50).into()),
+                    ("p99_ns", h.quantile(0.99).into()),
+                ]),
+            ));
+        }
+        Value::obj(fields)
+    }
+
+    /// Order-insensitive digest over component quantiles.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |x: u64| {
+            for b in x.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        mix(self.count);
+        for (_, hist) in self.rows() {
+            mix(hist.count());
+            mix(hist.quantile(0.50));
+            mix(hist.quantile(0.99));
+            mix(hist.mean().to_bits());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_parse_and_filter() {
+        let c = TraceCategories::parse("request, noi").unwrap();
+        assert!(c.contains(TraceCategories::REQUEST));
+        assert!(c.contains(TraceCategories::NOI));
+        assert!(!c.contains(TraceCategories::COMPUTE));
+        assert_eq!(TraceCategories::parse("all").unwrap(), TraceCategories::all());
+        assert!(TraceCategories::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn ring_buffer_evicts_oldest() {
+        let mut r = TraceRecorder::new(TraceConfig::default().capacity(2));
+        for i in 0..5u64 {
+            r.instant(TraceCategories::REQUEST, PID_REQUEST, 0, "a", i, vec![]);
+        }
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.dropped(), 3);
+    }
+
+    #[test]
+    fn category_filter_drops_events() {
+        let cfg = TraceConfig::default().categories(TraceCategories::REQUEST);
+        let mut r = TraceRecorder::new(cfg);
+        r.instant(TraceCategories::REQUEST, PID_REQUEST, 0, "keep", 1, vec![]);
+        r.span(TraceCategories::COMPUTE, PID_CHIPLET, 0, "drop", 1, 5, vec![]);
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn export_schema_smoke() {
+        let mut r = TraceRecorder::new(TraceConfig::default());
+        r.name_process(PID_CHIPLET, "board");
+        r.name_thread(PID_CHIPLET, 3, "chiplet 3");
+        r.span(TraceCategories::COMPUTE, PID_CHIPLET, 3, "L0", 1_000, 2_000, vec![
+            ("layer", Value::from(0u64)),
+        ]);
+        r.async_begin(TraceCategories::REQUEST, PID_REQUEST, 0, "request", 7, 500, vec![]);
+        r.async_end(TraceCategories::REQUEST, PID_REQUEST, 0, "request", 7, 4_000, vec![]);
+        r.counter(TraceCategories::GAUGES, PID_GAUGE, "queue", 1_000, vec![("depth", 2.0)]);
+        let doc = r.export();
+        let evs = match doc.get("traceEvents").unwrap() {
+            Value::Arr(a) => a,
+            _ => panic!("traceEvents must be an array"),
+        };
+        // 2 metadata + 4 events.
+        assert_eq!(evs.len(), 6);
+        let span = evs.iter().find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")).unwrap();
+        assert!((span.get("ts").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert!((span.get("dur").unwrap().as_f64().unwrap() - 2.0).abs() < 1e-9);
+        // Export is deterministic for identical recording sequences.
+        assert_eq!(r.fingerprint(), r.fingerprint());
+    }
+
+    #[test]
+    fn reset_restores_byte_identical_reuse() {
+        let record = |r: &mut TraceRecorder| {
+            r.name_process(PID_NOI, "noi");
+            r.span(TraceCategories::NOI, PID_NOI, 1, "xfer", 10, 20, vec![]);
+        };
+        let mut r = TraceRecorder::new(TraceConfig::default());
+        record(&mut r);
+        let first = r.export_string();
+        r.reset();
+        record(&mut r);
+        assert_eq!(first, r.export_string());
+    }
+
+    #[test]
+    fn interval_union_and_subtraction() {
+        let m = merge_intervals(vec![(5, 10), (0, 3), (9, 12), (20, 25)]);
+        assert_eq!(m, vec![(0, 3), (5, 12), (20, 25)]);
+        assert_eq!(clipped_len(&m, 0, 100), 3 + 7 + 5);
+        assert_eq!(clipped_len(&m, 6, 21), 6 + 1);
+        let b = merge_intervals(vec![(2, 7), (21, 30)]);
+        // a \ b inside [0,100]: [0,2) + [7,12) + [20,21) = 2 + 5 + 1.
+        assert_eq!(clipped_len_minus(&m, &b, 0, 100), 8);
+    }
+
+    #[test]
+    fn breakdown_components_partition_latency() {
+        let mut acc = BreakdownAcc::new(100);
+        acc.on_mapped(150);
+        acc.on_compute(150, 50, 40); // 10 ns throttle
+        acc.on_comm(180, 260, 30); // overlaps compute for 20 ns
+        acc.on_compute(260, 40, 40);
+        let b = acc.finish(320);
+        assert_eq!(b.total_ns(), 220);
+        assert_eq!(b.dispatch_queue_ns, 50);
+        assert_eq!(b.dtm_throttle_ns, 10);
+        // comm coverage excludes the compute overlap: [200,260) = 60.
+        assert_eq!(b.noi_serialization_ns + b.noi_contention_ns, 60);
+        assert_eq!(b.noi_serialization_ns, 30);
+        // compute coverage [150,200)+[260,300) = 90, minus 10 throttle.
+        assert_eq!(b.compute_ns, 80);
+        // idle: [300,320) = 20.
+        assert_eq!(b.mapping_wait_ns, 20);
+    }
+
+    #[test]
+    fn breakdown_sum_is_exact_under_degenerate_inputs() {
+        // Unmapped-looking acc, zero-length spans, comm past the finish.
+        let mut acc = BreakdownAcc::new(1_000);
+        acc.on_compute(900, 0, 0);
+        acc.on_comm(1_100, 5_000, 10_000);
+        let b = acc.finish(2_000);
+        assert_eq!(b.total_ns(), 1_000);
+    }
+
+    #[test]
+    fn breakdown_stats_aggregate_and_merge() {
+        let mut a = BreakdownStats::new();
+        let mut acc = BreakdownAcc::new(0);
+        acc.on_mapped(10);
+        acc.on_compute(10, 80, 80);
+        a.record(&acc.finish(100));
+        let mut b = BreakdownStats::new();
+        b.record(&acc.finish(100));
+        a.merge(&b);
+        assert_eq!(a.count, 2);
+        assert_eq!(a.end_to_end.count(), 2);
+        let t = a.table().render();
+        assert!(t.contains("dispatch-queue"));
+        assert!(t.contains("end-to-end"));
+        assert_eq!(a.fingerprint(), a.fingerprint());
+    }
+}

@@ -119,8 +119,17 @@ pub fn bench_json_dir() -> String {
 }
 
 /// Time `f` for at least `min_iters` iterations and `min_time_ms`
-/// milliseconds after one warmup call.  Returns stats over per-iter times.
-pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: F) -> BenchResult {
+/// milliseconds after one warmup call, writing the JSON artifact into
+/// an explicitly injected directory (`None` skips the write).  Tests
+/// use this seam directly instead of mutating the process-global
+/// `CHIPSIM_BENCH_JSON`, which races under the parallel test harness.
+pub fn bench_into<F: FnMut()>(
+    dir: Option<&str>,
+    name: &str,
+    min_iters: usize,
+    min_time_ms: u64,
+    mut f: F,
+) -> BenchResult {
     f(); // warmup
     let mut samples: Vec<f64> = Vec::new();
     let start = Instant::now();
@@ -144,14 +153,20 @@ pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, mut f: 
         min_ns: samples[0],
         metrics: Vec::new(),
     };
-    // Unit tests exercise the stats path without littering artifacts.
-    if !cfg!(test) {
-        let dir = bench_json_dir();
-        if let Err(e) = result.save_json(&dir) {
+    if let Some(dir) = dir {
+        if let Err(e) = result.save_json(dir) {
             eprintln!("benchkit: could not write BENCH json into {dir}: {e:#}");
         }
     }
     result
+}
+
+/// Time `f` and write `BENCH_<case>.json` into [`bench_json_dir`].
+/// Returns stats over per-iter times.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_time_ms: u64, f: F) -> BenchResult {
+    // Unit tests exercise the stats path without littering artifacts.
+    let dir = if cfg!(test) { None } else { Some(bench_json_dir()) };
+    bench_into(dir.as_deref(), name, min_iters, min_time_ms, f)
 }
 
 /// A paper-style results table.
@@ -249,6 +264,17 @@ mod tests {
         });
         assert!(r.iters >= 16);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn bench_into_writes_injected_dir() {
+        let dir = std::env::temp_dir().join("chipsim-benchkit-into");
+        let r = bench_into(dir.to_str(), "injected case", 4, 1, || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let path = dir.join(format!("BENCH_{}.json", r.case_slug()));
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

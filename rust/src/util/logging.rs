@@ -1,9 +1,37 @@
 //! Minimal `log` facade backend (env_logger replacement).
 //!
-//! Level comes from `CHIPSIM_LOG` (error|warn|info|debug|trace), default
-//! `info`.  Install once with [`init`]; repeated calls are no-ops.
+//! Level comes from `CHIPSIM_LOG` (off|error|warn|info|debug|trace),
+//! default `info`.  Install once with [`init`]; repeated calls are
+//! no-ops.
+//!
+//! When a co-simulation run is advancing it publishes its monotonic sim
+//! clock via [`set_sim_now`] (thread-local, so parallel fleet replicas
+//! do not interleave), and every log line emitted from inside the run
+//! carries a `@<ns>ns` prefix.  [`crate::warn_once!`] deduplicates
+//! repeated warnings per run — [`reset_warn_once`] is called by
+//! `begin_run` so each run warns at most once per distinct message.
+
+use std::cell::Cell;
+use std::collections::HashSet;
+use std::sync::Mutex;
 
 use log::{Level, LevelFilter, Metadata, Record};
+
+use crate::TimeNs;
+
+thread_local! {
+    static SIM_NOW: Cell<Option<TimeNs>> = const { Cell::new(None) };
+}
+
+/// Publish the current sim time for log-line prefixes on this thread.
+pub fn set_sim_now(now: TimeNs) {
+    SIM_NOW.with(|c| c.set(Some(now)));
+}
+
+/// Clear the sim-time prefix (run paused or finished).
+pub fn clear_sim_now() {
+    SIM_NOW.with(|c| c.set(None));
+}
 
 struct StderrLogger;
 
@@ -21,7 +49,12 @@ impl log::Log for StderrLogger {
                 Level::Debug => "D",
                 Level::Trace => "T",
             };
-            eprintln!("[{tag} {}] {}", record.target(), record.args());
+            match SIM_NOW.with(|c| c.get()) {
+                Some(now) => {
+                    eprintln!("[{tag} {} @{now}ns] {}", record.target(), record.args())
+                }
+                None => eprintln!("[{tag} {}] {}", record.target(), record.args()),
+            }
         }
     }
 
@@ -33,6 +66,7 @@ static LOGGER: StderrLogger = StderrLogger;
 /// Install the stderr logger (idempotent).
 pub fn init() {
     let level = match std::env::var("CHIPSIM_LOG").as_deref() {
+        Ok("off") | Ok("none") => LevelFilter::Off,
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
         Ok("debug") => LevelFilter::Debug,
@@ -44,6 +78,37 @@ pub fn init() {
     log::set_max_level(level);
 }
 
+static WARNED: Mutex<Option<HashSet<String>>> = Mutex::new(None);
+
+/// True the first time `msg` is seen since the last
+/// [`reset_warn_once`] — the predicate behind [`crate::warn_once!`].
+pub fn first_occurrence(msg: &str) -> bool {
+    let mut guard = WARNED.lock().unwrap_or_else(|p| p.into_inner());
+    guard.get_or_insert_with(HashSet::new).insert(msg.to_string())
+}
+
+/// Forget which warnings were already emitted (called at run start so
+/// deduplication is per-run, not per-process).
+pub fn reset_warn_once() {
+    let mut guard = WARNED.lock().unwrap_or_else(|p| p.into_inner());
+    *guard = None;
+}
+
+/// `log::warn!` that fires at most once per distinct formatted message
+/// per run (see [`reset_warn_once`]).  Repeated per-event warnings —
+/// capacity drops, solver fallbacks — flood stderr on long traces;
+/// this keeps the first occurrence and counts on the trace/report for
+/// the rest.
+#[macro_export]
+macro_rules! warn_once {
+    ($($arg:tt)*) => {{
+        let __msg = format!($($arg)*);
+        if $crate::util::logging::first_occurrence(&__msg) {
+            log::warn!("{}", __msg);
+        }
+    }};
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
@@ -51,5 +116,24 @@ mod tests {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn warn_once_deduplicates_until_reset() {
+        super::reset_warn_once();
+        assert!(super::first_occurrence("msg-a"));
+        assert!(!super::first_occurrence("msg-a"));
+        assert!(super::first_occurrence("msg-b"));
+        super::reset_warn_once();
+        assert!(super::first_occurrence("msg-a"));
+    }
+
+    #[test]
+    fn sim_now_prefix_toggles() {
+        super::init();
+        super::set_sim_now(1234);
+        log::info!("with prefix");
+        super::clear_sim_now();
+        log::info!("without prefix");
     }
 }

@@ -1,0 +1,161 @@
+//! Integration tests for the flight recorder: per-seed trace
+//! determinism, latency-breakdown exactness on both NoI fidelities, and
+//! the zero-perturbation guarantee (installing a recorder must not
+//! change what the simulation computes).
+
+use chipsim::config::{HardwareConfig, NocFidelity, SimParams, WorkloadConfig};
+use chipsim::serving::{ArrivalSpec, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::trace::TraceConfig;
+use chipsim::workload::ModelKind;
+
+fn sim(fidelity: NocFidelity) -> Simulation {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(SimParams {
+            pipelined: true,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            noc_fidelity: fidelity,
+            ..SimParams::default()
+        })
+        .build()
+        .expect("valid configuration")
+}
+
+fn light_spec(horizon_ms: f64) -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(1_000.0).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(horizon_ms)
+        .warmup_ms(0.0)
+        .window_ms(1.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+/// Same seed, same spec, fresh recorders: the exported trace documents
+/// must be byte-identical; a different seed must diverge.
+#[cfg(feature = "trace")]
+#[test]
+fn trace_is_byte_identical_per_seed() {
+    let spec = light_spec(10.0);
+    let run = |seed: u64| {
+        let mut s = sim(NocFidelity::Packet);
+        let h = s.set_trace(TraceConfig::default());
+        s.run_traffic_with(&spec, seed).unwrap();
+        h.lock().unwrap().fingerprint()
+    };
+    let a = run(42);
+    let b = run(42);
+    assert_eq!(a, b, "trace must be byte-identical per seed");
+    let c = run(43);
+    assert_ne!(a, c, "seed must matter");
+}
+
+/// Every async `request` track in an exported trace balances its
+/// begin/end events and ends in a terminal state.
+#[cfg(feature = "trace")]
+#[test]
+fn every_request_reaches_a_terminal_state() {
+    use chipsim::util::json::Value;
+    use std::collections::HashMap;
+    let mut s = sim(NocFidelity::Packet);
+    let h = s.set_trace(TraceConfig::default());
+    s.run_traffic_with(&light_spec(10.0), 0xFEED).unwrap();
+    let doc = h.lock().unwrap().export();
+    let events = match doc.get("traceEvents").unwrap() {
+        Value::Arr(v) => v,
+        _ => panic!("traceEvents must be an array"),
+    };
+    assert!(!events.is_empty(), "recorder traced nothing");
+    // id -> (begins, ends, last end carries a state)
+    let mut tracks: HashMap<String, (u32, u32, bool)> = HashMap::new();
+    for ev in events {
+        if ev.get("name").and_then(|n| n.as_str()) != Some("request") {
+            continue;
+        }
+        let Some(id) = ev.get("id").and_then(|i| i.as_str()) else {
+            continue;
+        };
+        let t = tracks.entry(id.to_string()).or_default();
+        match ev.get("ph").and_then(|p| p.as_str()) {
+            Some("b") => t.0 += 1,
+            Some("e") => {
+                t.1 += 1;
+                t.2 = ev
+                    .get("args")
+                    .and_then(|a| a.get("state"))
+                    .and_then(|s| s.as_str())
+                    .is_some_and(|s| !s.is_empty());
+            }
+            _ => {}
+        }
+    }
+    assert!(!tracks.is_empty(), "no request lifecycle tracks recorded");
+    for (id, (b, e, terminal)) in &tracks {
+        assert_eq!(b, e, "request {id}: begins and ends must balance");
+        assert!(*terminal, "request {id}: final end must carry a terminal state");
+    }
+}
+
+#[cfg(feature = "trace")]
+fn assert_breakdowns_exact(fidelity: NocFidelity, models: usize, inferences: u32) {
+    let mut s = sim(fidelity);
+    let _h = s.set_trace(TraceConfig::default());
+    let report = s.run(WorkloadConfig::cnn_stream(models, inferences, 0xC0FFEE)).unwrap();
+    assert!(!report.outcomes.is_empty());
+    for o in &report.outcomes {
+        let bd = o.breakdown.as_ref().expect("breakdown enabled by default");
+        assert_eq!(
+            bd.total_ns(),
+            o.finished_ns - o.arrival_ns,
+            "request {}: components must sum exactly to end-to-end latency ({:?})",
+            o.id,
+            bd
+        );
+    }
+}
+
+#[cfg(feature = "trace")]
+#[test]
+fn breakdown_sums_exactly_on_packet_fidelity() {
+    assert_breakdowns_exact(NocFidelity::Packet, 6, 2);
+}
+
+/// Smaller workload: flit fidelity simulates every flit-hop, which is
+/// orders of magnitude more events per byte in debug test builds.
+#[cfg(feature = "trace")]
+#[test]
+fn breakdown_sums_exactly_on_flit_fidelity() {
+    assert_breakdowns_exact(NocFidelity::Flit, 2, 1);
+}
+
+/// Installing a recorder must not perturb the simulation: the report of
+/// a traced run fingerprints bitwise-identically to a never-instrumented
+/// one, on both the batch and the streaming-traffic paths.  (Holds with
+/// and without the `trace` cargo feature — without it the hooks compile
+/// out entirely.)
+#[test]
+fn tracing_does_not_perturb_the_simulation() {
+    let wl = || WorkloadConfig::cnn_stream(6, 2, 0xC0FFEE);
+    let plain = sim(NocFidelity::Packet).run(wl()).unwrap();
+    let mut s = sim(NocFidelity::Packet);
+    s.set_trace(TraceConfig::default());
+    let traced = s.run(wl()).unwrap();
+    assert_eq!(plain.fingerprint(), traced.fingerprint());
+
+    let spec = light_spec(10.0);
+    let plain = sim(NocFidelity::Packet).run_traffic_with(&spec, 7).unwrap();
+    let mut s = sim(NocFidelity::Packet);
+    s.set_trace(TraceConfig::default());
+    let traced = s.run_traffic_with(&spec, 7).unwrap();
+    assert_eq!(plain.fingerprint(), traced.fingerprint());
+    assert_eq!(plain.offered, traced.offered);
+}
+
+/// Without the feature (or without a recorder) no breakdowns appear —
+/// the observable surface stays identical to the pre-recorder era.
+#[test]
+fn no_recorder_means_no_breakdowns() {
+    let report = sim(NocFidelity::Packet).run(WorkloadConfig::cnn_stream(3, 1, 1)).unwrap();
+    assert!(report.outcomes.iter().all(|o| o.breakdown.is_none()));
+}

@@ -2,7 +2,15 @@
 """Guard hot-path throughput metrics against perf regressions.
 
 Usage: bench_check.py <fresh_dir> <baseline_dir> [--factor 1.5] [--enforce-measured]
-       bench_check.py <fresh_dir> <baseline_dir> --ratchet
+       bench_check.py <fresh_dir> <baseline_dir> --ratchet [--dry-run]
+
+Before gating, every run prints the full baseline-vs-fresh delta table:
+one row per (artifact, metric) across the union of both sides — timing
+quantiles, throughput metrics, and the per-subsystem wall-clock shares
+(`share_*`) the self-profiler attaches when armed.  A regression is
+thereby attributable at a glance: `fleet_requests_per_s` down 30% with
+`share_flit_engine` up 25% points at the flit engine, not the
+dispatcher.
 
 Each entry in CHECKS pairs a glob of `BENCH_*.json` artifacts produced by
 `cargo bench --bench perf_hotpaths` (written into <fresh_dir> via
@@ -32,7 +40,9 @@ run, then `python3 python/bench_check.py <artifact_dir> . --ratchet` and
 commit the result.  Every `BENCH_*.json` in the artifact (not just the
 enforced cases) is copied over its committed twin, any `"estimated"`
 stamp and provenance `"note"` are dropped, and `"measured": true` is set
-— so the gate runs against real numbers from then on.
+— so the gate runs against real numbers from then on.  Add --dry-run to
+preview exactly what would be rewritten (per-metric deltas against the
+committed twins) without touching any file.
 """
 
 import argparse
@@ -57,7 +67,48 @@ def metric_of(doc, metric):
     return (doc.get("metrics") or {}).get(metric)
 
 
-def ratchet(fresh_dir, baseline_dir):
+def fmt_val(v):
+    return "-" if v is None else f"{v:.4g}"
+
+
+def fmt_delta(base, fresh):
+    if base is None or fresh is None:
+        return "-"
+    if base == 0:
+        return "new" if fresh else "+0.0%"
+    return f"{(fresh - base) / base * 100.0:+.1f}%"
+
+
+def print_deltas(fresh_dir, baseline_dir):
+    """Always-printed forensics: every metric of every artifact on either
+    side, baseline vs fresh with % change — `share_*` subsystem shares
+    included, so gate failures below are attributable."""
+    names = sorted(
+        {os.path.basename(p) for p in glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))}
+        | {os.path.basename(p) for p in glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))}
+    )
+    rows = []
+    for name in names:
+        base_path = os.path.join(baseline_dir, name)
+        fresh_path = os.path.join(fresh_dir, name)
+        base = (load_doc(base_path).get("metrics") or {}) if os.path.exists(base_path) else {}
+        fresh = (load_doc(fresh_path).get("metrics") or {}) if os.path.exists(fresh_path) else {}
+        for key in sorted(set(base) | set(fresh)):
+            b, f = base.get(key), fresh.get(key)
+            rows.append((name, key, fmt_val(b), fmt_val(f), fmt_delta(b, f)))
+    if not rows:
+        print("delta table: no BENCH_*.json artifacts on either side")
+        return
+    headers = ("artifact", "metric", "baseline", "fresh", "delta")
+    widths = [max(len(r[i]) for r in rows + [headers]) for i in range(len(headers))]
+    print("baseline vs fresh (every metric, incl. subsystem wall-clock shares):")
+    print("  " + "  ".join(h.ljust(w) for h, w in zip(headers, widths)))
+    for r in rows:
+        print("  " + "  ".join(c.ljust(w) for c, w in zip(r, widths)))
+    print()
+
+
+def ratchet(fresh_dir, baseline_dir, dry_run=False):
     fresh = sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json")))
     if not fresh:
         print(f"ratchet: no BENCH_*.json in {fresh_dir} — nothing to adopt", file=sys.stderr)
@@ -70,14 +121,28 @@ def ratchet(fresh_dir, baseline_dir):
         doc["measured"] = True
         dest = os.path.join(baseline_dir, name)
         existed = os.path.exists(dest)
+        metrics = doc.get("metrics") or {}
+        old = (load_doc(dest).get("metrics") or {}) if existed else {}
+        detail = "".join(
+            f" {k}={fmt_val(v)} ({fmt_delta(old.get(k), v)})" if existed else f" {k}={v:.3g}"
+            for k, v in sorted(metrics.items())
+        )
+        if dry_run:
+            verb = "would ratchet" if existed else "would adopt (new baseline)"
+            print(f"{name}: {verb}{detail}")
+            continue
         with open(dest, "w") as f:
             json.dump(doc, f, indent=2)
             f.write("\n")
         verb = "ratcheted" if existed else "adopted (new baseline)"
-        metrics = doc.get("metrics") or {}
-        detail = "".join(f" {k}={v:.3g}" for k, v in sorted(metrics.items()))
         print(f"{name}: {verb}{detail}")
-    print(f"ratchet OK ({len(fresh)} baseline(s) rewritten — review and commit the diff)")
+    if dry_run:
+        print(
+            f"ratchet dry-run OK ({len(fresh)} baseline(s) would be rewritten — "
+            "rerun without --dry-run to apply)"
+        )
+    else:
+        print(f"ratchet OK ({len(fresh)} baseline(s) rewritten — review and commit the diff)")
     return 0
 
 
@@ -154,11 +219,20 @@ def main():
         help="rewrite the committed baselines in <baseline_dir> from the fresh "
         "artifact in <fresh_dir>, stamping them measured (then commit the diff)",
     )
+    ap.add_argument(
+        "--dry-run",
+        action="store_true",
+        help="with --ratchet: print what would be rewritten (per-metric deltas "
+        "against the committed baselines) without writing anything",
+    )
     args = ap.parse_args()
 
+    if args.dry_run and not args.ratchet:
+        ap.error("--dry-run only applies to --ratchet")
     if args.ratchet:
-        return ratchet(args.fresh_dir, args.baseline_dir)
+        return ratchet(args.fresh_dir, args.baseline_dir, dry_run=args.dry_run)
 
+    print_deltas(args.fresh_dir, args.baseline_dir)
     failures = []
     checked = 0
     for pattern, metric in CHECKS:

@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Validate a chipsim self-profile (`chipsim-profile-v1`) document.
+
+Usage: prof_check.py <profile.json> [<more.json> ...]
+
+Structural checks (stdlib only):
+
+  - the document is a JSON object with `schema == "chipsim-profile-v1"`
+    and a positive integer `wall_ns` (`cpu_ns` non-negative);
+  - every subsystem row has a non-empty name, `self_ns <= total_ns`,
+    positive `calls`, and a `share` in [0, 1]; self-time shares sum
+    to at most 1 (they are fractions of the scoped cpu time);
+  - counters carry non-negative integer values and non-negative rates;
+  - worker rows have a utilization in [0, 1];
+  - paths nest consistently: `self_ns <= total_ns` per row, and the
+    direct children of any stack sum to at most the parent's total —
+    a child exceeding its parent means broken scope accounting;
+  - collapsed lines are inferno-shaped (`frame;frame value`), rooted
+    at `chipsim`, with frames drawn from the subsystem table.
+
+CI generates profiles with `chipsim profile --scenario <preset>` and
+runs this checker over them, so the exported document stays consumable
+by flamegraph tooling and dashboards as the profiler evolves.
+"""
+
+import json
+import sys
+
+SCHEMA = "chipsim-profile-v1"
+# Shares are computed from integer nanosecond sums; allow float slack.
+EPS = 1e-9
+
+
+def is_count(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def is_frac(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and -EPS <= v <= 1 + EPS
+
+
+def check_subsystems(subs, errors):
+    """Per-row sanity plus the global share budget; returns known frame names."""
+    names = set()
+    share_sum = 0.0
+    for i, s in enumerate(subs):
+        where = f"subsystems[{i}]"
+        if not isinstance(s, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        name = s.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing or empty 'name'")
+            continue
+        names.add(name)
+        if not (is_count(s.get("total_ns")) and is_count(s.get("self_ns"))):
+            errors.append(f"{where} ({name}): total_ns/self_ns must be non-negative integers")
+            continue
+        if s["self_ns"] > s["total_ns"]:
+            errors.append(f"{where} ({name}): self_ns {s['self_ns']} > total_ns {s['total_ns']}")
+        if not (is_count(s.get("calls")) and s["calls"] > 0):
+            errors.append(f"{where} ({name}): listed but 'calls' is not positive")
+        if not is_frac(s.get("share")):
+            errors.append(f"{where} ({name}): share {s.get('share')!r} outside [0, 1]")
+        else:
+            share_sum += s["share"]
+    if share_sum > 1 + 1e-6:
+        errors.append(f"subsystem self-time shares sum to {share_sum:.6f} > 1")
+    return names
+
+
+def check_paths(paths, errors):
+    """Self <= total per stack, direct-children totals bounded by the parent."""
+    totals = {}
+    for i, p in enumerate(paths):
+        where = f"paths[{i}]"
+        if not isinstance(p, dict) or not isinstance(p.get("stack"), str) or not p["stack"]:
+            errors.append(f"{where}: missing 'stack'")
+            continue
+        if not (is_count(p.get("total_ns")) and is_count(p.get("self_ns"))):
+            errors.append(f"{where} ({p['stack']}): bad total_ns/self_ns")
+            continue
+        if p["self_ns"] > p["total_ns"]:
+            errors.append(f"{where} ({p['stack']}): self_ns exceeds total_ns")
+        totals[p["stack"]] = p["total_ns"]
+    children = {}
+    for stack, total in totals.items():
+        if ";" in stack:
+            parent = stack.rsplit(";", 1)[0]
+            children[parent] = children.get(parent, 0) + total
+    for parent, child_sum in sorted(children.items()):
+        if parent in totals and child_sum > totals[parent]:
+            errors.append(
+                f"children of '{parent}' sum to {child_sum} > parent total {totals[parent]}"
+            )
+
+
+def check_collapsed(lines, frames, errors):
+    for i, line in enumerate(lines):
+        where = f"collapsed[{i}]"
+        if not isinstance(line, str) or " " not in line:
+            errors.append(f"{where}: not a 'stack value' line: {line!r}")
+            continue
+        stack, value = line.rsplit(" ", 1)
+        if not value.isdigit():
+            errors.append(f"{where}: value '{value}' is not an integer")
+        parts = stack.split(";")
+        if parts[0] != "chipsim":
+            errors.append(f"{where}: stack not rooted at 'chipsim': {stack}")
+        for frame in parts[1:]:
+            if frame not in frames:
+                errors.append(f"{where}: unknown frame '{frame}'")
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: FAILED\n  - unreadable: {e}", file=sys.stderr)
+        return 1
+    errors = []
+    if not isinstance(doc, dict):
+        errors.append("document is not a JSON object")
+        doc = {}
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    if not (is_count(doc.get("wall_ns")) and doc.get("wall_ns", 0) > 0):
+        errors.append(f"wall_ns {doc.get('wall_ns')!r} must be a positive integer")
+    if not is_count(doc.get("cpu_ns")):
+        errors.append(f"cpu_ns {doc.get('cpu_ns')!r} must be a non-negative integer")
+    subs = doc.get("subsystems")
+    if not isinstance(subs, list) or not subs:
+        errors.append("'subsystems' must be a non-empty array — the profiler scoped nothing")
+        subs = []
+    frames = check_subsystems(subs, errors)
+    counters = doc.get("counters")
+    if not isinstance(counters, list):
+        errors.append("'counters' must be an array")
+        counters = []
+    for i, c in enumerate(counters):
+        if not isinstance(c, dict) or not isinstance(c.get("name"), str):
+            errors.append(f"counters[{i}]: missing 'name'")
+        elif not is_count(c.get("value")):
+            errors.append(f"counters[{i}] ({c['name']}): bad 'value'")
+        elif not (isinstance(c.get("per_s"), (int, float)) and c["per_s"] >= 0):
+            errors.append(f"counters[{i}] ({c['name']}): bad 'per_s'")
+    workers = doc.get("workers")
+    if not isinstance(workers, list):
+        errors.append("'workers' must be an array")
+        workers = []
+    for i, w in enumerate(workers):
+        if not isinstance(w, dict) or not isinstance(w.get("name"), str):
+            errors.append(f"workers[{i}]: missing 'name'")
+        elif not is_count(w.get("busy_ns")) or not is_frac(w.get("util")):
+            errors.append(f"workers[{i}] ({w['name']}): bad busy_ns/util")
+    paths = doc.get("paths")
+    if not isinstance(paths, list):
+        errors.append("'paths' must be an array")
+        paths = []
+    check_paths(paths, errors)
+    collapsed = doc.get("collapsed")
+    if not isinstance(collapsed, list):
+        errors.append("'collapsed' must be an array")
+        collapsed = []
+    check_collapsed(collapsed, frames, errors)
+    if errors:
+        print(f"{path}: FAILED", file=sys.stderr)
+        shown = errors[:20]
+        for e in shown:
+            print(f"  - {e}", file=sys.stderr)
+        if len(errors) > len(shown):
+            print(f"  - ... and {len(errors) - len(shown)} more", file=sys.stderr)
+        return 1
+    print(
+        f"{path}: OK ({len(subs)} subsystems, {len(counters)} counters, "
+        f"{len(workers)} workers, {len(paths)} paths, {len(collapsed)} collapsed lines)"
+    )
+    return 0
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    return max(check_file(p) for p in argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -364,6 +364,10 @@ fn bench_pjrt_thermal() {
 
 fn main() {
     chipsim::util::logging::init();
+    // Self-profile every case: benchkit resets per timed window and
+    // stamps per-subsystem `share_*` metrics into each BENCH_*.json,
+    // so bench_check.py regressions are attributable to a subsystem.
+    chipsim::prof::enable();
     println!("== perf_hotpaths ==");
     bench_packet_engine();
     bench_flit_engine();

@@ -391,6 +391,7 @@ impl Fleet {
     pub fn run(&mut self, seed: u64) -> anyhow::Result<FleetReport> {
         self.spec.validate()?;
         self.tracers.clear();
+        let prof_start = std::time::Instant::now();
         let Fleet { spec, make_sim, routing, autoscaler, trace_cfg, tracers } = self;
         let max_replicas = spec.max_replicas.max(spec.replicas);
         let epoch = spec.epoch_ns;
@@ -436,6 +437,10 @@ impl Fleet {
 
         loop {
             // ---- barrier: all control decisions on frozen state ----
+            // Self-profiling splits each epoch into the single-threaded
+            // control section (dispatch) and the parallel advance, the
+            // two numbers Amdahl's law cares about.
+            let prof_dispatch = crate::prof::scope(crate::prof::Subsystem::FleetDispatch);
             let mut snaps: Vec<ReplicaSnapshot> =
                 replicas.iter().map(|r| r.snapshot(barrier)).collect();
 
@@ -510,6 +515,8 @@ impl Fleet {
             }
 
             // ---- advance every board to the epoch end, in parallel ----
+            drop(prof_dispatch);
+            let prof_advance = crate::prof::scope(crate::prof::Subsystem::FleetAdvance);
             let cells: Vec<Mutex<&mut Replica>> = replicas.iter_mut().map(Mutex::new).collect();
             let results = crate::util::pool::map_catching(spec.threads, cells.len(), |i| {
                 let mut guard = cells[i].lock().expect("replica cell");
@@ -518,9 +525,14 @@ impl Fleet {
                     return Ok(RunStatus::Stopped);
                 }
                 let Replica { sim, session, source, sink, .. } = r;
+                // Seed the worker thread's log clock with this board's
+                // virtual time so worker-side lines carry sim
+                // timestamps even before the first event advances it.
+                crate::util::logging::set_sim_now(session.now());
                 sim.advance_run(session, source, sink, until).map_err(|e| format!("{e:#}"))
             });
             drop(cells);
+            drop(prof_advance);
             for (i, slot) in results.into_iter().enumerate() {
                 let status = slot
                     .map_err(|p| anyhow::anyhow!("replica {i} panicked: {p}"))?
@@ -612,6 +624,8 @@ impl Fleet {
             global: global_stats,
             breakdown: global_breakdown,
             replicas: reports,
+            // Host-timing data only; never part of the fingerprint.
+            profile: crate::prof::snapshot(prof_start.elapsed().as_nanos() as u64),
         })
     }
 }
@@ -702,6 +716,10 @@ pub struct FleetReport {
     /// [`fingerprint`](Self::fingerprint)).
     pub breakdown: BreakdownStats,
     pub replicas: Vec<ReplicaReport>,
+    /// Fleet-level self-profile (dispatch vs parallel-advance split,
+    /// worker utilization) when [`crate::prof`] collection is enabled.
+    /// Host-timing data — excluded from [`fingerprint`](Self::fingerprint).
+    pub profile: Option<crate::prof::ProfileReport>,
 }
 
 impl FleetReport {

@@ -76,6 +76,7 @@ pub mod noc;
 pub mod compute;
 pub mod sim;
 pub mod trace;
+pub mod prof;
 pub mod scenario;
 pub mod serving;
 pub mod fleet;
@@ -112,6 +113,7 @@ pub mod prelude {
     pub use crate::trace::{
         BreakdownStats, LatencyBreakdown, TraceCategories, TraceConfig, TraceRecorder,
     };
+    pub use crate::prof::ProfileReport;
     pub use crate::workload::{ModelKind, NeuralModel};
 }
 

@@ -7,6 +7,7 @@
 //!   dtm          closed-loop dynamic thermal management run / governor sweep
 //!   fleet        fleet-scale serving: N replica boards behind one dispatcher
 //!   trace        flight-recorder run of a named scenario -> Perfetto JSON
+//!   profile      self-profiling run of a named scenario -> subsystem wall-clock shares
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -31,6 +32,8 @@
 //!   chipsim fleet --scenario fleet-least-outstanding --sweep knee --lo 2000 --hi 20000
 //!   chipsim trace --scenario fleet-least-outstanding   # results/trace_<name>.json
 //!   chipsim traffic --scenario traffic-poisson-mesh --trace --trace-filter request,noi
+//!   chipsim profile --scenario fleet-least-outstanding # results/profile_<name>.json
+//!   chipsim traffic --scenario traffic-poisson-mesh --profile
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -48,7 +51,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|mix|dtm|fleet|trace|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|mix|dtm|fleet|trace|profile|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -91,6 +94,9 @@ fn help() -> HelpText {
             ("--trace-filter CATS", "trace categories: all or request,compute,noi,dtm,gauges"),
             ("--trace-out FILE.json", "trace output path (default results/trace_<name>.json)"),
             ("trace --scenario NAME", "run any preset fully traced; also prints the breakdown"),
+            ("--profile", "traffic/mix/fleet/batch: self-profile the simulator itself"),
+            ("--profile-out FILE.json", "profile output path (default results/profile_<name>.json)"),
+            ("profile --scenario NAME", "run any preset self-profiled; writes JSON + .collapsed"),
         ],
     }
 }
@@ -165,6 +171,71 @@ fn write_trace(
     Ok(())
 }
 
+/// `--profile` / `--profile-out` on the serving subcommands: arm the
+/// self-profiler before the run so every scope and counter hook
+/// records.  Returns whether a profile was requested.
+fn profile_enabled(args: &Args) -> bool {
+    let on = args.flag("profile") || args.get("profile-out").is_some();
+    if on {
+        chipsim::prof::enable();
+    }
+    on
+}
+
+/// Print a collected profile and write its JSON to `--profile-out` (or
+/// the results dir under `default_name`), plus an inferno-compatible
+/// `.collapsed` sibling for flamegraph rendering.
+fn write_profile(
+    profile: Option<&chipsim::prof::ProfileReport>,
+    out: Option<&str>,
+    default_name: &str,
+) -> anyhow::Result<()> {
+    let Some(p) = profile else {
+        println!(
+            "self-profiling requested, but no profile was collected (built without \
+             the `prof` feature?)"
+        );
+        return Ok(());
+    };
+    print!("{}", p.render());
+    println!("{}", p.summary());
+    let json_path = match out {
+        Some(path) => {
+            std::fs::write(path, chipsim::util::json::to_string_pretty(&p.to_json()))?;
+            std::path::PathBuf::from(path)
+        }
+        None => chipsim::metrics::write_json(default_name, &p.to_json())?,
+    };
+    let collapsed_path = json_path.with_extension("collapsed");
+    std::fs::write(&collapsed_path, p.collapsed())?;
+    println!(
+        "profile written to {} (collapsed stacks: {} — render with inferno-flamegraph \
+         or flamegraph.pl)",
+        json_path.display(),
+        collapsed_path.display()
+    );
+    Ok(())
+}
+
+/// Close out `--profile` for a subcommand: prefer the profile attached
+/// to the run's report (its wall-clock brackets exactly the simulated
+/// region); fall back to a fresh snapshot over the subcommand's own
+/// wall time (sweeps and batches, whose many runs share one
+/// collection).
+fn finish_profile(
+    args: &Args,
+    profiling: bool,
+    attached: Option<&chipsim::prof::ProfileReport>,
+    started: std::time::Instant,
+    default_name: &str,
+) -> anyhow::Result<()> {
+    if !profiling {
+        return Ok(());
+    }
+    let fallback = chipsim::prof::snapshot(started.elapsed().as_nanos() as u64);
+    write_profile(attached.or(fallback.as_ref()), args.get("profile-out"), default_name)
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let report = if let Some(name) = args.get("scenario") {
         // A scenario bundles hardware + params + workload; flags that
@@ -232,6 +303,8 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// knee.
 fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+    let profiling = profile_enabled(args);
+    let prof_started = std::time::Instant::now();
     let reg = Registry::builtin();
     type SimFactory = Box<dyn Fn() -> anyhow::Result<Simulation>>;
     let (spec, seed, make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
@@ -325,12 +398,22 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
             "saturation knee: ~{:.0} req/s (highest probed rate meeting the SLO)",
             result.knee_rps
         );
+        // The sweep's probes share one collection; attribute against
+        // the whole sweep's wall-clock.
+        finish_profile(args, profiling, None, prof_started, "profile_sweep.json")?;
         return Ok(());
     }
     let mut sim = make_sim()?;
     let tracer = trace_cfg.map(|cfg| sim.set_trace(cfg));
     let report = sim.run_traffic_with(&spec, seed)?;
     print!("{}", report.summary());
+    finish_profile(
+        args,
+        profiling,
+        report.sim.profile.as_ref(),
+        prof_started,
+        &format!("profile_{}.json", args.get("scenario").unwrap_or("traffic")),
+    )?;
     if let Some(h) = tracer {
         let rec = h.lock().expect("trace lock");
         let name = format!("trace_{}.json", args.get("scenario").unwrap_or("traffic"));
@@ -354,6 +437,8 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
     use chipsim::mapping::PlacementPolicy;
     use chipsim::serving::mix::{run_mix, TenantSpec, WorkloadMix};
     use chipsim::sim::ThermalSpec;
+    let profiling = profile_enabled(args);
+    let prof_started = std::time::Instant::now();
     let reg = Registry::builtin();
     // `--sweep interference` (also accepted: bare `--sweep`, `--sweep=interference`).
     let sweep = if args.flag("sweep") || args.get("sweep").is_some() {
@@ -472,6 +557,16 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
         let name = format!("trace_{}.json", args.get("scenario").unwrap_or("mix"));
         write_trace(&rec.export(), args.get("trace-out"), &name)?;
     }
+    // With `--sweep interference` the co-located pass and the solo
+    // baselines share one collection; the attached profile (co-located
+    // pass only) is still the representative one.
+    finish_profile(
+        args,
+        profiling,
+        report.sim.profile.as_ref(),
+        prof_started,
+        &format!("profile_{}.json", args.get("scenario").unwrap_or("mix")),
+    )?;
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
         std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
@@ -629,6 +724,8 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
     use chipsim::scenario::FleetPreset;
     use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
+    let profiling = profile_enabled(args);
+    let prof_started = std::time::Instant::now();
     let reg = Registry::builtin();
     type SimFactory = Arc<dyn Fn() -> anyhow::Result<Simulation>>;
     let (spec, seed, make_sim, preset): (TrafficSpec, u64, SimFactory, Option<FleetPreset>) =
@@ -737,6 +834,10 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         sweep_kind.is_none() || trace_cfg.is_none(),
         "--trace does not combine with --sweep (trace a single run)"
     );
+    // Profile attached to the single-run report; sweeps fall back to a
+    // snapshot over the whole subcommand (all probes share one
+    // collection).
+    let mut attached: Option<chipsim::prof::ProfileReport> = None;
     match sweep_kind.as_deref() {
         Some("routing-compare") => {
             use chipsim::util::benchkit::Table;
@@ -789,6 +890,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             let mut fleet = build_fleet(spec, &routing_name)?;
             let report = fleet.run(seed)?;
             print!("{}", report.summary());
+            attached = report.profile.clone();
             if !fleet.tracers().is_empty() {
                 let recs: Vec<_> = fleet
                     .tracers()
@@ -802,6 +904,13 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    finish_profile(
+        args,
+        profiling,
+        attached.as_ref(),
+        prof_started,
+        &format!("profile_{}.json", args.get("scenario").unwrap_or("fleet")),
+    )?;
     Ok(())
 }
 
@@ -892,6 +1001,67 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Self-profiling run of one named scenario — the "where does the
+/// simulator's own wall-clock go?" view: runs the preset with the
+/// profiler armed, prints the run summary plus the subsystem /
+/// counter / worker-utilization tables, and writes the profile JSON
+/// with its `.collapsed` flamegraph sibling.
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
+    use chipsim::serving::TrafficSpec;
+    let reg = Registry::builtin();
+    let name = args
+        .get("scenario")
+        .map(str::to_string)
+        .or_else(|| args.positionals.get(1).cloned())
+        .ok_or_else(|| {
+            anyhow::anyhow!("profile needs --scenario NAME (see `chipsim scenarios`)")
+        })?;
+    let sc = reg.get(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
+    })?;
+    let seed = args.get_u64("seed", sc.default_seed)?;
+    chipsim::prof::enable();
+    let started = std::time::Instant::now();
+    let attached: Option<chipsim::prof::ProfileReport> = if sc.is_fleet() {
+        let p = sc.fleet_preset().expect("fleet scenario carries a preset").clone();
+        let spec = TrafficSpec {
+            steady: None,
+            ..sc.traffic_spec(seed).expect("fleet preset serves a traffic spec")
+        };
+        let mut fs = FleetSpec::new(spec, p.replicas)
+            .max_replicas(p.max_replicas)
+            .threads(args.get_usize("threads", 0)?);
+        fs.epoch_ns = p.epoch_ns;
+        fs.cold_start_ns = p.cold_start_ns;
+        fs.emergency_c = p.emergency_c;
+        let sc = sc.clone();
+        let mut fleet = Fleet::new(fs, move || sc.build(), parse_routing(p.routing)?)
+            .autoscaler(parse_autoscaler(p.autoscale)?);
+        let report = fleet.run(seed)?;
+        print!("{}", report.summary());
+        report.profile
+    } else if sc.is_mix() {
+        let report = sc.run_mix(seed)?;
+        print!("{}", report.summary());
+        report.sim.profile
+    } else if sc.is_traffic() {
+        let report = sc.run_traffic(seed)?;
+        print!("{}", report.summary());
+        report.sim.profile
+    } else {
+        let report = sc.run(seed)?;
+        print!("{}", report.summary());
+        report.profile
+    };
+    let fallback = chipsim::prof::snapshot(started.elapsed().as_nanos() as u64);
+    write_profile(
+        attached.as_ref().or(fallback.as_ref()),
+        args.get("profile-out"),
+        &format!("profile_{name}.json"),
+    )
+}
+
 fn cmd_scenarios() {
     let reg = Registry::builtin();
     println!("registered scenarios ({}):", reg.len());
@@ -914,11 +1084,14 @@ fn cmd_scenarios() {
          \nrun traffic: chipsim traffic --scenario NAME [--rate R] [--seed S]\
          \nrun a mix:   chipsim mix --scenario NAME [--sweep interference] [--seed S]\
          \nrun a fleet: chipsim fleet --scenario NAME [--routing P] [--seed S]\
-         \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]"
+         \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]\
+         \nprofile one: chipsim profile --scenario NAME [--profile-out FILE.json]"
     );
 }
 
 fn cmd_batch(args: &Args) -> anyhow::Result<()> {
+    let profiling = profile_enabled(args);
+    let prof_started = std::time::Instant::now();
     let reg = Registry::builtin();
     let names: Vec<String> = match args.get("scenarios") {
         None | Some("all") => reg.names().iter().map(|s| s.to_string()).collect(),
@@ -967,6 +1140,9 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
             Err(e) => println!("  {:<22} FAILED: {e:#}", o.scenario),
         }
     }
+    // One collection across every scenario and worker thread: the
+    // worker-utilization table is the batch's parallel-efficiency view.
+    finish_profile(args, profiling, None, prof_started, "profile_batch.json")?;
     Ok(())
 }
 
@@ -1049,7 +1225,7 @@ fn cmd_artifacts() -> anyhow::Result<()> {
 
 fn main() -> anyhow::Result<()> {
     logging::init();
-    let args = Args::from_env(&["pipelined", "quick", "help", "sweep", "trace"]);
+    let args = Args::from_env(&["pipelined", "quick", "help", "sweep", "trace", "profile"]);
     if args.flag("help") || args.positionals.is_empty() {
         print!("{}", help().render());
         return Ok(());
@@ -1063,6 +1239,7 @@ fn main() -> anyhow::Result<()> {
         "dtm" => cmd_dtm(&args)?,
         "fleet" => cmd_fleet(&args)?,
         "trace" => cmd_trace(&args)?,
+        "profile" => cmd_profile(&args)?,
         "scenarios" => cmd_scenarios(),
         "batch" => cmd_batch(&args)?,
         "sweep" => cmd_sweep(&args)?,

@@ -147,6 +147,7 @@ impl MemoryLedger {
         assert!(self.free[chiplet] >= bytes, "over-allocation on chiplet {chiplet}");
         self.free[chiplet] -= bytes;
         if self.journal_depth > 0 {
+            crate::prof::count(crate::prof::Counter::JournalOps, 1);
             self.journal.push((chiplet, bytes, true));
         }
     }
@@ -158,6 +159,7 @@ impl MemoryLedger {
             "double free on chiplet {chiplet}"
         );
         if self.journal_depth > 0 {
+            crate::prof::count(crate::prof::Counter::JournalOps, 1);
             self.journal.push((chiplet, bytes, false));
         }
     }

@@ -234,6 +234,7 @@ impl NetworkSim for PacketEngine {
     }
 
     fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion> {
+        let _prof = crate::prof::scope(crate::prof::Subsystem::PacketEngine);
         loop {
             // Report any discovered completion that is due first.
             if let Some(&Reverse((ct, _))) = self.completions.peek() {

@@ -388,6 +388,7 @@ impl FlitEngine {
                         let l = &self.topo.links[link];
                         let pj = l.width_bytes as f64 * l.e_per_byte_pj;
                         self.energy.push(l.src, now_ns, pj);
+                        crate::prof::count(crate::prof::Counter::FlitHops, 1);
                         self.work += l.width_bytes;
                         self.link_busy_cycles[link] += 1;
                         if let Some(log) = &mut self.link_trace {
@@ -480,6 +481,7 @@ impl NetworkSim for FlitEngine {
     }
 
     fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion> {
+        let _prof = crate::prof::scope(crate::prof::Subsystem::FlitEngine);
         loop {
             if let Some(&(ct, _)) = self.completions.front() {
                 if ct <= t {

@@ -1,0 +1,804 @@
+//! Host-side self-profiler: where does the *simulator's* wall-clock go?
+//!
+//! PR 7's flight recorder observes the **simulated** system at nanosecond
+//! granularity; this module gives the same visibility into the **simulator
+//! itself**, so parallelization work (ROADMAP item 2) and bench ratcheting
+//! (item 6) are driven by measured shares instead of guesses.
+//!
+//! # Model
+//!
+//! * **Scoped timers** ([`scope`]) attribute wall-clock to a fixed set of
+//!   [`Subsystem`]s: event-loop dispatch, mapping/ledger, compute issue,
+//!   the packet and flit network engines, thermal stepping, the DTM
+//!   governor, trace export, and the fleet's dispatch vs parallel-advance
+//!   phases.  Scopes nest on a per-thread stack; a parent's **self** time
+//!   is its elapsed time minus the elapsed time of its direct children,
+//!   so `self` sums across subsystems to total scoped time with no
+//!   double-counting.  The nesting stacks are also exported as
+//!   inferno-compatible collapsed lines ([`ProfileReport::collapsed`])
+//!   for flamegraph rendering.
+//! * **Monotonic counters** ([`count`]) track work items (events
+//!   processed, flit-hops, mapping attempts, ledger journal ops,
+//!   requests completed, sims completed) and derive rates (events/s,
+//!   flit-hops/s, sims/s) against the profiled wall-clock.
+//! * **Worker utilization**: `util::pool` wraps each job in a
+//!   [`busy_scope`], so the report carries per-worker busy time and a
+//!   busy/wall utilization — the parallel-efficiency baseline the
+//!   sharded-core plan needs.
+//!
+//! # Zero perturbation
+//!
+//! The profiler only ever *reads* [`std::time::Instant`] and bumps its own
+//! atomics; it never touches simulation state, event order, or RNG
+//! streams.  Report fingerprints are byte-identical per seed with and
+//! without profiling (`rust/tests/prof.rs` asserts this on both NoC
+//! fidelities), and the `ProfileReport` itself is excluded from every
+//! report fingerprint, mirroring how `BreakdownStats` is handled.
+//!
+//! # Cost
+//!
+//! Collection is gated behind the `prof` cargo feature (on by default)
+//! *and* a runtime switch ([`enable`]).  Compiled in but disabled, every
+//! hook costs one relaxed atomic load and a branch; built with
+//! `--no-default-features`, the hooks compile to empty inlined stubs.
+//! The report/JSON/collapsed-export types below are always compiled so
+//! CLI and report plumbing work identically in both builds (a no-feature
+//! build simply never produces a report).
+//!
+//! # Aggregation
+//!
+//! State is process-global: [`enable`] resets it, [`snapshot`] reads it
+//! without resetting.  Per-thread stats are keyed by **thread name**, so
+//! the short-lived `chipsim-worker-N` threads the pool spawns every fleet
+//! epoch accumulate into one row per worker index rather than one per
+//! incarnation.
+
+#[cfg(feature = "prof")]
+use std::sync::atomic::Ordering;
+
+// ------------------------------------------------------------- subsystems
+
+/// A simulator subsystem wall-clock is attributed to.  The variant order
+/// is the presentation order in tables and JSON.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Subsystem {
+    /// `advance_run`: the co-simulation event loop (self time = dispatch
+    /// overhead left after nested subsystems are subtracted out).
+    EventLoop,
+    /// Mapper probe + commit against the `MemoryLedger`.
+    Mapping,
+    /// Compute issue: segment latency/energy evaluation and scheduling.
+    ComputeIssue,
+    /// Packet-fidelity NoI engine (`noc::engine`).
+    PacketEngine,
+    /// Flit-fidelity wormhole engine cycles (`noc::flit`).
+    FlitEngine,
+    /// RC thermal stepping (`thermal::stepper` ingest).
+    Thermal,
+    /// DTM governor: sensor polling + DVFS decisions.
+    Dtm,
+    /// Flight-recorder export to Chrome trace-event JSON.
+    TraceExport,
+    /// Fleet single-threaded control section (snapshot, migrate,
+    /// autoscale, route).
+    FleetDispatch,
+    /// Fleet parallel replica advance (the epoch's worker-pool phase).
+    FleetAdvance,
+}
+
+impl Subsystem {
+    pub const COUNT: usize = 10;
+    pub const ALL: [Subsystem; Self::COUNT] = [
+        Subsystem::EventLoop,
+        Subsystem::Mapping,
+        Subsystem::ComputeIssue,
+        Subsystem::PacketEngine,
+        Subsystem::FlitEngine,
+        Subsystem::Thermal,
+        Subsystem::Dtm,
+        Subsystem::TraceExport,
+        Subsystem::FleetDispatch,
+        Subsystem::FleetAdvance,
+    ];
+
+    /// Stable snake_case name used in JSON, collapsed stacks, and the
+    /// `share_<name>` bench metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::EventLoop => "event_loop",
+            Subsystem::Mapping => "mapping",
+            Subsystem::ComputeIssue => "compute_issue",
+            Subsystem::PacketEngine => "packet_engine",
+            Subsystem::FlitEngine => "flit_engine",
+            Subsystem::Thermal => "thermal",
+            Subsystem::Dtm => "dtm",
+            Subsystem::TraceExport => "trace_export",
+            Subsystem::FleetDispatch => "fleet_dispatch",
+            Subsystem::FleetAdvance => "fleet_advance",
+        }
+    }
+}
+
+/// A monotonic work counter.  Counters only ever increase between
+/// [`enable`]/[`reset`] and a [`snapshot`], and never feed back into the
+/// simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Events dispatched by the co-simulation loop (arrivals + queue).
+    Events,
+    /// Flit-hops simulated by the wormhole engine (one per flit per
+    /// link traversal; × link `width_bytes` == `SimReport::noc_work` on
+    /// uniform-width topologies).
+    FlitHops,
+    /// Mapper `try_map` invocations (probes and commits).
+    MappingAttempts,
+    /// `MemoryLedger` journal deltas recorded under a checkpoint.
+    JournalOps,
+    /// Request instances finished by the event loop (pre-warm-up
+    /// completions included; drops excluded).
+    RequestsCompleted,
+    /// Whole simulation runs finalized (`finish_run`) — derives sims/s
+    /// for batch sweeps and fleets.
+    SimsCompleted,
+}
+
+impl Counter {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Counter; Self::COUNT] = [
+        Counter::Events,
+        Counter::FlitHops,
+        Counter::MappingAttempts,
+        Counter::JournalOps,
+        Counter::RequestsCompleted,
+        Counter::SimsCompleted,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::Events => "events",
+            Counter::FlitHops => "flit_hops",
+            Counter::MappingAttempts => "mapping_attempts",
+            Counter::JournalOps => "journal_ops",
+            Counter::RequestsCompleted => "requests_completed",
+            Counter::SimsCompleted => "sims_completed",
+        }
+    }
+}
+
+// ------------------------------------------------- report (always built)
+
+/// Per-subsystem wall-clock attribution.
+#[derive(Debug, Clone)]
+pub struct SubsystemStat {
+    pub name: &'static str,
+    /// Elapsed time inside this subsystem's scopes, children included.
+    pub total_ns: u64,
+    /// Elapsed time minus direct children — sums to `cpu_ns` across
+    /// subsystems without double-counting.
+    pub self_ns: u64,
+    pub calls: u64,
+    /// `self_ns / cpu_ns` — fraction of all *scoped* time, so shares sum
+    /// to ≤ 1 even when workers run in parallel.
+    pub share: f64,
+}
+
+/// One monotonic counter with its rate against the profiled wall-clock.
+#[derive(Debug, Clone)]
+pub struct CounterStat {
+    pub name: &'static str,
+    pub value: u64,
+    pub per_s: f64,
+}
+
+/// Busy/idle accounting for one (named) thread.
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    pub name: String,
+    pub busy_ns: u64,
+    /// `busy_ns / wall_ns`, clamped to [0, 1].
+    pub util: f64,
+}
+
+/// One nesting stack ("chipsim;fleet_advance;event_loop;mapping") with
+/// its total and self time — the flamegraph raw material.
+#[derive(Debug, Clone)]
+pub struct PathStat {
+    pub stack: String,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+/// Snapshot of the self-profiler: subsystem attribution, counters with
+/// derived rates, per-worker utilization, and collapsed-stack paths.
+///
+/// Rides on `SimReport` (and therefore `TrafficReport`/`MixReport`) and
+/// on `FleetReport`; excluded from every fingerprint.
+#[derive(Debug, Clone, Default)]
+pub struct ProfileReport {
+    /// Wall-clock of the profiled window (the run's host time).
+    pub wall_ns: u64,
+    /// Total scoped time summed over all threads — the share
+    /// denominator.  Exceeds `wall_ns` when workers run in parallel.
+    pub cpu_ns: u64,
+    /// Subsystems with non-zero time, in [`Subsystem::ALL`] order.
+    pub subsystems: Vec<SubsystemStat>,
+    /// Counters with non-zero values, in [`Counter::ALL`] order.
+    pub counters: Vec<CounterStat>,
+    /// Threads that recorded pool busy-time, sorted by name.
+    pub workers: Vec<WorkerStat>,
+    /// Nesting stacks sorted lexicographically.
+    pub paths: Vec<PathStat>,
+}
+
+impl ProfileReport {
+    /// Inferno-compatible collapsed stacks: one `frame;frame;... value`
+    /// line per path, value = self time in nanoseconds.  Feed to
+    /// `inferno-flamegraph` (or flamegraph.pl) as-is.
+    pub fn collapsed(&self) -> String {
+        let mut out = String::new();
+        for p in &self.paths {
+            if p.self_ns > 0 {
+                out.push_str(&format!("{} {}\n", p.stack, p.self_ns));
+            }
+        }
+        out
+    }
+
+    /// One-line headline: wall, scoped coverage, and the top subsystem.
+    pub fn summary(&self) -> String {
+        let top = self
+            .subsystems
+            .iter()
+            .max_by(|a, b| a.self_ns.cmp(&b.self_ns))
+            .map(|s| format!("{} {:.1}%", s.name, s.share * 100.0))
+            .unwrap_or_else(|| "no scopes".to_string());
+        format!(
+            "profile: wall {} | scoped {} ({} thread-rows) | top {}",
+            crate::util::benchkit::fmt_ns(self.wall_ns as f64),
+            crate::util::benchkit::fmt_ns(self.cpu_ns as f64),
+            self.workers.len().max(1),
+            top
+        )
+    }
+
+    /// Human tables: subsystem shares, counters/rates, worker
+    /// utilization.
+    pub fn render(&self) -> String {
+        use crate::util::benchkit::{fmt_ns, Table};
+        let mut t = Table::new(
+            "self-profile: wall-clock by subsystem",
+            &["subsystem", "self", "total", "calls", "share"],
+        );
+        for s in &self.subsystems {
+            t.row(vec![
+                s.name.to_string(),
+                fmt_ns(s.self_ns as f64),
+                fmt_ns(s.total_ns as f64),
+                s.calls.to_string(),
+                format!("{:.1}%", s.share * 100.0),
+            ]);
+        }
+        let mut out = t.render();
+        if !self.counters.is_empty() {
+            let mut c = Table::new("work counters", &["counter", "value", "rate"]);
+            for k in &self.counters {
+                c.row(vec![
+                    k.name.to_string(),
+                    k.value.to_string(),
+                    format!("{:.0}/s", k.per_s),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&c.render());
+        }
+        if !self.workers.is_empty() {
+            let mut w = Table::new("worker utilization", &["thread", "busy", "util"]);
+            for k in &self.workers {
+                w.row(vec![
+                    k.name.clone(),
+                    fmt_ns(k.busy_ns as f64),
+                    format!("{:.1}%", k.util * 100.0),
+                ]);
+            }
+            out.push('\n');
+            out.push_str(&w.render());
+        }
+        out
+    }
+
+    /// JSON document (`schema: chipsim-profile-v1`) with the collapsed
+    /// lines embedded, so one artifact serves both dashboards and
+    /// flamegraphs.  `python/prof_check.py` schema-gates this shape.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let subs: Vec<Value> = self
+            .subsystems
+            .iter()
+            .map(|s| {
+                Value::obj(vec![
+                    ("name", Value::from(s.name)),
+                    ("total_ns", Value::from(s.total_ns)),
+                    ("self_ns", Value::from(s.self_ns)),
+                    ("calls", Value::from(s.calls)),
+                    ("share", Value::from(s.share)),
+                ])
+            })
+            .collect();
+        let counters: Vec<Value> = self
+            .counters
+            .iter()
+            .map(|c| {
+                Value::obj(vec![
+                    ("name", Value::from(c.name)),
+                    ("value", Value::from(c.value)),
+                    ("per_s", Value::from(c.per_s)),
+                ])
+            })
+            .collect();
+        let workers: Vec<Value> = self
+            .workers
+            .iter()
+            .map(|w| {
+                Value::obj(vec![
+                    ("name", Value::from(w.name.clone())),
+                    ("busy_ns", Value::from(w.busy_ns)),
+                    ("util", Value::from(w.util)),
+                ])
+            })
+            .collect();
+        let paths: Vec<Value> = self
+            .paths
+            .iter()
+            .map(|p| {
+                Value::obj(vec![
+                    ("stack", Value::from(p.stack.clone())),
+                    ("total_ns", Value::from(p.total_ns)),
+                    ("self_ns", Value::from(p.self_ns)),
+                ])
+            })
+            .collect();
+        let collapsed: Vec<Value> = self.collapsed().lines().map(Value::from).collect();
+        Value::obj(vec![
+            ("schema", Value::from("chipsim-profile-v1")),
+            ("wall_ns", Value::from(self.wall_ns)),
+            ("cpu_ns", Value::from(self.cpu_ns)),
+            ("subsystems", Value::Arr(subs)),
+            ("counters", Value::Arr(counters)),
+            ("workers", Value::Arr(workers)),
+            ("paths", Value::Arr(paths)),
+            ("collapsed", Value::Arr(collapsed)),
+        ])
+    }
+}
+
+// --------------------------------------------------- collection (gated)
+
+#[cfg(feature = "prof")]
+mod collect {
+    use super::{
+        Counter, CounterStat, PathStat, ProfileReport, Subsystem, SubsystemStat, WorkerStat,
+    };
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    /// Collapsed paths pack one 4-bit frame per nesting level into a
+    /// u64; deeper nests fold into their depth-15 ancestor.
+    const MAX_DEPTH: usize = 15;
+
+    pub(super) static ENABLED: AtomicBool = AtomicBool::new(false);
+
+    #[allow(clippy::declare_interior_mutable_const)]
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+    static COUNTERS: [AtomicU64; Counter::COUNT] = [ZERO; Counter::COUNT];
+
+    /// Global registry of per-thread stat rows, keyed by thread *name*
+    /// so every `chipsim-worker-N` incarnation shares one row.
+    static REGISTRY: Mutex<Vec<Arc<ThreadShared>>> = Mutex::new(Vec::new());
+
+    struct ThreadShared {
+        name: String,
+        stats: Mutex<ThreadStats>,
+    }
+
+    struct ThreadStats {
+        total_ns: [u64; Subsystem::COUNT],
+        self_ns: [u64; Subsystem::COUNT],
+        calls: [u64; Subsystem::COUNT],
+        /// packed path -> (total_ns, self_ns)
+        paths: std::collections::HashMap<u64, (u64, u64)>,
+        /// Sum of root-scope elapsed — this thread's scoped time.
+        root_ns: u64,
+        /// Pool busy time ([`super::busy_scope`]).
+        busy_ns: u64,
+    }
+
+    impl ThreadStats {
+        fn new() -> ThreadStats {
+            ThreadStats {
+                total_ns: [0; Subsystem::COUNT],
+                self_ns: [0; Subsystem::COUNT],
+                calls: [0; Subsystem::COUNT],
+                paths: std::collections::HashMap::new(),
+                root_ns: 0,
+                busy_ns: 0,
+            }
+        }
+
+        fn clear(&mut self) {
+            *self = ThreadStats::new();
+        }
+    }
+
+    struct Frame {
+        sub: Subsystem,
+        path: u64,
+        start: Instant,
+        child_ns: u64,
+    }
+
+    struct Local {
+        shared: Arc<ThreadShared>,
+        stack: Vec<Frame>,
+    }
+
+    thread_local! {
+        static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+    }
+
+    /// Lock that shrugs off poisoning: a panicking pool job must not
+    /// take the profiler down with it (the pool catches the panic and
+    /// keeps going).
+    fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn shared_for_current_thread() -> Arc<ThreadShared> {
+        let name = std::thread::current()
+            .name()
+            .unwrap_or("unnamed")
+            .to_string();
+        let mut reg = lock(&REGISTRY);
+        if let Some(e) = reg.iter().find(|e| e.name == name) {
+            return e.clone();
+        }
+        let e = Arc::new(ThreadShared { name, stats: Mutex::new(ThreadStats::new()) });
+        reg.push(e.clone());
+        e
+    }
+
+    /// RAII scope: records on drop.  Inert when profiling is disabled.
+    #[must_use]
+    pub struct Scope {
+        armed: bool,
+    }
+
+    pub(super) fn scope(sub: Subsystem) -> Scope {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return Scope { armed: false };
+        }
+        let ok = LOCAL
+            .try_with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let local = slot.get_or_insert_with(|| Local {
+                    shared: shared_for_current_thread(),
+                    stack: Vec::with_capacity(8),
+                });
+                let path = match local.stack.last() {
+                    Some(p) if local.stack.len() >= MAX_DEPTH => p.path,
+                    Some(p) => (p.path << 4) | (sub as u64 + 1),
+                    None => sub as u64 + 1,
+                };
+                local.stack.push(Frame { sub, path, start: Instant::now(), child_ns: 0 });
+            })
+            .is_ok();
+        Scope { armed: ok }
+    }
+
+    impl Drop for Scope {
+        fn drop(&mut self) {
+            if !self.armed {
+                return;
+            }
+            let _ = LOCAL.try_with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let Some(local) = slot.as_mut() else { return };
+                let Some(frame) = local.stack.pop() else { return };
+                let elapsed = frame.start.elapsed().as_nanos() as u64;
+                let self_ns = elapsed.saturating_sub(frame.child_ns);
+                if let Some(parent) = local.stack.last_mut() {
+                    parent.child_ns += elapsed;
+                }
+                let is_root = local.stack.is_empty();
+                let mut st = lock(&local.shared.stats);
+                let i = frame.sub as usize;
+                st.total_ns[i] += elapsed;
+                st.self_ns[i] += self_ns;
+                st.calls[i] += 1;
+                let slot = st.paths.entry(frame.path).or_insert((0, 0));
+                slot.0 += elapsed;
+                slot.1 += self_ns;
+                if is_root {
+                    st.root_ns += elapsed;
+                }
+            });
+        }
+    }
+
+    /// RAII pool busy-time tracker.
+    #[must_use]
+    pub struct BusyScope {
+        start: Option<Instant>,
+    }
+
+    pub(super) fn busy_scope() -> BusyScope {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return BusyScope { start: None };
+        }
+        BusyScope { start: Some(Instant::now()) }
+    }
+
+    impl Drop for BusyScope {
+        fn drop(&mut self) {
+            let Some(start) = self.start else { return };
+            let elapsed = start.elapsed().as_nanos() as u64;
+            let _ = LOCAL.try_with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let local = slot.get_or_insert_with(|| Local {
+                    shared: shared_for_current_thread(),
+                    stack: Vec::with_capacity(8),
+                });
+                lock(&local.shared.stats).busy_ns += elapsed;
+            });
+        }
+    }
+
+    pub(super) fn count(c: Counter, n: u64) {
+        if ENABLED.load(Ordering::Relaxed) {
+            COUNTERS[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub(super) fn counter_value(c: Counter) -> u64 {
+        COUNTERS[c as usize].load(Ordering::Relaxed)
+    }
+
+    pub(super) fn reset() {
+        for c in &COUNTERS {
+            c.store(0, Ordering::Relaxed);
+        }
+        for e in lock(&REGISTRY).iter() {
+            lock(&e.stats).clear();
+        }
+    }
+
+    fn decode_path(mut path: u64) -> String {
+        let mut frames = Vec::new();
+        while path != 0 {
+            let nib = (path & 0xF) as usize;
+            if (1..=Subsystem::COUNT).contains(&nib) {
+                frames.push(Subsystem::ALL[nib - 1].name());
+            }
+            path >>= 4;
+        }
+        frames.reverse();
+        let mut s = String::from("chipsim");
+        for f in frames {
+            s.push(';');
+            s.push_str(f);
+        }
+        s
+    }
+
+    pub(super) fn report(wall_ns: u64) -> ProfileReport {
+        let mut total = [0u64; Subsystem::COUNT];
+        let mut self_ns = [0u64; Subsystem::COUNT];
+        let mut calls = [0u64; Subsystem::COUNT];
+        let mut paths: std::collections::HashMap<u64, (u64, u64)> =
+            std::collections::HashMap::new();
+        let mut cpu_ns = 0u64;
+        let mut workers = Vec::new();
+        for e in lock(&REGISTRY).iter() {
+            let st = lock(&e.stats);
+            for i in 0..Subsystem::COUNT {
+                total[i] += st.total_ns[i];
+                self_ns[i] += st.self_ns[i];
+                calls[i] += st.calls[i];
+            }
+            for (path, (t, s)) in st.paths.iter() {
+                let slot = paths.entry(*path).or_insert((0, 0));
+                slot.0 += t;
+                slot.1 += s;
+            }
+            cpu_ns += st.root_ns;
+            if st.busy_ns > 0 {
+                workers.push(WorkerStat {
+                    name: e.name.clone(),
+                    busy_ns: st.busy_ns,
+                    util: if wall_ns > 0 {
+                        (st.busy_ns as f64 / wall_ns as f64).min(1.0)
+                    } else {
+                        0.0
+                    },
+                });
+            }
+        }
+        workers.sort_by(|a, b| a.name.cmp(&b.name));
+        let subsystems: Vec<SubsystemStat> = Subsystem::ALL
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| calls[*i] > 0)
+            .map(|(i, s)| SubsystemStat {
+                name: s.name(),
+                total_ns: total[i],
+                self_ns: self_ns[i],
+                calls: calls[i],
+                share: if cpu_ns > 0 { self_ns[i] as f64 / cpu_ns as f64 } else { 0.0 },
+            })
+            .collect();
+        let secs = (wall_ns as f64 / 1e9).max(1e-12);
+        let counters: Vec<CounterStat> = Counter::ALL
+            .iter()
+            .map(|c| (*c, counter_value(*c)))
+            .filter(|(_, v)| *v > 0)
+            .map(|(c, v)| CounterStat { name: c.name(), value: v, per_s: v as f64 / secs })
+            .collect();
+        let mut path_stats: Vec<PathStat> = paths
+            .into_iter()
+            .map(|(p, (t, s))| PathStat { stack: decode_path(p), total_ns: t, self_ns: s })
+            .collect();
+        path_stats.sort_by(|a, b| a.stack.cmp(&b.stack));
+        ProfileReport {
+            wall_ns,
+            cpu_ns,
+            subsystems,
+            counters,
+            workers,
+            paths: path_stats,
+        }
+    }
+}
+
+// ----------------------------------------------------------- public API
+
+#[cfg(feature = "prof")]
+pub use collect::{BusyScope, Scope};
+
+/// Is profiling currently collecting?
+#[cfg(feature = "prof")]
+pub fn enabled() -> bool {
+    collect::ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start collecting (resets all prior state first).
+#[cfg(feature = "prof")]
+pub fn enable() {
+    collect::reset();
+    collect::ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Stop collecting (state is kept until the next [`enable`]/[`reset`]).
+#[cfg(feature = "prof")]
+pub fn disable() {
+    collect::ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Zero every counter, scope stat, and worker row.
+#[cfg(feature = "prof")]
+pub fn reset() {
+    collect::reset();
+}
+
+/// Enter a subsystem scope; time is recorded when the guard drops.
+#[cfg(feature = "prof")]
+#[inline]
+pub fn scope(sub: Subsystem) -> Scope {
+    collect::scope(sub)
+}
+
+/// Track pool busy-time for the current (worker) thread.
+#[cfg(feature = "prof")]
+#[inline]
+pub fn busy_scope() -> BusyScope {
+    collect::busy_scope()
+}
+
+/// Bump a monotonic counter by `n` (no-op when disabled).
+#[cfg(feature = "prof")]
+#[inline]
+pub fn count(c: Counter, n: u64) {
+    collect::count(c, n);
+}
+
+/// Current value of a counter (0 when the feature is off).
+#[cfg(feature = "prof")]
+pub fn counter_value(c: Counter) -> u64 {
+    collect::counter_value(c)
+}
+
+/// Snapshot the profiler against a wall-clock window, or `None` when
+/// profiling is disabled (or compiled out).  Does not reset.
+#[cfg(feature = "prof")]
+pub fn snapshot(wall_ns: u64) -> Option<ProfileReport> {
+    if enabled() {
+        Some(collect::report(wall_ns))
+    } else {
+        None
+    }
+}
+
+// Feature-off stubs: identical signatures, empty bodies, so every hook
+// site compiles away under --no-default-features.
+
+/// Inert scope guard (feature off).
+#[cfg(not(feature = "prof"))]
+#[must_use]
+pub struct Scope;
+
+/// Inert busy-time guard (feature off).
+#[cfg(not(feature = "prof"))]
+#[must_use]
+pub struct BusyScope;
+
+#[cfg(not(feature = "prof"))]
+pub fn enabled() -> bool {
+    false
+}
+
+#[cfg(not(feature = "prof"))]
+pub fn enable() {}
+
+#[cfg(not(feature = "prof"))]
+pub fn disable() {}
+
+#[cfg(not(feature = "prof"))]
+pub fn reset() {}
+
+#[cfg(not(feature = "prof"))]
+#[inline(always)]
+pub fn scope(_sub: Subsystem) -> Scope {
+    Scope
+}
+
+#[cfg(not(feature = "prof"))]
+#[inline(always)]
+pub fn busy_scope() -> BusyScope {
+    BusyScope
+}
+
+#[cfg(not(feature = "prof"))]
+#[inline(always)]
+pub fn count(_c: Counter, _n: u64) {}
+
+#[cfg(not(feature = "prof"))]
+pub fn counter_value(_c: Counter) -> u64 {
+    0
+}
+
+#[cfg(not(feature = "prof"))]
+pub fn snapshot(_wall_ns: u64) -> Option<ProfileReport> {
+    None
+}
+
+// Tests that *arm* the profiler live in `rust/tests/prof.rs`: this lib
+// test binary runs sim/fleet/noc tests concurrently on other threads,
+// and their hook sites would record into the armed global profiler.
+// The integration binary contains only serialized profiler tests.
+#[cfg(all(test, feature = "prof"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_scope_records_nothing() {
+        // Nothing in the lib test binary enables profiling, so state
+        // stays empty no matter which tests run concurrently.
+        {
+            let _s = scope(Subsystem::EventLoop);
+        }
+        count(Counter::Events, 5);
+        assert!(!enabled());
+        assert!(snapshot(1).is_none());
+        assert_eq!(counter_value(Counter::Events), 0);
+    }
+}

@@ -114,6 +114,11 @@ pub struct SimReport {
     pub thermal: Option<ThermalSummary>,
     /// Closed-loop DTM results (populated by `ThermalSpec::InLoop`).
     pub dtm: Option<DtmReport>,
+    /// Host-side self-profile of the simulator (populated when
+    /// [`crate::prof`] collection is enabled, e.g. via `--profile`).
+    /// Like `wall_ns` and the latency breakdown, it is host-timing
+    /// data and therefore excluded from [`fingerprint`](Self::fingerprint).
+    pub profile: Option<crate::prof::ProfileReport>,
 }
 
 impl SimReport {

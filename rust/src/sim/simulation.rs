@@ -237,6 +237,7 @@ impl<'a> PowerPort<'a> {
     pub fn drain_window(&mut self, before_ns: TimeNs) -> PowerWindow {
         let window = self.tracker.drain_window(before_ns);
         if let Some(stepper) = self.stepper.as_mut() {
+            let _prof_thermal = crate::prof::scope(crate::prof::Subsystem::Thermal);
             if let Err(e) = stepper.ingest(&window) {
                 if self.err.is_none() {
                     *self.err = Some(e.context("in-loop thermal stepping failed"));
@@ -1092,6 +1093,12 @@ impl Simulation {
         #[cfg(feature = "trace")]
         let tracer = self.tracer.clone();
 
+        // Self-profiling: one event-loop scope per epoch; the nested
+        // subsystem scopes below subtract out, leaving dispatch
+        // overhead as this scope's self time.  Costs one relaxed
+        // atomic load when profiling is disabled.
+        let _prof_loop = crate::prof::scope(crate::prof::Subsystem::EventLoop);
+
         macro_rules! notify {
             ($($call:tt)*) => {
                 for ob in &self.observers {
@@ -1102,6 +1109,7 @@ impl Simulation {
 
         macro_rules! start_chiplet_if_idle {
             ($c:expr, $t:expr) => {{
+                let _prof_issue = crate::prof::scope(crate::prof::Subsystem::ComputeIssue);
                 let cid = $c;
                 if !chiplets[cid].busy {
                     if let Some((inst, layer, seg, inference)) = chiplets[cid].queue.pop_front() {
@@ -1202,6 +1210,7 @@ impl Simulation {
 
         macro_rules! try_map_models {
             ($t:expr) => {{
+                let _prof_map = crate::prof::scope(crate::prof::Subsystem::Mapping);
                 // Thermal-aware extension: rank chiplets by accumulated
                 // dissipation (temperature proxy) when enabled.
                 let heat: Option<Vec<f64>> = if self.params.thermal_aware_hops > 0.0 {
@@ -1230,6 +1239,7 @@ impl Simulation {
                             heat_weight_hops: self.params.thermal_aware_hops,
                             allowed: mask_of(&self.tenant_masks, req.tenant),
                         };
+                        crate::prof::count(crate::prof::Counter::MappingAttempts, 1);
                         probed = self.mapper.try_map(&ctx, &model, &mut ledger);
                         probed.is_some()
                     });
@@ -1481,6 +1491,7 @@ impl Simulation {
         macro_rules! finish_instance {
             ($inst:expr, $t:expr) => {{
                 let inst = $inst;
+                crate::prof::count(crate::prof::Counter::RequestsCompleted, 1);
                 instances[inst].finished = true;
                 ledger.release_mapping(&instances[inst].mapping);
                 if let Some(active) = tenant_active.get_mut(instances[inst].req.tenant) {
@@ -1660,6 +1671,7 @@ impl Simulation {
                 }
             }
             if let Some(d) = dtm_rt.as_mut() {
+                let _prof_dtm = crate::prof::scope(crate::prof::Subsystem::Dtm);
                 // Close elapsed control windows first so the operating
                 // points the next events see reflect the window that
                 // just ended.
@@ -1758,6 +1770,7 @@ impl Simulation {
                         );
                     }
                 });
+                crate::prof::count(crate::prof::Counter::Events, 1);
                 arb.push(req);
                 try_map_models!(t_next);
                 continue;
@@ -1765,6 +1778,7 @@ impl Simulation {
             let Some(Reverse(entry)) = queue.pop() else {
                 return Ok(RunStatus::Idle);
             };
+            crate::prof::count(crate::prof::Counter::Events, 1);
             match entry.ev {
                 Event::TryMap => {
                     try_map_models!(entry.t);
@@ -1921,6 +1935,8 @@ impl Simulation {
             }
             (None, None) => (None, None),
         };
+        crate::prof::count(crate::prof::Counter::SimsCompleted, 1);
+        let wall_ns = wall_start.elapsed().as_nanos();
         let report = SimReport {
             outcomes,
             dropped,
@@ -1932,10 +1948,12 @@ impl Simulation {
             noc_work: net.work_done(),
             link_util,
             tenant_comm: tenant_traffic.into_vec(),
-            wall_ns: wall_start.elapsed().as_nanos(),
+            wall_ns,
             stats_window: (self.params.warmup_ns, hi),
             thermal,
             dtm,
+            // Host-timing data only; never part of the fingerprint.
+            profile: crate::prof::snapshot(wall_ns as u64),
         };
         for ob in &self.observers {
             ob.lock().expect("observer lock").on_run_complete(&report);

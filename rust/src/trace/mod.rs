@@ -538,6 +538,7 @@ impl TraceRecorder {
 /// Merge several recorders (e.g. one per fleet replica, each with its
 /// own pid base) into one Chrome trace-event document.
 pub fn merge_export(recs: &[&TraceRecorder]) -> Value {
+    let _prof = crate::prof::scope(crate::prof::Subsystem::TraceExport);
     let mut events: Vec<Value> = Vec::new();
     let mut dropped = 0u64;
     for r in recs {

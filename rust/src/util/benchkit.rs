@@ -131,6 +131,13 @@ pub fn bench_into<F: FnMut()>(
     mut f: F,
 ) -> BenchResult {
     f(); // warmup
+    // Attribute the timed window by subsystem (no-op unless the bench
+    // harness enabled self-profiling; skipped under `cargo test`, where
+    // the process-global profiler may belong to another test).
+    let profiling = !cfg!(test) && crate::prof::enabled();
+    if profiling {
+        crate::prof::reset();
+    }
     let mut samples: Vec<f64> = Vec::new();
     let start = Instant::now();
     while samples.len() < min_iters || start.elapsed().as_millis() < min_time_ms as u128 {
@@ -144,7 +151,7 @@ pub fn bench_into<F: FnMut()>(
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-    let result = BenchResult {
+    let mut result = BenchResult {
         name: name.to_string(),
         iters: samples.len(),
         mean_ns: mean,
@@ -153,6 +160,20 @@ pub fn bench_into<F: FnMut()>(
         min_ns: samples[0],
         metrics: Vec::new(),
     };
+    if profiling {
+        if let Some(p) = crate::prof::snapshot(start.elapsed().as_nanos() as u64) {
+            // Per-subsystem wall-clock shares ride in `metrics`, so
+            // bench_check.py's delta table makes regressions
+            // attributable ("flit_engine share 40% -> 70%"), not just
+            // detectable.  Sub-0.1% shares are noise; drop them to keep
+            // baselines stable.
+            for s in &p.subsystems {
+                if s.share >= 0.001 {
+                    result.metrics.push((format!("share_{}", s.name), s.share));
+                }
+            }
+        }
+    }
     if let Some(dir) = dir {
         if let Err(e) = result.save_json(dir) {
             eprintln!("benchkit: could not write BENCH json into {dir}: {e:#}");

@@ -36,19 +36,30 @@ where
     let slots: Mutex<Vec<Option<Result<R, String>>>> =
         Mutex::new((0..n).map(|_| None).collect());
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
+        for w in 0..workers {
+            // Named threads: OS profilers, flamegraphs, panic messages,
+            // and the self-profiler's worker-utilization rows all key
+            // on `chipsim-worker-N`.  Naming can only fail on exotic
+            // platforms; fall back to an anonymous worker there.
+            let work = || loop {
                 let i = next.fetch_add(1, Ordering::SeqCst);
                 if i >= n {
                     break;
                 }
+                // Busy/idle attribution for the parallel-efficiency
+                // baseline: one guard per job, no-op unless profiling.
+                let _busy = crate::prof::busy_scope();
                 let out =
                     match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
                         Ok(r) => Ok(r),
                         Err(payload) => Err(panic_message(payload)),
                     };
                 slots.lock().expect("pool slot lock")[i] = Some(out);
-            });
+            };
+            let builder = std::thread::Builder::new().name(format!("chipsim-worker-{w}"));
+            if builder.spawn_scoped(scope, work).is_err() {
+                scope.spawn(work);
+            }
         }
     });
     slots

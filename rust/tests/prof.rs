@@ -1,0 +1,243 @@
+//! Integration tests for the self-profiler (`chipsim::prof`): the
+//! zero-perturbation guarantee (per-seed report fingerprints are
+//! byte-identical with the profiler armed, on both NoC fidelities),
+//! counter/report cross-checks (the flit-hop counter must reproduce the
+//! engine's own work accounting), and structural invariants of the
+//! collected [`ProfileReport`] (self ≤ total, children sum ≤ parent,
+//! inferno-shaped collapsed lines).
+//!
+//! The profiler is process-global state, so every test serializes on
+//! one lock and re-arms (which resets collection) before running.
+#![cfg(feature = "prof")]
+
+use std::sync::{Mutex, MutexGuard};
+
+use chipsim::config::{HardwareConfig, NocFidelity, SimParams};
+use chipsim::prof;
+use chipsim::serving::{ArrivalSpec, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::workload::ModelKind;
+
+/// Tests in one binary run concurrently; the profiler is global.
+fn serialize() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn sim(fidelity: NocFidelity) -> Simulation {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(SimParams {
+            pipelined: true,
+            warmup_ns: 0,
+            cooldown_ns: 0,
+            noc_fidelity: fidelity,
+            ..SimParams::default()
+        })
+        .build()
+        .expect("valid configuration")
+}
+
+fn light_spec() -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(1_000.0).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(10.0)
+        .warmup_ms(0.0)
+        .window_ms(1.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+/// Nested scopes split elapsed time exactly: parent self + child total
+/// == parent total, and the nesting path is recorded for the
+/// flamegraph.
+#[test]
+fn nested_scopes_split_self_and_total() {
+    let _g = serialize();
+    prof::enable();
+    {
+        let _outer = prof::scope(prof::Subsystem::FleetDispatch);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        {
+            let _inner = prof::scope(prof::Subsystem::Mapping);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let r = prof::snapshot(10_000_000).expect("enabled");
+    prof::disable();
+    let outer = r.subsystems.iter().find(|s| s.name == "fleet_dispatch").unwrap();
+    let inner = r.subsystems.iter().find(|s| s.name == "mapping").unwrap();
+    assert!(inner.total_ns <= outer.total_ns, "child cannot exceed parent");
+    assert_eq!(
+        outer.self_ns + inner.total_ns,
+        outer.total_ns,
+        "parent self + child total must equal parent total"
+    );
+    assert!(r.paths.iter().any(|p| p.stack == "chipsim;fleet_dispatch;mapping"));
+    assert!(r.cpu_ns >= outer.total_ns);
+    let share_sum: f64 = r.subsystems.iter().map(|s| s.share).sum();
+    assert!(share_sum <= 1.0 + 1e-9, "shares sum {share_sum} > 1");
+}
+
+/// Counters accumulate across bumps and derive a rate against the
+/// snapshot's wall-clock.
+#[test]
+fn counters_accumulate_and_rate() {
+    let _g = serialize();
+    prof::enable();
+    prof::count(prof::Counter::FlitHops, 3);
+    prof::count(prof::Counter::FlitHops, 4);
+    let r = prof::snapshot(1_000_000_000).expect("enabled");
+    prof::disable();
+    let c = r.counters.iter().find(|c| c.name == "flit_hops").unwrap();
+    assert_eq!(c.value, 7);
+    assert!((c.per_s - 7.0).abs() < 1e-9);
+}
+
+/// Golden shape for the collapsed export: `frame;frame value` lines,
+/// rooted at `chipsim`, nesting rendered left-to-right.
+#[test]
+fn collapsed_lines_are_inferno_shaped() {
+    let _g = serialize();
+    prof::enable();
+    {
+        let _a = prof::scope(prof::Subsystem::EventLoop);
+        let _b = prof::scope(prof::Subsystem::FlitEngine);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let r = prof::snapshot(1).expect("enabled");
+    prof::disable();
+    let folded = r.collapsed();
+    assert!(!folded.is_empty());
+    for line in folded.lines() {
+        let (stack, value) = line.rsplit_once(' ').expect("`stack value` shape");
+        assert!(stack.starts_with("chipsim"), "{line}");
+        assert!(value.parse::<u64>().is_ok(), "{line}");
+    }
+    assert!(folded.contains("chipsim;event_loop;flit_engine "));
+}
+
+/// The JSON document carries the schema tag and every section.
+#[test]
+fn report_roundtrips_to_json() {
+    let _g = serialize();
+    prof::enable();
+    {
+        let _a = prof::scope(prof::Subsystem::EventLoop);
+    }
+    prof::count(prof::Counter::Events, 1);
+    let r = prof::snapshot(1000).expect("enabled");
+    prof::disable();
+    let doc = r.to_json();
+    assert_eq!(doc.get("schema").and_then(|v| v.as_str()).unwrap(), "chipsim-profile-v1");
+    for section in ["subsystems", "counters", "workers", "paths", "collapsed"] {
+        assert!(doc.get(section).and_then(|v| v.as_arr()).is_ok(), "missing '{section}'");
+    }
+}
+
+/// The profiler observes; it must never steer.  Same seed, profiler off
+/// vs armed: the serving fingerprint (which hashes every simulated
+/// quantity, not host timings) must be byte-identical.
+#[test]
+fn profiling_does_not_perturb_packet_fidelity() {
+    let _g = serialize();
+    prof::disable();
+    let baseline = sim(NocFidelity::Packet).run_traffic_with(&light_spec(), 42).unwrap();
+    assert!(baseline.sim.profile.is_none(), "disabled profiler must not attach");
+    prof::enable();
+    let profiled = sim(NocFidelity::Packet).run_traffic_with(&light_spec(), 42).unwrap();
+    prof::disable();
+    assert_eq!(baseline.fingerprint(), profiled.fingerprint());
+    assert!(profiled.sim.profile.is_some(), "armed profiler must attach its report");
+}
+
+/// Same guarantee on the cycle-stepped flit engine, whose inner loop is
+/// the hottest hook site.
+#[test]
+fn profiling_does_not_perturb_flit_fidelity() {
+    let _g = serialize();
+    prof::disable();
+    let baseline = sim(NocFidelity::Flit).run_traffic_with(&light_spec(), 7).unwrap();
+    prof::enable();
+    let profiled = sim(NocFidelity::Flit).run_traffic_with(&light_spec(), 7).unwrap();
+    prof::disable();
+    assert_eq!(baseline.fingerprint(), profiled.fingerprint());
+}
+
+/// The monotonic counters must agree with the simulator's own report:
+/// every flit-hop moves one link-width of bytes, so `flit_hops x
+/// width_bytes` must equal the engine's `noc_work` on a uniform-width
+/// topology, and `requests_completed` must match the serving stats.
+#[test]
+fn counters_match_report_totals() {
+    let _g = serialize();
+    prof::enable();
+    let hw = HardwareConfig::homogeneous_mesh(6, 6);
+    let width = hw.link.width_bytes;
+    let report = sim(NocFidelity::Flit).run_traffic_with(&light_spec(), 0xFEED).unwrap();
+    let hops = prof::counter_value(prof::Counter::FlitHops);
+    let completed = prof::counter_value(prof::Counter::RequestsCompleted);
+    let events = prof::counter_value(prof::Counter::Events);
+    let sims = prof::counter_value(prof::Counter::SimsCompleted);
+    prof::disable();
+    assert!(hops > 0, "flit run must traverse links");
+    assert_eq!(hops * width, report.sim.noc_work);
+    assert_eq!(completed, report.stats.completed() + report.stats.warmup_skipped);
+    assert!(events > 0, "event loop must process events");
+    assert_eq!(sims, 1, "one finalized run");
+}
+
+/// Structural invariants of a real collected profile: per-subsystem
+/// self ≤ total, shares in [0, 1] summing to ≤ 1, per-path children
+/// totals bounded by their parent, and collapsed lines shaped for
+/// inferno (`frame;frame value`).
+#[test]
+fn collected_profile_is_self_consistent() {
+    let _g = serialize();
+    prof::enable();
+    let report = sim(NocFidelity::Packet).run_traffic_with(&light_spec(), 9).unwrap();
+    prof::disable();
+    let p = report.sim.profile.expect("armed profiler attaches");
+    assert!(p.wall_ns > 0);
+    assert!(!p.subsystems.is_empty(), "serving run exercises scoped subsystems");
+    let mut share_sum = 0.0;
+    for s in &p.subsystems {
+        assert!(s.self_ns <= s.total_ns, "{}: self {} > total {}", s.name, s.self_ns, s.total_ns);
+        assert!(s.calls > 0, "{}: listed but never entered", s.name);
+        assert!((0.0..=1.0).contains(&s.share), "{}: share {}", s.name, s.share);
+        share_sum += s.share;
+    }
+    assert!(share_sum <= 1.0 + 1e-9, "self-time shares sum to {share_sum}");
+    // The event loop dominates a serving run and nests the rest.
+    assert!(p.subsystems.iter().any(|s| s.name == "event_loop"));
+    for parent in &p.paths {
+        assert!(parent.self_ns <= parent.total_ns, "path {}", parent.stack);
+        let child_prefix = format!("{};", parent.stack);
+        let children_total: u64 = p
+            .paths
+            .iter()
+            .filter(|q| {
+                q.stack.starts_with(&child_prefix)
+                    && !q.stack[child_prefix.len()..].contains(';')
+            })
+            .map(|q| q.total_ns)
+            .sum();
+        assert!(
+            children_total <= parent.total_ns,
+            "children of {} sum to {} > parent total {}",
+            parent.stack,
+            children_total,
+            parent.total_ns
+        );
+    }
+    for line in p.collapsed().lines() {
+        let (stack, value) = line.rsplit_once(' ').expect("collapsed line has a value");
+        assert!(stack.starts_with("chipsim"), "{line}");
+        assert!(value.parse::<u64>().is_ok(), "{line}");
+        for frame in stack.split(';').skip(1) {
+            assert!(
+                p.subsystems.iter().any(|s| s.name == frame),
+                "unknown frame '{frame}' in {line}"
+            );
+        }
+    }
+}

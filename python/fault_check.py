@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Validate a chipsim fault report (`chipsim-fault-v1`) document.
+
+Usage: fault_check.py <fault.json> [<more.json> ...]
+
+Structural checks (stdlib only):
+
+  - the document is a JSON object with `schema == "chipsim-fault-v1"`
+    and non-negative integer counters;
+  - `availability` is a float in [0, 1];
+  - the executed timeline is monotone in `at_ns`, every entry names a
+    known fault kind, and a repair (`up == true`) is only legal after a
+    failure of the same (kind, target) — a dangling repair means the
+    toggle bookkeeping lost a failure;
+  - `injected` equals the number of failure entries and `repairs` the
+    number of repair entries (the counters and the timeline are two
+    views of the same executed schedule);
+  - `recovered <= retries`: a request cannot complete via retry without
+    a retry dispatch, and `recovered <= aborts` — only aborted work can
+    recover.
+
+CI runs a fault preset with `--faults`/`--faults-out` and gates the
+emitted JSON with this checker, so the report stays consumable by
+dashboards as the fault subsystem evolves.
+"""
+
+import json
+import sys
+
+SCHEMA = "chipsim-fault-v1"
+KINDS = {"link", "router", "chiplet", "sensor", "board"}
+COUNTERS = [
+    "injected",
+    "repairs",
+    "reroutes",
+    "flow_fails",
+    "aborts",
+    "retries",
+    "recovered",
+    "fault_dropped",
+    "sensor_faults",
+    "goodput_under_fault",
+]
+
+
+def is_count(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def check_timeline(timeline, errors):
+    """Monotonicity, known kinds, and fail-before-repair pairing."""
+    downs = set()
+    prev = -1
+    fails = repairs = 0
+    for i, e in enumerate(timeline):
+        where = f"timeline[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        at, kind, target, up = e.get("at_ns"), e.get("kind"), e.get("target"), e.get("up")
+        if not is_count(at):
+            errors.append(f"{where}: 'at_ns' must be a non-negative integer")
+            continue
+        if at < prev:
+            errors.append(f"{where}: at_ns {at} < previous {prev} (timeline not monotone)")
+        prev = at
+        if kind not in KINDS:
+            errors.append(f"{where}: unknown kind {kind!r}")
+            continue
+        if not is_count(target):
+            errors.append(f"{where}: 'target' must be a non-negative integer")
+            continue
+        if not isinstance(up, bool):
+            errors.append(f"{where}: 'up' must be a boolean")
+            continue
+        if up:
+            repairs += 1
+            if (kind, target) not in downs:
+                errors.append(f"{where}: repair of {kind} {target} with no prior failure")
+            else:
+                downs.discard((kind, target))
+        else:
+            fails += 1
+            downs.add((kind, target))
+    return fails, repairs
+
+
+def check(path):
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable: {e}"]
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema is {doc.get('schema')!r}, expected {SCHEMA!r}")
+    for k in COUNTERS:
+        if not is_count(doc.get(k)):
+            errors.append(f"'{k}' must be a non-negative integer, got {doc.get(k)!r}")
+    avail = doc.get("availability")
+    if not isinstance(avail, (int, float)) or isinstance(avail, bool):
+        errors.append(f"'availability' must be a number, got {avail!r}")
+    elif not 0.0 <= avail <= 1.0:
+        errors.append(f"availability {avail} outside [0, 1]")
+    timeline = doc.get("timeline")
+    if not isinstance(timeline, list):
+        errors.append("'timeline' must be an array")
+        return errors
+    fails, repairs = check_timeline(timeline, errors)
+    if is_count(doc.get("injected")) and doc["injected"] != fails:
+        errors.append(f"injected {doc['injected']} != {fails} timeline failure entries")
+    if is_count(doc.get("repairs")) and doc["repairs"] != repairs:
+        errors.append(f"repairs {doc['repairs']} != {repairs} timeline repair entries")
+    if is_count(doc.get("recovered")) and is_count(doc.get("retries")):
+        if doc["recovered"] > doc["retries"]:
+            errors.append(f"recovered {doc['recovered']} > retries {doc['retries']}")
+    if is_count(doc.get("recovered")) and is_count(doc.get("aborts")):
+        if doc["recovered"] > doc["aborts"]:
+            errors.append(f"recovered {doc['recovered']} > aborts {doc['aborts']}")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv[1:]:
+        errors = check(path)
+        if errors:
+            failed = True
+            print(f"FAIL {path}")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {path}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

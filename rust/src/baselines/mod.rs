@@ -89,7 +89,7 @@ impl BaselineEstimator {
                     .hw
                     .io_chiplets
                     .iter()
-                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet))
+                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet).unwrap_or(usize::MAX))
                     .unwrap();
                 net.inject(FlowSpec { src: io, dst: seg.chiplet, bytes: seg.mem_bytes }, 0);
             }

@@ -389,6 +389,17 @@ impl DtmRuntime {
         self.idx.iter().copied().max().unwrap_or(0)
     }
 
+    /// Install (`Some`) or clear (`None`) a fault-injection overlay on
+    /// one chiplet's sensor (see [`SensorBank::set_fault`]); subsequent
+    /// control windows act on the lying reading.
+    pub fn set_sensor_fault(
+        &mut self,
+        chiplet: usize,
+        fault: Option<(crate::fault::SensorMode, TimeNs)>,
+    ) {
+        self.sensors.set_fault(chiplet, fault);
+    }
+
     /// Advance the control loop to virtual time `now`: close every
     /// elapsed window — drain its power (forwarded to `sink`), step the
     /// RC network, poll sensors, run the governor.

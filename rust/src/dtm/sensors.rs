@@ -6,6 +6,7 @@
 //! models all three over the stepper's true chiplet temperatures, with
 //! seed-deterministic Gaussian noise so a DTM run is byte-reproducible.
 
+use crate::fault::SensorMode;
 use crate::util::rng::Rng;
 use crate::TimeNs;
 
@@ -42,6 +43,13 @@ pub struct SensorBank {
     rng: Rng,
     readings: Vec<f64>,
     last_poll_ns: Option<TimeNs>,
+    /// Fault-injection overlays: `(mode, since_ns)` per chiplet.  Applied
+    /// on top of the honest (noisy, quantized) reading so the governor
+    /// acts on lying data; `None` everywhere costs one `any` scan.
+    faults: Vec<Option<(SensorMode, TimeNs)>>,
+    /// Scratch output when at least one overlay is active — the honest
+    /// `readings` stay untouched so clearing a fault restores truth.
+    faulted: Vec<f64>,
 }
 
 impl SensorBank {
@@ -49,7 +57,23 @@ impl SensorBank {
         // One PRNG round avalanches (run_seed, sensor seed) pairs apart.
         let mut mixer = Rng::new(run_seed ^ spec.seed.rotate_left(17));
         let rng = mixer.fork();
-        SensorBank { spec, rng, readings: vec![0.0; num_chiplets], last_poll_ns: None }
+        SensorBank {
+            spec,
+            rng,
+            readings: vec![0.0; num_chiplets],
+            last_poll_ns: None,
+            faults: vec![None; num_chiplets],
+            faulted: Vec::new(),
+        }
+    }
+
+    /// Install (`Some`) or clear (`None`) a fault overlay on one sensor.
+    /// `since_ns` anchors drift-mode error growth.  Out-of-range indices
+    /// are ignored (plans are validated upstream at arm time).
+    pub fn set_fault(&mut self, chiplet: usize, fault: Option<(SensorMode, TimeNs)>) {
+        if let Some(slot) = self.faults.get_mut(chiplet) {
+            *slot = fault;
+        }
     }
 
     /// Sample the sensors at `now` against the true temperatures (°C).
@@ -73,6 +97,21 @@ impl SensorBank {
                 }
                 self.readings.push(v);
             }
+        }
+        if self.faults.iter().any(|f| f.is_some()) {
+            self.faulted.clear();
+            self.faulted.extend_from_slice(&self.readings);
+            for (i, f) in self.faults.iter().enumerate() {
+                if let (Some((mode, since)), Some(out)) = (f, self.faulted.get_mut(i)) {
+                    *out = match mode {
+                        SensorMode::StuckAt(c) => *c,
+                        SensorMode::DriftPerMs(d) => {
+                            *out + d * (now.saturating_sub(*since) as f64 / 1e6)
+                        }
+                    };
+                }
+            }
+            return &self.faulted;
         }
         &self.readings
     }
@@ -124,6 +163,25 @@ mod tests {
         // Truth moved, but the next poll is not due yet: stale reading.
         assert_eq!(bank.read(500, &[60.0]), &[45.0]);
         assert_eq!(bank.read(1_000, &[60.0]), &[60.0]);
+    }
+
+    #[test]
+    fn fault_overlays_lie_and_clear_back_to_truth() {
+        let mut bank = SensorBank::new(3, SensorSpec::ideal(), 42);
+        let truth = [45.0, 52.0, 61.0];
+        bank.set_fault(1, Some((SensorMode::StuckAt(95.0), 0)));
+        bank.set_fault(2, Some((SensorMode::DriftPerMs(0.5), 1_000_000)));
+        // Stuck sensor reads the lie; drift grows with fault age.
+        assert_eq!(bank.read(1_000_000, &truth), &[45.0, 95.0, 61.0]);
+        let r = bank.read(3_000_000, &truth).to_vec();
+        assert_eq!(r[1], 95.0);
+        assert!((r[2] - 62.0).abs() < 1e-9, "0.5 °C/ms over 2 ms: {}", r[2]);
+        // Repair restores the honest reading (held state untouched).
+        bank.set_fault(1, None);
+        bank.set_fault(2, None);
+        assert_eq!(bank.read(4_000_000, &truth), &truth);
+        // Out-of-range target is a no-op, not a panic.
+        bank.set_fault(17, Some((SensorMode::StuckAt(1.0), 0)));
     }
 
     #[test]

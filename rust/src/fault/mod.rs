@@ -1,0 +1,815 @@
+//! Deterministic fault injection and graceful-degradation accounting.
+//!
+//! Chiplets exist because of faults — reduced yields made monolithic
+//! dies untenable — so a chiplet simulator must be able to answer
+//! "what does p99 look like with a dead link and a thermal-runaway
+//! board?"  This module provides the schedule side of that question: a
+//! seeded [`FaultPlan`] parsed from a compact spec string, expanded
+//! ("armed") into a deterministic [`FaultToggle`] timeline that the
+//! simulation ([`crate::sim`]) and fleet ([`crate::fleet`]) layers
+//! execute, and a [`FaultReport`] that rides on
+//! `SimReport`/`FleetReport` with availability, goodput-under-fault,
+//! retry/abort counters, and the repair/recovery timeline.
+//!
+//! # Fault model
+//!
+//! | kind      | target            | effect                                            |
+//! |-----------|-------------------|---------------------------------------------------|
+//! | `link`    | `A-B` node pair   | both directed links down; flows reroute or fail   |
+//! | `router`  | node index        | every link touching the node down (partitioned)   |
+//! | `chiplet` | chiplet index     | mapper excludes it; in-flight segments abort      |
+//! | `sensor`  | chiplet index     | stuck-at or drifting readings feed the governor   |
+//! | `board`   | replica index     | fleet board crash: migrate queue, retry in-flight |
+//!
+//! Every event is scheduled: permanent (`@T`), transient with repair
+//! (`@T+D`), or intermittent (`@T+D%P[*K]` — down for `D` every `P`,
+//! `K` occurrences).  Arming never touches the run RNG (the plan has
+//! its own seed for `?` random-target selection), so an armed-but-empty
+//! plan is fingerprint-identical to a faultless run — the repo's
+//! zero-perturbation rule.
+//!
+//! # Spec grammar
+//!
+//! Comma/semicolon-separated tokens:
+//!
+//! ```text
+//! link:2-3@1ms            permanent link failure at 1 ms
+//! link:?@500us+200us      random link, down 500 µs..700 µs
+//! router:5@2ms            node 5 partitioned at 2 ms
+//! chiplet:7@1ms+4ms       chiplet 7 dead for 4 ms
+//! sensor:3:stuck=95@1ms   sensor 3 reads 95 °C from 1 ms on
+//! sensor:0:drift=0.5@0    sensor 0 drifts +0.5 °C per ms
+//! board:1@5ms             fleet replica 1 crashes at 5 ms
+//! seed=42                 plan seed (random-target selection)
+//! retry=3:200us:2ms:20ms  max:backoff:cap:deadline retry policy
+//! ```
+//!
+//! Times accept `ns` (default), `us`, and `ms` suffixes.
+
+use crate::util::rng::Rng;
+use crate::TimeNs;
+
+/// Cap on intermittent repeats (`*K` clamps to this).
+pub const MAX_REPEATS: u32 = 256;
+
+// ------------------------------------------------------------------- kinds
+
+/// The resource class a fault targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// An undirected NoI link (both directed halves fail together).
+    Link,
+    /// An NoI router: every link touching the node fails.
+    Router,
+    /// A compute chiplet dies (mapper exclusion + in-flight aborts).
+    Chiplet,
+    /// A thermal sensor lies (stuck-at or drift).
+    Sensor,
+    /// A whole fleet replica board crashes.
+    Board,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Link => "link",
+            FaultKind::Router => "router",
+            FaultKind::Chiplet => "chiplet",
+            FaultKind::Sensor => "sensor",
+            FaultKind::Board => "board",
+        }
+    }
+}
+
+/// How a faulty sensor lies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SensorMode {
+    /// Reads a constant temperature regardless of the truth.
+    StuckAt(f64),
+    /// Reading error grows by this many °C per millisecond of fault age.
+    DriftPerMs(f64),
+}
+
+// -------------------------------------------------------------------- plan
+
+/// Target of one fault event, before arming resolves it to an index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// `link:A-B` — the undirected pair; other kinds use `Index`.
+    NodePair(usize, usize),
+    Index(usize),
+    /// `?` — resolved from the plan seed at arm time.
+    Random,
+}
+
+/// One scheduled fault in a plan (pre-expansion).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub target: FaultTarget,
+    /// First failure instant.
+    pub at_ns: TimeNs,
+    /// Down duration until repair; `None` = permanent.
+    pub repair_ns: Option<TimeNs>,
+    /// Intermittent period between failure onsets; `None` = one-shot.
+    pub period_ns: Option<TimeNs>,
+    /// Occurrences when intermittent (clamped to [`MAX_REPEATS`]).
+    pub repeats: u32,
+    /// Sensor lie mode (sensor faults only).
+    pub sensor: Option<SensorMode>,
+}
+
+/// Fleet-level retry policy for requests aborted by a fault: capped
+/// exponential backoff with a per-request deadline measured from the
+/// request's original arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Attempts after the first dispatch (0 = never retry).
+    pub max_attempts: u32,
+    /// Backoff before attempt k: `backoff_ns << (k-1)`, capped.
+    pub backoff_ns: TimeNs,
+    pub backoff_cap_ns: TimeNs,
+    /// Give up (count dropped) past `arrival + deadline_ns`.
+    pub deadline_ns: TimeNs,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff_ns: 200_000,       // 200 µs
+            backoff_cap_ns: 2_000_000, // 2 ms
+            deadline_ns: 20_000_000,   // 20 ms
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry attempt `attempt` (1-based), capped.
+    pub fn backoff_for(&self, attempt: u32) -> TimeNs {
+        let shift = attempt.saturating_sub(1).min(62);
+        self.backoff_ns
+            .saturating_mul(1u64 << shift)
+            .min(self.backoff_cap_ns)
+    }
+}
+
+/// A seeded, schedulable fault-injection plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    /// Seed for `?` random-target selection only; never mixes with the
+    /// run RNG (zero-perturbation rule).
+    pub seed: u64,
+    pub retry: RetryPolicy,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { events: Vec::new(), seed: 0xFA017, retry: RetryPolicy::default() }
+    }
+}
+
+/// Parse a `NUMBER[ns|us|ms]` duration into nanoseconds.
+fn parse_time_ns(s: &str) -> anyhow::Result<TimeNs> {
+    let s = s.trim();
+    let (num, mult) = if let Some(v) = s.strip_suffix("ms") {
+        (v, 1e6)
+    } else if let Some(v) = s.strip_suffix("us") {
+        (v, 1e3)
+    } else if let Some(v) = s.strip_suffix("ns") {
+        (v, 1.0)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad duration '{s}' (expected NUMBER[ns|us|ms])"))?;
+    anyhow::ensure!(v >= 0.0 && v.is_finite(), "duration '{s}' must be finite and >= 0");
+    Ok((v * mult) as TimeNs)
+}
+
+impl FaultPlan {
+    /// Parse the spec grammar (module docs).  An empty string is a valid
+    /// empty plan.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for tok in spec.split([',', ';']) {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            if let Some(v) = tok.strip_prefix("seed=") {
+                plan.seed = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad plan seed '{v}'"))?;
+                continue;
+            }
+            if let Some(v) = tok.strip_prefix("retry=") {
+                let parts: Vec<&str> = v.split(':').collect();
+                anyhow::ensure!(
+                    parts.len() == 4,
+                    "bad retry policy '{v}' (expected max:backoff:cap:deadline)"
+                );
+                plan.retry = RetryPolicy {
+                    max_attempts: parts[0]
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad retry count '{}'", parts[0]))?,
+                    backoff_ns: parse_time_ns(parts[1])?,
+                    backoff_cap_ns: parse_time_ns(parts[2])?,
+                    deadline_ns: parse_time_ns(parts[3])?,
+                };
+                continue;
+            }
+            plan.events.push(Self::parse_event(tok)?);
+        }
+        Ok(plan)
+    }
+
+    fn parse_event(tok: &str) -> anyhow::Result<FaultEvent> {
+        // KIND:TARGET[:MODE]@T[+D][%P[*K]]
+        let (head, sched) = tok
+            .split_once('@')
+            .ok_or_else(|| anyhow::anyhow!("fault '{tok}' is missing '@START'"))?;
+        let mut head_parts = head.split(':');
+        let kind = match head_parts.next().unwrap_or("") {
+            "link" => FaultKind::Link,
+            "router" => FaultKind::Router,
+            "chiplet" => FaultKind::Chiplet,
+            "sensor" => FaultKind::Sensor,
+            "board" => FaultKind::Board,
+            other => anyhow::bail!(
+                "unknown fault kind '{other}' (expected link, router, chiplet, sensor, board)"
+            ),
+        };
+        let target_s = head_parts
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("fault '{tok}' is missing a target"))?;
+        let target = if target_s == "?" {
+            FaultTarget::Random
+        } else if kind == FaultKind::Link {
+            let (a, b) = target_s
+                .split_once('-')
+                .ok_or_else(|| anyhow::anyhow!("link target '{target_s}' must be 'A-B'"))?;
+            FaultTarget::NodePair(
+                a.parse().map_err(|_| anyhow::anyhow!("bad link endpoint '{a}'"))?,
+                b.parse().map_err(|_| anyhow::anyhow!("bad link endpoint '{b}'"))?,
+            )
+        } else {
+            FaultTarget::Index(
+                target_s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault target '{target_s}'"))?,
+            )
+        };
+        let sensor = match (kind, head_parts.next()) {
+            (FaultKind::Sensor, Some(mode)) => {
+                let (m, v) = mode
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("sensor mode '{mode}' must be NAME=VALUE"))?;
+                let val: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad sensor value '{v}'"))?;
+                match m {
+                    "stuck" => Some(SensorMode::StuckAt(val)),
+                    "drift" => Some(SensorMode::DriftPerMs(val)),
+                    other => anyhow::bail!("unknown sensor mode '{other}' (stuck or drift)"),
+                }
+            }
+            (FaultKind::Sensor, None) => {
+                anyhow::bail!("sensor fault '{tok}' needs a mode (stuck=C or drift=C_PER_MS)")
+            }
+            (_, Some(extra)) => anyhow::bail!("unexpected ':{extra}' in fault '{tok}'"),
+            (_, None) => None,
+        };
+        // Schedule: T[+D][%P[*K]]
+        let (t_s, tail) = match sched.find(['+', '%']) {
+            Some(i) => (&sched[..i], Some(&sched[i..])),
+            None => (sched, None),
+        };
+        let at_ns = parse_time_ns(t_s)?;
+        let (mut repair_ns, mut period_ns, mut repeats) = (None, None, 1u32);
+        if let Some(tail) = tail {
+            let (d_s, p_s) = if let Some(rest) = tail.strip_prefix('+') {
+                match rest.split_once('%') {
+                    Some((d, p)) => (Some(d), Some(p)),
+                    None => (Some(rest), None),
+                }
+            } else {
+                (None, tail.strip_prefix('%'))
+            };
+            if let Some(d_s) = d_s {
+                repair_ns = Some(parse_time_ns(d_s)?);
+            }
+            if let Some(p_s) = p_s {
+                let (p, k) = match p_s.split_once('*') {
+                    Some((p, k)) => (
+                        p,
+                        k.parse::<u32>()
+                            .map_err(|_| anyhow::anyhow!("bad repeat count '{k}'"))?,
+                    ),
+                    None => (p_s, 16),
+                };
+                let p = parse_time_ns(p)?;
+                anyhow::ensure!(p > 0, "intermittent period must be > 0 in '{tok}'");
+                let d = repair_ns.unwrap_or(p / 2);
+                anyhow::ensure!(
+                    d < p,
+                    "intermittent down time {d} ns must be shorter than period {p} ns in '{tok}'"
+                );
+                repair_ns = Some(d);
+                period_ns = Some(p);
+                repeats = k.clamp(1, MAX_REPEATS);
+            }
+        }
+        Ok(FaultEvent { kind, target, at_ns, repair_ns, period_ns, repeats, sensor })
+    }
+
+    /// No events at all — arming is guaranteed to be a no-op.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Board-crash events only (executed by the fleet dispatcher).
+    pub fn board_events(&self) -> Vec<&FaultEvent> {
+        self.events.iter().filter(|e| e.kind == FaultKind::Board).collect()
+    }
+
+    /// Expand the plan into a sorted toggle timeline for one board-level
+    /// simulation.  Board events are skipped (the fleet executes those);
+    /// `?` targets resolve from the plan seed.  Never touches any run
+    /// RNG.  Targets are validated against `dims`.
+    pub fn arm(&self, dims: &FaultDims) -> anyhow::Result<Vec<FaultToggle>> {
+        let mut toggles = Vec::new();
+        let mut rng = Rng::new(self.seed ^ 0xFA17_70C6_1E5C_0DE5);
+        for (idx, ev) in self.events.iter().enumerate() {
+            if ev.kind == FaultKind::Board {
+                continue;
+            }
+            let domain = match ev.kind {
+                FaultKind::Link => dims.links,
+                FaultKind::Router => dims.nodes,
+                FaultKind::Chiplet | FaultKind::Sensor => dims.chiplets,
+                FaultKind::Board => unreachable!(),
+            };
+            anyhow::ensure!(domain > 0, "no {} targets exist in this system", ev.kind.name());
+            let target = match ev.target {
+                FaultTarget::Index(i) => {
+                    anyhow::ensure!(
+                        i < domain,
+                        "{} target {i} out of range (have {domain})",
+                        ev.kind.name()
+                    );
+                    FaultTarget::Index(i)
+                }
+                FaultTarget::NodePair(a, b) => {
+                    anyhow::ensure!(
+                        a < dims.nodes && b < dims.nodes && a != b,
+                        "link target {a}-{b} out of range (have {} nodes)",
+                        dims.nodes
+                    );
+                    FaultTarget::NodePair(a, b)
+                }
+                FaultTarget::Random => {
+                    // Deterministic in (plan seed, event index) only; a
+                    // random link resolves to a directed link index and
+                    // the executor fails its reverse half too.
+                    FaultTarget::Index((rng.next_u64() as usize) % domain)
+                }
+            };
+            for k in 0..ev.repeats.max(1) {
+                let start = ev.at_ns + ev.period_ns.unwrap_or(0) * k as u64;
+                toggles.push(FaultToggle {
+                    at_ns: start,
+                    kind: ev.kind,
+                    target,
+                    up: false,
+                    sensor: ev.sensor,
+                    event: idx,
+                });
+                if let Some(d) = ev.repair_ns {
+                    toggles.push(FaultToggle {
+                        at_ns: start + d,
+                        kind: ev.kind,
+                        target,
+                        up: true,
+                        sensor: ev.sensor,
+                        event: idx,
+                    });
+                }
+                if ev.period_ns.is_none() {
+                    break;
+                }
+            }
+        }
+        // Stable order: time, then declaration order, then down-before-up
+        // is impossible at equal times within one event (repair > 0 or
+        // equal, where up applies after down anyway via `up` ordering).
+        toggles.sort_by_key(|t| (t.at_ns, t.event, t.up));
+        Ok(toggles)
+    }
+
+    /// Expand the board-crash timeline (fleet side): `(at_ns, replica)`,
+    /// sorted.  Repair/intermittent schedules are rejected for boards —
+    /// a crashed board stays down (the autoscaler replaces capacity).
+    pub fn arm_boards(&self, replicas: usize) -> anyhow::Result<Vec<(TimeNs, usize)>> {
+        let mut rng = Rng::new(self.seed ^ 0xB0A2_DC2A_54C2_0DE5);
+        let mut out = Vec::new();
+        for ev in &self.events {
+            if ev.kind != FaultKind::Board {
+                continue;
+            }
+            anyhow::ensure!(
+                ev.repair_ns.is_none() && ev.period_ns.is_none(),
+                "board crashes are permanent (no '+D'/'%P' schedule)"
+            );
+            anyhow::ensure!(replicas > 0, "no board targets exist");
+            let id = match ev.target {
+                FaultTarget::Index(i) => {
+                    anyhow::ensure!(i < replicas, "board target {i} out of range ({replicas})");
+                    i
+                }
+                FaultTarget::Random => (rng.next_u64() as usize) % replicas,
+                FaultTarget::NodePair(..) => anyhow::bail!("board target must be an index"),
+            };
+            out.push((ev.at_ns, id));
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+}
+
+/// Target-domain sizes a plan is armed against.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultDims {
+    /// Directed NoI links.
+    pub links: usize,
+    /// NoI nodes (routers).
+    pub nodes: usize,
+    /// Compute chiplets (also the sensor count).
+    pub chiplets: usize,
+}
+
+/// One expanded state change: resource `target` goes down (`up ==
+/// false`) or is repaired (`up == true`) at `at_ns`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultToggle {
+    pub at_ns: TimeNs,
+    pub kind: FaultKind,
+    pub target: FaultTarget,
+    pub up: bool,
+    pub sensor: Option<SensorMode>,
+    /// Index of the originating [`FaultEvent`] (stable tie-break).
+    pub event: usize,
+}
+
+// --------------------------------------------------------------- downtime
+
+/// Per-resource downtime integrator feeding the availability metric.
+#[derive(Debug, Clone, Default)]
+pub struct DowntimeTracker {
+    /// Open outages: (kind, target) -> down-since.
+    open: Vec<((FaultKind, usize), TimeNs)>,
+    /// Closed outage time, summed.
+    accrued_ns: u64,
+}
+
+impl DowntimeTracker {
+    pub fn down(&mut self, kind: FaultKind, target: usize, now: TimeNs) {
+        if !self.open.iter().any(|(k, _)| *k == (kind, target)) {
+            self.open.push(((kind, target), now));
+        }
+    }
+
+    pub fn up(&mut self, kind: FaultKind, target: usize, now: TimeNs) {
+        if let Some(i) = self.open.iter().position(|(k, _)| *k == (kind, target)) {
+            let (_, since) = self.open.swap_remove(i);
+            self.accrued_ns += now.saturating_sub(since);
+        }
+    }
+
+    pub fn any_down(&self) -> bool {
+        !self.open.is_empty()
+    }
+
+    /// Total resource-downtime with open outages closed at `end_ns`.
+    pub fn total_ns(&self, end_ns: TimeNs) -> u64 {
+        self.accrued_ns
+            + self
+                .open
+                .iter()
+                .map(|(_, since)| end_ns.saturating_sub(*since))
+                .sum::<u64>()
+    }
+}
+
+// ------------------------------------------------------------------ report
+
+/// One executed state change in the report timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultTimelineEntry {
+    pub at_ns: TimeNs,
+    pub kind: &'static str,
+    pub target: usize,
+    /// `true` = repair/recovery, `false` = failure.
+    pub up: bool,
+}
+
+/// What the fault schedule did to a run.  Rides on
+/// `SimReport::fault`/`FleetReport::fault` only when the armed plan
+/// resolved to at least one toggle (zero-perturbation rule); excluded
+/// fields never reach a fingerprint unless the report itself is
+/// attached.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultReport {
+    /// Failure toggles executed.
+    pub injected: u64,
+    /// Repair toggles executed.
+    pub repairs: u64,
+    /// Flows re-injected over a rerouted path after a link/router loss.
+    pub reroutes: u64,
+    /// Flows that could not be rerouted (destination partitioned).
+    pub flow_fails: u64,
+    /// Requests aborted mid-flight (partition, chiplet kill, board crash).
+    pub aborts: u64,
+    /// Fleet-level retry dispatches of aborted requests.
+    pub retries: u64,
+    /// Aborted requests that later completed via retry.
+    pub recovered: u64,
+    /// Aborted requests dropped after retries/deadline were exhausted.
+    pub fault_dropped: u64,
+    /// Sensor overlays applied (stuck-at/drift arm events).
+    pub sensor_faults: u64,
+    /// Requests completed while at least one fault was active.
+    pub goodput_under_fault: u64,
+    /// `1 - Σ per-resource downtime / (faulted-resource count × span)`;
+    /// 1.0 when nothing was ever down.
+    pub availability: f64,
+    /// Executed failure/repair instants, time-ordered.
+    pub timeline: Vec<FaultTimelineEntry>,
+}
+
+impl FaultReport {
+    /// Fold availability from a downtime tracker over `span_ns`.
+    pub fn finish(&mut self, downtime: &DowntimeTracker, span_ns: TimeNs) {
+        let resources: std::collections::BTreeSet<(&'static str, usize)> = self
+            .timeline
+            .iter()
+            .filter(|e| !e.up)
+            .map(|e| (e.kind, e.target))
+            .collect();
+        self.availability = if resources.is_empty() || span_ns == 0 {
+            1.0
+        } else {
+            let cap = resources.len() as u64 * span_ns;
+            1.0 - (downtime.total_ns(span_ns).min(cap) as f64 / cap as f64)
+        };
+    }
+
+    /// Merge another report in (fleet aggregation over replicas).
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.injected += other.injected;
+        self.repairs += other.repairs;
+        self.reroutes += other.reroutes;
+        self.flow_fails += other.flow_fails;
+        self.aborts += other.aborts;
+        self.retries += other.retries;
+        self.recovered += other.recovered;
+        self.fault_dropped += other.fault_dropped;
+        self.sensor_faults += other.sensor_faults;
+        self.goodput_under_fault += other.goodput_under_fault;
+        self.timeline.extend(other.timeline.iter().copied());
+        self.timeline.sort_by_key(|e| (e.at_ns, e.kind, e.target, e.up));
+        // Availability does not merge linearly; the caller re-derives it
+        // (fleet keeps the min across replicas as the honest headline).
+        self.availability = self.availability.min(other.availability);
+    }
+
+    /// Stable digest: every counter plus an FNV fold of the timeline;
+    /// floats by bit pattern.
+    pub fn fingerprint(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut fold = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        };
+        for e in &self.timeline {
+            fold(e.at_ns);
+            fold(e.kind.len() as u64 ^ ((e.kind.as_bytes()[0] as u64) << 8));
+            fold(e.target as u64);
+            fold(e.up as u64);
+        }
+        format!(
+            "inj={};rep={};rr={};ff={};ab={};rt={};rec={};fd={};sf={};guf={};avail={:016x};tl={:016x}",
+            self.injected,
+            self.repairs,
+            self.reroutes,
+            self.flow_fails,
+            self.aborts,
+            self.retries,
+            self.recovered,
+            self.fault_dropped,
+            self.sensor_faults,
+            self.goodput_under_fault,
+            self.availability.to_bits(),
+            h,
+        )
+    }
+
+    /// Human-readable roll-up.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write;
+        let mut s = format!(
+            "faults: {} injected, {} repaired | availability {:.4} | \
+             {} rerouted, {} flow-failed, {} aborted | \
+             {} retries, {} recovered, {} dropped-by-fault | {} served under fault\n",
+            self.injected,
+            self.repairs,
+            self.availability,
+            self.reroutes,
+            self.flow_fails,
+            self.aborts,
+            self.retries,
+            self.recovered,
+            self.fault_dropped,
+            self.goodput_under_fault,
+        );
+        for e in &self.timeline {
+            let _ = writeln!(
+                s,
+                "  {} @{:.3} ms: {} {}",
+                if e.up { "repair" } else { "fail  " },
+                e.at_ns as f64 / 1e6,
+                e.kind,
+                e.target,
+            );
+        }
+        s
+    }
+
+    /// JSON document (`schema: chipsim-fault-v1`) gated by
+    /// `python/fault_check.py` in CI.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        let timeline: Vec<Value> = self
+            .timeline
+            .iter()
+            .map(|e| {
+                Value::obj(vec![
+                    ("at_ns", Value::from(e.at_ns)),
+                    ("kind", Value::from(e.kind)),
+                    ("target", Value::from(e.target as u64)),
+                    ("up", Value::from(e.up)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("schema", Value::from("chipsim-fault-v1")),
+            ("injected", Value::from(self.injected)),
+            ("repairs", Value::from(self.repairs)),
+            ("reroutes", Value::from(self.reroutes)),
+            ("flow_fails", Value::from(self.flow_fails)),
+            ("aborts", Value::from(self.aborts)),
+            ("retries", Value::from(self.retries)),
+            ("recovered", Value::from(self.recovered)),
+            ("fault_dropped", Value::from(self.fault_dropped)),
+            ("sensor_faults", Value::from(self.sensor_faults)),
+            ("goodput_under_fault", Value::from(self.goodput_under_fault)),
+            ("availability", Value::from(self.availability)),
+            ("timeline", Value::Arr(timeline)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let p = FaultPlan::parse(
+            "link:2-3@1ms, router:5@2ms+500us, chiplet:7@1ms+4ms, \
+             sensor:3:stuck=95@1ms; sensor:0:drift=0.5@0, board:1@5ms, \
+             seed=42, retry=5:100us:1ms:10ms, link:?@250us%500us*4",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.retry.max_attempts, 5);
+        assert_eq!(p.retry.backoff_ns, 100_000);
+        assert_eq!(p.retry.deadline_ns, 10_000_000);
+        assert_eq!(p.events.len(), 7);
+        assert_eq!(p.events[0].kind, FaultKind::Link);
+        assert_eq!(p.events[0].target, FaultTarget::NodePair(2, 3));
+        assert_eq!(p.events[0].at_ns, 1_000_000);
+        assert_eq!(p.events[0].repair_ns, None);
+        assert_eq!(p.events[1].repair_ns, Some(500_000));
+        assert_eq!(p.events[3].sensor, Some(SensorMode::StuckAt(95.0)));
+        assert_eq!(p.events[4].sensor, Some(SensorMode::DriftPerMs(0.5)));
+        assert_eq!(p.events[5].kind, FaultKind::Board);
+        let flap = &p.events[6];
+        assert_eq!(flap.target, FaultTarget::Random);
+        assert_eq!(flap.period_ns, Some(500_000));
+        assert_eq!(flap.repair_ns, Some(250_000), "default down time is period / 2");
+        assert_eq!(flap.repeats, 4);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "link:2-3",            // no schedule
+            "link:23@1ms",         // not a pair
+            "warp:1@1ms",          // unknown kind
+            "sensor:3@1ms",        // missing mode
+            "sensor:3:wobble=1@0", // unknown mode
+            "chiplet:x@1ms",       // bad index
+            "link:0-1@1ms%0",      // zero period
+            "link:0-1@0+2ms%1ms",  // down >= period
+            "board:0@1ms+2ms",     // board repair unsupported
+            "retry=1:2:3",         // short retry tuple
+        ] {
+            let r = FaultPlan::parse(bad).and_then(|p| {
+                p.arm_boards(4)?;
+                p.arm(&FaultDims { links: 10, nodes: 5, chiplets: 5 })
+            });
+            assert!(r.is_err(), "'{bad}' should not parse/arm");
+        }
+    }
+
+    #[test]
+    fn arming_is_deterministic_and_sorted() {
+        let dims = FaultDims { links: 24, nodes: 9, chiplets: 9 };
+        let p = FaultPlan::parse("link:?@1ms+200us%1ms*3, chiplet:?@500us, seed=7").unwrap();
+        let a = p.arm(&dims).unwrap();
+        let b = p.arm(&dims).unwrap();
+        assert_eq!(a, b, "same plan, same toggles");
+        assert_eq!(a.len(), 3 * 2 + 1);
+        assert!(a.windows(2).all(|w| w[0].at_ns <= w[1].at_ns), "sorted by time");
+        let q = FaultPlan::parse("link:?@1ms+200us%1ms*3, chiplet:?@500us, seed=8").unwrap();
+        assert_ne!(p.arm(&dims).unwrap(), q.arm(&dims).unwrap(), "seed moves random targets");
+    }
+
+    #[test]
+    fn arm_validates_targets() {
+        let dims = FaultDims { links: 4, nodes: 4, chiplets: 4 };
+        for bad in ["link:0-9@1ms", "router:4@0", "chiplet:17@0", "sensor:5:stuck=9@0"] {
+            assert!(FaultPlan::parse(bad).unwrap().arm(&dims).is_err(), "{bad}");
+        }
+        assert!(FaultPlan::parse("board:9@0").unwrap().arm_boards(4).is_err());
+        // Board events are invisible to board-level arming.
+        let p = FaultPlan::parse("board:1@5ms").unwrap();
+        assert!(p.arm(&dims).unwrap().is_empty());
+        assert_eq!(p.arm_boards(4).unwrap(), vec![(5_000_000, 1)]);
+    }
+
+    #[test]
+    fn retry_backoff_caps() {
+        let r = RetryPolicy { max_attempts: 9, backoff_ns: 100, backoff_cap_ns: 450, deadline_ns: 1 << 40 };
+        assert_eq!(r.backoff_for(1), 100);
+        assert_eq!(r.backoff_for(2), 200);
+        assert_eq!(r.backoff_for(3), 400);
+        assert_eq!(r.backoff_for(4), 450);
+        assert_eq!(r.backoff_for(63), 450);
+    }
+
+    #[test]
+    fn downtime_tracker_integrates_open_and_closed_outages() {
+        let mut d = DowntimeTracker::default();
+        d.down(FaultKind::Link, 3, 100);
+        d.down(FaultKind::Link, 3, 150); // re-down of an open outage: no-op
+        d.up(FaultKind::Link, 3, 300);
+        assert_eq!(d.total_ns(1_000), 200);
+        d.down(FaultKind::Chiplet, 0, 600);
+        assert!(d.any_down());
+        assert_eq!(d.total_ns(1_000), 200 + 400);
+        let mut r = FaultReport {
+            timeline: vec![
+                FaultTimelineEntry { at_ns: 100, kind: "link", target: 3, up: false },
+                FaultTimelineEntry { at_ns: 300, kind: "link", target: 3, up: true },
+                FaultTimelineEntry { at_ns: 600, kind: "chiplet", target: 0, up: false },
+            ],
+            ..FaultReport::default()
+        };
+        r.finish(&d, 1_000);
+        // Two faulted resources over a 1000 ns span, 600 ns down total.
+        assert!((r.availability - (1.0 - 600.0 / 2_000.0)).abs() < 1e-12);
+        let empty = FaultReport::default();
+        let mut e2 = empty.clone();
+        e2.finish(&DowntimeTracker::default(), 1_000);
+        assert_eq!(e2.availability, 1.0);
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let mut a = FaultReport::default();
+        a.injected = 2;
+        a.timeline.push(FaultTimelineEntry { at_ns: 5, kind: "link", target: 1, up: false });
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.timeline[0].up = true;
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

@@ -67,9 +67,12 @@ pub use routing::{
     parse_routing, LeastOutstanding, RoundRobin, RoutingPolicy, SessionAffinity, ThermalAware,
 };
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Mutex;
 
+use crate::fault::{
+    DowntimeTracker, FaultKind, FaultPlan, FaultReport, FaultTimelineEntry, RetryPolicy,
+};
 use crate::serving::engine::WindowRoller;
 use crate::serving::{ServingStats, StreamingSource, TrafficSpec, WindowSummary};
 use crate::sim::{
@@ -105,6 +108,11 @@ pub struct FleetSpec {
     /// Worker threads for the parallel advance (0 = available
     /// parallelism).  Does not affect results, only wall clock.
     pub threads: usize,
+    /// Fault-injection plan.  `board:` events crash replicas at the
+    /// dispatcher level (queued work migrates, in-flight work retries
+    /// under the plan's [`RetryPolicy`]); every other kind is armed
+    /// identically on each replica board.
+    pub faults: Option<FaultPlan>,
 }
 
 impl FleetSpec {
@@ -117,7 +125,13 @@ impl FleetSpec {
             cold_start_ns: 5_000_000, // 5 ms to load weights
             emergency_c: None,
             threads: 0,
+            faults: None,
         }
+    }
+
+    pub fn faults(mut self, plan: Option<FaultPlan>) -> FleetSpec {
+        self.faults = plan;
+        self
     }
 
     pub fn max_replicas(mut self, n: usize) -> FleetSpec {
@@ -299,6 +313,9 @@ struct Replica {
     ready_at: TimeNs,
     /// Scaled down: drains in-flight work, accepts nothing new.
     retiring: bool,
+    /// Crashed by a board fault (scheduled or worker panic): stopped
+    /// for good, excluded from autoscaler capacity counts.
+    crashed: bool,
     routed: u64,
     migrated_out: u64,
     util_timeline: Vec<(TimeNs, f64)>,
@@ -401,6 +418,12 @@ impl Fleet {
 
         let mut spawn = |id: usize, ready_at: TimeNs| -> anyhow::Result<Replica> {
             let mut sim = make_sim()?;
+            // Board-level fault kinds (link/router/chiplet/sensor) arm
+            // identically on every replica; `board:` events are skipped
+            // by the sim and executed here by the dispatcher.
+            if spec.faults.is_some() {
+                sim.set_fault_plan(spec.faults.clone());
+            }
             if let Some(cfg) = trace_cfg.as_ref() {
                 let rec = TraceRecorder::new(cfg.clone()).with_pid_base(id as u32 * PID_STRIDE);
                 tracers.push(sim.set_tracer(handle(rec)));
@@ -417,6 +440,7 @@ impl Fleet {
                 status: RunStatus::Idle,
                 ready_at,
                 retiring: false,
+                crashed: false,
                 routed: 0,
                 migrated_out: 0,
                 util_timeline: Vec::new(),
@@ -435,14 +459,93 @@ impl Fleet {
         let mut barrier: TimeNs = 0;
         let mut until: TimeNs = epoch;
 
+        // Scheduled board crashes (sorted), the retry policy they run
+        // under, and the dispatcher-side fault runtime.  The runtime is
+        // created lazily on the first actual crash, so an armed plan
+        // with no board events (and no worker panic) leaves the run —
+        // and its fingerprint — untouched.
+        let retry_policy = spec.faults.as_ref().map(|p| p.retry).unwrap_or_default();
+        let mut board_crashes: VecDeque<(TimeNs, usize)> = match &spec.faults {
+            Some(plan) if !plan.is_empty() => plan.arm_boards(spec.replicas)?.into(),
+            _ => VecDeque::new(),
+        };
+        let mut fault_rt: Option<FleetFaultRt> = None;
+        let mut pending_crashes: Vec<usize> = Vec::new();
+        if let Some(&(at, _)) = board_crashes.front() {
+            if at > 0 {
+                // Land a barrier exactly on the crash instant.
+                until = until.min(at);
+            }
+        }
+
         loop {
             // ---- barrier: all control decisions on frozen state ----
             // Self-profiling splits each epoch into the single-threaded
             // control section (dispatch) and the parallel advance, the
             // two numbers Amdahl's law cares about.
             let prof_dispatch = crate::prof::scope(crate::prof::Subsystem::FleetDispatch);
+
+            // ---- board crashes due at this barrier ----
+            // Scheduled crashes join panic-crashed boards from the last
+            // advance; both take the same path: stop the board, queue
+            // its in-flight requests for retry, and (below, once the
+            // snapshot exists) migrate its backlog to the survivors.
+            while let Some(&(at, id)) = board_crashes.front() {
+                if at > barrier {
+                    break;
+                }
+                board_crashes.pop_front();
+                pending_crashes.push(id);
+            }
+            let mut crashed_now: Vec<usize> = Vec::new();
+            for id in std::mem::take(&mut pending_crashes) {
+                if replicas[id].crashed {
+                    continue;
+                }
+                replicas[id].crashed = true;
+                replicas[id].status = RunStatus::Stopped;
+                let rt = fault_rt.get_or_insert_with(FleetFaultRt::default);
+                rt.report.injected += 1;
+                rt.report.timeline.push(FaultTimelineEntry {
+                    at_ns: barrier,
+                    kind: "board",
+                    target: id,
+                    up: false,
+                });
+                rt.downtime.down(FaultKind::Board, id, barrier);
+                // Best-effort on a panicked board: its session may be
+                // mid-mutation, so a second panic means no requests are
+                // recoverable from it (they count dropped, not lost).
+                let aborted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    replicas[id].session.take_unfinished_requests()
+                }))
+                .unwrap_or_default();
+                rt.report.aborts += aborted.len() as u64;
+                for req in aborted {
+                    rt.schedule_retry(req, barrier, &retry_policy);
+                }
+                rt.sort_queue();
+                crashed_now.push(id);
+            }
+
             let mut snaps: Vec<ReplicaSnapshot> =
                 replicas.iter().map(|r| r.snapshot(barrier)).collect();
+
+            // Queued (not yet in-flight) work leaves a crashed board via
+            // the same migration path emergencies use; if nobody accepts
+            // right now, it joins the retry queue instead of stranding
+            // on the dead board.
+            for id in crashed_now.drain(..) {
+                migrations += migrate_out(&mut replicas, id, routing.as_mut(), &mut snaps);
+                let leftover = replicas[id].source.drain();
+                if !leftover.is_empty() {
+                    let rt = fault_rt.as_mut().expect("crash created fault runtime");
+                    for req in leftover {
+                        rt.retryq.push((barrier, 0, req));
+                    }
+                    rt.sort_queue();
+                }
+            }
 
             // Thermal emergency: stop routing to tripped boards and move
             // their queued (not yet in-flight) work to the survivors.
@@ -462,7 +565,7 @@ impl Fleet {
 
             // Autoscale against the same frozen state.
             if let Some(scaler) = autoscaler.as_mut() {
-                let current = replicas.iter().filter(|r| !r.retiring).count();
+                let current = replicas.iter().filter(|r| !r.retiring && !r.crashed).count();
                 let desired = scaler
                     .desired(barrier, &snaps, current, max_replicas)
                     .clamp(1, max_replicas);
@@ -477,7 +580,7 @@ impl Fleet {
                 // Retire highest-index boards first; their queued work
                 // migrates to the survivors, in-flight work drains.
                 for _ in desired..current {
-                    if let Some(id) = replicas.iter().rposition(|r| !r.retiring) {
+                    if let Some(id) = replicas.iter().rposition(|r| !r.retiring && !r.crashed) {
                         replicas[id].retiring = true;
                         snaps[id].accepting = false;
                         migrations +=
@@ -493,14 +596,39 @@ impl Fleet {
             let mut accepting: Vec<ReplicaSnapshot> =
                 snaps.iter().filter(|s| s.accepting).copied().collect();
             if accepting.is_empty() {
+                let all_stopped =
+                    replicas.iter().all(|r| matches!(r.status, RunStatus::Stopped));
+                if all_stopped && replicas.iter().all(|r| r.crashed) {
+                    // Every board crashed: nothing will ever accept
+                    // again.  Retry-queue survivors count dropped (they
+                    // were offered); un-pulled arrivals were never
+                    // offered, so conservation still holds.
+                    if let Some(rt) = fault_rt.as_mut() {
+                        rt.drop_all();
+                    }
+                    break;
+                }
                 anyhow::ensure!(
-                    global.peek_arrival_ns().is_none()
-                        || !replicas
-                            .iter()
-                            .all(|r| matches!(r.status, RunStatus::Stopped)),
+                    global.peek_arrival_ns().is_none() || !all_stopped,
                     "all replicas stopped (max_sim_time?) with arrivals pending"
                 );
             } else {
+                // Retry-queue requests first (they are the oldest), then
+                // the epoch's fresh arrivals.
+                if let Some(rt) = fault_rt.as_mut() {
+                    while rt.retryq.first().is_some_and(|e| e.0 <= until) {
+                        let (_, attempt, req) = rt.retryq.remove(0);
+                        if attempt > 0 {
+                            rt.report.retries += 1;
+                        }
+                        let j = routing.route(&req, &accepting);
+                        let id = accepting[j].id;
+                        accepting[j].outstanding += 1;
+                        snaps[id].outstanding += 1;
+                        replicas[id].routed += 1;
+                        replicas[id].source.push(req);
+                    }
+                }
                 while let Some(t) = global.peek_arrival_ns() {
                     if t > until {
                         break;
@@ -533,11 +661,10 @@ impl Fleet {
             });
             drop(cells);
             drop(prof_advance);
-            for (i, slot) in results.into_iter().enumerate() {
-                let status = slot
-                    .map_err(|p| anyhow::anyhow!("replica {i} panicked: {p}"))?
-                    .map_err(|e| anyhow::anyhow!("replica {i} failed: {e}"))?;
-                replicas[i].status = status;
+            let mut statuses: Vec<RunStatus> = replicas.iter().map(|r| r.status).collect();
+            apply_advance_results(results, &mut statuses, &mut pending_crashes)?;
+            for (r, s) in replicas.iter_mut().zip(statuses) {
+                r.status = s;
             }
             epochs += 1;
             for r in replicas.iter_mut() {
@@ -554,7 +681,8 @@ impl Fleet {
                 RunStatus::Idle => r.source.is_empty(),
                 RunStatus::Paused { .. } => false,
             });
-            if exhausted && drained {
+            let retries_pending = fault_rt.as_ref().is_some_and(|rt| !rt.retryq.is_empty());
+            if exhausted && drained && !retries_pending && pending_crashes.is_empty() {
                 break;
             }
             let mut wake = global.peek_arrival_ns().unwrap_or(TimeNs::MAX);
@@ -566,6 +694,11 @@ impl Fleet {
                     wake = wake.min(r.ready_at);
                 }
             }
+            if let Some(rt) = fault_rt.as_ref() {
+                if let Some(e) = rt.retryq.first() {
+                    wake = wake.min(e.0);
+                }
+            }
             barrier = until;
             until = if wake != TimeNs::MAX && wake > until {
                 // Next epoch boundary at or after the wake time.
@@ -573,12 +706,33 @@ impl Fleet {
             } else {
                 until + epoch
             };
+            if let Some(&(at, _)) = board_crashes.front() {
+                if at > barrier {
+                    // Land a barrier exactly on the next crash instant.
+                    until = until.min(at);
+                }
+            }
         }
 
         // ---- aggregate ----
         let offered = global.emitted();
+        let span_ns = replicas.iter().map(|r| r.session.now()).max().unwrap_or(0);
+        // Dispatcher-level fault accounting first: recovered/availability
+        // close out against the whole-run span, and dispatcher-dropped
+        // requests join the global drop count (they never reached a
+        // board's sink).  Per-replica sim-level fault reports merge in
+        // below as each board is folded up.
+        let mut fleet_dropped = 0;
+        let mut fault: Option<FaultReport> = fault_rt.map(|mut rt| {
+            rt.report.recovered =
+                (rt.attempts.len() as u64).saturating_sub(rt.dropped_in_flight);
+            rt.report.finish(&rt.downtime, span_ns);
+            fleet_dropped = rt.report.fault_dropped;
+            rt.report
+        });
         let mut global_stats =
             ServingStats::new(spec.traffic.slo_ns, spec.traffic.warmup_ns);
+        global_stats.dropped += fleet_dropped;
         let mut global_breakdown = BreakdownStats::new();
         let mut reports = Vec::with_capacity(replicas.len());
         for r in replicas {
@@ -591,6 +745,7 @@ impl Fleet {
                 status: _,
                 ready_at,
                 retiring,
+                crashed,
                 routed,
                 migrated_out,
                 util_timeline,
@@ -601,12 +756,19 @@ impl Fleet {
             let (stats, breakdown, windows) = sink.into_parts(&mut sim_report);
             global_stats.merge(&stats);
             global_breakdown.merge(&breakdown);
+            if let Some(rf) = &sim_report.fault {
+                match &mut fault {
+                    Some(total) => total.merge(rf),
+                    None => fault = Some(rf.clone()),
+                }
+            }
             reports.push(ReplicaReport {
                 id,
                 routed,
                 migrated_out,
                 ready_at,
                 retired: retiring,
+                crashed,
                 stats,
                 breakdown,
                 windows,
@@ -623,11 +785,91 @@ impl Fleet {
             scale_events,
             global: global_stats,
             breakdown: global_breakdown,
+            fault,
             replicas: reports,
             // Host-timing data only; never part of the fingerprint.
             profile: crate::prof::snapshot(prof_start.elapsed().as_nanos() as u64),
         })
     }
+}
+
+// ------------------------------------------------------------------ faults
+
+/// Dispatcher-side fault state: the fleet [`FaultReport`] under
+/// construction, per-board downtime, and the retry queue of requests
+/// aborted by a board crash.  Created lazily on the first crash so a
+/// fault-free run carries no fault state at all.
+#[derive(Default)]
+struct FleetFaultRt {
+    report: FaultReport,
+    downtime: DowntimeTracker,
+    /// Times each request id has been aborted so far (drives backoff
+    /// and the attempt cap).
+    attempts: BTreeMap<usize, u32>,
+    /// Aborted requests counted into `fault_dropped` (vs. queued-work
+    /// re-dispatches, which carry no attempt and no deadline).
+    dropped_in_flight: u64,
+    /// `(retry_at, attempt, request)`, sorted by `(retry_at, id)`.
+    retryq: Vec<(TimeNs, u32, ModelRequest)>,
+}
+
+impl FleetFaultRt {
+    /// Queue one aborted in-flight request for retry under `policy`, or
+    /// count it dropped when its attempts or deadline are exhausted.
+    fn schedule_retry(&mut self, req: ModelRequest, now: TimeNs, policy: &RetryPolicy) {
+        let a = self.attempts.entry(req.id).or_insert(0);
+        *a += 1;
+        let attempt = *a;
+        let retry_at = now.saturating_add(policy.backoff_for(attempt));
+        if attempt > policy.max_attempts
+            || retry_at > req.arrival_ns.saturating_add(policy.deadline_ns)
+        {
+            self.report.fault_dropped += 1;
+            self.dropped_in_flight += 1;
+        } else {
+            self.retryq.push((retry_at, attempt, req));
+        }
+    }
+
+    fn sort_queue(&mut self) {
+        self.retryq.sort_by_key(|(at, _, r)| (*at, r.id));
+    }
+
+    /// Nothing will ever accept again: everything still queued counts
+    /// dropped-by-fault.
+    fn drop_all(&mut self) {
+        for (_, attempt, _) in self.retryq.drain(..) {
+            self.report.fault_dropped += 1;
+            if attempt > 0 {
+                self.dropped_in_flight += 1;
+            }
+        }
+    }
+}
+
+/// Fold the parallel-advance results back onto the boards.  A clean
+/// error fails the run; a worker *panic* fails only that replica — it
+/// is recorded as a board crash and fed through the same migrate/retry
+/// path a scheduled `board:` fault takes at the next barrier.
+fn apply_advance_results(
+    results: Vec<Result<Result<RunStatus, String>, String>>,
+    statuses: &mut [RunStatus],
+    pending_crashes: &mut Vec<usize>,
+) -> anyhow::Result<()> {
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot {
+            Ok(Ok(status)) => statuses[i] = status,
+            Ok(Err(e)) => anyhow::bail!("replica {i} failed: {e}"),
+            Err(panic) => {
+                crate::warn_once!(
+                    "replica {i} panicked during advance (treated as board crash): {panic}"
+                );
+                statuses[i] = RunStatus::Stopped;
+                pending_crashes.push(i);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Move a replica's queued work — its dispatcher buffer plus the board's
@@ -683,6 +925,8 @@ pub struct ReplicaReport {
     pub ready_at: TimeNs,
     /// Scaled down before the run ended.
     pub retired: bool,
+    /// Crashed by a board fault or worker panic before the run ended.
+    pub crashed: bool,
     /// Post-warm-up serving stats for requests served *by this board*.
     pub stats: ServingStats,
     /// Per-component latency breakdown for requests served by this board
@@ -715,6 +959,10 @@ pub struct FleetReport {
     /// traced with breakdowns on — excluded from
     /// [`fingerprint`](Self::fingerprint)).
     pub breakdown: BreakdownStats,
+    /// Fault accounting: dispatcher-level board crashes merged with
+    /// every replica's board-level fault report.  `None` when no fault
+    /// ever fired (zero-perturbation rule).
+    pub fault: Option<FaultReport>,
     pub replicas: Vec<ReplicaReport>,
     /// Fleet-level self-profile (dispatch vs parallel-advance split,
     /// worker utilization) when [`crate::prof`] collection is enabled.
@@ -766,6 +1014,9 @@ impl FleetReport {
             st.violation_frac() * 100.0,
             st.goodput_rps(),
         );
+        if let Some(f) = &self.fault {
+            s.push_str(&f.summary());
+        }
         for r in &self.replicas {
             let peak_c = r
                 .temp_timeline
@@ -799,6 +1050,9 @@ impl FleetReport {
             if r.retired {
                 s.push_str(", retired");
             }
+            if r.crashed {
+                s.push_str(", crashed");
+            }
             s.push('\n');
         }
         for e in &self.scale_events {
@@ -831,6 +1085,9 @@ impl FleetReport {
         );
         for e in &self.scale_events {
             let _ = write!(s, ";scale@{}:{}->{}", e.at_ns, e.from, e.to);
+        }
+        if let Some(f) = &self.fault {
+            let _ = write!(s, ";fault[{}]", f.fingerprint());
         }
         for r in &self.replicas {
             let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -885,6 +1142,61 @@ mod tests {
         let order: Vec<usize> =
             std::iter::from_fn(|| src.next_request()).map(|r| r.id).collect();
         assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn worker_panic_fails_only_that_replica() {
+        // A panic slot becomes a board crash for that replica alone;
+        // the healthy boards keep their advance results.
+        let mut statuses =
+            vec![RunStatus::Idle, RunStatus::Idle, RunStatus::Paused { next_event_ns: 7 }];
+        let mut pending = Vec::new();
+        let results = vec![
+            Ok(Ok(RunStatus::Idle)),
+            Err("index out of bounds".to_string()),
+            Ok(Ok(RunStatus::Paused { next_event_ns: 9 })),
+        ];
+        apply_advance_results(results, &mut statuses, &mut pending).unwrap();
+        assert!(matches!(statuses[0], RunStatus::Idle));
+        assert!(matches!(statuses[1], RunStatus::Stopped));
+        assert!(matches!(statuses[2], RunStatus::Paused { next_event_ns: 9 }));
+        assert_eq!(pending, vec![1]);
+        // A clean error (bad config, not a panic) still fails the run.
+        let results = vec![Ok(Err("bad hardware".to_string()))];
+        assert!(apply_advance_results(results, &mut statuses, &mut pending).is_err());
+    }
+
+    #[test]
+    fn retry_scheduling_respects_attempts_and_deadline() {
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            backoff_ns: 100,
+            backoff_cap_ns: 1_000,
+            deadline_ns: 10_000,
+        };
+        let req = |id: usize| ModelRequest {
+            id,
+            kind: ModelKind::AlexNet,
+            arrival_ns: 0,
+            inferences: 1,
+            tenant: 0,
+        };
+        let mut rt = FleetFaultRt::default();
+        rt.schedule_retry(req(1), 500, &policy);
+        assert_eq!(rt.retryq.len(), 1);
+        assert_eq!(rt.retryq[0].0, 600, "first retry after one backoff step");
+        // Second abort doubles the backoff; third exhausts max_attempts.
+        rt.retryq.clear();
+        rt.schedule_retry(req(1), 1_000, &policy);
+        assert_eq!(rt.retryq[0].0, 1_200);
+        rt.retryq.clear();
+        rt.schedule_retry(req(1), 2_000, &policy);
+        assert!(rt.retryq.is_empty());
+        assert_eq!(rt.report.fault_dropped, 1);
+        // Past the per-request deadline: dropped even on attempt 1.
+        rt.schedule_retry(req(2), 50_000, &policy);
+        assert_eq!(rt.report.fault_dropped, 2);
+        assert_eq!(rt.dropped_in_flight, 2);
     }
 
     #[test]

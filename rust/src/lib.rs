@@ -70,6 +70,7 @@
 
 pub mod util;
 pub mod config;
+pub mod fault;
 pub mod workload;
 pub mod mapping;
 pub mod noc;
@@ -104,6 +105,7 @@ pub mod prelude {
     pub use crate::dtm::{
         DtmReport, DvfsState, DvfsTable, Governor, GovernorPolicy, GovernorSpec, SensorSpec,
     };
+    pub use crate::fault::{FaultKind, FaultPlan, FaultReport, RetryPolicy};
     pub use crate::fleet::{
         Autoscaler, Fleet, FleetReport, FleetSpec, ReplicaSnapshot, RoutingPolicy, ScaleEvent,
     };

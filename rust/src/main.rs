@@ -8,6 +8,7 @@
 //!   fleet        fleet-scale serving: N replica boards behind one dispatcher
 //!   trace        flight-recorder run of a named scenario -> Perfetto JSON
 //!   profile      self-profiling run of a named scenario -> subsystem wall-clock shares
+//!   faults       fault-injection reference: model table, plan grammar, plan validation
 //!   scenarios    list the named presets in the scenario registry
 //!   batch        run a batch of registry scenarios (threaded SweepRunner)
 //!   sweep        DSE grid sweep (topology x link width x pipelining) -> CSV
@@ -34,6 +35,10 @@
 //!   chipsim traffic --scenario traffic-poisson-mesh --trace --trace-filter request,noi
 //!   chipsim profile --scenario fleet-least-outstanding # results/profile_<name>.json
 //!   chipsim traffic --scenario traffic-poisson-mesh --profile
+//!   chipsim traffic --scenario fault-chiplet-kill --faults-out results/fault.json
+//!   chipsim traffic --rows 6 --cols 6 --faults "link:14-15@4ms+1ms%4ms*3"
+//!   chipsim fleet --scenario fault-fleet-board-crash --seed 7
+//!   chipsim faults --plan "chiplet:7@3ms+6ms" --rows 6 --cols 6  # validate a plan
 //!   chipsim batch --scenarios mesh-10x10-cnn,hetero-mesh,floret --threads 4
 //!   chipsim fig9                 # power -> thermal heatmap via PJRT AOT
 //!   chipsim table7               # hardware-validation comparison
@@ -51,7 +56,7 @@ fn help() -> HelpText {
     HelpText {
         name: "chipsim",
         about: "co-simulation framework for DNNs on chiplet-based systems",
-        usage: "chipsim <run|traffic|mix|dtm|fleet|trace|profile|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
+        usage: "chipsim <run|traffic|mix|dtm|fleet|trace|profile|faults|scenarios|batch|sweep|table4|fig6|fig7|table5|table6|fig8|fig9|fig10|fig11|table7|table8|all|artifacts> [options]",
         entries: vec![
             ("--rows N / --cols N", "chiplet grid (default 10x10)"),
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
@@ -96,6 +101,8 @@ fn help() -> HelpText {
             ("trace --scenario NAME", "run any preset fully traced; also prints the breakdown"),
             ("--profile", "traffic/mix/fleet/batch: self-profile the simulator itself"),
             ("--profile-out FILE.json", "profile output path (default results/profile_<name>.json)"),
+            ("--faults PLAN", "traffic/mix/fleet: arm a fault plan (grammar: `chipsim faults`)"),
+            ("--faults-out FILE.json", "write the run's FaultReport JSON (needs an armed plan)"),
             ("profile --scenario NAME", "run any preset self-profiled; writes JSON + .collapsed"),
         ],
     }
@@ -236,6 +243,37 @@ fn finish_profile(
     write_profile(attached.or(fallback.as_ref()), args.get("profile-out"), default_name)
 }
 
+/// `--faults PLAN` on the serving subcommands.  On a scenario run the
+/// CLI plan *replaces* the scenario's built-in one (same seam the other
+/// CLI-over-preset knobs use).
+fn parse_faults(args: &Args) -> anyhow::Result<Option<chipsim::fault::FaultPlan>> {
+    match args.get("faults") {
+        None => Ok(None),
+        Some(spec) => chipsim::fault::FaultPlan::parse(spec)
+            .map(Some)
+            .map_err(|e| anyhow::anyhow!("--faults: {e:#} (`chipsim faults` has the grammar)")),
+    }
+}
+
+/// `--faults-out FILE.json`: write the run's [`FaultReport`] JSON.  A
+/// run without a fired fault has no report — that is an error, not a
+/// silent no-op, so CI gates can't pass vacuously.
+fn write_fault_report(
+    args: &Args,
+    fault: Option<&chipsim::fault::FaultReport>,
+) -> anyhow::Result<()> {
+    let Some(path) = args.get("faults-out") else { return Ok(()) };
+    let f = fault.ok_or_else(|| {
+        anyhow::anyhow!(
+            "--faults-out: the run produced no FaultReport (arm a plan with --faults \
+             or a fault-* scenario whose events fire inside the horizon)"
+        )
+    })?;
+    std::fs::write(path, chipsim::util::json::to_string_pretty(&f.to_json()))?;
+    println!("fault report written to {path}");
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let report = if let Some(name) = args.get("scenario") {
         // A scenario bundles hardware + params + workload; flags that
@@ -307,7 +345,7 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     let prof_started = std::time::Instant::now();
     let reg = Registry::builtin();
     type SimFactory = Box<dyn Fn() -> anyhow::Result<Simulation>>;
-    let (spec, seed, make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
+    let (spec, seed, mut make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
         args.get("scenario")
     {
         let sc = reg.get(name).ok_or_else(|| {
@@ -373,11 +411,25 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     } else {
         spec
     };
+    // --faults on a scenario replaces its built-in plan (the factory
+    // wrap runs after `sc.build()` armed the preset's plan).
+    if let Some(plan) = parse_faults(args)? {
+        let inner = make_sim;
+        make_sim = Box::new(move || {
+            let mut sim = inner()?;
+            sim.set_fault_plan(Some(plan.clone()));
+            Ok(sim)
+        });
+    }
     let trace_cfg = build_trace(args)?;
     if args.flag("sweep") {
         anyhow::ensure!(
             trace_cfg.is_none(),
             "--trace does not combine with --sweep (trace a single run)"
+        );
+        anyhow::ensure!(
+            args.get("faults-out").is_none(),
+            "--faults-out does not combine with --sweep (write a single run's report)"
         );
         let lo = args.get_f64("lo", 500.0)?;
         let hi = args.get_f64("hi", 10_000.0)?;
@@ -407,6 +459,7 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     let tracer = trace_cfg.map(|cfg| sim.set_trace(cfg));
     let report = sim.run_traffic_with(&spec, seed)?;
     print!("{}", report.summary());
+    write_fault_report(args, report.sim.fault.as_ref())?;
     finish_profile(
         args,
         profiling,
@@ -527,6 +580,12 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
     };
     let interference = sweep || mix.interference;
     let mix = mix.interference(interference);
+    // Boards are assembled from the scenario's parts here (not
+    // `sc.build()`), so a preset-carried plan needs an explicit pickup;
+    // --faults replaces it.
+    let cli_faults = parse_faults(args)?.or_else(|| {
+        args.get("scenario").and_then(|n| reg.get(n)).and_then(|sc| sc.fault_plan().cloned())
+    });
     let trace_cfg = build_trace(args)?;
     // Only the first board built — the co-located pass — records; solo
     // interference baselines run untraced (they would otherwise reset
@@ -540,6 +599,11 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
                 .params(params.clone())
                 .thermal(thermal.clone())
                 .build()?;
+            // Solo interference baselines share the plan: the matrix
+            // compares tenants under the *same* fault schedule.
+            if let Some(plan) = &cli_faults {
+                sim.set_fault_plan(Some(plan.clone()));
+            }
             if let Some(cfg) = &trace_cfg {
                 let mut slot = tracer.borrow_mut();
                 if slot.is_none() {
@@ -552,6 +616,7 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
         seed,
     )?;
     print!("{}", report.summary());
+    write_fault_report(args, report.sim.fault.as_ref())?;
     if let Some(h) = tracer.into_inner() {
         let rec = h.lock().expect("trace lock");
         let name = format!("trace_{}.json", args.get("scenario").unwrap_or("mix"));
@@ -801,12 +866,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         None => p.and_then(|p| p.emergency_c),
     };
     let threads = args.get_usize("threads", 0)?;
+    // --faults replaces a scenario's built-in plan; either way the plan
+    // reaches both the dispatcher (board: events, retry policy) and —
+    // via the spawn seam — every replica's simulation.
+    let faults = parse_faults(args)?.or_else(|| {
+        args.get("scenario").and_then(|n| reg.get(n)).and_then(|sc| sc.fault_plan().cloned())
+    });
     let fleet_spec = |traffic: TrafficSpec| {
         let mut fs = FleetSpec::new(traffic, replicas)
             .max_replicas(max_replicas)
             .epoch_us(epoch_us)
             .cold_start_ms(cold_ms)
-            .threads(threads);
+            .threads(threads)
+            .faults(faults.clone());
         if let Some(c) = emergency {
             fs = fs.emergency_c(c);
         }
@@ -833,6 +905,10 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(
         sweep_kind.is_none() || trace_cfg.is_none(),
         "--trace does not combine with --sweep (trace a single run)"
+    );
+    anyhow::ensure!(
+        sweep_kind.is_none() || args.get("faults-out").is_none(),
+        "--faults-out does not combine with --sweep (write a single run's report)"
     );
     // Profile attached to the single-run report; sweeps fall back to a
     // snapshot over the whole subcommand (all probes share one
@@ -890,6 +966,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             let mut fleet = build_fleet(spec, &routing_name)?;
             let report = fleet.run(seed)?;
             print!("{}", report.summary());
+            write_fault_report(args, report.fault.as_ref())?;
             attached = report.profile.clone();
             if !fleet.tracers().is_empty() {
                 let recs: Vec<_> = fleet
@@ -952,6 +1029,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         fs.epoch_ns = p.epoch_ns;
         fs.cold_start_ns = p.cold_start_ns;
         fs.emergency_c = p.emergency_c;
+        fs.faults = sc.fault_plan().cloned();
         let sc = sc.clone();
         let mut fleet = Fleet::new(fs, move || sc.build(), parse_routing(p.routing)?)
             .autoscaler(parse_autoscaler(p.autoscale)?)
@@ -1035,6 +1113,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         fs.epoch_ns = p.epoch_ns;
         fs.cold_start_ns = p.cold_start_ns;
         fs.emergency_c = p.emergency_c;
+        fs.faults = sc.fault_plan().cloned();
         let sc = sc.clone();
         let mut fleet = Fleet::new(fs, move || sc.build(), parse_routing(p.routing)?)
             .autoscaler(parse_autoscaler(p.autoscale)?);
@@ -1077,7 +1156,8 @@ fn cmd_scenarios() {
         } else {
             ""
         };
-        println!("  {:<22} {tag}{}", sc.name, sc.about);
+        let ftag = if sc.fault_plan().is_some() { "[faults] " } else { "" };
+        println!("  {:<22} {tag}{ftag}{}", sc.name, sc.about);
     }
     println!(
         "\nrun one:     chipsim run --scenario NAME [--seed S]\
@@ -1087,6 +1167,94 @@ fn cmd_scenarios() {
          \nrun a batch: chipsim batch [--scenarios a,b,c|all] [--threads N] [--seed S]\
          \nprofile one: chipsim profile --scenario NAME [--profile-out FILE.json]"
     );
+}
+
+/// Fault-injection reference and plan validator.  Without `--plan` it
+/// prints the fault model and grammar; with `--plan SPEC` it parses the
+/// plan, arms it against a hardware shape (`--rows/--cols/--topo`,
+/// default 10x10 mesh), and prints the expanded toggle schedule — the
+/// same expansion a run would execute, minus the run.
+fn cmd_faults(args: &Args) -> anyhow::Result<()> {
+    use chipsim::fault::{FaultDims, FaultPlan};
+    use chipsim::noc::topology::Topology;
+    let spec = args
+        .get("plan")
+        .map(str::to_string)
+        .or_else(|| args.positionals.get(1).cloned());
+    let Some(spec) = spec else {
+        println!(
+            "fault model (deterministic, seeded — same seed + same plan => \
+             byte-identical FaultReport):\n\
+             \n  kind     target         effect\
+             \n  link     A-B or ?       undirected NoI link down: flows reroute or fail\
+             \n  router   node index     every link touching the node goes down\
+             \n  chiplet  chiplet index  mapper excludes it; in-flight segments abort\
+             \n  sensor   chiplet index  stuck-at/drift readings feed the DTM governor\
+             \n  board    replica index  fleet dispatcher crashes the whole board\n\
+             \nplan grammar (events separated by ',' or ';'):\
+             \n  KIND:TARGET[:MODE]@T[+D][%P[*K]]\
+             \n    @T     first failure instant (ns/us/ms suffixes)\
+             \n    +D     transient: repaired after D (omit = permanent)\
+             \n    %P[*K] intermittent: re-fires every P, K times (default 3)\
+             \n    ?      random target drawn from the plan seed, not the run RNG\
+             \n  sensor:IDX:stuck=C@T    reads a constant C degC\
+             \n  sensor:IDX:drift=R@T    reading error grows R degC per ms\
+             \n  seed=N                  plan seed for ? targets\
+             \n  retry=M:B:C:D           fleet retry policy: max attempts, backoff,\
+             \n                          backoff cap, per-request deadline\n\
+             \nexamples:\
+             \n  chipsim traffic --scenario fault-chiplet-kill --faults-out fault.json\
+             \n  chipsim traffic --rows 6 --cols 6 --faults \"link:14-15@4ms+1ms%4ms*3\"\
+             \n  chipsim fleet --replicas 4 --faults \"board:1@8ms, retry=3:200us:2ms:20ms\"\
+             \n  chipsim faults --plan \"chiplet:7@3ms+6ms\" --rows 6 --cols 6\n\
+             \npresets: fault-link-flap, fault-chiplet-kill, fault-fleet-board-crash \
+             (see `chipsim scenarios`)"
+        );
+        return Ok(());
+    };
+    let plan = FaultPlan::parse(&spec)?;
+    if plan.is_empty() {
+        println!("plan parses to zero events (valid, arms to nothing)");
+        return Ok(());
+    }
+    let hw = build_hw(args)?;
+    let topo = Topology::build(&hw);
+    let dims = FaultDims {
+        links: topo.links.len(),
+        nodes: topo.num_nodes,
+        chiplets: hw.num_chiplets(),
+    };
+    let toggles = plan.arm(&dims)?;
+    let replicas = args.get_usize("replicas", 4)?;
+    let boards = plan.arm_boards(replicas)?;
+    println!(
+        "plan OK: {} event(s) -> {} sim toggle(s) against {} links / {} nodes / {} \
+         chiplets, {} board crash(es) against {replicas} replica(s)",
+        plan.events.len(),
+        toggles.len(),
+        dims.links,
+        dims.nodes,
+        dims.chiplets,
+        boards.len(),
+    );
+    for t in &toggles {
+        println!(
+            "  {:>12} ns  {:<7} {:?} {}",
+            t.at_ns,
+            t.kind.name(),
+            t.target,
+            if t.up { "repaired" } else { "DOWN" },
+        );
+    }
+    for (at, id) in &boards {
+        println!("  {at:>12} ns  board   {id} CRASH (permanent)");
+    }
+    println!(
+        "retry policy: {} attempt(s), backoff {} ns (cap {} ns), deadline {} ns",
+        plan.retry.max_attempts, plan.retry.backoff_ns, plan.retry.backoff_cap_ns,
+        plan.retry.deadline_ns,
+    );
+    Ok(())
 }
 
 fn cmd_batch(args: &Args) -> anyhow::Result<()> {
@@ -1223,26 +1391,38 @@ fn cmd_artifacts() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+/// Entry point split from [`dispatch`] so every error path — malformed
+/// flags included — prints one clean `error:` line on stderr and exits
+/// nonzero, instead of unwinding through a Debug-formatted panic or
+/// `anyhow` return.
+fn main() {
     logging::init();
     let args = Args::from_env(&["pipelined", "quick", "help", "sweep", "trace", "profile"]);
     if args.flag("help") || args.positionals.is_empty() {
         print!("{}", help().render());
-        return Ok(());
+        return;
     }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
     let quick = args.flag("quick");
     let cmd = args.positionals[0].as_str();
     match cmd {
-        "run" => cmd_run(&args)?,
-        "traffic" => cmd_traffic(&args)?,
-        "mix" => cmd_mix(&args)?,
-        "dtm" => cmd_dtm(&args)?,
-        "fleet" => cmd_fleet(&args)?,
-        "trace" => cmd_trace(&args)?,
-        "profile" => cmd_profile(&args)?,
+        "run" => cmd_run(args)?,
+        "traffic" => cmd_traffic(args)?,
+        "mix" => cmd_mix(args)?,
+        "dtm" => cmd_dtm(args)?,
+        "fleet" => cmd_fleet(args)?,
+        "trace" => cmd_trace(args)?,
+        "profile" => cmd_profile(args)?,
+        "faults" => cmd_faults(args)?,
         "scenarios" => cmd_scenarios(),
-        "batch" => cmd_batch(&args)?,
-        "sweep" => cmd_sweep(&args)?,
+        "batch" => cmd_batch(args)?,
+        "sweep" => cmd_sweep(args)?,
         "table4" => experiments::table4(quick).print(),
         "fig6" => experiments::fig6(quick).print(),
         "fig7" => experiments::fig7(quick).print(),
@@ -1275,4 +1455,28 @@ fn main() -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_faults_reports_bad_plans_with_context() {
+        let args = Args::parse(
+            ["--faults", "gremlin:0@1ms"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let err = parse_faults(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("chipsim faults"), "{err:#}");
+        assert!(parse_faults(&Args::default()).unwrap().is_none());
+    }
+
+    #[test]
+    fn faults_out_without_report_is_an_error() {
+        let args =
+            Args::parse(["--faults-out", "/dev/null"].iter().map(|s| s.to_string()), &[]);
+        assert!(write_fault_report(&args, None).is_err());
+        assert!(write_fault_report(&Args::default(), None).is_ok());
+    }
 }

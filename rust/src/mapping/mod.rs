@@ -309,9 +309,10 @@ impl<'a> NearestNeighborMapper<'a> {
     }
 
     /// Hop distance from `c` to the nearest chiplet in `anchors`
-    /// (0 if anchors empty — first layer placement is free).
+    /// (0 if anchors empty — first layer placement is free; unreachable
+    /// anchors score `usize::MAX` so faulted partitions repel placement).
     fn dist_to(&self, c: usize, anchors: &[usize]) -> usize {
-        anchors.iter().map(|&a| self.topo.hops(a, c)).min().unwrap_or(0)
+        anchors.iter().map(|&a| self.topo.hops(a, c).unwrap_or(usize::MAX)).min().unwrap_or(0)
     }
 
     /// Try to map the whole model; returns `None` (ledger untouched) if it
@@ -517,7 +518,7 @@ mod tests {
         for w in mapping.layers.windows(2) {
             for a in &w[0] {
                 for b in &w[1] {
-                    total_hops += topo.hops(a.chiplet, b.chiplet);
+                    total_hops += topo.hops(a.chiplet, b.chiplet).expect("mesh is connected");
                     pairs += 1;
                 }
             }

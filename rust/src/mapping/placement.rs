@@ -271,7 +271,7 @@ fn greedy_best_fit(
                 .min_by_key(|&c| {
                     let dist = region
                         .iter()
-                        .map(|&r| topo.hops(r, c))
+                        .map(|&r| topo.hops(r, c).unwrap_or(usize::MAX))
                         .min()
                         .unwrap_or(0);
                     (dist, c)
@@ -301,7 +301,8 @@ fn greedy_best_fit(
     for c in leftovers {
         let owner = (0..regions.len())
             .min_by_key(|&i| {
-                let dist = regions[i].iter().map(|&r| topo.hops(r, c)).min().unwrap_or(0);
+                let dist =
+                    regions[i].iter().map(|&r| topo.hops(r, c).unwrap_or(usize::MAX)).min().unwrap_or(0);
                 (dist, i)
             })
             .expect("every tenant has a region by now");

@@ -200,7 +200,10 @@ impl NetworkSim for PacketEngine {
         let id = self.next_flow_id;
         self.next_flow_id += 1;
         assert!(spec.src < self.topo.num_nodes && spec.dst < self.topo.num_nodes);
-        let path = self.topo.path(spec.src, spec.dst);
+        let path = self
+            .topo
+            .path(spec.src, spec.dst)
+            .expect("inject: unreachable destination (check Topology::reachable first)");
         if path.is_empty() {
             // Same-chiplet transfer: completes immediately (local SRAM).
             let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
@@ -301,6 +304,39 @@ impl NetworkSim for PacketEngine {
             Some(buf) => std::mem::take(buf),
             None => Vec::new(),
         }
+    }
+
+    fn apply_fault(&mut self, topo: &Topology, link_down: &[bool]) -> Vec<(FlowId, FlowSpec)> {
+        debug_assert_eq!(topo.links.len(), self.topo.links.len(), "same link universe");
+        // Adopt the rerouted tables; link indices are unchanged so all
+        // per-link state (free times, busy counters) stays valid.
+        self.topo.route = topo.route.clone();
+        self.topo.hop_table = topo.hop_table.clone();
+        // A flow is affected when its frozen path crosses a dead link:
+        // packets already past it keep their booked energy/work (those
+        // bytes did move), but the flow as a whole is lost and must be
+        // retransmitted from the source — or abandoned by the caller.
+        let mut dropped = Vec::new();
+        for (id, slot) in self.flows.iter_mut().enumerate() {
+            let affected =
+                slot.as_ref().is_some_and(|f| f.path.iter().any(|&l| link_down[l]));
+            if affected {
+                let f = slot.take().expect("affected flow exists");
+                self.active_flows -= 1;
+                dropped.push((id as FlowId, f.spec));
+            }
+        }
+        if !dropped.is_empty() {
+            // Purge the dead flows' queued packet events.  Completed
+            // flows also hold `None` slots but never have queued events,
+            // so filtering on the slot is exact.
+            let events = std::mem::take(&mut self.events);
+            self.events = events
+                .into_iter()
+                .filter(|Reverse(e)| self.flows[e.flow as usize].is_some())
+                .collect();
+        }
+        dropped
     }
 }
 
@@ -463,6 +499,50 @@ mod tests {
         e.set_link_trace(false);
         run_flow(&mut e, FlowSpec { src: 0, dst: 1, bytes: 512 }, 1_000_000);
         assert!(e.drain_link_trace().is_empty());
+    }
+
+    #[test]
+    fn apply_fault_drops_crossing_flows_and_adopts_reroutes() {
+        // 2x2 mesh: X-Y routes 0->3 via 1.  Kill both halves of 0<->1:
+        // the in-flight flow is dropped; a re-injection routes via 2.
+        let mut e = engine(2, 2);
+        let id = e.inject(FlowSpec { src: 0, dst: 3, bytes: 65536 }, 0);
+        let bystander = e.inject(FlowSpec { src: 3, dst: 2, bytes: 512 }, 0);
+        let mut masked = e.topology().clone();
+        let down: Vec<bool> = masked
+            .links
+            .iter()
+            .map(|l| (l.src == 0 && l.dst == 1) || (l.src == 1 && l.dst == 0))
+            .collect();
+        masked.apply_link_mask(&down);
+        assert_eq!(masked.hops(0, 3), Some(2), "0->3 survives via node 2");
+        let dropped = e.apply_fault(&masked, &down);
+        assert_eq!(dropped, vec![(id, FlowSpec { src: 0, dst: 3, bytes: 65536 })]);
+        // The bystander flow (3->2->... never touches 0<->1) finishes.
+        let c = e.advance_until(TimeNs::MAX).expect("bystander completes");
+        assert_eq!(c.id, bystander);
+        assert!(e.advance_until(TimeNs::MAX).is_none());
+        // Retransmission takes the detour and completes.
+        let retry = e.inject(FlowSpec { src: 0, dst: 3, bytes: 65536 }, c.time);
+        let done = e.advance_until(TimeNs::MAX).expect("retry completes");
+        assert_eq!(done.id, retry);
+        assert_eq!(e.stats(retry).unwrap().hops, 2);
+    }
+
+    #[test]
+    fn apply_fault_with_no_dead_links_is_invisible() {
+        let mut run = |fault: bool| {
+            let mut e = engine(2, 2);
+            e.inject(FlowSpec { src: 0, dst: 3, bytes: 4096 }, 0);
+            if fault {
+                let topo = e.topology().clone();
+                let down = vec![false; topo.links.len()];
+                assert!(e.apply_fault(&topo, &down).is_empty());
+            }
+            let c = e.advance_until(TimeNs::MAX).unwrap();
+            (c.id, c.time, e.work_done())
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

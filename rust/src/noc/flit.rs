@@ -48,7 +48,7 @@
 //! scenarios (see the `traffic-poisson-flit` / `dtm-ceiling-flit`
 //! presets), not just validation runs.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, HashMap, VecDeque};
 
 use super::topology::Topology;
 use super::{EnergyLog, FlowCompletion, FlowId, FlowSpec, FlowStats, LinkTraceEvent, NetworkSim};
@@ -280,7 +280,13 @@ impl FlitEngine {
         if node == dst {
             None
         } else {
-            Some(self.topo.route[node][dst])
+            let l = self.topo.route[node][dst];
+            debug_assert_ne!(
+                l,
+                usize::MAX,
+                "stranded flit survived apply_fault: {node} -> {dst}"
+            );
+            Some(l)
         }
     }
 
@@ -441,7 +447,10 @@ impl NetworkSim for FlitEngine {
         if !self.network_busy() && inj_cycle > self.cycle {
             self.cycle = inj_cycle;
         }
-        let path = self.topo.path(spec.src, spec.dst);
+        let path = self
+            .topo
+            .path(spec.src, spec.dst)
+            .expect("inject: unreachable destination (check Topology::reachable first)");
         if path.is_empty() {
             let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
             self.flows.push(None);
@@ -556,6 +565,106 @@ impl NetworkSim for FlitEngine {
             Some(log) => log.drain(self.topo.cycle_ns),
             None => Vec::new(),
         }
+    }
+
+    /// Adopt fault-aware route tables and drop every flow the failure
+    /// touches.  Surviving flows reroute *adaptively*: each head flit
+    /// consults the new tables at its next allocation, so traffic that
+    /// never meets the dead links simply detours.  A flow is affected if
+    /// any of its flits sits in a dead link's input port, is in flight
+    /// over a dead link, holds a wormhole binding across one (body flits
+    /// upstream would otherwise follow the head through it), or is
+    /// stranded — parked at a router from which the new tables have no
+    /// route to its destination.
+    fn apply_fault(&mut self, topo: &Topology, link_down: &[bool]) -> Vec<(FlowId, FlowSpec)> {
+        debug_assert_eq!(topo.links.len(), self.topo.links.len(), "same link universe");
+        self.topo.route = topo.route.clone();
+        self.topo.hop_table = topo.hop_table.clone();
+
+        let route = &self.topo.route;
+        let stranded = |node: usize, dst: usize| node != dst && route[node][dst] == usize::MAX;
+        let mut affected: BTreeSet<FlowId> = BTreeSet::new();
+        for (l, port) in self.ports.iter().enumerate() {
+            for f in &port.buf {
+                if link_down[l] || stranded(self.topo.links[l].dst, f.dst) {
+                    affected.insert(f.flow);
+                }
+            }
+        }
+        for (n, q) in self.inject_q.iter().enumerate() {
+            for f in q {
+                if stranded(n, f.dst) {
+                    affected.insert(f.flow);
+                }
+            }
+        }
+        for &(_, l, f) in &self.in_flight {
+            if link_down[l] || stranded(self.topo.links[l].dst, f.dst) {
+                affected.insert(f.flow);
+            }
+        }
+        for (l, b) in self.bound.iter().enumerate() {
+            if link_down[l] {
+                if let Some((_, flow, _)) = b {
+                    affected.insert(*flow);
+                }
+            }
+        }
+        if affected.is_empty() {
+            return Vec::new();
+        }
+
+        // Purge every flit of every affected flow, restoring the credits
+        // they hold: a buffered flit returns its own port slot; an
+        // in-flight flit returns the downstream slot reserved at send
+        // time (none was reserved for a flit about to eject).
+        for port in self.ports.iter_mut() {
+            let before = port.buf.len();
+            port.buf.retain(|f| !affected.contains(&f.flow));
+            let removed = before - port.buf.len();
+            port.credits += removed;
+            self.buffered -= removed as u64;
+        }
+        for q in self.inject_q.iter_mut() {
+            let before = q.len();
+            q.retain(|f| !affected.contains(&f.flow));
+            self.buffered -= (before - q.len()) as u64;
+        }
+        let links = &self.topo.links;
+        let mut returned: Vec<usize> = Vec::new();
+        self.in_flight.retain(|&(_, l, f)| {
+            if affected.contains(&f.flow) {
+                if f.dst != links[l].dst {
+                    returned.push(l);
+                }
+                false
+            } else {
+                true
+            }
+        });
+        for l in returned {
+            self.ports[l].credits += 1;
+        }
+        for b in self.bound.iter_mut() {
+            if matches!(b, Some((_, flow, _)) if affected.contains(flow)) {
+                *b = None;
+            }
+        }
+        // Rebuild the active-set bookkeeping from surviving occupancy.
+        for n in 0..self.topo.num_nodes {
+            let in_bufs = self.topo.in_links[n]
+                .iter()
+                .filter(|&&l| !self.ports[l].buf.is_empty())
+                .count();
+            self.pending_inputs[n] = in_bufs as u32 + u32::from(!self.inject_q[n].is_empty());
+        }
+        let mut dropped = Vec::new();
+        for id in affected {
+            let fp = self.flows[id as usize].take().expect("affected flow exists");
+            self.active_flows -= 1;
+            dropped.push((id, fp.spec));
+        }
+        dropped
     }
 }
 
@@ -769,7 +878,10 @@ mod reference {
             if !self.network_busy() && inj_cycle > self.cycle {
                 self.cycle = inj_cycle;
             }
-            let path = self.topo.path(spec.src, spec.dst);
+            let path = self
+                .topo
+                .path(spec.src, spec.dst)
+                .expect("inject: unreachable destination (check Topology::reachable first)");
             if path.is_empty() {
                 let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
                 self.finished.insert(id, stats);
@@ -1032,6 +1144,57 @@ mod tests {
             let s = e.stats(id).unwrap();
             assert!(s.completed_ns >= s.injected_ns, "t={t}: {s:?}");
         }
+    }
+
+    #[test]
+    fn apply_fault_drops_crossing_flows_and_adopts_reroutes() {
+        let p = LinkParams::default();
+        let pristine = mesh(2, 2, &p);
+        let mut e = FlitEngine::new(pristine.clone());
+        // X-Y routing sends 0 -> 3 through node 1; 2 -> 3 stays clear.
+        let crossing = e.inject(FlowSpec { src: 0, dst: 3, bytes: 4096 }, 0);
+        let bystander = e.inject(FlowSpec { src: 2, dst: 3, bytes: 512 }, 0);
+        // A few cycles so the crossing flow has flits on the wire.
+        e.advance_until(5);
+        let dead: Vec<bool> = pristine
+            .links
+            .iter()
+            .map(|l| (l.src == 0 && l.dst == 1) || (l.src == 1 && l.dst == 0))
+            .collect();
+        let mut masked = pristine.clone();
+        masked.apply_link_mask(&dead);
+        assert_eq!(masked.hops(0, 3), Some(2));
+        let dropped = e.apply_fault(&masked, &dead);
+        assert_eq!(dropped.len(), 1);
+        assert_eq!(dropped[0].0, crossing);
+        assert_eq!(dropped[0].1.bytes, 4096);
+        // The bystander still completes, and a retransmission detours
+        // through node 2 under the adopted tables.
+        let retry = e.inject(dropped[0].1, 100);
+        let done = complete_all(&mut e);
+        assert!(done.iter().any(|c| c.id == bystander));
+        assert!(done.iter().any(|c| c.id == retry));
+        assert_eq!(e.stats(retry).unwrap().hops, 2);
+        assert!(!e.has_active());
+    }
+
+    #[test]
+    fn apply_fault_with_no_dead_links_is_invisible() {
+        let p = LinkParams::default();
+        let topo = mesh(2, 2, &p);
+        let mut a = FlitEngine::new(topo.clone());
+        let mut b = FlitEngine::new(topo.clone());
+        for e in [&mut a, &mut b] {
+            e.inject(FlowSpec { src: 0, dst: 3, bytes: 2048 }, 0);
+            e.inject(FlowSpec { src: 1, dst: 2, bytes: 1024 }, 3);
+            e.advance_until(7);
+        }
+        let dropped = b.apply_fault(&topo, &vec![false; topo.links.len()]);
+        assert!(dropped.is_empty());
+        let da: Vec<_> = complete_all(&mut a).iter().map(|c| (c.id, c.time)).collect();
+        let db: Vec<_> = complete_all(&mut b).iter().map(|c| (c.id, c.time)).collect();
+        assert_eq!(da, db);
+        assert_eq!(a.work_done(), b.work_done());
     }
 
     // ---------------------------------------------- differential harness

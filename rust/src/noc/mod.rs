@@ -110,6 +110,23 @@ pub trait NetworkSim: Send {
     fn drain_link_trace(&mut self) -> Vec<LinkTraceEvent> {
         Vec::new()
     }
+    /// Adopt a fault-rerouted topology (same links/indices, different
+    /// next-hop tables — see [`topology::Topology::apply_link_mask`];
+    /// `link_down[i]` marks directed link `i` failed).  The engine must
+    /// drop every in-flight flow whose progress touches a dead link and
+    /// return those flows' `(id, spec)` in ascending id order, so the
+    /// caller can decide per flow: re-inject from the source over the
+    /// surviving paths (a retransmission), or abort the owning request
+    /// when the destination is partitioned.  Unaffected flows continue;
+    /// new injections use the new routes.  Default: no flows affected
+    /// (engines without fault support keep their original routing).
+    fn apply_fault(
+        &mut self,
+        _topo: &topology::Topology,
+        _link_down: &[bool],
+    ) -> Vec<(FlowId, FlowSpec)> {
+        Vec::new()
+    }
 }
 
 /// One link occupancy recorded by an engine with link tracing enabled:

@@ -59,27 +59,42 @@ impl Topology {
         }
     }
 
-    /// Path (sequence of link indices) from src to dst.
-    pub fn path(&self, src: usize, dst: usize) -> Vec<usize> {
+    /// Path (sequence of link indices) from src to dst, or `None` when
+    /// `dst` is unreachable (disconnected `custom()` graph, or links
+    /// masked out by [`apply_link_mask`](Self::apply_link_mask)).  An
+    /// empty path (`src == dst`) is `Some(vec![])`.
+    pub fn path(&self, src: usize, dst: usize) -> Option<Vec<usize>> {
         let mut path = Vec::new();
         let mut cur = src;
         while cur != dst {
             let l = self.route[cur][dst];
-            assert!(l != usize::MAX, "no route {src}->{dst} (stuck at {cur})");
+            if l == usize::MAX || path.len() >= self.num_nodes {
+                return None; // unreachable (or a routing loop: same answer)
+            }
             path.push(l);
             cur = self.links[l].dst;
-            assert!(path.len() <= self.num_nodes, "routing loop {src}->{dst}");
         }
-        path
+        Some(path)
     }
 
-    /// Hop count between two nodes (O(1) table lookup).
-    pub fn hops(&self, src: usize, dst: usize) -> usize {
-        self.hop_table[src][dst] as usize
+    /// Hop count between two nodes (O(1) table lookup), or `None` when
+    /// `dst` is unreachable from `src`.
+    pub fn hops(&self, src: usize, dst: usize) -> Option<usize> {
+        match self.hop_table[src][dst] {
+            u16::MAX => None,
+            h => Some(h as usize),
+        }
+    }
+
+    /// True when `dst` is reachable from `src` under the current routing
+    /// tables.
+    pub fn reachable(&self, src: usize, dst: usize) -> bool {
+        self.hop_table[src][dst] != u16::MAX
     }
 
     /// Recompute the hop table from the current routing tables (must be
     /// called after any manual `route` override, e.g. mesh X-Y).
+    /// Unreachable pairs get the `u16::MAX` sentinel.
     fn rebuild_hop_table(&mut self) {
         let n = self.num_nodes;
         let mut table = vec![vec![0u16; n]; n];
@@ -90,17 +105,40 @@ impl Topology {
                 }
                 let mut cur = s;
                 let mut h = 0u16;
-                while cur != d {
+                loop {
+                    if cur == d {
+                        break;
+                    }
                     let l = self.route[cur][d];
-                    assert!(l != usize::MAX, "no route {s}->{d}");
+                    if l == usize::MAX || (h as usize) >= n {
+                        h = u16::MAX;
+                        break;
+                    }
                     cur = self.links[l].dst;
                     h += 1;
-                    assert!((h as usize) <= n, "routing loop {s}->{d}");
                 }
                 table[s][d] = h;
             }
         }
         self.hop_table = table;
+    }
+
+    /// Reroute around failed links: recompute the next-hop and hop
+    /// tables by BFS over the alive links only.  `link_down[i]` marks
+    /// link `i` as failed.  Link indices, the link list, and the
+    /// adjacency tables are left untouched, so engine-side per-link
+    /// state (occupancy, buffers, credits) stays valid across a mask
+    /// change; pairs partitioned by the mask become unreachable
+    /// ([`path`](Self::path)/[`hops`](Self::hops) return `None`).
+    ///
+    /// Note: a masked mesh falls back to minimal BFS routes (the X-Y
+    /// dimension-order override cannot route around a dead link).  To
+    /// restore the pristine routing after repair, rebuild from an
+    /// unmasked clone instead of applying an all-false mask.
+    pub fn apply_link_mask(&mut self, link_down: &[bool]) {
+        assert_eq!(link_down.len(), self.links.len(), "link mask length");
+        self.route = bfs_routes(self, Some(link_down));
+        self.rebuild_hop_table();
     }
 
     /// Serialization time of `bytes` over link `l`, in ns.
@@ -132,15 +170,16 @@ impl Topology {
             cycle_ns: 1.0 / p.clock_ghz,
             hop_latency_cycles: p.hop_latency_cycles,
         };
-        t.route = bfs_routes(&t);
+        t.route = bfs_routes(&t, None);
         t.rebuild_hop_table();
         t
     }
 }
 
 /// All-pairs next-hop via per-destination BFS (deterministic tie-break by
-/// link index order => stable, minimal routes).
-fn bfs_routes(t: &Topology) -> Vec<Vec<usize>> {
+/// link index order => stable, minimal routes).  `link_down` masks out
+/// failed links; unreachable pairs keep the `usize::MAX` sentinel.
+fn bfs_routes(t: &Topology, link_down: Option<&[bool]>) -> Vec<Vec<usize>> {
     let n = t.num_nodes;
     let mut route = vec![vec![usize::MAX; n]; n];
     // BFS from each destination over reversed edges (precomputed
@@ -153,6 +192,9 @@ fn bfs_routes(t: &Topology) -> Vec<Vec<usize>> {
         queue.push_back(dst);
         while let Some(v) = queue.pop_front() {
             for &li in &in_links[v] {
+                if link_down.is_some_and(|m| m[li]) {
+                    continue;
+                }
                 let u = t.links[li].src;
                 if dist[u] == usize::MAX {
                     dist[u] = dist[v] + 1;
@@ -369,7 +411,7 @@ mod tests {
         let t = mesh(4, 4, &p());
         // From (0,0)=0 to (2,3)=11: first hops along the row: 0->1->2->3,
         // then down the column: 3->7->11.
-        let path = t.path(0, 11);
+        let path = t.path(0, 11).unwrap();
         let nodes: Vec<usize> = path.iter().map(|&l| t.links[l].dst).collect();
         assert_eq!(nodes, vec![1, 2, 3, 7, 11]);
     }
@@ -381,7 +423,7 @@ mod tests {
             let (sr, sc) = (s / 10, s % 10);
             let (dr, dc) = (d / 10, d % 10);
             let manhattan = sr.abs_diff(dr) + sc.abs_diff(dc);
-            assert_eq!(t.hops(s, d), manhattan, "{s}->{d}");
+            assert_eq!(t.hops(s, d), Some(manhattan), "{s}->{d}");
         }
     }
 
@@ -391,7 +433,7 @@ mod tests {
         for s in 0..t.num_nodes {
             for d in 0..t.num_nodes {
                 if s != d {
-                    assert!(!t.path(s, d).is_empty());
+                    assert!(!t.path(s, d).unwrap().is_empty());
                 }
             }
         }
@@ -402,7 +444,7 @@ mod tests {
         let t = floret(6, 6, 6, &p());
         // Every link endpoint pair must be one hop apart.
         for l in &t.links {
-            assert_eq!(t.hops(l.src, l.dst), 1);
+            assert_eq!(t.hops(l.src, l.dst), Some(1));
         }
     }
 
@@ -414,9 +456,9 @@ mod tests {
         assert_eq!(read.width_bytes, 32);
         assert_eq!(write.width_bytes, 16);
         // CCD-to-CCD goes through the IOD: 2 hops.
-        assert_eq!(t.hops(0, 5), 2);
+        assert_eq!(t.hops(0, 5), Some(2));
         // CCD to DDR: 2 hops via IOD.
-        assert_eq!(t.hops(3, 9), 2);
+        assert_eq!(t.hops(3, 9), Some(2));
     }
 
     #[test]
@@ -432,14 +474,57 @@ mod tests {
     fn custom_topology_routes() {
         // A line 0-1-2-3.
         let t = custom(4, &[(0, 1), (1, 2), (2, 3)], &p());
-        assert_eq!(t.hops(0, 3), 3);
-        assert_eq!(t.hops(3, 0), 3);
+        assert_eq!(t.hops(0, 3), Some(3));
+        assert_eq!(t.hops(3, 0), Some(3));
     }
 
     #[test]
     #[should_panic]
     fn custom_rejects_out_of_range() {
         custom(2, &[(0, 5)], &p());
+    }
+
+    #[test]
+    fn disconnected_custom_graph_reports_unreachable() {
+        // Two islands: 0-1 and 2-3.
+        let t = custom(4, &[(0, 1), (2, 3)], &p());
+        assert_eq!(t.hops(0, 1), Some(1));
+        assert_eq!(t.hops(0, 2), None);
+        assert_eq!(t.path(1, 3), None);
+        assert!(!t.reachable(3, 0));
+        assert_eq!(t.path(2, 2), Some(vec![]));
+    }
+
+    #[test]
+    fn link_mask_reroutes_or_partitions() {
+        // A ring 0-1-2-3-0: killing both directions of 0<->1 reroutes
+        // 0->1 the long way; killing 1<->2 as well strands node 1.
+        let t0 = custom(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], &p());
+        assert_eq!(t0.hops(0, 1), Some(1));
+        let dead = |t: &Topology, pairs: &[(usize, usize)]| -> Vec<bool> {
+            t.links
+                .iter()
+                .map(|l| {
+                    pairs.iter().any(|&(a, b)| {
+                        (l.src == a && l.dst == b) || (l.src == b && l.dst == a)
+                    })
+                })
+                .collect()
+        };
+        let mut t = t0.clone();
+        t.apply_link_mask(&dead(&t0, &[(0, 1)]));
+        assert_eq!(t.hops(0, 1), Some(3), "rerouted via 3 and 2");
+        assert_eq!(t.hops(0, 2), Some(2));
+        let path = t.path(0, 1).unwrap();
+        assert!(path.iter().all(|&l| !(t.links[l].src == 0 && t.links[l].dst == 1)));
+        let mut t = t0.clone();
+        t.apply_link_mask(&dead(&t0, &[(0, 1), (1, 2)]));
+        assert_eq!(t.hops(0, 1), None, "node 1 is partitioned");
+        assert_eq!(t.path(2, 1), None);
+        assert_eq!(t.hops(0, 2), Some(2), "survivors still route");
+        // Link list and adjacency are untouched by masking.
+        assert_eq!(t.links.len(), t0.links.len());
+        assert_eq!(t.out_links, t0.out_links);
     }
 
     #[test]

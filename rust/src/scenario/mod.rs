@@ -33,6 +33,7 @@ use std::sync::Arc;
 
 use crate::config::{HardwareConfig, SimParams, WorkloadConfig};
 use crate::dtm::GovernorSpec;
+use crate::fault::FaultPlan;
 use crate::mapping::PlacementPolicy;
 use crate::serving::{
     ArrivalSpec, MixReport, SteadyState, TenantSpec, TraceEvent, TrafficReport, TrafficSpec,
@@ -111,6 +112,9 @@ pub struct Scenario {
     thermal: ThermalSpec,
     /// Fleet overlay (None for single-board scenarios).
     fleet: Option<FleetPreset>,
+    /// Fault-injection plan applied when the scenario builds its
+    /// simulation (and, for fleet scenarios, its dispatcher).
+    faults: Option<FaultPlan>,
     /// Seed used when the caller does not supply one.
     pub default_seed: u64,
 }
@@ -131,6 +135,7 @@ impl Scenario {
             work: Work::Batch(Arc::new(workload)),
             thermal: ThermalSpec::Off,
             fleet: None,
+            faults: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -152,6 +157,7 @@ impl Scenario {
             work: Work::Traffic(Arc::new(spec)),
             thermal: ThermalSpec::Off,
             fleet: None,
+            faults: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -173,6 +179,7 @@ impl Scenario {
             work: Work::Mix(Arc::new(spec)),
             thermal: ThermalSpec::Off,
             fleet: None,
+            faults: None,
             default_seed: 0xC0FFEE,
         }
     }
@@ -208,6 +215,18 @@ impl Scenario {
 
     pub fn fleet_preset(&self) -> Option<&FleetPreset> {
         self.fleet.as_ref()
+    }
+
+    /// Attach a fault-injection plan: the scenario's simulation arms it
+    /// on build, and `chipsim fleet --scenario NAME` passes it to the
+    /// dispatcher so `board:` events crash replicas.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Scenario {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Whether this scenario carries a fleet overlay.
@@ -266,6 +285,7 @@ impl Scenario {
             .hardware(self.hardware())
             .params(self.params())
             .thermal(self.thermal.clone())
+            .faults(self.faults.clone())
             .build()
     }
 
@@ -767,6 +787,73 @@ impl Registry {
                 emergency_c: Some(47.5),
             }),
         );
+        // ---- fault-injection / graceful-degradation presets ----
+        // Deterministic fault schedules over the serving presets above:
+        // same seed + same plan => byte-identical FaultReport.
+        reg.register(
+            Scenario::traffic(
+                "fault-link-flap",
+                "6x6 mesh under 2 krps Poisson with an intermittent NoI link (down 1 ms \
+                 every 4 ms): reroute-vs-fail under repair cycles",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::poisson(2_000.0)
+                        .horizon_ms(20.0)
+                        .warmup_ms(2.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_faults(
+                FaultPlan::parse("link:14-15@4ms+1ms%4ms*3").expect("builtin fault plan"),
+            ),
+        );
+        reg.register(
+            Scenario::traffic(
+                "fault-chiplet-kill",
+                "6x6 mesh under 1.5 krps Poisson; chiplet 7 dies at 3 ms for 6 ms and a \
+                 sensor sticks at 95 degC: mapper exclusion + lying-governor probe",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                |_seed| {
+                    TrafficSpec::poisson(1_500.0)
+                        .horizon_ms(20.0)
+                        .warmup_ms(2.0)
+                        .window_ms(5.0)
+                        .slo_ms(2.0)
+                        .steady(None)
+                },
+            )
+            .with_faults(
+                FaultPlan::parse("chiplet:7@3ms+6ms, sensor:3:stuck=95@2ms")
+                    .expect("builtin fault plan"),
+            ),
+        );
+        reg.register(
+            Scenario::traffic(
+                "fault-fleet-board-crash",
+                "4x 6x6-mesh boards at 8 krps; board 1 crashes at 8 ms — queued work \
+                 migrates, in-flight requests retry with capped backoff",
+                || hardware_preset("mesh", 6, 6, 0, 0).expect("builtin preset"),
+                serving_params(),
+                fleet_traffic(8_000.0),
+            )
+            .with_fleet(FleetPreset {
+                replicas: 4,
+                max_replicas: 4,
+                routing: "least-outstanding",
+                autoscale: "none",
+                epoch_ns: 200_000,
+                cold_start_ns: 5_000_000,
+                emergency_c: None,
+            })
+            .with_faults(
+                FaultPlan::parse("board:1@8ms, retry=3:200us:2ms:20ms")
+                    .expect("builtin fault plan"),
+            ),
+        );
         reg.register(Scenario::new(
             "thermal-hotspot",
             "6x6 mesh with THERMOS-style thermal-aware mapping enabled",
@@ -1077,6 +1164,24 @@ mod tests {
         // Sequential path surfaces the same failure.
         let seq = SweepRunner::new().run_sequential(&reg, &["boom"]).unwrap();
         assert!(seq[0].result.is_err());
+    }
+
+    #[test]
+    fn fault_presets_are_registered_with_plans() {
+        let reg = Registry::builtin();
+        for name in ["fault-link-flap", "fault-chiplet-kill", "fault-fleet-board-crash"] {
+            let sc = reg.get(name).unwrap_or_else(|| panic!("missing builtin '{name}'"));
+            assert!(sc.is_traffic(), "'{name}' should be a traffic scenario");
+            let plan = sc.fault_plan().expect("fault preset carries a plan");
+            assert!(!plan.is_empty());
+        }
+        let fleet = reg.get("fault-fleet-board-crash").unwrap();
+        assert!(fleet.is_fleet(), "board-crash preset is a fleet scenario");
+        assert_eq!(
+            fleet.fault_plan().unwrap().arm_boards(4).unwrap(),
+            vec![(8_000_000, 1)]
+        );
+        assert!(reg.get("mesh-10x10-cnn").unwrap().fault_plan().is_none());
     }
 
     #[test]

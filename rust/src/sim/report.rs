@@ -114,6 +114,10 @@ pub struct SimReport {
     pub thermal: Option<ThermalSummary>,
     /// Closed-loop DTM results (populated by `ThermalSpec::InLoop`).
     pub dtm: Option<DtmReport>,
+    /// Fault-injection results (populated when a non-empty `--faults`
+    /// plan was armed).  Participates in [`fingerprint`](Self::fingerprint)
+    /// so fault runs are determinism-checked like everything else.
+    pub fault: Option<crate::fault::FaultReport>,
     /// Host-side self-profile of the simulator (populated when
     /// [`crate::prof`] collection is enabled, e.g. via `--profile`).
     /// Like `wall_ns` and the latency breakdown, it is host-timing
@@ -195,6 +199,9 @@ impl SimReport {
         if let Some(d) = &self.dtm {
             s.push_str(&d.summary());
         }
+        if let Some(f) = &self.fault {
+            s.push_str(&f.summary());
+        }
         for (kind, st) in self.by_kind() {
             s.push_str(&format!(
                 "  {kind:<10} x{:<3} mean inference latency {:>12}  (compute {:>12}, comm {:>12})\n",
@@ -244,6 +251,9 @@ impl SimReport {
         }
         if let Some(d) = &self.dtm {
             let _ = write!(s, ";dtm[{}]", d.fingerprint());
+        }
+        if let Some(f) = &self.fault {
+            let _ = write!(s, ";fault[{}]", f.fingerprint());
         }
         s
     }

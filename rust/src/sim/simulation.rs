@@ -34,6 +34,10 @@ use crate::config::{
     WorkloadConfig,
 };
 use crate::dtm::DtmRuntime;
+use crate::fault::{
+    DowntimeTracker, FaultDims, FaultKind, FaultPlan, FaultReport, FaultTarget,
+    FaultTimelineEntry, FaultToggle,
+};
 use crate::mapping::{MapContext, Mapper, MemoryLedger, ModelMapping, NearestNeighbor};
 use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
 use crate::noc::{FlowId, FlowSpec, NetworkSim, TenantTraffic};
@@ -347,6 +351,7 @@ pub struct SimulationBuilder {
     observers: Vec<ObserverHandle>,
     traffic: Option<crate::serving::TrafficSpec>,
     tracer: Option<TraceHandle>,
+    faults: Option<FaultPlan>,
 }
 
 impl SimulationBuilder {
@@ -362,6 +367,7 @@ impl SimulationBuilder {
             observers: Vec::new(),
             traffic: None,
             tracer: None,
+            faults: None,
         }
     }
 
@@ -442,6 +448,15 @@ impl SimulationBuilder {
     /// [`crate::trace::merge_export`].
     pub fn tracer(mut self, tracer: TraceHandle) -> Self {
         self.tracer = Some(tracer);
+        self
+    }
+
+    /// Attach a deterministic fault-injection plan (see [`crate::fault`]).
+    /// `None` (the default) disarms injection; an armed plan whose events
+    /// all resolve to nothing leaves every run byte-identical to a
+    /// faultless one.
+    pub fn faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan;
         self
     }
 
@@ -532,6 +547,7 @@ impl SimulationBuilder {
             traffic: self.traffic,
             tenant_masks: None,
             tracer: self.tracer,
+            faults: self.faults,
         })
     }
 }
@@ -632,6 +648,8 @@ enum Event {
     TryMap,
     /// A segment's compute finished on its chiplet.
     ComputeDone { inst: usize, layer: usize, seg: usize, inference: u32 },
+    /// A scheduled fault toggle fires (index into the armed toggle list).
+    Fault(usize),
 }
 
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -657,6 +675,28 @@ impl PartialOrd for QEntry {
 fn push_event(queue: &mut BinaryHeap<Reverse<QEntry>>, seq: &mut u64, t: TimeNs, ev: Event) {
     *seq += 1;
     queue.push(Reverse(QEntry { t, seq: *seq, ev }));
+}
+
+/// Live fault-injection state of one run: the armed toggle schedule, the
+/// fault-aware routing view the engines currently follow, per-resource
+/// outage ref-counts, and the accumulating [`FaultReport`].  Exists only
+/// when the armed plan resolved to at least one toggle — absent, the run
+/// is bit-for-bit the faultless run (zero-perturbation rule).
+struct FaultRt {
+    toggles: Vec<FaultToggle>,
+    /// The pristine `Simulation::topo` with the current link mask
+    /// applied.  Rebuilt from a pristine clone on every mask change, so
+    /// an all-up mask restores the original routing exactly (mesh X-Y
+    /// included — a BFS reroute of a healed mesh would differ).
+    topo: Topology,
+    /// Down ref-count per directed link: a link can be dead through its
+    /// own fault and through a router fault at either end simultaneously,
+    /// and must stay dead until every cause is repaired.
+    link_down_cnt: Vec<u32>,
+    /// Down ref-count per chiplet.
+    chiplet_dead_cnt: Vec<u32>,
+    downtime: DowntimeTracker,
+    report: FaultReport,
 }
 
 // --------------------------------------------------------- run sessions
@@ -698,6 +738,7 @@ pub struct RunSession {
     stepper: Option<ThermalStepper>,
     thermal_err: Option<anyhow::Error>,
     dtm_rt: Option<DtmRuntime>,
+    fault: Option<FaultRt>,
     ledger: MemoryLedger,
     arb: ArbitrationQueue,
     chiplets: Vec<ChipletState>,
@@ -767,6 +808,21 @@ impl RunSession {
     pub fn drain_backlog(&mut self) -> Vec<ModelRequest> {
         self.arb.drain_pending()
     }
+
+    /// Remove and return every mapped, still-running request, marking its
+    /// instance finished.  The fleet board-crash path extracts a dead
+    /// replica's in-flight work here for retry elsewhere; the session is
+    /// then discarded, so no further teardown is needed.  Sorted by
+    /// (arrival, id) for a deterministic retry order.
+    pub fn take_unfinished_requests(&mut self) -> Vec<ModelRequest> {
+        let mut out = Vec::new();
+        for inst in self.instances.iter_mut().filter(|i| !i.finished) {
+            inst.finished = true;
+            out.push(inst.req.clone());
+        }
+        out.sort_by_key(|r| (r.arrival_ns, r.id));
+        out
+    }
 }
 
 /// A fully assembled co-simulation: the paper's Global Manager with every
@@ -787,6 +843,8 @@ pub struct Simulation {
     tenant_masks: Option<Vec<Vec<bool>>>,
     /// Optional flight recorder (see [`crate::trace`]).
     tracer: Option<TraceHandle>,
+    /// Optional fault-injection plan, armed per run (see [`crate::fault`]).
+    faults: Option<FaultPlan>,
 }
 
 impl Simulation {
@@ -867,6 +925,18 @@ impl Simulation {
     /// Remove the flight recorder (runs stop tracing).
     pub fn clear_tracer(&mut self) {
         self.tracer = None;
+    }
+
+    /// Install (or replace) a fault-injection plan after construction —
+    /// `Scenario::build` returns a finished `Simulation`, so the CLI's
+    /// `--faults` flag attaches plans here.  `None` disarms injection.
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.faults = plan;
+    }
+
+    /// The attached fault-injection plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Run the co-simulation to completion.  Reusable: each call builds a
@@ -990,6 +1060,32 @@ impl Simulation {
         }
         let ledger = MemoryLedger::new(&self.hw);
         let total_capacity = ledger.total_free();
+        // Arm the fault plan against this run's dimensions.  The runtime
+        // exists only when the armed plan resolves to at least one toggle:
+        // an armed-but-empty plan must perturb nothing, so its run stays
+        // fingerprint-identical to a faultless one.
+        let fault: Option<FaultRt> = match &self.faults {
+            Some(plan) if !plan.is_empty() => {
+                let toggles = plan.arm(&FaultDims {
+                    links: self.topo.links.len(),
+                    nodes: self.topo.num_nodes,
+                    chiplets: self.hw.num_chiplets(),
+                })?;
+                if toggles.is_empty() {
+                    None
+                } else {
+                    Some(FaultRt {
+                        toggles,
+                        topo: self.topo.clone(),
+                        link_down_cnt: vec![0; self.topo.links.len()],
+                        chiplet_dead_cnt: vec![0; self.hw.num_chiplets()],
+                        downtime: DowntimeTracker::default(),
+                        report: FaultReport::default(),
+                    })
+                }
+            }
+            _ => None,
+        };
         // Arm the flight recorder: fresh buffers (byte-identical reuse),
         // track metadata, and per-link tracing in the network engine.
         // Compiled out without the `trace` feature.
@@ -1011,8 +1107,11 @@ impl Simulation {
             }
             tr.name_process(PID_REQUEST, "requests");
             tr.name_process(PID_GAUGE, "gauges");
+            if fault.is_some() {
+                tr.name_process(crate::trace::PID_FAULT, "faults");
+            }
         }
-        Ok(RunSession {
+        let mut session = RunSession {
             wall_start,
             retain,
             free_slots: Vec::new(),
@@ -1022,6 +1121,7 @@ impl Simulation {
             stepper,
             thermal_err: None,
             dtm_rt,
+            fault,
             ledger,
             arb: ArbitrationQueue::new(self.params.age_threshold_ns),
             chiplets: (0..self.hw.num_chiplets()).map(|_| ChipletState::default()).collect(),
@@ -1046,7 +1146,15 @@ impl Simulation {
             compute_energy: 0.0,
             total_capacity,
             model_cache: HashMap::new(),
-        })
+        };
+        // Fault instants ride the ordinary event queue, so they
+        // interleave deterministically with arrivals and completions.
+        if let Some(f) = &session.fault {
+            for (i, tog) in f.toggles.iter().enumerate() {
+                push_event(&mut session.queue, &mut session.seq, tog.at_ns, Event::Fault(i));
+            }
+        }
+        Ok(session)
     }
 
     /// Advance the session, processing every arrival and queue event with
@@ -1071,6 +1179,7 @@ impl Simulation {
             stepper,
             thermal_err,
             dtm_rt,
+            fault,
             ledger,
             arb,
             chiplets,
@@ -1111,7 +1220,13 @@ impl Simulation {
             ($c:expr, $t:expr) => {{
                 let _prof_issue = crate::prof::scope(crate::prof::Subsystem::ComputeIssue);
                 let cid = $c;
-                if !chiplets[cid].busy {
+                // A killed chiplet issues nothing until repaired (its
+                // queue is purged when its owners abort, but the guard
+                // also covers the window inside one event's handling).
+                let dead = fault
+                    .as_ref()
+                    .is_some_and(|f| f.chiplet_dead_cnt.get(cid).is_some_and(|&c| c > 0));
+                if !chiplets[cid].busy && !dead {
                     if let Some((inst, layer, seg, inference)) = chiplets[cid].queue.pop_front() {
                         let r = instances[inst].results[layer][seg];
                         // DVFS feedback: the chiplet's current operating
@@ -1200,6 +1315,64 @@ impl Simulation {
             }};
         }
 
+        // The routing view injections must consult: the fault-masked
+        // topology while a fault runtime exists, the pristine one
+        // otherwise.  A macro (not a binding) so each use borrows only
+        // for the expression — `fault` stays mutably borrowable between.
+        macro_rules! net_topo {
+            () => {
+                fault.as_ref().map(|f| &f.topo).unwrap_or(&self.topo)
+            };
+        }
+
+        // Fault-path teardown: a request whose in-flight state was hit by
+        // a fault (killed chiplet, partitioned flow destination) aborts.
+        // Its resources free immediately, its queued segments are purged,
+        // its remaining events become no-ops via the `finished` guards,
+        // and it counts as dropped — request conservation (offered ==
+        // completed + dropped + still-queued) holds.  The slot is NOT
+        // retired: stale ComputeDone events still index the mapping.
+        macro_rules! abort_instance {
+            ($inst:expr, $t:expr) => {{
+                let inst = $inst;
+                if !instances[inst].finished {
+                    instances[inst].finished = true;
+                    ledger.release_mapping(&instances[inst].mapping);
+                    if let Some(active) = tenant_active.get_mut(instances[inst].req.tenant) {
+                        *active = active.saturating_sub(1);
+                    }
+                    for c in chiplets.iter_mut() {
+                        c.queue.retain(|&(i, _, _, _)| i != inst);
+                    }
+                    flow_of.retain(|_, v| v.0 != inst);
+                    if let Some(f) = fault.as_mut() {
+                        f.report.aborts += 1;
+                    }
+                    let (id, kind, tenant) = {
+                        let r = &instances[inst].req;
+                        (r.id, r.kind, r.tenant)
+                    };
+                    notify!(on_model_dropped(id, kind, $t));
+                    sink.on_dropped(id, kind, tenant, $t);
+                    trace_hook!(tracer, |tr| {
+                        tr.async_end(
+                            crate::trace::TraceCategories::REQUEST,
+                            crate::trace::PID_REQUEST,
+                            tenant as u32,
+                            "request",
+                            id as u64,
+                            $t,
+                            vec![("state", "aborted-by-fault".into())],
+                        );
+                    });
+                    if *retain {
+                        dropped.push((id, kind));
+                    }
+                    push_event(queue, seq, $t, Event::TryMap);
+                }
+            }};
+        }
+
         // Models are immutable per kind: build each once and clone cheaply
         // (arbitration probes used to rebuild the full layer table per
         // attempt — a measurable share of wall time, see EXPERIMENTS §Perf).
@@ -1222,6 +1395,18 @@ impl Simulation {
                 } else {
                     None
                 };
+                // Fault-aware placement: dead chiplets are excluded from
+                // every mapping attempt.  Computed once per arbitration
+                // pass; `None` while nothing is down, so the faultless
+                // path stays untouched.
+                let alive: Option<Vec<bool>> = fault.as_ref().and_then(|f| {
+                    if f.chiplet_dead_cnt.iter().all(|&c| c == 0) {
+                        None
+                    } else {
+                        Some(f.chiplet_dead_cnt.iter().map(|&c| c == 0).collect())
+                    }
+                });
+                let mut mask_buf: Vec<bool> = Vec::new();
                 loop {
                     // Probe and commit in one pass: the mapper journals
                     // its allocations on the live ledger and rolls back on
@@ -1234,10 +1419,14 @@ impl Simulation {
                         let model = model_of(req.kind);
                         let ctx = MapContext {
                             hw: &self.hw,
-                            topo: &self.topo,
+                            topo: net_topo!(),
                             heat: heat.as_deref(),
                             heat_weight_hops: self.params.thermal_aware_hops,
-                            allowed: mask_of(&self.tenant_masks, req.tenant),
+                            allowed: combine_allowed(
+                                mask_of(&self.tenant_masks, req.tenant),
+                                alive.as_deref(),
+                                &mut mask_buf,
+                            ),
                         };
                         crate::prof::count(crate::prof::Counter::MappingAttempts, 1);
                         probed = self.mapper.try_map(&ctx, &model, &mut ledger);
@@ -1311,11 +1500,17 @@ impl Simulation {
                         let mut flows = Vec::new();
                         for layer in &inst.mapping.layers {
                             for seg in layer {
+                                // Unreachable I/O chiplets rank last
+                                // (`None` would otherwise sort *first*
+                                // under `Option`'s ordering and pick a
+                                // partitioned source).
                                 let io = *self
                                     .hw
                                     .io_chiplets
                                     .iter()
-                                    .min_by_key(|&&io| self.topo.hops(io, seg.chiplet))
+                                    .min_by_key(|&&io| {
+                                        net_topo!().hops(io, seg.chiplet).unwrap_or(usize::MAX)
+                                    })
                                     .unwrap();
                                 flows.push(FlowSpec {
                                     src: io,
@@ -1339,7 +1534,17 @@ impl Simulation {
                             instances[inst_id] = inst;
                         }
                         for f in flows {
-                            tenant_traffic.add_flow(tenant, f.bytes, self.topo.hops(f.src, f.dst));
+                            if !net_topo!().reachable(f.src, f.dst) {
+                                // The weight source is partitioned away:
+                                // the request can never start.
+                                if let Some(fr) = fault.as_mut() {
+                                    fr.report.flow_fails += 1;
+                                }
+                                abort_instance!(inst_id, $t);
+                                break;
+                            }
+                            let hops = net_topo!().hops(f.src, f.dst).unwrap_or(0);
+                            tenant_traffic.add_flow(tenant, f.bytes, hops);
                             let id = net.inject(f, $t);
                             flow_of.insert(id, (inst_id, WEIGHT_LAYER, 0));
                         }
@@ -1378,6 +1583,10 @@ impl Simulation {
                             return false;
                         }
                         let model = model_of(req.kind);
+                        // Deliberately NOT masked by dead chiplets: the
+                        // drop verdict is "can never fit", and a chiplet
+                        // down right now may be repaired later — such
+                        // requests queue for the repair instead.
                         let probe_ctx = MapContext {
                             hw: &self.hw,
                             topo: &self.topo,
@@ -1481,7 +1690,17 @@ impl Simulation {
                     }
                 });
                 for f in flows {
-                    tenant_traffic.add_flow(tenant, f.bytes, self.topo.hops(f.src, f.dst));
+                    if !net_topo!().reachable(f.src, f.dst) {
+                        // The destination segment is partitioned away
+                        // mid-run: this inference can never complete.
+                        if let Some(fr) = fault.as_mut() {
+                            fr.report.flow_fails += 1;
+                        }
+                        abort_instance!(inst, $t);
+                        break;
+                    }
+                    let hops = net_topo!().hops(f.src, f.dst).unwrap_or(0);
+                    tenant_traffic.add_flow(tenant, f.bytes, hops);
                     let id = net.inject(f, $t);
                     flow_of.insert(id, (inst, layer + 1, inference));
                 }
@@ -1492,6 +1711,11 @@ impl Simulation {
             ($inst:expr, $t:expr) => {{
                 let inst = $inst;
                 crate::prof::count(crate::prof::Counter::RequestsCompleted, 1);
+                if let Some(f) = fault.as_mut() {
+                    if f.downtime.any_down() {
+                        f.report.goodput_under_fault += 1;
+                    }
+                }
                 instances[inst].finished = true;
                 ledger.release_mapping(&instances[inst].mapping);
                 if let Some(active) = tenant_active.get_mut(instances[inst].req.tenant) {
@@ -1715,6 +1939,7 @@ impl Simulation {
                             tr.instant(
                                 TC::DTM,
                                 crate::trace::PID_GAUGE,
+                                0,
                                 "governor",
                                 *now,
                                 vec![
@@ -1787,6 +2012,12 @@ impl Simulation {
                     let cid = instances[inst].mapping.layers[layer][seg].chiplet;
                     chiplets[cid].busy = false;
                     start_chiplet_if_idle!(cid, entry.t);
+                    if instances[inst].finished {
+                        // Aborted-by-fault: the segment's chiplet is freed
+                        // above; everything else about the instance is
+                        // already torn down.
+                        continue;
+                    }
                     let nsegs = instances[inst].mapping.layers[layer].len();
                     let done = {
                         let lr = &mut instances[inst].layers[layer];
@@ -1833,6 +2064,209 @@ impl Simulation {
                         }
                     }
                 }
+                Event::Fault(i) => {
+                    let t = entry.t;
+                    let tog = fault.as_ref().expect("fault event without runtime").toggles[i];
+                    // Resolve the toggle to the directed links it governs
+                    // (a link fault takes both directions of the physical
+                    // channel with it; a router fault severs every link
+                    // touching the node).
+                    let mut links_touched: Vec<usize> = Vec::new();
+                    match (tog.kind, tog.target) {
+                        (FaultKind::Link, FaultTarget::NodePair(a, b)) => {
+                            for (l, link) in self.topo.links.iter().enumerate() {
+                                if (link.src == a && link.dst == b)
+                                    || (link.src == b && link.dst == a)
+                                {
+                                    links_touched.push(l);
+                                }
+                            }
+                        }
+                        (FaultKind::Link, FaultTarget::Index(l)) => {
+                            links_touched.push(l);
+                            let (a, b) = (self.topo.links[l].src, self.topo.links[l].dst);
+                            for (r, link) in self.topo.links.iter().enumerate() {
+                                if link.src == b && link.dst == a {
+                                    links_touched.push(r);
+                                }
+                            }
+                        }
+                        (FaultKind::Router, FaultTarget::Index(n)) => {
+                            links_touched.extend(self.topo.out_links[n].iter().copied());
+                            links_touched.extend(self.topo.in_links[n].iter().copied());
+                        }
+                        _ => {}
+                    }
+                    links_touched.sort_unstable();
+                    links_touched.dedup();
+                    if tog.kind == FaultKind::Link && links_touched.is_empty() {
+                        crate::warn_once!(
+                            "fault plan targets link {:?} but no such link exists; ignoring",
+                            tog.target
+                        );
+                        continue;
+                    }
+                    // Canonical resource id for the downtime ledger and
+                    // timeline: smallest directed link index for link
+                    // faults, the node/chiplet index otherwise.
+                    let canonical = match (tog.kind, tog.target) {
+                        (FaultKind::Link, _) => links_touched.first().copied().unwrap_or(0),
+                        (_, FaultTarget::Index(x)) => x,
+                        _ => 0,
+                    };
+                    {
+                        let f = fault.as_mut().expect("fault event without runtime");
+                        if tog.up {
+                            f.report.repairs += 1;
+                            f.downtime.up(tog.kind, canonical, t);
+                        } else {
+                            f.report.injected += 1;
+                            f.downtime.down(tog.kind, canonical, t);
+                            if tog.kind == FaultKind::Sensor {
+                                f.report.sensor_faults += 1;
+                            }
+                        }
+                        f.report.timeline.push(FaultTimelineEntry {
+                            at_ns: t,
+                            kind: tog.kind.name(),
+                            target: canonical,
+                            up: tog.up,
+                        });
+                    }
+                    trace_hook!(tracer, |tr| {
+                        use crate::trace::TraceCategories as TC;
+                        if tr.enabled(TC::FAULT) {
+                            tr.instant(
+                                TC::FAULT,
+                                crate::trace::PID_FAULT,
+                                0,
+                                if tog.up { "repair" } else { "fail" },
+                                t,
+                                vec![
+                                    ("kind", tog.kind.name().into()),
+                                    ("target", (canonical as u64).into()),
+                                ],
+                            );
+                        }
+                    });
+                    match tog.kind {
+                        FaultKind::Link | FaultKind::Router => {
+                            // Ref-count the directed links (link + router
+                            // faults on the same channel stack); reroute
+                            // and let the engine adopt the new tables only
+                            // when the derived mask actually changed.
+                            let mut to_abort: Vec<usize> = Vec::new();
+                            {
+                                let f = fault.as_mut().expect("fault runtime");
+                                let mut changed = false;
+                                for &l in &links_touched {
+                                    let c = &mut f.link_down_cnt[l];
+                                    if tog.up {
+                                        let was = *c;
+                                        *c = c.saturating_sub(1);
+                                        changed |= was == 1;
+                                    } else {
+                                        *c += 1;
+                                        changed |= *c == 1;
+                                    }
+                                }
+                                if changed {
+                                    let mask: Vec<bool> =
+                                        f.link_down_cnt.iter().map(|&c| c > 0).collect();
+                                    // Rebuild from the pristine topology:
+                                    // an all-up mask restores the original
+                                    // routing exactly (mesh X-Y included).
+                                    f.topo = self.topo.clone();
+                                    if mask.iter().any(|&d| d) {
+                                        f.topo.apply_link_mask(&mask);
+                                    }
+                                    for (id, spec) in net.apply_fault(&f.topo, &mask) {
+                                        let Some(owner) = flow_of.remove(&id) else {
+                                            continue;
+                                        };
+                                        if instances[owner.0].finished {
+                                            continue;
+                                        }
+                                        if f.topo.reachable(spec.src, spec.dst) {
+                                            // Restart the transfer over
+                                            // the rerouted path.
+                                            f.report.reroutes += 1;
+                                            let nid = net.inject(spec, t);
+                                            flow_of.insert(nid, owner);
+                                        } else {
+                                            f.report.flow_fails += 1;
+                                            to_abort.push(owner.0);
+                                        }
+                                    }
+                                }
+                            }
+                            to_abort.sort_unstable();
+                            to_abort.dedup();
+                            for v in to_abort {
+                                abort_instance!(v, t);
+                            }
+                        }
+                        FaultKind::Chiplet => {
+                            if let FaultTarget::Index(c) = tog.target {
+                                let mut victims: Vec<usize> = Vec::new();
+                                {
+                                    let f = fault.as_mut().expect("fault runtime");
+                                    if tog.up {
+                                        f.chiplet_dead_cnt[c] =
+                                            f.chiplet_dead_cnt[c].saturating_sub(1);
+                                        if f.chiplet_dead_cnt[c] == 0 {
+                                            // Capacity came back: remap.
+                                            push_event(queue, seq, t, Event::TryMap);
+                                        }
+                                    } else {
+                                        f.chiplet_dead_cnt[c] += 1;
+                                        if f.chiplet_dead_cnt[c] == 1 {
+                                            // Every request with state on
+                                            // the chiplet dies with it
+                                            // (deterministic order:
+                                            // instance index).
+                                            victims = instances
+                                                .iter()
+                                                .enumerate()
+                                                .filter(|(_, inst)| {
+                                                    !inst.finished
+                                                        && inst.mapping.layers.iter().any(
+                                                            |layer| {
+                                                                layer
+                                                                    .iter()
+                                                                    .any(|s| s.chiplet == c)
+                                                            },
+                                                        )
+                                                })
+                                                .map(|(i, _)| i)
+                                                .collect();
+                                        }
+                                    }
+                                }
+                                for v in victims {
+                                    abort_instance!(v, t);
+                                }
+                            }
+                        }
+                        FaultKind::Sensor => {
+                            if let (FaultTarget::Index(c), Some(d)) =
+                                (tog.target, dtm_rt.as_mut())
+                            {
+                                // The governor acts on the lie from the
+                                // next control window on; repair restores
+                                // the honest reading.
+                                d.set_sensor_fault(
+                                    c,
+                                    if tog.up { None } else { tog.sensor.map(|m| (m, t)) },
+                                );
+                            }
+                        }
+                        // Board crashes are fleet-level; the dispatcher
+                        // executes them (a single board has no "outside"
+                        // to fail from).
+                        FaultKind::Board => {}
+                    }
+                }
             }
         }
 
@@ -1852,6 +2286,7 @@ impl Simulation {
             mut power,
             stepper,
             dtm_rt,
+            fault,
             chiplets,
             tenant_traffic,
             outcomes,
@@ -1915,6 +2350,13 @@ impl Simulation {
         #[cfg(not(feature = "trace"))]
         let _ = (&instances, &mut arb);
         let span_ns = now;
+        // Close the fault report: availability folds open outages to the
+        // end of the run.  `None` (plan absent or armed empty) keeps the
+        // report — and the fingerprint — identical to a faultless run.
+        let fault = fault.map(|mut f| {
+            f.report.finish(&f.downtime, span_ns);
+            f.report
+        });
         let link_util =
             crate::noc::LinkUtilization::from_busy(&net.link_busy_ns(), span_ns);
         let hi = span_ns.saturating_sub(self.params.cooldown_ns).max(self.params.warmup_ns);
@@ -1952,6 +2394,7 @@ impl Simulation {
             stats_window: (self.params.warmup_ns, hi),
             thermal,
             dtm,
+            fault,
             // Host-timing data only; never part of the fingerprint.
             profile: crate::prof::snapshot(wall_ns as u64),
         };
@@ -1968,6 +2411,26 @@ fn mask_of(masks: &Option<Vec<Vec<bool>>>, tenant: usize) -> Option<&[bool]> {
     masks.as_ref().and_then(|m| m.get(tenant)).map(|v| v.as_slice())
 }
 
+/// AND a tenant placement mask with the fault-time alive mask.  With at
+/// most one side present that side is returned as-is (no allocation);
+/// with both, the conjunction lands in `buf`.
+fn combine_allowed<'a>(
+    tenant: Option<&'a [bool]>,
+    alive: Option<&'a [bool]>,
+    buf: &'a mut Vec<bool>,
+) -> Option<&'a [bool]> {
+    match (tenant, alive) {
+        (None, None) => None,
+        (Some(m), None) => Some(m),
+        (None, Some(a)) => Some(a),
+        (Some(m), Some(a)) => {
+            buf.clear();
+            buf.extend(m.iter().zip(a).map(|(&x, &y)| x && y));
+            Some(buf.as_slice())
+        }
+    }
+}
+
 /// Zero-contention latency estimate of one flow, feeding the breakdown's
 /// NoI-serialization floor: the head packet pipelines through the route
 /// (hop latency + one packet serialization per hop) and the remaining
@@ -1976,7 +2439,9 @@ fn mask_of(masks: &Option<Vec<Vec<bool>>>, tenant: usize) -> Option<&[bool]> {
 /// the same quantity up to the router-pipeline approximation.
 #[cfg(feature = "trace")]
 fn ideal_flow_ns(topo: &Topology, src: usize, dst: usize, bytes: u64) -> u64 {
-    let path = topo.path(src, dst);
+    let Some(path) = topo.path(src, dst) else {
+        return 0; // unreachable: no serialization floor to report
+    };
     if path.is_empty() {
         return 0;
     }

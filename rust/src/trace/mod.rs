@@ -74,6 +74,8 @@ pub const PID_NOI: u32 = 2;
 pub const PID_REQUEST: u32 = 3;
 /// Process-id of the gauge/counter tracks.
 pub const PID_GAUGE: u32 = 4;
+/// Process-id of the fault-injection instant track.
+pub const PID_FAULT: u32 = 5;
 /// Pid stride between replica boards in a merged fleet trace.
 pub const PID_STRIDE: u32 = 8;
 
@@ -94,19 +96,22 @@ impl TraceCategories {
     pub const GAUGES: TraceCategories = TraceCategories(1 << 4);
     /// Fleet-level events (dispatch, autoscale, migration).
     pub const FLEET: TraceCategories = TraceCategories(1 << 5);
+    /// Fault-injection instants (failures and repairs).
+    pub const FAULT: TraceCategories = TraceCategories(1 << 6);
 
-    const NAMES: [(&'static str, TraceCategories); 6] = [
+    const NAMES: [(&'static str, TraceCategories); 7] = [
         ("request", TraceCategories::REQUEST),
         ("compute", TraceCategories::COMPUTE),
         ("noi", TraceCategories::NOI),
         ("dtm", TraceCategories::DTM),
         ("gauges", TraceCategories::GAUGES),
         ("fleet", TraceCategories::FLEET),
+        ("fault", TraceCategories::FAULT),
     ];
 
     /// Every category.
     pub fn all() -> TraceCategories {
-        TraceCategories(0x3F)
+        TraceCategories(0x7F)
     }
 
     /// No category (records nothing).
@@ -140,7 +145,7 @@ impl TraceCategories {
                 Some((_, c)) => out = out.with(*c),
                 None => anyhow::bail!(
                     "unknown trace category '{tok}' (expected one of: all, request, \
-                     compute, noi, dtm, gauges, fleet)"
+                     compute, noi, dtm, gauges, fleet, fault)"
                 ),
             }
         }

@@ -214,7 +214,7 @@ fn custom_topology_from_json() {
     .unwrap();
     let hw = HardwareConfig::from_json(&hw_json).unwrap();
     let topo = Topology::build(&hw);
-    assert_eq!(topo.hops(0, 2), 2);
+    assert_eq!(topo.hops(0, 2), Some(2));
 }
 
 // ------------------------------------------------------- workload edges

@@ -1,0 +1,205 @@
+//! Integration tests for the fault-injection subsystem: per-seed
+//! byte-identical `FaultReport`s, the zero-perturbation rule (an armed
+//! but event-free plan must not move a single bit), partition-kills-flow
+//! on both network fidelities, and fleet-level board-crash recovery
+//! (goodput floor + request conservation).
+
+use chipsim::config::{HardwareConfig, LinkParams, NocFidelity, SimParams};
+use chipsim::fault::FaultPlan;
+use chipsim::fleet::{parse_routing, Fleet, FleetSpec};
+use chipsim::noc::engine::PacketEngine;
+use chipsim::noc::flit::FlitEngine;
+use chipsim::noc::topology::mesh;
+use chipsim::noc::{FlowSpec, NetworkSim};
+use chipsim::serving::{ArrivalSpec, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::workload::ModelKind;
+use chipsim::TimeNs;
+
+fn serving_params(fidelity: NocFidelity) -> SimParams {
+    SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        noc_fidelity: fidelity,
+        ..SimParams::default()
+    }
+}
+
+fn board(fidelity: NocFidelity, plan: Option<FaultPlan>) -> anyhow::Result<Simulation> {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(serving_params(fidelity))
+        .faults(plan)
+        .build()
+}
+
+/// Single-kind load keeps debug-build runs fast (same idiom as the
+/// serving/fleet tests).
+fn light_spec(rate: f64, horizon_ms: f64) -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(rate).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(horizon_ms)
+        .warmup_ms(2.0)
+        .window_ms(2.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+// ------------------------------------------------------ per-seed identity
+
+#[test]
+fn fault_reports_are_byte_identical_per_seed() {
+    // Same seed + same plan => byte-identical FaultReport and SimReport
+    // fingerprints, run after run.  The plan exercises a transient
+    // chiplet kill plus a lying sensor so both abort and overlay paths
+    // execute.
+    let plan = FaultPlan::parse("chiplet:7@3ms+5ms, sensor:3:stuck=95@2ms").unwrap();
+    let run = || {
+        board(NocFidelity::Packet, Some(plan.clone()))
+            .unwrap()
+            .run_traffic_with(&light_spec(1_500.0, 12.0), 0xFA17)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    let fa = a.sim.fault.as_ref().expect("fault plan fired");
+    let fb = b.sim.fault.as_ref().expect("fault plan fired");
+    assert!(fa.injected >= 1, "chiplet kill must inject");
+    assert!(fa.repairs >= 1, "transient fault must repair");
+    assert!(fa.sensor_faults >= 1, "sensor overlay must arm");
+    assert!(!fa.timeline.is_empty());
+    // The executed timeline is time-ordered.
+    assert!(fa.timeline.windows(2).all(|w| w[0].at_ns <= w[1].at_ns));
+    assert_eq!(fa.fingerprint(), fb.fingerprint(), "FaultReport diverged across runs");
+    assert_eq!(a.sim.fingerprint(), b.sim.fingerprint(), "SimReport diverged across runs");
+    assert_eq!(a.stats.fingerprint(), b.stats.fingerprint());
+}
+
+// ------------------------------------------------------ zero perturbation
+
+#[test]
+fn armed_but_empty_plan_is_fingerprint_identical_to_faultless() {
+    // Two flavors of "armed but nothing fires on a board": a plan with
+    // zero events, and a board-only plan (the sim skips board: events —
+    // they belong to the fleet dispatcher).  Both must leave the run
+    // fingerprint-identical to no plan at all, on both fidelities.
+    for fidelity in [NocFidelity::Packet, NocFidelity::Flit] {
+        let spec = light_spec(1_200.0, 8.0);
+        let run = |plan: Option<FaultPlan>| {
+            board(fidelity, plan).unwrap().run_traffic_with(&spec, 7).unwrap()
+        };
+        let clean = run(None);
+        assert!(clean.sim.fault.is_none(), "faultless run must not carry a report");
+        for armed in ["seed=1234", "board:2@5ms"] {
+            let r = run(Some(FaultPlan::parse(armed).unwrap()));
+            assert!(
+                r.sim.fault.is_none(),
+                "'{armed}' resolved to zero toggles and must attach no report"
+            );
+            assert_eq!(
+                clean.sim.fingerprint(),
+                r.sim.fingerprint(),
+                "armed-but-empty plan '{armed}' perturbed a {fidelity:?} run"
+            );
+            assert_eq!(clean.stats.fingerprint(), r.stats.fingerprint());
+        }
+    }
+}
+
+// ------------------------------------------------- partition kills flows
+
+#[test]
+fn partitioned_destination_fails_the_flow_on_both_fidelities() {
+    // 1x2 mesh: one undirected link is the only route.  Killing both
+    // directed halves partitions node 1; the in-flight flow must be
+    // dropped by `apply_fault` (no reroute exists) and never complete.
+    let run = |mut engine: Box<dyn NetworkSim>| {
+        let id = engine.inject(FlowSpec { src: 0, dst: 1, bytes: 4096 }, 0);
+        let topo = mesh(1, 2, &LinkParams::default());
+        let down = vec![true; topo.links.len()];
+        let mut masked = topo.clone();
+        masked.apply_link_mask(&down);
+        assert_eq!(masked.hops(0, 1), None, "destination must be partitioned");
+        assert_eq!(masked.path(0, 1), None);
+        let dropped = engine.apply_fault(&masked, &down);
+        assert_eq!(
+            dropped,
+            vec![(id, FlowSpec { src: 0, dst: 1, bytes: 4096 })],
+            "the crossing flow must be handed back for abort"
+        );
+        assert!(
+            engine.advance_until(TimeNs::MAX).is_none(),
+            "a dropped flow must never complete"
+        );
+    };
+    let topo = mesh(1, 2, &LinkParams::default());
+    run(Box::new(PacketEngine::new(topo.clone())));
+    run(Box::new(FlitEngine::new(topo)));
+}
+
+// ------------------------------------------- fleet board-crash recovery
+
+#[test]
+fn fleet_single_board_crash_recovers_and_conserves_requests() {
+    // 4 boards at a rate 3 survivors can absorb; board 1 crashes at 6 ms
+    // of a 15 ms horizon.  The dispatcher must migrate its queued work,
+    // retry its in-flight requests, conserve every offered request, and
+    // keep goodput at >= (N-1)/N of the healthy baseline.
+    let spec = light_spec(6_000.0, 15.0);
+    let seed = 0xB0A2D;
+    let run = |plan: Option<FaultPlan>, threads: usize| {
+        Fleet::new(
+            FleetSpec::new(spec.clone(), 4).threads(threads).faults(plan),
+            || board(NocFidelity::Packet, None),
+            parse_routing("least-outstanding").unwrap(),
+        )
+        .run(seed)
+        .unwrap()
+    };
+    let healthy = run(None, 1);
+    assert!(healthy.fault.is_none());
+    assert!(healthy.goodput_rps() > 0.0);
+
+    let plan = FaultPlan::parse("board:1@6ms, retry=3:200us:2ms:20ms").unwrap();
+    let crashed = run(Some(plan.clone()), 1);
+    let f = crashed.fault.as_ref().expect("board crash must attach a FaultReport");
+    assert!(crashed.replicas[1].crashed, "board 1 must be marked crashed");
+    assert_eq!(crashed.replicas.iter().filter(|r| r.crashed).count(), 1);
+    assert!(f.injected >= 1);
+    assert!(f.timeline.iter().any(|e| e.kind == "board" && e.target == 1 && !e.up));
+    assert!(f.availability > 0.0 && f.availability < 1.0, "one dead board of four");
+    // Aborted in-flight work was retried, and anything dropped was
+    // dropped by exhausting the policy, not lost.
+    assert!(f.retries >= f.recovered);
+    // Request conservation: every pulled request completed, finished
+    // inside warm-up, or was counted dropped.
+    assert_eq!(
+        crashed.offered,
+        crashed.global.completed() + crashed.global.warmup_skipped + crashed.global.dropped,
+        "requests were silently lost across the crash"
+    );
+    assert_eq!(
+        healthy.offered,
+        healthy.global.completed() + healthy.global.warmup_skipped + healthy.global.dropped,
+    );
+    // Graceful degradation: 3 surviving boards keep at least 3/4 of the
+    // healthy goodput at this (sub-saturation) rate.
+    assert!(
+        crashed.goodput_rps() >= 0.75 * healthy.goodput_rps(),
+        "goodput under crash {:.0} req/s < 75% of healthy {:.0} req/s",
+        crashed.goodput_rps(),
+        healthy.goodput_rps()
+    );
+    // And the whole crash-migrate-retry pipeline stays thread-deterministic.
+    let crashed4 = run(Some(plan), 4);
+    assert_eq!(
+        crashed.fingerprint(),
+        crashed4.fingerprint(),
+        "worker thread count changed the faulted fleet outcome"
+    );
+    assert_eq!(
+        f.fingerprint(),
+        crashed4.fault.as_ref().unwrap().fingerprint(),
+        "worker thread count changed the FaultReport"
+    );
+}

@@ -19,6 +19,12 @@ CHIPSIM_BENCH_JSON) with the throughput metric it enforces:
   - `BENCH_noc_flit*.json`  -> `flit_hops_per_s`   (flit-level NoI engine)
   - `BENCH_fleet*.json`     -> `fleet_requests_per_s` (fleet serving loop)
 
+ADVISORY pairs work the same way but never fail the gate — today that is
+`speedup` on `BENCH_noc_flit_parallel*.json` (parallel-vs-sequential
+wall-clock ratio, which depends on the runner's core count).  Advisory
+floors still ratchet with --ratchet, so the committed number tracks
+reality.
+
 Every fresh artifact is compared against the committed baseline of the
 same name in <baseline_dir> (the repo root).  Fails when a fresh result
 drops more than `factor` times below its baseline.
@@ -55,6 +61,14 @@ import sys
 CHECKS = [
     ("BENCH_noc_flit*.json", "flit_hops_per_s"),
     ("BENCH_fleet*.json", "fleet_requests_per_s"),
+]
+
+# (artifact glob, advisory metric) — reported with the same floor math
+# but never failing.  `speedup` depends on the runner's core count, so
+# its floor stays advisory; --ratchet still rewrites it alongside the
+# enforced metrics, so the committed trajectory is real.
+ADVISORY = [
+    ("BENCH_noc_flit_parallel*.json", "speedup"),
 ]
 
 
@@ -146,55 +160,68 @@ def ratchet(fresh_dir, baseline_dir, dry_run=False):
     return 0
 
 
-def check_glob(pattern, metric, args, failures):
-    """Compare every baseline matching `pattern`; returns cases checked."""
+def check_glob(pattern, metric, args, failures, advisory=False):
+    """Compare every baseline matching `pattern`; returns cases checked.
+
+    With advisory=True every problem is printed instead of failing —
+    used for floors (like `speedup`) that depend on the runner."""
+    problems = [] if advisory else failures
     baselines = sorted(glob.glob(os.path.join(args.baseline_dir, pattern)))
     if not baselines:
-        failures.append(
+        problems.append(
             f"no {pattern} baselines found in {args.baseline_dir} — "
             f"the '{metric}' perf guard checked nothing"
         )
-        return 0
-    checked = 0
-    for base_path in baselines:
-        name = os.path.basename(base_path)
-        base_doc = load_doc(base_path)
-        base = metric_of(base_doc, metric)
-        # A baseline stamped "estimated": true was never measured (the
-        # bootstrap committed before a toolchain existed): report but do
-        # not fail on it.  The first real `cargo bench` run rewrites the
-        # file without the stamp, arming the gate.
-        estimated = bool(base_doc.get("estimated"))
-        if estimated and args.enforce_measured:
-            failures.append(
-                f"{name}: baseline is stamped 'estimated' — the gate would be advisory; "
-                "refresh it from a measured CI bench-json artifact"
-            )
-            continue
-        if base is None:
-            failures.append(f"{name}: baseline has no '{metric}' metric")
-            continue
-        fresh_path = os.path.join(args.fresh_dir, name)
-        if not os.path.exists(fresh_path):
-            failures.append(f"{name}: fresh result missing from {args.fresh_dir}")
-            continue
-        fresh = metric_of(load_doc(fresh_path), metric)
-        if fresh is None:
-            failures.append(f"{name}: fresh result has no '{metric}' metric")
-            continue
-        checked += 1
-        ratio = fresh / base if base > 0 else float("inf")
-        tag = " [estimated baseline, advisory]" if estimated else ""
-        print(f"{name}: baseline {base:.3g} fresh {fresh:.3g} {metric} ({ratio:.2f}x){tag}")
-        if fresh < base / args.factor:
-            msg = (
-                f"{name}: {metric} regressed more than {args.factor}x below baseline "
-                f"({fresh:.3g} < {base:.3g} / {args.factor})"
-            )
-            if estimated:
-                print(f"ADVISORY (not failing, baseline is estimated): {msg}")
-            else:
-                failures.append(msg)
+        checked = 0
+    else:
+        checked = 0
+        for base_path in baselines:
+            name = os.path.basename(base_path)
+            base_doc = load_doc(base_path)
+            base = metric_of(base_doc, metric)
+            # A baseline stamped "estimated": true was never measured (the
+            # bootstrap committed before a toolchain existed): report but do
+            # not fail on it.  The first real `cargo bench` run rewrites the
+            # file without the stamp, arming the gate.
+            estimated = bool(base_doc.get("estimated"))
+            if estimated and args.enforce_measured and not advisory:
+                problems.append(
+                    f"{name}: baseline is stamped 'estimated' — the gate would be advisory; "
+                    "refresh it from a measured CI bench-json artifact"
+                )
+                continue
+            if base is None:
+                problems.append(f"{name}: baseline has no '{metric}' metric")
+                continue
+            fresh_path = os.path.join(args.fresh_dir, name)
+            if not os.path.exists(fresh_path):
+                problems.append(f"{name}: fresh result missing from {args.fresh_dir}")
+                continue
+            fresh = metric_of(load_doc(fresh_path), metric)
+            if fresh is None:
+                problems.append(f"{name}: fresh result has no '{metric}' metric")
+                continue
+            checked += 1
+            ratio = fresh / base if base > 0 else float("inf")
+            tag = ""
+            if advisory:
+                tag = " [advisory metric]"
+            elif estimated:
+                tag = " [estimated baseline, advisory]"
+            print(f"{name}: baseline {base:.3g} fresh {fresh:.3g} {metric} ({ratio:.2f}x){tag}")
+            if fresh < base / args.factor:
+                msg = (
+                    f"{name}: {metric} regressed more than {args.factor}x below baseline "
+                    f"({fresh:.3g} < {base:.3g} / {args.factor})"
+                )
+                if advisory or estimated:
+                    why = "metric is advisory" if advisory else "baseline is estimated"
+                    print(f"ADVISORY (not failing, {why}): {msg}")
+                else:
+                    problems.append(msg)
+    if advisory:
+        for msg in problems:
+            print(f"ADVISORY (not failing): {msg}")
     return checked
 
 
@@ -237,6 +264,8 @@ def main():
     checked = 0
     for pattern, metric in CHECKS:
         checked += check_glob(pattern, metric, args, failures)
+    for pattern, metric in ADVISORY:
+        check_glob(pattern, metric, args, failures, advisory=True)
 
     if failures:
         print("\nbench_check FAILED:", file=sys.stderr)

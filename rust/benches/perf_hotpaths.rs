@@ -6,6 +6,8 @@
 //!   L3  flit NoI engine         (flit-hops/s, wormhole fidelity)
 //!   L3  flit NoI engine, large  (96 flows x 64KB on 12x12 — infeasible
 //!                                before the active-set rewrite)
+//!   L3  flit NoI, parallel      (64x64 mesh sharded over 8 workers vs
+//!                                the sequential engine; `speedup` metric)
 //!   L3  mapper                  (models mapped/s on a busy ledger)
 //!   L3  end-to-end co-sim       (wall time per simulated model)
 //!   L3  streaming traffic       (requests/s through the serving engine)
@@ -119,6 +121,61 @@ fn bench_flit_engine_large() {
     // Serving-scale wormhole case: was O(links²) per cycle before the
     // active-set rewrite and did not finish in bench time.
     flit_case("noc/flit-large: 96 flows x 64KB on 12x12 mesh", 12, 12, 96, 65_536, 11, 2, 1500);
+}
+
+/// Sharded parallel flit engine vs the sequential baseline on a mesh
+/// big enough to amortize the sync barriers.  Records `speedup`
+/// (sequential mean / parallel mean) plus `flit_hops_per_s` into
+/// `BENCH_noc_flit_parallel_*.json`; `python/bench_check.py` reports
+/// the speedup floor advisorily until a measured baseline is ratcheted
+/// in.  The thread count is pinned (not "all cores") so the committed
+/// metric is comparable across hosts.
+fn bench_flit_parallel() {
+    use chipsim::par::{ExecSpec, ShardedFlitEngine};
+    const ROWS: usize = 64;
+    const COLS: usize = 64;
+    const FLOWS: usize = 256;
+    const BYTES: u64 = 16_384;
+    const THREADS: usize = 8;
+    let p = LinkParams::default();
+    let topo = mesh(ROWS, COLS, &p);
+    let nodes = ROWS * COLS;
+    let inject = |e: &mut dyn NetworkSim| {
+        let mut rng = Rng::new(13);
+        for i in 0..FLOWS {
+            let src = rng.below_usize(nodes);
+            let dst = (src + 1 + rng.below_usize(nodes - 1)) % nodes;
+            e.inject(FlowSpec { src, dst, bytes: BYTES }, i as u64 * 50);
+        }
+    };
+    let drain = |e: &mut dyn NetworkSim| -> u64 {
+        while e.advance_until(u64::MAX).is_some() {}
+        e.work_done()
+    };
+    let seq_work = std::cell::Cell::new(0u64);
+    let seq = bench("noc/flit-seq-baseline: 256 flows x 16KB on 64x64 mesh", 1, 800, || {
+        let mut e = FlitEngine::new(topo.clone());
+        inject(&mut e);
+        seq_work.set(std::hint::black_box(drain(&mut e)));
+    });
+    seq.print();
+    let par_work = std::cell::Cell::new(0u64);
+    let r = bench("noc/flit-parallel: 256 flows x 16KB on 64x64 mesh, 8 threads", 1, 800, || {
+        let mut e = ShardedFlitEngine::new(topo.clone(), ExecSpec::threads(THREADS));
+        inject(&mut e);
+        par_work.set(std::hint::black_box(drain(&mut e)));
+    });
+    // The determinism contract the whole PR rests on: identical work.
+    assert_eq!(seq_work.get(), par_work.get(), "sharded engine diverged from sequential");
+    let flit_hops = (par_work.get() / p.width_bytes) as f64;
+    let rate = flit_hops / (r.mean_ns / 1e9);
+    let speedup = seq.mean_ns / r.mean_ns;
+    let r = r.with_metric("flit_hops_per_s", rate).with_metric("speedup", speedup);
+    if let Err(e) = r.save_json(&chipsim::util::benchkit::bench_json_dir()) {
+        eprintln!("benchkit: could not persist parallel flit metrics: {e:#}");
+    }
+    r.print();
+    println!("  -> {:.2} M flit-hops/s, {speedup:.2}x vs sequential", rate / 1e6);
 }
 
 fn bench_mapper() {
@@ -372,6 +429,7 @@ fn main() {
     bench_packet_engine();
     bench_flit_engine();
     bench_flit_engine_large();
+    bench_flit_parallel();
     bench_mapper();
     bench_end_to_end();
     bench_traffic_steady_state();

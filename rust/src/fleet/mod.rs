@@ -646,7 +646,8 @@ impl Fleet {
             drop(prof_dispatch);
             let prof_advance = crate::prof::scope(crate::prof::Subsystem::FleetAdvance);
             let cells: Vec<Mutex<&mut Replica>> = replicas.iter_mut().map(Mutex::new).collect();
-            let results = crate::util::pool::map_catching(spec.threads, cells.len(), |i| {
+            let pool = crate::util::pool::WorkerPool::new(spec.threads);
+            let results = pool.map_catching(cells.len(), |i| {
                 let mut guard = cells[i].lock().expect("replica cell");
                 let r: &mut Replica = &mut guard;
                 if matches!(r.status, RunStatus::Stopped) {

@@ -1,0 +1,343 @@
+//! Shared run instrumentation for the CLI: one parser for the flag
+//! clusters every serving subcommand accepts, and one attach/export
+//! surface over [`Simulation`] / fleet runs.
+//!
+//! Before this module, `--trace*`, `--profile*`, `--faults*`, and
+//! `--threads` handling was copy-pasted across the `traffic`, `mix`,
+//! `fleet`, `batch`, `trace`, and `profile` subcommands, each with its
+//! own slightly different plumbing.  [`RunOptions::from_args`] parses
+//! the whole cluster once (all old flags keep working, spelled exactly
+//! as before), and [`Instrumentation`] owns the lifecycle:
+//!
+//! 1. construction arms the self-profiler if `--profile` was given;
+//! 2. [`attach`](Instrumentation::attach) wires a built [`Simulation`]
+//!    — execution spec (`--threads`), CLI fault plan (replacing a
+//!    preset's), and the flight recorder (first board only, so solo
+//!    interference baselines never reset the shared recorder);
+//! 3. the `write_*`/`finish_*` methods export trace JSON, the
+//!    [`FaultReport`], and the profile (attached report preferred,
+//!    snapshot fallback for sweeps whose probes share one collection).
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::fault::{FaultPlan, FaultReport};
+use crate::par::ExecSpec;
+use crate::prof::ProfileReport;
+use crate::sim::Simulation;
+use crate::trace::{merge_export, TraceCategories, TraceConfig, TraceHandle, TraceRecorder};
+use crate::util::cli::Args;
+use crate::util::json::Value;
+
+/// The parsed `--threads` / `--trace*` / `--profile*` / `--faults*`
+/// flag cluster, shared by every run-shaped subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct RunOptions {
+    /// `--threads N`: `None` when the flag is absent (subcommands pick
+    /// their own default: sequential engines for a single run, all
+    /// cores for fleet/batch worker pools).
+    pub threads: Option<usize>,
+    /// `--trace` / `--trace-filter CATS`: flight-recorder config, or
+    /// `None` when tracing is off (hook sites then cost one pointer
+    /// check per event).
+    pub trace: Option<TraceConfig>,
+    /// `--trace-out FILE.json` (default: results dir).
+    pub trace_out: Option<String>,
+    /// `--profile` / `--profile-out`: self-profile the simulator.
+    pub profile: bool,
+    /// `--profile-out FILE.json` (default: results dir).
+    pub profile_out: Option<String>,
+    /// `--faults PLAN`: a parsed fault plan.  On a scenario run it
+    /// *replaces* the scenario's built-in one.
+    pub faults: Option<FaultPlan>,
+    /// `--faults-out FILE.json`: write the run's [`FaultReport`].
+    pub faults_out: Option<String>,
+}
+
+impl RunOptions {
+    /// Parse the shared cluster from CLI args.  Flags keep their exact
+    /// historical spelling and semantics; errors carry the same
+    /// actionable context the per-subcommand parsers used to print.
+    pub fn from_args(args: &Args) -> anyhow::Result<RunOptions> {
+        let threads = match args.get("threads") {
+            Some(_) => Some(args.get_usize("threads", 0)?),
+            None => None,
+        };
+        let trace = if args.flag("trace")
+            || args.get("trace-filter").is_some()
+            || args.get("trace-out").is_some()
+        {
+            let mut cfg = TraceConfig::default();
+            if let Some(f) = args.get("trace-filter") {
+                cfg.categories = TraceCategories::parse(f)?;
+            }
+            Some(cfg)
+        } else {
+            None
+        };
+        let faults = match args.get("faults") {
+            None => None,
+            Some(spec) => Some(FaultPlan::parse(spec).map_err(|e| {
+                anyhow::anyhow!("--faults: {e:#} (`chipsim faults` has the grammar)")
+            })?),
+        };
+        Ok(RunOptions {
+            threads,
+            trace,
+            trace_out: args.get("trace-out").map(str::to_string),
+            profile: args.flag("profile") || args.get("profile-out").is_some(),
+            profile_out: args.get("profile-out").map(str::to_string),
+            faults,
+            faults_out: args.get("faults-out").map(str::to_string),
+        })
+    }
+
+    /// The [`ExecSpec`] this run asked for: `--threads N` maps to an
+    /// `N`-worker spec (`0` = all cores), an absent flag to the
+    /// sequential default.
+    pub fn exec(&self) -> ExecSpec {
+        match self.threads {
+            Some(n) => ExecSpec::threads(n),
+            None => ExecSpec::default(),
+        }
+    }
+
+    /// Worker count for sites whose unit of parallelism is whole
+    /// boards/scenarios (fleet epochs, batch sweeps), where the
+    /// historical default is all cores.
+    pub fn pool_threads(&self) -> usize {
+        self.threads.unwrap_or(0)
+    }
+
+    /// Finish parsing and start the instrumentation lifecycle (arms the
+    /// profiler, starts the wall-clock).
+    pub fn instrument(self) -> Instrumentation {
+        Instrumentation::new(self)
+    }
+}
+
+/// One attach/export surface for a subcommand's run: owns the parsed
+/// [`RunOptions`], the profile wall-clock, and every adopted trace
+/// recorder handle.  See the module docs for the lifecycle.
+pub struct Instrumentation {
+    opts: RunOptions,
+    started: Instant,
+    tracers: Mutex<Vec<TraceHandle>>,
+}
+
+impl Instrumentation {
+    /// Begin the lifecycle: arms the global self-profiler when
+    /// `--profile` was requested, so every scope and counter hook from
+    /// here on records.
+    pub fn new(opts: RunOptions) -> Instrumentation {
+        if opts.profile {
+            crate::prof::enable();
+        }
+        Instrumentation { opts, started: Instant::now(), tracers: Mutex::new(Vec::new()) }
+    }
+
+    /// The parsed options (for per-subcommand decisions, e.g. rejecting
+    /// `--trace` under `--sweep`).
+    pub fn options(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    /// Mutable options: subcommands with preset fallbacks (mix picks up
+    /// a scenario-carried fault plan when `--faults` is absent) adjust
+    /// the cluster before attaching.
+    pub fn options_mut(&mut self) -> &mut RunOptions {
+        &mut self.opts
+    }
+
+    /// Was `--profile` requested?
+    pub fn profiling(&self) -> bool {
+        self.opts.profile
+    }
+
+    /// Wire a built [`Simulation`]: execution spec, CLI fault plan
+    /// (replacing any preset plan already on the board), and the flight
+    /// recorder.  Only the *first* attached board records a trace —
+    /// mix solo baselines and sweep probes run untraced, exactly as the
+    /// per-subcommand plumbing behaved.
+    pub fn attach(&self, sim: &mut Simulation) {
+        sim.set_exec(self.opts.exec());
+        if let Some(plan) = &self.opts.faults {
+            sim.set_fault_plan(Some(plan.clone()));
+        }
+        if let Some(cfg) = &self.opts.trace {
+            let mut slot = self.tracers.lock().expect("tracer slot");
+            if slot.is_empty() {
+                slot.push(sim.set_trace(cfg.clone()));
+            }
+        }
+    }
+
+    /// Adopt externally created recorder handles (a fleet attaches one
+    /// per replica itself); they join the merged export.
+    pub fn adopt_tracers(&self, handles: &[TraceHandle]) {
+        self.tracers.lock().expect("tracer slot").extend(handles.iter().cloned());
+    }
+
+    /// Export every adopted trace as one Chrome trace-event document to
+    /// `--trace-out` (or the results dir under `default_name`).  No-op
+    /// when tracing was off.
+    pub fn export_trace(&self, default_name: &str) -> anyhow::Result<()> {
+        let tracers = self.tracers.lock().expect("tracer slot");
+        if tracers.is_empty() {
+            return Ok(());
+        }
+        let recs: Vec<_> = tracers.iter().map(|h| h.lock().expect("trace lock")).collect();
+        let refs: Vec<&TraceRecorder> = recs.iter().map(|g| &**g).collect();
+        write_trace_doc(&merge_export(&refs), self.opts.trace_out.as_deref(), default_name)
+    }
+
+    /// Write the run's [`FaultReport`] to `--faults-out`.  A run
+    /// without a fired fault has no report — that is an error, not a
+    /// silent no-op, so CI gates can't pass vacuously.
+    pub fn write_fault_report(&self, fault: Option<&FaultReport>) -> anyhow::Result<()> {
+        write_fault_report(self.opts.faults_out.as_deref(), fault)
+    }
+
+    /// Close out `--profile`: prefer the profile attached to the run's
+    /// report (its wall-clock brackets exactly the simulated region);
+    /// fall back to a fresh snapshot over this instrumentation's own
+    /// wall time (sweeps and batches, whose many runs share one
+    /// collection).  No-op when profiling was off.
+    pub fn finish_profile(
+        &self,
+        attached: Option<&ProfileReport>,
+        default_name: &str,
+    ) -> anyhow::Result<()> {
+        if !self.opts.profile {
+            return Ok(());
+        }
+        let fallback = crate::prof::snapshot(self.started.elapsed().as_nanos() as u64);
+        write_profile(
+            attached.or(fallback.as_ref()),
+            self.opts.profile_out.as_deref(),
+            default_name,
+        )
+    }
+}
+
+/// Write an exported trace document to `out`, or into the results dir
+/// under `default_name`.
+pub fn write_trace_doc(doc: &Value, out: Option<&str>, default_name: &str) -> anyhow::Result<()> {
+    match out {
+        Some(path) => {
+            std::fs::write(path, crate::util::json::to_string_pretty(doc))?;
+            println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+        }
+        None => {
+            let path = crate::metrics::write_json(default_name, doc)?;
+            println!(
+                "trace written to {} (load in Perfetto / chrome://tracing)",
+                path.display()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Write a [`FaultReport`] to `out` (see
+/// [`Instrumentation::write_fault_report`]); no-op when `out` is `None`.
+pub fn write_fault_report(out: Option<&str>, fault: Option<&FaultReport>) -> anyhow::Result<()> {
+    let Some(path) = out else { return Ok(()) };
+    let f = fault.ok_or_else(|| {
+        anyhow::anyhow!(
+            "--faults-out: the run produced no FaultReport (arm a plan with --faults \
+             or a fault-* scenario whose events fire inside the horizon)"
+        )
+    })?;
+    std::fs::write(path, crate::util::json::to_string_pretty(&f.to_json()))?;
+    println!("fault report written to {path}");
+    Ok(())
+}
+
+/// Print a collected profile and write its JSON to `out` (or the
+/// results dir under `default_name`), plus an inferno-compatible
+/// `.collapsed` sibling for flamegraph rendering.
+pub fn write_profile(
+    profile: Option<&ProfileReport>,
+    out: Option<&str>,
+    default_name: &str,
+) -> anyhow::Result<()> {
+    let Some(p) = profile else {
+        println!(
+            "self-profiling requested, but no profile was collected (built without \
+             the `prof` feature?)"
+        );
+        return Ok(());
+    };
+    print!("{}", p.render());
+    println!("{}", p.summary());
+    let json_path = match out {
+        Some(path) => {
+            std::fs::write(path, crate::util::json::to_string_pretty(&p.to_json()))?;
+            std::path::PathBuf::from(path)
+        }
+        None => crate::metrics::write_json(default_name, &p.to_json())?,
+    };
+    let collapsed_path = json_path.with_extension("collapsed");
+    std::fs::write(&collapsed_path, p.collapsed())?;
+    println!(
+        "profile written to {} (collapsed stacks: {} — render with inferno-flamegraph \
+         or flamegraph.pl)",
+        json_path.display(),
+        collapsed_path.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_args_parses_the_whole_cluster() {
+        let args = Args::parse(
+            [
+                "--threads", "8", "--trace", "--trace-filter", "request,noi", "--profile-out",
+                "p.json", "--faults", "link:0-1@1ms", "--faults-out", "f.json",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+            &["trace", "profile"],
+        );
+        let opts = RunOptions::from_args(&args).unwrap();
+        assert_eq!(opts.threads, Some(8));
+        assert_eq!(opts.exec(), ExecSpec::threads(8));
+        assert_eq!(opts.pool_threads(), 8);
+        assert!(opts.trace.is_some());
+        assert!(opts.profile, "--profile-out implies --profile");
+        assert_eq!(opts.profile_out.as_deref(), Some("p.json"));
+        assert!(opts.faults.is_some());
+        assert_eq!(opts.faults_out.as_deref(), Some("f.json"));
+    }
+
+    #[test]
+    fn absent_flags_mean_sequential_run_and_all_core_pools() {
+        let opts = RunOptions::from_args(&Args::default()).unwrap();
+        assert_eq!(opts.threads, None);
+        assert_eq!(opts.exec(), ExecSpec::default());
+        assert!(!opts.exec().is_parallel());
+        assert_eq!(opts.pool_threads(), 0);
+        assert!(opts.trace.is_none() && opts.faults.is_none() && !opts.profile);
+    }
+
+    #[test]
+    fn bad_fault_plans_keep_their_actionable_context() {
+        let args = Args::parse(
+            ["--faults", "gremlin:0@1ms"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let err = RunOptions::from_args(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("chipsim faults"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_report_without_a_fired_fault_is_an_error() {
+        assert!(write_fault_report(Some("/dev/null"), None).is_err());
+        assert!(write_fault_report(None, None).is_ok());
+    }
+}

@@ -74,10 +74,12 @@ pub mod fault;
 pub mod workload;
 pub mod mapping;
 pub mod noc;
+pub mod par;
 pub mod compute;
 pub mod sim;
 pub mod trace;
 pub mod prof;
+pub mod instrument;
 pub mod scenario;
 pub mod serving;
 pub mod fleet;
@@ -109,6 +111,8 @@ pub mod prelude {
     pub use crate::fleet::{
         Autoscaler, Fleet, FleetReport, FleetSpec, ReplicaSnapshot, RoutingPolicy, ScaleEvent,
     };
+    pub use crate::instrument::{Instrumentation, RunOptions};
+    pub use crate::par::{ExecSpec, Partitioner};
     pub use crate::sim::{
         SimObserver, SimReport, Simulation, SimulationBuilder, ThermalSpec,
     };

@@ -23,6 +23,7 @@
 //!   chipsim traffic --scenario traffic-poisson-mesh --rate 2000 --seed 7
 //!   chipsim traffic --rows 8 --cols 8 --arrivals burst --rate 3000 --pipelined
 //!   chipsim traffic --sweep --lo 500 --hi 8000       # saturation knee
+//!   chipsim traffic --rows 8 --cols 8 --noc flit --threads 8   # sharded parallel NoI
 //!   chipsim mix --scenario mix-contended-interleaved --sweep interference
 //!   chipsim mix --tenants resnet18@1500,resnet50@400@5000 --placement disjoint
 //!   chipsim dtm --scenario dtm-thermal-ceiling --csv dtm.csv
@@ -47,6 +48,7 @@ use chipsim::config::{
     ComputeBackendKind, HardwareConfig, NocFidelity, SimParams, WorkloadConfig,
 };
 use chipsim::experiments;
+use chipsim::instrument::RunOptions;
 use chipsim::scenario::{self, Registry, SweepRunner};
 use chipsim::sim::Simulation;
 use chipsim::util::cli::{Args, HelpText};
@@ -62,7 +64,11 @@ fn help() -> HelpText {
             ("--topo mesh|floret|hetero|vit|ccd", "system preset (default mesh)"),
             ("--scenario NAME", "run a named registry scenario (see `chipsim scenarios`)"),
             ("--scenarios a,b,c|all", "batch: which scenarios to run (default all)"),
-            ("--threads N", "batch: worker threads (default: all cores)"),
+            (
+                "--threads N",
+                "workers: fleet/batch pool size (default all cores); traffic/mix/run: \
+                 shard the flit NoI over N regions (byte-identical to sequential)",
+            ),
             ("--models N", "stream length (default 50)"),
             ("--inferences N", "back-to-back inferences per model (default 10)"),
             ("--pipelined", "enable layer pipelining"),
@@ -140,140 +146,6 @@ fn build_params(args: &Args) -> anyhow::Result<SimParams> {
     })
 }
 
-/// `--trace` / `--trace-filter` / `--trace-out` on the serving
-/// subcommands: a runtime trace config, or `None` when tracing is off
-/// (the hook sites then cost a single pointer check per event).
-fn build_trace(args: &Args) -> anyhow::Result<Option<chipsim::trace::TraceConfig>> {
-    if !args.flag("trace") && args.get("trace-filter").is_none() && args.get("trace-out").is_none()
-    {
-        return Ok(None);
-    }
-    let mut cfg = chipsim::trace::TraceConfig::default();
-    if let Some(f) = args.get("trace-filter") {
-        cfg.categories = chipsim::trace::TraceCategories::parse(f)?;
-    }
-    Ok(Some(cfg))
-}
-
-/// Write an exported trace document to `--trace-out`, or into the
-/// results dir under `default_name`.
-fn write_trace(
-    doc: &chipsim::util::json::Value,
-    out: Option<&str>,
-    default_name: &str,
-) -> anyhow::Result<()> {
-    match out {
-        Some(path) => {
-            std::fs::write(path, chipsim::util::json::to_string_pretty(doc))?;
-            println!("trace written to {path} (load in Perfetto / chrome://tracing)");
-        }
-        None => {
-            let path = chipsim::metrics::write_json(default_name, doc)?;
-            println!(
-                "trace written to {} (load in Perfetto / chrome://tracing)",
-                path.display()
-            );
-        }
-    }
-    Ok(())
-}
-
-/// `--profile` / `--profile-out` on the serving subcommands: arm the
-/// self-profiler before the run so every scope and counter hook
-/// records.  Returns whether a profile was requested.
-fn profile_enabled(args: &Args) -> bool {
-    let on = args.flag("profile") || args.get("profile-out").is_some();
-    if on {
-        chipsim::prof::enable();
-    }
-    on
-}
-
-/// Print a collected profile and write its JSON to `--profile-out` (or
-/// the results dir under `default_name`), plus an inferno-compatible
-/// `.collapsed` sibling for flamegraph rendering.
-fn write_profile(
-    profile: Option<&chipsim::prof::ProfileReport>,
-    out: Option<&str>,
-    default_name: &str,
-) -> anyhow::Result<()> {
-    let Some(p) = profile else {
-        println!(
-            "self-profiling requested, but no profile was collected (built without \
-             the `prof` feature?)"
-        );
-        return Ok(());
-    };
-    print!("{}", p.render());
-    println!("{}", p.summary());
-    let json_path = match out {
-        Some(path) => {
-            std::fs::write(path, chipsim::util::json::to_string_pretty(&p.to_json()))?;
-            std::path::PathBuf::from(path)
-        }
-        None => chipsim::metrics::write_json(default_name, &p.to_json())?,
-    };
-    let collapsed_path = json_path.with_extension("collapsed");
-    std::fs::write(&collapsed_path, p.collapsed())?;
-    println!(
-        "profile written to {} (collapsed stacks: {} — render with inferno-flamegraph \
-         or flamegraph.pl)",
-        json_path.display(),
-        collapsed_path.display()
-    );
-    Ok(())
-}
-
-/// Close out `--profile` for a subcommand: prefer the profile attached
-/// to the run's report (its wall-clock brackets exactly the simulated
-/// region); fall back to a fresh snapshot over the subcommand's own
-/// wall time (sweeps and batches, whose many runs share one
-/// collection).
-fn finish_profile(
-    args: &Args,
-    profiling: bool,
-    attached: Option<&chipsim::prof::ProfileReport>,
-    started: std::time::Instant,
-    default_name: &str,
-) -> anyhow::Result<()> {
-    if !profiling {
-        return Ok(());
-    }
-    let fallback = chipsim::prof::snapshot(started.elapsed().as_nanos() as u64);
-    write_profile(attached.or(fallback.as_ref()), args.get("profile-out"), default_name)
-}
-
-/// `--faults PLAN` on the serving subcommands.  On a scenario run the
-/// CLI plan *replaces* the scenario's built-in one (same seam the other
-/// CLI-over-preset knobs use).
-fn parse_faults(args: &Args) -> anyhow::Result<Option<chipsim::fault::FaultPlan>> {
-    match args.get("faults") {
-        None => Ok(None),
-        Some(spec) => chipsim::fault::FaultPlan::parse(spec)
-            .map(Some)
-            .map_err(|e| anyhow::anyhow!("--faults: {e:#} (`chipsim faults` has the grammar)")),
-    }
-}
-
-/// `--faults-out FILE.json`: write the run's [`FaultReport`] JSON.  A
-/// run without a fired fault has no report — that is an error, not a
-/// silent no-op, so CI gates can't pass vacuously.
-fn write_fault_report(
-    args: &Args,
-    fault: Option<&chipsim::fault::FaultReport>,
-) -> anyhow::Result<()> {
-    let Some(path) = args.get("faults-out") else { return Ok(()) };
-    let f = fault.ok_or_else(|| {
-        anyhow::anyhow!(
-            "--faults-out: the run produced no FaultReport (arm a plan with --faults \
-             or a fault-* scenario whose events fire inside the horizon)"
-        )
-    })?;
-    std::fs::write(path, chipsim::util::json::to_string_pretty(&f.to_json()))?;
-    println!("fault report written to {path}");
-    Ok(())
-}
-
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let report = if let Some(name) = args.get("scenario") {
         // A scenario bundles hardware + params + workload; flags that
@@ -323,7 +195,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             }
             None => WorkloadConfig::cnn_stream(n, inferences, seed),
         };
-        Simulation::builder().hardware(hw).params(params).build()?.run(wl)?
+        Simulation::builder()
+            .hardware(hw)
+            .params(params)
+            .exec(RunOptions::from_args(args)?.exec())
+            .build()?
+            .run(wl)?
     };
     print!("{}", report.summary());
     if let Some(path) = args.get("power-csv") {
@@ -341,11 +218,10 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// knee.
 fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
-    let profiling = profile_enabled(args);
-    let prof_started = std::time::Instant::now();
+    let inst = RunOptions::from_args(args)?.instrument();
     let reg = Registry::builtin();
     type SimFactory = Box<dyn Fn() -> anyhow::Result<Simulation>>;
-    let (spec, seed, mut make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
+    let (spec, seed, make_sim): (TrafficSpec, u64, SimFactory) = if let Some(name) =
         args.get("scenario")
     {
         let sc = reg.get(name).ok_or_else(|| {
@@ -411,30 +287,28 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
     } else {
         spec
     };
-    // --faults on a scenario replaces its built-in plan (the factory
-    // wrap runs after `sc.build()` armed the preset's plan).
-    if let Some(plan) = parse_faults(args)? {
-        let inner = make_sim;
-        make_sim = Box::new(move || {
-            let mut sim = inner()?;
-            sim.set_fault_plan(Some(plan.clone()));
-            Ok(sim)
-        });
-    }
-    let trace_cfg = build_trace(args)?;
     if args.flag("sweep") {
         anyhow::ensure!(
-            trace_cfg.is_none(),
+            inst.options().trace.is_none(),
             "--trace does not combine with --sweep (trace a single run)"
         );
         anyhow::ensure!(
-            args.get("faults-out").is_none(),
+            inst.options().faults_out.is_none(),
             "--faults-out does not combine with --sweep (write a single run's report)"
         );
         let lo = args.get_f64("lo", 500.0)?;
         let hi = args.get_f64("hi", 10_000.0)?;
         let sweep = LoadSweep::new(spec, lo, hi).iters(args.get_usize("iters", 5)?);
-        let result = sweep.run(|| make_sim(), seed)?;
+        // Every probe board gets the shared cluster: --threads and a
+        // --faults plan that replaces a scenario's built-in one.
+        let result = sweep.run(
+            || {
+                let mut sim = make_sim()?;
+                inst.attach(&mut sim);
+                Ok(sim)
+            },
+            seed,
+        )?;
         println!("load sweep ({} probes):", result.probes.len());
         for p in &result.probes {
             println!(
@@ -452,26 +326,19 @@ fn cmd_traffic(args: &Args) -> anyhow::Result<()> {
         );
         // The sweep's probes share one collection; attribute against
         // the whole sweep's wall-clock.
-        finish_profile(args, profiling, None, prof_started, "profile_sweep.json")?;
+        inst.finish_profile(None, "profile_sweep.json")?;
         return Ok(());
     }
     let mut sim = make_sim()?;
-    let tracer = trace_cfg.map(|cfg| sim.set_trace(cfg));
+    inst.attach(&mut sim);
     let report = sim.run_traffic_with(&spec, seed)?;
     print!("{}", report.summary());
-    write_fault_report(args, report.sim.fault.as_ref())?;
-    finish_profile(
-        args,
-        profiling,
+    inst.write_fault_report(report.sim.fault.as_ref())?;
+    inst.finish_profile(
         report.sim.profile.as_ref(),
-        prof_started,
         &format!("profile_{}.json", args.get("scenario").unwrap_or("traffic")),
     )?;
-    if let Some(h) = tracer {
-        let rec = h.lock().expect("trace lock");
-        let name = format!("trace_{}.json", args.get("scenario").unwrap_or("traffic"));
-        write_trace(&rec.export(), args.get("trace-out"), &name)?;
-    }
+    inst.export_trace(&format!("trace_{}.json", args.get("scenario").unwrap_or("traffic")))?;
     if let Some(path) = args.get("power-csv") {
         let chiplets: Vec<usize> = (0..report.sim.power.num_chiplets()).collect();
         std::fs::write(path, report.sim.power.to_csv(&chiplets))?;
@@ -490,8 +357,7 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
     use chipsim::mapping::PlacementPolicy;
     use chipsim::serving::mix::{run_mix, TenantSpec, WorkloadMix};
     use chipsim::sim::ThermalSpec;
-    let profiling = profile_enabled(args);
-    let prof_started = std::time::Instant::now();
+    let mut inst = RunOptions::from_args(args)?.instrument();
     let reg = Registry::builtin();
     // `--sweep interference` (also accepted: bare `--sweep`, `--sweep=interference`).
     let sweep = if args.flag("sweep") || args.get("sweep").is_some() {
@@ -582,16 +448,15 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
     let mix = mix.interference(interference);
     // Boards are assembled from the scenario's parts here (not
     // `sc.build()`), so a preset-carried plan needs an explicit pickup;
-    // --faults replaces it.
-    let cli_faults = parse_faults(args)?.or_else(|| {
-        args.get("scenario").and_then(|n| reg.get(n)).and_then(|sc| sc.fault_plan().cloned())
-    });
-    let trace_cfg = build_trace(args)?;
-    // Only the first board built — the co-located pass — records; solo
-    // interference baselines run untraced (they would otherwise reset
-    // the shared recorder).
-    let tracer: std::cell::RefCell<Option<chipsim::trace::TraceHandle>> =
-        std::cell::RefCell::new(None);
+    // --faults replaces it.  Solo interference baselines share the
+    // plan: the matrix compares tenants under the *same* fault
+    // schedule.
+    if inst.options().faults.is_none() {
+        inst.options_mut().faults = args
+            .get("scenario")
+            .and_then(|n| reg.get(n))
+            .and_then(|sc| sc.fault_plan().cloned());
+    }
     let report = run_mix(
         || {
             let mut sim = Simulation::builder()
@@ -599,37 +464,23 @@ fn cmd_mix(args: &Args) -> anyhow::Result<()> {
                 .params(params.clone())
                 .thermal(thermal.clone())
                 .build()?;
-            // Solo interference baselines share the plan: the matrix
-            // compares tenants under the *same* fault schedule.
-            if let Some(plan) = &cli_faults {
-                sim.set_fault_plan(Some(plan.clone()));
-            }
-            if let Some(cfg) = &trace_cfg {
-                let mut slot = tracer.borrow_mut();
-                if slot.is_none() {
-                    *slot = Some(sim.set_trace(cfg.clone()));
-                }
-            }
+            // The shared cluster: --threads, faults, and the recorder —
+            // first board (the co-located pass) only; solo baselines
+            // run untraced, they would otherwise reset the recorder.
+            inst.attach(&mut sim);
             Ok(sim)
         },
         &mix,
         seed,
     )?;
     print!("{}", report.summary());
-    write_fault_report(args, report.sim.fault.as_ref())?;
-    if let Some(h) = tracer.into_inner() {
-        let rec = h.lock().expect("trace lock");
-        let name = format!("trace_{}.json", args.get("scenario").unwrap_or("mix"));
-        write_trace(&rec.export(), args.get("trace-out"), &name)?;
-    }
+    inst.write_fault_report(report.sim.fault.as_ref())?;
+    inst.export_trace(&format!("trace_{}.json", args.get("scenario").unwrap_or("mix")))?;
     // With `--sweep interference` the co-located pass and the solo
     // baselines share one collection; the attached profile (co-located
     // pass only) is still the representative one.
-    finish_profile(
-        args,
-        profiling,
+    inst.finish_profile(
         report.sim.profile.as_ref(),
-        prof_started,
         &format!("profile_{}.json", args.get("scenario").unwrap_or("mix")),
     )?;
     if let Some(path) = args.get("power-csv") {
@@ -789,8 +640,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
     use chipsim::scenario::FleetPreset;
     use chipsim::serving::{ArrivalSpec, LoadSweep, TrafficSpec};
-    let profiling = profile_enabled(args);
-    let prof_started = std::time::Instant::now();
+    let inst = RunOptions::from_args(args)?.instrument();
     let reg = Registry::builtin();
     type SimFactory = Arc<dyn Fn() -> anyhow::Result<Simulation>>;
     let (spec, seed, make_sim, preset): (TrafficSpec, u64, SimFactory, Option<FleetPreset>) =
@@ -865,11 +715,15 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         Some(_) => Some(args.get_f64("emergency-c", 0.0)?),
         None => p.and_then(|p| p.emergency_c),
     };
-    let threads = args.get_usize("threads", 0)?;
+    // Replica boards advance on the shared worker pool; `--threads`
+    // sizes it (0 / absent = all cores).  Per-board NoI sharding stays
+    // off here — nested parallelism under the fleet pool would
+    // oversubscribe, and the pool suppresses it anyway.
+    let threads = inst.options().pool_threads();
     // --faults replaces a scenario's built-in plan; either way the plan
     // reaches both the dispatcher (board: events, retry policy) and —
     // via the spawn seam — every replica's simulation.
-    let faults = parse_faults(args)?.or_else(|| {
+    let faults = inst.options().faults.clone().or_else(|| {
         args.get("scenario").and_then(|n| reg.get(n)).and_then(|sc| sc.fault_plan().cloned())
     });
     let fleet_spec = |traffic: TrafficSpec| {
@@ -884,7 +738,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         }
         fs
     };
-    let trace_cfg = build_trace(args)?;
+    let trace_cfg = inst.options().trace.clone();
     let build_fleet = |traffic: TrafficSpec, routing: &str| -> anyhow::Result<Fleet> {
         let f = make_sim.clone();
         Ok(Fleet::new(fleet_spec(traffic), move || f(), parse_routing(routing)?)
@@ -907,7 +761,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         "--trace does not combine with --sweep (trace a single run)"
     );
     anyhow::ensure!(
-        sweep_kind.is_none() || args.get("faults-out").is_none(),
+        sweep_kind.is_none() || inst.options().faults_out.is_none(),
         "--faults-out does not combine with --sweep (write a single run's report)"
     );
     // Profile attached to the single-run report; sweeps fall back to a
@@ -966,26 +820,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             let mut fleet = build_fleet(spec, &routing_name)?;
             let report = fleet.run(seed)?;
             print!("{}", report.summary());
-            write_fault_report(args, report.fault.as_ref())?;
+            inst.write_fault_report(report.fault.as_ref())?;
             attached = report.profile.clone();
-            if !fleet.tracers().is_empty() {
-                let recs: Vec<_> = fleet
-                    .tracers()
-                    .iter()
-                    .map(|h| h.lock().expect("trace lock"))
-                    .collect();
-                let refs: Vec<&chipsim::trace::TraceRecorder> =
-                    recs.iter().map(|g| &**g).collect();
-                let name = format!("trace_{}.json", args.get("scenario").unwrap_or("fleet"));
-                write_trace(&chipsim::trace::merge_export(&refs), args.get("trace-out"), &name)?;
-            }
+            // The fleet attaches one recorder per replica itself; adopt
+            // them all into the shared merged export.
+            inst.adopt_tracers(fleet.tracers());
+            inst.export_trace(&format!(
+                "trace_{}.json",
+                args.get("scenario").unwrap_or("fleet")
+            ))?;
         }
     }
-    finish_profile(
-        args,
-        profiling,
+    inst.finish_profile(
         attached.as_ref(),
-        prof_started,
         &format!("profile_{}.json", args.get("scenario").unwrap_or("fleet")),
     )?;
     Ok(())
@@ -998,7 +845,6 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     use chipsim::fleet::{parse_autoscaler, parse_routing, Fleet, FleetSpec};
     use chipsim::serving::TrafficSpec;
-    use chipsim::trace::{merge_export, TraceCategories, TraceConfig, TraceRecorder};
     let reg = Registry::builtin();
     let name = args
         .get("scenario")
@@ -1011,12 +857,17 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
     })?;
     let seed = args.get_u64("seed", sc.default_seed)?;
-    let mut cfg = TraceConfig::default();
-    if let Some(f) = args.get("trace-filter") {
-        cfg.categories = TraceCategories::parse(f)?;
-    }
+    // This subcommand *is* the trace opt-in: an absent --trace flag
+    // still records, with every category on by default.
+    let inst = {
+        let mut opts = RunOptions::from_args(args)?;
+        if opts.trace.is_none() {
+            opts.trace = Some(chipsim::trace::TraceConfig::default());
+        }
+        opts.instrument()
+    };
+    let cfg = inst.options().trace.clone().expect("trace config forced on above");
     let out_name = format!("trace_{name}.json");
-    let out = args.get("trace-out");
     if sc.is_fleet() {
         let p = sc.fleet_preset().expect("fleet scenario carries a preset").clone();
         let spec = TrafficSpec {
@@ -1025,7 +876,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         };
         let mut fs = FleetSpec::new(spec, p.replicas)
             .max_replicas(p.max_replicas)
-            .threads(args.get_usize("threads", 0)?);
+            .threads(inst.options().pool_threads());
         fs.epoch_ns = p.epoch_ns;
         fs.cold_start_ns = p.cold_start_ns;
         fs.emergency_c = p.emergency_c;
@@ -1036,47 +887,34 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
             .trace(Some(cfg));
         let report = fleet.run(seed)?;
         print!("{}", report.summary());
-        let recs: Vec<_> =
-            fleet.tracers().iter().map(|h| h.lock().expect("trace lock")).collect();
-        let refs: Vec<&TraceRecorder> = recs.iter().map(|g| &**g).collect();
-        write_trace(&merge_export(&refs), out, &out_name)?;
+        inst.adopt_tracers(fleet.tracers());
     } else if sc.is_mix() {
         let mix = sc.mix_spec(seed).expect("mix scenario carries a mix").interference(false);
-        let tracer: std::cell::RefCell<Option<chipsim::trace::TraceHandle>> =
-            std::cell::RefCell::new(None);
         let report = chipsim::serving::mix::run_mix(
             || {
                 let mut sim = sc.build()?;
-                let mut slot = tracer.borrow_mut();
-                if slot.is_none() {
-                    *slot = Some(sim.set_trace(cfg.clone()));
-                }
+                // attach() records the first board only — exactly the
+                // co-located pass this subcommand wants traced.
+                inst.attach(&mut sim);
                 Ok(sim)
             },
             &mix,
             seed,
         )?;
         print!("{}", report.summary());
-        let h = tracer.into_inner().expect("mix run builds at least one board");
-        let rec = h.lock().expect("trace lock");
-        write_trace(&rec.export(), out, &out_name)?;
     } else if sc.is_traffic() {
         let spec = sc.traffic_spec(seed).expect("traffic scenario carries a spec");
         let mut sim = sc.build()?;
-        let h = sim.set_trace(cfg);
+        inst.attach(&mut sim);
         let report = sim.run_traffic_with(&spec, seed)?;
         print!("{}", report.summary());
-        let rec = h.lock().expect("trace lock");
-        write_trace(&rec.export(), out, &out_name)?;
     } else {
         let mut sim = sc.build()?;
-        let h = sim.set_trace(cfg);
+        inst.attach(&mut sim);
         let report = sim.run(sc.workload(seed))?;
         print!("{}", report.summary());
-        let rec = h.lock().expect("trace lock");
-        write_trace(&rec.export(), out, &out_name)?;
     }
-    Ok(())
+    inst.export_trace(&out_name)
 }
 
 /// Self-profiling run of one named scenario — the "where does the
@@ -1099,8 +937,13 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         anyhow::anyhow!("unknown scenario '{name}' — `chipsim scenarios` lists them")
     })?;
     let seed = args.get_u64("seed", sc.default_seed)?;
-    chipsim::prof::enable();
-    let started = std::time::Instant::now();
+    // This subcommand *is* the profile opt-in: arm the profiler whether
+    // or not --profile was spelled out.
+    let inst = {
+        let mut opts = RunOptions::from_args(args)?;
+        opts.profile = true;
+        opts.instrument()
+    };
     let attached: Option<chipsim::prof::ProfileReport> = if sc.is_fleet() {
         let p = sc.fleet_preset().expect("fleet scenario carries a preset").clone();
         let spec = TrafficSpec {
@@ -1109,7 +952,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         };
         let mut fs = FleetSpec::new(spec, p.replicas)
             .max_replicas(p.max_replicas)
-            .threads(args.get_usize("threads", 0)?);
+            .threads(inst.options().pool_threads());
         fs.epoch_ns = p.epoch_ns;
         fs.cold_start_ns = p.cold_start_ns;
         fs.emergency_c = p.emergency_c;
@@ -1133,12 +976,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         print!("{}", report.summary());
         report.profile
     };
-    let fallback = chipsim::prof::snapshot(started.elapsed().as_nanos() as u64);
-    write_profile(
-        attached.as_ref().or(fallback.as_ref()),
-        args.get("profile-out"),
-        &format!("profile_{name}.json"),
-    )
+    inst.finish_profile(attached.as_ref(), &format!("profile_{name}.json"))
 }
 
 fn cmd_scenarios() {
@@ -1258,8 +1096,7 @@ fn cmd_faults(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_batch(args: &Args) -> anyhow::Result<()> {
-    let profiling = profile_enabled(args);
-    let prof_started = std::time::Instant::now();
+    let inst = RunOptions::from_args(args)?.instrument();
     let reg = Registry::builtin();
     let names: Vec<String> = match args.get("scenarios") {
         None | Some("all") => reg.names().iter().map(|s| s.to_string()).collect(),
@@ -1267,7 +1104,7 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
     };
     let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
     let runner = SweepRunner::new()
-        .threads(args.get_usize("threads", 0)?)
+        .threads(inst.options().pool_threads())
         .base_seed(args.get_u64("seed", 0xC0FFEE)?);
     let t0 = std::time::Instant::now();
     let outcomes = runner.run(&reg, &refs)?;
@@ -1310,7 +1147,7 @@ fn cmd_batch(args: &Args) -> anyhow::Result<()> {
     }
     // One collection across every scenario and worker thread: the
     // worker-utilization table is the batch's parallel-efficiency view.
-    finish_profile(args, profiling, None, prof_started, "profile_batch.json")?;
+    inst.finish_profile(None, "profile_batch.json")?;
     Ok(())
 }
 
@@ -1462,21 +1299,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_faults_reports_bad_plans_with_context() {
-        let args = Args::parse(
-            ["--faults", "gremlin:0@1ms"].iter().map(|s| s.to_string()),
-            &[],
-        );
-        let err = parse_faults(&args).unwrap_err();
-        assert!(format!("{err:#}").contains("chipsim faults"), "{err:#}");
-        assert!(parse_faults(&Args::default()).unwrap().is_none());
+    fn help_lists_the_shared_run_option_cluster() {
+        let rendered = help().render();
+        for flag in ["--threads", "--trace", "--profile", "--faults", "--faults-out"] {
+            assert!(rendered.contains(flag), "help is missing {flag}");
+        }
     }
 
     #[test]
-    fn faults_out_without_report_is_an_error() {
-        let args =
-            Args::parse(["--faults-out", "/dev/null"].iter().map(|s| s.to_string()), &[]);
-        assert!(write_fault_report(&args, None).is_err());
-        assert!(write_fault_report(&Args::default(), None).is_ok());
+    fn run_options_parse_from_cli_args() {
+        let args = Args::parse(
+            ["--threads", "4", "--faults", "link:0-1@1ms"].iter().map(|s| s.to_string()),
+            &[],
+        );
+        let opts = RunOptions::from_args(&args).unwrap();
+        assert!(opts.exec().is_parallel());
+        assert!(opts.faults.is_some());
     }
 }

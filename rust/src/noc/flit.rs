@@ -55,43 +55,45 @@ use super::{EnergyLog, FlowCompletion, FlowId, FlowSpec, FlowStats, LinkTraceEve
 use crate::TimeNs;
 
 /// Default input buffer depth in flits (per router input port).
-const BUF_FLITS: usize = 8;
+/// Shared with the sharded parallel engine (`crate::par`), which must
+/// segment and buffer identically to stay byte-compatible.
+pub(crate) const BUF_FLITS: usize = 8;
 /// Flits per packet — must match the packet engine's segmentation.
-const PACKET_FLITS: u64 = super::engine::PACKET_FLITS;
+pub(crate) const PACKET_FLITS: u64 = super::engine::PACKET_FLITS;
 
 #[derive(Debug, Clone, Copy)]
-struct Flit {
-    flow: FlowId,
+pub(crate) struct Flit {
+    pub(crate) flow: FlowId,
     /// Unique packet id (flow-local).
-    pkt: u64,
-    is_head: bool,
-    is_tail: bool,
-    dst: usize,
+    pub(crate) pkt: u64,
+    pub(crate) is_head: bool,
+    pub(crate) is_tail: bool,
+    pub(crate) dst: usize,
 }
 
 #[derive(Debug)]
-struct InPort {
-    buf: VecDeque<Flit>,
+pub(crate) struct InPort {
+    pub(crate) buf: VecDeque<Flit>,
     /// Free slots not yet promised to an upstream sender.
-    credits: usize,
+    pub(crate) credits: usize,
 }
 
 impl InPort {
-    fn new(depth: usize) -> Self {
+    pub(crate) fn new(depth: usize) -> Self {
         InPort { buf: VecDeque::with_capacity(depth), credits: depth }
     }
 }
 
 #[derive(Debug)]
-struct FlowProgress {
-    spec: FlowSpec,
-    injected_ns: TimeNs,
-    hops: u32,
-    tails_left: u64,
+pub(crate) struct FlowProgress {
+    pub(crate) spec: FlowSpec,
+    pub(crate) injected_ns: TimeNs,
+    pub(crate) hops: u32,
+    pub(crate) tails_left: u64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum InputRef {
+pub(crate) enum InputRef {
     /// Input buffer fed by a link (index).
     Link(usize),
     /// The node-local injection queue.
@@ -143,8 +145,10 @@ pub struct FlitEngine {
 }
 
 /// Coalescing per-link occupancy log (flit traversal cycles -> spans).
+/// Shared with `crate::par`, whose coordinator replays merged traversal
+/// events through the identical coalescing for byte-identical traces.
 #[derive(Debug, Default)]
-struct LinkTraceLog {
+pub(crate) struct LinkTraceLog {
     events: Vec<LinkTraceEvent>,
     /// Open span per link: (flow, first cycle, last cycle), where the
     /// span covers traversal cycles `first..=last`.
@@ -152,12 +156,12 @@ struct LinkTraceLog {
 }
 
 impl LinkTraceLog {
-    fn new(nlinks: usize) -> LinkTraceLog {
+    pub(crate) fn new(nlinks: usize) -> LinkTraceLog {
         LinkTraceLog { events: Vec::new(), open: vec![None; nlinks] }
     }
 
     /// Record that `flow` traversed `link` during `cycle`.
-    fn on_traverse(&mut self, link: usize, flow: FlowId, cycle: u64, cycle_ns: f64) {
+    pub(crate) fn on_traverse(&mut self, link: usize, flow: FlowId, cycle: u64, cycle_ns: f64) {
         match &mut self.open[link] {
             Some((f, _, last)) if *f == flow && *last + 1 == cycle => *last = cycle,
             slot => {
@@ -170,7 +174,7 @@ impl LinkTraceLog {
     }
 
     /// Flush all open spans (drain boundary) and take the event log.
-    fn drain(&mut self, cycle_ns: f64) -> Vec<LinkTraceEvent> {
+    pub(crate) fn drain(&mut self, cycle_ns: f64) -> Vec<LinkTraceEvent> {
         for (link, slot) in self.open.iter_mut().enumerate() {
             if let Some(span) = slot.take() {
                 self.events.push(Self::to_event(link, span, cycle_ns));

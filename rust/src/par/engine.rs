@@ -1,0 +1,1208 @@
+//! The sharded wormhole flit engine: K regions, conservative windows.
+//!
+//! # How byte-identity is preserved
+//!
+//! The sequential [`FlitEngine`](crate::noc::flit::FlitEngine)'s
+//! observable semantics (proven by PR 4's differential harness) are a
+//! dense per-cycle scan: deliver in-flight flits in `(arrival, link)`
+//! order, then allocate/traverse output links in ascending link index.
+//! Within one cycle the only *cross-region* observables are:
+//!
+//! 1. **Arrivals** over a boundary link — but a flit sent during a
+//!    window of `E <= hop_latency` cycles arrives strictly after the
+//!    window, so window-local stepping never misses one.
+//! 2. **Credits** of a boundary link's input port (owned by the
+//!    downstream region, decremented by the upstream sender's
+//!    traversals, incremented by the downstream router's pops).  The
+//!    coordinator snapshots each boundary port's credits at the window
+//!    start and *caps the window length to the smallest snapshot among
+//!    links that could send*: the upstream gate (`will_eject || credits
+//!    > 0`) then sees `snapshot - k >= 1` before its `k+1`-th send
+//!    (`k < window <= snapshot`) while the sequential engine sees a
+//!    value at least as large (pops only add) — both gates pass, so
+//!    every traversal decision is identical, and reconciling the real
+//!    counters at the merge can never underflow.  When a live boundary
+//!    port has fewer credits than even a one-cycle window needs, the
+//!    coordinator steps that cycle itself with a dense cross-region
+//!    scan (`step_cycle_dense`) — sequential semantics by construction.
+//!
+//! Everything else (energy `f64` accumulation order, trace coalescing,
+//! completion order, RR pointers) is region-local or replayed by the
+//! coordinator from the merged `(cycle, link)` traversal stream, which
+//! equals the sequential processing order because at most one flit
+//! crosses a given link per cycle.
+//!
+//! Windows additionally never overshoot a flow completion: all in-window
+//! ejections come from flits already in flight at the window start, so
+//! the coordinator pre-scans the heaps for the earliest tail that
+//! finishes a flow and caps the window there.  `advance_until` therefore
+//! returns with the clock parked on the completion cycle, exactly like
+//! the sequential engine — the outer `Simulation` may inject dependent
+//! flows at that instant and both engines see the same network.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap, HashMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::noc::flit::{
+    Flit, FlowProgress, InPort, InputRef, LinkTraceLog, BUF_FLITS, PACKET_FLITS,
+};
+use crate::noc::topology::Topology;
+use crate::noc::{
+    EnergyLog, FlowCompletion, FlowId, FlowSpec, FlowStats, LinkTraceEvent, NetworkSim,
+};
+use crate::util::pool::WorkerPool;
+use crate::TimeNs;
+
+use super::{ExecSpec, Partitioner};
+
+/// A flit in flight toward a region, min-ordered by `(arrival, link)` —
+/// the sequential delivery order.  Constant hop latency means at most
+/// one flit per `(cycle, link)`, so the pair is a total order and the
+/// carried flit never participates in comparisons.
+#[derive(Debug, Clone, Copy)]
+struct InFlight {
+    arr: u64,
+    link: usize,
+    flit: Flit,
+}
+
+impl PartialEq for InFlight {
+    fn eq(&self, other: &Self) -> bool {
+        (self.arr, self.link) == (other.arr, other.link)
+    }
+}
+impl Eq for InFlight {}
+impl PartialOrd for InFlight {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for InFlight {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.arr, self.link).cmp(&(other.arr, other.link))
+    }
+}
+
+/// One domain-decomposed stripe of the NoI, with all the router state
+/// the sequential engine keeps for its nodes.  Per-link vectors are
+/// global-length (indexed by global link id) for simplicity; a region
+/// only ever touches the indices it owns: input ports of links whose
+/// *destination* it owns, output bindings / RR pointers / busy counters
+/// of links whose *source* it owns.
+struct Region {
+    /// Owned nodes: `lo..hi` (contiguous, row-major).
+    lo: usize,
+    hi: usize,
+    /// Input port of link `l` (used iff `dst(l)` is owned).
+    ports: Vec<InPort>,
+    /// Output binding of link `l` (used iff `src(l)` is owned).
+    bound: Vec<Option<(InputRef, FlowId, u64)>>,
+    rr: Vec<usize>,
+    link_busy_cycles: Vec<u64>,
+    /// Owned output links in ascending global index (the sequential
+    /// scan order restricted to this region).
+    own_out_links: Vec<usize>,
+    /// `own_out_links[i]` crosses into another region.
+    is_boundary_out: Vec<bool>,
+    /// Candidate input list per owned node (in-links ascending, then
+    /// the local injection queue) — the sequential allocation order.
+    inputs: Vec<Vec<InputRef>>,
+    inject_q: Vec<VecDeque<Flit>>,
+    /// Flits in flight toward owned nodes.
+    in_flight: BinaryHeap<Reverse<InFlight>>,
+    /// Flits buffered in owned ports + injection queues.
+    occupancy: u64,
+    /// Boundary-link credit mirror for the current window: snapshot of
+    /// the downstream port's credits at window start, decremented by
+    /// own sends (reconciled against the real counter at the merge).
+    ext_credit: Vec<usize>,
+    // ---- per-window outputs, drained by the coordinator ----
+    /// Traversals `(cycle, link, flow)`, sorted by construction.
+    travs: Vec<(u64, usize, FlowId)>,
+    /// Tail-flit ejections `(cycle, link, flow)`, sorted by construction.
+    tails: Vec<(u64, usize, FlowId)>,
+    /// Sends over boundary links, to be routed to the owner's heap.
+    boundary_out: Vec<InFlight>,
+    /// Did anything move (delivery or traversal) this window?
+    moved: bool,
+}
+
+impl Region {
+    fn owns(&self, node: usize) -> bool {
+        (self.lo..self.hi).contains(&node)
+    }
+
+    fn front(&self, input: InputRef) -> Option<&Flit> {
+        match input {
+            InputRef::Link(l) => self.ports[l].buf.front(),
+            InputRef::Local(n) => self.inject_q[n].front(),
+        }
+    }
+
+    fn pop(&mut self, input: InputRef) -> Flit {
+        self.occupancy -= 1;
+        match input {
+            InputRef::Link(l) => {
+                let f = self.ports[l].buf.pop_front().unwrap();
+                self.ports[l].credits += 1;
+                f
+            }
+            InputRef::Local(n) => self.inject_q[n].pop_front().unwrap(),
+        }
+    }
+
+    /// Advance this region through cycles `s+1 ..= w` with no outside
+    /// interaction: deliveries from the own heap, then a dense
+    /// ascending scan over owned output links — the sequential
+    /// semantics restricted to the region.  Runs on a pool worker.
+    fn step_window(&mut self, topo: &Topology, s: u64, w: u64) {
+        let _prof = crate::prof::scope(crate::prof::Subsystem::RegionAdvance);
+        self.travs.clear();
+        self.tails.clear();
+        self.boundary_out.clear();
+        self.moved = false;
+        let hop = topo.hop_latency_cycles.max(1);
+        for c in s + 1..=w {
+            // 1. Deliveries due this cycle, in (arrival, link) order.
+            while let Some(&Reverse(e)) = self.in_flight.peek() {
+                if e.arr > c {
+                    break;
+                }
+                let e = self.in_flight.pop().unwrap().0;
+                let node = topo.links[e.link].dst;
+                debug_assert!(self.owns(node));
+                if e.flit.dst == node {
+                    // Ejection: leaves the network; return the credit.
+                    self.ports[e.link].credits += 1;
+                    if e.flit.is_tail {
+                        self.tails.push((c, e.link, e.flit.flow));
+                    }
+                } else {
+                    self.ports[e.link].buf.push_back(e.flit);
+                    self.occupancy += 1;
+                }
+                self.moved = true;
+            }
+            if self.occupancy == 0 {
+                // No buffered flit anywhere in the region: allocation
+                // scans empty fronts and traversal has no front — a
+                // provable no-op, as in the sequential active set.
+                continue;
+            }
+            // 2. Switch allocation + traversal, ascending link index.
+            #[allow(clippy::needless_range_loop)] // parallel is_boundary_out lookup
+            for i in 0..self.own_out_links.len() {
+                let link = self.own_out_links[i];
+                if self.bound[link].is_none() {
+                    let node = topo.links[link].src;
+                    let ninputs = self.inputs[node].len();
+                    let start = self.rr[link] % ninputs;
+                    for k in 0..ninputs {
+                        let input = self.inputs[node][(start + k) % ninputs];
+                        if let Some(f) = self.front(input) {
+                            if f.is_head && route_out(topo, node, f.dst) == Some(link) {
+                                self.bound[link] = Some((input, f.flow, f.pkt));
+                                self.rr[link] = (start + k + 1) % ninputs;
+                                break;
+                            }
+                        }
+                    }
+                }
+                if let Some((input, flow, pkt)) = self.bound[link] {
+                    let ready =
+                        matches!(self.front(input), Some(f) if f.flow == flow && f.pkt == pkt);
+                    if !ready {
+                        continue;
+                    }
+                    let downstream = topo.links[link].dst;
+                    let f = *self.front(input).unwrap();
+                    let will_eject = f.dst == downstream;
+                    let have_credit = if self.is_boundary_out[i] {
+                        self.ext_credit[link] > 0
+                    } else {
+                        self.ports[link].credits > 0
+                    };
+                    if will_eject || have_credit {
+                        let f = self.pop(input);
+                        if !will_eject {
+                            if self.is_boundary_out[i] {
+                                self.ext_credit[link] -= 1;
+                            } else {
+                                self.ports[link].credits -= 1;
+                            }
+                        }
+                        let e = InFlight { arr: c + hop, link, flit: f };
+                        if self.is_boundary_out[i] {
+                            self.boundary_out.push(e);
+                        } else {
+                            self.in_flight.push(Reverse(e));
+                        }
+                        self.travs.push((c, link, f.flow));
+                        self.link_busy_cycles[link] += 1;
+                        if f.is_tail {
+                            self.bound[link] = None;
+                        }
+                        self.moved = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The output link a flit wants at router `node` (shared routing rule).
+fn route_out(topo: &Topology, node: usize, dst: usize) -> Option<usize> {
+    if node == dst {
+        None
+    } else {
+        let l = topo.route[node][dst];
+        debug_assert_ne!(l, usize::MAX, "stranded flit survived apply_fault: {node} -> {dst}");
+        Some(l)
+    }
+}
+
+/// The parallel sharded wormhole engine.  Byte-identical to
+/// [`FlitEngine`](crate::noc::flit::FlitEngine) for any thread count,
+/// partitioning, and lookahead (see the module docs for the argument).
+pub struct ShardedFlitEngine {
+    topo: Topology,
+    regions: Vec<Mutex<Region>>,
+    /// Node -> owning region.
+    region_of: Vec<usize>,
+    /// Links whose src and dst regions differ (ascending).
+    boundary_links: Vec<usize>,
+    pool: WorkerPool,
+    /// Maximum synchronization-window length in cycles (`<= hop
+    /// latency`, the conservative lookahead bound).
+    lookahead: u64,
+    // ---- coordinator-owned flow/report state (mirrors FlitEngine) ----
+    flows: Vec<Option<FlowProgress>>,
+    active_flows: usize,
+    finished: HashMap<FlowId, FlowStats>,
+    completions: VecDeque<(TimeNs, FlowId)>,
+    next_flow_id: FlowId,
+    cycle: u64,
+    energy: EnergyLog,
+    work: u64,
+    link_trace: Option<LinkTraceLog>,
+    /// Merge scratch, reused across windows.
+    merge_travs: Vec<(u64, usize, FlowId)>,
+    merge_tails: Vec<(u64, usize, FlowId)>,
+}
+
+impl ShardedFlitEngine {
+    pub fn new(topo: Topology, exec: ExecSpec) -> Self {
+        Self::with_buffer_depth(topo, exec, BUF_FLITS)
+    }
+
+    /// Construct with an explicit per-port buffer depth (flits); the
+    /// differential tests sweep this exactly like the sequential
+    /// harness does.
+    pub fn with_buffer_depth(topo: Topology, exec: ExecSpec, buf_flits: usize) -> Self {
+        for l in &topo.links {
+            assert_eq!(l.clock_div, 1, "flit engine requires homogeneous clocks");
+        }
+        let depth = buf_flits.max(1);
+        let nnodes = topo.num_nodes;
+        let nlinks = topo.links.len();
+        let pool = WorkerPool::new(exec.threads);
+        let k = match exec.partitioner {
+            Partitioner::Auto => pool.threads(),
+            Partitioner::Stripes(k) => k,
+        }
+        .clamp(1, nnodes.max(1));
+        let hop = topo.hop_latency_cycles.max(1);
+        let lookahead = exec.lookahead.unwrap_or(hop).clamp(1, hop);
+        // Contiguous row-major stripes: node n belongs to the region
+        // whose [lo, hi) range contains it.
+        let bounds: Vec<(usize, usize)> =
+            (0..k).map(|r| (r * nnodes / k, (r + 1) * nnodes / k)).collect();
+        let mut region_of = vec![0usize; nnodes];
+        for (r, &(lo, hi)) in bounds.iter().enumerate() {
+            for slot in region_of.iter_mut().take(hi).skip(lo) {
+                *slot = r;
+            }
+        }
+        let boundary_links: Vec<usize> = (0..nlinks)
+            .filter(|&l| region_of[topo.links[l].src] != region_of[topo.links[l].dst])
+            .collect();
+        let regions: Vec<Mutex<Region>> = bounds
+            .iter()
+            .map(|&(lo, hi)| {
+                let own_out_links: Vec<usize> = (0..nlinks)
+                    .filter(|&l| (lo..hi).contains(&topo.links[l].src))
+                    .collect();
+                let is_boundary_out: Vec<bool> = own_out_links
+                    .iter()
+                    .map(|&l| !(lo..hi).contains(&topo.links[l].dst))
+                    .collect();
+                let inputs: Vec<Vec<InputRef>> = (0..nnodes)
+                    .map(|n| {
+                        if (lo..hi).contains(&n) {
+                            let mut v: Vec<InputRef> =
+                                topo.in_links[n].iter().map(|&l| InputRef::Link(l)).collect();
+                            v.push(InputRef::Local(n));
+                            v
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect();
+                Mutex::new(Region {
+                    lo,
+                    hi,
+                    ports: (0..nlinks).map(|_| InPort::new(depth)).collect(),
+                    bound: vec![None; nlinks],
+                    rr: vec![0; nlinks],
+                    link_busy_cycles: vec![0; nlinks],
+                    own_out_links,
+                    is_boundary_out,
+                    inputs,
+                    inject_q: vec![VecDeque::new(); nnodes],
+                    in_flight: BinaryHeap::new(),
+                    occupancy: 0,
+                    ext_credit: vec![0; nlinks],
+                    travs: Vec::new(),
+                    tails: Vec::new(),
+                    boundary_out: Vec::new(),
+                    moved: false,
+                })
+            })
+            .collect();
+        ShardedFlitEngine {
+            regions,
+            region_of,
+            boundary_links,
+            pool,
+            lookahead,
+            flows: Vec::new(),
+            active_flows: 0,
+            finished: HashMap::new(),
+            completions: VecDeque::new(),
+            next_flow_id: 0,
+            cycle: 0,
+            energy: EnergyLog::new(nnodes),
+            work: 0,
+            link_trace: None,
+            merge_travs: Vec::new(),
+            merge_tails: Vec::new(),
+            topo,
+        }
+    }
+
+    /// Number of regions the mesh was decomposed into.
+    pub fn num_regions(&self) -> usize {
+        self.regions.len()
+    }
+
+    fn ns(&self, cycle: u64) -> TimeNs {
+        (cycle as f64 * self.topo.cycle_ns).round() as TimeNs
+    }
+
+    /// Smallest cycle whose [`ns`](Self::ns) stamp is `>= t` (same
+    /// rounding-anchored search as the sequential engines).
+    fn cycle_of(&self, t: TimeNs) -> u64 {
+        let mut c = (t as f64 / self.topo.cycle_ns).ceil() as u64;
+        while c > 0 && self.ns(c - 1) >= t {
+            c -= 1;
+        }
+        while c < u64::MAX && self.ns(c) < t {
+            c += 1;
+        }
+        c
+    }
+
+    fn network_busy(&mut self) -> bool {
+        self.regions.iter_mut().any(|r| {
+            let g = r.get_mut().expect("region lock");
+            g.occupancy > 0 || !g.in_flight.is_empty()
+        })
+    }
+
+    /// Earliest in-flight arrival cycle anywhere, if any.
+    fn next_arrival(&mut self) -> Option<u64> {
+        self.regions
+            .iter_mut()
+            .filter_map(|r| {
+                r.get_mut().expect("region lock").in_flight.peek().map(|Reverse(e)| e.arr)
+            })
+            .min()
+    }
+
+    /// Production cycle-skip: nothing moved, so the switch state is
+    /// frozen until the next in-flight arrival — jump over the gap
+    /// (bounded by where the per-cycle loop would rest for this `t`).
+    /// With nothing in flight at all the network is hard-blocked until
+    /// new injections: consume the horizon.
+    fn skip_frozen(&mut self, c_lim: u64) {
+        match self.next_arrival() {
+            Some(arr) if arr > self.cycle + 1 => self.cycle = (arr - 1).min(c_lim),
+            Some(_) => {}
+            None => self.cycle = c_lim,
+        }
+    }
+
+    /// Decrement a flow's outstanding-tails count; on the last tail,
+    /// finish the flow (identical to the sequential `finish_packet`).
+    fn finish_tail(&mut self, flow: FlowId, now_ns: TimeNs) {
+        let slot = &mut self.flows[flow as usize];
+        let fp = slot.as_mut().expect("tail for unknown flow");
+        fp.tails_left -= 1;
+        if fp.tails_left == 0 {
+            let fp = slot.take().unwrap();
+            self.active_flows -= 1;
+            let stats = FlowStats {
+                spec: fp.spec,
+                injected_ns: fp.injected_ns,
+                completed_ns: now_ns,
+                hops: fp.hops,
+            };
+            self.finished.insert(flow, stats);
+            self.completions.push_back((now_ns, flow));
+        }
+    }
+
+    /// Replay one traversal on the coordinator: energy (bit-exact f64
+    /// accumulation order), work, trace, in the merged global order.
+    fn commit_traversal(&mut self, cycle: u64, link: usize, flow: FlowId) {
+        let now_ns = self.ns(cycle);
+        let l = &self.topo.links[link];
+        let pj = l.width_bytes as f64 * l.e_per_byte_pj;
+        self.energy.push(l.src, now_ns, pj);
+        self.work += l.width_bytes;
+        if let Some(log) = &mut self.link_trace {
+            log.on_traverse(link, flow, cycle, self.topo.cycle_ns);
+        }
+    }
+
+    /// Run one synchronization window toward `t`.  On return the clock
+    /// has advanced (or the horizon was consumed when hard-blocked).
+    fn run_window(&mut self, t: TimeNs) {
+        let c_lim = self.cycle_of(t);
+        let s = self.cycle;
+        debug_assert!(s < c_lim, "run_window called at/after the horizon");
+        let len_raw = self.lookahead.min(c_lim - s);
+        let mut len = len_raw;
+
+        // --- coordinator: boundary credit snapshots + window sizing ---
+        {
+            let _sb = crate::prof::scope(crate::prof::Subsystem::SyncBarrier);
+            for &l in &self.boundary_links {
+                let (src, dst) = (self.topo.links[l].src, self.topo.links[l].dst);
+                let credits = {
+                    let owner = self.regions[self.region_of[dst]].get_mut().expect("region lock");
+                    owner.ports[l].credits
+                };
+                let sender = self.regions[self.region_of[src]].get_mut().expect("region lock");
+                sender.ext_credit[l] = credits;
+                // Only a region that holds (or will receive) flits can
+                // send this window; an idle sender never consults the
+                // gate, so its starved downstream port must not stall
+                // everyone else.
+                let could_send = sender.occupancy > 0
+                    || matches!(sender.in_flight.peek(), Some(&Reverse(e)) if e.arr <= s + len_raw);
+                if could_send {
+                    len = len.min(credits as u64);
+                }
+            }
+            if len > 0 {
+                // Completion pre-scan: every in-window ejection is
+                // already in some heap (in-window sends arrive after the
+                // window), so the earliest flow-finishing tail is known
+                // now.  Cap the window there so the clock parks on the
+                // completion cycle exactly like the sequential engine.
+                let mut tails: Vec<(FlowId, u64, usize)> = Vec::new();
+                for r in self.regions.iter_mut() {
+                    let g = r.get_mut().expect("region lock");
+                    for &Reverse(e) in g.in_flight.iter() {
+                        if e.arr <= s + len
+                            && e.flit.is_tail
+                            && e.flit.dst == self.topo.links[e.link].dst
+                        {
+                            tails.push((e.flit.flow, e.arr, e.link));
+                        }
+                    }
+                }
+                tails.sort_unstable();
+                let mut i = 0;
+                while i < tails.len() {
+                    let flow = tails[i].0;
+                    let mut j = i;
+                    while j < tails.len() && tails[j].0 == flow {
+                        j += 1;
+                    }
+                    let left = self.flows[flow as usize]
+                        .as_ref()
+                        .expect("in-flight tail for unknown flow")
+                        .tails_left as usize;
+                    if j - i >= left {
+                        // The flow's last tail ejects at this cycle.
+                        len = len.min(tails[i + left - 1].1 - s);
+                    }
+                    i = j;
+                }
+            }
+        }
+
+        if len == 0 {
+            // A live boundary port has no credit to guarantee even a
+            // one-cycle window: the upstream gate outcome depends on
+            // same-cycle pops downstream, so step this cycle with the
+            // dense cross-region scan (sequential semantics).
+            if !self.step_cycle_dense() {
+                self.skip_frozen(c_lim);
+            }
+            return;
+        }
+        let w = s + len;
+
+        // --- parallel: each region steps the window on a pool worker ---
+        {
+            let regions = &self.regions;
+            let topo = &self.topo;
+            let results = self.pool.map_catching(regions.len(), |r| {
+                let mut g = regions[r].lock().expect("region lock");
+                g.step_window(topo, s, w);
+            });
+            for res in results {
+                if let Err(msg) = res {
+                    panic!("region worker panicked: {msg}");
+                }
+            }
+        }
+
+        // --- coordinator: merge in the sequential (cycle, link) order ---
+        let _sb = crate::prof::scope(crate::prof::Subsystem::SyncBarrier);
+        let mut moved_any = false;
+        let mut travs = std::mem::take(&mut self.merge_travs);
+        let mut tails = std::mem::take(&mut self.merge_tails);
+        travs.clear();
+        tails.clear();
+        #[allow(clippy::needless_range_loop)] // two indices borrow self.regions
+        for i in 0..self.regions.len() {
+            let g = self.regions[i].get_mut().expect("region lock");
+            moved_any |= g.moved;
+            travs.extend(g.travs.drain(..));
+            tails.extend(g.tails.drain(..));
+            let outs: Vec<InFlight> = g.boundary_out.drain(..).collect();
+            for e in outs {
+                let owner = self.region_of[self.topo.links[e.link].dst];
+                let og = self.regions[owner].get_mut().expect("region lock");
+                if e.flit.dst != self.topo.links[e.link].dst {
+                    // Reconcile the sender's mirrored credit decrement
+                    // against the real downstream counter (an ejecting
+                    // flit reserved no slot).
+                    og.ports[e.link].credits -= 1;
+                }
+                og.in_flight.push(Reverse(e));
+            }
+        }
+        // At most one flit per (cycle, link): sorting reproduces the
+        // dense scan's global processing order.
+        travs.sort_unstable();
+        tails.sort_unstable();
+        crate::prof::count(crate::prof::Counter::FlitHops, travs.len() as u64);
+        for &(cycle, link, flow) in &travs {
+            self.commit_traversal(cycle, link, flow);
+        }
+        for &(cycle, _link, flow) in &tails {
+            let now_ns = self.ns(cycle);
+            self.finish_tail(flow, now_ns);
+        }
+        self.merge_travs = travs;
+        self.merge_tails = tails;
+        self.cycle = w;
+        if !moved_any {
+            self.skip_frozen(c_lim);
+        }
+    }
+
+    /// One cycle of the dense cross-region scan — the literal
+    /// sequential semantics over the partitioned storage, used when a
+    /// starved boundary port makes even a one-cycle window unsound.
+    /// Returns true if any flit moved.
+    fn step_cycle_dense(&mut self) -> bool {
+        let mut moved = false;
+        self.cycle += 1;
+        let c = self.cycle;
+        let now_ns = self.ns(c);
+        let hop = self.topo.hop_latency_cycles.max(1);
+
+        // 1. Deliveries due this cycle in global (arrival, link) order:
+        // a K-way min-merge over the region heaps.
+        loop {
+            let mut best: Option<(u64, usize, usize)> = None; // (arr, link, region)
+            for (ri, r) in self.regions.iter_mut().enumerate() {
+                let g = r.get_mut().expect("region lock");
+                if let Some(&Reverse(e)) = g.in_flight.peek() {
+                    let better = match best {
+                        None => true,
+                        Some((a, l, _)) => (e.arr, e.link) < (a, l),
+                    };
+                    if e.arr <= c && better {
+                        best = Some((e.arr, e.link, ri));
+                    }
+                }
+            }
+            let Some((_, _, ri)) = best else { break };
+            let e = {
+                let g = self.regions[ri].get_mut().expect("region lock");
+                g.in_flight.pop().unwrap().0
+            };
+            let node = self.topo.links[e.link].dst;
+            if e.flit.dst == node {
+                self.regions[ri].get_mut().expect("region lock").ports[e.link].credits += 1;
+                if e.flit.is_tail {
+                    self.finish_tail(e.flit.flow, now_ns);
+                }
+            } else {
+                let g = self.regions[ri].get_mut().expect("region lock");
+                g.ports[e.link].buf.push_back(e.flit);
+                g.occupancy += 1;
+            }
+            moved = true;
+        }
+
+        // 2. Allocation + traversal over every link, ascending — state
+        // for link `l` lives in region(src) except the input port,
+        // which lives in region(dst).
+        for link in 0..self.topo.links.len() {
+            let (src, dst) = (self.topo.links[link].src, self.topo.links[link].dst);
+            let (rs, rd) = (self.region_of[src], self.region_of[dst]);
+            if self.regions[rs].get_mut().expect("region lock").occupancy == 0 {
+                // No buffered flit in the source region: provable no-op.
+                continue;
+            }
+            {
+                let g = self.regions[rs].get_mut().expect("region lock");
+                if g.bound[link].is_none() {
+                    let ninputs = g.inputs[src].len();
+                    let start = g.rr[link] % ninputs;
+                    for k in 0..ninputs {
+                        let input = g.inputs[src][(start + k) % ninputs];
+                        if let Some(f) = g.front(input) {
+                            if f.is_head && route_out(&self.topo, src, f.dst) == Some(link) {
+                                g.bound[link] = Some((input, f.flow, f.pkt));
+                                g.rr[link] = (start + k + 1) % ninputs;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            let Some((input, flow, pkt)) =
+                self.regions[rs].get_mut().expect("region lock").bound[link]
+            else {
+                continue;
+            };
+            let f = {
+                let g = self.regions[rs].get_mut().expect("region lock");
+                match g.front(input) {
+                    Some(f) if f.flow == flow && f.pkt == pkt => *f,
+                    _ => continue,
+                }
+            };
+            let will_eject = f.dst == dst;
+            let have_credit =
+                self.regions[rd].get_mut().expect("region lock").ports[link].credits > 0;
+            if !(will_eject || have_credit) {
+                continue;
+            }
+            let f = self.regions[rs].get_mut().expect("region lock").pop(input);
+            if !will_eject {
+                self.regions[rd].get_mut().expect("region lock").ports[link].credits -= 1;
+            }
+            self.regions[rd]
+                .get_mut()
+                .expect("region lock")
+                .in_flight
+                .push(Reverse(InFlight { arr: c + hop, link, flit: f }));
+            self.commit_traversal(c, link, f.flow);
+            crate::prof::count(crate::prof::Counter::FlitHops, 1);
+            self.regions[rs].get_mut().expect("region lock").link_busy_cycles[link] += 1;
+            if f.is_tail {
+                self.regions[rs].get_mut().expect("region lock").bound[link] = None;
+            }
+            moved = true;
+        }
+        moved
+    }
+}
+
+impl NetworkSim for ShardedFlitEngine {
+    fn inject(&mut self, spec: FlowSpec, now: TimeNs) -> FlowId {
+        let id = self.next_flow_id;
+        self.next_flow_id += 1;
+        debug_assert_eq!(self.flows.len(), id as usize);
+        // Catch the engine's clock up to the injection time without
+        // simulating idle cycles one by one (sequential fast-forward).
+        let inj_cycle = self.cycle_of(now);
+        if inj_cycle > self.cycle && !self.network_busy() {
+            self.cycle = inj_cycle;
+        }
+        let path = self
+            .topo
+            .path(spec.src, spec.dst)
+            .expect("inject: unreachable destination (check Topology::reachable first)");
+        if path.is_empty() {
+            let stats = FlowStats { spec, injected_ns: now, completed_ns: now, hops: 0 };
+            self.flows.push(None);
+            self.finished.insert(id, stats);
+            self.completions.push_back((now, id));
+            return id;
+        }
+        let width = self.topo.links[path[0]].width_bytes;
+        let payload_flits = spec.bytes.max(1).div_ceil(width);
+        let npackets = payload_flits.div_ceil(PACKET_FLITS);
+        self.flows.push(Some(FlowProgress {
+            spec,
+            injected_ns: now,
+            hops: path.len() as u32,
+            tails_left: npackets,
+        }));
+        self.active_flows += 1;
+        let g = self.regions[self.region_of[spec.src]].get_mut().expect("region lock");
+        g.occupancy += payload_flits;
+        let mut remaining = payload_flits;
+        for pkt in 0..npackets {
+            let in_this = remaining.min(PACKET_FLITS);
+            remaining -= in_this;
+            for k in 0..in_this {
+                g.inject_q[spec.src].push_back(Flit {
+                    flow: id,
+                    pkt,
+                    is_head: k == 0,
+                    is_tail: k == in_this - 1,
+                    dst: spec.dst,
+                });
+            }
+        }
+        id
+    }
+
+    fn advance_until(&mut self, t: TimeNs) -> Option<FlowCompletion> {
+        let _prof = crate::prof::scope(crate::prof::Subsystem::FlitEngine);
+        loop {
+            if let Some(&(ct, _)) = self.completions.front() {
+                if ct <= t {
+                    let (time, id) = self.completions.pop_front().unwrap();
+                    return Some(FlowCompletion { id, time });
+                }
+                return None;
+            }
+            if !self.network_busy() || self.ns(self.cycle) >= t || self.cycle == u64::MAX {
+                return None;
+            }
+            self.run_window(t);
+        }
+    }
+
+    fn has_active(&self) -> bool {
+        self.active_flows > 0 || !self.completions.is_empty()
+    }
+
+    fn stats(&self, id: FlowId) -> Option<FlowStats> {
+        self.finished.get(&id).copied()
+    }
+
+    fn comm_energy_pj(&self) -> f64 {
+        self.energy.total_pj()
+    }
+
+    fn drain_energy_events(&mut self) -> Vec<(usize, TimeNs, f64)> {
+        self.energy.drain()
+    }
+
+    fn set_energy_bin_ns(&mut self, bin_ns: TimeNs) {
+        self.energy.set_bin_ns(bin_ns);
+    }
+
+    fn work_done(&self) -> u64 {
+        self.work
+    }
+
+    fn link_busy_ns(&self) -> Vec<TimeNs> {
+        // Each link's busy counter is owned by exactly one region (the
+        // source's); summing across regions reassembles the global view.
+        let mut cycles = vec![0u64; self.topo.links.len()];
+        for r in &self.regions {
+            let g = r.lock().expect("region lock");
+            for (i, &c) in g.link_busy_cycles.iter().enumerate() {
+                cycles[i] += c;
+            }
+        }
+        cycles.iter().map(|&c| (c as f64 * self.topo.cycle_ns).round() as TimeNs).collect()
+    }
+
+    fn set_link_trace(&mut self, enabled: bool) {
+        self.link_trace =
+            if enabled { Some(LinkTraceLog::new(self.topo.links.len())) } else { None };
+    }
+
+    fn drain_link_trace(&mut self) -> Vec<LinkTraceEvent> {
+        match &mut self.link_trace {
+            Some(log) => log.drain(self.topo.cycle_ns),
+            None => Vec::new(),
+        }
+    }
+
+    /// Mirrors the sequential engine's fault handling over the
+    /// partitioned storage: adopt the rerouted tables, collect every
+    /// flow with a flit on a dead link or stranded by the new routes,
+    /// purge their flits (restoring held credits), and report them.
+    fn apply_fault(&mut self, topo: &Topology, link_down: &[bool]) -> Vec<(FlowId, FlowSpec)> {
+        debug_assert_eq!(topo.links.len(), self.topo.links.len(), "same link universe");
+        self.topo.route = topo.route.clone();
+        self.topo.hop_table = topo.hop_table.clone();
+
+        let topo = &self.topo;
+        let route = &topo.route;
+        let stranded = |node: usize, dst: usize| node != dst && route[node][dst] == usize::MAX;
+        let mut affected: BTreeSet<FlowId> = BTreeSet::new();
+        for r in self.regions.iter_mut() {
+            let g = r.get_mut().expect("region lock");
+            for (l, port) in g.ports.iter().enumerate() {
+                for f in &port.buf {
+                    if link_down[l] || stranded(topo.links[l].dst, f.dst) {
+                        affected.insert(f.flow);
+                    }
+                }
+            }
+            for (n, q) in g.inject_q.iter().enumerate() {
+                for f in q {
+                    if stranded(n, f.dst) {
+                        affected.insert(f.flow);
+                    }
+                }
+            }
+            for &Reverse(e) in g.in_flight.iter() {
+                if link_down[e.link] || stranded(topo.links[e.link].dst, e.flit.dst) {
+                    affected.insert(e.flit.flow);
+                }
+            }
+            for (l, b) in g.bound.iter().enumerate() {
+                if link_down[l] {
+                    if let Some((_, flow, _)) = b {
+                        affected.insert(*flow);
+                    }
+                }
+            }
+        }
+        if affected.is_empty() {
+            return Vec::new();
+        }
+
+        // Purge every flit of every affected flow, restoring the
+        // credits they hold: a buffered flit returns its own port slot;
+        // an in-flight flit returns the downstream slot reserved at
+        // send time (none was reserved for a flit about to eject).
+        // Each restoration is region-local: a heap entry's input port
+        // belongs to the same (destination) region.
+        for r in self.regions.iter_mut() {
+            let g = r.get_mut().expect("region lock");
+            let mut removed_total = 0u64;
+            for port in g.ports.iter_mut() {
+                let before = port.buf.len();
+                port.buf.retain(|f| !affected.contains(&f.flow));
+                let removed = before - port.buf.len();
+                port.credits += removed;
+                removed_total += removed as u64;
+            }
+            for q in g.inject_q.iter_mut() {
+                let before = q.len();
+                q.retain(|f| !affected.contains(&f.flow));
+                removed_total += (before - q.len()) as u64;
+            }
+            g.occupancy -= removed_total;
+            let entries: Vec<InFlight> =
+                std::mem::take(&mut g.in_flight).into_iter().map(|Reverse(e)| e).collect();
+            for e in entries {
+                if affected.contains(&e.flit.flow) {
+                    if e.flit.dst != topo.links[e.link].dst {
+                        g.ports[e.link].credits += 1;
+                    }
+                } else {
+                    g.in_flight.push(Reverse(e));
+                }
+            }
+            for b in g.bound.iter_mut() {
+                if matches!(b, Some((_, flow, _)) if affected.contains(flow)) {
+                    *b = None;
+                }
+            }
+        }
+        let mut dropped = Vec::new();
+        for id in affected {
+            let fp = self.flows[id as usize].take().expect("affected flow exists");
+            self.active_flows -= 1;
+            dropped.push((id, fp.spec));
+        }
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LinkParams;
+    use crate::noc::flit::FlitEngine;
+    use crate::noc::topology::mesh;
+    use crate::util::rng::Rng;
+
+    /// A pre-generated drive schedule, replayed identically on both
+    /// engines (PR 4's differential-harness pattern).
+    #[derive(Debug, Clone)]
+    enum Op {
+        Inject(FlowSpec, TimeNs),
+        Advance(TimeNs),
+    }
+
+    fn run_script(e: &mut dyn NetworkSim, script: &[Op]) -> Vec<(FlowId, TimeNs)> {
+        let mut out = Vec::new();
+        for op in script {
+            match *op {
+                Op::Inject(spec, at) => {
+                    e.inject(spec, at);
+                }
+                Op::Advance(t) => {
+                    while let Some(c) = e.advance_until(t) {
+                        out.push((c.id, c.time));
+                    }
+                }
+            }
+        }
+        while let Some(c) = e.advance_until(TimeNs::MAX) {
+            out.push((c.id, c.time));
+        }
+        out
+    }
+
+    fn random_script(rng: &mut Rng, nodes: usize, nflows: usize) -> Vec<Op> {
+        let mut script = Vec::new();
+        let mut t = 0u64;
+        for _ in 0..nflows {
+            t += rng.below(30_000);
+            let src = rng.below_usize(nodes);
+            // dst may equal src (empty-path flows complete instantly).
+            let dst = rng.below_usize(nodes);
+            let bytes = 1 + rng.below(16_384);
+            script.push(Op::Inject(FlowSpec { src, dst, bytes }, t));
+            if rng.below(3) == 0 {
+                script.push(Op::Advance(t + rng.below(5_000)));
+            }
+        }
+        script
+    }
+
+    /// Byte-identity assertion: completion sequences, per-flow stats,
+    /// bit-equal energy totals, work, link-busy accounting, traces.
+    fn assert_matches(
+        mut par: ShardedFlitEngine,
+        mut seq: FlitEngine,
+        script: &[Op],
+        label: &str,
+    ) {
+        par.set_link_trace(true);
+        seq.set_link_trace(true);
+        let got = run_script(&mut par, script);
+        let want = run_script(&mut seq, script);
+        assert_eq!(got, want, "{label}: completion sequences diverge");
+        for &(id, _) in &want {
+            assert_eq!(par.stats(id), seq.stats(id), "{label}: FlowStats diverge for {id}");
+        }
+        assert_eq!(
+            par.comm_energy_pj().to_bits(),
+            seq.comm_energy_pj().to_bits(),
+            "{label}: energy totals diverge ({} vs {})",
+            par.comm_energy_pj(),
+            seq.comm_energy_pj()
+        );
+        assert_eq!(par.work_done(), seq.work_done(), "{label}: work diverges");
+        assert_eq!(par.link_busy_ns(), seq.link_busy_ns(), "{label}: link busy diverges");
+        let ta = par.drain_link_trace();
+        let tb = seq.drain_link_trace();
+        assert_eq!(ta, tb, "{label}: link traces diverge");
+        let ea = par.drain_energy_events();
+        let eb = seq.drain_energy_events();
+        assert_eq!(ea, eb, "{label}: energy events diverge");
+    }
+
+    fn exec(threads: usize) -> ExecSpec {
+        ExecSpec::threads(threads)
+    }
+
+    #[test]
+    fn differential_randomized_meshes_across_threads() {
+        for seed in 0..4u64 {
+            for threads in [2usize, 3, 8] {
+                let mut rng = Rng::new(0x9A7 + seed * 31 + threads as u64);
+                let rows = 2 + rng.below_usize(3);
+                let cols = 2 + rng.below_usize(3);
+                let depth = [1, 2, 4, 8, 16][rng.below_usize(5)];
+                let nflows = 2 + rng.below_usize(9);
+                let topo = mesh(rows, cols, &LinkParams::default());
+                let script = random_script(&mut rng, rows * cols, nflows);
+                assert_matches(
+                    ShardedFlitEngine::with_buffer_depth(topo.clone(), exec(threads), depth),
+                    FlitEngine::with_buffer_depth(topo, depth),
+                    &script,
+                    &format!("mesh {rows}x{cols} depth={depth} threads={threads} seed={seed}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn differential_partitioner_and_lookahead_variants() {
+        let topo = mesh(4, 4, &LinkParams::default());
+        let mut rng = Rng::new(0x5712);
+        let script = random_script(&mut rng, 16, 10);
+        for (p, la) in [
+            (Partitioner::Stripes(5), None),
+            (Partitioner::Stripes(16), None),
+            (Partitioner::Auto, Some(1)),
+            (Partitioner::Auto, Some(999)), // clamped to hop latency
+        ] {
+            let mut e = exec(4).with_partitioner(p);
+            if let Some(la) = la {
+                e = e.with_lookahead(la);
+            }
+            assert_matches(
+                ShardedFlitEngine::new(topo.clone(), e),
+                FlitEngine::new(topo.clone()),
+                &script,
+                &format!("partitioner={p:?} lookahead={la:?}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_hot_spot_exercises_starved_boundary_fallback() {
+        // Everything converges on one corner with depth-1 buffers:
+        // boundary ports starve, forcing the dense single-cycle path.
+        let topo = mesh(3, 3, &LinkParams::default());
+        let mut script = Vec::new();
+        for i in 0..8usize {
+            script.push(Op::Inject(
+                FlowSpec { src: i, dst: 8, bytes: 2_048 + 512 * i as u64 },
+                (i as u64) * 7,
+            ));
+        }
+        script.push(Op::Advance(100));
+        script.push(Op::Advance(1_000));
+        for depth in [1usize, 2] {
+            assert_matches(
+                ShardedFlitEngine::with_buffer_depth(topo.clone(), exec(3), depth),
+                FlitEngine::with_buffer_depth(topo.clone(), depth),
+                &script,
+                &format!("hot-spot 3x3 depth={depth}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_non_integer_clock() {
+        for (seed, ghz) in [(0u64, 1.6f64), (1, 3.0), (2, 0.8)] {
+            let mut rng = Rng::new(0xC10C + seed);
+            let p = LinkParams { clock_ghz: ghz, ..LinkParams::default() };
+            let topo = mesh(2, 3, &p);
+            let script = random_script(&mut rng, 6, 8);
+            assert_matches(
+                ShardedFlitEngine::new(topo.clone(), exec(2)),
+                FlitEngine::new(topo),
+                &script,
+                &format!("clock {ghz} GHz seed={seed}"),
+            );
+        }
+    }
+
+    #[test]
+    fn differential_with_fault_mid_run() {
+        let p = LinkParams::default();
+        let pristine = mesh(3, 3, &p);
+        let dead: Vec<bool> = pristine
+            .links
+            .iter()
+            .map(|l| (l.src == 1 && l.dst == 2) || (l.src == 2 && l.dst == 1))
+            .collect();
+        let mut masked = pristine.clone();
+        masked.apply_link_mask(&dead);
+        for threads in [2usize, 8] {
+            let mut par = ShardedFlitEngine::new(pristine.clone(), exec(threads));
+            let mut seq = FlitEngine::new(pristine.clone());
+            let mut rng = Rng::new(0xFA17);
+            let script = random_script(&mut rng, 9, 8);
+            for e in [&mut par as &mut dyn NetworkSim, &mut seq as &mut dyn NetworkSim] {
+                for op in &script {
+                    match *op {
+                        Op::Inject(spec, at) => {
+                            e.inject(spec, at);
+                        }
+                        Op::Advance(t) => while e.advance_until(t).is_some() {},
+                    }
+                }
+                e.advance_until(40);
+            }
+            let dp = par.apply_fault(&masked, &dead);
+            let ds = seq.apply_fault(&masked, &dead);
+            assert_eq!(dp, ds, "threads={threads}: dropped flows diverge");
+            // Retransmit the dropped flows on both, then drain.
+            for (_, spec) in &dp {
+                par.inject(*spec, 50_000);
+                seq.inject(*spec, 50_000);
+            }
+            let mut tail = Vec::new();
+            let ga = {
+                let mut v = Vec::new();
+                while let Some(c) = par.advance_until(TimeNs::MAX) {
+                    v.push((c.id, c.time));
+                }
+                v
+            };
+            while let Some(c) = seq.advance_until(TimeNs::MAX) {
+                tail.push((c.id, c.time));
+            }
+            assert_eq!(ga, tail, "threads={threads}: post-fault completions diverge");
+            assert_eq!(
+                par.comm_energy_pj().to_bits(),
+                seq.comm_energy_pj().to_bits(),
+                "threads={threads}: post-fault energy diverges"
+            );
+            assert_eq!(par.work_done(), seq.work_done());
+        }
+    }
+
+    #[test]
+    fn idle_fast_forward_and_empty_paths() {
+        let topo = mesh(2, 2, &LinkParams::default());
+        let script = vec![
+            Op::Inject(FlowSpec { src: 0, dst: 0, bytes: 64 }, 5),
+            Op::Inject(FlowSpec { src: 0, dst: 3, bytes: 512 }, 1_000_000),
+            Op::Advance(1_000_500),
+            Op::Inject(FlowSpec { src: 3, dst: 0, bytes: 512 }, 90_000_000_000),
+        ];
+        assert_matches(
+            ShardedFlitEngine::new(topo.clone(), exec(4)),
+            FlitEngine::new(topo),
+            &script,
+            "idle gaps + empty paths",
+        );
+    }
+
+    #[test]
+    fn region_count_clamps_to_nodes_and_threads() {
+        let topo = mesh(2, 2, &LinkParams::default());
+        assert_eq!(ShardedFlitEngine::new(topo.clone(), exec(16)).num_regions(), 4);
+        assert_eq!(
+            ShardedFlitEngine::new(
+                topo.clone(),
+                exec(2).with_partitioner(Partitioner::Stripes(3))
+            )
+            .num_regions(),
+            3
+        );
+        assert_eq!(ShardedFlitEngine::new(topo, exec(2)).num_regions(), 2);
+    }
+}
+

@@ -1,0 +1,108 @@
+//! Conservative parallel discrete-event core for the flit-level NoI.
+//!
+//! Domain-decomposes the interposer mesh into `K` contiguous node
+//! stripes ("regions") and advances each region on the shared
+//! [`WorkerPool`](crate::util::pool::WorkerPool) workers in lock-step
+//! **synchronization windows** of at most `E` cycles, where the
+//! lookahead `E` is bounded by the minimum inter-region link latency
+//! (`Topology::hop_latency_cycles`): a flit sent across a region
+//! boundary during a window cannot arrive — and therefore cannot be
+//! observed by the neighbour — before the window ends, so regions may
+//! step the window's cycles concurrently without speculation or
+//! rollback.  Boundary flits, credits, energy, traces, and completions
+//! are exchanged/merged by the coordinator between windows in the
+//! sequential engine's exact `(cycle, link)` order, which makes the
+//! parallel engine **byte-identical** to [`FlitEngine`]: same completion
+//! sequences, same `FlowStats`, bit-equal `f64` energy totals, same
+//! link-busy accounting, same traces — asserted by the differential
+//! harness in `par::engine`'s tests and by
+//! `rust/tests/parallel_determinism.rs` across `--threads 1/2/8`,
+//! including with a PR 9 fault plan armed.
+//!
+//! Select it per run with [`ExecSpec`] on the
+//! [`SimulationBuilder`](crate::sim::SimulationBuilder) (or
+//! `--threads N` on any CLI subcommand).  Packet fidelity keeps the
+//! single sequential event heap — it is thread-count-invariant by
+//! construction, and `ExecSpec` simply leaves it untouched.
+//!
+//! [`FlitEngine`]: crate::noc::flit::FlitEngine
+
+mod engine;
+
+pub use engine::ShardedFlitEngine;
+
+/// How the NoI node set is split into regions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Partitioner {
+    /// One contiguous node stripe per worker thread (row-major node
+    /// order, so mesh stripes are bands of whole rows and boundary
+    /// links exist only between adjacent stripes).
+    #[default]
+    Auto,
+    /// Exactly `k` contiguous stripes regardless of thread count
+    /// (clamped to the node count).  Useful to decouple decomposition
+    /// granularity from the pool size in tests and sweeps.
+    Stripes(usize),
+}
+
+/// Execution specification: how a single simulation run is executed,
+/// orthogonal to *what* is simulated.  Defaults reproduce the
+/// sequential engines exactly (`threads == 1`).
+///
+/// ```
+/// use chipsim::par::ExecSpec;
+/// let exec = ExecSpec::threads(8);
+/// assert_eq!(exec.threads, 8);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecSpec {
+    /// Worker threads for one run: `1` = sequential engines (the
+    /// default), `0` = available parallelism, `N > 1` = the sharded
+    /// flit engine on an `N`-worker pool.
+    pub threads: usize,
+    /// Region decomposition policy.
+    pub partitioner: Partitioner,
+    /// Synchronization-window length in cycles.  `None` (default) uses
+    /// the maximum safe lookahead — the inter-region hop latency.
+    /// Values are clamped to `1..=hop_latency_cycles`; a larger value
+    /// would let a boundary flit arrive mid-window (unsound), so it is
+    /// never honoured.
+    pub lookahead: Option<u64>,
+}
+
+impl Default for ExecSpec {
+    fn default() -> Self {
+        ExecSpec { threads: 1, partitioner: Partitioner::Auto, lookahead: None }
+    }
+}
+
+impl ExecSpec {
+    /// Sequential execution (the default; identical to not setting an
+    /// `ExecSpec` at all).
+    pub fn sequential() -> Self {
+        ExecSpec::default()
+    }
+
+    /// Parallel execution on `threads` workers (`0` = available
+    /// parallelism) with the default partitioner and lookahead.
+    pub fn threads(threads: usize) -> Self {
+        ExecSpec { threads, ..ExecSpec::default() }
+    }
+
+    /// Override the partitioner.
+    pub fn with_partitioner(mut self, p: Partitioner) -> Self {
+        self.partitioner = p;
+        self
+    }
+
+    /// Override the lookahead (clamped to the safe range at run time).
+    pub fn with_lookahead(mut self, cycles: u64) -> Self {
+        self.lookahead = Some(cycles);
+        self
+    }
+
+    /// Does this spec ask for the parallel engine at all?
+    pub fn is_parallel(&self) -> bool {
+        self.threads != 1
+    }
+}

@@ -84,10 +84,19 @@ pub enum Subsystem {
     FleetDispatch,
     /// Fleet parallel replica advance (the epoch's worker-pool phase).
     FleetAdvance,
+    /// Sharded flit engine: one region advancing a synchronization
+    /// window on a pool worker (`crate::par`).  Accumulates on the
+    /// worker threads; compare against `sync_barrier` and the
+    /// coordinator's `flit_engine` time for parallel efficiency.
+    RegionAdvance,
+    /// Sharded flit engine: the coordinator's serial sections between
+    /// windows (credit snapshots, completion pre-scan, boundary/event
+    /// merge) — the Amdahl ceiling of the parallel NoI core.
+    SyncBarrier,
 }
 
 impl Subsystem {
-    pub const COUNT: usize = 10;
+    pub const COUNT: usize = 12;
     pub const ALL: [Subsystem; Self::COUNT] = [
         Subsystem::EventLoop,
         Subsystem::Mapping,
@@ -99,6 +108,8 @@ impl Subsystem {
         Subsystem::TraceExport,
         Subsystem::FleetDispatch,
         Subsystem::FleetAdvance,
+        Subsystem::RegionAdvance,
+        Subsystem::SyncBarrier,
     ];
 
     /// Stable snake_case name used in JSON, collapsed stacks, and the
@@ -115,6 +126,8 @@ impl Subsystem {
             Subsystem::TraceExport => "trace_export",
             Subsystem::FleetDispatch => "fleet_dispatch",
             Subsystem::FleetAdvance => "fleet_advance",
+            Subsystem::RegionAdvance => "region_advance",
+            Subsystem::SyncBarrier => "sync_barrier",
         }
     }
 }

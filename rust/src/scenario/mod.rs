@@ -995,7 +995,8 @@ impl SweepRunner {
         let scenarios = self.resolve(registry, names)?;
         let jobs: Vec<(&Scenario, u64)> =
             scenarios.iter().map(|s| (*s, self.seed_for(&s.name))).collect();
-        let results = crate::util::pool::map_catching(self.threads, jobs.len(), |i| {
+        let pool = crate::util::pool::WorkerPool::new(self.threads);
+        let results = pool.map_catching(jobs.len(), |i| {
             let (sc, seed) = jobs[i];
             SweepOutcome {
                 scenario: sc.name.clone(),

@@ -41,6 +41,7 @@ use crate::fault::{
 use crate::mapping::{MapContext, Mapper, MemoryLedger, ModelMapping, NearestNeighbor};
 use crate::noc::{engine::PacketEngine, flit::FlitEngine, topology::Topology};
 use crate::noc::{FlowId, FlowSpec, NetworkSim, TenantTraffic};
+use crate::par::{ExecSpec, ShardedFlitEngine};
 use crate::power::{PowerTracker, PowerWindow};
 use crate::sim::report::{ModelOutcome, SimReport, ThermalSummary};
 use crate::thermal::stepper::ThermalStepper;
@@ -352,6 +353,7 @@ pub struct SimulationBuilder {
     traffic: Option<crate::serving::TrafficSpec>,
     tracer: Option<TraceHandle>,
     faults: Option<FaultPlan>,
+    exec: ExecSpec,
 }
 
 impl SimulationBuilder {
@@ -368,6 +370,7 @@ impl SimulationBuilder {
             traffic: None,
             tracer: None,
             faults: None,
+            exec: ExecSpec::default(),
         }
     }
 
@@ -460,6 +463,17 @@ impl SimulationBuilder {
         self
     }
 
+    /// How to *execute* the run (see [`crate::par`]): `threads > 1` (or
+    /// `0` = all cores) swaps the flit-level NoI for the sharded parallel
+    /// engine, which is byte-identical to the sequential one.  Packet
+    /// fidelity and everything above the NoI are untouched — they are
+    /// thread-count-invariant by construction.  A custom `network`
+    /// factory wins over this, like it wins over `network_fidelity`.
+    pub fn exec(mut self, exec: ExecSpec) -> Self {
+        self.exec = exec;
+        self
+    }
+
     /// Validate the configuration and assemble a runnable [`Simulation`].
     ///
     /// Errors (instead of panicking) on impossible hardware — a
@@ -526,14 +540,11 @@ impl SimulationBuilder {
             None => default_backend(&params)?,
         };
         let fidelity = self.fidelity.unwrap_or(params.noc_fidelity);
-        let network = self.network.unwrap_or_else(|| {
-            Box::new(move |topo: &Topology| -> Box<dyn NetworkSim> {
-                match fidelity {
-                    NocFidelity::Packet => Box::new(PacketEngine::new(topo.clone())),
-                    NocFidelity::Flit => Box::new(FlitEngine::new(topo.clone())),
-                }
-            })
-        });
+        let custom_network = self.network.is_some();
+        let network = match self.network {
+            Some(factory) => factory,
+            None => default_network_factory(fidelity, self.exec),
+        };
         let topo = Topology::build(&hw);
         Ok(Simulation {
             hw,
@@ -542,6 +553,8 @@ impl SimulationBuilder {
             mapper: self.mapper.unwrap_or_else(|| Box::new(NearestNeighbor)),
             backend,
             network,
+            fidelity,
+            custom_network,
             thermal: self.thermal,
             observers: self.observers,
             traffic: self.traffic,
@@ -550,6 +563,22 @@ impl SimulationBuilder {
             faults: self.faults,
         })
     }
+}
+
+/// The built-in engine selection: fidelity picks the model, and a
+/// parallel [`ExecSpec`] swaps the flit engine for its byte-identical
+/// sharded counterpart.  Shared by `build()` and the post-build
+/// [`Simulation::set_exec`] seam so both resolve identically.
+fn default_network_factory(fidelity: NocFidelity, exec: ExecSpec) -> NetworkFactory {
+    Box::new(move |topo: &Topology| -> Box<dyn NetworkSim> {
+        match fidelity {
+            NocFidelity::Packet => Box::new(PacketEngine::new(topo.clone())),
+            NocFidelity::Flit if exec.is_parallel() => {
+                Box::new(ShardedFlitEngine::new(topo.clone(), exec))
+            }
+            NocFidelity::Flit => Box::new(FlitEngine::new(topo.clone())),
+        }
+    })
 }
 
 /// Construct the backend selected by `params.compute_backend`, returning
@@ -834,6 +863,13 @@ pub struct Simulation {
     mapper: Box<dyn Mapper>,
     backend: Box<dyn ComputeBackend>,
     network: NetworkFactory,
+    /// Resolved NoI fidelity (builder override or `params.noc_fidelity`),
+    /// kept so [`set_exec`](Self::set_exec) can rebuild the default
+    /// factory post-construction.
+    fidelity: NocFidelity,
+    /// Whether `network` is a user-supplied factory (which `set_exec`
+    /// must not replace — custom factories win, as in the builder).
+    custom_network: bool,
     thermal: ThermalSpec,
     observers: Vec<ObserverHandle>,
     traffic: Option<crate::serving::TrafficSpec>,
@@ -932,6 +968,19 @@ impl Simulation {
     /// `--faults` flag attaches plans here.  `None` disarms injection.
     pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
         self.faults = plan;
+    }
+
+    /// Install (or replace) the execution spec after construction — the
+    /// CLI's `--threads` flag reaches scenario-built simulations here,
+    /// same seam as [`set_trace`](Self::set_trace) and
+    /// [`set_fault_plan`](Self::set_fault_plan).  A builder-supplied
+    /// custom network factory wins: this is then a no-op, exactly as
+    /// `.exec()` loses to `.network()` at build time.
+    pub fn set_exec(&mut self, exec: ExecSpec) {
+        if self.custom_network {
+            return;
+        }
+        self.network = default_network_factory(self.fidelity, exec);
     }
 
     /// The attached fault-injection plan, if any.

@@ -1,73 +1,164 @@
-//! Shared scoped worker pool for embarrassingly-parallel jobs.
+//! Shared sized worker pool for embarrassingly-parallel jobs.
 //!
 //! One implementation of the work-pulling / panic-catching pattern used
 //! everywhere CHIPSIM fans independent jobs across threads: the scenario
-//! [`SweepRunner`](crate::scenario::SweepRunner) (one job per scenario)
-//! and the fleet dispatcher (one job per replica board per epoch).
-//! Jobs are indexed `0..n`; workers pull the next index off an atomic
-//! counter, so scheduling order never affects results — each slot is
-//! written exactly once, and the output vector is in input order.  A
-//! panicking job is caught at the job boundary and surfaced as that
-//! slot's `Err(message)` instead of unwinding through (and poisoning)
-//! the whole pool.
+//! [`SweepRunner`](crate::scenario::SweepRunner) (one job per scenario),
+//! the fleet dispatcher (one job per replica board per epoch), and the
+//! parallel sharded NoC core (`crate::par`, one job per mesh region per
+//! synchronization window).  Jobs are indexed `0..n`; workers pull the
+//! next index off an atomic counter, so scheduling order never affects
+//! results — each slot is written exactly once, and the output vector is
+//! in input order.  A panicking job is caught at the job boundary and
+//! surfaced as that slot's `Err(message)` instead of unwinding through
+//! (and poisoning) the whole pool.
+//!
+//! # One pool per process
+//!
+//! Every worker thread marks itself via a thread-local while running
+//! jobs.  [`WorkerPool::map_catching`] called *from inside* a worker
+//! (e.g. a sharded simulation advanced by a `SweepRunner` job) detects
+//! this with [`in_worker`] and runs the jobs inline on the calling
+//! thread instead of spawning a nested pool — the outer pool already
+//! owns the machine's parallelism, and nesting would oversubscribe it.
+//! The same query lets `Simulation::build` fall back to the sequential
+//! engine when constructed on a worker thread.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the calling thread is executing a job for a
+/// [`WorkerPool`] (directly or via the free [`map_catching`]).  Used to
+/// suppress nested pools and per-run parallelism under an outer fan-out.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|f| f.get())
+}
+
+/// RAII guard marking the current thread as a pool worker.
+struct WorkerMark {
+    prev: bool,
+}
+
+impl WorkerMark {
+    fn set() -> Self {
+        let prev = IN_WORKER.with(|f| f.replace(true));
+        WorkerMark { prev }
+    }
+}
+
+impl Drop for WorkerMark {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_WORKER.with(|f| f.set(prev));
+    }
+}
+
+/// A sized worker pool.  Construction is cheap (no threads are kept
+/// alive between calls — workers are scoped to each `map_catching`), so
+/// the value mostly carries the resolved thread count and gives every
+/// fan-out site one shared policy for sizing, thread naming, busy-scope
+/// profiling hooks, and nested-call suppression.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` workers; `0` resolves to the machine's
+    /// available parallelism.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads > 0 {
+            threads
+        } else {
+            std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1)
+        };
+        WorkerPool { threads }
+    }
+
+    /// The resolved worker count (never 0).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool's workers,
+    /// returning results in index order.  A panic inside `f(i)` becomes
+    /// `Err(panic message)` for slot `i`; the other jobs are
+    /// unaffected.  Called from inside another pool job, runs inline on
+    /// the calling thread (no nested spawn).
+    pub fn map_catching<R, F>(&self, n: usize, f: F) -> Vec<Result<R, String>>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        let run_job = |i: usize| -> Result<R, String> {
+            // Busy/idle attribution for the parallel-efficiency
+            // baseline: one guard per job, no-op unless profiling.
+            let _busy = crate::prof::busy_scope();
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
+                Ok(r) => Ok(r),
+                Err(payload) => Err(panic_message(payload)),
+            }
+        };
+        if in_worker() || self.threads == 1 || n == 1 {
+            // Inline path: already on a worker (nested call) or nothing
+            // to parallelize.  Same catching semantics, no threads.
+            return (0..n).map(run_job).collect();
+        }
+        let workers = self.threads.min(n);
+        let next = AtomicUsize::new(0);
+        let slots: Mutex<Vec<Option<Result<R, String>>>> =
+            Mutex::new((0..n).map(|_| None).collect());
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                // Named threads: OS profilers, flamegraphs, panic
+                // messages, and the self-profiler's worker-utilization
+                // rows all key on `chipsim-worker-N`.  Naming can only
+                // fail on exotic platforms; fall back to an anonymous
+                // worker there.
+                let work = || {
+                    let _mark = WorkerMark::set();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::SeqCst);
+                        if i >= n {
+                            break;
+                        }
+                        let out = run_job(i);
+                        slots.lock().expect("pool slot lock")[i] = Some(out);
+                    }
+                };
+                let builder = std::thread::Builder::new().name(format!("chipsim-worker-{w}"));
+                if builder.spawn_scoped(scope, work).is_err() {
+                    scope.spawn(work);
+                }
+            }
+        });
+        slots
+            .into_inner()
+            .expect("pool slots")
+            .into_iter()
+            .map(|o| o.expect("every pool job writes its slot"))
+            .collect()
+    }
+}
 
 /// Run `f(i)` for every `i in 0..n` across `threads` workers (`0` =
 /// available parallelism), returning results in index order.  A panic
 /// inside `f(i)` becomes `Err(panic message)` for slot `i`; the other
-/// jobs are unaffected.
+/// jobs are unaffected.  Thin wrapper over [`WorkerPool`] kept for the
+/// existing call sites.
 pub fn map_catching<R, F>(threads: usize, n: usize, f: F) -> Vec<Result<R, String>>
 where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = if threads > 0 {
-        threads
-    } else {
-        std::thread::available_parallelism().map(|w| w.get()).unwrap_or(1)
-    }
-    .min(n);
-    let next = AtomicUsize::new(0);
-    let slots: Mutex<Vec<Option<Result<R, String>>>> =
-        Mutex::new((0..n).map(|_| None).collect());
-    std::thread::scope(|scope| {
-        for w in 0..workers {
-            // Named threads: OS profilers, flamegraphs, panic messages,
-            // and the self-profiler's worker-utilization rows all key
-            // on `chipsim-worker-N`.  Naming can only fail on exotic
-            // platforms; fall back to an anonymous worker there.
-            let work = || loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
-                    break;
-                }
-                // Busy/idle attribution for the parallel-efficiency
-                // baseline: one guard per job, no-op unless profiling.
-                let _busy = crate::prof::busy_scope();
-                let out =
-                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i))) {
-                        Ok(r) => Ok(r),
-                        Err(payload) => Err(panic_message(payload)),
-                    };
-                slots.lock().expect("pool slot lock")[i] = Some(out);
-            };
-            let builder = std::thread::Builder::new().name(format!("chipsim-worker-{w}"));
-            if builder.spawn_scoped(scope, work).is_err() {
-                scope.spawn(work);
-            }
-        }
-    });
-    slots
-        .into_inner()
-        .expect("pool slots")
-        .into_iter()
-        .map(|o| o.expect("every pool job writes its slot"))
-        .collect()
+    WorkerPool::new(threads).map_catching(n, f)
 }
 
 /// Best-effort extraction of a panic payload's message (`&str` and
@@ -118,5 +209,30 @@ mod tests {
     fn empty_input_returns_empty() {
         let out: Vec<Result<usize, String>> = map_catching(4, 0, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn nested_map_catching_runs_inline_without_oversubscription() {
+        // An inner pool invoked from a worker job must not spawn its
+        // own threads: the inner jobs run on the calling worker, where
+        // in_worker() holds.
+        let out = WorkerPool::new(4).map_catching(4, |i| {
+            assert!(in_worker(), "outer job should run on a marked worker");
+            let inner = WorkerPool::new(4).map_catching(3, |j| {
+                assert!(in_worker(), "inner job should stay on the same worker");
+                i * 10 + j
+            });
+            inner.into_iter().map(|r| r.unwrap()).sum::<usize>()
+        });
+        let got: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+        let want: Vec<usize> = (0..4).map(|i| 3 * (i * 10) + 3).collect();
+        assert_eq!(got, want);
+        assert!(!in_worker(), "mark must not leak to the caller");
+    }
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        assert!(WorkerPool::new(0).threads() >= 1);
+        assert_eq!(WorkerPool::new(3).threads(), 3);
     }
 }

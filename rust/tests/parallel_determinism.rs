@@ -1,0 +1,189 @@
+//! PR 10 determinism gate: the parallel sharded NoI core is
+//! *byte-identical* to the sequential engines — the same report
+//! fingerprints for `--threads 1/2/8` on both fidelities, with an
+//! active fault plan, through both `ExecSpec` seams (builder `.exec()`
+//! and post-build `set_exec`), and when whole runs execute inside an
+//! outer worker pool (the `SweepRunner` batch case), where nested
+//! parallelism must be suppressed, not stacked.
+
+use chipsim::config::{HardwareConfig, NocFidelity, SimParams};
+use chipsim::fault::FaultPlan;
+use chipsim::par::{ExecSpec, Partitioner};
+use chipsim::scenario::{Registry, SweepRunner};
+use chipsim::serving::{ArrivalSpec, TrafficSpec};
+use chipsim::sim::Simulation;
+use chipsim::util::pool::WorkerPool;
+use chipsim::workload::ModelKind;
+
+fn serving_params(fidelity: NocFidelity) -> SimParams {
+    SimParams {
+        pipelined: true,
+        warmup_ns: 0,
+        cooldown_ns: 0,
+        noc_fidelity: fidelity,
+        ..SimParams::default()
+    }
+}
+
+fn board(
+    fidelity: NocFidelity,
+    exec: ExecSpec,
+    plan: Option<FaultPlan>,
+) -> Simulation {
+    Simulation::builder()
+        .hardware(HardwareConfig::homogeneous_mesh(6, 6))
+        .params(serving_params(fidelity))
+        .exec(exec)
+        .faults(plan)
+        .build()
+        .expect("valid board")
+}
+
+/// Single-kind load keeps debug-build runs fast (same idiom as the
+/// serving/fleet/fault suites).
+fn light_spec(rate: f64, horizon_ms: f64) -> TrafficSpec {
+    TrafficSpec::new(ArrivalSpec::poisson(rate).kinds(&[ModelKind::ResNet18]))
+        .horizon_ms(horizon_ms)
+        .warmup_ms(2.0)
+        .window_ms(2.0)
+        .slo_ms(2.0)
+        .steady(None)
+}
+
+// ------------------------------------------------- threads 1/2/8 identity
+
+#[test]
+fn traffic_fingerprints_identical_across_thread_counts() {
+    for fidelity in [NocFidelity::Packet, NocFidelity::Flit] {
+        let spec = light_spec(1_200.0, 8.0);
+        let base = board(fidelity, ExecSpec::sequential(), None)
+            .run_traffic_with(&spec, 0x9A27)
+            .unwrap();
+        assert!(base.stats.completed() > 0, "workload must exercise the NoI");
+        for threads in [2, 8] {
+            let r = board(fidelity, ExecSpec::threads(threads), None)
+                .run_traffic_with(&spec, 0x9A27)
+                .unwrap();
+            assert_eq!(
+                base.fingerprint(),
+                r.fingerprint(),
+                "{fidelity:?} run diverged at --threads {threads}"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- with a live fault plan
+
+#[test]
+fn fault_plan_armed_runs_identical_across_thread_counts() {
+    // A link flap that fires (and repairs) inside the horizon, so the
+    // parallel engine's apply_fault purge path executes, not just the
+    // steady-state stepping.  Nodes 14-15 are row-adjacent on the 6x6.
+    let plan = FaultPlan::parse("link:14-15@2ms+1ms").unwrap();
+    let spec = light_spec(1_200.0, 8.0);
+    let run = |exec: ExecSpec| {
+        board(NocFidelity::Flit, exec, Some(plan.clone()))
+            .run_traffic_with(&spec, 0xFA17)
+            .unwrap()
+    };
+    let base = run(ExecSpec::sequential());
+    let f = base.sim.fault.as_ref().expect("plan must fire inside the horizon");
+    assert!(f.injected >= 1 && f.repairs >= 1);
+    for threads in [2, 8] {
+        let r = run(ExecSpec::threads(threads));
+        assert_eq!(
+            base.fingerprint(),
+            r.fingerprint(),
+            "faulted flit run diverged at --threads {threads}"
+        );
+        assert_eq!(
+            f.fingerprint(),
+            r.sim.fault.as_ref().expect("fault fires at any thread count").fingerprint(),
+            "FaultReport diverged at --threads {threads}"
+        );
+    }
+}
+
+// ---------------------------------------- decomposition/lookahead knobs
+
+#[test]
+fn partitioner_and_lookahead_variants_do_not_perturb_results() {
+    let spec = light_spec(1_000.0, 6.0);
+    let base = board(NocFidelity::Flit, ExecSpec::sequential(), None)
+        .run_traffic_with(&spec, 77)
+        .unwrap();
+    for exec in [
+        ExecSpec::threads(3).with_partitioner(Partitioner::Stripes(5)),
+        ExecSpec::threads(2).with_lookahead(1),
+        // Over-large lookahead must be clamped to the safe bound, never
+        // honoured.
+        ExecSpec::threads(4).with_lookahead(1_000_000),
+        // 0 = all cores, whatever this host has.
+        ExecSpec::threads(0),
+    ] {
+        let r = board(NocFidelity::Flit, exec, None).run_traffic_with(&spec, 77).unwrap();
+        assert_eq!(base.fingerprint(), r.fingerprint(), "diverged under {exec:?}");
+    }
+}
+
+// ------------------------------------------------------- both exec seams
+
+#[test]
+fn builder_exec_and_post_build_set_exec_are_equivalent() {
+    let spec = light_spec(1_000.0, 6.0);
+    let via_builder = board(NocFidelity::Flit, ExecSpec::threads(4), None)
+        .run_traffic_with(&spec, 41)
+        .unwrap();
+    let mut sim = board(NocFidelity::Flit, ExecSpec::sequential(), None);
+    sim.set_exec(ExecSpec::threads(4));
+    let via_setter = sim.run_traffic_with(&spec, 41).unwrap();
+    assert_eq!(via_builder.fingerprint(), via_setter.fingerprint());
+}
+
+// ------------------------------------------- nested under an outer pool
+
+#[test]
+fn parallel_runs_inside_an_outer_pool_stay_identical() {
+    // A sharded run launched from a pool worker (the SweepRunner /
+    // fleet shape) must run its regions inline — and still produce the
+    // exact sequential fingerprint.
+    let spec = light_spec(1_000.0, 6.0);
+    let base = board(NocFidelity::Flit, ExecSpec::threads(4), None)
+        .run_traffic_with(&spec, 5)
+        .unwrap()
+        .fingerprint();
+    let out = WorkerPool::new(3).map_catching(3, |_| {
+        board(NocFidelity::Flit, ExecSpec::threads(4), None)
+            .run_traffic_with(&spec, 5)
+            .unwrap()
+            .fingerprint()
+    });
+    for r in out {
+        assert_eq!(r.unwrap(), base, "nested run diverged from the direct one");
+    }
+}
+
+#[test]
+fn sweep_runner_batches_are_thread_invariant() {
+    // The whole batch path: identical seeds must yield byte-identical
+    // SimReports whether scenarios run sequentially or across the
+    // shared worker pool.
+    let reg = Registry::builtin();
+    let names = ["mesh-6x6-quickstart", "hetero-mesh"];
+    let run = |threads: usize| SweepRunner::new().threads(threads).run(&reg, &names).unwrap();
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.seed, y.seed);
+        let (rx, ry) = (x.result.as_ref().unwrap(), y.result.as_ref().unwrap());
+        assert_eq!(
+            rx.fingerprint(),
+            ry.fingerprint(),
+            "batch scenario '{}' diverged across pool sizes",
+            x.scenario
+        );
+    }
+}
